@@ -1,0 +1,110 @@
+//! Ablation — the paper's §1 contrast with CoCoA, measured:
+//!
+//! * **CA-BDCD** reduces synchronizations by s *provably*, with a
+//!   P-invariant, classical-identical trajectory.
+//! * **CoCoA** (local solves + γ=1/P averaging) also reduces
+//!   synchronizations per coordinate update — but its trajectory depends on
+//!   P and its effective progress per round is damped by the averaging.
+//!
+//! Both run on the abalone clone at equal *communication budgets*
+//! (allreduce counts) and the table reports the accuracy each achieves.
+
+use cabcd::comm::thread::run_spmd;
+use cabcd::comm::SerialComm;
+use cabcd::coordinator::{partition_dual, partition_primal};
+use cabcd::gram::NativeBackend;
+use cabcd::matrix::gen::{generate, scaled_specs};
+use cabcd::solvers::{bdcd, cg, cocoa, SolverOpts};
+
+fn main() {
+    let spec = &scaled_specs(4)[0]; // abalone-s4
+    let ds = generate(spec, 42).unwrap();
+    let lam = spec.lambda();
+    let (d, n) = (ds.d(), ds.n());
+    println!("ablation: CA-BDCD vs CoCoA on {} (d={d}, n={n}, λ={lam:.2e})", ds.name);
+    let mut comm = SerialComm::new();
+    let reference = cg::compute_reference(&ds.x, &ds.y, n, lam, &mut comm).unwrap();
+    let p = 4usize;
+
+    println!(
+        "\n{:<22} {:>10} {:>12} {:>12} {:>14}",
+        "method", "allreduce", "|obj err|", "sol err", "P-invariant?"
+    );
+
+    // Communication budget: 50 allreduces.
+    let budget = 50usize;
+
+    // --- CA-BDCD: 50 outer iterations × s inner each -------------------
+    for s in [1usize, 8] {
+        let opts = SolverOpts {
+            b: 16,
+            s,
+            lam,
+            iters: budget * s,
+            seed: 7,
+            record_every: 0,
+            track_gram_cond: false,
+            tol: None,
+        };
+        let shards = partition_dual(&ds, p).unwrap();
+        let rref = &reference;
+        let opts2 = opts.clone();
+        let outs = run_spmd(p, move |rank, comm| {
+            let sh = &shards[rank];
+            let mut be = NativeBackend::new();
+            bdcd::run(
+                &sh.a_loc, &sh.y, sh.d_global, sh.d_offset, &opts2, Some(rref), comm, &mut be,
+            )
+            .unwrap()
+        });
+        let h = &outs[0].history;
+        println!(
+            "{:<22} {:>10} {:>12.3e} {:>12.3e} {:>14}",
+            format!("CA-BDCD (b'=16, s={s})"),
+            h.meter.allreduces,
+            h.final_obj_err(),
+            h.final_sol_err(),
+            "yes (tested)"
+        );
+    }
+
+    // --- CoCoA at the same allreduce budget -----------------------------
+    for local_iters in [16usize * 8, 2000] {
+        let opts = cocoa::CocoaOpts {
+            lam,
+            rounds: budget,
+            local_iters,
+            seed: 7,
+            record_every: 0,
+        };
+        let shards = partition_primal(&ds, p).unwrap();
+        let rref = &reference;
+        let opts2 = opts.clone();
+        let outs = run_spmd(p, move |rank, comm| {
+            let sh = &shards[rank];
+            cocoa::run(&sh.a_loc, &sh.y_loc, sh.n_global, &opts2, Some(rref), comm).unwrap()
+        });
+        let h = &outs[0].history;
+        println!(
+            "{:<22} {:>10} {:>12.3e} {:>12.3e} {:>14}",
+            format!("CoCoA (H_loc={local_iters})"),
+            h.meter.allreduces,
+            h.final_obj_err(),
+            h.final_sol_err(),
+            "NO (P-dep.)"
+        );
+    }
+
+    println!(
+        "\nBoth frameworks trade extra local work for fewer synchronizations \
+         and on this small, well-conditioned clone both reach good accuracy \
+         at the fixed 50-allreduce budget (CoCoA can even lead). The \
+         paper's contrast (§1) is about the GUARANTEE, and it is what the \
+         table's last column records: CA-BDCD's trajectory is provably \
+         identical to classical BDCD and P-invariant (asserted by the \
+         integration tests), while CoCoA's γ=1/P averaging changes the \
+         convergence behaviour and its outcome moves with P \
+         (cocoa_changes_convergence_with_rank_count_unlike_ca)."
+    );
+    println!("ablation_cocoa: OK");
+}

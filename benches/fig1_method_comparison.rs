@@ -1,0 +1,164 @@
+//! Figure 1 — objective-error convergence of BCD, BDCD, CG and TSQR
+//! against their theoretical algorithm costs (flops, bandwidth, messages)
+//! on the news20-shaped dataset (d > n), accuracy target 1e-2, b = b' = 4.
+//!
+//! The paper runs the real d=62061 × n=15935 matrix; we run a 16×-scaled
+//! clone with the same shape/density/spectrum targets (the cost axes are
+//! evaluated from the Theorem formulas at the clone's own dimensions, so
+//! the *relative* positions of the curves — who is cheapest per digit on
+//! which axis — reproduce). TSQR's single-pass behaviour is exact.
+
+use cabcd::comm::SerialComm;
+use cabcd::costmodel::{AlgoCosts, CostParams, Method};
+use cabcd::gram::NativeBackend;
+use cabcd::matrix::gen::{generate, scaled_specs};
+use cabcd::metrics::History;
+use cabcd::solvers::{bcd, bdcd, cg, tsqr_ls, SolverOpts};
+
+struct Series {
+    name: &'static str,
+    method: Method,
+    b: f64,
+    /// (iterations h, |objective error|)
+    points: Vec<(f64, f64)>,
+}
+
+fn from_history(name: &'static str, method: Method, b: f64, h: &History) -> Series {
+    Series {
+        name,
+        method,
+        b,
+        points: h
+            .records
+            .iter()
+            .map(|r| (r.iter as f64, r.obj_err.abs().max(1e-17)))
+            .collect(),
+    }
+}
+
+fn main() {
+    let spec = scaled_specs(16)
+        .into_iter()
+        .find(|s| s.name.starts_with("news20"))
+        .unwrap();
+    let ds = generate(&spec, 42).unwrap();
+    let (d, n) = (ds.d(), ds.n());
+    let lam = spec.lambda();
+    let tol = 1e-2;
+    println!(
+        "Figure 1 — method comparison on {} (d={d}, n={n}, λ={lam:.2e}, target {tol:.0e})",
+        ds.name
+    );
+
+    let mut comm = SerialComm::new();
+    let reference = cg::compute_reference(&ds.x, &ds.y, n, lam, &mut comm).unwrap();
+    let mut be = NativeBackend::new();
+
+    // --- BCD, b=4 ---
+    let opts = SolverOpts {
+        b: 4,
+        s: 1,
+        lam,
+        iters: 40_000,
+        seed: 1,
+        record_every: 500,
+        track_gram_cond: false,
+        tol: Some(tol),
+    };
+    let p = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be).unwrap();
+    let s_bcd = from_history("BCD", Method::Bcd, 4.0, &p.history);
+
+    // --- BDCD, b'=4 ---
+    let a = ds.x.transpose();
+    let du = bdcd::run(&a, &ds.y, d, 0, &opts, Some(&reference), &mut comm, &mut be).unwrap();
+    let s_bdcd = from_history("BDCD", Method::Bdcd, 4.0, &du.history);
+
+    // --- CG ---
+    let cg_out = cg::run(
+        &ds.x,
+        &ds.y,
+        n,
+        &cg::CgOpts {
+            lam,
+            max_iters: 2000,
+            tol: 1e-14,
+            record_every: 5,
+        },
+        Some(&reference),
+        &mut comm,
+    )
+    .unwrap();
+    let s_cg = from_history("CG", Method::Krylov, 1.0, &cg_out.history);
+
+    // --- TSQR (single pass; machine precision afterwards) ---
+    let ts = tsqr_ls::run(&ds.x, &ds.y, lam, 64, Some(&reference)).unwrap();
+    let s_tsqr = from_history("TSQR", Method::Tsqr, 1.0, &ts.history);
+
+    // Print the three panels: error vs flops / bandwidth / messages.
+    for (panel, axis) in [
+        ("1a: flops", 0usize),
+        ("1b: bandwidth (words)", 1),
+        ("1c: messages", 2),
+    ] {
+        println!("\n--- Figure {panel} ---");
+        println!("{:<6} {:>14} {:>14}", "method", "cost@target", "final err");
+        for s in [&s_bcd, &s_bdcd, &s_cg, &s_tsqr] {
+            // Cost of h iterations from the Theorem formulas (sequential
+            // flops, log P dropped — paper §5.1 protocol).
+            let cost_at = |h: f64| {
+                let cp = CostParams {
+                    d: d as f64,
+                    n: n as f64,
+                    p: 1.0,
+                    b: s.b,
+                    s: 1.0,
+                    h: h.max(1.0),
+                };
+                let c = AlgoCosts::of(s.method, &cp);
+                match axis {
+                    0 => c.flops,
+                    1 => c.bandwidth,
+                    _ => c.latency,
+                }
+            };
+            // First point reaching the target (or the last point).
+            let hit = s
+                .points
+                .iter()
+                .find(|(_, e)| *e <= tol)
+                .or(s.points.last())
+                .unwrap();
+            println!(
+                "{:<6} {:>14.4e} {:>14.3e}",
+                s.name,
+                cost_at(hit.0),
+                s.points.last().unwrap().1
+            );
+            // Full curve for plotting.
+            print!("  curve:");
+            for (h, e) in s.points.iter().take(12) {
+                print!(" ({:.3e},{:.1e})", cost_at(*h), e);
+            }
+            println!();
+        }
+    }
+
+    // The paper's qualitative ordering on the latency axis: TSQR needs one
+    // reduction; CG needs k; BCD/BDCD need orders of magnitude more.
+    let msgs = |s: &Series| {
+        let hit = s.points.iter().find(|(_, e)| *e <= tol).or(s.points.last()).unwrap();
+        let cp = CostParams {
+            d: d as f64,
+            n: n as f64,
+            p: 1.0,
+            b: s.b,
+            s: 1.0,
+            h: hit.0.max(1.0),
+        };
+        AlgoCosts::of(s.method, &cp).latency
+    };
+    assert!(msgs(&s_tsqr) <= msgs(&s_cg));
+    assert!(msgs(&s_cg) < msgs(&s_bcd));
+    println!("\nordering on messages axis: TSQR ≤ CG < BCD — matches Figure 1c");
+    println!("fig1_method_comparison: OK");
+}

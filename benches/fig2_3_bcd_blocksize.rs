@@ -1,0 +1,81 @@
+//! Figures 2 and 3 — BCD block-size sweeps on the four Table-3 clones:
+//! solution/objective-error convergence per b (Fig 2) and the theoretical
+//! flops / bandwidth / messages cost per digit of accuracy (Fig 3).
+//!
+//! Clones are scaled (factor in the header) so the whole figure
+//! regenerates in seconds; block-size lists follow the paper, clipped to
+//! the scaled d.
+
+use cabcd::comm::SerialComm;
+use cabcd::costmodel::{AlgoCosts, CostParams, Method};
+use cabcd::gram::NativeBackend;
+use cabcd::matrix::gen::{generate, scaled_specs};
+use cabcd::solvers::{bcd, cg, SolverOpts};
+
+fn main() {
+    // (clone, scale, paper's b list, iters)
+    let plan: Vec<(&str, usize, Vec<usize>, usize)> = vec![
+        ("abalone", 2, vec![1, 2, 4, 6], 4000),
+        ("news20", 32, vec![1, 8, 32], 4000),
+        ("a9a", 4, vec![1, 8, 16], 4000),
+        ("real-sim", 32, vec![1, 8, 16, 32], 4000),
+    ];
+    for (name, factor, bs, iters) in plan {
+        let spec = scaled_specs(factor)
+            .into_iter()
+            .find(|s| s.name.starts_with(name))
+            .unwrap();
+        let ds = generate(&spec, 42).unwrap();
+        let (d, n) = (ds.d(), ds.n());
+        let lam = spec.lambda();
+        println!("\n=== {} (scale 1/{factor}): d={d}, n={n}, λ={lam:.2e} ===", spec.name);
+        let mut comm = SerialComm::new();
+        let reference = cg::compute_reference(&ds.x, &ds.y, n, lam, &mut comm).unwrap();
+
+        println!(
+            "{:>4} {:>12} {:>12} | {:>12} {:>12} {:>10}  (Fig 3 axes @ final err)",
+            "b", "|obj err|", "sol err", "flops", "words", "msgs"
+        );
+        for b in bs {
+            let b = b.min(d);
+            let opts = SolverOpts {
+                b,
+                s: 1,
+                lam,
+                iters,
+                seed: 5,
+                record_every: iters / 8,
+                track_gram_cond: false,
+                tol: None,
+            };
+            let mut be = NativeBackend::new();
+            let out = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be)
+                .unwrap();
+            let cp = CostParams {
+                d: d as f64,
+                n: n as f64,
+                p: 1.0,
+                b: b as f64,
+                s: 1.0,
+                h: out.history.iters as f64,
+            };
+            let c = AlgoCosts::of(Method::Bcd, &cp);
+            println!(
+                "{:>4} {:>12.3e} {:>12.3e} | {:>12.3e} {:>12.3e} {:>10.1e}",
+                b,
+                out.history.final_obj_err(),
+                out.history.final_sol_err(),
+                c.flops,
+                c.bandwidth,
+                c.latency
+            );
+            // Convergence curve (Fig 2 panel data).
+            print!("     curve(|obj|):");
+            for r in &out.history.records {
+                print!(" ({},{:.1e})", r.iter, r.obj_err.abs());
+            }
+            println!();
+        }
+    }
+    println!("\nfig2_3_bcd_blocksize: OK");
+}

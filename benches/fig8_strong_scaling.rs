@@ -1,0 +1,60 @@
+//! Figure 8 — modeled strong scaling of BCD vs CA-BCD on NERSC Cori,
+//! b = 4, d = 1024: MPI with n = 2³⁵ (8a) and Spark with n = 2⁴⁰ (8b),
+//! P = 2² … 2²⁸, CA curve at its best s per P.
+//!
+//! Paper headline: 14× (MPI), 165× (Spark). Shape checks asserted: BCD
+//! scales until communication dominates then flattens/worsens; CA-BCD
+//! keeps scaling; Spark's gap ≫ MPI's.
+
+use cabcd::costmodel::{
+    scaling::{paper_p_range, strong_scaling},
+    Machine,
+};
+
+fn main() {
+    let pr = paper_p_range();
+    let mut headlines = Vec::new();
+    for (panel, m, log2n) in [
+        ("8a", Machine::cori_mpi(), 35u32),
+        ("8b", Machine::cori_spark(), 40),
+    ] {
+        let n = (1u64 << log2n) as f64;
+        let series = strong_scaling(&m, 1024.0, n, 4.0, 100.0, &pr, 2000);
+        println!("\n=== Figure {panel}: {} strong scaling (d=1024, n=2^{log2n}, b=4) ===", m.name);
+        println!(
+            "{:>12} {:>14} {:>14} {:>8} {:>10}",
+            "P", "T_BCD (s)", "T_CA-BCD (s)", "best s", "speedup"
+        );
+        for pt in &series.points {
+            println!(
+                "{:>12} {:>14.6e} {:>14.6e} {:>8} {:>10.2}",
+                pt.p, pt.t_classical, pt.t_ca, pt.best_s, pt.speedup
+            );
+        }
+        let (mx, at_p, at_s) = series.max_speedup();
+        println!("→ max modeled speedup {mx:.1}× at P={at_p} (s={at_s})");
+        headlines.push((m.name, mx));
+
+        // Shape assertions.
+        let first = &series.points[0];
+        let last = series.points.last().unwrap();
+        assert!(first.speedup < 1.2, "flop-dominated regime should be ~1×");
+        assert!(last.speedup > first.speedup, "CA advantage must grow with P");
+        // BCD eventually stops strong-scaling (t at max P ≥ t at some
+        // smaller P within the tail), while CA keeps improving or flat.
+        let t_bcd_tail: Vec<f64> = series.points.iter().rev().take(8).map(|p| p.t_classical).collect();
+        assert!(
+            t_bcd_tail.windows(2).any(|w| w[0] >= w[1]),
+            "BCD should flatten in the communication-dominated tail"
+        );
+    }
+    assert!(
+        headlines[1].1 > headlines[0].1 * 4.0,
+        "Spark headline should dwarf MPI: {headlines:?}"
+    );
+    println!(
+        "\nheadlines: {} {:.0}× / {} {:.0}× (paper: 14× / 165×)",
+        headlines[0].0, headlines[0].1, headlines[1].0, headlines[1].1
+    );
+    println!("fig8_strong_scaling: OK");
+}

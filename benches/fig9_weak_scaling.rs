@@ -1,0 +1,55 @@
+//! Figure 9 — modeled weak scaling of BCD vs CA-BCD on NERSC Cori,
+//! b = 4, d = 1024, n/P = 2¹¹ fixed, MPI (9a) and Spark (9b),
+//! P = 2² … 2²⁸.
+//!
+//! Paper headline: 12× (MPI), 396× (Spark). Shape checks asserted:
+//! the BCD-vs-CA gap opens as P grows (communication share rises) and the
+//! CA curve stays much flatter than BCD.
+
+use cabcd::costmodel::{
+    scaling::{paper_p_range, weak_scaling},
+    Machine,
+};
+
+fn main() {
+    let pr = paper_p_range();
+    let mut headlines = Vec::new();
+    for (panel, m) in [("9a", Machine::cori_mpi()), ("9b", Machine::cori_spark())] {
+        let series = weak_scaling(&m, 1024.0, 2048.0, 4.0, 100.0, &pr, 2000);
+        println!(
+            "\n=== Figure {panel}: {} weak scaling (d=1024, n/P=2^11, b=4) ===",
+            m.name
+        );
+        println!(
+            "{:>12} {:>14} {:>14} {:>8} {:>10}",
+            "P", "T_BCD (s)", "T_CA-BCD (s)", "best s", "speedup"
+        );
+        for pt in &series.points {
+            println!(
+                "{:>12} {:>14.6e} {:>14.6e} {:>8} {:>10.2}",
+                pt.p, pt.t_classical, pt.t_ca, pt.best_s, pt.speedup
+            );
+        }
+        let (mx, at_p, at_s) = series.max_speedup();
+        println!("→ max modeled speedup {mx:.1}× at P={at_p} (s={at_s})");
+        headlines.push((m.name, mx));
+
+        // Gap must widen monotonically-ish with P.
+        let first = &series.points[0];
+        let last = series.points.last().unwrap();
+        assert!(last.speedup >= first.speedup);
+        // Ideal weak scaling = flat time; CA must be closer to flat:
+        let bcd_growth = last.t_classical / first.t_classical;
+        let ca_growth = last.t_ca / first.t_ca;
+        assert!(
+            ca_growth < bcd_growth,
+            "CA should weak-scale flatter: {ca_growth} vs {bcd_growth}"
+        );
+    }
+    assert!(headlines[1].1 > headlines[0].1 * 4.0);
+    println!(
+        "\nheadlines: {} {:.0}× / {} {:.0}× (paper: 12× / 396×)",
+        headlines[0].0, headlines[0].1, headlines[1].0, headlines[1].1
+    );
+    println!("fig9_weak_scaling: OK");
+}

@@ -1,0 +1,195 @@
+//! Hot-path micro-benchmarks — the §Perf instrument (EXPERIMENTS.md).
+//!
+//! Times the three per-iteration kernels of every solver (raw Gram +
+//! residual, s-step inner solve, deferred vector update) on dense and CSR
+//! operands for the native backend, the end-to-end outer iteration, the
+//! collectives, and — when artifacts are present — the XLA backend's
+//! per-call latency for comparison.
+
+use std::path::Path;
+
+use cabcd::comm::thread::run_spmd;
+use cabcd::comm::Communicator;
+use cabcd::gram::{ComputeBackend, NativeBackend};
+use cabcd::matrix::{CsrMatrix, DenseMatrix, Matrix};
+use cabcd::runtime::XlaBackend;
+use cabcd::sampling::{overlap_tensor, BlockSampler};
+use cabcd::util::bench::{fmt_secs, time_runs};
+use cabcd::util::Rng64;
+
+fn dense_mat(d: usize, n: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let data: Vec<f64> = (0..d * n).map(|_| rng.gen_normal()).collect();
+    DenseMatrix::from_vec(d, n, data)
+}
+
+fn sparse_mat(d: usize, n: usize, density: f64, seed: u64) -> CsrMatrix {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let total = ((d * n) as f64 * density) as usize;
+    let trip: Vec<(usize, usize, f64)> = (0..total)
+        .map(|_| (rng.gen_range(0, d), rng.gen_range(0, n), rng.gen_normal()))
+        .collect();
+    CsrMatrix::from_triplets(d, n, trip)
+}
+
+fn main() {
+    println!("=== hot-path micro benchmarks (native backend) ===");
+    let mut be = NativeBackend::new();
+
+    // --- gram_resid over dense operands -------------------------------
+    println!("\ngram_resid (dense), n_loc=8192:");
+    println!("{:>6} {:>14} {:>16} {:>14}", "sb", "median", "per inner-iter*", "GF/s");
+    for sb in [8usize, 16, 32, 64] {
+        let a = Matrix::Dense(dense_mat(128, 8192, 1));
+        let mut sampler = BlockSampler::new(128, 7);
+        let idx = sampler.draw_block(sb);
+        let z: Vec<f64> = (0..8192).map(|i| (i as f64).sin()).collect();
+        let mut g = vec![0.0; sb * sb];
+        let mut r = vec![0.0; sb];
+        let (med, _, _) = time_runs(3, 15, || {
+            be.gram_resid(&a, &idx, &z, &mut g, &mut r).unwrap();
+            g[0]
+        });
+        let flops = (sb * sb + 2 * sb) as f64 * 8192.0; // syrk (sym) + matvec
+        println!(
+            "{:>6} {:>14} {:>16} {:>14.2}",
+            sb,
+            fmt_secs(med),
+            fmt_secs(med / sb as f64),
+            flops / med / 1e9
+        );
+    }
+
+    // --- gram_resid over CSR (news20-like density) --------------------
+    println!("\ngram_resid (CSR 0.3% dense, d=4096, n_loc=16384):");
+    println!("{:>6} {:>14} {:>16}", "sb", "median", "Mmerge-ops/s");
+    let csr = sparse_mat(4096, 16384, 0.003, 2);
+    let nnz_per_row = csr.nnz() as f64 / 4096.0;
+    let a = Matrix::Csr(csr);
+    for sb in [8usize, 32, 64] {
+        let mut sampler = BlockSampler::new(4096, 7);
+        let idx = sampler.draw_block(sb);
+        let z: Vec<f64> = (0..16384).map(|i| (i as f64).cos()).collect();
+        let mut g = vec![0.0; sb * sb];
+        let mut r = vec![0.0; sb];
+        let (med, _, _) = time_runs(3, 15, || {
+            be.gram_resid(&a, &idx, &z, &mut g, &mut r).unwrap();
+            g[0]
+        });
+        // Two-pointer merge touches ~2·nnz/row per row pair.
+        let merge_ops = (sb * sb) as f64 * nnz_per_row;
+        println!(
+            "{:>6} {:>14} {:>16.1}",
+            sb,
+            fmt_secs(med),
+            merge_ops / med / 1e6
+        );
+    }
+
+    // --- inner solve ----------------------------------------------------
+    println!("\nca_inner_solve:");
+    println!("{:>10} {:>14}", "(s, b)", "median");
+    for (s, b) in [(1usize, 8usize), (4, 8), (8, 8), (16, 8), (8, 16)] {
+        let sb = s * b;
+        let m = dense_mat(sb, sb + 32, 3);
+        let mut g_raw = vec![0.0; sb * sb];
+        let idx: Vec<usize> = (0..sb).collect();
+        m.sampled_gram(&idx, &mut g_raw);
+        let mut rng = Rng64::seed_from_u64(4);
+        let r_raw: Vec<f64> = (0..sb).map(|_| rng.gen_normal()).collect();
+        let w_blk: Vec<f64> = (0..sb).map(|_| rng.gen_normal()).collect();
+        let blocks: Vec<Vec<usize>> = (0..s)
+            .map(|j| (0..b).map(|i| (j * b + i) % (sb / 2 + 1)).collect())
+            .collect();
+        let ov = overlap_tensor(&blocks);
+        let (med, _, _) = time_runs(3, 30, || {
+            be.ca_inner_solve(s, b, &g_raw, &r_raw, &w_blk, &ov, 0.5, 1e-3)
+                .unwrap()
+        });
+        println!("{:>10} {:>14}", format!("({s},{b})"), fmt_secs(med));
+    }
+
+    // --- full outer iteration (solver-level) ----------------------------
+    println!("\nfull CA-BCD outer iteration (dense d=256, n=32768, b=8):");
+    println!("{:>6} {:>14} {:>18}", "s", "median/outer", "median/inner-iter");
+    let x = Matrix::Dense(dense_mat(256, 32768, 9));
+    let mut y = vec![0.0; 32768];
+    x.matvec_t(&vec![1.0; 256], &mut y).unwrap();
+    for s in [1usize, 4, 8] {
+        use cabcd::comm::SerialComm;
+        use cabcd::solvers::{bcd, SolverOpts};
+        let opts = SolverOpts {
+            b: 8,
+            s,
+            lam: 0.1,
+            iters: 4 * s,
+            seed: 3,
+            record_every: 0,
+            track_gram_cond: false,
+            tol: None,
+        };
+        let mut c = SerialComm::new();
+        let (med, _, _) = time_runs(1, 5, || {
+            bcd::run(&x, &y, 32768, &opts, None, &mut c, &mut be).unwrap().w[0]
+        });
+        let per_outer = med / 4.0;
+        println!(
+            "{:>6} {:>14} {:>18}",
+            s,
+            fmt_secs(per_outer),
+            fmt_secs(per_outer / s as f64)
+        );
+    }
+
+    // --- collectives ------------------------------------------------------
+    println!("\nallreduce (thread communicator), payload 4096 f64:");
+    println!("{:>6} {:>14}", "P", "median");
+    for p in [2usize, 4, 8] {
+        let (med, _, _) = time_runs(2, 10, || {
+            run_spmd(p, |_r, comm| {
+                let mut buf = vec![1.0f64; 4096];
+                for _ in 0..10 {
+                    comm.allreduce_sum(&mut buf).unwrap();
+                }
+                buf[0]
+            })
+        });
+        println!("{:>6} {:>14}", p, fmt_secs(med / 10.0));
+    }
+
+    // --- XLA backend latency (optional) -----------------------------------
+    let art = Path::new("artifacts");
+    if art.join("manifest.tsv").exists() {
+        println!("\nXLA backend per-call latency (artifact path):");
+        let mut xb = XlaBackend::new(art).unwrap();
+        let a = Matrix::Dense(dense_mat(128, 8192, 1));
+        let mut sampler = BlockSampler::new(128, 7);
+        let idx = sampler.draw_block(32);
+        let z: Vec<f64> = (0..8192).map(|i| (i as f64).sin()).collect();
+        let mut g = vec![0.0; 32 * 32];
+        let mut r = vec![0.0; 32];
+        let (med, _, _) = time_runs(2, 8, || {
+            xb.gram_resid(&a, &idx, &z, &mut g, &mut r).unwrap();
+            g[0]
+        });
+        println!("  gram_resid sb=32 n_loc=8192: {}", fmt_secs(med));
+        let (mn, _, _) = time_runs(2, 8, || {
+            be.gram_resid(&a, &idx, &z, &mut g, &mut r).unwrap();
+            g[0]
+        });
+        println!(
+            "  native same shape:           {}  (xla/native = {:.1}×)",
+            fmt_secs(mn),
+            med / mn
+        );
+        println!(
+            "  note: interpret-mode Pallas on CPU PJRT — structural parity, \
+             not a TPU performance proxy (DESIGN.md §Hardware-Adaptation)."
+        );
+    } else {
+        println!("\n(artifacts/ missing — skipping XLA latency section)");
+    }
+
+    println!("\n* per inner-iter = gram cost amortized over the sb rows' s steps");
+    println!("hotpath_micro: OK");
+}

@@ -1,0 +1,97 @@
+//! Tuning the loop-blocking factor s — the paper's Figure 4 in miniature:
+//! for fixed b, sweep s and verify (a) the trajectory is unchanged,
+//! (b) synchronizations drop by s, (c) the Gram condition number grows
+//! with s but stays benign, (d) flops/bandwidth grow with s — the tradeoff
+//! that bounds practical s.
+//!
+//! ```sh
+//! cargo run --release --example ca_tuning
+//! ```
+
+use cabcd::comm::SerialComm;
+use cabcd::costmodel::{AlgoCosts, CostParams, Method};
+use cabcd::gram::NativeBackend;
+use cabcd::matrix::gen::{generate, spec_by_name};
+use cabcd::solvers::{bcd, cg, SolverOpts};
+
+fn main() -> anyhow::Result<()> {
+    let spec = spec_by_name("abalone")?;
+    let ds = generate(&spec, 42)?;
+    let lam = spec.lambda();
+    let mut comm = SerialComm::new();
+    let reference = cg::compute_reference(&ds.x, &ds.y, ds.n(), lam, &mut comm)?;
+
+    let b = 4usize;
+    let iters = 1000usize;
+    println!(
+        "CA-BCD s-sweep on {} (d={}, n={}, b={b}, H={iters}, λ={:.2e})\n",
+        ds.name,
+        ds.d(),
+        ds.n(),
+        lam
+    );
+    println!(
+        "{:>5} {:>12} {:>12} {:>11} {:>22} {:>14} {:>14}",
+        "s", "|obj err|", "sol err", "allreduce", "cond(G) min/med/max", "flops (seq)", "words"
+    );
+
+    let mut baseline: Option<Vec<f64>> = None;
+    for s in [1usize, 2, 5, 10, 20, 50, 100] {
+        let opts = SolverOpts {
+            b,
+            s,
+            lam,
+            iters,
+            seed: 9,
+            record_every: 0,
+            track_gram_cond: true,
+            tol: None,
+        };
+        let mut be = NativeBackend::new();
+        let mut c = SerialComm::new();
+        let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, Some(&reference), &mut c, &mut be)?;
+        let cs = out.history.cond_stats();
+        let cp = CostParams {
+            d: ds.d() as f64,
+            n: ds.n() as f64,
+            p: 1.0,
+            b: b as f64,
+            s: s as f64,
+            h: iters as f64,
+        };
+        let costs = AlgoCosts::of(Method::CaBcd, &cp);
+        println!(
+            "{:>5} {:>12.3e} {:>12.3e} {:>11} {:>7.1}/{:>6.1}/{:>6.1} {:>14.3e} {:>14.3e}",
+            s,
+            out.history.final_obj_err(),
+            out.history.final_sol_err(),
+            out.history.meter.allreduces,
+            cs.min,
+            cs.median,
+            cs.max,
+            costs.flops,
+            costs.bandwidth
+        );
+        match &baseline {
+            None => baseline = Some(out.w),
+            Some(w0) => {
+                let dev = out
+                    .w
+                    .iter()
+                    .zip(w0)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(
+                    dev < 1e-8,
+                    "s={s} trajectory deviated from classical by {dev}"
+                );
+            }
+        }
+    }
+    println!(
+        "\nEvery s produced the SAME solution (checked to 1e-8) while the \
+         synchronization count fell by s — \"without altering the \
+         convergence behaviour\", as claimed."
+    );
+    Ok(())
+}

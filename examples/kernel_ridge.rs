@@ -1,0 +1,103 @@
+//! Kernel ridge regression with (CA-)block coordinate descent — the
+//! paper's §6 future-work extension, built on the same s-step inner solve
+//! as CA-BCD (see `rust/src/kernel`).
+//!
+//! Fits an RBF-kernel regressor to a nonlinear function of the abalone
+//! clone's features, demonstrating: (a) the CA unrolling applies verbatim
+//! to the kernelized problem, (b) s× fewer "synchronization points" (here:
+//! sampled-kernel-block rounds), (c) identical trajectories for every s.
+//!
+//! ```sh
+//! cargo run --release --example kernel_ridge
+//! ```
+
+use cabcd::gram::NativeBackend;
+use cabcd::kernel::{fit, Kernel, KrrOpts};
+use cabcd::matrix::gen::{generate, scaled_specs};
+
+fn main() -> anyhow::Result<()> {
+    // Small abalone clone; targets are a nonlinear function of features,
+    // so the linear model underfits and RBF wins — the reason KRR exists.
+    let spec = &scaled_specs(8)[0];
+    let ds = generate(spec, 11)?;
+    let n = ds.n();
+    let rows = match ds.x.transpose() {
+        cabcd::matrix::Matrix::Dense(m) => m,
+        cabcd::matrix::Matrix::Csr(m) => m.to_dense(),
+    };
+    let y: Vec<f64> = (0..n)
+        .map(|j| {
+            let r = rows.row(j);
+            (r[0] * 0.01).sin() + (r[1] * 0.01).cos()
+        })
+        .collect();
+
+    println!(
+        "KRR on {} clone: d={}, n={}, target = sin/cos of features",
+        ds.name,
+        ds.d(),
+        n
+    );
+    println!("\n{:>8} {:>4} {:>14} {:>14} {:>10}", "kernel", "s", "residual", "train MSE", "rounds");
+    let mut be = NativeBackend::new();
+    for (name, kernel) in [
+        ("linear", Kernel::Linear),
+        ("rbf", Kernel::Rbf { gamma: 1e-4 }),
+    ] {
+        let mut base: Option<Vec<f64>> = None;
+        for s in [1usize, 4, 8] {
+            let opts = KrrOpts {
+                kernel,
+                lam: 1e-6,
+                b: 8,
+                s,
+                iters: 1600,
+                seed: 3,
+                record_every: 0,
+            };
+            let model = fit(&ds.x, &y, &opts, &mut be)?;
+            let preds = model.predict(&ds.x)?;
+            let mse: f64 = preds
+                .iter()
+                .zip(&y)
+                .map(|(p, t)| (p - t) * (p - t))
+                .sum::<f64>()
+                / n as f64;
+            let resid = model.history.records.last().unwrap().obj_err;
+            println!(
+                "{:>8} {:>4} {:>14.3e} {:>14.3e} {:>10}",
+                name,
+                s,
+                resid,
+                mse,
+                1600 / s
+            );
+            match &base {
+                None => base = Some(model.alpha.clone()),
+                Some(a0) => {
+                    let dev = model
+                        .alpha
+                        .iter()
+                        .zip(a0)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f64, f64::max);
+                    let scale = a0.iter().map(|v| v.abs()).fold(1e-12, f64::max);
+                    // The near-singular RBF system (λ = 1e-6) amplifies
+                    // roundoff; equality holds to the conditioning floor.
+                    assert!(
+                        dev / scale < 1e-4,
+                        "s={s} deviated by {dev} (rel {})",
+                        dev / scale
+                    );
+                }
+            }
+        }
+    }
+    println!(
+        "\nSame α for every s (to the conditioning floor); the RBF kernel fits the \
+         nonlinear target the linear kernel cannot — and the CA \
+         transformation carried over to the kernel problem unchanged, \
+         as the paper's §6 anticipated."
+    );
+    Ok(())
+}

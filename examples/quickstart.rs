@@ -1,0 +1,76 @@
+//! Quickstart: solve a regularized least-squares problem with CA-BCD and
+//! see the paper's headline effect — identical convergence to classical
+//! BCD with 1/s as many synchronizations.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use cabcd::comm::SerialComm;
+use cabcd::gram::NativeBackend;
+use cabcd::matrix::gen::{generate, spec_by_name};
+use cabcd::solvers::{bcd, cg, SolverOpts};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A dataset: the abalone clone from the paper's Table 3
+    //    (8 features × 4177 points, dense, planted spectrum).
+    let spec = spec_by_name("abalone")?;
+    let ds = generate(&spec, /*seed=*/ 42)?;
+    let lam = spec.lambda(); // the paper's λ = 1000·σ_min
+    println!(
+        "dataset {}: d={}, n={}, λ={:.3e}",
+        ds.name,
+        ds.d(),
+        ds.n(),
+        lam
+    );
+
+    // 2. Ground truth from CG at tol 1e-15 (exactly the paper's protocol).
+    let mut comm = SerialComm::new();
+    let reference = cg::compute_reference(&ds.x, &ds.y, ds.n(), lam, &mut comm)?;
+
+    // 3. Classical BCD vs communication-avoiding BCD, identical sampling.
+    for s in [1usize, 8] {
+        let opts = SolverOpts {
+            b: 4,
+            s,
+            lam,
+            iters: 2000,
+            seed: 7,
+            record_every: 400,
+            track_gram_cond: false,
+            tol: None,
+        };
+        let mut backend = NativeBackend::new();
+        let out = bcd::run(
+            &ds.x,
+            &ds.y,
+            ds.n(),
+            &opts,
+            Some(&reference),
+            &mut comm,
+            &mut backend,
+        )?;
+        let label = if s == 1 { "BCD    " } else { "CA-BCD " };
+        println!(
+            "\n{label} (b=4, s={s}): {} inner iterations, {} allreduces",
+            out.history.iters, out.history.meter.allreduces
+        );
+        println!("  iter    |objective err|   solution err");
+        for r in &out.history.records {
+            println!(
+                "  {:>5}   {:>14.3e}   {:>12.3e}",
+                r.iter,
+                r.obj_err.abs(),
+                r.sol_err
+            );
+        }
+        comm = SerialComm::new(); // fresh meter per run
+    }
+
+    println!(
+        "\nSame trajectory, 8× fewer synchronizations — that is Theorem 6's \
+         L = O((H/s)·log P) in action."
+    );
+    Ok(())
+}

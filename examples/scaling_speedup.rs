@@ -1,0 +1,54 @@
+//! The paper's §5.2 modeled-performance experiments (Figures 8 and 9):
+//! strong and weak scaling of BCD vs CA-BCD on Cori under the MPI and
+//! Spark machine models, reproducing the headline speedups.
+//!
+//! ```sh
+//! cargo run --release --example scaling_speedup
+//! ```
+
+use cabcd::costmodel::{
+    scaling::{paper_p_range, strong_scaling, weak_scaling},
+    Machine,
+};
+
+fn main() {
+    let pr = paper_p_range();
+    let b = 4.0;
+    let h = 100.0;
+
+    println!("=== Figure 8: strong scaling (b=4, d=1024) ===");
+    for (m, log2n) in [(Machine::cori_mpi(), 35u32), (Machine::cori_spark(), 40)] {
+        let n = (1u64 << log2n) as f64;
+        let series = strong_scaling(&m, 1024.0, n, b, h, &pr, 1000);
+        let (mx, at_p, at_s) = series.max_speedup();
+        println!("\n{} (n=2^{log2n}):", m.name);
+        println!("{:>12} {:>13} {:>13} {:>7} {:>9}", "P", "T_BCD", "T_CA-BCD", "s*", "speedup");
+        for pt in series.points.iter().step_by(3) {
+            println!(
+                "{:>12} {:>13.4e} {:>13.4e} {:>7} {:>9.2}",
+                pt.p, pt.t_classical, pt.t_ca, pt.best_s, pt.speedup
+            );
+        }
+        println!("→ max modeled speedup {mx:.0}× at P={at_p} (s={at_s})");
+    }
+
+    println!("\n=== Figure 9: weak scaling (b=4, d=1024, n/P=2^11) ===");
+    for m in [Machine::cori_mpi(), Machine::cori_spark()] {
+        let series = weak_scaling(&m, 1024.0, 2048.0, b, h, &pr, 1000);
+        let (mx, at_p, at_s) = series.max_speedup();
+        println!("\n{}:", m.name);
+        println!("{:>12} {:>13} {:>13} {:>7} {:>9}", "P", "T_BCD", "T_CA-BCD", "s*", "speedup");
+        for pt in series.points.iter().step_by(3) {
+            println!(
+                "{:>12} {:>13.4e} {:>13.4e} {:>7} {:>9.2}",
+                pt.p, pt.t_classical, pt.t_ca, pt.best_s, pt.speedup
+            );
+        }
+        println!("→ max modeled speedup {mx:.0}× at P={at_p} (s={at_s})");
+    }
+
+    println!(
+        "\nPaper's headline numbers for comparison: strong scaling 14× (MPI) \
+         and 165× (Spark); weak scaling 12× (MPI) and 396× (Spark)."
+    );
+}

@@ -1,0 +1,161 @@
+"""AOT-lower the L2 model (and its L1 Pallas kernel) to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+emitted ``artifacts/*.hlo.txt`` via the PJRT C API and never touches Python
+again.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. All computations are lowered with ``return_tuple=True``
+and the Rust side unwraps the tuple.
+
+Artifacts (all float64 — parity with the coordinator's native f64 path):
+
+  gram_resid_sb{SB}_n{NLOC}    (Y[SB,NLOC], z[NLOC]) -> (G[SB,SB], r[SB])
+  inner_solve_s{S}_b{B}        (Graw, rraw, wblk, overlap, lam, inv_n) -> d[S,B]
+  alpha_update_sb{SB}_n{NLOC}  (Y[SB,NLOC], dflat[SB]) -> a[NLOC]
+
+plus ``manifest.json`` describing every artifact so the Rust runtime can
+discover shapes without re-parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels.gram import vmem_report  # noqa: E402
+
+DTYPE = jnp.float64
+
+# Default artifact shape set. NLOC is the fixed column-chunk width the Rust
+# runtime feeds (it pads the final chunk with zero columns — exact, since
+# zero columns contribute nothing); SB values cover the b·s products used by
+# the examples and the e2e driver; (S, B) are the inner-solve shapes.
+GRAM_SHAPES = [(16, 2048), (32, 2048), (64, 2048)]
+SOLVE_SHAPES = [(4, 4), (4, 8), (8, 8)]
+NT = 512  # pallas column-tile width inside one chunk
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def lower_gram(sb: int, nloc: int):
+    fn = functools.partial(model.gram_resid_partial, nt=NT)
+    return jax.jit(fn).lower(spec(sb, nloc), spec(nloc))
+
+
+def lower_inner_solve(s: int, b: int):
+    return jax.jit(model.ca_inner_solve).lower(
+        spec(s * b, s * b), spec(s * b), spec(s, b), spec(s, s, b, b),
+        spec(), spec())
+
+
+def lower_dual_inner_solve(s: int, b: int):
+    return jax.jit(model.ca_dual_inner_solve).lower(
+        spec(s * b, s * b), spec(s * b), spec(s, b), spec(s, b),
+        spec(s, s, b, b), spec(), spec())
+
+
+def lower_alpha_update(sb: int, nloc: int):
+    return jax.jit(model.alpha_update_partial).lower(spec(sb, nloc), spec(sb))
+
+
+def emit(out_dir: str, name: str, lowered, meta: dict, manifest: list,
+         verbose: bool = True) -> None:
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    manifest.append({"name": name, "file": f"{name}.hlo.txt",
+                     "sha256_16": digest, "dtype": "f64", **meta})
+    if verbose:
+        print(f"  {name}.hlo.txt  ({len(text)} chars, sha={digest})")
+
+
+def build_all(out_dir: str, gram_shapes, solve_shapes, verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list = []
+    for sb, nloc in gram_shapes:
+        emit(out_dir, f"gram_resid_sb{sb}_n{nloc}", lower_gram(sb, nloc),
+             {"kind": "gram_resid", "sb": sb, "nloc": nloc, "nt": NT},
+             manifest, verbose)
+        emit(out_dir, f"alpha_update_sb{sb}_n{nloc}",
+             lower_alpha_update(sb, nloc),
+             {"kind": "alpha_update", "sb": sb, "nloc": nloc},
+             manifest, verbose)
+    for s, b in solve_shapes:
+        emit(out_dir, f"inner_solve_s{s}_b{b}", lower_inner_solve(s, b),
+             {"kind": "inner_solve", "s": s, "b": b}, manifest, verbose)
+        emit(out_dir, f"dual_inner_solve_s{s}_b{b}",
+             lower_dual_inner_solve(s, b),
+             {"kind": "dual_inner_solve", "s": s, "b": b}, manifest, verbose)
+    man = {"version": 1, "dtype": "f64", "nt": NT, "artifacts": manifest}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=2)
+    # TSV twin for the Rust runtime (kept serde-free offline):
+    #   #meta dtype=f64 nt=512
+    #   name \t file \t kind \t sb \t nloc \t s \t b
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(f"#meta dtype=f64 nt={NT}\n")
+        for a in manifest:
+            f.write("\t".join(str(x) for x in (
+                a["name"], a["file"], a["kind"],
+                a.get("sb", 0), a.get("nloc", 0),
+                a.get("s", 0), a.get("b", 0))) + "\n")
+    if verbose:
+        print(f"wrote {len(manifest)} artifacts + manifest.json to {out_dir}")
+    return man
+
+
+def report(gram_shapes) -> None:
+    print("L1 kernel VMEM/MXU structural report (per grid step):")
+    print(f"{'sb':>5} {'nt':>5} {'VMEM MiB':>9} {'≤16MiB':>7} "
+          f"{'MXU fill':>9} {'AI flop/B':>10}")
+    for sb, _ in gram_shapes:
+        r = vmem_report(sb, NT, itemsize=8)
+        print(f"{r['sb']:>5} {r['nt']:>5} {r['vmem_mib']:>9.3f} "
+              f"{str(r['fits_16mib']):>7} {r['mxu_fill']:>9.2f} "
+              f"{r['arithmetic_intensity']:>10.1f}")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out", default="../artifacts",
+                   help="output directory for *.hlo.txt + manifest.json")
+    p.add_argument("--report", action="store_true",
+                   help="print the VMEM/MXU structural report and exit")
+    args = p.parse_args(argv)
+    if args.report:
+        report(GRAM_SHAPES)
+        return
+    build_all(args.out, GRAM_SHAPES, SOLVE_SHAPES)
+    report(GRAM_SHAPES)
+
+
+if __name__ == "__main__":
+    main()

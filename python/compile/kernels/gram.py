@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: fused partial-Gram + residual.
+
+This is the compute hot-spot of every solver in the repo (Algorithms 1–4 of
+Devarakonda et al. 2016): given the sampled row-block ``Y ∈ R^{sb×n_loc}``
+held by one rank, produce
+
+    G_partial = Y Yᵀ        (sb × sb)
+    r_partial = Y z         (sb,)
+
+in ONE pass over ``Y``. The coordinator allreduces both across ranks and then
+applies the ``1/n`` scaling and ``+λI`` shift.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks ``n_loc`` in
+``nt``-wide column tiles; each step streams one ``(sb, nt)`` tile of ``Y``
+HBM→VMEM, contracts it on the MXU (``Y_t @ Y_tᵀ`` is an (sb×nt)·(nt×sb)
+matmul), and accumulates into an ``(sb, sb)`` VMEM-resident output block that
+the index_map pins in place across the whole grid. The residual matvec reuses
+the same tile load — Gram and residual share one HBM pass.
+
+The kernel MUST be lowered with ``interpret=True`` in this image: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gram_resid", "DEFAULT_NT", "vmem_report"]
+
+# Default column-tile width. 512 keeps the MXU contraction dimension ≥ 128
+# lanes while the VMEM budget (see vmem_report) stays far under 16 MiB for
+# every sb we AOT-compile.
+DEFAULT_NT = 512
+
+
+def _gram_resid_kernel(y_ref, z_ref, g_ref, r_ref):
+    """One grid step: accumulate the tile's Gram and residual contribution."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    y_t = y_ref[...]                      # (sb, nt) tile, VMEM
+    z_t = z_ref[...]                      # (nt,)
+    acc = y_ref.dtype
+    # Symmetric rank-nt update on the MXU; f32 (or f64) accumulation.
+    g_ref[...] += jnp.dot(y_t, y_t.T, preferred_element_type=acc)
+    # Residual matvec reuses the same y_t tile — fused, single HBM pass.
+    r_ref[...] += jnp.dot(y_t, z_t, preferred_element_type=acc)
+
+
+@functools.partial(jax.jit, static_argnames=("nt",))
+def gram_resid(y_block: jnp.ndarray, z: jnp.ndarray, *, nt: int = DEFAULT_NT):
+    """Fused ``(Y Yᵀ, Y z)`` over column tiles of width ``nt``.
+
+    ``y_block.shape[1]`` must be a multiple of ``nt`` — the Rust runtime
+    zero-pads the final tile (zero columns contribute nothing to either
+    output, so padding is exact, not approximate).
+    """
+    sb, n_loc = y_block.shape
+    if n_loc % nt != 0:
+        raise ValueError(f"n_loc={n_loc} must be a multiple of nt={nt}")
+    grid = (n_loc // nt,)
+    return pl.pallas_call(
+        _gram_resid_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb, nt), lambda j: (0, j)),
+            pl.BlockSpec((nt,), lambda j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((sb, sb), lambda j: (0, 0)),
+            pl.BlockSpec((sb,), lambda j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sb, sb), y_block.dtype),
+            jax.ShapeDtypeStruct((sb,), y_block.dtype),
+        ],
+        interpret=True,
+    )(y_block, z)
+
+
+def vmem_report(sb: int, nt: int, itemsize: int = 4) -> dict:
+    """Estimate the VMEM working set and MXU utilization of one grid step.
+
+    Used by ``aot.py --report`` and recorded in DESIGN.md/EXPERIMENTS.md; on
+    this image the kernel runs under interpret=True so these are *structural*
+    estimates (the quantity we optimize), not measurements.
+    """
+    tile_y = sb * nt * itemsize
+    tile_z = nt * itemsize
+    acc_g = sb * sb * itemsize
+    acc_r = sb * itemsize
+    total = tile_y + tile_z + acc_g + acc_r
+    # MXU does 128×128 systolic matmul; utilization of the (sb,nt)x(nt,sb)
+    # contraction is limited by how well sb fills the 128-lane dimension.
+    mxu_fill = min(sb, 128) / 128.0
+    flops_per_tile = 2 * sb * sb * nt + 2 * sb * nt
+    return {
+        "sb": sb,
+        "nt": nt,
+        "vmem_bytes": total,
+        "vmem_mib": total / (1 << 20),
+        "fits_16mib": total <= (16 << 20),
+        "mxu_fill": mxu_fill,
+        "flops_per_tile": flops_per_tile,
+        "arithmetic_intensity": flops_per_tile / max(1, tile_y + tile_z),
+    }

@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the Rust
+native backend — tested against the same closed forms) are validated against.
+
+Everything here is deliberately written as the *obvious* dense expression:
+no tiling, no fusion, no accumulation tricks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_resid_ref(y_block: jnp.ndarray, z: jnp.ndarray):
+    """Reference for the fused partial-Gram + residual kernel.
+
+    Args:
+      y_block: ``(sb, n_loc)`` — the sampled rows of X held by one rank
+        (primal), or the transpose of the sampled columns (dual).
+      z: ``(n_loc,)`` — the vector the residual matvec contracts against
+        (primal: ``y - alpha``; dual: ``w``).
+
+    Returns:
+      ``(G_partial, r_partial)`` with ``G_partial = Y Yᵀ`` (``(sb, sb)``)
+      and ``r_partial = Y z`` (``(sb,)``). Scaling by ``1/n`` and the
+      ``+λI`` shift happen *after* the cross-rank allreduce, in the
+      coordinator, so the kernel stays scale-free.
+    """
+    g = y_block @ y_block.T
+    r = y_block @ z
+    return g, r
+
+
+def ca_inner_solve_ref(g: jnp.ndarray, overlap: jnp.ndarray,
+                       r0: jnp.ndarray, lam: float):
+    """Reference for the CA-BCD s-step inner solve (Alg. 2, lines 8–12).
+
+    Args:
+      g: ``(s*b, s*b)`` Gram matrix ``(1/n) Y Yᵀ + λ I`` (already reduced).
+      overlap: ``(s, s, b, b)`` block-overlap tensor,
+        ``overlap[j, t] = I_{sk+j}ᵀ I_{sk+t}`` (0/1 entries).
+      r0: ``(s, b)`` per-inner-step base residuals
+        ``-λ I_jᵀ w_sk - (1/n) I_jᵀ X α_sk + (1/n) I_jᵀ X y``.
+      lam: regularization parameter λ.
+
+    Returns:
+      ``(s, b)`` array of Δw blocks.
+    """
+    s, b = r0.shape
+    deltas = jnp.zeros((s, b), dtype=g.dtype)
+    for j in range(s):
+        rhs = r0[j]
+        for t in range(j):
+            cross = lam * overlap[j, t] + g[j * b:(j + 1) * b, t * b:(t + 1) * b]
+            rhs = rhs - cross @ deltas[t]
+        gamma = g[j * b:(j + 1) * b, j * b:(j + 1) * b]
+        dw = jnp.linalg.solve(gamma, rhs)
+        deltas = deltas.at[j].set(dw)
+    return deltas

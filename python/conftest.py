@@ -1,0 +1,5 @@
+import jax
+
+# Artifacts and the coordinator's native path are float64; keep the test
+# numerics identical.
+jax.config.update("jax_enable_x64", True)

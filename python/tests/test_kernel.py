@@ -1,0 +1,113 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.gram import gram_resid, vmem_report, DEFAULT_NT
+from compile.kernels.ref import gram_resid_ref
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+@pytest.mark.parametrize("sb", [1, 4, 16, 64])
+@pytest.mark.parametrize("nloc,nt", [(512, 512), (2048, 512), (1024, 256)])
+def test_gram_resid_matches_ref_f64(sb, nloc, nt):
+    y = _rand((sb, nloc), jnp.float64, seed=sb * nloc)
+    z = _rand((nloc,), jnp.float64, seed=sb + nloc)
+    g, r = gram_resid(y, z, nt=nt)
+    gr, rr = gram_resid_ref(y, z)
+    assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-12, atol=1e-12)
+    assert_allclose(np.asarray(r), np.asarray(rr), rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-4), (jnp.float64, 1e-12)])
+def test_gram_resid_dtypes(dtype, rtol):
+    y = _rand((32, 1024), dtype, seed=7)
+    z = _rand((1024,), dtype, seed=8)
+    g, r = gram_resid(y, z, nt=512)
+    gr, rr = gram_resid_ref(y, z)
+    assert g.dtype == dtype and r.dtype == dtype
+    assert_allclose(np.asarray(g), np.asarray(gr), rtol=rtol, atol=rtol)
+    assert_allclose(np.asarray(r), np.asarray(rr), rtol=rtol, atol=rtol)
+
+
+def test_gram_is_symmetric_psd():
+    y = _rand((24, 2048), jnp.float64, seed=3)
+    z = jnp.zeros((2048,), jnp.float64)
+    g, r = gram_resid(y, z)
+    g = np.asarray(g)
+    assert_allclose(g, g.T, rtol=0, atol=1e-12)
+    evals = np.linalg.eigvalsh(g)
+    assert evals.min() >= -1e-10
+    assert_allclose(np.asarray(r), 0.0)
+
+
+def test_zero_padding_is_exact():
+    """Padding the final column chunk with zeros must not change outputs."""
+    y = _rand((16, 768), jnp.float64, seed=11)
+    z = _rand((768,), jnp.float64, seed=12)
+    ypad = jnp.concatenate([y, jnp.zeros((16, 256), jnp.float64)], axis=1)
+    zpad = jnp.concatenate([z, jnp.zeros((256,), jnp.float64)])
+    g1, r1 = gram_resid(y, z, nt=256)
+    g2, r2 = gram_resid(ypad, zpad, nt=256)
+    assert_allclose(np.asarray(g1), np.asarray(g2), rtol=0, atol=0)
+    assert_allclose(np.asarray(r1), np.asarray(r2), rtol=0, atol=0)
+
+
+def test_nt_must_divide_nloc():
+    y = _rand((4, 100), jnp.float64, seed=1)
+    z = _rand((100,), jnp.float64, seed=2)
+    with pytest.raises(ValueError, match="multiple of nt"):
+        gram_resid(y, z, nt=512)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sb=st.integers(min_value=1, max_value=48),
+    chunks=st.integers(min_value=1, max_value=4),
+    nt=st.sampled_from([64, 128, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gram_resid_hypothesis_sweep(sb, chunks, nt, seed):
+    """Property sweep over shapes: kernel ≡ oracle for any (sb, nloc, nt)."""
+    nloc = chunks * nt
+    y = _rand((sb, nloc), jnp.float64, seed=seed)
+    z = _rand((nloc,), jnp.float64, seed=seed + 1)
+    g, r = gram_resid(y, z, nt=nt)
+    gr, rr = gram_resid_ref(y, z)
+    assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-11, atol=1e-11)
+    assert_allclose(np.asarray(r), np.asarray(rr), rtol=1e-11, atol=1e-11)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sb=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gram_linearity_in_z(sb, seed):
+    """r = Y z is linear in z; G is independent of z (fusion is side-effect
+    free)."""
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.standard_normal((sb, 256)))
+    z1 = jnp.asarray(rng.standard_normal(256))
+    z2 = jnp.asarray(rng.standard_normal(256))
+    g1, r1 = gram_resid(y, z1, nt=128)
+    g2, r2 = gram_resid(y, z2, nt=128)
+    g3, r3 = gram_resid(y, z1 + 2.0 * z2, nt=128)
+    assert_allclose(np.asarray(g1), np.asarray(g2), rtol=0, atol=0)
+    assert_allclose(np.asarray(g1), np.asarray(g3), rtol=0, atol=0)
+    assert_allclose(np.asarray(r3), np.asarray(r1) + 2.0 * np.asarray(r2),
+                    rtol=1e-10, atol=1e-10)
+
+
+def test_vmem_report_structure():
+    r = vmem_report(64, DEFAULT_NT, itemsize=8)
+    assert r["fits_16mib"]
+    assert 0 < r["mxu_fill"] <= 1
+    assert r["vmem_bytes"] == 64 * 512 * 8 + 512 * 8 + 64 * 64 * 8 + 64 * 8

@@ -1,0 +1,205 @@
+"""L2 model tests: unrolled Cholesky, CA inner solve vs oracle, and the
+paper's exact-arithmetic claim — s steps of CA-BCD ≡ s sequential BCD steps.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.model import (alpha_update_partial, ca_dual_inner_solve,
+                           ca_inner_solve, cholesky_unrolled, chol_solve)
+from compile.kernels.ref import ca_inner_solve_ref
+
+
+def _spd(b, seed, cond=None):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((b, b + 8))
+    a = m @ m.T + 0.1 * np.eye(b)
+    return a
+
+
+@pytest.mark.parametrize("b", [1, 2, 5, 8, 16])
+def test_cholesky_unrolled_matches_numpy(b):
+    a = _spd(b, seed=b)
+    l = np.asarray(cholesky_unrolled(jnp.asarray(a)))
+    assert_allclose(l, np.linalg.cholesky(a), rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("b", [1, 3, 8, 16])
+def test_chol_solve_residual(b):
+    a = _spd(b, seed=100 + b)
+    rng = np.random.default_rng(b)
+    rhs = rng.standard_normal(b)
+    x = np.asarray(chol_solve(jnp.asarray(a), jnp.asarray(rhs)))
+    assert_allclose(a @ x, rhs, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(min_value=1, max_value=12),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_chol_solve_hypothesis(b, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((b, b + 4))
+    a = m @ m.T + 0.05 * np.eye(b)
+    rhs = rng.standard_normal(b)
+    x = np.asarray(chol_solve(jnp.asarray(a), jnp.asarray(rhs)))
+    assert_allclose(a @ x, rhs, rtol=1e-8, atol=1e-8)
+
+
+def _random_blocks(d, s, b, rng):
+    """s sample index blocks (without replacement within a block)."""
+    return [rng.choice(d, size=b, replace=False) for _ in range(s)]
+
+
+def _overlap_tensor(blocks, s, b):
+    ov = np.zeros((s, s, b, b))
+    for j in range(s):
+        for t in range(s):
+            ov[j, t] = (blocks[j][:, None] == blocks[t][None, :]).astype(float)
+    return ov
+
+
+def _bcd_step(x, y, w, alpha, idx, lam, n):
+    """One step of classical BCD (Algorithm 1) in plain numpy."""
+    xi = x[idx, :]                                   # (b, n)
+    gamma = xi @ xi.T / n + lam * np.eye(len(idx))
+    rhs = -lam * w[idx] - xi @ alpha / n + xi @ y / n
+    dw = np.linalg.solve(gamma, rhs)
+    w = w.copy()
+    np.add.at(w, idx, dw)
+    alpha = alpha + xi.T @ dw
+    return w, alpha
+
+
+@pytest.mark.parametrize("s,b", [(2, 3), (4, 4), (8, 2), (3, 8)])
+def test_ca_inner_solve_equals_sequential_bcd(s, b):
+    """The paper's central claim (§3.1, eq. 8): the unrolled s-step solve
+    reproduces s sequential BCD iterations exactly (up to roundoff)."""
+    rng = np.random.default_rng(42 + s * b)
+    d, n = 30, 64
+    x = rng.standard_normal((d, n))
+    y = rng.standard_normal(n)
+    lam = 0.5
+    w = rng.standard_normal(d)
+    alpha = x.T @ w
+
+    blocks = _random_blocks(d, s, b, rng)
+
+    # --- sequential BCD, s steps ---
+    w_seq, a_seq = w.copy(), alpha.copy()
+    for j in range(s):
+        w_seq, a_seq = _bcd_step(x, y, w_seq, a_seq, blocks[j], lam, n)
+
+    # --- CA inner solve from (w, alpha) at the start of the outer iter ---
+    ystack = np.concatenate([x[blk, :] for blk in blocks], axis=0)  # (s*b, n)
+    g_raw = ystack @ ystack.T
+    r_raw = ystack @ (y - alpha)
+    w_blk = np.stack([w[blk] for blk in blocks])
+    ov = _overlap_tensor(blocks, s, b)
+    deltas = np.asarray(ca_inner_solve(
+        jnp.asarray(g_raw), jnp.asarray(r_raw), jnp.asarray(w_blk),
+        jnp.asarray(ov), lam, 1.0 / n))
+
+    w_ca = w.copy()
+    for j in range(s):
+        np.add.at(w_ca, blocks[j], deltas[j])
+    a_ca = alpha + ystack.T @ deltas.reshape(-1)
+
+    assert_allclose(w_ca, w_seq, rtol=1e-9, atol=1e-10)
+    assert_allclose(a_ca, a_seq, rtol=1e-9, atol=1e-10)
+
+
+def _bdcd_step(x, y, w, alpha, idx, lam, n):
+    """One step of classical BDCD (Algorithm 3 / eq. 17) in plain numpy."""
+    xi = x[:, idx]                                    # (d, b')
+    theta = xi.T @ xi / (lam * n * n) + np.eye(len(idx)) / n
+    rhs = -xi.T @ w + alpha[idx] + y[idx]
+    da = -np.linalg.solve(theta, rhs) / n
+    alpha = alpha.copy()
+    np.add.at(alpha, idx, da)
+    w = w - xi @ da / (lam * n)
+    return w, alpha
+
+
+@pytest.mark.parametrize("s,b", [(2, 3), (4, 4), (3, 8)])
+def test_ca_dual_inner_solve_equals_sequential_bdcd(s, b):
+    """Dual counterpart of the unrolling claim (§3.2, eq. 18)."""
+    rng = np.random.default_rng(17 + s * b)
+    d, n = 40, 50
+    x = rng.standard_normal((d, n))
+    y = rng.standard_normal(n)
+    lam = 0.8
+    alpha = rng.standard_normal(n)
+    w = -x @ alpha / (lam * n)                        # eq. 12 coupling
+
+    blocks = _random_blocks(n, s, b, rng)
+
+    w_seq, a_seq = w.copy(), alpha.copy()
+    for j in range(s):
+        w_seq, a_seq = _bdcd_step(x, y, w_seq, a_seq, blocks[j], lam, n)
+
+    # CA path: Y = (X·[I_1..I_s])ᵀ, raw Gram and raw residual.
+    ystack = np.concatenate([x[:, blk].T for blk in blocks], axis=0)  # (s*b, d)
+    g_raw = ystack @ ystack.T
+    r_raw = ystack @ w
+    a_blk = np.stack([alpha[blk] for blk in blocks])
+    y_blk = np.stack([y[blk] for blk in blocks])
+    ov = _overlap_tensor(blocks, s, b)
+    deltas = np.asarray(ca_dual_inner_solve(
+        jnp.asarray(g_raw), jnp.asarray(r_raw), jnp.asarray(a_blk),
+        jnp.asarray(y_blk), jnp.asarray(ov), lam, 1.0 / n))
+
+    a_ca = alpha.copy()
+    for j in range(s):
+        np.add.at(a_ca, blocks[j], deltas[j])
+    w_ca = w - ystack.T @ deltas.reshape(-1) / (lam * n)
+
+    assert_allclose(a_ca, a_seq, rtol=1e-9, atol=1e-10)
+    assert_allclose(w_ca, w_seq, rtol=1e-9, atol=1e-10)
+
+
+def test_ca_inner_solve_matches_ref():
+    rng = np.random.default_rng(5)
+    s, b, n = 4, 6, 200
+    m = rng.standard_normal((s * b, n))
+    g_raw = m @ m.T
+    r_raw = rng.standard_normal(s * b)
+    w_blk = rng.standard_normal((s, b))
+    ov = (rng.random((s, s, b, b)) < 0.05).astype(float)
+    lam, inv_n = 0.3, 1.0 / n
+    d1 = np.asarray(ca_inner_solve(jnp.asarray(g_raw), jnp.asarray(r_raw),
+                                   jnp.asarray(w_blk), jnp.asarray(ov),
+                                   lam, inv_n))
+    g = inv_n * g_raw + lam * np.eye(s * b)
+    r0 = -lam * w_blk + inv_n * r_raw.reshape(s, b)
+    d2 = np.asarray(ca_inner_solve_ref(jnp.asarray(g), jnp.asarray(ov),
+                                       jnp.asarray(r0), lam))
+    assert_allclose(d1, d2, rtol=1e-12, atol=1e-12)
+
+
+def test_s_equals_one_is_plain_bcd_subproblem():
+    """With s=1 the inner solve degenerates to the classical Γ⁻¹·residual."""
+    rng = np.random.default_rng(9)
+    b, n = 8, 100
+    m = rng.standard_normal((b, n))
+    g_raw = m @ m.T
+    r_raw = rng.standard_normal(b)
+    w_blk = rng.standard_normal((1, b))
+    ov = np.eye(b)[None, None]
+    lam, inv_n = 0.7, 1.0 / n
+    d = np.asarray(ca_inner_solve(jnp.asarray(g_raw), jnp.asarray(r_raw),
+                                  jnp.asarray(w_blk), jnp.asarray(ov),
+                                  lam, inv_n))[0]
+    gamma = inv_n * g_raw + lam * np.eye(b)
+    expect = np.linalg.solve(gamma, -lam * w_blk[0] + inv_n * r_raw)
+    assert_allclose(d, expect, rtol=1e-11, atol=1e-12)
+
+
+def test_alpha_update_partial():
+    rng = np.random.default_rng(3)
+    y = rng.standard_normal((12, 64))
+    d = rng.standard_normal(12)
+    out = np.asarray(alpha_update_partial(jnp.asarray(y), jnp.asarray(d)))
+    assert_allclose(out, y.T @ d, rtol=1e-12, atol=1e-12)

@@ -1,0 +1,89 @@
+//! Per-rank communication meters.
+//!
+//! Counts are in the units of the paper's α-β-γ model: `msgs` (latency L),
+//! `words` (bandwidth W, in f64 words), plus collective-call counters used
+//! by the message-count validation tests (e.g. CA-BCD must show exactly
+//! H/s allreduces where BCD shows H).
+
+/// Communication counters for one rank.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CostMeter {
+    /// Point-to-point messages sent.
+    pub msgs: u64,
+    /// f64 words sent.
+    pub words: u64,
+    /// Messages received (used for critical-path max).
+    pub recv_msgs: u64,
+    /// Words received.
+    pub recv_words: u64,
+    /// Number of allreduce collectives entered.
+    pub allreduces: u64,
+    /// Number of all-to-all collectives entered.
+    pub all_to_alls: u64,
+}
+
+impl CostMeter {
+    pub fn record_send(&mut self, words: usize) {
+        self.msgs += 1;
+        self.words += words as u64;
+    }
+
+    pub fn record_recv(&mut self, words: usize) {
+        self.recv_msgs += 1;
+        self.recv_words += words as u64;
+    }
+
+    /// Merge (sum) another meter into this one.
+    pub fn merge(&mut self, other: &CostMeter) {
+        self.msgs += other.msgs;
+        self.words += other.words;
+        self.recv_msgs += other.recv_msgs;
+        self.recv_words += other.recv_words;
+        self.allreduces += other.allreduces;
+        self.all_to_alls += other.all_to_alls;
+    }
+
+    /// Critical-path message/word counts over a group of rank meters:
+    /// the max over ranks of (sends + receives), which upper-bounds the
+    /// serialization any single rank experiences.
+    pub fn critical_path(meters: &[CostMeter]) -> (u64, u64) {
+        meters
+            .iter()
+            .map(|m| (m.msgs + m.recv_msgs, m.words + m.recv_words))
+            .fold((0, 0), |(am, aw), (m, w)| (am.max(m), aw.max(w)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_merge() {
+        let mut a = CostMeter::default();
+        a.record_send(10);
+        a.record_send(5);
+        a.record_recv(3);
+        assert_eq!(a.msgs, 2);
+        assert_eq!(a.words, 15);
+        let mut b = CostMeter::default();
+        b.record_send(1);
+        b.merge(&a);
+        assert_eq!(b.msgs, 3);
+        assert_eq!(b.words, 16);
+        assert_eq!(b.recv_words, 3);
+    }
+
+    #[test]
+    fn critical_path_is_max() {
+        let mut a = CostMeter::default();
+        a.record_send(100);
+        let mut b = CostMeter::default();
+        b.record_send(1);
+        b.record_send(1);
+        b.record_send(1);
+        let (m, w) = CostMeter::critical_path(&[a, b]);
+        assert_eq!(m, 3);
+        assert_eq!(w, 100);
+    }
+}

@@ -1,0 +1,111 @@
+//! In-process MPI-like communicator substrate.
+//!
+//! The paper's machine is a distributed-memory cluster programmed with MPI
+//! collectives; its cost analysis (Theorems 1–9) counts messages and words
+//! along the critical path of binomial-tree collectives. This module builds
+//! that substrate: P ranks as threads, point-to-point channels, and the
+//! MPICH-style binomial-tree algorithms for reduce/broadcast — so the
+//! message counts that enter the α-β-γ model are *measured*, not assumed.
+//!
+//! Every send is metered; [`CostMeter::critical_path`] takes the max over
+//! ranks, which is what the paper's `O(·)` latency/bandwidth terms bound.
+
+pub mod cost;
+pub mod thread;
+
+pub use cost::CostMeter;
+pub use thread::{run_spmd, ThreadComm};
+
+use crate::error::Result;
+
+/// Rank-local handle to a P-rank communicator.
+///
+/// Mirrors the MPI subset the paper's algorithms need: allreduce (the
+/// per-iteration Gram/residual sum), broadcast, all-to-all (the 1D-block-row
+/// load-balancing conversion of Theorem 4), and barrier.
+pub trait Communicator: Send {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+
+    /// Element-wise sum of `buf` across all ranks; result replicated.
+    fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()>;
+
+    /// Broadcast `buf` from `root` to everyone.
+    fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()>;
+
+    /// Personalized all-to-all: `send[p]` goes to rank p; returns the
+    /// vector received from each rank.
+    fn all_to_all(&mut self, send: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>>;
+
+    /// Synchronize all ranks.
+    fn barrier(&mut self) -> Result<()>;
+
+    /// Communication meter for this rank.
+    fn meter(&self) -> &CostMeter;
+    fn meter_mut(&mut self) -> &mut CostMeter;
+}
+
+/// Single-rank communicator: all collectives are no-ops. Used for P=1 runs
+/// (the numerics of every solver are P-independent; see the SPMD
+/// equivalence integration test).
+#[derive(Debug, Default)]
+pub struct SerialComm {
+    meter: CostMeter,
+}
+
+impl SerialComm {
+    pub fn new() -> Self {
+        SerialComm::default()
+    }
+}
+
+impl Communicator for SerialComm {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn size(&self) -> usize {
+        1
+    }
+
+    fn allreduce_sum(&mut self, _buf: &mut [f64]) -> Result<()> {
+        self.meter.allreduces += 1;
+        Ok(())
+    }
+
+    fn broadcast(&mut self, _root: usize, _buf: &mut [f64]) -> Result<()> {
+        Ok(())
+    }
+
+    fn all_to_all(&mut self, send: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        Ok(send)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn meter(&self) -> &CostMeter {
+        &self.meter
+    }
+
+    fn meter_mut(&mut self) -> &mut CostMeter {
+        &mut self.meter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_comm_identity() {
+        let mut c = SerialComm::new();
+        let mut buf = vec![1.0, 2.0];
+        c.allreduce_sum(&mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0]);
+        assert_eq!(c.meter().allreduces, 1);
+        let out = c.all_to_all(vec![vec![5.0]]).unwrap();
+        assert_eq!(out, vec![vec![5.0]]);
+    }
+}

@@ -1,0 +1,318 @@
+//! Thread-backed communicator: P ranks as OS threads, a crossbeam channel
+//! per ordered rank pair, and MPICH-style binomial-tree collectives.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::comm::{Communicator, CostMeter};
+use crate::error::{Error, Result};
+
+/// Rank-local endpoint of a P-rank thread communicator.
+pub struct ThreadComm {
+    rank: usize,
+    size: usize,
+    /// `send_to[p]` delivers to rank p's `recv_from[self.rank]`.
+    send_to: Vec<Sender<Vec<f64>>>,
+    recv_from: Vec<Receiver<Vec<f64>>>,
+    meter: CostMeter,
+}
+
+impl ThreadComm {
+    /// Create a fully-connected group of P endpoints.
+    pub fn group(p: usize) -> Vec<ThreadComm> {
+        assert!(p >= 1, "communicator needs at least one rank");
+        // channels[src][dst]
+        let mut senders: Vec<Vec<Option<Sender<Vec<f64>>>>> =
+            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
+        let mut receivers: Vec<Vec<Option<Receiver<Vec<f64>>>>> =
+            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
+        for src in 0..p {
+            for dst in 0..p {
+                let (tx, rx) = channel();
+                senders[src][dst] = Some(tx);
+                receivers[dst][src] = Some(rx);
+            }
+        }
+        let mut out = Vec::with_capacity(p);
+        for rank in 0..p {
+            let send_to = senders[rank]
+                .iter_mut()
+                .map(|s| s.take().unwrap())
+                .collect();
+            let recv_from = receivers[rank]
+                .iter_mut()
+                .map(|r| r.take().unwrap())
+                .collect();
+            out.push(ThreadComm {
+                rank,
+                size: p,
+                send_to,
+                recv_from,
+                meter: CostMeter::default(),
+            });
+        }
+        out
+    }
+
+    fn send(&mut self, dst: usize, buf: Vec<f64>) -> Result<()> {
+        self.meter.record_send(buf.len());
+        self.send_to[dst]
+            .send(buf)
+            .map_err(|e| Error::Comm(format!("send {}→{dst}: {e}", self.rank)))
+    }
+
+    fn recv(&mut self, src: usize) -> Result<Vec<f64>> {
+        let buf = self.recv_from[src]
+            .recv()
+            .map_err(|e| Error::Comm(format!("recv {}←{src}: {e}", self.rank)))?;
+        self.meter.record_recv(buf.len());
+        Ok(buf)
+    }
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Binomial-tree reduce to rank 0, then binomial-tree broadcast —
+    /// 2·⌈log₂P⌉ rounds, O(log P) messages per rank on the critical path,
+    /// exactly the collective the paper's Theorems charge for.
+    fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()> {
+        self.meter.allreduces += 1;
+        let p = self.size;
+        if p == 1 {
+            return Ok(());
+        }
+        // --- reduce to 0 (MPICH binomial) ---
+        let mut mask = 1usize;
+        while mask < p {
+            if self.rank & mask != 0 {
+                let dst = self.rank & !mask;
+                self.send(dst, buf.to_vec())?;
+                break;
+            } else {
+                let src = self.rank | mask;
+                if src < p {
+                    let got = self.recv(src)?;
+                    if got.len() != buf.len() {
+                        return Err(Error::Comm("allreduce length mismatch".into()));
+                    }
+                    for (b, g) in buf.iter_mut().zip(&got) {
+                        *b += g;
+                    }
+                }
+            }
+            mask <<= 1;
+        }
+        // --- broadcast from 0 ---
+        self.broadcast_inner(0, buf)
+    }
+
+    fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
+        self.broadcast_inner(root, buf)
+    }
+
+    /// Direct personalized exchange: P−1 sends + P−1 receives per rank
+    /// (the "large message" regime of Theorems 4/8: L = O(P)).
+    fn all_to_all(&mut self, send: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        self.meter.all_to_alls += 1;
+        let p = self.size;
+        if send.len() != p {
+            return Err(Error::Comm(format!(
+                "all_to_all: {} buffers for {p} ranks",
+                send.len()
+            )));
+        }
+        let mut out: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
+        for (dst, bufv) in send.into_iter().enumerate() {
+            if dst == self.rank {
+                out[dst] = bufv;
+            } else {
+                self.send(dst, bufv)?;
+            }
+        }
+        for src in 0..p {
+            if src != self.rank {
+                out[src] = self.recv(src)?;
+            }
+        }
+        Ok(out)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        // Zero-payload allreduce (counts a message round, no words).
+        let mut token = [0.0f64; 0];
+        // Reuse tree structure with an empty buffer.
+        let p = self.size;
+        if p == 1 {
+            return Ok(());
+        }
+        let mut mask = 1usize;
+        while mask < p {
+            if self.rank & mask != 0 {
+                let dst = self.rank & !mask;
+                self.send(dst, Vec::new())?;
+                break;
+            } else {
+                let src = self.rank | mask;
+                if src < p {
+                    self.recv(src)?;
+                }
+            }
+            mask <<= 1;
+        }
+        self.broadcast_inner(0, &mut token)
+    }
+
+    fn meter(&self) -> &CostMeter {
+        &self.meter
+    }
+
+    fn meter_mut(&mut self) -> &mut CostMeter {
+        &mut self.meter
+    }
+}
+
+impl ThreadComm {
+    fn broadcast_inner(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
+        let p = self.size;
+        if p == 1 {
+            return Ok(());
+        }
+        let rel = (self.rank + p - root) % p;
+        // Receive phase.
+        let mut mask = 1usize;
+        while mask < p {
+            if rel & mask != 0 {
+                let src = (self.rank + p - mask) % p;
+                let got = self.recv(src)?;
+                if got.len() != buf.len() {
+                    return Err(Error::Comm("broadcast length mismatch".into()));
+                }
+                buf.copy_from_slice(&got);
+                break;
+            }
+            mask <<= 1;
+        }
+        // Send phase (from the highest mask below our receive level down).
+        mask >>= 1;
+        while mask > 0 {
+            if rel + mask < p {
+                let dst = (self.rank + mask) % p;
+                self.send(dst, buf.to_vec())?;
+            }
+            mask >>= 1;
+        }
+        Ok(())
+    }
+}
+
+/// Run `f(rank, comm)` on P threads and collect per-rank results in rank
+/// order. Panics in any rank propagate.
+pub fn run_spmd<T, F>(p: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut ThreadComm) -> T + Sync,
+{
+    let comms = ThreadComm::group(p);
+    let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        for (rank, mut comm) in comms.into_iter().enumerate() {
+            let fref = &f;
+            handles.push(scope.spawn(move || (rank, fref(rank, &mut comm), comm.meter)));
+        }
+        for h in handles {
+            let (rank, val, _meter) = h.join().expect("SPMD rank panicked");
+            out[rank] = Some(val);
+        }
+    });
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_sums_across_ranks() {
+        for p in [1usize, 2, 3, 4, 5, 8] {
+            let results = run_spmd(p, |rank, comm| {
+                let mut buf = vec![rank as f64, 1.0];
+                comm.allreduce_sum(&mut buf).unwrap();
+                buf
+            });
+            let expect = vec![(0..p).sum::<usize>() as f64, p as f64];
+            for r in results {
+                assert_eq!(r, expect, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for p in [2usize, 3, 7] {
+            for root in 0..p {
+                let results = run_spmd(p, |rank, comm| {
+                    let mut buf = if rank == root {
+                        vec![42.0, root as f64]
+                    } else {
+                        vec![0.0, 0.0]
+                    };
+                    comm.broadcast(root, &mut buf).unwrap();
+                    buf
+                });
+                for r in results {
+                    assert_eq!(r, vec![42.0, root as f64], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_permutes_payloads() {
+        let p = 4;
+        let results = run_spmd(p, |rank, comm| {
+            let send: Vec<Vec<f64>> = (0..p)
+                .map(|dst| vec![(rank * 10 + dst) as f64])
+                .collect();
+            comm.all_to_all(send).unwrap()
+        });
+        for (rank, got) in results.iter().enumerate() {
+            for (src, v) in got.iter().enumerate() {
+                assert_eq!(v, &vec![(src * 10 + rank) as f64]);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_message_count_is_logarithmic() {
+        for p in [2usize, 4, 8, 16] {
+            let meters = run_spmd(p, |_rank, comm| {
+                let mut buf = vec![1.0; 16];
+                comm.allreduce_sum(&mut buf).unwrap();
+                *comm.meter()
+            });
+            let (msgs, _) = CostMeter::critical_path(&meters);
+            let logp = (p as f64).log2().ceil() as u64;
+            assert!(
+                msgs <= 2 * logp,
+                "p={p}: critical-path msgs {msgs} > 2·log₂P = {}",
+                2 * logp
+            );
+        }
+    }
+
+    #[test]
+    fn barrier_completes() {
+        run_spmd(5, |_rank, comm| {
+            for _ in 0..3 {
+                comm.barrier().unwrap();
+            }
+        });
+    }
+}

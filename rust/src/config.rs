@@ -1,0 +1,223 @@
+//! Experiment configuration (the launcher's input format).
+//!
+//! INI-style files parsed by [`crate::util::ini`] (the toml crate is not in
+//! the offline vendor set; the format is a strict TOML subset for flat
+//! sections). Example (`configs/quickstart.ini`):
+//!
+//! ```ini
+//! [dataset]
+//! kind = synthetic        # or libsvm
+//! name = abalone          # Table-3 clone name (synthetic) …
+//! # path = data/a9a       # … or a LIBSVM file (libsvm)
+//! scale = 1               # divide both dimensions by this
+//! seed = 42
+//!
+//! [solver]
+//! method = cabcd          # bcd | cabcd | bdcd | cabdcd | cg
+//! b = 8
+//! s = 4
+//! iters = 2000
+//! # lam = 0.043           # default: 1000·σ_min from the spec
+//! seed = 7
+//! record_every = 50
+//! track_gram_cond = false
+//!
+//! [run]
+//! ranks = 4
+//! backend = native        # native | xla
+//! artifact_dir = artifacts
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::solvers::SolverOpts;
+use crate::util::ini::{self, Section};
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetConfig,
+    pub solver: SolverConfig,
+    pub run: RunConfig,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetConfig {
+    /// "synthetic" (Table-3 clone generator) or "libsvm" (file on disk).
+    pub kind: String,
+    pub name: Option<String>,
+    pub path: Option<PathBuf>,
+    /// Divide d and n by this factor (synthetic only).
+    pub scale: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    pub method: String,
+    pub b: usize,
+    pub s: usize,
+    pub lam: Option<f64>,
+    pub iters: usize,
+    pub seed: u64,
+    pub record_every: usize,
+    pub track_gram_cond: bool,
+    pub tol: Option<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub ranks: usize,
+    pub backend: String,
+    pub artifact_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            ranks: 1,
+            backend: "native".into(),
+            artifact_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_str(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        Ok(cfg)
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<ExperimentConfig> {
+        let parsed = ini::parse(text)?;
+        let ds = Section::of(&parsed, "dataset");
+        let sv = Section::of(&parsed, "solver");
+        let rn = Section::of(&parsed, "run");
+        let cfg = ExperimentConfig {
+            dataset: DatasetConfig {
+                kind: ds.require("kind")?.to_string(),
+                name: ds.str("name").map(String::from),
+                path: ds.str("path").map(PathBuf::from),
+                scale: ds.usize_or("scale", 1)?,
+                seed: ds.u64_or("seed", 0)?,
+            },
+            solver: SolverConfig {
+                method: sv.require("method")?.to_string(),
+                b: sv.usize_or("b", 4)?,
+                s: sv.usize_or("s", 1)?,
+                lam: sv.f64_opt("lam")?,
+                iters: sv.usize_or("iters", 1000)?,
+                seed: sv.u64_or("seed", 0)?,
+                record_every: sv.usize_or("record_every", 50)?,
+                track_gram_cond: sv.bool_or("track_gram_cond", false)?,
+                tol: sv.f64_opt("tol")?,
+            },
+            run: RunConfig {
+                ranks: rn.usize_or("ranks", 1)?,
+                backend: rn.str("backend").unwrap_or("native").to_string(),
+                artifact_dir: PathBuf::from(rn.str("artifact_dir").unwrap_or("artifacts")),
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self.dataset.kind.as_str() {
+            "synthetic" => {
+                if self.dataset.name.is_none() {
+                    return Err(Error::Config("synthetic dataset needs `name`".into()));
+                }
+            }
+            "libsvm" => {
+                if self.dataset.path.is_none() {
+                    return Err(Error::Config("libsvm dataset needs `path`".into()));
+                }
+            }
+            other => {
+                return Err(Error::Config(format!("unknown dataset kind {other:?}")));
+            }
+        }
+        match self.solver.method.as_str() {
+            "bcd" | "cabcd" | "bdcd" | "cabdcd" | "cg" => {}
+            other => return Err(Error::Config(format!("unknown method {other:?}"))),
+        }
+        match self.run.backend.as_str() {
+            "native" | "xla" => {}
+            other => return Err(Error::Config(format!("unknown backend {other:?}"))),
+        }
+        if self.run.ranks == 0 {
+            return Err(Error::Config("ranks must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Effective λ: explicit override or the spec's 1000·σ_min rule.
+    pub fn effective_lambda(&self, spec_lambda: f64) -> f64 {
+        self.solver.lam.unwrap_or(spec_lambda)
+    }
+
+    pub fn solver_opts(&self, lam: f64) -> SolverOpts {
+        SolverOpts {
+            b: self.solver.b,
+            s: if self.solver.method.starts_with("ca") {
+                self.solver.s
+            } else {
+                1
+            },
+            lam,
+            iters: self.solver.iters,
+            seed: self.solver.seed,
+            record_every: self.solver.record_every,
+            track_gram_cond: self.solver.track_gram_cond,
+            tol: self.solver.tol,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_config() {
+        let text = r#"
+            [dataset]
+            kind = synthetic
+            name = abalone
+
+            [solver]
+            method = cabcd
+            b = 8
+            s = 4
+        "#;
+        let cfg = ExperimentConfig::from_str(text).unwrap();
+        assert_eq!(cfg.solver.iters, 1000);
+        assert_eq!(cfg.run.ranks, 1);
+        let opts = cfg.solver_opts(0.5);
+        assert_eq!(opts.s, 4);
+        assert_eq!(opts.lam, 0.5);
+    }
+
+    #[test]
+    fn classical_method_forces_s1() {
+        let text = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = bcd\ns = 16\n";
+        let cfg = ExperimentConfig::from_str(text).unwrap();
+        assert_eq!(cfg.solver_opts(1.0).s, 1);
+    }
+
+    #[test]
+    fn rejects_bad_method() {
+        let text = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = sgd\n";
+        assert!(ExperimentConfig::from_str(text).is_err());
+    }
+
+    #[test]
+    fn libsvm_needs_path() {
+        let text = "[dataset]\nkind = libsvm\n[solver]\nmethod = bcd\n";
+        assert!(ExperimentConfig::from_str(text).is_err());
+    }
+}

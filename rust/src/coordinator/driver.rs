@@ -1,0 +1,291 @@
+//! End-to-end experiment driver: config → dataset → shards → SPMD solve →
+//! report. This is the launcher's core and what the examples call.
+
+use std::time::Instant;
+
+use crate::comm::cost::CostMeter;
+use crate::comm::thread::run_spmd;
+use crate::comm::SerialComm;
+use crate::config::ExperimentConfig;
+use crate::error::{Error, Result};
+use crate::gram::{ComputeBackend, NativeBackend};
+use crate::matrix::gen::{self, DatasetSpec};
+use crate::matrix::io::{read_libsvm, Dataset};
+use crate::metrics::History;
+use crate::runtime::XlaBackend;
+use crate::solvers::{bcd, bdcd, cg};
+
+use super::{partition_dual, partition_primal};
+
+/// Everything an experiment produces.
+#[derive(Clone, Debug)]
+pub struct ExperimentReport {
+    pub dataset: String,
+    pub d: usize,
+    pub n: usize,
+    pub method: String,
+    pub b: usize,
+    pub s: usize,
+    pub ranks: usize,
+    pub lambda: f64,
+    pub backend: String,
+    pub wall_ms: f64,
+    /// Rank-0 trajectory.
+    pub history: History,
+    /// Critical-path communication over all ranks (messages, words).
+    pub critical_msgs: u64,
+    pub critical_words: u64,
+    pub final_obj_err: f64,
+    pub final_sol_err: f64,
+}
+
+/// Load the configured dataset (synthetic clone or LIBSVM file) and its λ.
+pub fn load_dataset(cfg: &ExperimentConfig) -> Result<(Dataset, f64)> {
+    match cfg.dataset.kind.as_str() {
+        "synthetic" => {
+            let name = cfg.dataset.name.as_ref().unwrap();
+            let mut spec: DatasetSpec = gen::spec_by_name(name)?;
+            if cfg.dataset.scale > 1 {
+                let f = cfg.dataset.scale;
+                spec.name = format!("{}-s{}", spec.name, f);
+                spec.d = (spec.d / f).max(4);
+                spec.n = (spec.n / f).max(16);
+            }
+            let lam = cfg.effective_lambda(spec.lambda());
+            Ok((gen::generate(&spec, cfg.dataset.seed)?, lam))
+        }
+        "libsvm" => {
+            let path = cfg.dataset.path.as_ref().unwrap();
+            let ds = read_libsvm(path, None)?;
+            let lam = cfg
+                .solver
+                .lam
+                .ok_or_else(|| Error::Config("libsvm datasets need explicit `lam`".into()))?;
+            Ok((ds, lam))
+        }
+        _ => unreachable!("validated"),
+    }
+}
+
+fn make_backend(cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
+    match cfg.run.backend.as_str() {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "xla" => Ok(Box::new(XlaBackend::new(&cfg.run.artifact_dir)?)),
+        _ => unreachable!("validated"),
+    }
+}
+
+/// Run one configured experiment end to end.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
+    cfg.validate()?;
+    let (ds, lam) = load_dataset(cfg)?;
+    let (d, n) = (ds.d(), ds.n());
+    let p = cfg.run.ranks;
+    let opts = cfg.solver_opts(lam);
+
+    // Ground truth from serial CG (excluded from all meters).
+    let reference = {
+        let mut comm = SerialComm::new();
+        cg::compute_reference(&ds.x, &ds.y, n, lam, &mut comm)?
+    };
+
+    let start = Instant::now();
+    let (history, meters): (History, Vec<CostMeter>) = match cfg.solver.method.as_str() {
+        "bcd" | "cabcd" => {
+            let shards = partition_primal(&ds, p)?;
+            let results: Vec<Result<History>> = run_spmd(p, |rank, comm| {
+                let mut be = make_backend(cfg)?;
+                let sh = &shards[rank];
+                let out = bcd::run(
+                    &sh.a_loc,
+                    &sh.y_loc,
+                    sh.n_global,
+                    &opts,
+                    Some(&reference),
+                    comm,
+                    be.as_mut(),
+                )?;
+                Ok(out.history)
+            });
+            collect(results)?
+        }
+        "bdcd" | "cabdcd" => {
+            let shards = partition_dual(&ds, p)?;
+            let results: Vec<Result<History>> = run_spmd(p, |rank, comm| {
+                let mut be = make_backend(cfg)?;
+                let sh = &shards[rank];
+                let out = bdcd::run(
+                    &sh.a_loc,
+                    &sh.y,
+                    sh.d_global,
+                    sh.d_offset,
+                    &opts,
+                    Some(&reference),
+                    comm,
+                    be.as_mut(),
+                )?;
+                Ok(out.history)
+            });
+            collect(results)?
+        }
+        "cg" => {
+            let shards = partition_primal(&ds, p)?;
+            let cg_opts = cg::CgOpts {
+                lam,
+                max_iters: cfg.solver.iters,
+                tol: cfg.solver.tol.unwrap_or(1e-12),
+                record_every: cfg.solver.record_every,
+            };
+            let results: Vec<Result<History>> = run_spmd(p, |rank, comm| {
+                let sh = &shards[rank];
+                let out = cg::run(
+                    &sh.a_loc,
+                    &sh.y_loc,
+                    sh.n_global,
+                    &cg_opts,
+                    Some(&reference),
+                    comm,
+                )?;
+                Ok(out.history)
+            });
+            collect(results)?
+        }
+        _ => unreachable!("validated"),
+    };
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+
+    let (critical_msgs, critical_words) = CostMeter::critical_path(&meters);
+    Ok(ExperimentReport {
+        dataset: ds.name.clone(),
+        d,
+        n,
+        method: cfg.solver.method.clone(),
+        b: opts.b,
+        s: opts.s,
+        ranks: p,
+        lambda: lam,
+        backend: cfg.run.backend.clone(),
+        wall_ms,
+        final_obj_err: history.final_obj_err(),
+        final_sol_err: history.final_sol_err(),
+        history,
+        critical_msgs,
+        critical_words,
+    })
+}
+
+impl ExperimentReport {
+    /// JSON for downstream tooling (plotting, EXPERIMENTS.md tables).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{array, num, object, string};
+        let records = array(self.history.records.iter().map(|r| {
+            object(&[
+                ("iter", num(r.iter as f64)),
+                ("obj_err", num(r.obj_err)),
+                ("sol_err", num(r.sol_err)),
+            ])
+        }));
+        let conds = array(self.history.gram_conds.iter().map(|&c| num(c)));
+        object(&[
+            ("dataset", string(&self.dataset)),
+            ("d", num(self.d as f64)),
+            ("n", num(self.n as f64)),
+            ("method", string(&self.method)),
+            ("b", num(self.b as f64)),
+            ("s", num(self.s as f64)),
+            ("ranks", num(self.ranks as f64)),
+            ("lambda", num(self.lambda)),
+            ("backend", string(&self.backend)),
+            ("wall_ms", num(self.wall_ms)),
+            ("iters", num(self.history.iters as f64)),
+            ("allreduces", num(self.history.meter.allreduces as f64)),
+            ("critical_msgs", num(self.critical_msgs as f64)),
+            ("critical_words", num(self.critical_words as f64)),
+            ("final_obj_err", num(self.final_obj_err)),
+            ("final_sol_err", num(self.final_sol_err)),
+            ("records", records),
+            ("gram_conds", conds),
+        ])
+    }
+}
+
+/// Unwrap per-rank results; rank 0's history is the report's, all meters
+/// feed the critical path.
+fn collect(results: Vec<Result<History>>) -> Result<(History, Vec<CostMeter>)> {
+    let mut histories = Vec::with_capacity(results.len());
+    for r in results {
+        histories.push(r?);
+    }
+    let meters: Vec<CostMeter> = histories.iter().map(|h| h.meter).collect();
+    Ok((histories.swap_remove(0), meters))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, RunConfig, SolverConfig};
+
+    fn cfg(method: &str, ranks: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            dataset: DatasetConfig {
+                kind: "synthetic".into(),
+                name: Some("abalone".into()),
+                path: None,
+                scale: 8,
+                seed: 1,
+            },
+            solver: SolverConfig {
+                method: method.into(),
+                b: 2,
+                s: 4,
+                lam: None,
+                iters: 200,
+                seed: 3,
+                record_every: 50,
+                track_gram_cond: false,
+                tol: None,
+            },
+            run: RunConfig {
+                ranks,
+                backend: "native".into(),
+                artifact_dir: "artifacts".into(),
+            },
+        }
+    }
+
+    #[test]
+    fn cabcd_experiment_end_to_end() {
+        let report = run_experiment(&cfg("cabcd", 2)).unwrap();
+        assert_eq!(report.method, "cabcd");
+        assert_eq!(report.ranks, 2);
+        assert!(report.final_obj_err.is_finite());
+        assert!(!report.history.records.is_empty());
+        assert!(report.critical_msgs > 0, "P=2 must communicate");
+    }
+
+    #[test]
+    fn rank_count_does_not_change_numerics() {
+        let r1 = run_experiment(&cfg("cabcd", 1)).unwrap();
+        let r3 = run_experiment(&cfg("cabcd", 3)).unwrap();
+        assert!(
+            (r1.final_sol_err - r3.final_sol_err).abs() < 1e-9,
+            "P=1 {} vs P=3 {}",
+            r1.final_sol_err,
+            r3.final_sol_err
+        );
+    }
+
+    #[test]
+    fn dual_experiment_runs() {
+        let report = run_experiment(&cfg("cabdcd", 2)).unwrap();
+        assert!(report.final_obj_err.is_finite());
+    }
+
+    #[test]
+    fn cg_experiment_converges() {
+        let mut c = cfg("cg", 2);
+        c.solver.iters = 500;
+        let report = run_experiment(&c).unwrap();
+        assert!(report.final_sol_err < 1e-6, "{}", report.final_sol_err);
+    }
+}

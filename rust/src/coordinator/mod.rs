@@ -1,0 +1,107 @@
+//! The leader: dataset loading/partitioning, SPMD launch, and experiment
+//! reporting — everything between the CLI and the solvers.
+
+pub mod driver;
+
+pub use driver::{run_experiment, ExperimentReport};
+
+use crate::error::Result;
+use crate::matrix::io::Dataset;
+use crate::matrix::Matrix;
+use crate::partition::BlockPartition;
+
+/// One rank's shard for the primal solvers: a column block of X with the
+/// matching y slice.
+#[derive(Clone, Debug)]
+pub struct PrimalShard {
+    pub a_loc: Matrix,
+    pub y_loc: Vec<f64>,
+    pub n_global: usize,
+    pub col_offset: usize,
+}
+
+/// One rank's shard for the dual solvers: a column block of `A = Xᵀ` (i.e.
+/// a feature slice), plus the replicated y.
+#[derive(Clone, Debug)]
+pub struct DualShard {
+    pub a_loc: Matrix,
+    pub y: Vec<f64>,
+    pub d_global: usize,
+    pub d_offset: usize,
+}
+
+/// 1D-block-column partition of X for BCD/CA-BCD/CG.
+pub fn partition_primal(ds: &Dataset, p: usize) -> Result<Vec<PrimalShard>> {
+    let n = ds.n();
+    let part = BlockPartition::new(n, p);
+    let mut shards = Vec::with_capacity(p);
+    for rank in 0..p {
+        let (lo, hi) = part.range(rank);
+        shards.push(PrimalShard {
+            a_loc: ds.x.slice_cols(lo, hi)?,
+            y_loc: ds.y[lo..hi].to_vec(),
+            n_global: n,
+            col_offset: lo,
+        });
+    }
+    Ok(shards)
+}
+
+/// 1D-block-row partition of X (= 1D-block-column of Xᵀ) for BDCD/CA-BDCD.
+pub fn partition_dual(ds: &Dataset, p: usize) -> Result<Vec<DualShard>> {
+    let d = ds.d();
+    let at = ds.x.transpose(); // n × d
+    let part = BlockPartition::new(d, p);
+    let mut shards = Vec::with_capacity(p);
+    for rank in 0..p {
+        let (lo, hi) = part.range(rank);
+        shards.push(DualShard {
+            a_loc: at.slice_cols(lo, hi)?,
+            y: ds.y.clone(),
+            d_global: d,
+            d_offset: lo,
+        });
+    }
+    Ok(shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::DenseMatrix;
+
+    fn ds() -> Dataset {
+        let x = Matrix::Dense(DenseMatrix::from_vec(
+            3,
+            5,
+            vec![
+                1., 2., 3., 4., 5., //
+                6., 7., 8., 9., 10., //
+                11., 12., 13., 14., 15.,
+            ],
+        ));
+        Dataset {
+            name: "t".into(),
+            x,
+            y: vec![1., 2., 3., 4., 5.],
+        }
+    }
+
+    #[test]
+    fn primal_shards_cover_columns() {
+        let shards = partition_primal(&ds(), 2).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].a_loc.cols() + shards[1].a_loc.cols(), 5);
+        assert_eq!(shards[0].y_loc.len(), shards[0].a_loc.cols());
+        assert_eq!(shards[1].col_offset, shards[0].a_loc.cols());
+    }
+
+    #[test]
+    fn dual_shards_cover_features() {
+        let shards = partition_dual(&ds(), 2).unwrap();
+        assert_eq!(shards[0].a_loc.rows(), 5); // n rows in Xᵀ
+        assert_eq!(shards[0].a_loc.cols() + shards[1].a_loc.cols(), 3);
+        assert_eq!(shards[0].y.len(), 5);
+        assert_eq!(shards[1].d_offset, shards[0].a_loc.cols());
+    }
+}

@@ -1,0 +1,70 @@
+//! Machine parameter presets for the α-β-γ model.
+//!
+//! The paper's §5.2 uses NERSC Cori: γ = 8·10⁻¹³ s/flop, α = 1·10⁻⁶ s per
+//! message, β = 1.3·10⁻¹⁰ s/word — and models Spark as the same machine
+//! with α = 1·10⁻³ (scheduling/centralization overhead of tree reductions,
+//! citing Gittens et al.).
+
+/// α-β-γ machine parameters (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    /// Seconds per flop (1/peak rate).
+    pub gamma: f64,
+    /// Seconds of overhead per message (latency).
+    pub alpha: f64,
+    /// Seconds per word moved (1/bandwidth).
+    pub beta: f64,
+}
+
+impl Machine {
+    /// NERSC Cori, MPI at hardware peak (paper §5.2, citing [1]).
+    pub const fn cori_mpi() -> Machine {
+        Machine {
+            name: "Cori-MPI",
+            gamma: 8e-13,
+            alpha: 1e-6,
+            beta: 1.3e-10,
+        }
+    }
+
+    /// Cori running Spark: flops/bandwidth unchanged, latency 1000×
+    /// (paper's Spark overhead assumption, citing [20]).
+    pub const fn cori_spark() -> Machine {
+        Machine {
+            name: "Cori-Spark",
+            gamma: 8e-13,
+            alpha: 1e-3,
+            beta: 1.3e-10,
+        }
+    }
+
+    /// Modeled running time of (F flops, L messages, W words).
+    pub fn time(&self, f: f64, l: f64, w: f64) -> f64 {
+        self.gamma * f + self.alpha * l + self.beta * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        let m = Machine::cori_mpi();
+        assert_eq!(m.gamma, 8e-13);
+        assert_eq!(m.alpha, 1e-6);
+        assert_eq!(m.beta, 1.3e-10);
+        let s = Machine::cori_spark();
+        assert_eq!(s.alpha, 1e-3);
+        assert_eq!(s.gamma, m.gamma);
+    }
+
+    #[test]
+    fn time_is_linear() {
+        let m = Machine::cori_mpi();
+        assert!((m.time(1.0, 0.0, 0.0) - 8e-13).abs() < 1e-25);
+        assert!((m.time(0.0, 2.0, 0.0) - 2e-6).abs() < 1e-18);
+        assert!((m.time(0.0, 0.0, 10.0) - 1.3e-9).abs() < 1e-20);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's analytic performance model: `T = γF + αL + βW` (§2.2) with
+//! the per-algorithm critical-path costs of Theorems 1–9 and the machine
+//! presets used by §5.2's modeled-performance experiments.
+
+pub mod machine;
+pub mod scaling;
+pub mod theory;
+
+pub use machine::Machine;
+pub use scaling::{strong_scaling, weak_scaling, ScalingPoint, ScalingSeries};
+pub use theory::{AlgoCosts, CostParams, Method};

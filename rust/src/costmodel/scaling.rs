@@ -1,0 +1,194 @@
+//! Modeled strong/weak scaling (paper §5.2, Figures 8 and 9).
+//!
+//! Strong scaling: fixed global problem (d, n), P swept over 2²…2²⁸;
+//! weak scaling: fixed local problem n/P. For each P, the CA curve picks
+//! the best `s` from a grid — mirroring the paper's "best speedups we
+//! attained were … with s=…" methodology. Per §5.2 the model assumes
+//! communication dominates local flops in the parallel setting, so the
+//! reported time charges the communication terms αL + βW (each processor
+//! "can execute each flop at peak machine rate"; flops per rank are equal
+//! by the 1D-column layout and cancel in the speedup).
+
+use super::machine::Machine;
+use super::theory::{AlgoCosts, CostParams, Method};
+
+/// One swept point of a scaling study.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingPoint {
+    pub p: f64,
+    /// Modeled time of the classical algorithm (seconds).
+    pub t_classical: f64,
+    /// Modeled time of the CA variant at its best s.
+    pub t_ca: f64,
+    /// The s that minimized the CA time.
+    pub best_s: f64,
+    pub speedup: f64,
+}
+
+/// A full sweep plus its headline (max) speedup.
+#[derive(Clone, Debug)]
+pub struct ScalingSeries {
+    pub machine: &'static str,
+    pub points: Vec<ScalingPoint>,
+}
+
+impl ScalingSeries {
+    pub fn max_speedup(&self) -> (f64, f64, f64) {
+        self.points
+            .iter()
+            .map(|pt| (pt.speedup, pt.p, pt.best_s))
+            .fold((0.0, 0.0, 0.0), |acc, v| if v.0 > acc.0 { v } else { acc })
+    }
+}
+
+/// Modeled time of `method` at `cp` on `m`, charging γF/P-peak flops plus
+/// the communication critical path.
+fn modeled_time(m: &Machine, method: Method, cp: &CostParams) -> f64 {
+    let c = AlgoCosts::of(method, cp);
+    m.time(c.flops, c.latency, c.bandwidth)
+}
+
+/// Best-s CA time over a geometric s grid (1..=max_s).
+fn best_ca_time(m: &Machine, cp: &CostParams, max_s: usize) -> (f64, f64) {
+    let mut best = (f64::INFINITY, 1.0);
+    let mut s = 1.0f64;
+    while s <= max_s as f64 {
+        let mut c = *cp;
+        c.s = s;
+        let t = modeled_time(m, Method::CaBcd, &c);
+        if t < best.0 {
+            best = (t, s);
+        }
+        // fine grid at small s, geometric afterwards
+        s = if s < 16.0 { s + 1.0 } else { (s * 1.25).ceil() };
+    }
+    best
+}
+
+/// Figure 8: strong scaling of BCD vs CA-BCD.
+pub fn strong_scaling(
+    m: &Machine,
+    d: f64,
+    n: f64,
+    b: f64,
+    h: f64,
+    p_range: &[f64],
+    max_s: usize,
+) -> ScalingSeries {
+    let points = p_range
+        .iter()
+        .map(|&p| {
+            let cp = CostParams { d, n, p, b, s: 1.0, h };
+            let t_classical = modeled_time(m, Method::Bcd, &cp);
+            let (t_ca, best_s) = best_ca_time(m, &cp, max_s);
+            ScalingPoint {
+                p,
+                t_classical,
+                t_ca,
+                best_s,
+                speedup: t_classical / t_ca,
+            }
+        })
+        .collect();
+    ScalingSeries {
+        machine: m.name,
+        points,
+    }
+}
+
+/// Figure 9: weak scaling — n = n_per_p · P.
+pub fn weak_scaling(
+    m: &Machine,
+    d: f64,
+    n_per_p: f64,
+    b: f64,
+    h: f64,
+    p_range: &[f64],
+    max_s: usize,
+) -> ScalingSeries {
+    let points = p_range
+        .iter()
+        .map(|&p| {
+            let cp = CostParams {
+                d,
+                n: n_per_p * p,
+                p,
+                b,
+                s: 1.0,
+                h,
+            };
+            let t_classical = modeled_time(m, Method::Bcd, &cp);
+            let (t_ca, best_s) = best_ca_time(m, &cp, max_s);
+            ScalingPoint {
+                p,
+                t_classical,
+                t_ca,
+                best_s,
+                speedup: t_classical / t_ca,
+            }
+        })
+        .collect();
+    ScalingSeries {
+        machine: m.name,
+        points,
+    }
+}
+
+/// The paper's P sweep: 2², 2³, …, 2²⁸.
+pub fn paper_p_range() -> Vec<f64> {
+    (2..=28).map(|e| (1u64 << e) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strong_scaling_speedup_grows_with_p() {
+        let m = Machine::cori_mpi();
+        let pr = paper_p_range();
+        let ss = strong_scaling(&m, 1024.0, (1u64 << 35) as f64, 4.0, 100.0, &pr, 1000);
+        // At small P flops dominate → s=1 is best, speedup ≈ 1.
+        assert!(ss.points[0].speedup < 1.05);
+        assert!((ss.points[0].best_s - 1.0).abs() < 1e-9);
+        // At large P latency dominates → CA wins big.
+        let last = ss.points.last().unwrap();
+        assert!(last.speedup > 5.0, "speedup {}", last.speedup);
+        let (mx, _, _) = ss.max_speedup();
+        assert!(mx >= last.speedup * 0.99);
+    }
+
+    #[test]
+    fn spark_speedup_exceeds_mpi() {
+        let pr = paper_p_range();
+        let mpi = strong_scaling(
+            &Machine::cori_mpi(),
+            1024.0,
+            (1u64 << 35) as f64,
+            4.0,
+            100.0,
+            &pr,
+            1000,
+        );
+        let spark = strong_scaling(
+            &Machine::cori_spark(),
+            1024.0,
+            (1u64 << 40) as f64,
+            4.0,
+            100.0,
+            &pr,
+            1000,
+        );
+        assert!(spark.max_speedup().0 > mpi.max_speedup().0);
+    }
+
+    #[test]
+    fn weak_scaling_ca_always_at_least_classical() {
+        let m = Machine::cori_spark();
+        let pr = paper_p_range();
+        let ws = weak_scaling(&m, 1024.0, 2048.0, 4.0, 100.0, &pr, 1000);
+        for pt in &ws.points {
+            assert!(pt.speedup >= 1.0 - 1e-12, "P={}: {}", pt.p, pt.speedup);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Closed-form critical-path costs of Theorems 1–9 plus the §2.1 survey
+//! rows (Table 2: Krylov, TSQR).
+//!
+//! Flops (F), latency (L, messages), bandwidth (W, words) and memory
+//! (M, words/processor) as functions of the problem and algorithm
+//! parameters. These regenerate Tables 1 and 2 and drive Figures 1, 3, 6,
+//! 8 and 9.
+
+/// Problem + algorithm parameters for one cost evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct CostParams {
+    /// Feature dimension d.
+    pub d: f64,
+    /// Data-point dimension n.
+    pub n: f64,
+    /// Processor count P.
+    pub p: f64,
+    /// Block size (b for primal, b' for dual).
+    pub b: f64,
+    /// Loop-blocking factor s (1 = classical).
+    pub s: f64,
+    /// Iteration count (H or H').
+    pub h: f64,
+}
+
+/// The algorithm whose Theorem we instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Thm. 1 — BCD, 1D-block column.
+    Bcd,
+    /// Thm. 2 — BDCD, 1D-block row.
+    Bdcd,
+    /// Thm. 6 — CA-BCD, 1D-block column.
+    CaBcd,
+    /// Thm. 7 — CA-BDCD, 1D-block column (of Xᵀ).
+    CaBdcd,
+    /// Table 2 — Krylov (CG) with 1D layout, k = h iterations.
+    Krylov,
+    /// Table 2 — TSQR single-pass direct solve.
+    Tsqr,
+}
+
+/// Critical-path costs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlgoCosts {
+    pub flops: f64,
+    pub latency: f64,
+    pub bandwidth: f64,
+    pub memory: f64,
+}
+
+impl AlgoCosts {
+    /// Instantiate the Theorem for `method` at `cp`.
+    ///
+    /// The primal formulas contract along n, the dual along d — captured by
+    /// swapping the roles of (d, n) for the dual methods, exactly as in
+    /// Table 1.
+    pub fn of(method: Method, cp: &CostParams) -> AlgoCosts {
+        let CostParams { d, n, p, b, s, h } = *cp;
+        let logp = p.log2().max(1.0);
+        match method {
+            Method::Bcd => AlgoCosts {
+                // Thm. 1: F = O(Hb²n/P + Hb³), L = O(H log P),
+                //         W = O(Hb² log P), M = O(dn/P + b²).
+                flops: h * b * b * n / p + h * b * b * b,
+                latency: h * logp,
+                bandwidth: h * b * b * logp,
+                memory: d * n / p + b * b,
+            },
+            Method::Bdcd => AlgoCosts {
+                // Thm. 2: same with (d ↔ n), block size b'.
+                flops: h * b * b * d / p + h * b * b * b,
+                latency: h * logp,
+                bandwidth: h * b * b * logp,
+                memory: d * n / p + b * b,
+            },
+            Method::CaBcd => AlgoCosts {
+                // Thm. 6: F = O(Hb²ns/P + Hb³), L = O((H/s) log P),
+                //         W = O(Hb²s log P), M = O(dn/P + b²s²).
+                flops: h * b * b * n * s / p + h * b * b * b,
+                latency: (h / s) * logp,
+                bandwidth: h * b * b * s * logp,
+                memory: d * n / p + b * b * s * s,
+            },
+            Method::CaBdcd => AlgoCosts {
+                // Thm. 7: (d ↔ n).
+                flops: h * b * b * d * s / p + h * b * b * b,
+                latency: (h / s) * logp,
+                bandwidth: h * b * b * s * logp,
+                memory: d * n / p + b * b * s * s,
+            },
+            Method::Krylov => AlgoCosts {
+                // Table 2: F = O(k·dn/P), L = O(k log P),
+                //          W = O(k·min(d,n)·log P), M = O(dn/P).
+                flops: h * d * n / p,
+                latency: h * logp,
+                bandwidth: h * d.min(n) * logp,
+                memory: d * n / p,
+            },
+            Method::Tsqr => AlgoCosts {
+                // Table 2: F = O(min(d,n)²·max(d,n)/P), L = O(log P),
+                //          W = O(min(d,n)² log P), M = O(dn/P).
+                flops: d.min(n) * d.min(n) * d.max(n) / p,
+                latency: logp,
+                bandwidth: d.min(n) * d.min(n) * logp,
+                memory: d * n / p,
+            },
+        }
+    }
+
+    /// Sequential-cost variant used by the paper's Figures 3/6 (flops
+    /// summed over ranks, log P dropped from latency, constants ignored —
+    /// see §5.1 "we plot the sequential flops cost ... ignore the log P
+    /// factor").
+    pub fn sequential(method: Method, cp: &CostParams) -> AlgoCosts {
+        let mut one = *cp;
+        one.p = 1.0;
+        let mut c = AlgoCosts::of(method, &one);
+        // log P factor dropped: with p=1 logp clamps to 1 already.
+        c.memory = cp.d * cp.n + one.b * one.b * one.s * one.s;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cp() -> CostParams {
+        CostParams {
+            d: 1000.0,
+            n: 10000.0,
+            p: 64.0,
+            b: 8.0,
+            s: 1.0,
+            h: 100.0,
+        }
+    }
+
+    #[test]
+    fn ca_reduces_latency_by_s() {
+        let mut p = cp();
+        let base = AlgoCosts::of(Method::Bcd, &p);
+        p.s = 8.0;
+        let ca = AlgoCosts::of(Method::CaBcd, &p);
+        assert!((base.latency / ca.latency - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ca_increases_flops_bandwidth_by_s() {
+        let mut p = cp();
+        let base = AlgoCosts::of(Method::Bcd, &p);
+        p.s = 4.0;
+        let ca = AlgoCosts::of(Method::CaBcd, &p);
+        // dominant term scales by s (the +Hb³ term doesn't, so ratio < s)
+        assert!(ca.bandwidth / base.bandwidth == 4.0);
+        assert!(ca.flops > base.flops);
+        assert!(ca.flops < 4.0 * base.flops + 1.0);
+    }
+
+    #[test]
+    fn s_equals_one_matches_classical() {
+        let p = cp();
+        let bcd = AlgoCosts::of(Method::Bcd, &p);
+        let ca = AlgoCosts::of(Method::CaBcd, &p);
+        assert_eq!(bcd.flops, ca.flops);
+        assert_eq!(bcd.latency, ca.latency);
+        assert_eq!(bcd.bandwidth, ca.bandwidth);
+        assert_eq!(bcd.memory, ca.memory);
+    }
+
+    #[test]
+    fn dual_swaps_dimensions() {
+        let p = cp();
+        let bcd = AlgoCosts::of(Method::Bcd, &p);
+        let bdcd = AlgoCosts::of(Method::Bdcd, &p);
+        // n=10000 vs d=1000: primal flops 10× dual flops (dominant term).
+        assert!(bcd.flops > 5.0 * bdcd.flops);
+        assert_eq!(bcd.latency, bdcd.latency);
+    }
+
+    #[test]
+    fn tsqr_single_reduction() {
+        let p = cp();
+        let t = AlgoCosts::of(Method::Tsqr, &p);
+        assert_eq!(t.latency, (64.0f64).log2());
+        // min(d,n)² max(d,n) / P
+        assert_eq!(t.flops, 1000.0 * 1000.0 * 10000.0 / 64.0);
+    }
+
+    #[test]
+    fn memory_grows_s_squared() {
+        let mut p = cp();
+        p.s = 10.0;
+        let ca = AlgoCosts::of(Method::CaBcd, &p);
+        let expect = 1000.0 * 10000.0 / 64.0 + 64.0 * 100.0;
+        assert_eq!(ca.memory, expect);
+    }
+}

@@ -1,0 +1,42 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every layer of the coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    #[error("linear algebra failure: {0}")]
+    Linalg(String),
+
+    #[error("communicator failure: {0}")]
+    Comm(String),
+
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    #[error("artifact/runtime error: {0}")]
+    Runtime(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error("XLA/PJRT error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,44 @@
+//! # cabcd — communication-avoiding block coordinate descent
+//!
+//! A distributed-memory reproduction of
+//! *"Avoiding communication in primal and dual block coordinate descent
+//! methods"* (Devarakonda, Fountoulakis, Demmel, Mahoney, 2016).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * [`solvers`] — Algorithms 1–4 of the paper (BCD, CA-BCD, BDCD, CA-BDCD)
+//!   plus the CG and TSQR baselines of its §2.1 survey, all written against
+//!   the [`comm`] communicator so they run SPMD over P simulated ranks.
+//! * [`comm`] — an in-process MPI-like collectives substrate (binomial-tree
+//!   allreduce / broadcast / all-to-all over channels) with per-rank α-β-γ
+//!   cost meters.
+//! * [`gram`] — the compute hot-spot (fused partial Gram + residual) with
+//!   two interchangeable backends: a hand-optimized native path and the
+//!   AOT-compiled JAX/Pallas artifact executed through [`runtime`] (PJRT).
+//! * [`costmodel`] — the paper's analytic T = γF + αL + βW machine model
+//!   (Theorems 1–9, Figures 8–9).
+//! * [`matrix`], [`linalg`], [`partition`], [`sampling`] — the substrates:
+//!   dense/CSR matrices, LIBSVM IO, dataset-clone generation, small SPD
+//!   solves, TSQR, 1D layouts, shared-seed block sampling.
+//!
+//! Python/JAX appears **only at build time** (`make artifacts`); the binary
+//! is self-contained once `artifacts/` exists.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod error;
+pub mod gram;
+pub mod kernel;
+pub mod linalg;
+pub mod matrix;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod sampling;
+pub mod solvers;
+pub mod util;
+
+pub use error::{Error, Result};

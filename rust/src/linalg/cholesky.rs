@@ -1,0 +1,132 @@
+//! In-place Cholesky factorization and SPD solves for the `b×b`
+//! subproblems (paper: "the subproblem is solved implicitly by first
+//! constructing the Gram matrix and computing its Cholesky factorization").
+//!
+//! Mirrors `python/compile/model.py::cholesky_unrolled` — the Rust native
+//! path and the AOT artifact must produce identical results (verified by
+//! the backend-parity integration test).
+
+use crate::error::{Error, Result};
+
+/// Factor an SPD `b×b` row-major matrix in place into its lower-triangular
+/// Cholesky factor `L` (upper triangle left untouched).
+pub fn chol_factor(a: &mut [f64], b: usize) -> Result<()> {
+    if a.len() != b * b {
+        return Err(Error::Shape(format!("chol_factor: {} != {b}²", a.len())));
+    }
+    for k in 0..b {
+        let mut akk = a[k * b + k];
+        for t in 0..k {
+            akk -= a[k * b + t] * a[k * b + t];
+        }
+        if akk <= 0.0 || !akk.is_finite() {
+            return Err(Error::Linalg(format!(
+                "matrix not SPD at pivot {k}: {akk}"
+            )));
+        }
+        let lkk = akk.sqrt();
+        a[k * b + k] = lkk;
+        for i in (k + 1)..b {
+            let mut v = a[i * b + k];
+            for t in 0..k {
+                v -= a[i * b + t] * a[k * b + t];
+            }
+            a[i * b + k] = v / lkk;
+        }
+    }
+    Ok(())
+}
+
+/// Solve `L Lᵀ x = rhs` given the factored matrix; `rhs` is overwritten
+/// with the solution.
+pub fn chol_solve_factored(l: &[f64], b: usize, rhs: &mut [f64]) -> Result<()> {
+    if l.len() != b * b || rhs.len() != b {
+        return Err(Error::Shape("chol_solve_factored dims".into()));
+    }
+    // Forward: L y = rhs.
+    for k in 0..b {
+        let mut v = rhs[k];
+        for t in 0..k {
+            v -= l[k * b + t] * rhs[t];
+        }
+        rhs[k] = v / l[k * b + k];
+    }
+    // Backward: Lᵀ x = y.
+    for k in (0..b).rev() {
+        let mut v = rhs[k];
+        for t in (k + 1)..b {
+            v -= l[t * b + k] * rhs[t];
+        }
+        rhs[k] = v / l[k * b + k];
+    }
+    Ok(())
+}
+
+/// One-shot SPD solve: copies `a`, factors, solves. `rhs` overwritten.
+pub fn chol_solve(a: &[f64], b: usize, rhs: &mut [f64]) -> Result<()> {
+    let mut l = a.to_vec();
+    chol_factor(&mut l, b)?;
+    chol_solve_factored(&l, b, rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(b: usize, seed: u64) -> Vec<f64> {
+        // A = M Mᵀ + 0.5 I
+        let mut m = vec![0.0; b * b];
+        let mut state = seed.wrapping_add(0x9E3779B97F4A7C15);
+        for v in m.iter_mut() {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            *v = (state as f64 / u64::MAX as f64) - 0.5;
+        }
+        let mut a = vec![0.0; b * b];
+        for i in 0..b {
+            for j in 0..b {
+                let mut s = 0.0;
+                for k in 0..b {
+                    s += m[i * b + k] * m[j * b + k];
+                }
+                a[i * b + j] = s + if i == j { 0.5 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn solve_residual_small() {
+        for b in [1usize, 2, 5, 16] {
+            let a = spd(b, b as u64);
+            let rhs: Vec<f64> = (0..b).map(|i| (i as f64).cos()).collect();
+            let mut x = rhs.clone();
+            chol_solve(&a, b, &mut x).unwrap();
+            for i in 0..b {
+                let mut s = 0.0;
+                for j in 0..b {
+                    s += a[i * b + j] * x[j];
+                }
+                assert!((s - rhs[i]).abs() < 1e-9, "b={b} i={i}: {s} vs {}", rhs[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        let mut rhs = vec![1.0, 1.0];
+        assert!(chol_solve(&a, 2, &mut rhs).is_err());
+    }
+
+    #[test]
+    fn factor_matches_known() {
+        // A = [[4, 2], [2, 2]] → L = [[2, 0], [1, 1]]
+        let mut a = vec![4.0, 2.0, 2.0, 2.0];
+        chol_factor(&mut a, 2).unwrap();
+        assert!((a[0] - 2.0).abs() < 1e-15);
+        assert!((a[2] - 1.0).abs() < 1e-15);
+        assert!((a[3] - 1.0).abs() < 1e-15);
+    }
+}

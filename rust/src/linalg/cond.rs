@@ -1,0 +1,187 @@
+//! Symmetric eigenvalues via cyclic Jacobi — used to report the Gram-matrix
+//! condition-number statistics of Figures 4(i–l) and 7(i–l).
+//!
+//! The Gram matrices are at most `sb × sb` (a few hundred), where Jacobi is
+//! plenty fast, unconditionally stable, and dependency-free.
+
+/// Eigenvalues of a symmetric `n×n` row-major matrix, ascending.
+pub fn symmetric_eigenvalues(a: &[f64], n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), n * n, "symmetric_eigenvalues: bad shape");
+    let mut m = a.to_vec();
+    // Cyclic Jacobi sweeps until off-diagonal mass is negligible.
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        let scale: f64 = m.iter().map(|v| v * v).sum::<f64>().max(1e-300);
+        if off / scale < 1e-30 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply the rotation A ← Jᵀ A J on rows/cols p, q.
+                for k in 0..n {
+                    let akp = m[k * n + p];
+                    let akq = m[k * n + q];
+                    m[k * n + p] = c * akp - s * akq;
+                    m[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[p * n + k];
+                    let aqk = m[q * n + k];
+                    m[p * n + k] = c * apk - s * aqk;
+                    m[q * n + k] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eigs: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    eigs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    eigs
+}
+
+/// 2-norm condition number `λ_max / λ_min` of a symmetric PSD matrix.
+///
+/// Returns `f64::INFINITY` for singular (λ_min ≤ 0) matrices.
+/// Exact (Jacobi) for n ≤ 96; power + inverse-power estimate above that
+/// (the Figures 4/7 Gram matrices reach sb = 3200, where an O(n³)-per-sweep
+/// eigensolve per outer iteration is prohibitive).
+pub fn condition_number(a: &[f64], n: usize) -> f64 {
+    if n <= 96 {
+        let eigs = symmetric_eigenvalues(a, n);
+        let lo = eigs[0];
+        let hi = eigs[n - 1];
+        return if lo <= 0.0 { f64::INFINITY } else { hi / lo };
+    }
+    condition_number_est(a, n, 120)
+}
+
+/// Estimated condition number: power iteration for λ_max, Cholesky-based
+/// inverse power iteration for λ_min. Deterministic start vectors.
+pub fn condition_number_est(a: &[f64], n: usize, iters: usize) -> f64 {
+    // λ_max by power iteration.
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin()).collect();
+    let mut u = vec![0.0; n];
+    let mut lam_max = 0.0;
+    for _ in 0..iters {
+        matvec_sym(a, n, &v, &mut u);
+        lam_max = norm(&u);
+        if lam_max <= 0.0 {
+            return f64::INFINITY;
+        }
+        for (vi, ui) in v.iter_mut().zip(&u) {
+            *vi = ui / lam_max;
+        }
+    }
+    // λ_min by inverse power iteration through one Cholesky factor.
+    let mut l = a.to_vec();
+    if crate::linalg::cholesky::chol_factor(&mut l, n).is_err() {
+        return f64::INFINITY;
+    }
+    let mut w: Vec<f64> = (0..n).map(|i| 1.0 - (i as f64 * 0.3).cos()).collect();
+    let nw = norm(&w);
+    for x in w.iter_mut() {
+        *x /= nw;
+    }
+    let mut growth = 0.0;
+    for _ in 0..iters {
+        // u = A⁻¹ w
+        u.copy_from_slice(&w);
+        if crate::linalg::cholesky::chol_solve_factored(&l, n, &mut u).is_err() {
+            return f64::INFINITY;
+        }
+        growth = norm(&u);
+        if growth <= 0.0 {
+            return f64::INFINITY;
+        }
+        for (wi, ui) in w.iter_mut().zip(&u) {
+            *wi = ui / growth;
+        }
+    }
+    let lam_min = 1.0 / growth;
+    lam_max / lam_min
+}
+
+#[inline]
+fn matvec_sym(a: &[f64], n: usize, v: &[f64], out: &mut [f64]) {
+    for i in 0..n {
+        let row = &a[i * n..(i + 1) * n];
+        let mut s = 0.0;
+        for (rv, vv) in row.iter().zip(v) {
+            s += rv * vv;
+        }
+        out[i] = s;
+    }
+}
+
+#[inline]
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        let e = symmetric_eigenvalues(&a, 3);
+        assert!((e[0] - 1.0).abs() < 1e-12);
+        assert!((e[1] - 2.0).abs() < 1e-12);
+        assert!((e[2] - 3.0).abs() < 1e-12);
+        assert!((condition_number(&a, 3) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 1, 3
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let e = symmetric_eigenvalues(&a, 2);
+        assert!((e[0] - 1.0).abs() < 1e-12);
+        assert!((e[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_and_frobenius_preserved() {
+        // random symmetric 8×8; eigenvalue sums must match invariants
+        let n = 8;
+        let mut a = vec![0.0; n * n];
+        let mut state = 42u64;
+        for i in 0..n {
+            for j in i..n {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let v = ((state >> 33) as f64 / (1u64 << 31) as f64) - 0.5;
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        let fro: f64 = a.iter().map(|v| v * v).sum();
+        let e = symmetric_eigenvalues(&a, n);
+        let etr: f64 = e.iter().sum();
+        let efro: f64 = e.iter().map(|v| v * v).sum();
+        assert!((trace - etr).abs() < 1e-9, "{trace} vs {etr}");
+        assert!((fro - efro).abs() < 1e-9, "{fro} vs {efro}");
+    }
+
+    #[test]
+    fn singular_is_infinite_cond() {
+        let a = vec![1.0, 1.0, 1.0, 1.0];
+        assert!(condition_number(&a, 2).is_infinite());
+    }
+}

@@ -1,0 +1,425 @@
+//! TSQR — communication-optimal tall-skinny QR (Demmel et al. [14]) and the
+//! direct regularized-least-squares baseline built on it.
+//!
+//! The paper's §2.1 survey (Table 2, Figure 1) compares BCD/BDCD against a
+//! single-reduction TSQR solve. We implement the real algorithm: local
+//! Householder QR per row-block, then a binary reduction tree that QR-factors
+//! stacked `R` pairs, carrying the implicitly-applied `Qᵀ rhs` along — one
+//! pass over the data, `log₂ P` combine levels.
+//!
+//! Regularized LS is solved through the augmented system
+//! `[Xᵀ/√n; √λ·I_d] w ≅ [y/√n; 0]`, whose normal equations are exactly
+//! `(XXᵀ/n + λI) w = Xy/n` — but solved QR-stably.
+
+use crate::error::{Error, Result};
+use crate::matrix::{DenseMatrix, Matrix};
+
+/// In-place Householder QR of a tall `m×k` row-major block; `rhs` (length m)
+/// is overwritten by `Qᵀ rhs`. On return the upper triangle of the first
+/// `k` rows holds `R`.
+pub fn householder_qr(a: &mut [f64], m: usize, k: usize, rhs: &mut [f64]) -> Result<()> {
+    if a.len() != m * k || rhs.len() != m {
+        return Err(Error::Shape("householder_qr dims".into()));
+    }
+    if m < k {
+        return Err(Error::InvalidArg(format!("householder_qr: m={m} < k={k}")));
+    }
+    let mut v = vec![0.0; m];
+    for j in 0..k {
+        // Build the Householder vector for column j (rows j..m).
+        let mut norm = 0.0;
+        for i in j..m {
+            norm += a[i * k + j] * a[i * k + j];
+        }
+        norm = norm.sqrt();
+        if norm == 0.0 {
+            continue;
+        }
+        let ajj = a[j * k + j];
+        let alpha = if ajj >= 0.0 { -norm } else { norm };
+        let mut vnorm = 0.0;
+        for i in j..m {
+            let vi = if i == j { ajj - alpha } else { a[i * k + j] };
+            v[i] = vi;
+            vnorm += vi * vi;
+        }
+        if vnorm == 0.0 {
+            continue;
+        }
+        // Apply H = I − 2vvᵀ/(vᵀv) to A[j.., j..] and rhs.
+        for c in j..k {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i] * a[i * k + c];
+            }
+            let f = 2.0 * dot / vnorm;
+            for i in j..m {
+                a[i * k + c] -= f * v[i];
+            }
+        }
+        let mut dot = 0.0;
+        for i in j..m {
+            dot += v[i] * rhs[i];
+        }
+        let f = 2.0 * dot / vnorm;
+        for i in j..m {
+            rhs[i] -= f * v[i];
+        }
+        a[j * k + j] = alpha;
+        for i in (j + 1)..m {
+            a[i * k + j] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Back-substitution `R w = c` for upper-triangular `k×k` `R` stored in the
+/// first `k` rows of a row-major block with row stride `k`.
+pub fn back_substitute(r: &[f64], k: usize, c: &[f64]) -> Result<Vec<f64>> {
+    let mut w = vec![0.0; k];
+    for i in (0..k).rev() {
+        let mut s = c[i];
+        for j in (i + 1)..k {
+            s -= r[i * k + j] * w[j];
+        }
+        let d = r[i * k + i];
+        if d.abs() < 1e-300 {
+            return Err(Error::Linalg(format!("singular R at {i}")));
+        }
+        w[i] = s / d;
+    }
+    Ok(w)
+}
+
+/// One `(R, c)` pair — the reduced state of a row block.
+#[derive(Clone, Debug)]
+pub struct RFactor {
+    pub k: usize,
+    /// `k×k` upper-triangular, row-major.
+    pub r: Vec<f64>,
+    /// First `k` entries of `Qᵀ rhs`.
+    pub c: Vec<f64>,
+}
+
+/// TSQR over P row-blocks: local QR per block, then binary-tree combines.
+pub struct Tsqr {
+    pub k: usize,
+    /// Number of tree combine levels executed by the last `solve` (== the
+    /// single-allreduce latency count reported in Fig. 1c / Table 2).
+    pub combine_levels: usize,
+}
+
+impl Tsqr {
+    pub fn new(k: usize) -> Self {
+        Tsqr {
+            k,
+            combine_levels: 0,
+        }
+    }
+
+    /// Reduce one local row block to its `(R, c)` factor.
+    pub fn local_factor(&self, block: &[f64], m: usize, rhs: &[f64]) -> Result<RFactor> {
+        let k = self.k;
+        // Pad blocks shorter than k with zero rows (QR needs m ≥ k).
+        let mp = m.max(k);
+        let mut a = vec![0.0; mp * k];
+        a[..m * k].copy_from_slice(block);
+        let mut c = vec![0.0; mp];
+        c[..m].copy_from_slice(rhs);
+        householder_qr(&mut a, mp, k, &mut c)?;
+        Ok(RFactor {
+            k,
+            r: a[..k * k].to_vec(),
+            c: c[..k].to_vec(),
+        })
+    }
+
+    /// Combine two `(R, c)` factors by QR of the `2k×k` stack.
+    pub fn combine(&self, top: &RFactor, bot: &RFactor) -> Result<RFactor> {
+        let k = self.k;
+        let mut a = vec![0.0; 2 * k * k];
+        a[..k * k].copy_from_slice(&top.r);
+        a[k * k..].copy_from_slice(&bot.r);
+        let mut c = vec![0.0; 2 * k];
+        c[..k].copy_from_slice(&top.c);
+        c[k..].copy_from_slice(&bot.c);
+        householder_qr(&mut a, 2 * k, k, &mut c)?;
+        Ok(RFactor {
+            k,
+            r: a[..k * k].to_vec(),
+            c: c[..k].to_vec(),
+        })
+    }
+
+    /// Full tree solve over already-factored leaves.
+    pub fn tree_solve(&mut self, mut leaves: Vec<RFactor>) -> Result<Vec<f64>> {
+        if leaves.is_empty() {
+            return Err(Error::InvalidArg("tsqr: no leaves".into()));
+        }
+        self.combine_levels = 0;
+        while leaves.len() > 1 {
+            self.combine_levels += 1;
+            let mut next = Vec::with_capacity(leaves.len().div_ceil(2));
+            let mut it = leaves.chunks(2);
+            for pair in &mut it {
+                if pair.len() == 2 {
+                    next.push(self.combine(&pair[0], &pair[1])?);
+                } else {
+                    next.push(pair[0].clone());
+                }
+            }
+            leaves = next;
+        }
+        let root = &leaves[0];
+        back_substitute(&root.r, self.k, &root.c)
+    }
+}
+
+/// Direct regularized LS solve:
+/// `min_w λ/2‖w‖² + 1/(2n)‖Xᵀw − y‖²` via TSQR over row blocks of the
+/// augmented matrix. Returns `(w, combine_levels)`.
+///
+/// Factors in the **smaller** dimension (the paper's Table-2 cost
+/// `min(d,n)²·max(d,n)`):
+/// * `d ≤ n` — QR of `[Xᵀ/√n; √λ·I_d]`, back-substitute for w directly;
+/// * `d > n` — QR of `[X; √(nλ)·I_n]` whose R satisfies
+///   `RᵀR = XᵀX + nλ·I`, then `w = X·u` with `u = (RᵀR)⁻¹ y`
+///   (the identity `(XXᵀ + nλI)⁻¹X = X(XᵀX + nλI)⁻¹`).
+///
+/// `p_blocks` is clamped so every leaf block is tall (≥ k rows) — short
+/// blocks would be zero-padded to k and inflate the leaf QR cost.
+pub fn tsqr_solve_ls(x: &Matrix, y: &[f64], lam: f64, p_blocks: usize) -> Result<(Vec<f64>, usize)> {
+    let d = x.rows();
+    let n = x.cols();
+    if y.len() != n {
+        return Err(Error::Shape("tsqr_solve_ls: y length".into()));
+    }
+    if d <= n {
+        tsqr_primal(x, y, lam, p_blocks)
+    } else {
+        tsqr_dual(x, y, lam, p_blocks)
+    }
+}
+
+fn clamp_blocks(p_blocks: usize, rows: usize, k: usize) -> usize {
+    p_blocks.max(1).min((rows / k.max(1)).max(1))
+}
+
+fn tsqr_primal(x: &Matrix, y: &[f64], lam: f64, p_blocks: usize) -> Result<(Vec<f64>, usize)> {
+    let d = x.rows();
+    let n = x.cols();
+    let sn = (n as f64).sqrt();
+    // Augmented rows: n rows of Xᵀ/√n with rhs y/√n, then d rows √λ·I, rhs 0.
+    let xt = x.transpose(); // n × d; rows are data points
+    let p_blocks = clamp_blocks(p_blocks, n, d);
+    let mut tsqr = Tsqr::new(d);
+    let mut leaves = Vec::with_capacity(p_blocks + 1);
+    let per = n.div_ceil(p_blocks);
+    let mut dense_rows = vec![0.0; per * d];
+    for blk in 0..p_blocks {
+        let lo = blk * per;
+        let hi = ((blk + 1) * per).min(n);
+        if lo >= hi {
+            break;
+        }
+        let m = hi - lo;
+        let idx: Vec<usize> = (lo..hi).collect();
+        xt.gather_rows(&idx, &mut dense_rows[..m * d])?;
+        for v in dense_rows[..m * d].iter_mut() {
+            *v /= sn;
+        }
+        let rhs: Vec<f64> = y[lo..hi].iter().map(|v| v / sn).collect();
+        leaves.push(tsqr.local_factor(&dense_rows[..m * d], m, &rhs)?);
+    }
+    // Regularization block √λ·I_d.
+    if lam > 0.0 {
+        let mut reg = DenseMatrix::zeros(d, d);
+        let sl = lam.sqrt();
+        for i in 0..d {
+            reg.set(i, i, sl);
+        }
+        leaves.push(tsqr.local_factor(reg.data(), d, &vec![0.0; d])?);
+    }
+    let w = tsqr.tree_solve(leaves)?;
+    Ok((w, tsqr.combine_levels))
+}
+
+fn tsqr_dual(x: &Matrix, y: &[f64], lam: f64, p_blocks: usize) -> Result<(Vec<f64>, usize)> {
+    let d = x.rows();
+    let n = x.cols();
+    let nl = (n as f64) * lam;
+    // QR of [X; √(nλ)·I_n] — (d+n) × n, rhs carried as zero (we only need R).
+    let p_blocks = clamp_blocks(p_blocks, d, n);
+    let mut tsqr = Tsqr::new(n);
+    let mut leaves = Vec::with_capacity(p_blocks + 1);
+    let per = d.div_ceil(p_blocks);
+    let mut dense_rows = vec![0.0; per * n];
+    for blk in 0..p_blocks {
+        let lo = blk * per;
+        let hi = ((blk + 1) * per).min(d);
+        if lo >= hi {
+            break;
+        }
+        let m = hi - lo;
+        let idx: Vec<usize> = (lo..hi).collect();
+        x.gather_rows(&idx, &mut dense_rows[..m * n])?;
+        leaves.push(tsqr.local_factor(&dense_rows[..m * n], m, &vec![0.0; m])?);
+    }
+    if lam > 0.0 {
+        let mut reg = DenseMatrix::zeros(n, n);
+        let snl = nl.sqrt();
+        for i in 0..n {
+            reg.set(i, i, snl);
+        }
+        leaves.push(tsqr.local_factor(reg.data(), n, &vec![0.0; n])?);
+    }
+    // Reduce to the root R (rhs is unused on this path).
+    let mut lv = leaves;
+    tsqr.combine_levels = 0;
+    while lv.len() > 1 {
+        tsqr.combine_levels += 1;
+        let mut next = Vec::with_capacity(lv.len().div_ceil(2));
+        for pair in lv.chunks(2) {
+            if pair.len() == 2 {
+                next.push(tsqr.combine(&pair[0], &pair[1])?);
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        lv = next;
+    }
+    let r = &lv[0].r;
+    // Solve RᵀR u = y: forward with Rᵀ (lower), back with R.
+    let mut u = y.to_vec();
+    for i in 0..n {
+        let mut s = u[i];
+        for j in 0..i {
+            s -= r[j * n + i] * u[j];
+        }
+        let diag = r[i * n + i];
+        if diag.abs() < 1e-300 {
+            return Err(Error::Linalg(format!("tsqr_dual: singular R at {i}")));
+        }
+        u[i] = s / diag;
+    }
+    let mut u2 = back_substitute(r, n, &u)?;
+    // w = X u.
+    let mut w = vec![0.0; d];
+    x.matvec(&u2, &mut w)?;
+    u2.clear();
+    Ok((w, tsqr.combine_levels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::DenseMatrix;
+
+    fn rngv(n: usize, seed: u64) -> Vec<f64> {
+        let mut state = seed.wrapping_add(0x243F6A8885A308D3);
+        (0..n)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                (state as f64 / u64::MAX as f64) - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn qr_reproduces_least_squares() {
+        // Overdetermined 20×4; compare against normal equations.
+        let (m, k) = (20, 4);
+        let a = rngv(m * k, 1);
+        let b = rngv(m, 2);
+        let mut aa = a.clone();
+        let mut bb = b.clone();
+        householder_qr(&mut aa, m, k, &mut bb).unwrap();
+        let w = back_substitute(&aa, k, &bb).unwrap();
+        // Normal equations residual: Aᵀ(Aw − b) = 0.
+        for j in 0..k {
+            let mut g = 0.0;
+            for i in 0..m {
+                let mut awi = 0.0;
+                for t in 0..k {
+                    awi += a[i * k + t] * w[t];
+                }
+                g += a[i * k + j] * (awi - b[i]);
+            }
+            assert!(g.abs() < 1e-10, "gradient {j}: {g}");
+        }
+    }
+
+    #[test]
+    fn tree_solve_independent_of_block_count() {
+        let (m, k) = (64, 5);
+        let a = rngv(m * k, 3);
+        let b = rngv(m, 4);
+        let mut sols = Vec::new();
+        for p in [1usize, 2, 4, 8] {
+            let mut tsqr = Tsqr::new(k);
+            let per = m / p;
+            let leaves: Vec<RFactor> = (0..p)
+                .map(|i| {
+                    tsqr.local_factor(
+                        &a[i * per * k..(i + 1) * per * k],
+                        per,
+                        &b[i * per..(i + 1) * per],
+                    )
+                    .unwrap()
+                })
+                .collect();
+            sols.push(tsqr.tree_solve(leaves).unwrap());
+        }
+        for s in &sols[1..] {
+            for (x, y) in s.iter().zip(&sols[0]) {
+                assert!((x - y).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn dual_path_matches_normal_equations() {
+        // d > n: the [X; √(nλ)I] route. Verify (XXᵀ/n + λI)w = Xy/n.
+        let (d, n) = (30, 8);
+        let xd = DenseMatrix::from_vec(d, n, rngv(d * n, 21));
+        let x = Matrix::Dense(xd);
+        let y = rngv(n, 22);
+        let lam = 0.2;
+        let (w, _levels) = tsqr_solve_ls(&x, &y, lam, 4).unwrap();
+        let mut xty = vec![0.0; d];
+        x.matvec(&y, &mut xty).unwrap();
+        let mut xtw = vec![0.0; n];
+        x.matvec_t(&w, &mut xtw).unwrap();
+        let mut xxw = vec![0.0; d];
+        x.matvec(&xtw, &mut xxw).unwrap();
+        for i in 0..d {
+            let g = xxw[i] / n as f64 + lam * w[i] - xty[i] / n as f64;
+            assert!(g.abs() < 1e-9, "i={i}: {g}");
+        }
+    }
+
+    #[test]
+    fn regularized_solve_matches_normal_equations() {
+        // Small d: verify (XXᵀ/n + λI) w = Xy/n.
+        let (d, n) = (6, 40);
+        let xd = DenseMatrix::from_vec(d, n, rngv(d * n, 7));
+        let x = Matrix::Dense(xd.clone());
+        let y = rngv(n, 8);
+        let lam = 0.3;
+        let (w, levels) = tsqr_solve_ls(&x, &y, lam, 4).unwrap();
+        assert!(levels >= 2); // 4 data blocks + 1 reg block → ≥2 levels
+        // residual of normal equations
+        let mut xty = vec![0.0; d];
+        x.matvec(&y, &mut xty).unwrap();
+        let mut xtw = vec![0.0; n];
+        x.matvec_t(&w, &mut xtw).unwrap();
+        let mut xxw = vec![0.0; d];
+        x.matvec(&xtw, &mut xxw).unwrap();
+        for i in 0..d {
+            let g = xxw[i] / n as f64 + lam * w[i] - xty[i] / n as f64;
+            assert!(g.abs() < 1e-10, "i={i}: {g}");
+        }
+    }
+}

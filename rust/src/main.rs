@@ -1,0 +1,348 @@
+//! `cabcd` — launcher CLI for the communication-avoiding block coordinate
+//! descent framework.
+//!
+//! Subcommands (args are `--key value` pairs; clap is not in the offline
+//! vendor set, so parsing is hand-rolled in [`Args`]):
+//!
+//! * `train`      — run one experiment (config file or flags)
+//! * `gen-data`   — write a Table-3 dataset clone as a LIBSVM file
+//! * `cost-table` — print Table 1 / Table 2 instantiations
+//! * `scaling`    — modeled strong/weak scaling (Figures 8/9)
+//! * `artifacts`  — inspect the AOT artifact manifest
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use cabcd::config::{DatasetConfig, ExperimentConfig, RunConfig, SolverConfig};
+use cabcd::coordinator::run_experiment;
+use cabcd::costmodel::{
+    scaling::{paper_p_range, strong_scaling, weak_scaling},
+    AlgoCosts, CostParams, Machine, Method,
+};
+use cabcd::error::{Error, Result};
+use cabcd::matrix::gen::{self, sigma_max_sq};
+use cabcd::matrix::io::write_libsvm;
+use cabcd::util::Rng64;
+
+/// `--key value` argument bag with typed getters.
+struct Args {
+    map: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut map = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::InvalidArg(format!("expected --flag, got {a:?}")))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                map.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { map, flags })
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.map.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn str_opt(&self, key: &str) -> Option<String> {
+        self.map.get(key).cloned()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| Error::InvalidArg(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+const USAGE: &str = "\
+cabcd — communication-avoiding primal/dual block coordinate descent
+        (Devarakonda, Fountoulakis, Demmel, Mahoney, 2016)
+
+USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
+
+  train       --config FILE | [--dataset abalone|news20|a9a|real-sim]
+              [--scale K] [--method bcd|cabcd|bdcd|cabdcd|cg] [--b B] [--s S]
+              [--iters H] [--lam L] [--ranks P] [--backend native|xla]
+              [--artifact-dir DIR] [--seed N] [--json]
+  gen-data    --out FILE [--name abalone] [--scale K] [--seed N] [--verify]
+  cost-table  [--d D] [--n N] [--p P] [--b B] [--s S] [--h H]
+  scaling     [--mode strong|weak] [--machine mpi|spark] [--d D] [--log2n E]
+              [--b B] [--h H] [--max-s S]
+  artifacts   [--dir artifacts]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "cost-table" => cmd_cost_table(&args),
+        "scaling" => cmd_scaling(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::InvalidArg(format!(
+            "unknown subcommand {other:?}; run `cabcd help`"
+        ))),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = if let Some(path) = args.str_opt("config") {
+        ExperimentConfig::from_file(&PathBuf::from(path))?
+    } else {
+        let iters = args.usize_or("iters", 1000)?;
+        ExperimentConfig {
+            dataset: DatasetConfig {
+                kind: "synthetic".into(),
+                name: Some(args.str_or("dataset", "abalone")),
+                path: None,
+                scale: args.usize_or("scale", 1)?,
+                seed: args.u64_or("seed", 0)?,
+            },
+            solver: SolverConfig {
+                method: args.str_or("method", "cabcd"),
+                b: args.usize_or("b", 4)?,
+                s: args.usize_or("s", 4)?,
+                lam: args.f64_opt("lam")?,
+                iters,
+                seed: args.u64_or("seed", 0)?,
+                record_every: args.usize_or("record-every", (iters / 20).max(1))?,
+                track_gram_cond: args.flag("track-gram-cond"),
+                tol: args.f64_opt("tol")?,
+            },
+            run: RunConfig {
+                ranks: args.usize_or("ranks", 1)?,
+                backend: args.str_or("backend", "native"),
+                artifact_dir: PathBuf::from(args.str_or("artifact-dir", "artifacts")),
+            },
+        }
+    };
+    let report = run_experiment(&cfg)?;
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        println!(
+            "dataset={} (d={}, n={})  method={}  b={} s={}  P={}  backend={}",
+            report.dataset,
+            report.d,
+            report.n,
+            report.method,
+            report.b,
+            report.s,
+            report.ranks,
+            report.backend
+        );
+        println!(
+            "λ={:.3e}  iters={}  wall={:.1} ms",
+            report.lambda, report.history.iters, report.wall_ms
+        );
+        println!(
+            "final |objective error|={:.3e}  solution error={:.3e}",
+            report.final_obj_err, report.final_sol_err
+        );
+        println!(
+            "comm: allreduces={}  critical-path msgs={}  words={}",
+            report.history.meter.allreduces, report.critical_msgs, report.critical_words
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let name = args.str_or("name", "abalone");
+    let scale = args.usize_or("scale", 1)?;
+    let seed = args.u64_or("seed", 0)?;
+    let out = PathBuf::from(
+        args.str_opt("out")
+            .ok_or_else(|| Error::InvalidArg("gen-data needs --out FILE".into()))?,
+    );
+    let mut spec = gen::spec_by_name(&name)?;
+    if scale > 1 {
+        spec.name = format!("{}-s{}", spec.name, scale);
+        spec.d = (spec.d / scale).max(4);
+        spec.n = (spec.n / scale).max(16);
+    }
+    println!(
+        "generating {} (d={}, n={}, density={}, σ_max={:.2e})",
+        spec.name, spec.d, spec.n, spec.density, spec.sigma_max
+    );
+    let ds = gen::generate(&spec, seed)?;
+    write_libsvm(&out, &ds)?;
+    println!("wrote {} points to {}", ds.n(), out.display());
+    if args.flag("verify") {
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xD1CE);
+        let smax = sigma_max_sq(&ds.x, 80, &mut rng);
+        println!(
+            "measured σ_max(XᵀX) = {:.3e} (target {:.3e}), density = {:.4}",
+            smax,
+            spec.sigma_max,
+            ds.x.density()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cost_table(args: &Args) -> Result<()> {
+    let d = args.f64_or("d", 1024.0)?;
+    let n = args.f64_or("n", 1e6)?;
+    let p = args.f64_or("p", 1024.0)?;
+    let b = args.f64_or("b", 8.0)?;
+    let s = args.f64_or("s", 8.0)?;
+    let h = args.f64_or("h", 1000.0)?;
+    println!("Table 1 (critical-path costs), d={d} n={n} P={p} b={b} s={s} H={h}:");
+    println!(
+        "{:<10} {:>14} {:>12} {:>14} {:>14}",
+        "Algorithm", "Flops F", "Latency L", "Bandwidth W", "Memory M"
+    );
+    let rows: Vec<(&str, Method, f64)> = vec![
+        ("BCD", Method::Bcd, 1.0),
+        ("CA-BCD", Method::CaBcd, s),
+        ("BDCD", Method::Bdcd, 1.0),
+        ("CA-BDCD", Method::CaBdcd, s),
+        ("Krylov", Method::Krylov, 1.0),
+        ("TSQR", Method::Tsqr, 1.0),
+    ];
+    for (name, method, s_eff) in rows {
+        let cp = CostParams {
+            d,
+            n,
+            p,
+            b,
+            s: s_eff,
+            h,
+        };
+        let c = AlgoCosts::of(method, &cp);
+        println!(
+            "{:<10} {:>14.4e} {:>12.4e} {:>14.4e} {:>14.4e}",
+            name, c.flops, c.latency, c.bandwidth, c.memory
+        );
+    }
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let mode = args.str_or("mode", "strong");
+    let machine = args.str_or("machine", "mpi");
+    let d = args.f64_or("d", 1024.0)?;
+    let b = args.f64_or("b", 4.0)?;
+    let h = args.f64_or("h", 100.0)?;
+    let max_s = args.usize_or("max-s", 1000)?;
+    let m = match machine.as_str() {
+        "mpi" => Machine::cori_mpi(),
+        "spark" => Machine::cori_spark(),
+        other => {
+            return Err(Error::InvalidArg(format!(
+                "machine {other:?} (want mpi|spark)"
+            )))
+        }
+    };
+    let pr = paper_p_range();
+    let series = match mode.as_str() {
+        "strong" => {
+            let default_e = if machine == "spark" { 40 } else { 35 };
+            let n = (1u64 << args.u64_or("log2n", default_e)?) as f64;
+            strong_scaling(&m, d, n, b, h, &pr, max_s)
+        }
+        "weak" => {
+            let npp = (1u64 << args.u64_or("log2n", 11)?) as f64;
+            weak_scaling(&m, d, npp, b, h, &pr, max_s)
+        }
+        other => {
+            return Err(Error::InvalidArg(format!(
+                "mode {other:?} (want strong|weak)"
+            )))
+        }
+    };
+    println!("{mode} scaling on {} (b={b}, d={d}):", series.machine);
+    println!(
+        "{:>10} {:>14} {:>14} {:>8} {:>10}",
+        "P", "T_BCD (s)", "T_CA-BCD (s)", "best s", "speedup"
+    );
+    for pt in &series.points {
+        println!(
+            "{:>10} {:>14.6e} {:>14.6e} {:>8} {:>10.2}",
+            pt.p, pt.t_classical, pt.t_ca, pt.best_s, pt.speedup
+        );
+    }
+    let (mx, at_p, at_s) = series.max_speedup();
+    println!("max speedup {mx:.1}× at P={at_p} (s={at_s})");
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("dir", "artifacts"));
+    let data = std::fs::read_to_string(dir.join("manifest.tsv"))?;
+    let manifest = cabcd::runtime::Manifest::parse_tsv(&data)?;
+    println!(
+        "artifact dir {} — dtype {}, nt {}",
+        dir.display(),
+        manifest.dtype,
+        manifest.nt
+    );
+    for a in &manifest.artifacts {
+        println!("  {:<28} kind={:<16} file={}", a.name, a.kind, a.file);
+    }
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Compressed Sparse Row matrix.
+//!
+//! The news20/real-sim dataset clones are ~0.1–0.3% dense; storing them
+//! densely (62061×15935 f64 ≈ 7.9 GB) is impossible, so every solver path
+//! has a CSR-aware implementation. Column indices within each row are kept
+//! sorted — `sampled_gram` exploits this with a two-pointer merge.
+
+use super::dense::DenseMatrix;
+
+/// CSR `rows × cols` matrix of `f64` with sorted column indices per row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from per-entry triplets (unsorted OK; duplicates summed).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        mut triplets: Vec<(usize, usize, f64)>,
+    ) -> Self {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(usize, usize)> = None;
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet out of bounds");
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[r + 1] += 1;
+                indices.push(c as u32);
+                values.push(v);
+                last = Some((r, c));
+            }
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        CsrMatrix {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn from_dense(m: &DenseMatrix) -> Self {
+        let mut trip = Vec::new();
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    trip.push((i, j, v));
+                }
+            }
+        }
+        CsrMatrix::from_triplets(m.rows(), m.cols(), trip)
+    }
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut d = DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                d.set(i, c as usize, v);
+            }
+        }
+        d
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// `(column indices, values)` of row `i` — indices sorted ascending.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Sparse dot of two rows via two-pointer merge on sorted indices.
+    #[inline]
+    fn row_dot(&self, i: usize, j: usize) -> f64 {
+        let (ci, vi) = self.row(i);
+        let (cj, vj) = self.row(j);
+        let (mut p, mut q, mut s) = (0usize, 0usize, 0.0);
+        while p < ci.len() && q < cj.len() {
+            match ci[p].cmp(&cj[q]) {
+                std::cmp::Ordering::Less => p += 1,
+                std::cmp::Ordering::Greater => q += 1,
+                std::cmp::Ordering::Equal => {
+                    s += vi[p] * vj[q];
+                    p += 1;
+                    q += 1;
+                }
+            }
+        }
+        s
+    }
+
+    pub fn sampled_gram(&self, idx: &[usize], out: &mut [f64]) {
+        let sb = idx.len();
+        for j in 0..sb {
+            for t in j..sb {
+                let v = self.row_dot(idx[j], idx[t]);
+                out[j * sb + t] = v;
+                out[t * sb + j] = v;
+            }
+        }
+    }
+
+    pub fn sampled_matvec(&self, idx: &[usize], z: &[f64], out: &mut [f64]) {
+        for (k, &i) in idx.iter().enumerate() {
+            let (cols, vals) = self.row(i);
+            let mut s = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                s += v * z[c as usize];
+            }
+            out[k] = s;
+        }
+    }
+
+    pub fn matvec(&self, z: &[f64], out: &mut [f64]) {
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let mut s = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                s += v * z[c as usize];
+            }
+            out[i] = s;
+        }
+    }
+
+    pub fn matvec_t(&self, v: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        for i in 0..self.rows {
+            let s = v[i];
+            if s != 0.0 {
+                let (cols, vals) = self.row(i);
+                for (&c, &x) in cols.iter().zip(vals) {
+                    out[c as usize] += s * x;
+                }
+            }
+        }
+    }
+
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> CsrMatrix {
+        let mut trip = Vec::new();
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let c = c as usize;
+                if c >= lo && c < hi {
+                    trip.push((i, c - lo, v));
+                }
+            }
+        }
+        CsrMatrix::from_triplets(self.rows, hi - lo, trip)
+    }
+
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut trip = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                trip.push((c as usize, i, v));
+            }
+        }
+        CsrMatrix::from_triplets(self.cols, self.rows, trip)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        CsrMatrix::from_triplets(
+            3,
+            4,
+            vec![(0, 1, 2.0), (0, 0, 1.0), (1, 2, 4.0), (1, 1, 3.0), (2, 3, 6.0), (2, 0, 5.0)],
+        )
+    }
+
+    #[test]
+    fn triplets_sorted_and_dedup() {
+        let m = CsrMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 4.0)]);
+        assert_eq!(m.nnz(), 2);
+        let (c, v) = m.row(0);
+        assert_eq!(c, &[0]);
+        assert_eq!(v, &[3.0]);
+    }
+
+    #[test]
+    fn row_dot_merge() {
+        let m = sample();
+        assert_eq!(m.row_dot(0, 0), 5.0);
+        assert_eq!(m.row_dot(0, 1), 6.0);
+        assert_eq!(m.row_dot(0, 2), 5.0);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        let d = m.to_dense();
+        let m2 = CsrMatrix::from_dense(&d);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn transpose_matvec_consistency() {
+        let m = sample();
+        let t = m.transpose();
+        let v = [1.0, -2.0, 0.5];
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        m.matvec_t(&v, &mut a);
+        t.matvec(&v, &mut b);
+        assert_eq!(a, b);
+    }
+}

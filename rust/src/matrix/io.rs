@@ -1,0 +1,172 @@
+//! LIBSVM-format dataset IO.
+//!
+//! The paper's experiments run on LIBSVM repository files (Table 3); the
+//! generator in [`super::gen`] writes the same format, so synthetic clones
+//! and real downloads are interchangeable at the CLI.
+//!
+//! Format, one data point per line: `label idx:val idx:val ...` with
+//! 1-based feature indices. We store points as **columns** of `X ∈ R^{d×n}`
+//! to match the paper's convention (rows = features).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::matrix::{CsrMatrix, Matrix};
+
+/// A labelled dataset: `x` is `d × n` (features × points), `y` length `n`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn d(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.cols()
+    }
+}
+
+/// Read a LIBSVM file into a `d × n` CSR matrix (d inferred unless given).
+pub fn read_libsvm(path: &Path, force_d: Option<usize>) -> Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut y = Vec::new();
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    let mut d_max = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let col = y.len();
+        let mut parts = line.split_whitespace();
+        let label = parts
+            .next()
+            .ok_or_else(|| Error::Dataset(format!("{path:?}:{}: empty line", lineno + 1)))?;
+        y.push(label.parse::<f64>().map_err(|e| {
+            Error::Dataset(format!("{path:?}:{}: bad label: {e}", lineno + 1))
+        })?);
+        for tok in parts {
+            let (i, v) = tok.split_once(':').ok_or_else(|| {
+                Error::Dataset(format!("{path:?}:{}: bad token {tok:?}", lineno + 1))
+            })?;
+            let i: usize = i.parse().map_err(|e| {
+                Error::Dataset(format!("{path:?}:{}: bad index: {e}", lineno + 1))
+            })?;
+            if i == 0 {
+                return Err(Error::Dataset(format!(
+                    "{path:?}:{}: LIBSVM indices are 1-based",
+                    lineno + 1
+                )));
+            }
+            let v: f64 = v.parse().map_err(|e| {
+                Error::Dataset(format!("{path:?}:{}: bad value: {e}", lineno + 1))
+            })?;
+            d_max = d_max.max(i);
+            triplets.push((i - 1, col, v));
+        }
+    }
+    let n = y.len();
+    let d = force_d.unwrap_or(d_max);
+    if d < d_max {
+        return Err(Error::Dataset(format!(
+            "force_d {d} < max feature index {d_max}"
+        )));
+    }
+    let x = CsrMatrix::from_triplets(d, n, triplets);
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dataset".into());
+    Ok(Dataset {
+        name,
+        x: Matrix::Csr(x),
+        y,
+    })
+}
+
+/// Write a dataset in LIBSVM format (column j of X = line j).
+pub fn write_libsvm(path: &Path, ds: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    // Column access: transpose once (points become rows).
+    let xt = ds.x.transpose();
+    for j in 0..ds.n() {
+        write!(w, "{}", ds.y[j])?;
+        match &xt {
+            Matrix::Csr(m) => {
+                let (cols, vals) = m.row(j);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    write!(w, " {}:{}", c + 1, v)?;
+                }
+            }
+            Matrix::Dense(m) => {
+                for (c, &v) in m.row(j).iter().enumerate() {
+                    if v != 0.0 {
+                        write!(w, " {}:{}", c + 1, v)?;
+                    }
+                }
+            }
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::DenseMatrix;
+
+    #[test]
+    fn roundtrip() {
+        let x = Matrix::Dense(DenseMatrix::from_vec(
+            3,
+            2,
+            vec![1.0, 0.0, 0.0, 2.5, -3.0, 0.0],
+        ));
+        let ds = Dataset {
+            name: "t".into(),
+            x,
+            y: vec![1.0, -1.0],
+        };
+        let dir = crate::util::tmp::TempDir::new("io").unwrap();
+        let p = dir.path().join("t.libsvm");
+        write_libsvm(&p, &ds).unwrap();
+        let back = read_libsvm(&p, Some(3)).unwrap();
+        assert_eq!(back.n(), 2);
+        assert_eq!(back.d(), 3);
+        assert_eq!(back.y, vec![1.0, -1.0]);
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        ds.x.matvec(&[1.0, 1.0], &mut a).unwrap();
+        back.x.matvec(&[1.0, 1.0], &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let dir = crate::util::tmp::TempDir::new("io").unwrap();
+        let p = dir.path().join("bad.libsvm");
+        std::fs::write(&p, "1.0 0:5\n").unwrap();
+        assert!(read_libsvm(&p, None).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let dir = crate::util::tmp::TempDir::new("io").unwrap();
+        let p = dir.path().join("c.libsvm");
+        std::fs::write(&p, "# header\n\n1 1:2.0\n").unwrap();
+        let ds = read_libsvm(&p, None).unwrap();
+        assert_eq!(ds.n(), 1);
+        assert_eq!(ds.d(), 1);
+    }
+}

@@ -1,0 +1,307 @@
+//! Matrix substrate: dense (row-major) and CSR sparse storage, LIBSVM IO,
+//! and the Table-3 dataset-clone generator.
+//!
+//! Every solver in the crate views its local shard as the **operand** `A`:
+//! the primal methods take `A = X` (features × data points) and the dual
+//! methods take `A = Xᵀ` — both then *sample rows of A* and contract along
+//! A's columns, which is what lets one Gram engine (and one set of AOT
+//! artifacts) serve all four algorithms.
+
+pub mod csr;
+pub mod dense;
+pub mod gen;
+pub mod io;
+
+pub use csr::CsrMatrix;
+pub use dense::DenseMatrix;
+
+use crate::error::{Error, Result};
+
+/// A rank-local matrix block, dense or sparse.
+///
+/// Solvers only need three primitives, all row-sampled:
+/// * gather sampled rows into a dense scratch (`gather_rows`),
+/// * sparse-aware Gram of sampled rows (`sampled_gram`),
+/// * sparse-aware residual matvec of sampled rows (`sampled_matvec`).
+#[derive(Clone, Debug)]
+pub enum Matrix {
+    Dense(DenseMatrix),
+    Csr(CsrMatrix),
+}
+
+impl Matrix {
+    pub fn rows(&self) -> usize {
+        match self {
+            Matrix::Dense(m) => m.rows(),
+            Matrix::Csr(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Matrix::Dense(m) => m.cols(),
+            Matrix::Csr(m) => m.cols(),
+        }
+    }
+
+    /// Number of stored non-zeros (dense counts every entry).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Matrix::Dense(m) => m.rows() * m.cols(),
+            Matrix::Csr(m) => m.nnz(),
+        }
+    }
+
+    /// Fill fraction in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        let cells = (self.rows() * self.cols()).max(1);
+        self.nnz() as f64 / cells as f64
+    }
+
+    /// Copy the given rows into a dense `idx.len() × cols` row-major buffer.
+    ///
+    /// This is the layout the XLA gram artifact consumes (zero-padded on the
+    /// column side by the runtime).
+    pub fn gather_rows(&self, idx: &[usize], out: &mut [f64]) -> Result<()> {
+        let c = self.cols();
+        if out.len() != idx.len() * c {
+            return Err(Error::Shape(format!(
+                "gather_rows: out len {} != {}x{}",
+                out.len(),
+                idx.len(),
+                c
+            )));
+        }
+        match self {
+            Matrix::Dense(m) => {
+                for (k, &i) in idx.iter().enumerate() {
+                    out[k * c..(k + 1) * c].copy_from_slice(m.row(i));
+                }
+            }
+            Matrix::Csr(m) => {
+                out.fill(0.0);
+                for (k, &i) in idx.iter().enumerate() {
+                    let (cols, vals) = m.row(i);
+                    let dst = &mut out[k * c..(k + 1) * c];
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        dst[j as usize] = v;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// `G[j,t] = <row_{idx[j]}, row_{idx[t]}>` — the raw local Gram block
+    /// (upper triangle computed, mirrored), `out` is `idx.len()²` row-major.
+    pub fn sampled_gram(&self, idx: &[usize], out: &mut [f64]) -> Result<()> {
+        let sb = idx.len();
+        if out.len() != sb * sb {
+            return Err(Error::Shape(format!(
+                "sampled_gram: out len {} != {sb}²",
+                out.len()
+            )));
+        }
+        match self {
+            Matrix::Dense(m) => m.sampled_gram(idx, out),
+            Matrix::Csr(m) => m.sampled_gram(idx, out),
+        }
+        Ok(())
+    }
+
+    /// `r[j] = <row_{idx[j]}, z>` — the raw local residual contributions.
+    pub fn sampled_matvec(&self, idx: &[usize], z: &[f64], out: &mut [f64]) -> Result<()> {
+        if z.len() != self.cols() || out.len() != idx.len() {
+            return Err(Error::Shape(format!(
+                "sampled_matvec: z {} (cols {}), out {} (idx {})",
+                z.len(),
+                self.cols(),
+                out.len(),
+                idx.len()
+            )));
+        }
+        match self {
+            Matrix::Dense(m) => m.sampled_matvec(idx, z, out),
+            Matrix::Csr(m) => m.sampled_matvec(idx, z, out),
+        }
+        Ok(())
+    }
+
+    /// `acc += Aᵀ[ :, idx] · d`, i.e. scatter `Σ_j d[j] · row_{idx[j]}` into
+    /// the length-`cols` accumulator. This is the deferred α/w vector update
+    /// (Alg. 2 line 12 / Alg. 4 line 13) on the local shard.
+    pub fn scatter_rows_add(&self, idx: &[usize], d: &[f64], acc: &mut [f64]) -> Result<()> {
+        if d.len() != idx.len() || acc.len() != self.cols() {
+            return Err(Error::Shape(format!(
+                "scatter_rows_add: d {} idx {} acc {} cols {}",
+                d.len(),
+                idx.len(),
+                acc.len(),
+                self.cols()
+            )));
+        }
+        match self {
+            Matrix::Dense(m) => {
+                for (k, &i) in idx.iter().enumerate() {
+                    let row = m.row(i);
+                    let s = d[k];
+                    if s != 0.0 {
+                        for (a, &x) in acc.iter_mut().zip(row) {
+                            *a += s * x;
+                        }
+                    }
+                }
+            }
+            Matrix::Csr(m) => {
+                for (k, &i) in idx.iter().enumerate() {
+                    let (cols, vals) = m.row(i);
+                    let s = d[k];
+                    if s != 0.0 {
+                        for (&j, &v) in cols.iter().zip(vals) {
+                            acc[j as usize] += s * v;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Full matvec `out = A z` (used by CG and the objective evaluation).
+    pub fn matvec(&self, z: &[f64], out: &mut [f64]) -> Result<()> {
+        if z.len() != self.cols() || out.len() != self.rows() {
+            return Err(Error::Shape("matvec dims".into()));
+        }
+        match self {
+            Matrix::Dense(m) => m.matvec(z, out),
+            Matrix::Csr(m) => m.matvec(z, out),
+        }
+        Ok(())
+    }
+
+    /// Full transposed matvec `out = Aᵀ v`.
+    pub fn matvec_t(&self, v: &[f64], out: &mut [f64]) -> Result<()> {
+        if v.len() != self.rows() || out.len() != self.cols() {
+            return Err(Error::Shape("matvec_t dims".into()));
+        }
+        match self {
+            Matrix::Dense(m) => m.matvec_t(v, out),
+            Matrix::Csr(m) => m.matvec_t(v, out),
+        }
+        Ok(())
+    }
+
+    /// Column-range slice `A[:, lo..hi]` (1D-block column partitioning).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Result<Matrix> {
+        if lo > hi || hi > self.cols() {
+            return Err(Error::InvalidArg(format!("slice_cols {lo}..{hi}")));
+        }
+        Ok(match self {
+            Matrix::Dense(m) => Matrix::Dense(m.slice_cols(lo, hi)),
+            Matrix::Csr(m) => Matrix::Csr(m.slice_cols(lo, hi)),
+        })
+    }
+
+    /// Transpose (used to build the dual operand `A = Xᵀ`).
+    pub fn transpose(&self) -> Matrix {
+        match self {
+            Matrix::Dense(m) => Matrix::Dense(m.transpose()),
+            Matrix::Csr(m) => Matrix::Csr(m.transpose()),
+        }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        match self {
+            Matrix::Dense(m) => m.data().iter().map(|v| v * v).sum(),
+            Matrix::Csr(m) => m.values().iter().map(|v| v * v).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_dense() -> Matrix {
+        // 3x4
+        Matrix::Dense(DenseMatrix::from_vec(
+            3,
+            4,
+            vec![1., 2., 0., 0., 0., 3., 4., 0., 5., 0., 0., 6.],
+        ))
+    }
+
+    fn small_csr() -> Matrix {
+        let d = small_dense();
+        match &d {
+            Matrix::Dense(m) => Matrix::Csr(CsrMatrix::from_dense(m)),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn dense_csr_agree_on_gram() {
+        let (d, s) = (small_dense(), small_csr());
+        let idx = [2usize, 0];
+        let mut gd = vec![0.0; 4];
+        let mut gs = vec![0.0; 4];
+        d.sampled_gram(&idx, &mut gd).unwrap();
+        s.sampled_gram(&idx, &mut gs).unwrap();
+        assert_eq!(gd, gs);
+        // row2·row2 = 25+36=61, row2·row0 = 5
+        assert_eq!(gd[0], 61.0);
+        assert_eq!(gd[1], 5.0);
+        assert_eq!(gd[2], 5.0);
+    }
+
+    #[test]
+    fn dense_csr_agree_on_matvec_paths() {
+        let (d, s) = (small_dense(), small_csr());
+        let z = [1., -1., 2., 0.5];
+        let mut rd = vec![0.0; 2];
+        let mut rs = vec![0.0; 2];
+        d.sampled_matvec(&[1, 2], &z, &mut rd).unwrap();
+        s.sampled_matvec(&[1, 2], &z, &mut rs).unwrap();
+        assert_eq!(rd, rs);
+        assert_eq!(rd[0], -3. + 8.);
+        let mut accd = vec![0.0; 4];
+        let mut accs = vec![0.0; 4];
+        d.scatter_rows_add(&[0, 0], &[1.0, 2.0], &mut accd).unwrap();
+        s.scatter_rows_add(&[0, 0], &[1.0, 2.0], &mut accs).unwrap();
+        assert_eq!(accd, accs);
+        assert_eq!(accd[0], 3.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let d = small_dense();
+        let tt = d.transpose().transpose();
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        let z = [1., 2., 3., 4.];
+        d.matvec(&z, &mut a).unwrap();
+        tt.matvec(&z, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn slice_cols_matches_manual() {
+        let d = small_dense();
+        let sl = d.slice_cols(1, 3).unwrap();
+        assert_eq!(sl.rows(), 3);
+        assert_eq!(sl.cols(), 2);
+        let mut out = vec![0.0; 3];
+        sl.matvec(&[1.0, 1.0], &mut out).unwrap();
+        assert_eq!(out, vec![2.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let d = small_dense();
+        let mut out = vec![0.0; 3];
+        assert!(d.sampled_gram(&[0, 1], &mut out).is_err());
+        assert!(d.slice_cols(3, 2).is_err());
+        assert!(d.slice_cols(0, 9).is_err());
+    }
+}

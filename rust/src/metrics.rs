@@ -1,0 +1,145 @@
+//! Convergence metrics and histories.
+//!
+//! The paper reports two error measures (§5.1):
+//! * relative solution error  `‖w_opt − w_h‖₂ / ‖w_opt‖₂`
+//! * relative objective error `(f(X,w_h,y) − f(X,w_opt,y)) / f(X,w_opt,y)`
+//!   (plotted as |·|; we store the signed value and plot magnitude)
+//!
+//! with `f(X,w,y) = 1/(2n)‖Xᵀw − y‖² + λ/2‖w‖²`, and additionally the Gram
+//! condition-number statistics of Figures 4/7.
+
+use crate::comm::CostMeter;
+
+/// Ground truth for error measurement: `w_opt` from CG at tol 1e-15 plus
+/// its objective value (paper §5.1).
+#[derive(Clone, Debug)]
+pub struct Reference {
+    pub w_opt: Vec<f64>,
+    pub f_opt: f64,
+}
+
+/// One recorded point of a convergence trajectory.
+#[derive(Clone, Copy, Debug)]
+pub struct IterRecord {
+    /// Inner-iteration index h (CA variants record at outer boundaries).
+    pub iter: usize,
+    /// Relative objective error (may be ~0 negative due to roundoff).
+    pub obj_err: f64,
+    /// Relative solution error.
+    pub sol_err: f64,
+}
+
+/// Statistics of the per-outer-iteration Gram condition numbers
+/// (Figures 4i–l / 7i–l report min / median / max over iterations).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CondStats {
+    pub min: f64,
+    pub median: f64,
+    pub max: f64,
+    pub count: usize,
+}
+
+impl CondStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> CondStats {
+        samples.retain(|v| v.is_finite());
+        if samples.is_empty() {
+            return CondStats::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        CondStats {
+            min: samples[0],
+            median: samples[samples.len() / 2],
+            max: *samples.last().unwrap(),
+            count: samples.len(),
+        }
+    }
+}
+
+/// Full trajectory + communication accounting of one solver run.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub records: Vec<IterRecord>,
+    /// Gram condition number per outer iteration (if tracked).
+    pub gram_conds: Vec<f64>,
+    /// This rank's communication meter (solver traffic only — metric
+    /// evaluation traffic is excluded by snapshot/restore).
+    pub meter: CostMeter,
+    /// Total inner iterations executed.
+    pub iters: usize,
+}
+
+impl History {
+    pub fn cond_stats(&self) -> CondStats {
+        CondStats::from_samples(self.gram_conds.clone())
+    }
+
+    /// First recorded iteration whose |objective error| ≤ tol.
+    pub fn iters_to_obj_tol(&self, tol: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.obj_err.abs() <= tol)
+            .map(|r| r.iter)
+    }
+
+    /// Final |objective error|.
+    pub fn final_obj_err(&self) -> f64 {
+        self.records.last().map(|r| r.obj_err.abs()).unwrap_or(f64::NAN)
+    }
+
+    /// Final solution error.
+    pub fn final_sol_err(&self) -> f64 {
+        self.records.last().map(|r| r.sol_err).unwrap_or(f64::NAN)
+    }
+}
+
+/// Relative solution error.
+pub fn relative_solution_error(w: &[f64], w_opt: &[f64]) -> f64 {
+    debug_assert_eq!(w.len(), w_opt.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (a, b) in w.iter().zip(w_opt) {
+        num += (a - b) * (a - b);
+        den += b * b;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Relative objective error given precomputed objective values.
+pub fn relative_objective_error(f_alg: f64, f_opt: f64) -> f64 {
+    (f_alg - f_opt) / f_opt.abs().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cond_stats_order() {
+        let s = CondStats::from_samples(vec![3.0, 1.0, f64::INFINITY, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.count, 3);
+    }
+
+    #[test]
+    fn solution_error_zero_for_exact() {
+        let w = vec![1.0, -2.0, 3.0];
+        assert_eq!(relative_solution_error(&w, &w), 0.0);
+    }
+
+    #[test]
+    fn history_tol_search() {
+        let h = History {
+            records: vec![
+                IterRecord { iter: 1, obj_err: 0.5, sol_err: 0.9 },
+                IterRecord { iter: 10, obj_err: -0.05, sol_err: 0.4 },
+                IterRecord { iter: 20, obj_err: 0.001, sol_err: 0.1 },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(h.iters_to_obj_tol(0.1), Some(10));
+        assert_eq!(h.iters_to_obj_tol(1e-6), None);
+        assert_eq!(h.final_obj_err(), 0.001);
+    }
+}

@@ -1,0 +1,141 @@
+//! 1D data partitioning (paper §4): block-column (data-point) and block-row
+//! (feature) layouts, plus the Lemma-3 balls-into-bins load-balance bound
+//! that governs the all-to-all fallback cost of the mismatched layouts
+//! (Theorems 4/5/8/9).
+
+/// Which dimension of the operand is split across ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// 1D-block column: contraction dimension split, sampled rows fully
+    /// replicated in pieces — the *matched* layout for row-sampled Gram
+    /// computations (BCD on X, BDCD on Xᵀ).
+    BlockColumn,
+    /// 1D-block row: sample dimension split — requires the Theorem-4
+    /// all-to-all conversion before each Gram computation.
+    BlockRow,
+}
+
+/// Contiguous 1D block partition of `len` items over `p` ranks.
+///
+/// Invariants (property-tested): blocks are disjoint, ordered, cover
+/// `0..len`, and sizes differ by at most one.
+#[derive(Clone, Debug)]
+pub struct BlockPartition {
+    pub len: usize,
+    pub p: usize,
+}
+
+impl BlockPartition {
+    pub fn new(len: usize, p: usize) -> Self {
+        assert!(p >= 1);
+        BlockPartition { len, p }
+    }
+
+    /// Half-open range `[lo, hi)` owned by `rank`.
+    pub fn range(&self, rank: usize) -> (usize, usize) {
+        let base = self.len / self.p;
+        let extra = self.len % self.p;
+        let lo = rank * base + rank.min(extra);
+        let size = base + usize::from(rank < extra);
+        (lo, lo + size)
+    }
+
+    pub fn size(&self, rank: usize) -> usize {
+        let (lo, hi) = self.range(rank);
+        hi - lo
+    }
+
+    /// Owner rank of global index `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        assert!(i < self.len);
+        let base = self.len / self.p;
+        let extra = self.len % self.p;
+        let split = extra * (base + 1);
+        if i < split {
+            i / (base + 1)
+        } else if base == 0 {
+            // len < p: only the first `extra` ranks own anything.
+            self.p - 1 // unreachable via assert above when base==0 && i>=split
+        } else {
+            extra + (i - split) / base
+        }
+    }
+}
+
+/// Lemma 3: with `b` blocks ("balls") sampled uniformly over ranks, the
+/// worst-case max load on one rank is `O(ln b / ln ln b)` w.h.p.
+/// Returned as a concrete bound used by the cost model's all-to-all term.
+pub fn max_load_bound(b: usize) -> f64 {
+    if b <= 2 {
+        return b as f64;
+    }
+    let lb = (b as f64).ln();
+    let llb = lb.ln().max(1e-9);
+    lb / llb
+}
+
+/// Tighter bound when `b < P / log P` (Mitzenmacher): `O(log P / log(P/b))`.
+pub fn max_load_bound_small_b(b: usize, p: usize) -> f64 {
+    if p <= 1 || b == 0 {
+        return b as f64;
+    }
+    let lp = (p as f64).ln();
+    let ratio = (p as f64 / b as f64).ln().max(1e-9);
+    lp / ratio
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly() {
+        for len in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 2, 3, 7, 16] {
+                let part = BlockPartition::new(len, p);
+                let mut covered = 0;
+                let mut prev_hi = 0;
+                for r in 0..p {
+                    let (lo, hi) = part.range(r);
+                    assert_eq!(lo, prev_hi, "len={len} p={p} r={r}");
+                    prev_hi = hi;
+                    covered += hi - lo;
+                }
+                assert_eq!(covered, len);
+                assert_eq!(prev_hi, len);
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_balanced_within_one() {
+        let part = BlockPartition::new(103, 8);
+        let sizes: Vec<usize> = (0..8).map(|r| part.size(r)).collect();
+        let mx = *sizes.iter().max().unwrap();
+        let mn = *sizes.iter().min().unwrap();
+        assert!(mx - mn <= 1);
+    }
+
+    #[test]
+    fn owner_consistent_with_range() {
+        for len in [13usize, 64, 99] {
+            for p in [1usize, 3, 5, 10] {
+                let part = BlockPartition::new(len, p);
+                for i in 0..len {
+                    let o = part.owner(i);
+                    let (lo, hi) = part.range(o);
+                    assert!(lo <= i && i < hi, "len={len} p={p} i={i} o={o}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lemma3_bound_grows_slowly() {
+        let b8 = max_load_bound(8);
+        let b1024 = max_load_bound(1024);
+        assert!(b8 < b1024);
+        assert!(b1024 < 10.0, "ln b / ln ln b stays tiny: {b1024}");
+        assert!(max_load_bound_small_b(4, 1024) < 2.0);
+    }
+}

@@ -1,0 +1,476 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and exposes them as a [`ComputeBackend`].
+//!
+//! Python never runs here — artifacts are compiled once at `make artifacts`
+//! and this module only parses HLO text (`HloModuleProto::from_text_file`),
+//! compiles it on the PJRT CPU client at startup, and executes on the hot
+//! path.
+//!
+//! Shape adaptation: artifacts have fixed shapes; inputs are zero-padded to
+//! the smallest compatible artifact. Zero rows/columns contribute nothing
+//! to Gram/residual products, and padded subproblem blocks solve to Δ = 0
+//! against a λI (resp. I/n) diagonal — padding is **exact**, not
+//! approximate (asserted by the backend-parity integration test).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::gram::ComputeBackend;
+use crate::matrix::Matrix;
+
+/// Parsed `artifacts/manifest.tsv` (see aot.py; the JSON twin is for
+/// humans/tooling — Rust reads the TSV to stay serde-free offline).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dtype: String,
+    pub nt: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub sb: usize,
+    pub nloc: usize,
+    pub s: usize,
+    pub b: usize,
+}
+
+impl Manifest {
+    /// Parse the TSV: a `#meta` header line (`dtype`, `nt`), then one line
+    /// per artifact: `name<TAB>file<TAB>kind<TAB>sb<TAB>nloc<TAB>s<TAB>b`.
+    pub fn parse_tsv(text: &str) -> Result<Manifest> {
+        let mut dtype = String::new();
+        let mut nt = 0usize;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(meta) = line.strip_prefix("#meta") {
+                for tok in meta.split_whitespace() {
+                    if let Some(v) = tok.strip_prefix("dtype=") {
+                        dtype = v.to_string();
+                    } else if let Some(v) = tok.strip_prefix("nt=") {
+                        nt = v.parse().map_err(|e| {
+                            Error::Runtime(format!("manifest nt: {e}"))
+                        })?;
+                    }
+                }
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 7 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: want 7 tab-separated fields, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let pu = |i: usize| -> Result<usize> {
+                cols[i]
+                    .parse()
+                    .map_err(|e| Error::Runtime(format!("manifest line {}: {e}", lineno + 1)))
+            };
+            artifacts.push(ArtifactMeta {
+                name: cols[0].to_string(),
+                file: cols[1].to_string(),
+                kind: cols[2].to_string(),
+                sb: pu(3)?,
+                nloc: pu(4)?,
+                s: pu(5)?,
+                b: pu(6)?,
+            });
+        }
+        if dtype.is_empty() {
+            return Err(Error::Runtime("manifest missing #meta dtype line".into()));
+        }
+        Ok(Manifest {
+            dtype,
+            nt,
+            artifacts,
+        })
+    }
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Compiled-artifact cache + PJRT client.
+pub struct XlaRuntime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// (sb, nloc) → gram_resid executable.
+    gram: BTreeMap<(usize, usize), Loaded>,
+    /// (sb, nloc) → alpha_update executable.
+    alpha: BTreeMap<(usize, usize), Loaded>,
+    /// (s, b) → inner_solve executable.
+    inner: BTreeMap<(usize, usize), Loaded>,
+    /// (s, b) → dual_inner_solve executable.
+    dual_inner: BTreeMap<(usize, usize), Loaded>,
+}
+
+impl XlaRuntime {
+    /// Load the manifest and compile every artifact on the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest_path = dir.join("manifest.tsv");
+        let data = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {manifest_path:?} — run `make artifacts` first: {e}"
+            ))
+        })?;
+        let manifest = Manifest::parse_tsv(&data)?;
+        if manifest.dtype != "f64" {
+            return Err(Error::Runtime(format!(
+                "artifact dtype {} unsupported (want f64)",
+                manifest.dtype
+            )));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut rt = XlaRuntime {
+            dir: dir.to_path_buf(),
+            client,
+            manifest,
+            gram: BTreeMap::new(),
+            alpha: BTreeMap::new(),
+            inner: BTreeMap::new(),
+            dual_inner: BTreeMap::new(),
+        };
+        for meta in rt.manifest.artifacts.clone() {
+            let exe = rt.compile(&meta.file)?;
+            let loaded = Loaded { exe };
+            match meta.kind.as_str() {
+                "gram_resid" => {
+                    rt.gram.insert((meta.sb, meta.nloc), loaded);
+                }
+                "alpha_update" => {
+                    rt.alpha.insert((meta.sb, meta.nloc), loaded);
+                }
+                "inner_solve" => {
+                    rt.inner.insert((meta.s, meta.b), loaded);
+                }
+                "dual_inner_solve" => {
+                    rt.dual_inner.insert((meta.s, meta.b), loaded);
+                }
+                other => {
+                    return Err(Error::Runtime(format!("unknown artifact kind {other:?}")));
+                }
+            }
+        }
+        Ok(rt)
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Smallest gram artifact with `sb_art ≥ sb`; errors if none fits.
+    fn pick_gram(&self, sb: usize) -> Result<(usize, usize)> {
+        self.gram
+            .keys()
+            .find(|(s, _)| *s >= sb)
+            .copied()
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no gram artifact with sb ≥ {sb} (have {:?}); extend aot.py GRAM_SHAPES",
+                    self.gram.keys().collect::<Vec<_>>()
+                ))
+            })
+    }
+
+    fn pick_inner(&self, map_is_dual: bool, s: usize, b: usize) -> Result<(usize, usize)> {
+        let map = if map_is_dual { &self.dual_inner } else { &self.inner };
+        map.keys()
+            .filter(|(sa, ba)| *sa >= s && *ba >= b)
+            .min_by_key(|(sa, ba)| sa * ba)
+            .copied()
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no inner-solve artifact covering (s={s}, b={b}); extend aot.py SOLVE_SHAPES"
+                ))
+            })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+/// [`ComputeBackend`] implementation backed by the AOT artifacts.
+///
+/// One per rank (PJRT handles are not `Send`); ranks construct their own.
+pub struct XlaBackend {
+    rt: XlaRuntime,
+    /// Dense row-gather scratch (sb × n_loc).
+    rows: Vec<f64>,
+    /// Executions performed (observability/tests).
+    pub executions: u64,
+}
+
+impl XlaBackend {
+    pub fn new(artifact_dir: &Path) -> Result<XlaBackend> {
+        Ok(XlaBackend {
+            rt: XlaRuntime::load(artifact_dir)?,
+            rows: Vec::new(),
+            executions: 0,
+        })
+    }
+
+}
+
+/// Execute a tuple-returning artifact and unwrap its outputs.
+fn run_tuple(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple()?)
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn gram_resid(
+        &mut self,
+        a: &Matrix,
+        idx: &[usize],
+        z: &[f64],
+        g: &mut [f64],
+        r: &mut [f64],
+    ) -> Result<()> {
+        let sb = idx.len();
+        let n_loc = a.cols();
+        let (sb_art, nloc_art) = self.rt.pick_gram(sb)?;
+        // Gather sampled rows densely once.
+        self.rows.resize(sb * n_loc, 0.0);
+        a.gather_rows(idx, &mut self.rows)?;
+        g.fill(0.0);
+        r.fill(0.0);
+        // Stream column chunks of the artifact width, zero-padding the tail.
+        let mut y_chunk = vec![0.0; sb_art * nloc_art];
+        let mut z_chunk = vec![0.0; nloc_art];
+        let mut lo = 0;
+        while lo < n_loc {
+            let hi = (lo + nloc_art).min(n_loc);
+            let w = hi - lo;
+            y_chunk.fill(0.0);
+            for j in 0..sb {
+                y_chunk[j * nloc_art..j * nloc_art + w]
+                    .copy_from_slice(&self.rows[j * n_loc + lo..j * n_loc + hi]);
+            }
+            z_chunk.fill(0.0);
+            z_chunk[..w].copy_from_slice(&z[lo..hi]);
+            let y_lit = xla::Literal::vec1(&y_chunk)
+                .reshape(&[sb_art as i64, nloc_art as i64])?;
+            let z_lit = xla::Literal::vec1(&z_chunk);
+            self.executions += 1;
+            let exe = &self.rt.gram.get(&(sb_art, nloc_art)).unwrap().exe;
+            let outs = run_tuple(exe, &[y_lit, z_lit])?;
+            let gv = outs[0].to_vec::<f64>()?;
+            let rv = outs[1].to_vec::<f64>()?;
+            for j in 0..sb {
+                for t in 0..sb {
+                    g[j * sb + t] += gv[j * sb_art + t];
+                }
+                r[j] += rv[j];
+            }
+            lo = hi;
+        }
+        Ok(())
+    }
+
+    fn ca_inner_solve(
+        &mut self,
+        s: usize,
+        b: usize,
+        g_raw: &[f64],
+        r_raw: &[f64],
+        w_blocks: &[f64],
+        overlap: &[f64],
+        lam: f64,
+        inv_n: f64,
+    ) -> Result<Vec<f64>> {
+        let (sa, ba) = self.rt.pick_inner(false, s, b)?;
+        let (g_p, r_p, ov_p) = pad_solve_inputs(s, b, sa, ba, g_raw, r_raw, overlap);
+        let w_p = pad_blocks(s, b, sa, ba, w_blocks);
+        let args = [
+            xla::Literal::vec1(&g_p).reshape(&[(sa * ba) as i64, (sa * ba) as i64])?,
+            xla::Literal::vec1(&r_p),
+            xla::Literal::vec1(&w_p).reshape(&[sa as i64, ba as i64])?,
+            xla::Literal::vec1(&ov_p).reshape(&[sa as i64, sa as i64, ba as i64, ba as i64])?,
+            xla::Literal::from(lam),
+            xla::Literal::from(inv_n),
+        ];
+        self.executions += 1;
+        let outs = run_tuple(&self.rt.inner.get(&(sa, ba)).unwrap().exe, &args)?;
+        let d_p = outs[0].to_vec::<f64>()?;
+        Ok(unpad_blocks(s, b, sa, ba, &d_p))
+    }
+
+    fn ca_dual_inner_solve(
+        &mut self,
+        s: usize,
+        b: usize,
+        g_raw: &[f64],
+        r_raw: &[f64],
+        a_blocks: &[f64],
+        y_blocks: &[f64],
+        overlap: &[f64],
+        lam: f64,
+        inv_n: f64,
+    ) -> Result<Vec<f64>> {
+        let (sa, ba) = self.rt.pick_inner(true, s, b)?;
+        let (g_p, r_p, ov_p) = pad_solve_inputs(s, b, sa, ba, g_raw, r_raw, overlap);
+        let a_p = pad_blocks(s, b, sa, ba, a_blocks);
+        let y_p = pad_blocks(s, b, sa, ba, y_blocks);
+        let args = [
+            xla::Literal::vec1(&g_p).reshape(&[(sa * ba) as i64, (sa * ba) as i64])?,
+            xla::Literal::vec1(&r_p),
+            xla::Literal::vec1(&a_p).reshape(&[sa as i64, ba as i64])?,
+            xla::Literal::vec1(&y_p).reshape(&[sa as i64, ba as i64])?,
+            xla::Literal::vec1(&ov_p).reshape(&[sa as i64, sa as i64, ba as i64, ba as i64])?,
+            xla::Literal::from(lam),
+            xla::Literal::from(inv_n),
+        ];
+        self.executions += 1;
+        let outs = run_tuple(&self.rt.dual_inner.get(&(sa, ba)).unwrap().exe, &args)?;
+        let d_p = outs[0].to_vec::<f64>()?;
+        Ok(unpad_blocks(s, b, sa, ba, &d_p))
+    }
+
+    fn alpha_update(
+        &mut self,
+        a: &Matrix,
+        idx: &[usize],
+        d: &[f64],
+        acc: &mut [f64],
+    ) -> Result<()> {
+        let sb = idx.len();
+        let n_loc = a.cols();
+        let (sb_art, nloc_art) = self.rt.pick_gram(sb)?;
+        if self.rt.alpha.get(&(sb_art, nloc_art)).is_none() {
+            return Err(Error::Runtime(format!(
+                "no alpha_update artifact for (sb={sb_art}, nloc={nloc_art})"
+            )));
+        }
+        self.rows.resize(sb * n_loc, 0.0);
+        a.gather_rows(idx, &mut self.rows)?;
+        let mut y_chunk = vec![0.0; sb_art * nloc_art];
+        let mut d_pad = vec![0.0; sb_art];
+        d_pad[..sb].copy_from_slice(d);
+        let d_lit = xla::Literal::vec1(&d_pad);
+        let mut lo = 0;
+        while lo < n_loc {
+            let hi = (lo + nloc_art).min(n_loc);
+            let w = hi - lo;
+            y_chunk.fill(0.0);
+            for j in 0..sb {
+                y_chunk[j * nloc_art..j * nloc_art + w]
+                    .copy_from_slice(&self.rows[j * n_loc + lo..j * n_loc + hi]);
+            }
+            let y_lit = xla::Literal::vec1(&y_chunk)
+                .reshape(&[sb_art as i64, nloc_art as i64])?;
+            self.executions += 1;
+            let exe = &self.rt.alpha.get(&(sb_art, nloc_art)).unwrap().exe;
+            let outs = run_tuple(exe, &[y_lit, d_lit.clone()])?;
+            let av = outs[0].to_vec::<f64>()?;
+            for (dst, &v) in acc[lo..hi].iter_mut().zip(&av[..w]) {
+                *dst += v;
+            }
+            lo = hi;
+        }
+        Ok(())
+    }
+}
+
+/// Zero-pad (G, r, overlap) from logical (s, b) to artifact (sa, ba).
+fn pad_solve_inputs(
+    s: usize,
+    b: usize,
+    sa: usize,
+    ba: usize,
+    g: &[f64],
+    r: &[f64],
+    ov: &[f64],
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let (sb, sba) = (s * b, sa * ba);
+    let mut g_p = vec![0.0; sba * sba];
+    let mut r_p = vec![0.0; sba];
+    let mut ov_p = vec![0.0; sa * sa * ba * ba];
+    let pos = |j: usize, i: usize| j * ba + i; // block j, offset i in padded
+    for j in 0..s {
+        for i in 0..b {
+            r_p[pos(j, i)] = r[j * b + i];
+            for t in 0..s {
+                for c in 0..b {
+                    g_p[pos(j, i) * sba + pos(t, c)] = g[(j * b + i) * sb + t * b + c];
+                    ov_p[((j * sa + t) * ba + i) * ba + c] = ov[((j * s + t) * b + i) * b + c];
+                }
+            }
+        }
+    }
+    (g_p, r_p, ov_p)
+}
+
+fn pad_blocks(s: usize, b: usize, sa: usize, ba: usize, blocks: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; sa * ba];
+    for j in 0..s {
+        out[j * ba..j * ba + b].copy_from_slice(&blocks[j * b..(j + 1) * b]);
+    }
+    out
+}
+
+fn unpad_blocks(s: usize, b: usize, _sa: usize, ba: usize, padded: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; s * b];
+    for j in 0..s {
+        out[j * b..(j + 1) * b].copy_from_slice(&padded[j * ba..j * ba + b]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let (s, b, sa, ba) = (2usize, 3usize, 4usize, 8usize);
+        let blocks: Vec<f64> = (0..s * b).map(|i| i as f64).collect();
+        let p = pad_blocks(s, b, sa, ba, &blocks);
+        assert_eq!(p.len(), sa * ba);
+        assert_eq!(p[0], 0.0);
+        assert_eq!(p[ba], 3.0);
+        let u = unpad_blocks(s, b, sa, ba, &p);
+        assert_eq!(u, blocks);
+    }
+
+    #[test]
+    fn pad_solve_inputs_places_gram_blocks() {
+        let (s, b, sa, ba) = (2usize, 2usize, 2usize, 4usize);
+        let sb = s * b;
+        let g: Vec<f64> = (0..sb * sb).map(|i| (i + 1) as f64).collect();
+        let r: Vec<f64> = (0..sb).map(|i| (i + 1) as f64).collect();
+        let ov = vec![0.5; s * s * b * b];
+        let (gp, rp, ovp) = pad_solve_inputs(s, b, sa, ba, &g, &r, &ov);
+        let sba = sa * ba;
+        // G[(0,0),(0,0)] = 1 at padded (0,0)
+        assert_eq!(gp[0], 1.0);
+        // G[(1,0),(1,0)] = g[2*sb+2] at padded (ba, ba)
+        assert_eq!(gp[ba * sba + ba], g[2 * sb + 2]);
+        // padded rows are zero
+        assert_eq!(gp[2 * sba + 2], 0.0);
+        assert_eq!(rp[ba], r[2]);
+        assert_eq!(ovp[((0 * sa + 1) * ba + 1) * ba + 0], 0.5);
+    }
+}

@@ -1,0 +1,326 @@
+//! Primal block coordinate descent — Algorithm 1 (`s = 1`) and its
+//! communication-avoiding unrolling, Algorithm 2 (`s > 1`).
+//!
+//! SPMD over a 1D-block-column partition of `X ∈ R^{d×n}`: each rank holds
+//! `X_loc = X[:, lo..hi]`, the matching slices of `y` and `α = Xᵀw`, and a
+//! full replica of `w`. One outer iteration:
+//!
+//! 1. every rank draws the same `s` size-`b` row blocks (shared seed — no
+//!    communication),
+//! 2. computes its raw partial `G = Y_loc Y_locᵀ`, `r = Y_loc (y−α)_loc`
+//!    through the pluggable [`ComputeBackend`] (native Rust or the AOT
+//!    Pallas artifact via PJRT),
+//! 3. **one allreduce** of the `(sb² + sb)`-word buffer — the only
+//!    communication of the outer iteration, giving the Θ(s) latency saving,
+//! 4. solves the `s` deferred `b×b` subproblems redundantly (eq. 8),
+//! 5. applies the deferred updates: `w[I_t] += Δ_t`, `α_loc += Y_locᵀ δ`.
+
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::gram::ComputeBackend;
+use crate::linalg::cond::condition_number;
+use crate::matrix::Matrix;
+use crate::metrics::{relative_objective_error, relative_solution_error, History, IterRecord, Reference};
+use crate::sampling::{overlap_tensor_into, BlockSampler};
+use crate::solvers::common::{metered_out, objective_value, PrimalOutput, SolverOpts};
+
+/// Run BCD / CA-BCD on this rank's shard.
+///
+/// * `a_loc` — `d × n_loc` local column block of X.
+/// * `y_loc` — local slice of the labels.
+/// * `n_global` — total number of data points n.
+/// * `reference` — optional `w_opt` ground truth for error recording.
+#[allow(clippy::too_many_arguments)]
+pub fn run<C: Communicator>(
+    a_loc: &Matrix,
+    y_loc: &[f64],
+    n_global: usize,
+    opts: &SolverOpts,
+    reference: Option<&Reference>,
+    comm: &mut C,
+    backend: &mut dyn ComputeBackend,
+) -> Result<PrimalOutput> {
+    let d = a_loc.rows();
+    let n_loc = a_loc.cols();
+    opts.validate(d)?;
+    let (s, b) = (opts.s, opts.b);
+    let sb = s * b;
+    let inv_n = 1.0 / n_global as f64;
+    let lam = opts.lam;
+
+    let mut w = vec![0.0; d];
+    let mut alpha_loc = vec![0.0; n_loc];
+    let mut history = History::default();
+
+    // Scratch buffers hoisted out of the iteration loop (no allocation on
+    // the hot path; see EXPERIMENTS.md §Perf).
+    let mut buf = vec![0.0; sb * sb + sb]; // [G | r] allreduce payload
+    let mut z = vec![0.0; n_loc];
+    let mut w_blocks = vec![0.0; sb];
+    let mut gram_scaled = vec![0.0; sb * sb];
+    let mut idx_flat = vec![0usize; sb];
+    let mut overlap = vec![0.0; s * s * b * b];
+
+    let mut sampler = BlockSampler::new(d, opts.seed);
+
+    record(
+        &mut history,
+        0,
+        &w,
+        &alpha_loc,
+        y_loc,
+        n_global,
+        lam,
+        reference,
+        comm,
+    )?;
+
+    let outer = opts.outer_iters();
+    // Condition tracking is exact-per-iteration for small Gram matrices;
+    // for large sb (Figs. 4j-l / 7j-l regimes, sb up to 3200) it samples
+    // ~16 outer iterations — the reported min/median/max statistics are
+    // over those samples (estimator: power + inverse-power, linalg::cond).
+    let cond_stride = if sb <= 128 { 1 } else { outer.div_ceil(16).max(1) };
+    'outer_loop: for k in 0..outer {
+        let blocks = sampler.draw_blocks(s, b);
+        for (j, blk) in blocks.iter().enumerate() {
+            idx_flat[j * b..(j + 1) * b].copy_from_slice(
+                &blk.iter().map(|&i| i).collect::<Vec<_>>(),
+            );
+        }
+
+        // z = y − α (local slice).
+        for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
+            *zi = yi - ai;
+        }
+
+        // Raw partial Gram + residual through the backend (the L1 hot spot).
+        let (g_buf, r_buf) = buf.split_at_mut(sb * sb);
+        backend.gram_resid(a_loc, &idx_flat, &z, g_buf, r_buf)?;
+
+        // THE communication of this outer iteration.
+        comm.allreduce_sum(&mut buf)?;
+
+        if opts.track_gram_cond && k % cond_stride == 0 {
+            // Condition number of G = (1/n)·YYᵀ + λI (paper Figs. 4i–l).
+            for i in 0..sb {
+                for j in 0..sb {
+                    gram_scaled[i * sb + j] =
+                        inv_n * buf[i * sb + j] + if i == j { lam } else { 0.0 };
+                }
+            }
+            history.gram_conds.push(condition_number(&gram_scaled, sb));
+        }
+
+        // Replicated inner solve (eq. 8).
+        overlap_tensor_into(&blocks, &mut overlap);
+        for (j, blk) in blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                w_blocks[j * b + i] = w[row];
+            }
+        }
+        let (g_buf, r_buf) = buf.split_at(sb * sb);
+        let deltas =
+            backend.ca_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n)?;
+
+        // Deferred updates (eqs. 9–10).
+        for (j, blk) in blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                w[row] += deltas[j * b + i];
+            }
+        }
+        backend.alpha_update(a_loc, &idx_flat, &deltas, &mut alpha_loc)?;
+
+        let h_now = (k + 1) * s;
+        history.iters = h_now;
+        if should_record(h_now, s, opts) || k + 1 == outer {
+            record(
+                &mut history,
+                h_now,
+                &w,
+                &alpha_loc,
+                y_loc,
+                n_global,
+                lam,
+                reference,
+                comm,
+            )?;
+            if let (Some(tol), Some(_)) = (opts.tol, reference) {
+                if history.final_obj_err() <= tol {
+                    break 'outer_loop;
+                }
+            }
+        }
+    }
+
+    history.meter = *comm.meter();
+    Ok(PrimalOutput {
+        w,
+        alpha_loc,
+        history,
+    })
+}
+
+fn should_record(h_now: usize, s: usize, opts: &SolverOpts) -> bool {
+    if opts.record_every == 0 {
+        return false;
+    }
+    // Record at the first outer boundary at or past each record_every mark.
+    let re = opts.record_every.max(s);
+    h_now % ((re / s).max(1) * s) == 0
+}
+
+/// Meter-excluded metric evaluation: objective needs one scalar allreduce
+/// (‖α−y‖² is distributed), solution error is rank-local (w replicated).
+#[allow(clippy::too_many_arguments)]
+fn record<C: Communicator>(
+    history: &mut History,
+    iter: usize,
+    w: &[f64],
+    alpha_loc: &[f64],
+    y_loc: &[f64],
+    n_global: usize,
+    lam: f64,
+    reference: Option<&Reference>,
+    comm: &mut C,
+) -> Result<()> {
+    let Some(r) = reference else { return Ok(()) };
+    let resid_sq = metered_out(comm, |c| {
+        let mut part = [alpha_loc
+            .iter()
+            .zip(y_loc)
+            .map(|(a, y)| (a - y) * (a - y))
+            .sum::<f64>()];
+        c.allreduce_sum(&mut part)?;
+        Ok(part[0])
+    })?;
+    let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+    let f_alg = objective_value(resid_sq, w_norm_sq, n_global, lam);
+    history.records.push(IterRecord {
+        iter,
+        obj_err: relative_objective_error(f_alg, r.f_opt),
+        sol_err: relative_solution_error(w, &r.w_opt),
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SerialComm;
+    use crate::gram::NativeBackend;
+    use crate::matrix::{DenseMatrix, Matrix};
+
+    fn toy() -> (Matrix, Vec<f64>) {
+        // 6 features × 40 points, well-conditioned.
+        let mut data = vec![0.0; 6 * 40];
+        let mut state = 77u64;
+        for v in data.iter_mut() {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            *v = (state as f64 / u64::MAX as f64) - 0.5;
+        }
+        let x = Matrix::Dense(DenseMatrix::from_vec(6, 40, data));
+        let mut y = vec![0.0; 40];
+        x.matvec_t(&vec![1.0; 6], &mut y).unwrap();
+        (x, y)
+    }
+
+    fn solve_direct(x: &Matrix, y: &[f64], lam: f64) -> Vec<f64> {
+        // (XXᵀ/n + λI) w = Xy/n via dense Cholesky.
+        let d = x.rows();
+        let n = x.cols();
+        let idx: Vec<usize> = (0..d).collect();
+        let mut g = vec![0.0; d * d];
+        x.sampled_gram(&idx, &mut g).unwrap();
+        for i in 0..d {
+            for j in 0..d {
+                g[i * d + j] /= n as f64;
+            }
+            g[i * d + i] += lam;
+        }
+        let mut rhs = vec![0.0; d];
+        x.matvec(y, &mut rhs).unwrap();
+        for v in rhs.iter_mut() {
+            *v /= n as f64;
+        }
+        crate::linalg::chol_solve(&g, d, &mut rhs).unwrap();
+        rhs
+    }
+
+    #[test]
+    fn bcd_converges_to_ridge_solution() {
+        let (x, y) = toy();
+        let lam = 0.05;
+        let w_opt = solve_direct(&x, &y, lam);
+        let opts = SolverOpts {
+            b: 3,
+            s: 1,
+            lam,
+            iters: 4000,
+            seed: 1,
+            record_every: 0,
+            ..Default::default()
+        };
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let out = run(&x, &y, 40, &opts, None, &mut comm, &mut be).unwrap();
+        let err = relative_solution_error(&out.w, &w_opt);
+        assert!(err < 1e-8, "solution error {err}");
+    }
+
+    #[test]
+    fn ca_bcd_matches_bcd_trajectory() {
+        // The paper's exact-arithmetic equivalence claim, at fp tolerance.
+        let (x, y) = toy();
+        let lam = 0.05;
+        let base_opts = SolverOpts {
+            b: 2,
+            s: 1,
+            lam,
+            iters: 60,
+            seed: 9,
+            record_every: 0,
+            ..Default::default()
+        };
+        let mut ca_opts = base_opts.clone();
+        ca_opts.s = 5;
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let w1 = run(&x, &y, 40, &base_opts, None, &mut comm, &mut be)
+            .unwrap()
+            .w;
+        let w2 = run(&x, &y, 40, &ca_opts, None, &mut comm, &mut be)
+            .unwrap()
+            .w;
+        for (a, b) in w1.iter().zip(&w2) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn allreduce_count_drops_by_s() {
+        let (x, y) = toy();
+        let mk = |s: usize| SolverOpts {
+            b: 2,
+            s,
+            lam: 0.05,
+            iters: 60,
+            seed: 3,
+            record_every: 0,
+            ..Default::default()
+        };
+        let mut be = NativeBackend::new();
+        let mut c1 = SerialComm::new();
+        let h1 = run(&x, &y, 40, &mk(1), None, &mut c1, &mut be)
+            .unwrap()
+            .history;
+        let mut c5 = SerialComm::new();
+        let h5 = run(&x, &y, 40, &mk(5), None, &mut c5, &mut be)
+            .unwrap()
+            .history;
+        assert_eq!(h1.meter.allreduces, 60);
+        assert_eq!(h5.meter.allreduces, 12);
+    }
+}

@@ -1,0 +1,267 @@
+//! Distributed conjugate gradients on the regularized normal equations
+//! `(XXᵀ/n + λI)·w = X·y/n` — the paper's Krylov baseline (Table 2,
+//! Figure 1) and its ground-truth source (`w_opt` at tol 1e-15, §5.1).
+//!
+//! 1D-block-column layout: every d-vector is replicated, every n-vector is
+//! partitioned. One iteration costs exactly one allreduce (the matvec
+//! partial sum — inner products of replicated vectors are rank-local),
+//! matching the paper's "CG communicates a single vector per iteration".
+
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::matrix::Matrix;
+use crate::metrics::{
+    relative_objective_error, relative_solution_error, History, IterRecord, Reference,
+};
+use crate::solvers::common::{metered_out, objective_value};
+
+/// CG options.
+#[derive(Clone, Debug)]
+pub struct CgOpts {
+    pub lam: f64,
+    pub max_iters: usize,
+    /// Stop when ‖residual‖/‖rhs‖ ≤ tol.
+    pub tol: f64,
+    pub record_every: usize,
+}
+
+impl Default for CgOpts {
+    fn default() -> Self {
+        CgOpts {
+            lam: 1e-3,
+            max_iters: 1000,
+            tol: 1e-12,
+            record_every: 0,
+        }
+    }
+}
+
+/// CG output: replicated solution + iteration count + trajectory.
+#[derive(Clone, Debug)]
+pub struct CgOutput {
+    pub w: Vec<f64>,
+    pub iters: usize,
+    pub history: History,
+}
+
+/// Distributed matvec `u = (X_loc·X_locᵀ v)` partial, allreduced, then
+/// scaled: `u = XXᵀv/n + λv`.
+fn apply<C: Communicator>(
+    a_loc: &Matrix,
+    v: &[f64],
+    lam: f64,
+    n: usize,
+    tmp_n: &mut [f64],
+    out: &mut Vec<f64>,
+    comm: &mut C,
+) -> Result<()> {
+    a_loc.matvec_t(v, tmp_n)?;
+    a_loc.matvec(tmp_n, out)?;
+    comm.allreduce_sum(out)?;
+    let inv_n = 1.0 / n as f64;
+    for (o, &vi) in out.iter_mut().zip(v) {
+        *o = *o * inv_n + lam * vi;
+    }
+    Ok(())
+}
+
+/// Run CG on this rank's column shard of X.
+pub fn run<C: Communicator>(
+    a_loc: &Matrix,
+    y_loc: &[f64],
+    n_global: usize,
+    opts: &CgOpts,
+    reference: Option<&Reference>,
+    comm: &mut C,
+) -> Result<CgOutput> {
+    let d = a_loc.rows();
+    let n_loc = a_loc.cols();
+    let mut history = History::default();
+
+    // rhs = X y / n (one allreduce).
+    let mut rhs = vec![0.0; d];
+    a_loc.matvec(y_loc, &mut rhs)?;
+    comm.allreduce_sum(&mut rhs)?;
+    let inv_n = 1.0 / n_global as f64;
+    for v in rhs.iter_mut() {
+        *v *= inv_n;
+    }
+    let rhs_norm = rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
+
+    let mut w = vec![0.0; d];
+    let mut r = rhs.clone();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; d];
+    let mut tmp_n = vec![0.0; n_loc];
+    let mut rs_old: f64 = r.iter().map(|v| v * v).sum();
+
+    record(&mut history, 0, &w, a_loc, y_loc, n_global, opts.lam, reference, comm)?;
+
+    let mut iters = 0;
+    for it in 1..=opts.max_iters {
+        iters = it;
+        apply(a_loc, &p, opts.lam, n_global, &mut tmp_n, &mut ap, comm)?;
+        let pap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        if pap <= 0.0 {
+            break; // numerically singular direction — SPD exhausted
+        }
+        let alpha = rs_old / pap;
+        for i in 0..d {
+            w[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new: f64 = r.iter().map(|v| v * v).sum();
+        if opts.record_every > 0 && it % opts.record_every == 0 {
+            record(&mut history, it, &w, a_loc, y_loc, n_global, opts.lam, reference, comm)?;
+        }
+        if rs_new.sqrt() <= opts.tol * rhs_norm.max(1e-300) {
+            break;
+        }
+        let beta = rs_new / rs_old;
+        for i in 0..d {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+    }
+    record(&mut history, iters, &w, a_loc, y_loc, n_global, opts.lam, reference, comm)?;
+    history.iters = iters;
+    history.meter = *comm.meter();
+    Ok(CgOutput { w, iters, history })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record<C: Communicator>(
+    history: &mut History,
+    iter: usize,
+    w: &[f64],
+    a_loc: &Matrix,
+    y_loc: &[f64],
+    n_global: usize,
+    lam: f64,
+    reference: Option<&Reference>,
+    comm: &mut C,
+) -> Result<()> {
+    let Some(rf) = reference else { return Ok(()) };
+    let resid_sq = metered_out(comm, |c| {
+        let n_loc = a_loc.cols();
+        let mut xtw = vec![0.0; n_loc];
+        a_loc.matvec_t(w, &mut xtw)?;
+        let mut part = [xtw
+            .iter()
+            .zip(y_loc)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()];
+        c.allreduce_sum(&mut part)?;
+        Ok(part[0])
+    })?;
+    let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+    let f_alg = objective_value(resid_sq, w_norm_sq, n_global, lam);
+    history.records.push(IterRecord {
+        iter,
+        obj_err: relative_objective_error(f_alg, rf.f_opt),
+        sol_err: relative_solution_error(w, &rf.w_opt),
+    });
+    Ok(())
+}
+
+/// Compute the paper's ground truth on this rank: CG at tol 1e-15, plus the
+/// optimum's objective value.
+pub fn compute_reference<C: Communicator>(
+    a_loc: &Matrix,
+    y_loc: &[f64],
+    n_global: usize,
+    lam: f64,
+    comm: &mut C,
+) -> Result<Reference> {
+    let opts = CgOpts {
+        lam,
+        max_iters: 50_000,
+        tol: 1e-15,
+        record_every: 0,
+    };
+    let out = metered_out(comm, |c| run(a_loc, y_loc, n_global, &opts, None, c))?;
+    // f_opt — one scalar allreduce.
+    let resid_sq = metered_out(comm, |c| {
+        let mut xtw = vec![0.0; a_loc.cols()];
+        a_loc.matvec_t(&out.w, &mut xtw)?;
+        let mut part = [xtw
+            .iter()
+            .zip(y_loc)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()];
+        c.allreduce_sum(&mut part)?;
+        Ok(part[0])
+    })?;
+    let w_norm_sq: f64 = out.w.iter().map(|v| v * v).sum();
+    Ok(Reference {
+        f_opt: objective_value(resid_sq, w_norm_sq, n_global, lam),
+        w_opt: out.w,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SerialComm;
+    use crate::matrix::{DenseMatrix, Matrix};
+
+    fn toy() -> (Matrix, Vec<f64>) {
+        let mut data = vec![0.0; 8 * 50];
+        let mut state = 5u64;
+        for v in data.iter_mut() {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            *v = (state as f64 / u64::MAX as f64) - 0.5;
+        }
+        let x = Matrix::Dense(DenseMatrix::from_vec(8, 50, data));
+        let mut y = vec![0.0; 50];
+        x.matvec_t(&vec![1.0; 8], &mut y).unwrap();
+        (x, y)
+    }
+
+    #[test]
+    fn cg_solves_normal_equations() {
+        let (x, y) = toy();
+        let lam = 0.01;
+        let mut comm = SerialComm::new();
+        let out = run(
+            &x,
+            &y,
+            50,
+            &CgOpts {
+                lam,
+                max_iters: 500,
+                tol: 1e-14,
+                record_every: 0,
+            },
+            None,
+            &mut comm,
+        )
+        .unwrap();
+        // Verify gradient ≈ 0: (XXᵀ/n + λI)w − Xy/n.
+        let n = 50.0;
+        let mut xtw = vec![0.0; 50];
+        x.matvec_t(&out.w, &mut xtw).unwrap();
+        let mut xxw = vec![0.0; 8];
+        x.matvec(&xtw, &mut xxw).unwrap();
+        let mut xy = vec![0.0; 8];
+        x.matvec(&y, &mut xy).unwrap();
+        for i in 0..8 {
+            let g = xxw[i] / n + lam * out.w[i] - xy[i] / n;
+            assert!(g.abs() < 1e-10, "grad {i}: {g}");
+        }
+        assert!(out.iters <= 9, "CG on 8-dim SPD should finish fast");
+    }
+
+    #[test]
+    fn reference_is_optimum() {
+        let (x, y) = toy();
+        let mut comm = SerialComm::new();
+        let rf = compute_reference(&x, &y, 50, 0.01, &mut comm).unwrap();
+        assert_eq!(rf.w_opt.len(), 8);
+        assert!(rf.f_opt > 0.0);
+        // Meter unpolluted by reference computation.
+        assert_eq!(comm.meter().allreduces, 0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Shared solver plumbing: options, outputs, and the meter-excluded metric
+//! evaluation helpers.
+
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::metrics::History;
+
+/// Options shared by all four coordinate-descent variants.
+#[derive(Clone, Debug)]
+pub struct SolverOpts {
+    /// Block size (b for primal, b' for dual).
+    pub b: usize,
+    /// Loop-blocking factor; 1 = the classical algorithm.
+    pub s: usize,
+    /// Regularization λ.
+    pub lam: f64,
+    /// Total inner iterations H (rounded down to a multiple of `s`).
+    pub iters: usize,
+    /// Shared sampling seed (identical on every rank — §3.1).
+    pub seed: u64,
+    /// Record convergence metrics every this many inner iterations
+    /// (0 = record only at start/end).
+    pub record_every: usize,
+    /// Track the Gram-matrix condition number each outer iteration
+    /// (Figures 4/7; costs an sb×sb Jacobi eigensolve per record).
+    pub track_gram_cond: bool,
+    /// Early stop once |objective error| ≤ tol (needs a reference).
+    pub tol: Option<f64>,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        SolverOpts {
+            b: 4,
+            s: 1,
+            lam: 1e-3,
+            iters: 1000,
+            seed: 0,
+            record_every: 10,
+            track_gram_cond: false,
+            tol: None,
+        }
+    }
+}
+
+impl SolverOpts {
+    pub fn validate(&self, sample_dim: usize) -> Result<()> {
+        use crate::error::Error;
+        if self.b == 0 || self.s == 0 {
+            return Err(Error::InvalidArg("b and s must be ≥ 1".into()));
+        }
+        if self.b > sample_dim {
+            return Err(Error::InvalidArg(format!(
+                "block size {} > sampled dimension {}",
+                self.b, sample_dim
+            )));
+        }
+        if self.lam <= 0.0 {
+            return Err(Error::InvalidArg("λ must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Number of outer iterations (each costing one allreduce).
+    pub fn outer_iters(&self) -> usize {
+        self.iters / self.s
+    }
+}
+
+/// Output of the primal solvers: replicated `w`, this rank's α slice.
+#[derive(Clone, Debug)]
+pub struct PrimalOutput {
+    pub w: Vec<f64>,
+    pub alpha_loc: Vec<f64>,
+    pub history: History,
+}
+
+/// Output of the dual solvers: this rank's `w` slice, replicated α, and —
+/// gathered once at the end for convenience — the full `w`.
+#[derive(Clone, Debug)]
+pub struct DualOutput {
+    pub w_loc: Vec<f64>,
+    pub w_full: Vec<f64>,
+    pub alpha: Vec<f64>,
+    pub history: History,
+}
+
+/// Run `f` (metric-evaluation communication) without polluting the solver's
+/// cost meter: snapshot, run, restore.
+pub fn metered_out<C: Communicator, T>(
+    comm: &mut C,
+    f: impl FnOnce(&mut C) -> Result<T>,
+) -> Result<T> {
+    let snap = *comm.meter();
+    let out = f(comm);
+    *comm.meter_mut() = snap;
+    out
+}
+
+/// The primal objective `f(X,w,y) = 1/(2n)·‖Xᵀw−y‖² + λ/2·‖w‖²` from its
+/// two building blocks.
+pub fn objective_value(residual_sq: f64, w_norm_sq: f64, n: usize, lam: f64) -> f64 {
+    residual_sq / (2.0 * n as f64) + 0.5 * lam * w_norm_sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Communicator, SerialComm};
+
+    #[test]
+    fn opts_validation() {
+        let mut o = SolverOpts::default();
+        assert!(o.validate(100).is_ok());
+        o.b = 0;
+        assert!(o.validate(100).is_err());
+        o.b = 200;
+        assert!(o.validate(100).is_err());
+        o.b = 4;
+        o.lam = 0.0;
+        assert!(o.validate(100).is_err());
+    }
+
+    #[test]
+    fn outer_iters_floor() {
+        let o = SolverOpts {
+            iters: 103,
+            s: 10,
+            ..Default::default()
+        };
+        assert_eq!(o.outer_iters(), 10);
+    }
+
+    #[test]
+    fn metered_out_restores() {
+        let mut c = SerialComm::new();
+        let mut buf = vec![1.0];
+        c.allreduce_sum(&mut buf).unwrap();
+        let before = *c.meter();
+        metered_out(&mut c, |c| {
+            let mut b = vec![2.0];
+            c.allreduce_sum(&mut b)?;
+            c.allreduce_sum(&mut b)?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(*c.meter(), before);
+    }
+
+    #[test]
+    fn objective_composition() {
+        // n=4, λ=0.5, ‖r‖²=8, ‖w‖²=2 → 8/8 + 0.5·0.5·2 = 1.5
+        assert_eq!(objective_value(8.0, 2.0, 4, 0.5), 1.5);
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's algorithms, SPMD over a [`crate::comm::Communicator`]:
+//!
+//! * [`bcd`] — Algorithms 1 & 2 (BCD / CA-BCD): one implementation
+//!   parameterized by the loop-blocking factor `s` (`s = 1` ≡ Algorithm 1;
+//!   the CA≡classical trajectory-equality test exercises `s > 1` against
+//!   `s = 1`).
+//! * [`bdcd`] — Algorithms 3 & 4 (BDCD / CA-BDCD), same parameterization.
+//! * [`cg`] — conjugate gradients on the regularized normal equations
+//!   (the paper's Krylov baseline and its ground-truth `w_opt` source).
+//! * [`tsqr_ls`] — the TSQR direct baseline (§2.1 survey, Figure 1).
+//! * [`bcd_row`] — BCD under the mismatched 1D-block-row layout with the
+//!   Theorem-4 all-to-all conversion (and measured Lemma-3 loads).
+//! * [`cocoa`] — the CoCoA-style local-solve + average baseline the paper
+//!   contrasts against (§1): fewer messages, but P-dependent convergence.
+
+pub mod bcd;
+pub mod bcd_row;
+pub mod bdcd;
+pub mod cg;
+pub mod cocoa;
+pub mod common;
+pub mod tsqr_ls;
+
+pub use common::{PrimalOutput, DualOutput, SolverOpts};

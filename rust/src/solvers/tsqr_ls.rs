@@ -1,0 +1,94 @@
+//! TSQR direct least-squares baseline at the solver interface.
+//!
+//! Wraps [`crate::linalg::tsqr`] for the §2.1 survey comparison (Figure 1,
+//! Table 2). TSQR is a single-pass direct method: its "convergence curve"
+//! is flat until the one reduction completes, then drops to machine
+//! precision — we report exactly that shape, plus the real solve.
+//!
+//! The in-process tree (P leaf blocks, ⌈log₂P⌉ combine levels) is executed
+//! for real; the distributed cost is charged by the cost model
+//! ([`crate::costmodel::theory::Method::Tsqr`]). Only sensible for moderate
+//! d — exactly the regime the paper runs it in.
+
+use crate::error::Result;
+use crate::linalg::tsqr::tsqr_solve_ls;
+use crate::matrix::Matrix;
+use crate::metrics::{relative_objective_error, relative_solution_error, History, IterRecord, Reference};
+use crate::solvers::common::objective_value;
+
+/// Output of the TSQR baseline.
+#[derive(Clone, Debug)]
+pub struct TsqrOutput {
+    pub w: Vec<f64>,
+    /// Tree combine levels executed (= the single-allreduce latency).
+    pub combine_levels: usize,
+    pub history: History,
+}
+
+/// Solve the regularized LS problem directly over `p_blocks` leaf blocks.
+pub fn run(
+    x: &Matrix,
+    y: &[f64],
+    lam: f64,
+    p_blocks: usize,
+    reference: Option<&Reference>,
+) -> Result<TsqrOutput> {
+    let n = x.cols();
+    let (w, combine_levels) = tsqr_solve_ls(x, y, lam, p_blocks)?;
+    let mut history = History::default();
+    if let Some(rf) = reference {
+        let mut xtw = vec![0.0; n];
+        x.matvec_t(&w, &mut xtw)?;
+        let resid_sq: f64 = xtw.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+        let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+        let f_alg = objective_value(resid_sq, w_norm_sq, n, lam);
+        // Single-pass: error is "1" until the pass completes, then done.
+        history.records.push(IterRecord {
+            iter: 0,
+            obj_err: 1.0,
+            sol_err: 1.0,
+        });
+        history.records.push(IterRecord {
+            iter: 1,
+            obj_err: relative_objective_error(f_alg, rf.f_opt),
+            sol_err: relative_solution_error(&w, &rf.w_opt),
+        });
+    }
+    history.iters = 1;
+    Ok(TsqrOutput {
+        w,
+        combine_levels,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SerialComm;
+    use crate::matrix::{DenseMatrix, Matrix};
+    use crate::solvers::cg;
+
+    #[test]
+    fn tsqr_matches_cg_reference() {
+        let mut data = vec![0.0; 7 * 60];
+        let mut state = 31u64;
+        for v in data.iter_mut() {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            *v = (state as f64 / u64::MAX as f64) - 0.5;
+        }
+        let x = Matrix::Dense(DenseMatrix::from_vec(7, 60, data));
+        let mut y = vec![0.0; 60];
+        x.matvec_t(&vec![2.0; 7], &mut y).unwrap();
+        let lam = 0.05;
+        let mut comm = SerialComm::new();
+        let rf = cg::compute_reference(&x, &y, 60, lam, &mut comm).unwrap();
+        let out = run(&x, &y, lam, 8, Some(&rf)).unwrap();
+        // Direct solve hits machine precision in one pass.
+        let final_err = out.history.records.last().unwrap().sol_err;
+        assert!(final_err < 1e-10, "sol err {final_err}");
+        assert!(out.combine_levels >= 3);
+    }
+}

@@ -1,0 +1,64 @@
+//! Minimal timing harness for the `benches/` binaries (criterion is not in
+//! the offline vendor set). Median-of-runs wall-clock with warmup;
+//! black-box via `std::hint::black_box`.
+
+use std::time::Instant;
+
+/// Run `f` `runs` times after `warmup` unmeasured runs; returns
+/// (median, min, max) seconds per run.
+pub fn time_runs<T>(warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        samples[samples.len() / 2],
+        samples[0],
+        *samples.last().unwrap(),
+    )
+}
+
+/// Pretty time formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_ordered() {
+        let (med, min, max) = time_runs(1, 5, || {
+            let mut s = 0.0f64;
+            for i in 0..1000 {
+                s += (i as f64).sqrt();
+            }
+            s
+        });
+        assert!(min <= med && med <= max);
+        assert!(min > 0.0);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

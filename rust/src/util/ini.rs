@@ -1,0 +1,148 @@
+//! Minimal INI-style config parser: `[section]` headers and `key = value`
+//! pairs, `#`/`;` comments. Replaces the toml crate for experiment configs
+//! and the artifact manifest.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed file: section → (key → value). Keys before any `[section]` land
+/// in the "" section.
+pub type Ini = BTreeMap<String, BTreeMap<String, String>>;
+
+pub fn parse(text: &str) -> Result<Ini> {
+    let mut out: Ini = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| {
+                Error::Config(format!("line {}: unterminated section header", lineno + 1))
+            })?;
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+        } else if let Some((k, v)) = line.split_once('=') {
+            let v = v.trim().trim_matches('"');
+            out.entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.to_string());
+        } else {
+            return Err(Error::Config(format!(
+                "line {}: expected `key = value` or `[section]`, got {line:?}",
+                lineno + 1
+            )));
+        }
+    }
+    Ok(out)
+}
+
+/// Typed getters over one section.
+pub struct Section<'a> {
+    pub name: &'a str,
+    map: Option<&'a BTreeMap<String, String>>,
+}
+
+impl<'a> Section<'a> {
+    pub fn of(ini: &'a Ini, name: &'a str) -> Section<'a> {
+        Section {
+            name,
+            map: ini.get(name),
+        }
+    }
+
+    pub fn str(&self, key: &str) -> Option<&'a str> {
+        self.map.and_then(|m| m.get(key)).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&'a str> {
+        self.str(key).ok_or_else(|| {
+            Error::Config(format!("[{}] missing required key `{key}`", self.name))
+        })
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                Error::Config(format!("[{}] {key}: bad integer {v:?}: {e}", self.name))
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                Error::Config(format!("[{}] {key}: bad integer {v:?}: {e}", self.name))
+            }),
+        }
+    }
+
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        match self.str(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|e| {
+                Error::Config(format!("[{}] {key}: bad float {v:?}: {e}", self.name))
+            }),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.str(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(Error::Config(format!(
+                "[{}] {key}: bad bool {v:?}",
+                self.name
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let ini = parse(
+            r#"
+            # comment
+            [dataset]
+            kind = synthetic
+            name = "abalone"
+
+            [solver]
+            b = 8
+            lam = 4.3e-2
+            track = true
+            "#,
+        )
+        .unwrap();
+        let ds = Section::of(&ini, "dataset");
+        assert_eq!(ds.require("kind").unwrap(), "synthetic");
+        assert_eq!(ds.str("name"), Some("abalone"));
+        let s = Section::of(&ini, "solver");
+        assert_eq!(s.usize_or("b", 1).unwrap(), 8);
+        assert_eq!(s.f64_opt("lam").unwrap(), Some(4.3e-2));
+        assert!(s.bool_or("track", false).unwrap());
+        assert_eq!(s.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("not a kv line").is_err());
+        assert!(parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn missing_required_key_errors() {
+        let ini = parse("[a]\nx = 1\n").unwrap();
+        assert!(Section::of(&ini, "a").require("y").is_err());
+        assert!(Section::of(&ini, "b").require("x").is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal JSON *emission* (reports, histories). No parser — everything the
+//! Rust side reads is INI/TSV (see [`super::ini`] and the artifact
+//! manifest); JSON is only written for downstream tooling.
+
+/// Incremental JSON object/array writer.
+#[derive(Default)]
+pub struct JsonWriter {
+    buf: String,
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+
+    pub fn raw(&mut self, s: &str) -> &mut Self {
+        self.buf.push_str(s);
+        self
+    }
+
+    pub fn string(&mut self, s: &str) -> &mut Self {
+        self.buf.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                '\r' => self.buf.push_str("\\r"),
+                '\t' => self.buf.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    self.buf.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v}"));
+        } else {
+            // JSON has no Infinity/NaN; emit null like serde_json does.
+            self.buf.push_str("null");
+        }
+        self
+    }
+}
+
+/// Format a list of `(key, json-value)` pairs as an object.
+pub fn object(fields: &[(&str, String)]) -> String {
+    let mut w = JsonWriter::new();
+    w.raw("{");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        if i > 0 {
+            w.raw(",");
+        }
+        w.string(k);
+        w.raw(":");
+        w.raw(v);
+    }
+    w.raw("}");
+    w.finish()
+}
+
+pub fn string(s: &str) -> String {
+    let mut w = JsonWriter::new();
+    w.string(s);
+    w.finish()
+}
+
+pub fn num(v: f64) -> String {
+    let mut w = JsonWriter::new();
+    w.f64(v);
+    w.finish()
+}
+
+pub fn array<I: IntoIterator<Item = String>>(items: I) -> String {
+    let mut out = String::from("[");
+    for (i, it) in items.into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&it);
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_strings() {
+        assert_eq!(string("a\"b\\c\nd"), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn object_and_array() {
+        let o = object(&[
+            ("x", num(1.5)),
+            ("name", string("hi")),
+            ("xs", array(vec![num(1.0), num(2.0)])),
+        ]);
+        assert_eq!(o, r#"{"x":1.5,"name":"hi","xs":[1,2]}"#);
+    }
+
+    #[test]
+    fn non_finite_is_null() {
+        assert_eq!(num(f64::INFINITY), "null");
+        assert_eq!(num(f64::NAN), "null");
+    }
+}

@@ -1,0 +1,16 @@
+//! Dependency-free utilities: deterministic PRNG, INI-style key=value
+//! config parsing, JSON emission, and a micro property-testing harness.
+//!
+//! This repo builds fully offline against a minimal vendored crate set
+//! (xla/anyhow/thiserror), so the usual ecosystem crates (rand, serde,
+//! clap, proptest, criterion) are re-implemented here at the scale this
+//! project needs.
+
+pub mod ini;
+pub mod json;
+pub mod proptest;
+pub mod bench;
+pub mod rng;
+pub mod tmp;
+
+pub use rng::Rng64;

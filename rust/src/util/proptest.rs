@@ -1,0 +1,155 @@
+//! Micro property-testing harness (proptest is unavailable offline).
+//!
+//! `check(cases, |gen| ...)` runs a property against `cases` randomized
+//! inputs drawn through a [`Gen`]; on failure it reports the failing seed so
+//! the case can be replayed deterministically (`CABCD_PROPTEST_SEED=<seed>`).
+//! No shrinking — failing seeds are small enough to debug directly.
+
+use super::rng::Rng64;
+
+/// Randomized-input source handed to properties.
+pub struct Gen {
+    rng: Rng64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng64::seed_from_u64(seed),
+            seed,
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range(lo, hi)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.gen_f64()
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.gen_normal()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.normal()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Distinct indices from [0, dim).
+    pub fn distinct(&mut self, count: usize, dim: usize) -> Vec<usize> {
+        assert!(count <= dim);
+        let mut pool: Vec<usize> = (0..dim).collect();
+        let mut out = Vec::with_capacity(count);
+        for k in 0..count {
+            let j = self.usize_in(k, dim);
+            pool.swap(k, j);
+            out.push(pool[k]);
+        }
+        out
+    }
+}
+
+/// Run `prop` on `cases` random inputs; panic with the failing seed on the
+/// first failure (Err or panic message returned as Err).
+pub fn check<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    // Replay hook.
+    if let Ok(s) = std::env::var("CABCD_PROPTEST_SEED") {
+        let seed: u64 = s.parse().expect("CABCD_PROPTEST_SEED must be u64");
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = prop(&mut gen) {
+            panic!("property failed at replayed seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // Derived but well-spread seeds.
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = prop(&mut gen) {
+            panic!(
+                "property failed at case {case} (replay: CABCD_PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Helper assertion macros for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {a} differs from {} = {b} by {} (tol {})",
+                stringify!($a),
+                stringify!($b),
+                (a - b).abs(),
+                $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(32, |g| {
+            count += 1;
+            let v = g.usize_in(0, 10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(8, |g| {
+            if g.usize_in(0, 4) == 2 {
+                Err("hit the bad value".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn distinct_is_distinct() {
+        check(16, |g| {
+            let dim = g.usize_in(5, 50);
+            let count = g.usize_in(1, dim + 1).min(dim);
+            let idx = g.distinct(count, dim);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            prop_assert!(sorted.len() == count, "duplicates in {idx:?}");
+            Ok(())
+        });
+    }
+}

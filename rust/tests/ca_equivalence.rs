@@ -1,0 +1,163 @@
+//! The paper's central claim (§3): the communication-avoiding variants
+//! reproduce the classical iterations **exactly** (in exact arithmetic) —
+//! unrolling the recurrence changes the communication pattern, not the
+//! math. Here: trajectory equality to fp tolerance over randomized
+//! problems, for both the primal and the dual method.
+
+use cabcd::comm::SerialComm;
+use cabcd::gram::NativeBackend;
+use cabcd::matrix::{DenseMatrix, Matrix};
+use cabcd::solvers::{bcd, bdcd, SolverOpts};
+use cabcd::util::proptest::{check, Gen};
+use cabcd::{prop_assert, prop_assert_close};
+
+fn random_problem(g: &mut Gen, d: usize, n: usize) -> (Matrix, Vec<f64>) {
+    let x = Matrix::Dense(DenseMatrix::from_vec(d, n, g.vec_normal(d * n)));
+    let mut y = vec![0.0; n];
+    let w_star = g.vec_normal(d);
+    x.matvec_t(&w_star, &mut y).unwrap();
+    for v in y.iter_mut() {
+        *v += 0.05 * g.normal();
+    }
+    (x, y)
+}
+
+#[test]
+fn prop_ca_bcd_equals_bcd_for_random_s_and_b() {
+    check(12, |g| {
+        let d = g.usize_in(6, 20);
+        let n = g.usize_in(24, 80);
+        let (x, y) = random_problem(g, d, n);
+        let b = g.usize_in(1, (d / 2).max(2));
+        let s = g.usize_in(2, 7);
+        let outer = g.usize_in(3, 9);
+        let lam = 0.02 + g.f64_unit();
+        let seed = g.seed ^ 0xABCD;
+        let total_inner = outer * s; // SAME inner-iteration count for both
+        let mk = |s: usize| SolverOpts {
+            b,
+            s,
+            lam,
+            iters: total_inner,
+            seed,
+            record_every: 0,
+            track_gram_cond: false,
+            tol: None,
+        };
+        let mut be = NativeBackend::new();
+        let mut c = SerialComm::new();
+        let w1 = bcd::run(&x, &y, n, &mk(1), None, &mut c, &mut be)
+            .map_err(|e| e.to_string())?
+            .w;
+        let ws = bcd::run(&x, &y, n, &mk(s), None, &mut c, &mut be)
+            .map_err(|e| e.to_string())?
+            .w;
+        let scale: f64 = w1.iter().map(|v| v.abs()).fold(1e-12, f64::max);
+        for (i, (a, bv)) in w1.iter().zip(&ws).enumerate() {
+            prop_assert!(
+                (a - bv).abs() <= 1e-8 * scale,
+                "w[{i}]: s=1 {a} vs s={s} {bv} (b={b}, d={d}, n={n}, λ={lam})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ca_bdcd_equals_bdcd_for_random_s_and_b() {
+    check(12, |g| {
+        let d = g.usize_in(5, 16);
+        let n = g.usize_in(20, 60);
+        let (x, y) = random_problem(g, d, n);
+        let a = x.transpose();
+        let b = g.usize_in(1, (n / 4).max(2));
+        let s = g.usize_in(2, 6);
+        let outer = g.usize_in(3, 8);
+        let lam = 0.05 + g.f64_unit();
+        let seed = g.seed ^ 0x1234;
+        let total_inner = outer * s;
+        let mk = |s: usize| SolverOpts {
+            b,
+            s,
+            lam,
+            iters: total_inner,
+            seed,
+            record_every: 0,
+            track_gram_cond: false,
+            tol: None,
+        };
+        let mut be = NativeBackend::new();
+        let mut c = SerialComm::new();
+        let w1 = bdcd::run(&a, &y, d, 0, &mk(1), None, &mut c, &mut be)
+            .map_err(|e| e.to_string())?
+            .w_full;
+        let ws = bdcd::run(&a, &y, d, 0, &mk(s), None, &mut c, &mut be)
+            .map_err(|e| e.to_string())?
+            .w_full;
+        let scale: f64 = w1.iter().map(|v| v.abs()).fold(1e-12, f64::max);
+        for (i, (p, q)) in w1.iter().zip(&ws).enumerate() {
+            prop_assert!(
+                (p - q).abs() <= 1e-8 * scale,
+                "w[{i}]: s=1 {p} vs s={s} {q} (b'={b}, d={d}, n={n})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_duplicate_coordinates_across_inner_blocks_are_exact() {
+    // Tiny sample dimension forces heavy overlap between the s inner
+    // blocks — the Σ I_jᵀI_t cross terms must keep CA exact anyway.
+    check(16, |g| {
+        let d = g.usize_in(3, 5); // b=2, s=4 over d≤5 → guaranteed overlaps
+        let n = 40;
+        let (x, y) = random_problem(g, d, n);
+        let mk = |s: usize| SolverOpts {
+            b: 2,
+            s,
+            lam: 0.3,
+            iters: 12,
+            seed: g.seed,
+            record_every: 0,
+            track_gram_cond: false,
+            tol: None,
+        };
+        let mut be = NativeBackend::new();
+        let mut c = SerialComm::new();
+        let w1 = bcd::run(&x, &y, n, &mk(1), None, &mut c, &mut be)
+            .map_err(|e| e.to_string())?
+            .w;
+        let w4 = bcd::run(&x, &y, n, &mk(4), None, &mut c, &mut be)
+            .map_err(|e| e.to_string())?
+            .w;
+        for (a, b) in w1.iter().zip(&w4) {
+            prop_assert_close!(*a, *b, 1e-9);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn allreduce_counts_scale_as_h_over_s() {
+    // Theorem 6's L term, measured: CA-BCD with factor s must enter
+    // exactly H/s allreduces where BCD enters H.
+    let mut g = Gen::new(99);
+    let (x, y) = random_problem(&mut g, 10, 50);
+    for s in [1usize, 2, 5, 10] {
+        let opts = SolverOpts {
+            b: 3,
+            s,
+            lam: 0.1,
+            iters: 40,
+            seed: 5,
+            record_every: 0,
+            track_gram_cond: false,
+            tol: None,
+        };
+        let mut be = NativeBackend::new();
+        let mut c = SerialComm::new();
+        let out = bcd::run(&x, &y, 50, &opts, None, &mut c, &mut be).unwrap();
+        assert_eq!(out.history.meter.allreduces as usize, 40 / s, "s={s}");
+    }
+}

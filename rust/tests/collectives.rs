@@ -1,0 +1,197 @@
+//! Property tests of the communicator substrate: the collectives must be
+//! exact (allreduce ≡ serial sum, all-to-all ≡ transpose of payload
+//! matrix, broadcast ≡ replication) for arbitrary rank counts, payload
+//! sizes, and roots — and their measured message counts must stay within
+//! the binomial-tree bounds the cost model charges.
+
+use cabcd::comm::cost::CostMeter;
+use cabcd::comm::thread::run_spmd;
+use cabcd::comm::Communicator;
+use cabcd::prop_assert;
+use cabcd::util::proptest::{check, Gen};
+
+#[test]
+fn prop_allreduce_equals_serial_sum() {
+    check(20, |g| {
+        let p = g.usize_in(1, 9);
+        let len = g.usize_in(1, 300);
+        // Per-rank payloads derived deterministically from (seed, rank).
+        let seed = g.seed;
+        let results = run_spmd(p, move |rank, comm| {
+            let mut gen = Gen::new(seed ^ (rank as u64).wrapping_mul(0x9E37));
+            let buf = gen.vec_normal(len);
+            let mut reduced = buf.clone();
+            comm.allreduce_sum(&mut reduced).unwrap();
+            (buf, reduced)
+        });
+        let mut expect = vec![0.0; len];
+        for (buf, _) in &results {
+            for (e, v) in expect.iter_mut().zip(buf) {
+                *e += v;
+            }
+        }
+        for (rank, (_, reduced)) in results.iter().enumerate() {
+            for (i, (r, e)) in reduced.iter().zip(&expect).enumerate() {
+                prop_assert!(
+                    (r - e).abs() <= 1e-12 * e.abs().max(1.0),
+                    "p={p} rank={rank} idx={i}: {r} vs {e}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_broadcast_replicates_from_any_root() {
+    check(15, |g| {
+        let p = g.usize_in(2, 9);
+        let root = g.usize_in(0, p);
+        let len = g.usize_in(1, 64);
+        let seed = g.seed;
+        let results = run_spmd(p, move |rank, comm| {
+            let mut buf = if rank == root {
+                let mut gen = Gen::new(seed);
+                gen.vec_normal(len)
+            } else {
+                vec![0.0; len]
+            };
+            comm.broadcast(root, &mut buf).unwrap();
+            buf
+        });
+        let expect = &results[root];
+        for (rank, got) in results.iter().enumerate() {
+            prop_assert!(got == expect, "p={p} root={root} rank={rank} differs");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_to_all_transposes_payloads() {
+    check(15, |g| {
+        let p = g.usize_in(1, 8);
+        let len = g.usize_in(1, 16);
+        let results = run_spmd(p, move |rank, comm| {
+            let send: Vec<Vec<f64>> = (0..p)
+                .map(|dst| {
+                    (0..len)
+                        .map(|k| (rank * 1000 + dst * 10 + k) as f64)
+                        .collect()
+                })
+                .collect();
+            comm.all_to_all(send).unwrap()
+        });
+        for (rank, got) in results.iter().enumerate() {
+            for (src, payload) in got.iter().enumerate() {
+                for (k, v) in payload.iter().enumerate() {
+                    let expect = (src * 1000 + rank * 10 + k) as f64;
+                    prop_assert!(
+                        *v == expect,
+                        "p={p} rank={rank} src={src} k={k}: {v} vs {expect}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allreduce_critical_path_is_logarithmic() {
+    check(10, |g| {
+        let p = 1usize << g.usize_in(0, 6); // powers of two up to 32
+        let rounds = g.usize_in(1, 5);
+        let meters: Vec<CostMeter> = run_spmd(p, move |_rank, comm| {
+            for _ in 0..rounds {
+                let mut buf = vec![1.0; 8];
+                comm.allreduce_sum(&mut buf).unwrap();
+            }
+            *comm.meter()
+        });
+        let (msgs, _) = CostMeter::critical_path(&meters);
+        let logp = (p as f64).log2().ceil() as u64;
+        prop_assert!(
+            msgs <= 2 * logp * rounds as u64,
+            "p={p} rounds={rounds}: msgs {msgs} > {}",
+            2 * logp * rounds as u64
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allreduce_word_count_matches_payload() {
+    // Theorem 1 charges O(b² log P) words per allreduce of a b² payload:
+    // every word a rank sends is the payload length times its tree sends.
+    check(10, |g| {
+        let p = g.usize_in(2, 9);
+        let len = g.usize_in(1, 100);
+        let meters: Vec<CostMeter> = run_spmd(p, move |_rank, comm| {
+            let mut buf = vec![1.0; len];
+            comm.allreduce_sum(&mut buf).unwrap();
+            *comm.meter()
+        });
+        for (rank, m) in meters.iter().enumerate() {
+            prop_assert!(
+                m.words % len as u64 == 0,
+                "p={p} rank={rank}: {} words not a multiple of payload {len}",
+                m.words
+            );
+        }
+        // Total traffic of reduce+bcast over a binomial tree: 2(P−1) sends.
+        let total: u64 = meters.iter().map(|m| m.msgs).sum();
+        prop_assert!(
+            total == 2 * (p as u64 - 1),
+            "p={p}: total sends {total} != {}",
+            2 * (p as u64 - 1)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn spmd_rank_count_does_not_change_solver_numerics() {
+    // End-to-end SPMD equivalence: same dataset, P ∈ {1, 2, 5} → same w.
+    use cabcd::gram::NativeBackend;
+    use cabcd::matrix::gen::{generate, scaled_specs};
+    use cabcd::coordinator::partition_primal;
+    use cabcd::solvers::{bcd, SolverOpts};
+
+    let spec = &scaled_specs(8)[0]; // abalone-s8
+    let ds = generate(spec, 3).unwrap();
+    let opts = SolverOpts {
+        b: 2,
+        s: 3,
+        lam: spec.lambda(),
+        iters: 60,
+        seed: 7,
+        record_every: 0,
+        track_gram_cond: false,
+        tol: None,
+    };
+    let mut solutions = Vec::new();
+    for p in [1usize, 2, 5] {
+        let shards = partition_primal(&ds, p).unwrap();
+        let ws = run_spmd(p, |rank, comm| {
+            let mut be = NativeBackend::new();
+            let sh = &shards[rank];
+            bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, &opts, None, comm, &mut be)
+                .unwrap()
+                .w
+        });
+        // All ranks agree (w is replicated).
+        for w in &ws[1..] {
+            assert_eq!(w, &ws[0], "P={p}: ranks disagree on replicated w");
+        }
+        solutions.push(ws.into_iter().next().unwrap());
+    }
+    for w in &solutions[1..] {
+        for (a, b) in w.iter().zip(&solutions[0]) {
+            assert!(
+                (a - b).abs() < 1e-10,
+                "rank-count changed numerics: {a} vs {b}"
+            );
+        }
+    }
+}
