@@ -45,6 +45,7 @@ fn main() {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let shards = partition_dual(&ds, p).unwrap();
         let rref = &reference;
@@ -76,6 +77,7 @@ fn main() {
             local_iters,
             seed: 7,
             record_every: 0,
+            overlap: false,
         };
         let shards = partition_primal(&ds, p).unwrap();
         let rref = &reference;

@@ -64,6 +64,7 @@ fn main() {
         record_every: 500,
         track_gram_cond: false,
         tol: Some(tol),
+        overlap: false,
     };
     let p = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be).unwrap();
     let s_bcd = from_history("BCD", Method::Bcd, 4.0, &p.history);

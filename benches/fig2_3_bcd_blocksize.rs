@@ -47,6 +47,7 @@ fn main() {
                 record_every: iters / 8,
                 track_gram_cond: false,
                 tol: None,
+                overlap: false,
             };
             let mut be = NativeBackend::new();
             let out = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be)

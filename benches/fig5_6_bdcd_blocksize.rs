@@ -43,6 +43,7 @@ fn main() {
                 record_every: iters / 8,
                 track_gram_cond: false,
                 tol: None,
+                overlap: false,
             };
             let mut be = NativeBackend::new();
             let out = bdcd::run(&a, &ds.y, d, 0, &opts, Some(&reference), &mut comm, &mut be)

@@ -47,6 +47,7 @@ fn main() {
                 record_every: 0,
                 track_gram_cond: true,
                 tol: None,
+                overlap: false,
             };
             let mut be = NativeBackend::new();
             let mut c = SerialComm::new();

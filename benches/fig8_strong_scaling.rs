@@ -52,6 +52,29 @@ fn main() {
         headlines[1].1 > headlines[0].1 * 4.0,
         "Spark headline should dwarf MPI: {headlines:?}"
     );
+
+    // Cross-check the model's L = (H/s)·log₂P latency charge against the
+    // real communicator: with recursive doubling, one small-payload
+    // allreduce costs exactly log₂P send rounds per active rank (the seed's
+    // reduce-then-broadcast charged 2·log₂P).
+    {
+        use cabcd::comm::thread::{expected_allreduce_sends, run_spmd};
+        use cabcd::comm::Communicator;
+        for p in [4usize, 8, 16] {
+            let meters = run_spmd(p, |_r, comm| {
+                let mut buf = vec![1.0f64; 8];
+                comm.allreduce_sum(&mut buf).unwrap();
+                *comm.meter()
+            });
+            let logp = (p as f64).log2() as u64;
+            for (rank, m) in meters.iter().enumerate() {
+                let (msgs, _) = expected_allreduce_sends(p, rank, 8);
+                assert_eq!(m.msgs, msgs, "P={p} rank={rank}: formula mismatch");
+                assert_eq!(msgs, logp, "P={p}: RD rounds != log₂P");
+            }
+        }
+        println!("\nmeasured allreduce rounds match the model's log₂P latency term");
+    }
     println!(
         "\nheadlines: {} {:.0}× / {} {:.0}× (paper: 14× / 165×)",
         headlines[0].0, headlines[0].1, headlines[1].0, headlines[1].1

@@ -114,7 +114,7 @@ fn main() {
     println!("{:>6} {:>14} {:>18}", "s", "median/outer", "median/inner-iter");
     let x = Matrix::Dense(dense_mat(256, 32768, 9));
     let mut y = vec![0.0; 32768];
-    x.matvec_t(&vec![1.0; 256], &mut y).unwrap();
+    x.matvec_t(&[1.0; 256], &mut y).unwrap();
     for s in [1usize, 4, 8] {
         use cabcd::comm::SerialComm;
         use cabcd::solvers::{bcd, SolverOpts};
@@ -127,6 +127,7 @@ fn main() {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut c = SerialComm::new();
         let (med, _, _) = time_runs(1, 5, || {
@@ -142,19 +143,126 @@ fn main() {
     }
 
     // --- collectives ------------------------------------------------------
-    println!("\nallreduce (thread communicator), payload 4096 f64:");
-    println!("{:>6} {:>14}", "P", "median");
-    for p in [2usize, 4, 8] {
-        let (med, _, _) = time_runs(2, 10, || {
-            run_spmd(p, |_r, comm| {
-                let mut buf = vec![1.0f64; 4096];
-                for _ in 0..10 {
-                    comm.allreduce_sum(&mut buf).unwrap();
-                }
-                buf[0]
-            })
-        });
-        println!("{:>6} {:>14}", p, fmt_secs(med / 10.0));
+    // New RD/Rabenseifner pooled allreduce vs the seed's reduce-then-
+    // broadcast, on the solver's sb²+sb Gram payloads. Acceptance: at P=8
+    // the large-payload (bandwidth-bound) regime must be ≥2× faster per
+    // call, and the pooled path must do zero heap allocations per call
+    // after warmup.
+    println!("\nallreduce (thread communicator), sb²+sb Gram payloads:");
+    println!(
+        "{:>6} {:>8} {:>14} {:>16} {:>9}",
+        "sb", "P", "new median", "seed reduce+bc", "speedup"
+    );
+    let rounds = 20usize;
+    for sb in [8usize, 64, 256] {
+        let payload = sb * sb + sb;
+        for p in [2usize, 4, 8] {
+            let (new_med, _, _) = time_runs(2, 8, || {
+                run_spmd(p, |_r, comm| {
+                    let mut buf = vec![1.0f64; payload];
+                    for _ in 0..rounds {
+                        comm.allreduce_sum(&mut buf).unwrap();
+                    }
+                    buf[0]
+                })
+            });
+            let (old_med, _, _) = time_runs(2, 8, || {
+                run_spmd(p, |_r, comm| {
+                    let mut buf = vec![1.0f64; payload];
+                    for _ in 0..rounds {
+                        comm.allreduce_sum_reference(&mut buf).unwrap();
+                    }
+                    buf[0]
+                })
+            });
+            let speedup = old_med / new_med;
+            println!(
+                "{:>6} {:>8} {:>14} {:>16} {:>8.2}×",
+                sb,
+                p,
+                fmt_secs(new_med / rounds as f64),
+                fmt_secs(old_med / rounds as f64),
+                speedup
+            );
+            if p == 8 && sb == 256 {
+                assert!(
+                    speedup >= 2.0,
+                    "P=8 sb=256: new allreduce only {speedup:.2}× faster than the \
+                     seed reduce+broadcast (want ≥2×)"
+                );
+            }
+        }
+    }
+
+    // Zero-allocation invariant: after warmup, the pooled collective path
+    // takes no heap allocations per call (CostMeter::buf_allocs is flat).
+    run_spmd(8, |_r, comm| {
+        let mut buf = vec![1.0f64; 64 * 64 + 64];
+        for _ in 0..8 {
+            comm.allreduce_sum(&mut buf).unwrap();
+        }
+        let warm = comm.meter().buf_allocs;
+        for _ in 0..100 {
+            comm.allreduce_sum(&mut buf).unwrap();
+        }
+        assert_eq!(
+            comm.meter().buf_allocs,
+            warm,
+            "allreduce allocated after warmup"
+        );
+        buf[0]
+    });
+    println!("zero-alloc check: 100 post-warmup allreduces at P=8, 0 pool allocations");
+
+    // Overlap pipeline: CA-BCD end-to-end, blocking vs non-blocking comm.
+    {
+        use cabcd::coordinator::partition_primal;
+        use cabcd::matrix::io::Dataset;
+        use cabcd::solvers::{bcd, SolverOpts};
+        let x = Matrix::Dense(dense_mat(192, 16384, 12));
+        let mut y = vec![0.0; 16384];
+        x.matvec_t(&[1.0; 192], &mut y).unwrap();
+        let ds = Dataset {
+            name: "bench".into(),
+            x,
+            y,
+        };
+        let shards = partition_primal(&ds, 8).unwrap();
+        println!("\nCA-BCD outer iteration at P=8 (d=192, n=16384, b=8, s=4):");
+        let mut medians = Vec::new();
+        for overlap in [false, true] {
+            let opts = SolverOpts {
+                b: 8,
+                s: 4,
+                lam: 0.1,
+                iters: 16,
+                seed: 3,
+                record_every: 0,
+                track_gram_cond: false,
+                tol: None,
+                overlap,
+            };
+            let shards_ref = &shards;
+            let optsr = &opts;
+            let (med, _, _) = time_runs(1, 5, || {
+                run_spmd(8, move |rank, comm| {
+                    let sh = &shards_ref[rank];
+                    let mut be = NativeBackend::new();
+                    bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, optsr, None, comm, &mut be)
+                        .unwrap()
+                        .w[0]
+                })
+            });
+            println!(
+                "  overlap={overlap:<5} median/outer = {}",
+                fmt_secs(med / 4.0)
+            );
+            medians.push(med);
+        }
+        println!(
+            "  overlap pipeline speedup: {:.2}×",
+            medians[0] / medians[1]
+        );
     }
 
     // --- XLA backend latency (optional) -----------------------------------

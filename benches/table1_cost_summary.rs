@@ -1,11 +1,11 @@
 //! Table 1 + Table 2 — critical-path cost summary of BCD/BDCD vs the CA
 //! variants and the survey methods (Krylov, TSQR), instantiated at several
 //! concrete parameter points, plus a measured-vs-theory check: the
-//! communicator's allreduce counts for CA-BCD must equal L = (H/s)·⌈log₂P⌉
-//! within the binomial-tree bound.
+//! communicator's per-rank message counts for CA-BCD must equal the
+//! recursive-doubling / Rabenseifner formula times the H/s collectives.
 
 use cabcd::comm::cost::CostMeter;
-use cabcd::comm::thread::run_spmd;
+use cabcd::comm::thread::{expected_allreduce_sends, run_spmd};
 use cabcd::comm::Communicator;
 use cabcd::coordinator::partition_primal;
 use cabcd::costmodel::{AlgoCosts, CostParams, Method};
@@ -103,7 +103,7 @@ fn main() {
     println!("\n--- measured vs theory: CA-BCD allreduce rounds (P=8) ---");
     let spec = &scaled_specs(8)[0];
     let ds = generate(spec, 1).unwrap();
-    println!("{:>4} {:>12} {:>18} {:>18}", "s", "outer iters", "measured msgs", "2·logP·(H/s) bound");
+    println!("{:>4} {:>12} {:>18} {:>18}", "s", "outer iters", "measured msgs", "formula msgs");
     for s in [1usize, 2, 4, 8] {
         let opts = SolverOpts {
             b: 2,
@@ -114,6 +114,7 @@ fn main() {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let shards = partition_primal(&ds, 8).unwrap();
         let meters: Vec<CostMeter> = run_spmd(8, |rank, comm| {
@@ -123,9 +124,14 @@ fn main() {
             *comm.meter()
         });
         let (msgs, _) = CostMeter::critical_path(&meters);
-        let bound = 2 * 3 * (64 / s) as u64; // 2·log₂8·(H/s)
-        println!("{:>4} {:>12} {:>18} {:>18}", s, 64 / s, msgs, bound);
-        assert!(msgs <= bound, "s={s}: {msgs} > {bound}");
+        // Exact per-allreduce accounting: sends from the RD/Rabenseifner
+        // formula (payload sb²+sb selects the algorithm), plus the equal
+        // number of receives, times H/s collectives.
+        let payload = (2 * s) * (2 * s) + 2 * s;
+        let (sends, _) = expected_allreduce_sends(8, 0, payload);
+        let expect = 2 * sends * (64 / s) as u64;
+        println!("{:>4} {:>12} {:>18} {:>18}", s, 64 / s, msgs, expect);
+        assert_eq!(msgs, expect, "s={s}");
     }
     println!("\ntable1_cost_summary: OK");
 }

@@ -14,7 +14,7 @@ use cabcd::gram::NativeBackend;
 use cabcd::matrix::gen::{generate, spec_by_name};
 use cabcd::solvers::{bcd, cg, SolverOpts};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let spec = spec_by_name("abalone")?;
     let ds = generate(&spec, 42)?;
     let lam = spec.lambda();
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             record_every: 0,
             track_gram_cond: true,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();

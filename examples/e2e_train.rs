@@ -40,6 +40,7 @@ fn cfg(backend: &str, ranks: usize, iters: usize) -> ExperimentConfig {
             record_every: (iters / 10).max(1),
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         },
         run: RunConfig {
             ranks,
@@ -49,7 +50,7 @@ fn cfg(backend: &str, ranks: usize, iters: usize) -> ExperimentConfig {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     std::fs::create_dir_all("results")?;
 
     // ---- Leg 1: full training run, native backend, P=4 -----------------

@@ -15,7 +15,7 @@ use cabcd::gram::NativeBackend;
 use cabcd::kernel::{fit, Kernel, KrrOpts};
 use cabcd::matrix::gen::{generate, scaled_specs};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Small abalone clone; targets are a nonlinear function of features,
     // so the linear model underfits and RBF wins — the reason KRR exists.
     let spec = &scaled_specs(8)[0];

@@ -12,7 +12,7 @@ use cabcd::gram::NativeBackend;
 use cabcd::matrix::gen::{generate, scaled_specs};
 use cabcd::solvers::{bcd, bdcd, cg, SolverOpts};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // news20-like (d ≫ n, sparse) and abalone-like (n ≫ d, dense) clones,
     // scaled so the example runs in seconds.
     let specs = scaled_specs(16);
@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let p = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be)?;

@@ -11,7 +11,7 @@ use cabcd::gram::NativeBackend;
 use cabcd::matrix::gen::{generate, spec_by_name};
 use cabcd::solvers::{bcd, cg, SolverOpts};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. A dataset: the abalone clone from the paper's Table 3
     //    (8 features × 4177 points, dense, planted spectrum).
     let spec = spec_by_name("abalone")?;
@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
             record_every: 400,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut backend = NativeBackend::new();
         let out = bcd::run(

@@ -1,0 +1,43 @@
+"""Optional-dependency shim for `hypothesis`.
+
+The offline CI image has no hypothesis wheel; importing it unconditionally
+made the whole module fail collection and took the deterministic tests down
+with it. Importing `given`/`settings`/`st` from here keeps the
+deterministic tests running everywhere: with hypothesis installed the real
+decorators pass through, without it the property sweeps turn into cleanly
+skipped tests.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only on minimal images
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `hypothesis.strategies`: any strategy constructor
+        returns None; the values are never drawn because the test body is
+        replaced by a skip."""
+
+        def __getattr__(self, _name):
+            return lambda *args, **kwargs: None
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped(*a, **k):  # pragma: no cover
+                raise AssertionError("skipped test body executed")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

@@ -3,8 +3,9 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
+
+from tests._hypothesis_compat import given, settings, st
 
 from compile.kernels.gram import gram_resid, vmem_report, DEFAULT_NT
 from compile.kernels.ref import gram_resid_ref

@@ -5,8 +5,9 @@ paper's exact-arithmetic claim — s steps of CA-BCD ≡ s sequential BCD steps.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
+
+from tests._hypothesis_compat import given, settings, st
 
 from compile.model import (alpha_update_partial, ca_dual_inner_solve,
                            ca_inner_solve, cholesky_unrolled, chol_solve)

@@ -16,10 +16,14 @@ pub struct CostMeter {
     pub recv_msgs: u64,
     /// Words received.
     pub recv_words: u64,
-    /// Number of allreduce collectives entered.
+    /// Number of allreduce collectives entered (blocking and non-blocking).
     pub allreduces: u64,
     /// Number of all-to-all collectives entered.
     pub all_to_alls: u64,
+    /// Heap allocations taken by the message buffer pool (pool misses and
+    /// capacity growth). Zero after warmup on a steady-state payload — the
+    /// invariant the hot-path micro-bench asserts.
+    pub buf_allocs: u64,
 }
 
 impl CostMeter {
@@ -41,6 +45,7 @@ impl CostMeter {
         self.recv_words += other.recv_words;
         self.allreduces += other.allreduces;
         self.all_to_alls += other.all_to_alls;
+        self.buf_allocs += other.buf_allocs;
     }
 
     /// Critical-path message/word counts over a group of rank meters:

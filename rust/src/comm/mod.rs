@@ -2,10 +2,61 @@
 //!
 //! The paper's machine is a distributed-memory cluster programmed with MPI
 //! collectives; its cost analysis (Theorems 1–9) counts messages and words
-//! along the critical path of binomial-tree collectives. This module builds
-//! that substrate: P ranks as threads, point-to-point channels, and the
-//! MPICH-style binomial-tree algorithms for reduce/broadcast — so the
-//! message counts that enter the α-β-γ model are *measured*, not assumed.
+//! along the critical path of those collectives. This module builds that
+//! substrate: P ranks as threads, a tagged inbox per rank, and
+//! production-grade collective algorithms — so the message counts that
+//! enter the α-β-γ model are *measured*, not assumed.
+//!
+//! # Allreduce algorithms
+//!
+//! [`ThreadComm::allreduce_sum`] dispatches on payload size, exactly like
+//! MPICH's `MPIR_Allreduce`:
+//!
+//! * **Recursive doubling** for payloads under
+//!   [`thread::RABENSEIFNER_MIN_WORDS`] words: ⌈log₂P⌉ exchange rounds,
+//!   each rank sending the full payload per round — latency-optimal, the
+//!   `O(log P)` message term the paper's Theorems charge per allreduce
+//!   (half the rounds of the seed's reduce-then-broadcast).
+//! * **Rabenseifner (reduce-scatter + allgather)** for large payloads such
+//!   as the per-iteration `sb² + sb` Gram/residual buffer: 2⌈log₂P⌉
+//!   rounds of *halving/doubling* exchanges moving `≈ 2·len·(P−1)/P` words
+//!   per rank instead of `len·log₂P` — bandwidth-optimal for the payloads
+//!   that dominate CA-BCD/CA-BDCD traffic.
+//!
+//! Non-power-of-two rank counts fold the `P − 2^⌊log₂P⌋` excess ranks onto
+//! neighbours before the power-of-two core algorithm and unfold after
+//! (the standard MPICH pre/post step). Both algorithms produce
+//! *rank-identical, deterministic* results: every rank ends with the same
+//! bit pattern for every element on every run.
+//!
+//! # Zero-allocation message path
+//!
+//! Every point-to-point message is carried by a buffer drawn from the
+//! rank-local pool ([`Communicator::take_buf`] / [`Communicator::give_buf`]);
+//! receives recycle the transported buffer back into the receiver's pool.
+//! After warmup the collective hot path performs **no heap allocation** —
+//! [`CostMeter::buf_allocs`] measures pool misses and the hot-path
+//! micro-bench asserts it stays flat in steady state.
+//!
+//! # Non-blocking allreduce
+//!
+//! [`Communicator::iallreduce_start`] posts the protocol's first round and
+//! returns a [`ReduceHandle`]; [`Communicator::iallreduce_wait`] completes
+//! the remaining rounds. Between the two calls, peer messages accumulate in
+//! the rank's inbox while the caller computes — the CA solvers use this to
+//! hide the Gram reduction behind the next outer iteration's local Gram
+//! computation (`SolverOpts::overlap`). The non-blocking path executes the
+//! *same* algorithm in the *same* element order as the blocking path, so
+//! results are **bitwise identical** (asserted by property test).
+//!
+//! # Failure semantics
+//!
+//! A rank that detects a protocol violation (payload length mismatch)
+//! *poisons the group*: it broadcasts a poison packet to every peer and
+//! errors out. Peers blocked in a receive observe the poison instead of
+//! hanging, and every subsequent collective on a poisoned endpoint fails
+//! immediately — a length bug surfaces as `Error::Comm("group poisoned: …")`
+//! on all ranks rather than a deadlock.
 //!
 //! Every send is metered; [`CostMeter::critical_path`] takes the max over
 //! ranks, which is what the paper's `O(·)` latency/bandwidth terms bound.
@@ -18,17 +69,66 @@ pub use thread::{run_spmd, ThreadComm};
 
 use crate::error::Result;
 
+/// Which core allreduce algorithm a collective (or in-flight handle) uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Algo {
+    RecursiveDoubling,
+    Rabenseifner,
+}
+
+/// Protocol state carried by an in-flight [`ReduceHandle`].
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum HandleState {
+    /// Nothing left in flight (serial communicator or P = 1).
+    Done,
+    /// Thread protocol chosen at start time; `first_sent` records whether
+    /// the round-0 send was already posted by `iallreduce_start`.
+    Thread { algo: Algo, first_sent: bool },
+}
+
+/// Handle to an in-flight non-blocking allreduce. Owns the payload buffer
+/// until [`Communicator::iallreduce_wait`] returns it, reduced.
+///
+/// A handle must be waited on by the same communicator that started it,
+/// before that communicator enters any other collective.
+#[derive(Debug)]
+pub struct ReduceHandle {
+    pub(crate) buf: Vec<f64>,
+    pub(crate) state: HandleState,
+}
+
+impl ReduceHandle {
+    /// Length of the in-flight payload.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
 /// Rank-local handle to a P-rank communicator.
 ///
 /// Mirrors the MPI subset the paper's algorithms need: allreduce (the
-/// per-iteration Gram/residual sum), broadcast, all-to-all (the 1D-block-row
-/// load-balancing conversion of Theorem 4), and barrier.
+/// per-iteration Gram/residual sum, blocking and non-blocking), broadcast,
+/// all-to-all (the 1D-block-row load-balancing conversion of Theorem 4),
+/// and barrier.
 pub trait Communicator: Send {
     fn rank(&self) -> usize;
     fn size(&self) -> usize;
 
     /// Element-wise sum of `buf` across all ranks; result replicated.
     fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()>;
+
+    /// Begin a non-blocking allreduce of `buf`. The returned handle owns
+    /// the buffer; local computation may proceed while peer traffic lands.
+    fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle>;
+
+    /// Complete a non-blocking allreduce and return the reduced buffer.
+    /// Bitwise identical to [`Communicator::allreduce_sum`] on the same
+    /// payload.
+    fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>>;
 
     /// Broadcast `buf` from `root` to everyone.
     fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()>;
@@ -39,6 +139,15 @@ pub trait Communicator: Send {
 
     /// Synchronize all ranks.
     fn barrier(&mut self) -> Result<()>;
+
+    /// Borrow a zeroed length-`len` buffer from the rank-local pool
+    /// (allocates only on pool miss).
+    fn take_buf(&mut self, len: usize) -> Vec<f64> {
+        vec![0.0; len]
+    }
+
+    /// Return a buffer to the rank-local pool for reuse.
+    fn give_buf(&mut self, _buf: Vec<f64>) {}
 
     /// Communication meter for this rank.
     fn meter(&self) -> &CostMeter;
@@ -71,6 +180,18 @@ impl Communicator for SerialComm {
     fn allreduce_sum(&mut self, _buf: &mut [f64]) -> Result<()> {
         self.meter.allreduces += 1;
         Ok(())
+    }
+
+    fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
+        self.meter.allreduces += 1;
+        Ok(ReduceHandle {
+            buf,
+            state: HandleState::Done,
+        })
+    }
+
+    fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>> {
+        Ok(handle.buf)
     }
 
     fn broadcast(&mut self, _root: usize, _buf: &mut [f64]) -> Result<()> {
@@ -107,5 +228,15 @@ mod tests {
         assert_eq!(c.meter().allreduces, 1);
         let out = c.all_to_all(vec![vec![5.0]]).unwrap();
         assert_eq!(out, vec![vec![5.0]]);
+    }
+
+    #[test]
+    fn serial_nonblocking_roundtrips_and_counts() {
+        let mut c = SerialComm::new();
+        let h = c.iallreduce_start(vec![3.0, 4.0]).unwrap();
+        assert_eq!(h.len(), 2);
+        let out = c.iallreduce_wait(h).unwrap();
+        assert_eq!(out, vec![3.0, 4.0]);
+        assert_eq!(c.meter().allreduces, 1);
     }
 }

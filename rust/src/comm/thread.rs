@@ -1,71 +1,486 @@
-//! Thread-backed communicator: P ranks as OS threads, a crossbeam channel
-//! per ordered rank pair, and MPICH-style binomial-tree collectives.
+//! Thread-backed communicator: P ranks as OS threads, one tagged inbox per
+//! rank, a rank-local message-buffer pool, and MPICH-style collective
+//! algorithms (recursive doubling / Rabenseifner allreduce, binomial-tree
+//! broadcast). See the module docs of [`crate::comm`] for the algorithm
+//! selection rules, the zero-allocation invariant, and the poisoned-group
+//! failure semantics.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-use crate::comm::{Communicator, CostMeter};
+use crate::comm::{Algo, Communicator, CostMeter, HandleState, ReduceHandle};
 use crate::error::{Error, Result};
+
+/// Payload size (f64 words) at which allreduce switches from recursive
+/// doubling (latency-optimal, `len·log₂P` words/rank) to Rabenseifner
+/// reduce-scatter + allgather (bandwidth-optimal, `≈2·len·(P−1)/P`
+/// words/rank). 256 words = 2 KiB, MPICH's long-message crossover.
+pub const RABENSEIFNER_MIN_WORDS: usize = 256;
+
+/// Upper bound on pooled buffers retained per rank (bounds worst-case
+/// memory when collectives of many distinct sizes interleave).
+const POOL_MAX: usize = 64;
+
+/// Wire format of one point-to-point message.
+enum Packet {
+    Data(Vec<f64>),
+    /// Group poisoning: a peer detected a protocol violation. Carried to
+    /// every rank so nobody blocks forever in `recv`.
+    Poison(String),
+}
 
 /// Rank-local endpoint of a P-rank thread communicator.
 pub struct ThreadComm {
     rank: usize,
     size: usize,
-    /// `send_to[p]` delivers to rank p's `recv_from[self.rank]`.
-    send_to: Vec<Sender<Vec<f64>>>,
-    recv_from: Vec<Receiver<Vec<f64>>>,
+    /// `send_to[p]` delivers into rank p's `inbox`, tagged with our rank.
+    send_to: Vec<Sender<(usize, Packet)>>,
+    inbox: Receiver<(usize, Packet)>,
+    /// Out-of-order stash: data that arrived from rank `s` while we were
+    /// waiting on a different source (per-source FIFO order is preserved).
+    pending: Vec<VecDeque<Vec<f64>>>,
+    /// Recycled message buffers (the zero-allocation hot path).
+    pool: Vec<Vec<f64>>,
+    /// Sticky failure state: once poisoned, every collective errors.
+    poisoned: Option<String>,
     meter: CostMeter,
+}
+
+/// Largest power of two ≤ p (p ≥ 1).
+fn pof2_below(p: usize) -> usize {
+    if p.is_power_of_two() {
+        p
+    } else {
+        p.next_power_of_two() >> 1
+    }
+}
+
+/// Map a post-fold rank id back to its real rank (MPICH convention: the
+/// first `2·rem` real ranks collapse pairwise onto the odd member).
+fn real_rank(newrank: usize, rem: usize) -> usize {
+    if newrank < rem {
+        2 * newrank + 1
+    } else {
+        newrank + rem
+    }
+}
+
+fn add_into(acc: &mut [f64], v: &[f64]) {
+    for (a, b) in acc.iter_mut().zip(v) {
+        *a += b;
+    }
 }
 
 impl ThreadComm {
     /// Create a fully-connected group of P endpoints.
     pub fn group(p: usize) -> Vec<ThreadComm> {
         assert!(p >= 1, "communicator needs at least one rank");
-        // channels[src][dst]
-        let mut senders: Vec<Vec<Option<Sender<Vec<f64>>>>> =
-            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
-        let mut receivers: Vec<Vec<Option<Receiver<Vec<f64>>>>> =
-            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
-        for src in 0..p {
-            for dst in 0..p {
-                let (tx, rx) = channel();
-                senders[src][dst] = Some(tx);
-                receivers[dst][src] = Some(rx);
-            }
+        let mut txs = Vec::with_capacity(p);
+        let mut rxs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
         }
-        let mut out = Vec::with_capacity(p);
-        for rank in 0..p {
-            let send_to = senders[rank]
-                .iter_mut()
-                .map(|s| s.take().unwrap())
-                .collect();
-            let recv_from = receivers[rank]
-                .iter_mut()
-                .map(|r| r.take().unwrap())
-                .collect();
-            out.push(ThreadComm {
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| ThreadComm {
                 rank,
                 size: p,
-                send_to,
-                recv_from,
+                send_to: txs.clone(),
+                inbox,
+                pending: (0..p).map(|_| VecDeque::new()).collect(),
+                pool: Vec::new(),
+                poisoned: None,
                 meter: CostMeter::default(),
-            });
+            })
+            .collect()
+    }
+
+    // ---- buffer pool ----------------------------------------------------
+
+    /// Take a cleared pooled buffer, preferring one whose capacity already
+    /// fits `len` (best-fit keeps the steady state allocation-free even
+    /// when message sizes vary within one collective, as in Rabenseifner's
+    /// halving rounds). A pool miss or capacity growth counts as one
+    /// allocation in [`CostMeter::buf_allocs`].
+    fn pool_take_for(&mut self, len: usize) -> Vec<f64> {
+        let picked = match self.pool.iter().rposition(|v| v.capacity() >= len) {
+            Some(i) => Some(self.pool.swap_remove(i)),
+            None => self.pool.pop(),
+        };
+        let mut v = picked.unwrap_or_default();
+        if v.capacity() < len {
+            self.meter.buf_allocs += 1;
         }
-        out
+        v.clear();
+        v
     }
 
-    fn send(&mut self, dst: usize, buf: Vec<f64>) -> Result<()> {
+    fn take_buf_inner(&mut self, len: usize) -> Vec<f64> {
+        let mut v = self.pool_take_for(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    fn give_buf_inner(&mut self, buf: Vec<f64>) {
+        if self.pool.len() < POOL_MAX {
+            self.pool.push(buf);
+        }
+    }
+
+    // ---- point-to-point -------------------------------------------------
+
+    /// Copy `data` into a pooled buffer and send it (slice-based send: the
+    /// caller's buffer is never cloned onto the heap after warmup).
+    fn send_slice(&mut self, dst: usize, data: &[f64]) -> Result<()> {
+        let mut msg = self.pool_take_for(data.len());
+        msg.extend_from_slice(data);
+        self.send_owned(dst, msg)
+    }
+
+    fn send_owned(&mut self, dst: usize, buf: Vec<f64>) -> Result<()> {
         self.meter.record_send(buf.len());
-        self.send_to[dst]
-            .send(buf)
-            .map_err(|e| Error::Comm(format!("send {}→{dst}: {e}", self.rank)))
+        if self.send_to[dst].send((self.rank, Packet::Data(buf))).is_err() {
+            // The peer dropped its endpoint — almost always because it
+            // errored out of the protocol, and its poison broadcast
+            // happens-before the drop, so it is already in our inbox:
+            // surface that group failure rather than a bare send error.
+            self.check_poison()?;
+            return Err(Error::Comm(format!(
+                "send {}→{dst}: peer terminated",
+                self.rank
+            )));
+        }
+        Ok(())
     }
 
+    /// One protocol send that may have been posted already by
+    /// `iallreduce_start` (the flag is consumed by the first executed send).
+    fn send_round(&mut self, dst: usize, data: &[f64], skip: &mut bool) -> Result<()> {
+        if *skip {
+            *skip = false;
+            Ok(())
+        } else {
+            self.send_slice(dst, data)
+        }
+    }
+
+    fn poisoned_err(msg: &str) -> Error {
+        Error::Comm(format!("group poisoned: {msg}"))
+    }
+
+    /// Broadcast a poison packet to every peer, mark ourselves poisoned,
+    /// and return the error to propagate.
+    fn poison(&mut self, msg: String) -> Error {
+        for (dst, tx) in self.send_to.iter().enumerate() {
+            if dst != self.rank {
+                let _ = tx.send((self.rank, Packet::Poison(msg.clone())));
+            }
+        }
+        let err = Self::poisoned_err(&msg);
+        self.poisoned = Some(msg);
+        err
+    }
+
+    /// Drain any already-arrived packets (stashing data, latching poison)
+    /// and fail if the group is poisoned. Called at collective entry so a
+    /// rank that would only *send* in the current round still observes a
+    /// peer's failure.
+    fn check_poison(&mut self) -> Result<()> {
+        if self.poisoned.is_none() {
+            while let Ok((from, pkt)) = self.inbox.try_recv() {
+                match pkt {
+                    Packet::Data(v) => self.pending[from].push_back(v),
+                    Packet::Poison(m) => {
+                        self.poisoned = Some(m);
+                        break;
+                    }
+                }
+            }
+        }
+        match &self.poisoned {
+            Some(m) => Err(Self::poisoned_err(m)),
+            None => Ok(()),
+        }
+    }
+
+    /// Blocking receive from a specific source. Messages from other sources
+    /// are stashed in per-source FIFO order; a poison packet from *any*
+    /// source aborts the wait.
     fn recv(&mut self, src: usize) -> Result<Vec<f64>> {
-        let buf = self.recv_from[src]
-            .recv()
-            .map_err(|e| Error::Comm(format!("recv {}←{src}: {e}", self.rank)))?;
-        self.meter.record_recv(buf.len());
-        Ok(buf)
+        if let Some(m) = &self.poisoned {
+            return Err(Self::poisoned_err(m));
+        }
+        if let Some(v) = self.pending[src].pop_front() {
+            self.meter.record_recv(v.len());
+            return Ok(v);
+        }
+        loop {
+            match self.inbox.recv() {
+                Ok((from, Packet::Data(v))) => {
+                    if from == src {
+                        self.meter.record_recv(v.len());
+                        return Ok(v);
+                    }
+                    self.pending[from].push_back(v);
+                }
+                Ok((_from, Packet::Poison(m))) => {
+                    let err = Self::poisoned_err(&m);
+                    self.poisoned = Some(m);
+                    return Err(err);
+                }
+                Err(_) => {
+                    return Err(Error::Comm(format!(
+                        "recv {}←{src}: channel closed",
+                        self.rank
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Receive with a length contract; a mismatch poisons the group.
+    fn recv_expect(&mut self, src: usize, len: usize) -> Result<Vec<f64>> {
+        let v = self.recv(src)?;
+        if v.len() != len {
+            return Err(self.poison(format!(
+                "payload length mismatch: rank {} expected {len} words from rank {src}, got {}",
+                self.rank,
+                v.len()
+            )));
+        }
+        Ok(v)
+    }
+
+    // ---- allreduce cores ------------------------------------------------
+
+    fn select_algo(&self, len: usize) -> Algo {
+        let pof2 = pof2_below(self.size);
+        if len >= RABENSEIFNER_MIN_WORDS && len >= pof2 && pof2 >= 2 {
+            Algo::Rabenseifner
+        } else {
+            Algo::RecursiveDoubling
+        }
+    }
+
+    /// Fold phase shared by both algorithms: the `2·rem` lowest ranks
+    /// collapse pairwise onto the odd member; returns this rank's post-fold
+    /// id (`None` = folded out until the unfold).
+    fn fold(&mut self, buf: &mut [f64], rem: usize, skip: &mut bool) -> Result<Option<usize>> {
+        let rank = self.rank;
+        if rank < 2 * rem {
+            if rank % 2 == 0 {
+                self.send_round(rank + 1, buf, skip)?;
+                Ok(None)
+            } else {
+                let got = self.recv_expect(rank - 1, buf.len())?;
+                add_into(buf, &got);
+                self.give_buf_inner(got);
+                Ok(Some(rank / 2))
+            }
+        } else {
+            Ok(Some(rank - rem))
+        }
+    }
+
+    /// Unfold phase: the reduced result reaches the folded-out even ranks.
+    fn unfold(&mut self, buf: &mut [f64], rem: usize) -> Result<()> {
+        let rank = self.rank;
+        if rank < 2 * rem {
+            if rank % 2 == 0 {
+                let got = self.recv_expect(rank + 1, buf.len())?;
+                buf.copy_from_slice(&got);
+                self.give_buf_inner(got);
+            } else {
+                self.send_slice(rank - 1, buf)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Recursive doubling: ⌈log₂P⌉ pairwise exchange rounds of the full
+    /// payload. `skip_first_send` marks the round-0 send as already posted
+    /// (non-blocking start).
+    fn allreduce_rd(&mut self, buf: &mut [f64], skip_first_send: bool) -> Result<()> {
+        let p = self.size;
+        let pof2 = pof2_below(p);
+        let rem = p - pof2;
+        let mut skip = skip_first_send;
+        let newrank = self.fold(buf, rem, &mut skip)?;
+        if let Some(nr) = newrank {
+            let mut mask = 1usize;
+            while mask < pof2 {
+                let partner = real_rank(nr ^ mask, rem);
+                self.send_round(partner, buf, &mut skip)?;
+                let got = self.recv_expect(partner, buf.len())?;
+                add_into(buf, &got);
+                self.give_buf_inner(got);
+                mask <<= 1;
+            }
+        }
+        self.unfold(buf, rem)
+    }
+
+    /// Rabenseifner: recursive-halving reduce-scatter, then the mirrored
+    /// recursive-doubling allgather. The payload is split into `pof2`
+    /// near-equal contiguous chunks; chunk boundaries are closed-form so
+    /// the protocol allocates nothing beyond pooled message buffers.
+    fn allreduce_rab(&mut self, buf: &mut [f64], skip_first_send: bool) -> Result<()> {
+        let p = self.size;
+        let pof2 = pof2_below(p);
+        let rem = p - pof2;
+        let len = buf.len();
+        debug_assert!(pof2 >= 2 && len >= pof2);
+        let mut skip = skip_first_send;
+        let newrank = self.fold(buf, rem, &mut skip)?;
+        if let Some(nr) = newrank {
+            let base = len / pof2;
+            let ext = len % pof2;
+            // Element offset of chunk boundary i (first `ext` chunks get +1).
+            let displ = |i: usize| i * base + i.min(ext);
+            // (partner, keep_lo, keep_hi, sent_lo, sent_hi) in chunk units,
+            // logged for the mirrored allgather. log₂P ≤ 64 steps.
+            let mut steps = [(0usize, 0usize, 0usize, 0usize, 0usize); 64];
+            let mut nsteps = 0usize;
+            let (mut clo, mut chi) = (0usize, pof2);
+            let mut mask = pof2 >> 1;
+            // Reduce-scatter: each round, exchange half the live chunk span
+            // with the partner and accumulate into the kept half.
+            while mask > 0 {
+                let pn = nr ^ mask;
+                let partner = real_rank(pn, rem);
+                let mid = clo + (chi - clo) / 2;
+                let (klo, khi, slo, shi) = if nr < pn {
+                    (clo, mid, mid, chi)
+                } else {
+                    (mid, chi, clo, mid)
+                };
+                {
+                    let (lo_e, hi_e) = (displ(slo), displ(shi));
+                    self.send_round(partner, &buf[lo_e..hi_e], &mut skip)?;
+                }
+                let (klo_e, khi_e) = (displ(klo), displ(khi));
+                let got = self.recv_expect(partner, khi_e - klo_e)?;
+                add_into(&mut buf[klo_e..khi_e], &got);
+                self.give_buf_inner(got);
+                steps[nsteps] = (partner, klo, khi, slo, shi);
+                nsteps += 1;
+                clo = klo;
+                chi = khi;
+                mask >>= 1;
+            }
+            // Allgather: replay the exchanges in reverse, swapping roles —
+            // send the gathered kept range, receive the complementary one.
+            for i in (0..nsteps).rev() {
+                let (partner, klo, khi, slo, shi) = steps[i];
+                let (klo_e, khi_e) = (displ(klo), displ(khi));
+                self.send_slice(partner, &buf[klo_e..khi_e])?;
+                let (slo_e, shi_e) = (displ(slo), displ(shi));
+                let got = self.recv_expect(partner, shi_e - slo_e)?;
+                buf[slo_e..shi_e].copy_from_slice(&got);
+                self.give_buf_inner(got);
+            }
+        }
+        self.unfold(buf, rem)
+    }
+
+    /// The protocol's unique round-0 send, if this rank has one that
+    /// depends only on local data (everything except the folded-odd role).
+    /// Returns whether a send was posted.
+    fn post_first_send(&mut self, buf: &[f64], algo: Algo) -> Result<bool> {
+        let p = self.size;
+        let rank = self.rank;
+        let pof2 = pof2_below(p);
+        let rem = p - pof2;
+        if rank < 2 * rem {
+            if rank % 2 == 0 {
+                self.send_slice(rank + 1, buf)?;
+                return Ok(true);
+            }
+            // Folded-odd ranks must receive before their first send.
+            return Ok(false);
+        }
+        let nr = rank - rem;
+        match algo {
+            Algo::RecursiveDoubling => {
+                let partner = real_rank(nr ^ 1, rem);
+                self.send_slice(partner, buf)?;
+            }
+            Algo::Rabenseifner => {
+                let len = buf.len();
+                let base = len / pof2;
+                let ext = len % pof2;
+                let displ = |i: usize| i * base + i.min(ext);
+                let mask = pof2 >> 1;
+                let pn = nr ^ mask;
+                let mid = pof2 / 2;
+                let (slo, shi) = if nr < pn { (mid, pof2) } else { (0, mid) };
+                let partner = real_rank(pn, rem);
+                self.send_slice(partner, &buf[displ(slo)..displ(shi)])?;
+            }
+        }
+        Ok(true)
+    }
+
+    /// The seed repo's reduce-to-0-then-broadcast allreduce (2⌈log₂P⌉
+    /// serialized rounds, full payload each hop). Kept as the benchmark
+    /// baseline and as a numerically independent cross-check oracle for
+    /// the property tests; not used by any solver.
+    pub fn allreduce_sum_reference(&mut self, buf: &mut [f64]) -> Result<()> {
+        self.meter.allreduces += 1;
+        let p = self.size;
+        if p == 1 {
+            return Ok(());
+        }
+        self.check_poison()?;
+        let mut mask = 1usize;
+        while mask < p {
+            if self.rank & mask != 0 {
+                let dst = self.rank & !mask;
+                self.send_slice(dst, buf)?;
+                break;
+            } else {
+                let src = self.rank | mask;
+                if src < p {
+                    let got = self.recv_expect(src, buf.len())?;
+                    add_into(buf, &got);
+                    self.give_buf_inner(got);
+                }
+            }
+            mask <<= 1;
+        }
+        self.broadcast_inner(0, buf)
+    }
+
+    fn broadcast_inner(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
+        let p = self.size;
+        if p == 1 {
+            return Ok(());
+        }
+        let rel = (self.rank + p - root) % p;
+        // Receive phase.
+        let mut mask = 1usize;
+        while mask < p {
+            if rel & mask != 0 {
+                let src = (self.rank + p - mask) % p;
+                let got = self.recv_expect(src, buf.len())?;
+                buf.copy_from_slice(&got);
+                self.give_buf_inner(got);
+                break;
+            }
+            mask <<= 1;
+        }
+        // Send phase (from the highest mask below our receive level down).
+        mask >>= 1;
+        while mask > 0 {
+            if rel + mask < p {
+                let dst = (self.rank + mask) % p;
+                self.send_slice(dst, buf)?;
+            }
+            mask >>= 1;
+        }
+        Ok(())
     }
 }
 
@@ -78,41 +493,54 @@ impl Communicator for ThreadComm {
         self.size
     }
 
-    /// Binomial-tree reduce to rank 0, then binomial-tree broadcast —
-    /// 2·⌈log₂P⌉ rounds, O(log P) messages per rank on the critical path,
-    /// exactly the collective the paper's Theorems charge for.
     fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()> {
         self.meter.allreduces += 1;
-        let p = self.size;
-        if p == 1 {
+        if self.size == 1 {
             return Ok(());
         }
-        // --- reduce to 0 (MPICH binomial) ---
-        let mut mask = 1usize;
-        while mask < p {
-            if self.rank & mask != 0 {
-                let dst = self.rank & !mask;
-                self.send(dst, buf.to_vec())?;
-                break;
-            } else {
-                let src = self.rank | mask;
-                if src < p {
-                    let got = self.recv(src)?;
-                    if got.len() != buf.len() {
-                        return Err(Error::Comm("allreduce length mismatch".into()));
-                    }
-                    for (b, g) in buf.iter_mut().zip(&got) {
-                        *b += g;
-                    }
-                }
-            }
-            mask <<= 1;
+        self.check_poison()?;
+        match self.select_algo(buf.len()) {
+            Algo::RecursiveDoubling => self.allreduce_rd(buf, false),
+            Algo::Rabenseifner => self.allreduce_rab(buf, false),
         }
-        // --- broadcast from 0 ---
-        self.broadcast_inner(0, buf)
+    }
+
+    fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
+        self.meter.allreduces += 1;
+        if self.size == 1 {
+            return Ok(ReduceHandle {
+                buf,
+                state: HandleState::Done,
+            });
+        }
+        self.check_poison()?;
+        let algo = self.select_algo(buf.len());
+        let first_sent = self.post_first_send(&buf, algo)?;
+        Ok(ReduceHandle {
+            buf,
+            state: HandleState::Thread { algo, first_sent },
+        })
+    }
+
+    fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>> {
+        let ReduceHandle { mut buf, state } = handle;
+        match state {
+            HandleState::Done => Ok(buf),
+            HandleState::Thread { algo, first_sent } => {
+                match algo {
+                    Algo::RecursiveDoubling => self.allreduce_rd(&mut buf, first_sent)?,
+                    Algo::Rabenseifner => self.allreduce_rab(&mut buf, first_sent)?,
+                }
+                Ok(buf)
+            }
+        }
     }
 
     fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
+        if self.size == 1 {
+            return Ok(());
+        }
+        self.check_poison()?;
         self.broadcast_inner(root, buf)
     }
 
@@ -122,17 +550,22 @@ impl Communicator for ThreadComm {
         self.meter.all_to_alls += 1;
         let p = self.size;
         if send.len() != p {
-            return Err(Error::Comm(format!(
-                "all_to_all: {} buffers for {p} ranks",
+            return Err(self.poison(format!(
+                "all_to_all: rank {} supplied {} buffers for {p} ranks",
+                self.rank,
                 send.len()
             )));
         }
+        if p == 1 {
+            return Ok(send);
+        }
+        self.check_poison()?;
         let mut out: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
         for (dst, bufv) in send.into_iter().enumerate() {
             if dst == self.rank {
                 out[dst] = bufv;
             } else {
-                self.send(dst, bufv)?;
+                self.send_owned(dst, bufv)?;
             }
         }
         for src in 0..p {
@@ -144,28 +577,21 @@ impl Communicator for ThreadComm {
     }
 
     fn barrier(&mut self) -> Result<()> {
-        // Zero-payload allreduce (counts a message round, no words).
-        let mut token = [0.0f64; 0];
-        // Reuse tree structure with an empty buffer.
-        let p = self.size;
-        if p == 1 {
+        if self.size == 1 {
             return Ok(());
         }
-        let mut mask = 1usize;
-        while mask < p {
-            if self.rank & mask != 0 {
-                let dst = self.rank & !mask;
-                self.send(dst, Vec::new())?;
-                break;
-            } else {
-                let src = self.rank | mask;
-                if src < p {
-                    self.recv(src)?;
-                }
-            }
-            mask <<= 1;
-        }
-        self.broadcast_inner(0, &mut token)
+        self.check_poison()?;
+        // Zero-payload recursive doubling: counts the message rounds, no
+        // words.
+        self.allreduce_rd(&mut [], false)
+    }
+
+    fn take_buf(&mut self, len: usize) -> Vec<f64> {
+        self.take_buf_inner(len)
+    }
+
+    fn give_buf(&mut self, buf: Vec<f64>) {
+        self.give_buf_inner(buf)
     }
 
     fn meter(&self) -> &CostMeter {
@@ -177,38 +603,59 @@ impl Communicator for ThreadComm {
     }
 }
 
-impl ThreadComm {
-    fn broadcast_inner(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
-        let p = self.size;
-        if p == 1 {
-            return Ok(());
-        }
-        let rel = (self.rank + p - root) % p;
-        // Receive phase.
-        let mut mask = 1usize;
-        while mask < p {
-            if rel & mask != 0 {
-                let src = (self.rank + p - mask) % p;
-                let got = self.recv(src)?;
-                if got.len() != buf.len() {
-                    return Err(Error::Comm("broadcast length mismatch".into()));
-                }
-                buf.copy_from_slice(&got);
-                break;
-            }
-            mask <<= 1;
-        }
-        // Send phase (from the highest mask below our receive level down).
-        mask >>= 1;
+/// Exact per-rank (sends, send-words) of one `allreduce_sum` of `len`
+/// words on a `p`-rank group — mirrors the selection and chunking logic so
+/// the CostMeter tests can assert measured == formula.
+pub fn expected_allreduce_sends(p: usize, rank: usize, len: usize) -> (u64, u64) {
+    if p <= 1 {
+        return (0, 0);
+    }
+    let pof2 = pof2_below(p);
+    let rem = p - pof2;
+    let rab = len >= RABENSEIFNER_MIN_WORDS && len >= pof2 && pof2 >= 2;
+    let folded_even = rank < 2 * rem && rank % 2 == 0;
+    let folded_odd = rank < 2 * rem && rank % 2 == 1;
+    if folded_even {
+        // One fold send; the unfold is a receive.
+        return (1, len as u64);
+    }
+    let nr = if folded_odd { rank / 2 } else { rank - rem };
+    let (mut msgs, mut words) = (0u64, 0u64);
+    if rab {
+        let base = len / pof2;
+        let ext = len % pof2;
+        let displ = |i: usize| i * base + i.min(ext);
+        let (mut clo, mut chi) = (0usize, pof2);
+        let mut mask = pof2 >> 1;
         while mask > 0 {
-            if rel + mask < p {
-                let dst = (self.rank + mask) % p;
-                self.send(dst, buf.to_vec())?;
-            }
+            let pn = nr ^ mask;
+            let mid = clo + (chi - clo) / 2;
+            let (klo, khi, slo, shi) = if nr < pn {
+                (clo, mid, mid, chi)
+            } else {
+                (mid, chi, clo, mid)
+            };
+            // Reduce-scatter send of the non-kept half…
+            msgs += 1;
+            words += (displ(shi) - displ(slo)) as u64;
+            // …and the mirrored allgather send of the kept half.
+            msgs += 1;
+            words += (displ(khi) - displ(klo)) as u64;
+            clo = klo;
+            chi = khi;
             mask >>= 1;
         }
-        Ok(())
+    } else {
+        let log2p = pof2.trailing_zeros() as u64;
+        msgs += log2p;
+        words += log2p * len as u64;
     }
+    if folded_odd {
+        // Unfold send of the full result back to the even neighbour.
+        msgs += 1;
+        words += len as u64;
+    }
+    (msgs, words)
 }
 
 /// Run `f(rank, comm)` on P threads and collect per-rank results in rank
@@ -240,7 +687,7 @@ mod tests {
 
     #[test]
     fn allreduce_sums_across_ranks() {
-        for p in [1usize, 2, 3, 4, 5, 8] {
+        for p in [1usize, 2, 3, 4, 5, 6, 7, 8] {
             let results = run_spmd(p, |rank, comm| {
                 let mut buf = vec![rank as f64, 1.0];
                 comm.allreduce_sum(&mut buf).unwrap();
@@ -249,6 +696,26 @@ mod tests {
             let expect = vec![(0..p).sum::<usize>() as f64, p as f64];
             for r in results {
                 assert_eq!(r, expect, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_payload_allreduce_uses_rabenseifner_and_sums() {
+        // Above the crossover: exercise the reduce-scatter/allgather path,
+        // including uneven chunking (len not divisible by pof2).
+        for p in [2usize, 3, 4, 5, 7, 8] {
+            let len = RABENSEIFNER_MIN_WORDS + 13;
+            let results = run_spmd(p, move |rank, comm| {
+                let mut buf: Vec<f64> = (0..len).map(|i| (rank * len + i) as f64).collect();
+                comm.allreduce_sum(&mut buf).unwrap();
+                buf
+            });
+            for i in 0..len {
+                let expect: f64 = (0..p).map(|r| (r * len + i) as f64).sum();
+                for (rank, r) in results.iter().enumerate() {
+                    assert_eq!(r[i], expect, "p={p} rank={rank} idx={i}");
+                }
             }
         }
     }
@@ -284,7 +751,7 @@ mod tests {
         });
         for (rank, got) in results.iter().enumerate() {
             for (src, v) in got.iter().enumerate() {
-                assert_eq!(v, &vec![(src * 10 + rank) as f64]);
+                assert_eq!(v, &[(src * 10 + rank) as f64]);
             }
         }
     }
@@ -304,6 +771,71 @@ mod tests {
                 "p={p}: critical-path msgs {msgs} > 2·log₂P = {}",
                 2 * logp
             );
+        }
+    }
+
+    #[test]
+    fn nonblocking_allreduce_is_bitwise_equal_to_blocking() {
+        for p in [2usize, 3, 5, 8] {
+            for len in [7usize, RABENSEIFNER_MIN_WORDS + 5] {
+                let results = run_spmd(p, move |rank, comm| {
+                    let data: Vec<f64> =
+                        (0..len).map(|i| ((rank + 1) * (i + 1)) as f64 * 0.37).collect();
+                    let mut blocking = data.clone();
+                    comm.allreduce_sum(&mut blocking).unwrap();
+                    let h = comm.iallreduce_start(data).unwrap();
+                    let nonblocking = comm.iallreduce_wait(h).unwrap();
+                    (blocking, nonblocking)
+                });
+                for (rank, (b, nb)) in results.iter().enumerate() {
+                    assert!(b == nb, "p={p} len={len} rank={rank}: bitwise mismatch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reference_allreduce_agrees_with_production() {
+        for p in [3usize, 4, 6] {
+            let results = run_spmd(p, |rank, comm| {
+                let mut a = vec![rank as f64 + 0.25, -(rank as f64)];
+                let mut b = a.clone();
+                comm.allreduce_sum(&mut a).unwrap();
+                comm.allreduce_sum_reference(&mut b).unwrap();
+                (a, b)
+            });
+            for (a, b) in results {
+                for (x, y) in a.iter().zip(&b) {
+                    assert!((x - y).abs() <= 1e-12 * x.abs().max(1.0), "{x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_allreduce_does_not_allocate() {
+        // Pool capacities grow monotonically and the buffer population is
+        // bounded, so allocations must stop once warmed up — including the
+        // uneven message sizes of non-power-of-two fold/unfold phases.
+        // Covers both the Rabenseifner and recursive-doubling regimes.
+        for len in [300usize, 8] {
+            for p in [2usize, 5, 8] {
+                run_spmd(p, move |_rank, comm| {
+                    let mut buf = vec![1.0; len];
+                    for _ in 0..32 {
+                        comm.allreduce_sum(&mut buf).unwrap();
+                    }
+                    let warm = comm.meter().buf_allocs;
+                    for _ in 0..16 {
+                        comm.allreduce_sum(&mut buf).unwrap();
+                    }
+                    assert_eq!(
+                        comm.meter().buf_allocs,
+                        warm,
+                        "pool missed after warmup (p={p}, len={len})"
+                    );
+                });
+            }
         }
     }
 

@@ -21,6 +21,7 @@
 //! seed = 7
 //! record_every = 50
 //! track_gram_cond = false
+//! overlap = false         # non-blocking allreduce pipeline
 //!
 //! [run]
 //! ranks = 4
@@ -63,6 +64,9 @@ pub struct SolverConfig {
     pub record_every: usize,
     pub track_gram_cond: bool,
     pub tol: Option<f64>,
+    /// Overlap the Gram/residual reduction with next-iteration compute
+    /// (non-blocking allreduce pipeline; bitwise-identical trajectory).
+    pub overlap: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -114,6 +118,7 @@ impl ExperimentConfig {
                 record_every: sv.usize_or("record_every", 50)?,
                 track_gram_cond: sv.bool_or("track_gram_cond", false)?,
                 tol: sv.f64_opt("tol")?,
+                overlap: sv.bool_or("overlap", false)?,
             },
             run: RunConfig {
                 ranks: rn.usize_or("ranks", 1)?,
@@ -174,6 +179,7 @@ impl ExperimentConfig {
             record_every: self.solver.record_every,
             track_gram_cond: self.solver.track_gram_cond,
             tol: self.solver.tol,
+            overlap: self.solver.overlap,
         }
     }
 }
@@ -207,6 +213,14 @@ mod tests {
         let text = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = bcd\ns = 16\n";
         let cfg = ExperimentConfig::from_str(text).unwrap();
         assert_eq!(cfg.solver_opts(1.0).s, 1);
+    }
+
+    #[test]
+    fn overlap_flag_parses_and_defaults_off() {
+        let on = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cabcd\noverlap = true\n";
+        assert!(ExperimentConfig::from_str(on).unwrap().solver_opts(1.0).overlap);
+        let off = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cabcd\n";
+        assert!(!ExperimentConfig::from_str(off).unwrap().solver_opts(1.0).overlap);
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub struct ExperimentReport {
     pub ranks: usize,
     pub lambda: f64,
     pub backend: String,
+    /// Whether the non-blocking overlap pipeline was enabled.
+    pub overlap: bool,
     pub wall_ms: f64,
     /// Rank-0 trajectory.
     pub history: History,
@@ -165,6 +167,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
         ranks: p,
         lambda: lam,
         backend: cfg.run.backend.clone(),
+        overlap: opts.overlap,
         wall_ms,
         final_obj_err: history.final_obj_err(),
         final_sol_err: history.final_sol_err(),
@@ -196,9 +199,11 @@ impl ExperimentReport {
             ("ranks", num(self.ranks as f64)),
             ("lambda", num(self.lambda)),
             ("backend", string(&self.backend)),
+            ("overlap", num(if self.overlap { 1.0 } else { 0.0 })),
             ("wall_ms", num(self.wall_ms)),
             ("iters", num(self.history.iters as f64)),
             ("allreduces", num(self.history.meter.allreduces as f64)),
+            ("pool_allocs", num(self.history.pool_allocs() as f64)),
             ("critical_msgs", num(self.critical_msgs as f64)),
             ("critical_words", num(self.critical_words as f64)),
             ("final_obj_err", num(self.final_obj_err)),
@@ -244,6 +249,7 @@ mod tests {
                 record_every: 50,
                 track_gram_cond: false,
                 tol: None,
+                overlap: false,
             },
             run: RunConfig {
                 ranks,
@@ -272,6 +278,26 @@ mod tests {
             "P=1 {} vs P=3 {}",
             r1.final_sol_err,
             r3.final_sol_err
+        );
+    }
+
+    #[test]
+    fn overlap_pipeline_reproduces_blocking_results() {
+        // Same experiment, blocking vs non-blocking comm: identical final
+        // errors (the pipeline is bitwise-equivalent) and identical
+        // allreduce counts (still one collective per outer iteration).
+        let blocking = run_experiment(&cfg("cabcd", 3)).unwrap();
+        let mut c = cfg("cabcd", 3);
+        c.solver.overlap = true;
+        let overlapped = run_experiment(&c).unwrap();
+        assert!(overlapped.overlap);
+        assert_eq!(
+            blocking.final_sol_err, overlapped.final_sol_err,
+            "overlap changed the trajectory"
+        );
+        assert_eq!(
+            blocking.history.meter.allreduces,
+            overlapped.history.meter.allreduces
         );
     }
 

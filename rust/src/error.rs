@@ -1,42 +1,73 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — the crate builds offline with zero
+//! external dependencies, so `thiserror` is not available.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every layer of the coordinator.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
-
-    #[error("linear algebra failure: {0}")]
     Linalg(String),
-
-    #[error("communicator failure: {0}")]
     Comm(String),
-
-    #[error("dataset error: {0}")]
     Dataset(String),
-
-    #[error("artifact/runtime error: {0}")]
     Runtime(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
-
-    #[error("XLA/PJRT error: {0}")]
+    Io(std::io::Error),
     Xla(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Linalg(m) => write!(f, "linear algebra failure: {m}"),
+            Error::Comm(m) => write!(f, "communicator failure: {m}"),
+            Error::Dataset(m) => write!(f, "dataset error: {m}"),
+            Error::Runtime(m) => write!(f, "artifact/runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(m) => write!(f, "XLA/PJRT error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        assert_eq!(
+            Error::Comm("rank 3 hung".into()).to_string(),
+            "communicator failure: rank 3 hung"
+        );
+        assert!(Error::Shape("2 vs 3".into()).to_string().contains("2 vs 3"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -38,6 +38,28 @@ pub trait ComputeBackend {
         r: &mut [f64],
     ) -> Result<()>;
 
+    /// Gram part alone: `g = A_loc[idx,:] · A_loc[idx,:]ᵀ`. Used by the
+    /// overlapped solver pipeline, which computes the *next* iteration's
+    /// Gram (independent of the evolving α/w state) while the current
+    /// reduction is in flight. Must be bitwise identical to the `g` that
+    /// [`ComputeBackend::gram_resid`] produces.
+    fn gram_only(&mut self, a: &Matrix, idx: &[usize], g: &mut [f64]) -> Result<()> {
+        // Default: run the fused kernel against a zero z (G is independent
+        // of z) and discard the residual. Backends with separable kernels
+        // override this.
+        let z = vec![0.0; a.cols()];
+        let mut r = vec![0.0; idx.len()];
+        self.gram_resid(a, idx, &z, g, &mut r)
+    }
+
+    /// Residual part alone: `r = A_loc[idx,:] · z`. Counterpart of
+    /// [`ComputeBackend::gram_only`] for the overlapped pipeline; must be
+    /// bitwise identical to the `r` of [`ComputeBackend::gram_resid`].
+    fn resid_only(&mut self, a: &Matrix, idx: &[usize], z: &[f64], r: &mut [f64]) -> Result<()> {
+        let mut g = vec![0.0; idx.len() * idx.len()];
+        self.gram_resid(a, idx, z, &mut g, r)
+    }
+
     /// Primal s-step inner solve (eq. 8; mirrors
     /// `python/compile/model.py::ca_inner_solve`). Returns the flat
     /// `(s·b)` Δw vector.
@@ -110,6 +132,14 @@ impl ComputeBackend for NativeBackend {
         a.sampled_gram(idx, g)?;
         a.sampled_matvec(idx, z, r)?;
         Ok(())
+    }
+
+    fn gram_only(&mut self, a: &Matrix, idx: &[usize], g: &mut [f64]) -> Result<()> {
+        a.sampled_gram(idx, g)
+    }
+
+    fn resid_only(&mut self, a: &Matrix, idx: &[usize], z: &[f64], r: &mut [f64]) -> Result<()> {
+        a.sampled_matvec(idx, z, r)
     }
 
     fn ca_inner_solve(
@@ -266,6 +296,25 @@ mod tests {
                 assert!((g[j * 3 + t] - gv).abs() < 1e-12);
             }
         }
+    }
+
+    /// The split kernels feeding the overlapped pipeline must reproduce the
+    /// fused kernel bit for bit.
+    #[test]
+    fn split_gram_and_resid_match_fused() {
+        let a = Matrix::Dense(DenseMatrix::from_vec(5, 9, rngv(45, 8)));
+        let z = rngv(9, 9);
+        let idx = [4usize, 1, 3];
+        let mut be = NativeBackend::new();
+        let mut g_f = vec![0.0; 9];
+        let mut r_f = vec![0.0; 3];
+        be.gram_resid(&a, &idx, &z, &mut g_f, &mut r_f).unwrap();
+        let mut g_s = vec![0.0; 9];
+        let mut r_s = vec![0.0; 3];
+        be.gram_only(&a, &idx, &mut g_s).unwrap();
+        be.resid_only(&a, &idx, &z, &mut r_s).unwrap();
+        assert_eq!(g_f, g_s);
+        assert_eq!(r_f, r_s);
     }
 
     /// s=1 primal inner solve must equal the classical subproblem solve.

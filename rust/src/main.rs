@@ -110,7 +110,7 @@ USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
   train       --config FILE | [--dataset abalone|news20|a9a|real-sim]
               [--scale K] [--method bcd|cabcd|bdcd|cabdcd|cg] [--b B] [--s S]
               [--iters H] [--lam L] [--ranks P] [--backend native|xla]
-              [--artifact-dir DIR] [--seed N] [--json]
+              [--artifact-dir DIR] [--seed N] [--overlap] [--json]
   gen-data    --out FILE [--name abalone] [--scale K] [--seed N] [--verify]
   cost-table  [--d D] [--n N] [--p P] [--b B] [--s S] [--h H]
   scaling     [--mode strong|weak] [--machine mpi|spark] [--d D] [--log2n E]
@@ -171,6 +171,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 record_every: args.usize_or("record-every", (iters / 20).max(1))?,
                 track_gram_cond: args.flag("track-gram-cond"),
                 tol: args.f64_opt("tol")?,
+                overlap: args.flag("overlap"),
             },
             run: RunConfig {
                 ranks: args.usize_or("ranks", 1)?,

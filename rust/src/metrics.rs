@@ -73,6 +73,13 @@ impl History {
         CondStats::from_samples(self.gram_conds.clone())
     }
 
+    /// Heap allocations taken by this rank's communicator buffer pool
+    /// during the solve — zero in steady state; a nonzero drift flags a
+    /// regression in the zero-allocation collective hot path.
+    pub fn pool_allocs(&self) -> u64 {
+        self.meter.buf_allocs
+    }
+
     /// First recorded iteration whose |objective error| ≤ tol.
     pub fn iters_to_obj_tol(&self, tol: f64) -> Option<usize> {
         self.records

@@ -19,6 +19,19 @@ use crate::error::{Error, Result};
 use crate::gram::ComputeBackend;
 use crate::matrix::Matrix;
 
+// Default offline build: compile against the fail-fast shim. A vendored
+// `xla` dependency plus `RUSTFLAGS="--cfg cabcd_xla"` swaps in the real
+// PJRT bindings (the `xla::` paths below resolve to the extern crate).
+#[cfg(not(cabcd_xla))]
+#[path = "xla_shim.rs"]
+mod xla;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
 /// Parsed `artifacts/manifest.tsv` (see aot.py; the JSON twin is for
 /// humans/tooling — Rust reads the TSV to stay serde-free offline).
 #[derive(Clone, Debug)]

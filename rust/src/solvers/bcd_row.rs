@@ -153,9 +153,20 @@ pub fn run<C: Communicator>(
                 }
             }
         }
-        comm.allreduce_sum(&mut buf)?;
-
-        overlap_tensor_into(&blocks, &mut overlap);
+        // THE allreduce of this outer iteration. In overlap mode the
+        // overlap-tensor assembly (independent of the reduced values) is
+        // hidden behind the in-flight reduction; the payload and reduction
+        // algorithm are unchanged, so the trajectory is bitwise identical.
+        if opts.overlap {
+            // Move the hoisted buffer into the handle and take it back
+            // reduced — no payload copies on the hot path.
+            let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
+            overlap_tensor_into(&blocks, &mut overlap);
+            buf = comm.iallreduce_wait(handle)?;
+        } else {
+            comm.allreduce_sum(&mut buf)?;
+            overlap_tensor_into(&blocks, &mut overlap);
+        }
         {
             let (g_buf, rest) = buf.split_at(sb * sb);
             let (r_buf, w_buf) = rest.split_at(sb);
@@ -311,17 +322,19 @@ mod tests {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         // Matched layout, serial.
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
         let w_col = bcd::run(&x, &y, 48, &opts, None, &mut c, &mut be).unwrap().w;
 
-        // Row layout over P ranks.
-        for p in [1usize, 3, 4] {
+        // Row layout over P ranks, blocking and overlapped comm paths.
+        for (p, overlap) in [(1usize, false), (3, false), (4, false), (4, true)] {
             let row_part = BlockPartition::new(12, p);
             let col_part = BlockPartition::new(48, p);
-            let opts2 = opts.clone();
+            let mut opts2 = opts.clone();
+            opts2.overlap = overlap;
             let x2 = &x;
             let y2 = &y;
             let outs = run_spmd(p, move |rank, comm| {
@@ -371,6 +384,7 @@ mod tests {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let row_part = BlockPartition::new(64, p);
         let col_part = BlockPartition::new(40, p);

@@ -13,6 +13,12 @@
 //! and `r = A_loc[J,:]·w_loc` (`= IᵀXᵀw`), **one allreduce**, the s dual
 //! subproblem solves of eq. (18), then the deferred updates
 //! `α[J_t] += Δα_t` (replicated) and `w_loc -= (1/λn)·A_loc[J,:]ᵀ δ`.
+//!
+//! With [`SolverOpts::overlap`] the iteration is software-pipelined like
+//! the primal solver: `G_{k+1}` (a function of A and the shared-seed
+//! sample stream only) is computed while `[G_k | r_k]` reduces through the
+//! non-blocking allreduce — one collective per outer iteration, bitwise
+//! identical trajectory.
 
 use crate::comm::Communicator;
 use crate::error::Result;
@@ -22,7 +28,9 @@ use crate::matrix::Matrix;
 use crate::metrics::{relative_objective_error, relative_solution_error, History, IterRecord,
     Reference};
 use crate::sampling::{overlap_tensor_into, BlockSampler};
-use crate::solvers::common::{metered_out, objective_value, DualOutput, SolverOpts};
+use crate::solvers::common::{
+    flatten_blocks, metered_out, objective_value, DualOutput, SolverOpts,
+};
 
 /// Run BDCD / CA-BDCD on this rank's shard.
 ///
@@ -41,6 +49,9 @@ pub fn run<C: Communicator>(
     comm: &mut C,
     backend: &mut dyn ComputeBackend,
 ) -> Result<DualOutput> {
+    if opts.overlap {
+        return run_overlapped(a_loc, y, d_global, d_offset, opts, reference, comm, backend);
+    }
     let n = a_loc.rows();
     let d_loc = a_loc.cols();
     opts.validate(n)?;
@@ -85,11 +96,7 @@ pub fn run<C: Communicator>(
     let cond_stride = if sb <= 128 { 1 } else { outer.div_ceil(16).max(1) };
     'outer_loop: for k in 0..outer {
         let blocks = sampler.draw_blocks(s, b);
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                idx_flat[j * b + i] = row;
-            }
-        }
+        flatten_blocks(&blocks, b, &mut idx_flat);
 
         // Raw partial Gram + residual (contracting along the local feature
         // slice): G_part = A[J,:]·A[J,:]ᵀ, r_part = A[J,:]·w_loc.
@@ -156,6 +163,162 @@ pub fn run<C: Communicator>(
                 }
             }
         }
+    }
+
+    history.meter = *comm.meter();
+    let w_full = gather_w(&w_loc, d_global, d_offset, comm)?;
+    Ok(DualOutput {
+        w_loc,
+        w_full,
+        alpha,
+        history,
+    })
+}
+
+/// Software-pipelined variant (`opts.overlap`): `[G_k | r_k]` reduces
+/// non-blockingly while `G_{k+1}` and the overlap tensor are computed.
+/// One collective per outer iteration, bitwise identical to blocking.
+#[allow(clippy::too_many_arguments)]
+fn run_overlapped<C: Communicator>(
+    a_loc: &Matrix,
+    y: &[f64],
+    d_global: usize,
+    d_offset: usize,
+    opts: &SolverOpts,
+    reference: Option<&Reference>,
+    comm: &mut C,
+    backend: &mut dyn ComputeBackend,
+) -> Result<DualOutput> {
+    let n = a_loc.rows();
+    let d_loc = a_loc.cols();
+    opts.validate(n)?;
+    let (s, b) = (opts.s, opts.b);
+    let sb = s * b;
+    let inv_n = 1.0 / n as f64;
+    let lam = opts.lam;
+
+    let mut alpha = vec![0.0; n];
+    let mut w_loc = vec![0.0; d_loc];
+    let mut history = History::default();
+
+    let mut a_blocks = vec![0.0; sb];
+    let mut y_blocks = vec![0.0; sb];
+    let mut gram_scaled = vec![0.0; sb * sb];
+    let mut idx_cur = vec![0usize; sb];
+    let mut idx_next = vec![0usize; sb];
+    let mut scaled_deltas = vec![0.0; sb];
+    let mut overlap = vec![0.0; s * s * b * b];
+
+    let mut sampler = BlockSampler::new(n, opts.seed);
+
+    record(
+        &mut history,
+        0,
+        &w_loc,
+        d_global,
+        d_offset,
+        a_loc,
+        y,
+        lam,
+        reference,
+        comm,
+    )?;
+
+    let outer = opts.outer_iters();
+    let cond_stride = if sb <= 128 { 1 } else { outer.div_ceil(16).max(1) };
+
+    let mut blocks: Vec<Vec<usize>> = Vec::new();
+    let mut next_buf: Vec<f64> = Vec::new();
+    if outer > 0 {
+        blocks = sampler.draw_blocks(s, b);
+        flatten_blocks(&blocks, b, &mut idx_cur);
+        next_buf = comm.take_buf(sb * sb + sb);
+        backend.gram_only(a_loc, &idx_cur, &mut next_buf[..sb * sb])?;
+    }
+    'outer_loop: for k in 0..outer {
+        let mut buf = std::mem::take(&mut next_buf); // holds G_k
+
+        // r_k = A_loc[J,:] · w_loc into the buffer tail.
+        backend.resid_only(a_loc, &idx_cur, &w_loc, &mut buf[sb * sb..])?;
+
+        // THE communication of this outer iteration — non-blocking.
+        let handle = comm.iallreduce_start(buf)?;
+
+        // ---- local work hidden behind the in-flight reduction -----------
+        let mut pending_blocks: Option<Vec<Vec<usize>>> = None;
+        if k + 1 < outer {
+            let nb = sampler.draw_blocks(s, b);
+            flatten_blocks(&nb, b, &mut idx_next);
+            next_buf = comm.take_buf(sb * sb + sb);
+            backend.gram_only(a_loc, &idx_next, &mut next_buf[..sb * sb])?;
+            pending_blocks = Some(nb);
+        }
+        overlap_tensor_into(&blocks, &mut overlap);
+        for (j, blk) in blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                a_blocks[j * b + i] = alpha[row];
+                y_blocks[j * b + i] = y[row];
+            }
+        }
+        // ------------------------------------------------------------------
+        let buf = comm.iallreduce_wait(handle)?;
+
+        if opts.track_gram_cond && k % cond_stride == 0 {
+            for i in 0..sb {
+                for j in 0..sb {
+                    gram_scaled[i * sb + j] = (inv_n * inv_n / lam) * buf[i * sb + j]
+                        + if i == j { inv_n } else { 0.0 };
+                }
+            }
+            history.gram_conds.push(condition_number(&gram_scaled, sb));
+        }
+
+        // Replicated dual inner solve (eq. 18) and deferred updates.
+        let (g_buf, r_buf) = buf.split_at(sb * sb);
+        let deltas = backend.ca_dual_inner_solve(
+            s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n,
+        )?;
+        for (j, blk) in blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                alpha[row] += deltas[j * b + i];
+            }
+        }
+        let scale = -1.0 / (lam * n as f64);
+        for (sd, &dv) in scaled_deltas.iter_mut().zip(&deltas) {
+            *sd = scale * dv;
+        }
+        backend.alpha_update(a_loc, &idx_cur, &scaled_deltas, &mut w_loc)?;
+        comm.give_buf(buf);
+
+        if let Some(nb) = pending_blocks {
+            blocks = nb;
+            std::mem::swap(&mut idx_cur, &mut idx_next);
+        }
+
+        let h_now = (k + 1) * s;
+        history.iters = h_now;
+        if should_record(h_now, s, opts) || k + 1 == outer {
+            record(
+                &mut history,
+                h_now,
+                &w_loc,
+                d_global,
+                d_offset,
+                a_loc,
+                y,
+                lam,
+                reference,
+                comm,
+            )?;
+            if let (Some(tol), Some(_)) = (opts.tol, reference) {
+                if history.final_obj_err() <= tol {
+                    break 'outer_loop;
+                }
+            }
+        }
+    }
+    if !next_buf.is_empty() {
+        comm.give_buf(next_buf);
     }
 
     history.meter = *comm.meter();
@@ -258,7 +421,7 @@ mod tests {
         let x = DenseMatrix::from_vec(5, 30, data);
         let xm = Matrix::Dense(x);
         let mut y = vec![0.0; 30];
-        xm.matvec_t(&vec![0.5; 5], &mut y).unwrap();
+        xm.matvec_t(&[0.5; 5], &mut y).unwrap();
         (xm, y)
     }
 
@@ -330,6 +493,31 @@ mod tests {
         for (p, q) in w1.iter().zip(&w2) {
             assert!((p - q).abs() < 1e-10, "{p} vs {q}");
         }
+    }
+
+    #[test]
+    fn overlap_mode_is_bitwise_identical_serial() {
+        let (x, y) = toy();
+        let a = x.transpose();
+        let mut opts = SolverOpts {
+            b: 3,
+            s: 4,
+            lam: 0.1,
+            iters: 24,
+            seed: 6,
+            record_every: 0,
+            ..Default::default()
+        };
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let w1 = run(&a, &y, 5, 0, &opts, None, &mut comm, &mut be)
+            .unwrap()
+            .w_full;
+        opts.overlap = true;
+        let w2 = run(&a, &y, 5, 0, &opts, None, &mut comm, &mut be)
+            .unwrap()
+            .w_full;
+        assert_eq!(w1, w2, "overlap pipeline changed the dual trajectory");
     }
 
     #[test]

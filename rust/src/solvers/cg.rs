@@ -216,7 +216,7 @@ mod tests {
         }
         let x = Matrix::Dense(DenseMatrix::from_vec(8, 50, data));
         let mut y = vec![0.0; 50];
-        x.matvec_t(&vec![1.0; 8], &mut y).unwrap();
+        x.matvec_t(&[1.0; 8], &mut y).unwrap();
         (x, y)
     }
 

@@ -29,6 +29,23 @@ pub struct CocoaOpts {
     pub local_iters: usize,
     pub seed: u64,
     pub record_every: usize,
+    /// Reduce the Δw contribution with the non-blocking allreduce, hiding
+    /// it behind the local dual-block commit (which is independent of the
+    /// combined Δw). Bitwise identical to the blocking path.
+    pub overlap: bool,
+}
+
+impl Default for CocoaOpts {
+    fn default() -> Self {
+        CocoaOpts {
+            lam: 1e-3,
+            rounds: 100,
+            local_iters: 100,
+            seed: 0,
+            record_every: 0,
+            overlap: false,
+        }
+    }
 }
 
 /// Output: replicated w, this rank's dual slice, history.
@@ -107,13 +124,27 @@ pub fn run<C: Communicator>(
         // Combine with γ = 1/P: α_[k] += γΔα_[k]; w += γ·ΣΔw_k. The
         // averaging preserves the primal-dual coupling but damps every
         // machine's progress — the "changes the convergence behavior"
-        // contrast the paper draws against the CA transformation.
-        comm.allreduce_sum(&mut dw)?;
-        for (wi, dv) in w.iter_mut().zip(&dw) {
-            *wi += dv / p;
-        }
-        for (a, &work) in alpha_loc.iter_mut().zip(&alpha_work) {
-            *a += (work - *a) / p;
+        // contrast the paper draws against the CA transformation. In
+        // overlap mode the local dual-block commit (independent of the
+        // combined Δw) hides the in-flight reduction.
+        if opts.overlap {
+            let handle = comm.iallreduce_start(dw)?;
+            for (a, &work) in alpha_loc.iter_mut().zip(&alpha_work) {
+                *a += (work - *a) / p;
+            }
+            let dw = comm.iallreduce_wait(handle)?;
+            for (wi, dv) in w.iter_mut().zip(&dw) {
+                *wi += dv / p;
+            }
+            comm.give_buf(dw);
+        } else {
+            comm.allreduce_sum(&mut dw)?;
+            for (wi, dv) in w.iter_mut().zip(&dw) {
+                *wi += dv / p;
+            }
+            for (a, &work) in alpha_loc.iter_mut().zip(&alpha_work) {
+                *a += (work - *a) / p;
+            }
         }
 
         if (opts.record_every > 0 && round % opts.record_every == 0) || round == opts.rounds {
@@ -186,12 +217,15 @@ mod tests {
     #[test]
     fn cocoa_converges_toward_optimum() {
         let (ds, lam, r) = setup();
+        // Overlap mode: exercises the non-blocking Δw reduction SPMD (the
+        // trajectory and the one-allreduce-per-round count are unchanged).
         let opts = CocoaOpts {
             lam,
             rounds: 150,
             local_iters: 400,
             seed: 1,
             record_every: 0,
+            overlap: true,
         };
         let shards = partition_primal(&ds, 2).unwrap();
         let opts2 = opts.clone();
@@ -219,6 +253,7 @@ mod tests {
             local_iters: 200,
             seed: 9,
             record_every: 0,
+            overlap: false,
         };
         let mut finals = Vec::new();
         for p in [1usize, 4] {

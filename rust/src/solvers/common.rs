@@ -26,6 +26,13 @@ pub struct SolverOpts {
     pub track_gram_cond: bool,
     /// Early stop once |objective error| ≤ tol (needs a reference).
     pub tol: Option<f64>,
+    /// Overlap communication with computation: reduce the `[G | r]` buffer
+    /// with the non-blocking allreduce and hide it behind the *next* outer
+    /// iteration's local Gram computation (which depends only on X and the
+    /// shared-seed sample stream, not on the evolving α/w state). The
+    /// trajectory is bitwise identical to the blocking path and the
+    /// allreduce count stays exactly H/s.
+    pub overlap: bool,
 }
 
 impl Default for SolverOpts {
@@ -39,6 +46,7 @@ impl Default for SolverOpts {
             record_every: 10,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         }
     }
 }
@@ -83,6 +91,16 @@ pub struct DualOutput {
     pub w_full: Vec<f64>,
     pub alpha: Vec<f64>,
     pub history: History,
+}
+
+/// Flatten `s` sampled blocks of size `b` into a contiguous index list
+/// (the layout every [`crate::gram::ComputeBackend`] kernel consumes).
+pub fn flatten_blocks(blocks: &[Vec<usize>], b: usize, idx_flat: &mut [usize]) {
+    for (j, blk) in blocks.iter().enumerate() {
+        for (i, &row) in blk.iter().enumerate() {
+            idx_flat[j * b + i] = row;
+        }
+    }
 }
 
 /// Run `f` (metric-evaluation communication) without polluting the solver's

@@ -81,7 +81,7 @@ mod tests {
         }
         let x = Matrix::Dense(DenseMatrix::from_vec(7, 60, data));
         let mut y = vec![0.0; 60];
-        x.matvec_t(&vec![2.0; 7], &mut y).unwrap();
+        x.matvec_t(&[2.0; 7], &mut y).unwrap();
         let lam = 0.05;
         let mut comm = SerialComm::new();
         let rf = cg::compute_reference(&x, &y, 60, lam, &mut comm).unwrap();

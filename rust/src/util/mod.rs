@@ -1,10 +1,11 @@
 //! Dependency-free utilities: deterministic PRNG, INI-style key=value
 //! config parsing, JSON emission, and a micro property-testing harness.
 //!
-//! This repo builds fully offline against a minimal vendored crate set
-//! (xla/anyhow/thiserror), so the usual ecosystem crates (rand, serde,
-//! clap, proptest, criterion) are re-implemented here at the scale this
-//! project needs.
+//! This repo builds fully offline with **zero external dependencies** (the
+//! optional PJRT runtime needs a vendored `xla` crate behind
+//! `--cfg cabcd_xla`), so the usual ecosystem crates (rand, serde, clap,
+//! proptest, criterion, thiserror) are re-implemented here at the scale
+//! this project needs.
 
 pub mod ini;
 pub mod json;

@@ -43,6 +43,7 @@ fn prop_ca_bcd_equals_bcd_for_random_s_and_b() {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
@@ -85,6 +86,7 @@ fn prop_ca_bdcd_equals_bdcd_for_random_s_and_b() {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
@@ -122,6 +124,7 @@ fn prop_duplicate_coordinates_across_inner_blocks_are_exact() {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
@@ -136,6 +139,86 @@ fn prop_duplicate_coordinates_across_inner_blocks_are_exact() {
         }
         Ok(())
     });
+}
+
+/// Acceptance criterion of the non-blocking overhaul: the SPMD trajectory
+/// is **bitwise stable** across the blocking and overlapped communication
+/// paths, for both the primal and the dual solver, at power-of-two and
+/// non-power-of-two rank counts — and the allreduce count stays exactly
+/// H/s in both modes (the pipeline does not add collectives).
+#[test]
+fn overlap_pipeline_is_bitwise_stable_spmd() {
+    use cabcd::comm::thread::run_spmd;
+    use cabcd::coordinator::{partition_dual, partition_primal};
+    use cabcd::matrix::gen::{generate, scaled_specs};
+
+    let spec = &scaled_specs(8)[0]; // abalone-s8
+    let ds = generate(spec, 5).unwrap();
+    let mk = |overlap: bool| SolverOpts {
+        b: 2,
+        s: 4,
+        lam: spec.lambda(),
+        iters: 48,
+        seed: 13,
+        record_every: 0,
+        track_gram_cond: false,
+        tol: None,
+        overlap,
+    };
+    for p in [2usize, 3, 5] {
+        // Primal.
+        let shards = partition_primal(&ds, p).unwrap();
+        let mut runs = Vec::new();
+        for overlap in [false, true] {
+            let opts = mk(overlap);
+            let outs = run_spmd(p, |rank, comm| {
+                let mut be = NativeBackend::new();
+                let sh = &shards[rank];
+                bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, &opts, None, comm, &mut be).unwrap()
+            });
+            assert_eq!(
+                outs[0].history.meter.allreduces,
+                48 / 4,
+                "P={p} overlap={overlap}: collective count changed"
+            );
+            runs.push(outs.into_iter().map(|o| o.w).collect::<Vec<_>>());
+        }
+        for (rank, (wb, wo)) in runs[0].iter().zip(&runs[1]).enumerate() {
+            assert!(
+                wb == wo,
+                "P={p} rank={rank}: primal overlap trajectory not bitwise stable"
+            );
+        }
+        // Dual (feature dimension d=4 caps the dual rank count).
+        let p = p.min(4);
+        let shards = partition_dual(&ds, p).unwrap();
+        let mut runs = Vec::new();
+        for overlap in [false, true] {
+            let opts = mk(overlap);
+            let outs = run_spmd(p, |rank, comm| {
+                let mut be = NativeBackend::new();
+                let sh = &shards[rank];
+                bdcd::run(
+                    &sh.a_loc,
+                    &sh.y,
+                    sh.d_global,
+                    sh.d_offset,
+                    &opts,
+                    None,
+                    comm,
+                    &mut be,
+                )
+                .unwrap()
+            });
+            runs.push(outs.into_iter().map(|o| o.w_full).collect::<Vec<_>>());
+        }
+        for (rank, (wb, wo)) in runs[0].iter().zip(&runs[1]).enumerate() {
+            assert!(
+                wb == wo,
+                "P={p} rank={rank}: dual overlap trajectory not bitwise stable"
+            );
+        }
+    }
 }
 
 #[test]
@@ -154,6 +237,7 @@ fn allreduce_counts_scale_as_h_over_s() {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();

@@ -1,11 +1,13 @@
 //! Property tests of the communicator substrate: the collectives must be
 //! exact (allreduce ≡ serial sum, all-to-all ≡ transpose of payload
 //! matrix, broadcast ≡ replication) for arbitrary rank counts, payload
-//! sizes, and roots — and their measured message counts must stay within
-//! the binomial-tree bounds the cost model charges.
+//! sizes, and roots; the non-blocking path must be bitwise identical to
+//! the blocking one; measured message/word counts must equal the
+//! recursive-doubling / Rabenseifner formulas the cost model charges; and
+//! protocol violations must poison the group instead of deadlocking it.
 
 use cabcd::comm::cost::CostMeter;
-use cabcd::comm::thread::run_spmd;
+use cabcd::comm::thread::{expected_allreduce_sends, run_spmd, RABENSEIFNER_MIN_WORDS};
 use cabcd::comm::Communicator;
 use cabcd::prop_assert;
 use cabcd::util::proptest::{check, Gen};
@@ -40,6 +42,50 @@ fn prop_allreduce_equals_serial_sum() {
         }
         Ok(())
     });
+}
+
+/// Regression coverage for the non-power-of-two fold/unfold branches at
+/// exactly the rank counts the seed's wrap-around logic mishandled, in
+/// both the recursive-doubling and Rabenseifner regimes, for blocking and
+/// non-blocking entry points and for broadcast from every root.
+#[test]
+fn non_power_of_two_rank_counts_are_exact() {
+    for p in [3usize, 5, 6, 7] {
+        for len in [1usize, 9, RABENSEIFNER_MIN_WORDS + 3] {
+            let results = run_spmd(p, move |rank, comm| {
+                let data: Vec<f64> = (0..len)
+                    .map(|i| ((rank + 1) * (i + 2)) as f64)
+                    .collect();
+                let mut blocking = data.clone();
+                comm.allreduce_sum(&mut blocking).unwrap();
+                let handle = comm.iallreduce_start(data).unwrap();
+                let nonblocking = comm.iallreduce_wait(handle).unwrap();
+                comm.barrier().unwrap();
+                (blocking, nonblocking)
+            });
+            for i in 0..len {
+                let expect: f64 = (0..p).map(|r| ((r + 1) * (i + 2)) as f64).sum();
+                for (rank, (b, nb)) in results.iter().enumerate() {
+                    assert_eq!(b[i], expect, "p={p} len={len} rank={rank} idx={i}");
+                    assert_eq!(b[i], nb[i], "p={p} len={len} rank={rank}: nb differs");
+                }
+            }
+        }
+        for root in 0..p {
+            let results = run_spmd(p, move |rank, comm| {
+                let mut buf = if rank == root {
+                    vec![root as f64 + 0.5; 5]
+                } else {
+                    vec![0.0; 5]
+                };
+                comm.broadcast(root, &mut buf).unwrap();
+                buf
+            });
+            for (rank, r) in results.iter().enumerate() {
+                assert_eq!(r, &[root as f64 + 0.5; 5], "p={p} root={root} rank={rank}");
+            }
+        }
+    }
 }
 
 #[test]
@@ -120,42 +166,168 @@ fn prop_allreduce_critical_path_is_logarithmic() {
     });
 }
 
+/// Theorem-level accounting, measured: per-rank sends and send-words of
+/// one allreduce must equal the recursive-doubling formula (`log₂P` full
+/// payloads) for small buffers and the Rabenseifner formula
+/// (`≈2·len·(P−1)/P` words over `2·log₂P` halving rounds) for large ones,
+/// including the non-power-of-two fold/unfold corrections.
 #[test]
-fn prop_allreduce_word_count_matches_payload() {
-    // Theorem 1 charges O(b² log P) words per allreduce of a b² payload:
-    // every word a rank sends is the payload length times its tree sends.
-    check(10, |g| {
-        let p = g.usize_in(2, 9);
-        let len = g.usize_in(1, 100);
+fn prop_allreduce_message_counts_match_formulas() {
+    check(20, |g| {
+        let p = g.usize_in(2, 10);
+        let len = if g.bool() {
+            g.usize_in(1, 128) // recursive-doubling regime
+        } else {
+            g.usize_in(RABENSEIFNER_MIN_WORDS, RABENSEIFNER_MIN_WORDS + 512)
+        };
         let meters: Vec<CostMeter> = run_spmd(p, move |_rank, comm| {
             let mut buf = vec![1.0; len];
             comm.allreduce_sum(&mut buf).unwrap();
             *comm.meter()
         });
         for (rank, m) in meters.iter().enumerate() {
+            let (msgs, words) = expected_allreduce_sends(p, rank, len);
             prop_assert!(
-                m.words % len as u64 == 0,
-                "p={p} rank={rank}: {} words not a multiple of payload {len}",
+                m.msgs == msgs,
+                "p={p} len={len} rank={rank}: {} msgs, formula says {msgs}",
+                m.msgs
+            );
+            prop_assert!(
+                m.words == words,
+                "p={p} len={len} rank={rank}: {} words, formula says {words}",
                 m.words
             );
         }
-        // Total traffic of reduce+bcast over a binomial tree: 2(P−1) sends.
-        let total: u64 = meters.iter().map(|m| m.msgs).sum();
-        prop_assert!(
-            total == 2 * (p as u64 - 1),
-            "p={p}: total sends {total} != {}",
-            2 * (p as u64 - 1)
-        );
+        // Global sanity: sends and receives balance across the group.
+        let sent: u64 = meters.iter().map(|m| m.msgs).sum();
+        let recvd: u64 = meters.iter().map(|m| m.recv_msgs).sum();
+        prop_assert!(sent == recvd, "p={p} len={len}: {sent} sends vs {recvd} recvs");
         Ok(())
     });
+}
+
+/// Rabenseifner must beat recursive doubling on bandwidth for the large
+/// `sb² + sb` Gram payloads — the reason the tentpole switches algorithm.
+#[test]
+fn rabenseifner_words_beat_recursive_doubling_scaling() {
+    let len = 64 * 64 + 64; // sb²+sb at sb=64
+    for p in [4usize, 8, 16] {
+        let (_, words) = expected_allreduce_sends(p, p - 1, len);
+        let rd_words = (p.trailing_zeros() as u64) * len as u64;
+        assert!(
+            words * 2 < rd_words * (p as u64).min(4),
+            "p={p}: rabenseifner {words} vs rd {rd_words}"
+        );
+        // Exact bandwidth bound: 2·len·(P−1)/P words per active rank
+        // (+1 word slack per round for uneven chunk boundaries).
+        let bound = 2 * (len as u64) * (p as u64 - 1) / p as u64 + 2 * p.trailing_zeros() as u64;
+        assert!(words <= bound, "p={p}: {words} > bound {bound}");
+    }
+}
+
+/// Property: the non-blocking start/wait pair is bitwise identical to the
+/// blocking allreduce across random rank counts and payload sizes (both
+/// algorithm regimes), and the buffer pool reaches an allocation-free
+/// steady state.
+#[test]
+fn prop_nonblocking_allreduce_bitwise_equals_blocking() {
+    check(16, |g| {
+        let p = g.usize_in(2, 9);
+        let len = if g.bool() {
+            g.usize_in(1, 200)
+        } else {
+            g.usize_in(RABENSEIFNER_MIN_WORDS, 2 * RABENSEIFNER_MIN_WORDS)
+        };
+        let seed = g.seed;
+        let results = run_spmd(p, move |rank, comm| {
+            let mut gen = Gen::new(seed ^ (rank as u64).wrapping_mul(0xABCD));
+            let data = gen.vec_normal(len);
+            let mut blocking = data.clone();
+            comm.allreduce_sum(&mut blocking).unwrap();
+            let payload = {
+                let mut b = comm.take_buf(len);
+                b.copy_from_slice(&data);
+                b
+            };
+            let handle = comm.iallreduce_start(payload).unwrap();
+            let nonblocking = comm.iallreduce_wait(handle).unwrap();
+            let ok = blocking == nonblocking;
+            comm.give_buf(nonblocking);
+            (ok, comm.meter().allreduces)
+        });
+        for (rank, (ok, allreduces)) in results.iter().enumerate() {
+            prop_assert!(*ok, "p={p} len={len} rank={rank}: nb != blocking");
+            prop_assert!(
+                *allreduces == 2,
+                "p={p} rank={rank}: iallreduce not metered as an allreduce"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Pool steady state under the solver-shaped workload: repeated
+/// fixed-size non-blocking allreduces stop allocating after warmup.
+#[test]
+fn nonblocking_pool_reaches_zero_alloc_steady_state() {
+    for p in [2usize, 4, 8] {
+        run_spmd(p, |_rank, comm| {
+            let len = 16 * 16 + 16; // an sb²+sb payload
+            for _ in 0..32 {
+                let buf = comm.take_buf(len);
+                let h = comm.iallreduce_start(buf).unwrap();
+                let out = comm.iallreduce_wait(h).unwrap();
+                comm.give_buf(out);
+            }
+            let warm = comm.meter().buf_allocs;
+            for _ in 0..16 {
+                let buf = comm.take_buf(len);
+                let h = comm.iallreduce_start(buf).unwrap();
+                let out = comm.iallreduce_wait(h).unwrap();
+                comm.give_buf(out);
+            }
+            assert_eq!(comm.meter().buf_allocs, warm, "p={p}: pool drift");
+        });
+    }
+}
+
+/// A payload-length mismatch must surface as a poisoned-group error on
+/// every rank — not as one `Error::Comm` plus P−1 ranks blocked forever
+/// in `recv` (the seed behavior). Every rank runs two collectives; the
+/// sticky poison guarantees all of them fail by the second attempt, and
+/// `run_spmd` returning at all proves nobody deadlocked.
+#[test]
+fn length_mismatch_poisons_group_instead_of_hanging() {
+    for p in [2usize, 5] {
+        let outcomes = run_spmd(p, |rank, comm| {
+            let len = if rank == 0 { 3 } else { 7 };
+            let mut buf = vec![1.0; len];
+            let first = comm.allreduce_sum(&mut buf);
+            let second = comm.allreduce_sum(&mut buf);
+            (
+                first.err().map(|e| e.to_string()),
+                second.err().map(|e| e.to_string()),
+            )
+        });
+        for (rank, (first, second)) in outcomes.iter().enumerate() {
+            let failed = first.as_ref().or(second.as_ref());
+            let msg = failed.unwrap_or_else(|| {
+                panic!("p={p} rank={rank}: no collective failed after poisoning")
+            });
+            assert!(
+                msg.contains("poisoned"),
+                "p={p} rank={rank}: unexpected error {msg:?}"
+            );
+        }
+    }
 }
 
 #[test]
 fn spmd_rank_count_does_not_change_solver_numerics() {
     // End-to-end SPMD equivalence: same dataset, P ∈ {1, 2, 5} → same w.
+    use cabcd::coordinator::partition_primal;
     use cabcd::gram::NativeBackend;
     use cabcd::matrix::gen::{generate, scaled_specs};
-    use cabcd::coordinator::partition_primal;
     use cabcd::solvers::{bcd, SolverOpts};
 
     let spec = &scaled_specs(8)[0]; // abalone-s8
@@ -169,6 +341,7 @@ fn spmd_rank_count_does_not_change_solver_numerics() {
         record_every: 0,
         track_gram_cond: false,
         tol: None,
+        overlap: false,
     };
     let mut solutions = Vec::new();
     for p in [1usize, 2, 5] {

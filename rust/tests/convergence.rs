@@ -45,6 +45,7 @@ fn all_four_clones_make_objective_progress_under_bcd() {
             record_every: iters / 4,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, Some(&reference), &mut comm, &mut be)
@@ -91,6 +92,7 @@ fn larger_block_size_converges_faster_per_iteration() {
             record_every: 0,
             track_gram_cond: false,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, Some(&reference), &mut comm, &mut be)
@@ -121,6 +123,7 @@ fn primal_and_dual_agree_on_the_optimum() {
         record_every: 0,
         track_gram_cond: false,
         tol: None,
+        overlap: false,
     };
     let mut be = NativeBackend::new();
     let w_primal = bcd::run(&ds.x, &ds.y, ds.n(), &p_opts, Some(&reference), &mut comm, &mut be)
@@ -137,6 +140,7 @@ fn primal_and_dual_agree_on_the_optimum() {
         record_every: 0,
         track_gram_cond: false,
         tol: None,
+        overlap: false,
     };
     let w_dual = bdcd::run(&a, &ds.y, ds.d(), 0, &d_opts, Some(&reference), &mut comm, &mut be)
         .unwrap()
@@ -183,6 +187,7 @@ fn gram_condition_number_grows_with_s_but_stays_bounded() {
             record_every: 0,
             track_gram_cond: true,
             tol: None,
+            overlap: false,
         };
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, None, &mut comm, &mut be).unwrap();
