@@ -125,9 +125,11 @@ fn main() {
         });
         let (msgs, _) = CostMeter::critical_path(&meters);
         // Exact per-allreduce accounting: sends from the RD/Rabenseifner
-        // formula (payload sb²+sb selects the algorithm), plus the equal
-        // number of receives, times H/s collectives.
-        let payload = (2 * s) * (2 * s) + 2 * s;
+        // formula (the packed [G|r] payload sb(sb+1)/2 + sb selects the
+        // algorithm), plus the equal number of receives, times H/s
+        // collectives.
+        let sb = 2 * s;
+        let payload = sb * (sb + 1) / 2 + sb;
         let (sends, _) = expected_allreduce_sends(8, 0, payload);
         let expect = 2 * sends * (64 / s) as u64;
         println!("{:>4} {:>12} {:>18} {:>18}", s, 64 / s, msgs, expect);

@@ -6,7 +6,13 @@ with it. Importing `given`/`settings`/`st` from here keeps the
 deterministic tests running everywhere: with hypothesis installed the real
 decorators pass through, without it the property sweeps turn into cleanly
 skipped tests.
+
+Set ``CABCD_REQUIRE_HYPOTHESIS=1`` (the CI default) to make a missing
+wheel a hard ImportError instead of silent skips — the shim must never
+mask absent property coverage on a machine that claims to provide it.
 """
+
+import os
 
 import pytest
 
@@ -15,6 +21,8 @@ try:
 
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised only on minimal images
+    if os.environ.get("CABCD_REQUIRE_HYPOTHESIS", "").lower() not in ("", "0", "false"):
+        raise
     HAVE_HYPOTHESIS = False
 
     class _AnyStrategy:

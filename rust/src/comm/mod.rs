@@ -18,10 +18,12 @@
 //!   `O(log P)` message term the paper's Theorems charge per allreduce
 //!   (half the rounds of the seed's reduce-then-broadcast).
 //! * **Rabenseifner (reduce-scatter + allgather)** for large payloads such
-//!   as the per-iteration `sb² + sb` Gram/residual buffer: 2⌈log₂P⌉
-//!   rounds of *halving/doubling* exchanges moving `≈ 2·len·(P−1)/P` words
-//!   per rank instead of `len·log₂P` — bandwidth-optimal for the payloads
-//!   that dominate CA-BCD/CA-BDCD traffic.
+//!   as the per-iteration packed `sb(sb+1)/2 + sb` Gram/residual buffer:
+//!   2⌈log₂P⌉ rounds of *halving/doubling* exchanges moving
+//!   `≈ 2·len·(P−1)/P` words per rank instead of `len·log₂P` —
+//!   bandwidth-optimal for the payloads that dominate CA-BCD/CA-BDCD
+//!   traffic (and composing with the packed triangle for ~2× less wire
+//!   volume than the full `sb² + sb` matrix).
 //!
 //! Non-power-of-two rank counts fold the `P − 2^⌊log₂P⌋` excess ranks onto
 //! neighbours before the power-of-two core algorithm and unfold after
@@ -56,7 +58,10 @@
 //! errors out. Peers blocked in a receive observe the poison instead of
 //! hanging, and every subsequent collective on a poisoned endpoint fails
 //! immediately — a length bug surfaces as `Error::Comm("group poisoned: …")`
-//! on all ranks rather than a deadlock.
+//! on all ranks rather than a deadlock. This covers both directions:
+//! sends (wrong buffer count into `all_to_all`) and receives
+//! ([`Communicator::all_to_all_expect`] checks every incoming payload
+//! against the caller's expected length).
 //!
 //! Every send is metered; [`CostMeter::critical_path`] takes the max over
 //! ranks, which is what the paper's `O(·)` latency/bandwidth terms bound.
@@ -136,6 +141,41 @@ pub trait Communicator: Send {
     /// Personalized all-to-all: `send[p]` goes to rank p; returns the
     /// vector received from each rank.
     fn all_to_all(&mut self, send: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>>;
+
+    /// Personalized all-to-all with a **receive-side length contract**:
+    /// `recv_lens[q]` is the exact word count this rank expects from rank
+    /// q. On the thread communicator a mismatch poisons the group — every
+    /// rank errors instead of the receivers hanging or desynchronizing on
+    /// mis-sized payloads (receive-side twin of the send-side poison in
+    /// [`Communicator::all_to_all`]). The default implementation
+    /// validates after the exchange, which is sufficient for
+    /// single-process communicators.
+    fn all_to_all_expect(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        if recv_lens.len() != self.size() {
+            return Err(crate::error::Error::Comm(format!(
+                "all_to_all_expect: rank {} supplied {} receive lengths for {} ranks",
+                self.rank(),
+                recv_lens.len(),
+                self.size()
+            )));
+        }
+        let out = self.all_to_all(send)?;
+        for (src, got) in out.iter().enumerate() {
+            if got.len() != recv_lens[src] {
+                return Err(crate::error::Error::Comm(format!(
+                    "all_to_all_expect: rank {} expected {} words from rank {src}, got {}",
+                    self.rank(),
+                    recv_lens[src],
+                    got.len()
+                )));
+            }
+        }
+        Ok(out)
+    }
 
     /// Synchronize all ranks.
     fn barrier(&mut self) -> Result<()>;

@@ -423,6 +423,65 @@ impl ThreadComm {
         Ok(true)
     }
 
+    /// Shared body of the personalized exchanges. A wrong buffer (or
+    /// receive-length) count poisons the group; with `recv_lens` present,
+    /// the self-payload is validated before any send and every receive
+    /// runs through the `recv_expect` length contract, so a mis-sized
+    /// payload poisons every rank instead of desynchronizing receivers.
+    fn all_to_all_inner(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: Option<&[usize]>,
+    ) -> Result<Vec<Vec<f64>>> {
+        self.meter.all_to_alls += 1;
+        let p = self.size;
+        if send.len() != p {
+            return Err(self.poison(format!(
+                "all_to_all: rank {} supplied {} buffers for {p} ranks",
+                self.rank,
+                send.len()
+            )));
+        }
+        if let Some(lens) = recv_lens {
+            if lens.len() != p {
+                return Err(self.poison(format!(
+                    "all_to_all: rank {} supplied {} receive lengths for {p} ranks",
+                    self.rank,
+                    lens.len()
+                )));
+            }
+            if send[self.rank].len() != lens[self.rank] {
+                return Err(self.poison(format!(
+                    "all_to_all: rank {} self-payload {} words != expected {}",
+                    self.rank,
+                    send[self.rank].len(),
+                    lens[self.rank]
+                )));
+            }
+        }
+        if p == 1 {
+            return Ok(send);
+        }
+        self.check_poison()?;
+        let mut out: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
+        for (dst, bufv) in send.into_iter().enumerate() {
+            if dst == self.rank {
+                out[dst] = bufv;
+            } else {
+                self.send_owned(dst, bufv)?;
+            }
+        }
+        for src in 0..p {
+            if src != self.rank {
+                out[src] = match recv_lens {
+                    Some(lens) => self.recv_expect(src, lens[src])?,
+                    None => self.recv(src)?,
+                };
+            }
+        }
+        Ok(out)
+    }
+
     /// The seed repo's reduce-to-0-then-broadcast allreduce (2⌈log₂P⌉
     /// serialized rounds, full payload each hop). Kept as the benchmark
     /// baseline and as a numerically independent cross-check oracle for
@@ -547,33 +606,19 @@ impl Communicator for ThreadComm {
     /// Direct personalized exchange: P−1 sends + P−1 receives per rank
     /// (the "large message" regime of Theorems 4/8: L = O(P)).
     fn all_to_all(&mut self, send: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
-        self.meter.all_to_alls += 1;
-        let p = self.size;
-        if send.len() != p {
-            return Err(self.poison(format!(
-                "all_to_all: rank {} supplied {} buffers for {p} ranks",
-                self.rank,
-                send.len()
-            )));
-        }
-        if p == 1 {
-            return Ok(send);
-        }
-        self.check_poison()?;
-        let mut out: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
-        for (dst, bufv) in send.into_iter().enumerate() {
-            if dst == self.rank {
-                out[dst] = bufv;
-            } else {
-                self.send_owned(dst, bufv)?;
-            }
-        }
-        for src in 0..p {
-            if src != self.rank {
-                out[src] = self.recv(src)?;
-            }
-        }
-        Ok(out)
+        self.all_to_all_inner(send, None)
+    }
+
+    /// Personalized exchange with receive-side length contracts: every
+    /// incoming payload is checked against `recv_lens[src]` and a mismatch
+    /// poisons the group (via `recv_expect`) — all ranks error instead of
+    /// the receivers hanging on a desynchronized reassembly.
+    fn all_to_all_expect(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        self.all_to_all_inner(send, Some(recv_lens))
     }
 
     fn barrier(&mut self) -> Result<()> {
@@ -752,6 +797,25 @@ mod tests {
         for (rank, got) in results.iter().enumerate() {
             for (src, v) in got.iter().enumerate() {
                 assert_eq!(v, &[(src * 10 + rank) as f64]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_expect_matches_plain_all_to_all() {
+        for p in [1usize, 3, 4] {
+            let results = run_spmd(p, |rank, comm| {
+                // Rank r sends (r + 1) words to everyone.
+                let send: Vec<Vec<f64>> = (0..p)
+                    .map(|dst| vec![(rank * 10 + dst) as f64; rank + 1])
+                    .collect();
+                let lens: Vec<usize> = (0..p).map(|src| src + 1).collect();
+                comm.all_to_all_expect(send, &lens).unwrap()
+            });
+            for (rank, got) in results.iter().enumerate() {
+                for (src, v) in got.iter().enumerate() {
+                    assert_eq!(v, &vec![(src * 10 + rank) as f64; src + 1], "p={p}");
+                }
             }
         }
     }

@@ -1,11 +1,16 @@
 //! The paper's analytic performance model: `T = γF + αL + βW` (§2.2) with
-//! the per-algorithm critical-path costs of Theorems 1–9 and the machine
-//! presets used by §5.2's modeled-performance experiments.
+//! the per-algorithm critical-path costs of Theorems 1–9, the machine
+//! presets used by §5.2's modeled-performance experiments, and a measured
+//! wire mode ([`Wire::Measured`]) calibrated to the packed-payload
+//! RD/Rabenseifner collectives this crate actually runs.
 
 pub mod machine;
 pub mod scaling;
 pub mod theory;
 
 pub use machine::Machine;
-pub use scaling::{strong_scaling, weak_scaling, ScalingPoint, ScalingSeries};
-pub use theory::{AlgoCosts, CostParams, Method};
+pub use scaling::{
+    strong_scaling, strong_scaling_wire, weak_scaling, weak_scaling_wire, ScalingPoint,
+    ScalingSeries,
+};
+pub use theory::{measured_allreduce_cost, AlgoCosts, CostParams, Method, Wire};

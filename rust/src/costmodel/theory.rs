@@ -5,6 +5,14 @@
 //! (M, words/processor) as functions of the problem and algorithm
 //! parameters. These regenerate Tables 1 and 2 and drive Figures 1, 3, 6,
 //! 8 and 9.
+//!
+//! Two wire models ([`Wire`]): the Theorems' `O(b² log P)`-words-per-
+//! allreduce charge, and the **measured** model calibrated to what
+//! `comm::thread` actually moves — the packed `sb(sb+1)/2 + sb` `[G|r]`
+//! payload under Rabenseifner (`≈2·len·(P−1)/P` words, `2·log₂P`
+//! messages) or recursive doubling (`len·log₂P` words, `log₂P` messages),
+//! selected by the same size crossover as the real communicator. This
+//! closes the ROADMAP "calibrate the cost model" item.
 
 /// Problem + algorithm parameters for one cost evaluation.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +48,35 @@ pub enum Method {
     Tsqr,
 }
 
+/// Which wire model the latency/bandwidth columns charge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    /// The paper's Theorems: every allreduce costs `O(log P)` messages and
+    /// `O(b²s² log P)` words (constants dropped).
+    Theory,
+    /// Calibrated to the measured collectives: the packed
+    /// `sb(sb+1)/2 + sb` `[G|r]` payload under the same
+    /// Rabenseifner/recursive-doubling selection the thread communicator
+    /// uses (`comm::thread::RABENSEIFNER_MIN_WORDS` crossover, closed
+    /// forms of `expected_allreduce_sends` at power-of-two P).
+    Measured,
+}
+
+/// Closed-form per-rank (messages, words) of one allreduce of `len` words
+/// over `p` ranks, mirroring `comm::thread::expected_allreduce_sends` —
+/// including its algorithm selection against the power-of-two core size
+/// `pof2 = 2^⌊log₂P⌋` (the non-power-of-two fold/unfold adds O(len),
+/// ignored at model granularity).
+pub fn measured_allreduce_cost(p: f64, len: f64) -> (f64, f64) {
+    let logp = p.log2().max(1.0);
+    let pof2 = 2.0f64.powf(p.max(1.0).log2().floor());
+    if len >= crate::comm::thread::RABENSEIFNER_MIN_WORDS as f64 && len >= pof2 && pof2 >= 2.0 {
+        (2.0 * logp, 2.0 * len * (p - 1.0) / p.max(1.0))
+    } else {
+        (logp, len * logp)
+    }
+}
+
 /// Critical-path costs.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AlgoCosts {
@@ -50,6 +87,32 @@ pub struct AlgoCosts {
 }
 
 impl AlgoCosts {
+    /// Instantiate `method` at `cp` under the chosen wire model. The
+    /// measured model replaces the Theorems' per-allreduce `O(log P)` /
+    /// `O(b²s² log P)` charges for the four (CA-)BCD/BDCD methods with the
+    /// calibrated packed-payload collective costs; Krylov and TSQR keep
+    /// their survey-level Theory charges (their collectives are not
+    /// implemented by this crate's communicator).
+    pub fn of_wire(method: Method, cp: &CostParams, wire: Wire) -> AlgoCosts {
+        let mut c = AlgoCosts::of(method, cp);
+        if wire == Wire::Measured
+            && matches!(
+                method,
+                Method::Bcd | Method::Bdcd | Method::CaBcd | Method::CaBdcd
+            )
+        {
+            let CostParams { p, b, s, h, .. } = *cp;
+            let sb = s * b;
+            // Packed [G|r]: sb(sb+1)/2 + sb words, H/s collectives.
+            let len = sb * (sb + 1.0) / 2.0 + sb;
+            let (msgs, words) = measured_allreduce_cost(p, len);
+            let collectives = h / s;
+            c.latency = collectives * msgs;
+            c.bandwidth = collectives * words;
+        }
+        c
+    }
+
     /// Instantiate the Theorem for `method` at `cp`.
     ///
     /// The primal formulas contract along n, the dual along d — captured by
@@ -186,6 +249,48 @@ mod tests {
         assert_eq!(t.latency, (64.0f64).log2());
         // min(d,n)² max(d,n) / P
         assert_eq!(t.flops, 1000.0 * 1000.0 * 10000.0 / 64.0);
+    }
+
+    #[test]
+    fn theory_wire_is_identity() {
+        let p = cp();
+        for m in [Method::Bcd, Method::CaBcd, Method::Krylov, Method::Tsqr] {
+            let a = AlgoCosts::of(m, &p);
+            let b = AlgoCosts::of_wire(m, &p, Wire::Theory);
+            assert_eq!(a.flops, b.flops);
+            assert_eq!(a.latency, b.latency);
+            assert_eq!(a.bandwidth, b.bandwidth);
+            assert_eq!(a.memory, b.memory);
+        }
+    }
+
+    #[test]
+    fn measured_wire_charges_packed_rabenseifner_words() {
+        // sb = 32 → packed payload 32·33/2 + 32 = 560 ≥ crossover at P=64:
+        // Rabenseifner moves 2·560·63/64 words per collective, H/s times.
+        let mut p = cp();
+        p.s = 4.0; // sb = 32
+        let c = AlgoCosts::of_wire(Method::CaBcd, &p, Wire::Measured);
+        let len = 560.0;
+        let expect_w = (p.h / p.s) * 2.0 * len * 63.0 / 64.0;
+        let expect_l = (p.h / p.s) * 2.0 * 6.0;
+        assert!((c.bandwidth - expect_w).abs() < 1e-9, "{}", c.bandwidth);
+        assert!((c.latency - expect_l).abs() < 1e-9, "{}", c.latency);
+        // Flops/memory keep the Theorem charge.
+        let t = AlgoCosts::of(Method::CaBcd, &p);
+        assert_eq!(c.flops, t.flops);
+        assert_eq!(c.memory, t.memory);
+        // The packed payload beats the Theorems' b²s²·log P charge.
+        assert!(c.bandwidth < t.bandwidth);
+    }
+
+    #[test]
+    fn measured_small_payload_uses_recursive_doubling() {
+        // sb = 8 → packed payload 8·9/2 + 8 = 44 < 256 → RD charges.
+        let p = cp(); // s = 1, b = 8, P = 64, H = 100
+        let c = AlgoCosts::of_wire(Method::Bcd, &p, Wire::Measured);
+        assert!((c.latency - 100.0 * 6.0).abs() < 1e-9);
+        assert!((c.bandwidth - 100.0 * 44.0 * 6.0).abs() < 1e-9);
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //! (allreduced by the coordinator), then — replicated — the s deferred
 //! `b×b` subproblem solves of eq. (8) / eq. (18).
 //!
+//! G is symmetric and its native format here is the **packed lower
+//! triangle** (`sb(sb+1)/2` words, see [`crate::linalg::packed`]): the
+//! kernels write only the triangle, the `[G|r]` allreduce moves only the
+//! triangle, and the inner solves index the triangle directly — there is
+//! no unpack copy anywhere on the hot path.
+//!
 //! Two interchangeable implementations:
 //! * [`NativeBackend`] — hand-written f64 Rust (works on CSR directly).
 //! * [`crate::runtime::XlaBackend`] — the AOT JAX/Pallas artifacts executed
@@ -18,6 +24,7 @@
 
 use crate::error::Result;
 use crate::linalg::cholesky;
+use crate::linalg::packed::{packed_len, pidx, tri_row};
 use crate::matrix::Matrix;
 
 /// Strategy for the per-iteration heavy compute.
@@ -28,7 +35,8 @@ pub trait ComputeBackend {
     fn name(&self) -> &'static str;
 
     /// Raw partial Gram + residual of sampled rows (pre-allreduce).
-    /// `g` is `idx.len()²` row-major, `r` is `idx.len()`.
+    /// `g` is the packed lower triangle (`sb(sb+1)/2` words, entry `(j,t)`
+    /// with `t ≤ j` at `g[j(j+1)/2 + t]`), `r` is `idx.len()`.
     fn gram_resid(
         &mut self,
         a: &Matrix,
@@ -38,10 +46,11 @@ pub trait ComputeBackend {
         r: &mut [f64],
     ) -> Result<()>;
 
-    /// Gram part alone: `g = A_loc[idx,:] · A_loc[idx,:]ᵀ`. Used by the
-    /// overlapped solver pipeline, which computes the *next* iteration's
-    /// Gram (independent of the evolving α/w state) while the current
-    /// reduction is in flight. Must be bitwise identical to the `g` that
+    /// Gram part alone (packed triangle, same layout as
+    /// [`ComputeBackend::gram_resid`]). Used by the overlapped solver
+    /// pipeline, which computes the *next* iteration's Gram (independent
+    /// of the evolving α/w state) while the current reduction is in
+    /// flight. Must be bitwise identical to the `g` that
     /// [`ComputeBackend::gram_resid`] produces.
     fn gram_only(&mut self, a: &Matrix, idx: &[usize], g: &mut [f64]) -> Result<()> {
         // Default: run the fused kernel against a zero z (G is independent
@@ -56,13 +65,15 @@ pub trait ComputeBackend {
     /// [`ComputeBackend::gram_only`] for the overlapped pipeline; must be
     /// bitwise identical to the `r` of [`ComputeBackend::gram_resid`].
     fn resid_only(&mut self, a: &Matrix, idx: &[usize], z: &[f64], r: &mut [f64]) -> Result<()> {
-        let mut g = vec![0.0; idx.len() * idx.len()];
+        let mut g = vec![0.0; packed_len(idx.len())];
         self.gram_resid(a, idx, z, &mut g, r)
     }
 
     /// Primal s-step inner solve (eq. 8; mirrors
-    /// `python/compile/model.py::ca_inner_solve`). Returns the flat
-    /// `(s·b)` Δw vector.
+    /// `python/compile/model.py::ca_inner_solve`, which consumes the full
+    /// artifact-shaped matrix — the packed triangle is the coordinator's
+    /// wire/solve format). `g_raw` is packed. Returns the flat `(s·b)` Δw
+    /// vector.
     #[allow(clippy::too_many_arguments)]
     fn ca_inner_solve(
         &mut self,
@@ -77,7 +88,8 @@ pub trait ComputeBackend {
     ) -> Result<Vec<f64>>;
 
     /// Dual s-step inner solve (eq. 18; mirrors
-    /// `model.py::ca_dual_inner_solve`). Returns the flat `(s·b')` Δα.
+    /// `model.py::ca_dual_inner_solve`). `g_raw` is packed like in
+    /// [`ComputeBackend::ca_inner_solve`]. Returns the flat `(s·b')` Δα.
     #[allow(clippy::too_many_arguments)]
     fn ca_dual_inner_solve(
         &mut self,
@@ -108,6 +120,10 @@ pub struct NativeBackend {
     /// Scratch for the per-step subproblem.
     gamma: Vec<f64>,
     rhs: Vec<f64>,
+    /// Transposed-panel scratch for the CSR Gustavson Gram kernel — keeps
+    /// the per-iteration compute allocation-free once warm, matching the
+    /// comm layer's pooled zero-allocation invariant.
+    panel: Vec<(u32, u32, f64)>,
 }
 
 impl NativeBackend {
@@ -129,13 +145,13 @@ impl ComputeBackend for NativeBackend {
         g: &mut [f64],
         r: &mut [f64],
     ) -> Result<()> {
-        a.sampled_gram(idx, g)?;
+        a.sampled_gram_packed_scratch(idx, g, &mut self.panel)?;
         a.sampled_matvec(idx, z, r)?;
         Ok(())
     }
 
     fn gram_only(&mut self, a: &Matrix, idx: &[usize], g: &mut [f64]) -> Result<()> {
-        a.sampled_gram(idx, g)
+        a.sampled_gram_packed_scratch(idx, g, &mut self.panel)
     }
 
     fn resid_only(&mut self, a: &Matrix, idx: &[usize], z: &[f64], r: &mut [f64]) -> Result<()> {
@@ -154,7 +170,7 @@ impl ComputeBackend for NativeBackend {
         inv_n: f64,
     ) -> Result<Vec<f64>> {
         let sb = s * b;
-        debug_assert_eq!(g_raw.len(), sb * sb);
+        debug_assert_eq!(g_raw.len(), packed_len(sb));
         let mut deltas = vec![0.0; sb];
         self.gamma.resize(b * b, 0.0);
         self.rhs.resize(b, 0.0);
@@ -163,12 +179,15 @@ impl ComputeBackend for NativeBackend {
             for i in 0..b {
                 self.rhs[i] = -lam * w_blocks[j * b + i] + inv_n * r_raw[j * b + i];
             }
-            // rhs -= Σ_{t<j} (λ·O[j,t] + (1/n)·G[j,t]) Δ_t
+            // rhs -= Σ_{t<j} (λ·O[j,t] + (1/n)·G[j,t]) Δ_t. For t < j the
+            // block row G[j,t] lies strictly below the diagonal, so it is
+            // a contiguous run of the packed triangle.
             for t in 0..j {
                 let ov = &overlap[(j * s + t) * b * b..(j * s + t + 1) * b * b];
                 let dt = &deltas[t * b..(t + 1) * b];
                 for i in 0..b {
-                    let grow = &g_raw[(j * b + i) * sb + t * b..(j * b + i) * sb + (t + 1) * b];
+                    let base = tri_row(j * b + i);
+                    let grow = &g_raw[base + t * b..base + (t + 1) * b];
                     let orow = &ov[i * b..(i + 1) * b];
                     let mut acc = 0.0;
                     for c in 0..b {
@@ -177,10 +196,11 @@ impl ComputeBackend for NativeBackend {
                     self.rhs[i] -= acc;
                 }
             }
-            // Γ_j = (1/n)·G[j,j] + λI
+            // Γ_j = (1/n)·G[j,j] + λI (diagonal block: fold the triangle's
+            // symmetric entry in for c > i).
             for i in 0..b {
                 for c in 0..b {
-                    self.gamma[i * b + c] = inv_n * g_raw[(j * b + i) * sb + j * b + c]
+                    self.gamma[i * b + c] = inv_n * g_raw[pidx(j * b + i, j * b + c)]
                         + if i == c { lam } else { 0.0 };
                 }
             }
@@ -203,7 +223,7 @@ impl ComputeBackend for NativeBackend {
         inv_n: f64,
     ) -> Result<Vec<f64>> {
         let sb = s * b;
-        debug_assert_eq!(g_raw.len(), sb * sb);
+        debug_assert_eq!(g_raw.len(), packed_len(sb));
         let mut deltas = vec![0.0; sb];
         self.gamma.resize(b * b, 0.0);
         self.rhs.resize(b, 0.0);
@@ -216,7 +236,8 @@ impl ComputeBackend for NativeBackend {
                 let ov = &overlap[(j * s + t) * b * b..(j * s + t + 1) * b * b];
                 let dt = &deltas[t * b..(t + 1) * b];
                 for i in 0..b {
-                    let grow = &g_raw[(j * b + i) * sb + t * b..(j * b + i) * sb + (t + 1) * b];
+                    let base = tri_row(j * b + i);
+                    let grow = &g_raw[base + t * b..base + (t + 1) * b];
                     let orow = &ov[i * b..(i + 1) * b];
                     let mut acc = 0.0;
                     for c in 0..b {
@@ -229,7 +250,7 @@ impl ComputeBackend for NativeBackend {
             for i in 0..b {
                 for c in 0..b {
                     self.gamma[i * b + c] = (inv_n * inv_n / lam)
-                        * g_raw[(j * b + i) * sb + j * b + c]
+                        * g_raw[pidx(j * b + i, j * b + c)]
                         + if i == c { inv_n } else { 0.0 };
                 }
             }
@@ -274,7 +295,7 @@ mod tests {
         let a = Matrix::Dense(DenseMatrix::from_vec(4, 6, rngv(24, 1)));
         let z = rngv(6, 2);
         let idx = [2usize, 0, 3];
-        let mut g = vec![0.0; 9];
+        let mut g = vec![0.0; packed_len(3)];
         let mut r = vec![0.0; 3];
         NativeBackend::new()
             .gram_resid(&a, &idx, &z, &mut g, &mut r)
@@ -293,7 +314,7 @@ mod tests {
                 for c in 0..6 {
                     gv += rows[j * 6 + c] * rows[t * 6 + c];
                 }
-                assert!((g[j * 3 + t] - gv).abs() < 1e-12);
+                assert!((g[pidx(j, t)] - gv).abs() < 1e-12);
             }
         }
     }
@@ -306,10 +327,10 @@ mod tests {
         let z = rngv(9, 9);
         let idx = [4usize, 1, 3];
         let mut be = NativeBackend::new();
-        let mut g_f = vec![0.0; 9];
+        let mut g_f = vec![0.0; packed_len(3)];
         let mut r_f = vec![0.0; 3];
         be.gram_resid(&a, &idx, &z, &mut g_f, &mut r_f).unwrap();
-        let mut g_s = vec![0.0; 9];
+        let mut g_s = vec![0.0; packed_len(3)];
         let mut r_s = vec![0.0; 3];
         be.gram_only(&a, &idx, &mut g_s).unwrap();
         be.resid_only(&a, &idx, &z, &mut r_s).unwrap();
@@ -340,8 +361,10 @@ mod tests {
             ov[i * b + i] = 1.0;
         }
         let (lam, inv_n) = (0.6, 1.0 / 20.0);
+        let mut g_packed = vec![0.0; packed_len(b)];
+        crate::linalg::packed::pack_lower(&g, b, &mut g_packed);
         let d = NativeBackend::new()
-            .ca_inner_solve(1, b, &g, &r, &w, &ov, lam, inv_n)
+            .ca_inner_solve(1, b, &g_packed, &r, &w, &ov, lam, inv_n)
             .unwrap();
         // classical: (G/n + λI) Δ = -λw + r/n
         let mut gamma = vec![0.0; b * b];

@@ -19,6 +19,7 @@
 
 use crate::error::{Error, Result};
 use crate::gram::ComputeBackend;
+use crate::linalg::packed::{packed_len, tri_row};
 use crate::matrix::{DenseMatrix, Matrix};
 use crate::metrics::{History, IterRecord};
 use crate::sampling::{overlap_tensor_into, BlockSampler};
@@ -104,9 +105,10 @@ impl KrrModel {
     }
 }
 
-/// Materialize the sampled kernel block `K[idx, idx]` (sb × sb) and the
-/// sampled rows' products against `v`: `(K[idx, :]·v)` — one pass over the
-/// training points per sampled row.
+/// Materialize the sampled kernel block `K[idx, idx]` as the packed lower
+/// triangle (`sb(sb+1)/2` entries, the layout
+/// [`ComputeBackend::ca_inner_solve`] consumes) — one kernel evaluation
+/// per symmetric pair.
 fn sampled_kernel(
     kernel: Kernel,
     train_rows: &DenseMatrix, // n × d (points as rows)
@@ -114,12 +116,12 @@ fn sampled_kernel(
     k_out: &mut [f64],
 ) {
     let sb = idx.len();
+    debug_assert_eq!(k_out.len(), packed_len(sb));
     for j in 0..sb {
         let xj = train_rows.row(idx[j]);
-        for t in j..sb {
-            let v = kernel.eval(xj, train_rows.row(idx[t]));
-            k_out[j * sb + t] = v;
-            k_out[t * sb + j] = v;
+        let base = tri_row(j);
+        for (t, &it) in idx[..=j].iter().enumerate() {
+            k_out[base + t] = kernel.eval(xj, train_rows.row(it));
         }
     }
 }
@@ -152,7 +154,7 @@ pub fn fit(x: &Matrix, y: &[f64], opts: &KrrOpts, backend: &mut dyn ComputeBacke
     let mut u = vec![0.0; n]; // u = K·α
     let mut history = History::default();
 
-    let mut k_block = vec![0.0; sb * sb];
+    let mut k_block = vec![0.0; packed_len(sb)];
     let mut overlap = vec![0.0; s * s * b * b];
     let mut r_base = vec![0.0; sb];
     let mut a_blocks = vec![0.0; sb];

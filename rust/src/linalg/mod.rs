@@ -1,12 +1,15 @@
 //! Small dense linear algebra: SPD Cholesky solves (the per-iteration
 //! subproblem of every solver), symmetric eigenvalues (Gram condition
-//! numbers, Figures 4i–l / 7i–l), and TSQR (the paper's §2.1 direct
-//! baseline).
+//! numbers, Figures 4i–l / 7i–l), packed lower-triangular symmetric
+//! storage (the Gram hot path's native layout), and TSQR (the paper's
+//! §2.1 direct baseline).
 
 pub mod cholesky;
 pub mod cond;
+pub mod packed;
 pub mod tsqr;
 
 pub use cholesky::{chol_factor, chol_solve, chol_solve_factored};
 pub use cond::{condition_number, symmetric_eigenvalues};
+pub use packed::{pack_lower, packed_len, pidx, tri_row, unpack_symmetric};
 pub use tsqr::{tsqr_solve_ls, Tsqr};

@@ -1,0 +1,105 @@
+//! Packed symmetric (lower-triangular) storage — the native format of the
+//! Gram hot path.
+//!
+//! The sampled Gram `G = A[I,:]·A[I,:]ᵀ` is symmetric, so only its lower
+//! triangle is stored: entry `(r, c)` with `r ≥ c` lives at
+//! `r(r+1)/2 + c`, row-major within the triangle. An `sb × sb` Gram packs
+//! into `sb(sb+1)/2` words instead of `sb²` — halving what the kernels
+//! write, what the `[G|r]` allreduce moves over the wire, and what the
+//! replicated inner solves index (they read the triangle directly; no
+//! unpack copy exists on the solver hot path).
+
+/// Number of stored entries of an `n × n` symmetric matrix.
+#[inline]
+pub const fn packed_len(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+/// Offset of row `r`'s first stored entry (its column 0).
+#[inline]
+pub const fn tri_row(r: usize) -> usize {
+    r * (r + 1) / 2
+}
+
+/// Index of symmetric entry `(r, c)` in the packed lower triangle.
+#[inline]
+pub fn pidx(r: usize, c: usize) -> usize {
+    if r >= c {
+        tri_row(r) + c
+    } else {
+        tri_row(c) + r
+    }
+}
+
+/// Mirror a packed lower triangle into a full row-major `n × n` buffer
+/// (diagnostics and baseline paths only — the solvers never unpack).
+pub fn unpack_symmetric(packed: &[f64], n: usize, full: &mut [f64]) {
+    debug_assert_eq!(packed.len(), packed_len(n));
+    debug_assert_eq!(full.len(), n * n);
+    for r in 0..n {
+        let row = &packed[tri_row(r)..tri_row(r) + r + 1];
+        for (c, &v) in row.iter().enumerate() {
+            full[r * n + c] = v;
+            full[c * n + r] = v;
+        }
+    }
+}
+
+/// Pack the lower triangle of a full row-major `n × n` buffer.
+pub fn pack_lower(full: &[f64], n: usize, packed: &mut [f64]) {
+    debug_assert_eq!(packed.len(), packed_len(n));
+    debug_assert_eq!(full.len(), n * n);
+    for r in 0..n {
+        for c in 0..=r {
+            packed[tri_row(r) + c] = full[r * n + c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths_and_offsets() {
+        assert_eq!(packed_len(0), 0);
+        assert_eq!(packed_len(1), 1);
+        assert_eq!(packed_len(4), 10);
+        assert_eq!(tri_row(0), 0);
+        assert_eq!(tri_row(3), 6);
+    }
+
+    #[test]
+    fn pidx_is_symmetric_and_bijective_on_triangle() {
+        let n = 7;
+        let mut seen = vec![false; packed_len(n)];
+        for r in 0..n {
+            for c in 0..=r {
+                let k = pidx(r, c);
+                assert_eq!(k, pidx(c, r));
+                assert!(!seen[k], "({r},{c}) collides");
+                seen[k] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let n = 5;
+        // Symmetric full matrix from an arbitrary seed pattern.
+        let mut full = vec![0.0; n * n];
+        for r in 0..n {
+            for c in 0..=r {
+                let v = (r * 31 + c * 7) as f64 * 0.25 - 3.0;
+                full[r * n + c] = v;
+                full[c * n + r] = v;
+            }
+        }
+        let mut packed = vec![0.0; packed_len(n)];
+        pack_lower(&full, n, &mut packed);
+        let mut back = vec![0.0; n * n];
+        unpack_symmetric(&packed, n, &mut back);
+        assert_eq!(full, back);
+    }
+}

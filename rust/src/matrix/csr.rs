@@ -3,9 +3,23 @@
 //! The news20/real-sim dataset clones are ~0.1–0.3% dense; storing them
 //! densely (62061×15935 f64 ≈ 7.9 GB) is impossible, so every solver path
 //! has a CSR-aware implementation. Column indices within each row are kept
-//! sorted — `sampled_gram` exploits this with a two-pointer merge.
+//! sorted. The sampled Gram is computed Gustavson-style
+//! ([`CsrMatrix::sampled_gram_packed`]): the sampled rows are gathered
+//! once as a column-sorted transposed panel, then one sparse outer-product
+//! pass per occupied column — `O(Σ_c cnt_c²)` work instead of the
+//! `O(sb²·nnz/row)` of the historical pairwise two-pointer merge (kept as
+//! [`CsrMatrix::sampled_gram_merge_packed`], the benchmark baseline and
+//! bitwise oracle). Panels denser than
+//! [`GRAM_DENSE_FALLBACK_DENSITY`] fall back to a gathered dense panel
+//! driven by the 2×2-blocked dense kernel.
 
 use super::dense::DenseMatrix;
+use crate::linalg::packed::{packed_len, tri_row};
+
+/// Sampled-panel fill fraction above which `sampled_gram_packed` gathers
+/// the rows into a dense panel and uses the dense kernel: at this density
+/// the sparse-accumulator bookkeeping costs more than the dense flops.
+pub const GRAM_DENSE_FALLBACK_DENSITY: f64 = 0.25;
 
 /// CSR `rows × cols` matrix of `f64` with sorted column indices per row.
 #[derive(Clone, Debug, PartialEq)]
@@ -122,13 +136,116 @@ impl CsrMatrix {
         s
     }
 
+    /// Full-matrix sampled Gram — mirror of the packed kernel (single
+    /// source of truth for the per-entry arithmetic). Baseline/diagnostic
+    /// callers only; the solver hot path consumes the packed triangle.
     pub fn sampled_gram(&self, idx: &[usize], out: &mut [f64]) {
         let sb = idx.len();
-        for j in 0..sb {
-            for t in j..sb {
-                let v = self.row_dot(idx[j], idx[t]);
-                out[j * sb + t] = v;
-                out[t * sb + j] = v;
+        let mut packed = vec![0.0; packed_len(sb)];
+        self.sampled_gram_packed(idx, &mut packed);
+        crate::linalg::packed::unpack_symmetric(&packed, sb, out);
+    }
+
+    /// Packed-triangle sampled Gram, Gustavson-style.
+    ///
+    /// The sampled rows are gathered **once** into `(column, slot, value)`
+    /// triples sorted by column — the transposed panel — and each occupied
+    /// column contributes one sparse outer-product pass: every slot pair
+    /// `(tA ≥ tB)` present in that column accumulates `vA·vB` into
+    /// `out[tA(tA+1)/2 + tB]`. Each Gram entry therefore receives its
+    /// products in ascending-column order, exactly the order of the
+    /// two-pointer merge — on this path the results are **bitwise
+    /// identical** to [`CsrMatrix::sampled_gram_merge_packed`] — at
+    /// `O(nnz·log nnz + Σ_c cnt_c²)` total cost instead of the merge's
+    /// `O(sb²·nnz/row)` (quadratic in `sb`).
+    ///
+    /// Panels filled beyond [`GRAM_DENSE_FALLBACK_DENSITY`] are gathered
+    /// densely and handed to the 2×2-blocked dense kernel instead. In
+    /// that regime the summation order includes the explicit zeros, so
+    /// values may differ from the merge in the last ulp (packed ≡ full
+    /// stays exact — both route through this dispatcher); the threshold
+    /// trades that last-ulp identity with the historical merge for the
+    /// dense kernel's throughput on filled panels.
+    pub fn sampled_gram_packed(&self, idx: &[usize], out: &mut [f64]) {
+        let mut scratch = Vec::new();
+        self.sampled_gram_packed_into(idx, out, &mut scratch);
+    }
+
+    /// Scratch-reusing body of [`CsrMatrix::sampled_gram_packed`]:
+    /// `scratch` carries the transposed panel across calls, so the solver
+    /// hot path ([`crate::gram::NativeBackend`] passes its own) allocates
+    /// nothing per iteration once its capacity is warm. The dense-panel
+    /// fallback still gathers a fresh `sb × cols` panel per call — it only
+    /// triggers above [`GRAM_DENSE_FALLBACK_DENSITY`], where CSR storage
+    /// is the wrong choice to begin with.
+    pub fn sampled_gram_packed_into(
+        &self,
+        idx: &[usize],
+        out: &mut [f64],
+        scratch: &mut Vec<(u32, u32, f64)>,
+    ) {
+        let sb = idx.len();
+        debug_assert_eq!(out.len(), packed_len(sb));
+        let panel_nnz: usize = idx
+            .iter()
+            .map(|&i| self.indptr[i + 1] - self.indptr[i])
+            .sum();
+        let cells = (sb * self.cols).max(1);
+        if panel_nnz as f64 > GRAM_DENSE_FALLBACK_DENSITY * cells as f64 {
+            let mut panel = DenseMatrix::zeros(sb, self.cols);
+            let width = self.cols;
+            let data = panel.data_mut();
+            for (k, &i) in idx.iter().enumerate() {
+                let (cols, vals) = self.row(i);
+                let dst = &mut data[k * width..(k + 1) * width];
+                for (&c, &v) in cols.iter().zip(vals) {
+                    dst[c as usize] = v;
+                }
+            }
+            let all: Vec<usize> = (0..sb).collect();
+            panel.sampled_gram_packed(&all, out);
+            return;
+        }
+        out.fill(0.0);
+        scratch.clear();
+        scratch.reserve(panel_nnz);
+        for (slot, &i) in idx.iter().enumerate() {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                scratch.push((c, slot as u32, v));
+            }
+        }
+        // (column, slot) is unique per entry, so the sort is deterministic.
+        scratch.sort_unstable_by_key(|&(c, t, _)| (c, t));
+        let entries = &scratch[..];
+        let mut lo = 0;
+        while lo < entries.len() {
+            let c = entries[lo].0;
+            let mut hi = lo + 1;
+            while hi < entries.len() && entries[hi].0 == c {
+                hi += 1;
+            }
+            let col = &entries[lo..hi];
+            for (a, &(_, ta, va)) in col.iter().enumerate() {
+                let base = tri_row(ta as usize);
+                for &(_, tb, vb) in &col[..=a] {
+                    out[base + tb as usize] += va * vb;
+                }
+            }
+            lo = hi;
+        }
+    }
+
+    /// The historical merge-based kernel: each of the `sb(sb+1)/2` entries
+    /// is one two-pointer merge over two sorted rows. Quadratic in `sb` —
+    /// kept as the benchmark baseline and as the bitwise oracle for the
+    /// Gustavson kernel (identical per-entry accumulation order).
+    pub fn sampled_gram_merge_packed(&self, idx: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), packed_len(idx.len()));
+        for (j, &ij) in idx.iter().enumerate() {
+            let base = tri_row(j);
+            for (t, &it) in idx[..=j].iter().enumerate() {
+                out[base + t] = self.row_dot(ij, it);
             }
         }
     }
@@ -221,6 +338,63 @@ mod tests {
         assert_eq!(m.row_dot(0, 0), 5.0);
         assert_eq!(m.row_dot(0, 1), 6.0);
         assert_eq!(m.row_dot(0, 2), 5.0);
+    }
+
+    #[test]
+    fn gustavson_matches_merge_bitwise_with_empty_rows_and_duplicates() {
+        // 8×40 at ~5% fill (below the dense fallback), rows 3 and 6 empty,
+        // sampled indices repeat — the shapes the property sweep hits.
+        let mut trip = Vec::new();
+        let mut st = 0x5EEDu64;
+        for r in [0usize, 1, 2, 4, 5, 7] {
+            for _ in 0..4 {
+                st ^= st << 13;
+                st ^= st >> 7;
+                st ^= st << 17;
+                let c = (st % 40) as usize;
+                let v = (st as f64 / u64::MAX as f64) - 0.5;
+                trip.push((r, c, v));
+            }
+        }
+        let m = CsrMatrix::from_triplets(8, 40, trip);
+        let idx = [2usize, 3, 2, 7, 6, 0];
+        let sb = idx.len();
+        let plen = sb * (sb + 1) / 2;
+        let mut fast = vec![f64::NAN; plen];
+        let mut slow = vec![f64::NAN; plen];
+        m.sampled_gram_packed(&idx, &mut fast);
+        m.sampled_gram_merge_packed(&idx, &mut slow);
+        assert!(fast == slow, "Gustavson != merge: {fast:?} vs {slow:?}");
+        // Duplicate slots share a row: (0,2) entry equals the (0,0) diag.
+        assert_eq!(fast[crate::linalg::packed::pidx(2, 0)], fast[0]);
+    }
+
+    #[test]
+    fn dense_fallback_matches_dense_kernel() {
+        let m = sample(); // 6 nnz / 12 cells = 0.5 fill → dense panel path
+        let idx = [0usize, 2, 1];
+        let plen = 6;
+        let mut packed = vec![0.0; plen];
+        m.sampled_gram_packed(&idx, &mut packed);
+        let d = m.to_dense();
+        let mut expect = vec![0.0; plen];
+        d.sampled_gram_packed(&idx, &mut expect);
+        assert_eq!(packed, expect);
+    }
+
+    #[test]
+    fn full_gram_is_mirror_of_packed() {
+        let m = sample();
+        let idx = [2usize, 0, 1];
+        let mut full = vec![0.0; 9];
+        m.sampled_gram(&idx, &mut full);
+        let mut packed = vec![0.0; 6];
+        m.sampled_gram_packed(&idx, &mut packed);
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(full[r * 3 + c], packed[crate::linalg::packed::pidx(r, c)]);
+            }
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Dense row-major matrix.
 
+use crate::linalg::packed::{packed_len, tri_row};
+
 /// Dense row-major `rows × cols` matrix of `f64`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DenseMatrix {
@@ -104,6 +106,48 @@ impl DenseMatrix {
                 let v = dot(rj, self.row(idx[t]));
                 out[j * sb + t] = v;
                 out[t * sb + j] = v;
+            }
+        }
+    }
+
+    /// Packed-triangle Gram of sampled rows: entry `(j, t)` with `t ≤ j`
+    /// at `out[j(j+1)/2 + t]`, `out` is `sb(sb+1)/2` long. Same 2×2
+    /// row-pair blocking (and same per-entry accumulation order, so the
+    /// values are **bitwise identical** to [`DenseMatrix::sampled_gram`])
+    /// but only the lower triangle is stored — this is the hot-path
+    /// variant whose output feeds the `[G|r]` allreduce directly.
+    pub fn sampled_gram_packed(&self, idx: &[usize], out: &mut [f64]) {
+        let sb = idx.len();
+        debug_assert_eq!(out.len(), packed_len(sb));
+        let mut j = 0;
+        while j + 1 < sb {
+            let (rj0, rj1) = (self.row(idx[j]), self.row(idx[j + 1]));
+            let mut t = j;
+            while t + 1 < sb {
+                let (rt0, rt1) = (self.row(idx[t]), self.row(idx[t + 1]));
+                let [v00, v01, v10, v11] = dot2x2(rj0, rj1, rt0, rt1);
+                out[tri_row(t) + j] = v00;
+                out[tri_row(t + 1) + j] = v01;
+                if t > j {
+                    // (t, j+1) is strictly below the diagonal only when the
+                    // 2×2 tile is off-diagonal; on the diagonal tile the
+                    // cell (j, j+1) mirrors v01 (== v10) instead.
+                    out[tri_row(t) + j + 1] = v10;
+                }
+                out[tri_row(t + 1) + j + 1] = v11;
+                t += 2;
+            }
+            if t < sb {
+                let rt = self.row(idx[t]);
+                out[tri_row(t) + j] = dot(rj0, rt);
+                out[tri_row(t) + j + 1] = dot(rj1, rt);
+            }
+            j += 2;
+        }
+        if j < sb {
+            let rj = self.row(idx[j]);
+            for t in j..sb {
+                out[tri_row(t) + j] = dot(rj, self.row(idx[t]));
             }
         }
     }
@@ -283,6 +327,38 @@ mod tests {
                     let expect = dot(m.row(idx[j]), m.row(idx[t]));
                     assert!((g[j * sb + t] - expect).abs() < 1e-12,
                         "rows={rows} sb={sb} ({j},{t})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gram_is_bitwise_lower_triangle_of_full() {
+        // Every tile shape: even/odd sb, diagonal tiles, odd tails.
+        for (rows, sb) in [(6usize, 6usize), (7, 5), (9, 4), (5, 1), (8, 2)] {
+            let n = 29;
+            let mut st = rows as u64 * 131 + sb as u64 + 7;
+            let data: Vec<f64> = (0..rows * n)
+                .map(|_| {
+                    st ^= st << 13;
+                    st ^= st >> 7;
+                    st ^= st << 17;
+                    (st as f64 / u64::MAX as f64) - 0.5
+                })
+                .collect();
+            let m = DenseMatrix::from_vec(rows, n, data);
+            // Duplicates allowed — sampled blocks repeat across inner steps.
+            let idx: Vec<usize> = (0..sb).map(|i| (i * 5 + 1) % rows).collect();
+            let mut full = vec![0.0; sb * sb];
+            m.sampled_gram(&idx, &mut full);
+            let mut packed = vec![0.0; packed_len(sb)];
+            m.sampled_gram_packed(&idx, &mut packed);
+            for r in 0..sb {
+                for c in 0..=r {
+                    assert!(
+                        packed[tri_row(r) + c] == full[r * sb + c],
+                        "rows={rows} sb={sb} ({r},{c}): packed not bitwise equal"
+                    );
                 }
             }
         }

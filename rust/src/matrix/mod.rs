@@ -93,7 +93,9 @@ impl Matrix {
     }
 
     /// `G[j,t] = <row_{idx[j]}, row_{idx[t]}>` — the raw local Gram block
-    /// (upper triangle computed, mirrored), `out` is `idx.len()²` row-major.
+    /// as a full mirrored `idx.len()²` row-major matrix. Baseline and
+    /// diagnostic callers only; the solver hot path uses
+    /// [`Matrix::sampled_gram_packed`].
     pub fn sampled_gram(&self, idx: &[usize], out: &mut [f64]) -> Result<()> {
         let sb = idx.len();
         if out.len() != sb * sb {
@@ -105,6 +107,50 @@ impl Matrix {
         match self {
             Matrix::Dense(m) => m.sampled_gram(idx, out),
             Matrix::Csr(m) => m.sampled_gram(idx, out),
+        }
+        Ok(())
+    }
+
+    /// Packed lower-triangular sampled Gram — the hot-path variant: entry
+    /// `(j, t)` with `t ≤ j` at `out[j(j+1)/2 + t]`, `out` is
+    /// `sb(sb+1)/2` long (the exact shape of the `[G|…]` allreduce
+    /// payload's Gram segment). Values are bitwise identical to the lower
+    /// triangle of [`Matrix::sampled_gram`].
+    pub fn sampled_gram_packed(&self, idx: &[usize], out: &mut [f64]) -> Result<()> {
+        let sb = idx.len();
+        if out.len() != crate::linalg::packed::packed_len(sb) {
+            return Err(Error::Shape(format!(
+                "sampled_gram_packed: out len {} != {sb}·({sb}+1)/2",
+                out.len()
+            )));
+        }
+        match self {
+            Matrix::Dense(m) => m.sampled_gram_packed(idx, out),
+            Matrix::Csr(m) => m.sampled_gram_packed(idx, out),
+        }
+        Ok(())
+    }
+
+    /// [`Matrix::sampled_gram_packed`] with caller-provided Gustavson
+    /// scratch: CSR operands reuse `scratch` for the transposed panel
+    /// (zero allocations per call once warm — the backend hot path owns
+    /// one), dense operands ignore it.
+    pub fn sampled_gram_packed_scratch(
+        &self,
+        idx: &[usize],
+        out: &mut [f64],
+        scratch: &mut Vec<(u32, u32, f64)>,
+    ) -> Result<()> {
+        let sb = idx.len();
+        if out.len() != crate::linalg::packed::packed_len(sb) {
+            return Err(Error::Shape(format!(
+                "sampled_gram_packed: out len {} != {sb}·({sb}+1)/2",
+                out.len()
+            )));
+        }
+        match self {
+            Matrix::Dense(m) => m.sampled_gram_packed(idx, out),
+            Matrix::Csr(m) => m.sampled_gram_packed_into(idx, out, scratch),
         }
         Ok(())
     }
@@ -297,10 +343,28 @@ mod tests {
     }
 
     #[test]
+    fn packed_gram_agrees_with_full_for_both_storages() {
+        for m in [small_dense(), small_csr()] {
+            let idx = [2usize, 0, 1];
+            let mut full = vec![0.0; 9];
+            m.sampled_gram(&idx, &mut full).unwrap();
+            let mut packed = vec![0.0; 6];
+            m.sampled_gram_packed(&idx, &mut packed).unwrap();
+            for r in 0..3 {
+                for c in 0..3 {
+                    assert_eq!(full[r * 3 + c], packed[crate::linalg::pidx(r, c)]);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn shape_errors() {
         let d = small_dense();
         let mut out = vec![0.0; 3];
         assert!(d.sampled_gram(&[0, 1], &mut out).is_err());
+        assert!(d.sampled_gram_packed(&[0, 1], &mut out).is_ok());
+        assert!(d.sampled_gram_packed(&[0, 1, 2], &mut out).is_err());
         assert!(d.slice_cols(3, 2).is_err());
         assert!(d.slice_cols(0, 9).is_err());
     }

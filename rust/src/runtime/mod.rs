@@ -17,6 +17,7 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::gram::ComputeBackend;
+use crate::linalg::packed::{packed_len, pidx, tri_row};
 use crate::matrix::Matrix;
 
 // Default offline build: compile against the fail-fast shim. A vendored
@@ -265,9 +266,12 @@ impl ComputeBackend for XlaBackend {
         let sb = idx.len();
         let n_loc = a.cols();
         let (sb_art, nloc_art) = self.rt.pick_gram(sb)?;
-        // Gather sampled rows densely once.
+        // Gather sampled rows densely once. The artifact returns the full
+        // sb_art × sb_art Gram tile; only its lower triangle is folded
+        // into the packed output `g` (the coordinator's wire format).
         self.rows.resize(sb * n_loc, 0.0);
         a.gather_rows(idx, &mut self.rows)?;
+        debug_assert_eq!(g.len(), packed_len(sb));
         g.fill(0.0);
         r.fill(0.0);
         // Stream column chunks of the artifact width, zero-padding the tail.
@@ -293,8 +297,9 @@ impl ComputeBackend for XlaBackend {
             let gv = outs[0].to_vec::<f64>()?;
             let rv = outs[1].to_vec::<f64>()?;
             for j in 0..sb {
-                for t in 0..sb {
-                    g[j * sb + t] += gv[j * sb_art + t];
+                let base = tri_row(j);
+                for t in 0..=j {
+                    g[base + t] += gv[j * sb_art + t];
                 }
                 r[j] += rv[j];
             }
@@ -408,6 +413,9 @@ impl ComputeBackend for XlaBackend {
 }
 
 /// Zero-pad (G, r, overlap) from logical (s, b) to artifact (sa, ba).
+/// `g` arrives as the packed lower triangle (the coordinator's wire
+/// format) and is expanded straight into the padded artifact layout — the
+/// only full-matrix copy lives here, on the artifact boundary.
 fn pad_solve_inputs(
     s: usize,
     b: usize,
@@ -417,7 +425,8 @@ fn pad_solve_inputs(
     r: &[f64],
     ov: &[f64],
 ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
-    let (sb, sba) = (s * b, sa * ba);
+    let sba = sa * ba;
+    debug_assert_eq!(g.len(), packed_len(s * b));
     let mut g_p = vec![0.0; sba * sba];
     let mut r_p = vec![0.0; sba];
     let mut ov_p = vec![0.0; sa * sa * ba * ba];
@@ -427,7 +436,7 @@ fn pad_solve_inputs(
             r_p[pos(j, i)] = r[j * b + i];
             for t in 0..s {
                 for c in 0..b {
-                    g_p[pos(j, i) * sba + pos(t, c)] = g[(j * b + i) * sb + t * b + c];
+                    g_p[pos(j, i) * sba + pos(t, c)] = g[pidx(j * b + i, t * b + c)];
                     ov_p[((j * sa + t) * ba + i) * ba + c] = ov[((j * s + t) * b + i) * b + c];
                 }
             }
@@ -472,18 +481,37 @@ mod tests {
     fn pad_solve_inputs_places_gram_blocks() {
         let (s, b, sa, ba) = (2usize, 2usize, 2usize, 4usize);
         let sb = s * b;
-        let g: Vec<f64> = (0..sb * sb).map(|i| (i + 1) as f64).collect();
+        // Symmetric full G, packed to the wire format before padding.
+        let mut g_full = vec![0.0; sb * sb];
+        for i in 0..sb {
+            for j in 0..=i {
+                let v = (i * sb + j + 1) as f64;
+                g_full[i * sb + j] = v;
+                g_full[j * sb + i] = v;
+            }
+        }
+        let mut g = vec![0.0; packed_len(sb)];
+        crate::linalg::packed::pack_lower(&g_full, sb, &mut g);
         let r: Vec<f64> = (0..sb).map(|i| (i + 1) as f64).collect();
         let ov = vec![0.5; s * s * b * b];
         let (gp, rp, ovp) = pad_solve_inputs(s, b, sa, ba, &g, &r, &ov);
         let sba = sa * ba;
-        // G[(0,0),(0,0)] = 1 at padded (0,0)
-        assert_eq!(gp[0], 1.0);
-        // G[(1,0),(1,0)] = g[2*sb+2] at padded (ba, ba)
-        assert_eq!(gp[ba * sba + ba], g[2 * sb + 2]);
+        // Every logical entry lands at its padded position, mirrored.
+        for i in 0..sb {
+            for j in 0..sb {
+                let (bi, oi) = (i / b, i % b);
+                let (bj, oj) = (j / b, j % b);
+                assert_eq!(
+                    gp[(bi * ba + oi) * sba + bj * ba + oj],
+                    g_full[i * sb + j],
+                    "({i},{j})"
+                );
+            }
+        }
         // padded rows are zero
         assert_eq!(gp[2 * sba + 2], 0.0);
         assert_eq!(rp[ba], r[2]);
-        assert_eq!(ovp[((0 * sa + 1) * ba + 1) * ba + 0], 0.5);
+        // Overlap entry (j=0, t=1, i=1, c=0) at ((0·sa+1)·ba+1)·ba+0.
+        assert_eq!(ovp[(ba + 1) * ba], 0.5);
     }
 }

@@ -7,11 +7,13 @@
 //!
 //! 1. every rank draws the same `s` size-`b` row blocks (shared seed — no
 //!    communication),
-//! 2. computes its raw partial `G = Y_loc Y_locᵀ`, `r = Y_loc (y−α)_loc`
-//!    through the pluggable [`ComputeBackend`] (native Rust or the AOT
-//!    Pallas artifact via PJRT),
-//! 3. **one allreduce** of the `(sb² + sb)`-word buffer — the only
-//!    communication of the outer iteration, giving the Θ(s) latency saving,
+//! 2. computes its raw partial `G = Y_loc Y_locᵀ` (packed lower triangle),
+//!    `r = Y_loc (y−α)_loc` through the pluggable [`ComputeBackend`]
+//!    (native Rust or the AOT Pallas artifact via PJRT),
+//! 3. **one allreduce** of the `(sb(sb+1)/2 + sb)`-word packed `[G|r]`
+//!    buffer — the only communication of the outer iteration, giving the
+//!    Θ(s) latency saving (G is symmetric, so only its triangle rides the
+//!    wire; the inner solve indexes the triangle directly),
 //! 4. solves the `s` deferred `b×b` subproblems redundantly (eq. 8),
 //! 5. applies the deferred updates: `w[I_t] += Δ_t`, `α_loc += Y_locᵀ δ`.
 //!
@@ -28,8 +30,11 @@ use crate::comm::Communicator;
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::cond::condition_number;
+use crate::linalg::packed::{packed_len, pidx};
 use crate::matrix::Matrix;
-use crate::metrics::{relative_objective_error, relative_solution_error, History, IterRecord, Reference};
+use crate::metrics::{
+    relative_objective_error, relative_solution_error, History, IterRecord, Reference,
+};
 use crate::sampling::{overlap_tensor_into, BlockSampler};
 use crate::solvers::common::{
     flatten_blocks, metered_out, objective_value, PrimalOutput, SolverOpts,
@@ -68,7 +73,8 @@ pub fn run<C: Communicator>(
 
     // Scratch buffers hoisted out of the iteration loop (no allocation on
     // the hot path; see EXPERIMENTS.md §Perf).
-    let mut buf = vec![0.0; sb * sb + sb]; // [G | r] allreduce payload
+    let gl = packed_len(sb);
+    let mut buf = vec![0.0; gl + sb]; // packed [G | r] allreduce payload
     let mut z = vec![0.0; n_loc];
     let mut w_blocks = vec![0.0; sb];
     let mut gram_scaled = vec![0.0; sb * sb];
@@ -105,18 +111,20 @@ pub fn run<C: Communicator>(
         }
 
         // Raw partial Gram + residual through the backend (the L1 hot spot).
-        let (g_buf, r_buf) = buf.split_at_mut(sb * sb);
+        let (g_buf, r_buf) = buf.split_at_mut(gl);
         backend.gram_resid(a_loc, &idx_flat, &z, g_buf, r_buf)?;
 
         // THE communication of this outer iteration.
         comm.allreduce_sum(&mut buf)?;
 
         if opts.track_gram_cond && k % cond_stride == 0 {
-            // Condition number of G = (1/n)·YYᵀ + λI (paper Figs. 4i–l).
+            // Condition number of G = (1/n)·YYᵀ + λI (paper Figs. 4i–l);
+            // the eigensolver wants the full matrix, mirrored off the
+            // packed triangle (diagnostic path only).
             for i in 0..sb {
                 for j in 0..sb {
                     gram_scaled[i * sb + j] =
-                        inv_n * buf[i * sb + j] + if i == j { lam } else { 0.0 };
+                        inv_n * buf[pidx(i, j)] + if i == j { lam } else { 0.0 };
                 }
             }
             history.gram_conds.push(condition_number(&gram_scaled, sb));
@@ -129,7 +137,7 @@ pub fn run<C: Communicator>(
                 w_blocks[j * b + i] = w[row];
             }
         }
-        let (g_buf, r_buf) = buf.split_at(sb * sb);
+        let (g_buf, r_buf) = buf.split_at(gl);
         let deltas =
             backend.ca_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n)?;
 
@@ -190,6 +198,7 @@ fn run_overlapped<C: Communicator>(
     opts.validate(d)?;
     let (s, b) = (opts.s, opts.b);
     let sb = s * b;
+    let gl = packed_len(sb);
     let inv_n = 1.0 / n_global as f64;
     let lam = opts.lam;
 
@@ -230,17 +239,17 @@ fn run_overlapped<C: Communicator>(
     if outer > 0 {
         blocks = sampler.draw_blocks(s, b);
         flatten_blocks(&blocks, b, &mut idx_cur);
-        next_buf = comm.take_buf(sb * sb + sb);
-        backend.gram_only(a_loc, &idx_cur, &mut next_buf[..sb * sb])?;
+        next_buf = comm.take_buf(gl + sb);
+        backend.gram_only(a_loc, &idx_cur, &mut next_buf[..gl])?;
     }
     'outer_loop: for k in 0..outer {
-        let mut buf = std::mem::take(&mut next_buf); // holds G_k
+        let mut buf = std::mem::take(&mut next_buf); // holds G_k (packed)
 
         // z = y − α (local slice), then r_k into the buffer tail.
         for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
             *zi = yi - ai;
         }
-        backend.resid_only(a_loc, &idx_cur, &z, &mut buf[sb * sb..])?;
+        backend.resid_only(a_loc, &idx_cur, &z, &mut buf[gl..])?;
 
         // THE communication of this outer iteration — non-blocking.
         let handle = comm.iallreduce_start(buf)?;
@@ -250,8 +259,8 @@ fn run_overlapped<C: Communicator>(
         if k + 1 < outer {
             let nb = sampler.draw_blocks(s, b);
             flatten_blocks(&nb, b, &mut idx_next);
-            next_buf = comm.take_buf(sb * sb + sb);
-            backend.gram_only(a_loc, &idx_next, &mut next_buf[..sb * sb])?;
+            next_buf = comm.take_buf(gl + sb);
+            backend.gram_only(a_loc, &idx_next, &mut next_buf[..gl])?;
             pending_blocks = Some(nb);
         }
         overlap_tensor_into(&blocks, &mut overlap);
@@ -267,14 +276,14 @@ fn run_overlapped<C: Communicator>(
             for i in 0..sb {
                 for j in 0..sb {
                     gram_scaled[i * sb + j] =
-                        inv_n * buf[i * sb + j] + if i == j { lam } else { 0.0 };
+                        inv_n * buf[pidx(i, j)] + if i == j { lam } else { 0.0 };
                 }
             }
             history.gram_conds.push(condition_number(&gram_scaled, sb));
         }
 
         // Replicated inner solve (eq. 8) and deferred updates (eqs. 9–10).
-        let (g_buf, r_buf) = buf.split_at(sb * sb);
+        let (g_buf, r_buf) = buf.split_at(gl);
         let deltas =
             backend.ca_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n)?;
         for (j, blk) in blocks.iter().enumerate() {

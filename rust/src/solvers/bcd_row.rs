@@ -16,9 +16,11 @@
 use crate::comm::Communicator;
 use crate::error::{Error, Result};
 use crate::gram::ComputeBackend;
+use crate::linalg::packed::packed_len;
 use crate::matrix::{DenseMatrix, Matrix};
-use crate::metrics::{relative_objective_error, relative_solution_error, History, IterRecord,
-    Reference};
+use crate::metrics::{
+    relative_objective_error, relative_solution_error, History, IterRecord, Reference,
+};
 use crate::partition::BlockPartition;
 use crate::sampling::{overlap_tensor_into, BlockSampler};
 use crate::solvers::common::{metered_out, objective_value, SolverOpts};
@@ -79,10 +81,13 @@ pub fn run<C: Communicator>(
     let mut history = History::default();
     let mut max_loads = Vec::new();
 
-    // [G | r | w_blk] allreduce payload: w at the sampled indices is
-    // contributed by owners (zeros elsewhere) and summed — piggybacking the
-    // gather on the existing collective instead of a separate broadcast.
-    let mut buf = vec![0.0; sb * sb + sb + sb];
+    // [G | r | w_blk] allreduce payload — the Theorem-4 layout's packed
+    // equivalent, `sb(sb+1)/2 + 2sb` words: G rides as its lower triangle,
+    // and w at the sampled indices is contributed by owners (zeros
+    // elsewhere) and summed — piggybacking the gather on the existing
+    // collective instead of a separate broadcast.
+    let gl = packed_len(sb);
+    let mut buf = vec![0.0; gl + sb + sb];
     let mut z = vec![0.0; n_loc];
     let mut overlap = vec![0.0; s * s * b * b];
     let mut deltas_scratch: Vec<f64>;
@@ -123,7 +128,15 @@ pub fn run<C: Communicator>(
         metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
         max_loads.push(load_buf.iter().fold(0.0f64, |a, &v| a.max(v)) as usize);
 
-        let received = comm.all_to_all(send)?;
+        // Receive-side length contract: the shared seed means every rank
+        // knows exactly how many sampled rows each owner contributes, so a
+        // mis-sized payload poisons the group instead of desynchronizing
+        // the reassembly below.
+        let mut recv_lens = vec![0usize; p];
+        for &i in &flat {
+            recv_lens[row_part.owner(i)] += n_loc;
+        }
+        let received = comm.all_to_all_expect(send, &recv_lens)?;
         // Reassemble: rank q's payload lists its owned sampled rows' local
         // segments in global sample order.
         let mut y_cols = DenseMatrix::zeros(sb, n_loc);
@@ -142,7 +155,7 @@ pub fn run<C: Communicator>(
         }
         let all_idx: Vec<usize> = (0..sb).collect();
         {
-            let (g_buf, rest) = buf.split_at_mut(sb * sb);
+            let (g_buf, rest) = buf.split_at_mut(gl);
             let (r_buf, w_buf) = rest.split_at_mut(sb);
             backend.gram_resid(&y_cols, &all_idx, &z, g_buf, r_buf)?;
             // Contribute owned w entries for the replicated inner solve.
@@ -168,7 +181,7 @@ pub fn run<C: Communicator>(
             overlap_tensor_into(&blocks, &mut overlap);
         }
         {
-            let (g_buf, rest) = buf.split_at(sb * sb);
+            let (g_buf, rest) = buf.split_at(gl);
             let (r_buf, w_buf) = rest.split_at(sb);
             deltas_scratch =
                 backend.ca_inner_solve(s, b, g_buf, r_buf, w_buf, &overlap, lam, inv_n)?;

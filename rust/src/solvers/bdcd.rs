@@ -9,8 +9,9 @@
 //!
 //! One outer iteration mirrors the primal exactly (same Gram engine, same
 //! AOT artifacts): draw `s` size-`b'` blocks of `[n]`, compute the raw
-//! partial `G = A_loc[J,:]·A_loc[J,:]ᵀ` (`= (XI)ᵀ(XI)` summed over ranks)
-//! and `r = A_loc[J,:]·w_loc` (`= IᵀXᵀw`), **one allreduce**, the s dual
+//! partial `G = A_loc[J,:]·A_loc[J,:]ᵀ` (`= (XI)ᵀ(XI)` summed over ranks,
+//! packed lower triangle — `sb(sb+1)/2 + sb` words on the wire) and
+//! `r = A_loc[J,:]·w_loc` (`= IᵀXᵀw`), **one allreduce**, the s dual
 //! subproblem solves of eq. (18), then the deferred updates
 //! `α[J_t] += Δα_t` (replicated) and `w_loc -= (1/λn)·A_loc[J,:]ᵀ δ`.
 //!
@@ -24,9 +25,11 @@ use crate::comm::Communicator;
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::cond::condition_number;
+use crate::linalg::packed::{packed_len, pidx};
 use crate::matrix::Matrix;
-use crate::metrics::{relative_objective_error, relative_solution_error, History, IterRecord,
-    Reference};
+use crate::metrics::{
+    relative_objective_error, relative_solution_error, History, IterRecord, Reference,
+};
 use crate::sampling::{overlap_tensor_into, BlockSampler};
 use crate::solvers::common::{
     flatten_blocks, metered_out, objective_value, DualOutput, SolverOpts,
@@ -65,7 +68,8 @@ pub fn run<C: Communicator>(
     let mut w_loc = vec![0.0; d_loc];
     let mut history = History::default();
 
-    let mut buf = vec![0.0; sb * sb + sb];
+    let gl = packed_len(sb);
+    let mut buf = vec![0.0; gl + sb]; // packed [G | r] allreduce payload
     let mut a_blocks = vec![0.0; sb];
     let mut y_blocks = vec![0.0; sb];
     let mut gram_scaled = vec![0.0; sb * sb];
@@ -99,18 +103,19 @@ pub fn run<C: Communicator>(
         flatten_blocks(&blocks, b, &mut idx_flat);
 
         // Raw partial Gram + residual (contracting along the local feature
-        // slice): G_part = A[J,:]·A[J,:]ᵀ, r_part = A[J,:]·w_loc.
-        let (g_buf, r_buf) = buf.split_at_mut(sb * sb);
+        // slice): G_part = A[J,:]·A[J,:]ᵀ (packed), r_part = A[J,:]·w_loc.
+        let (g_buf, r_buf) = buf.split_at_mut(gl);
         backend.gram_resid(a_loc, &idx_flat, &w_loc, g_buf, r_buf)?;
 
         // THE communication of this outer iteration.
         comm.allreduce_sum(&mut buf)?;
 
         if opts.track_gram_cond && k % cond_stride == 0 {
-            // Θ-scale Gram: G' = (1/λn²)·raw + (1/n)I (paper Figs. 7i–l).
+            // Θ-scale Gram: G' = (1/λn²)·raw + (1/n)I (paper Figs. 7i–l),
+            // mirrored off the packed triangle for the eigensolver.
             for i in 0..sb {
                 for j in 0..sb {
-                    gram_scaled[i * sb + j] = (inv_n * inv_n / lam) * buf[i * sb + j]
+                    gram_scaled[i * sb + j] = (inv_n * inv_n / lam) * buf[pidx(i, j)]
                         + if i == j { inv_n } else { 0.0 };
                 }
             }
@@ -125,7 +130,7 @@ pub fn run<C: Communicator>(
                 y_blocks[j * b + i] = y[row];
             }
         }
-        let (g_buf, r_buf) = buf.split_at(sb * sb);
+        let (g_buf, r_buf) = buf.split_at(gl);
         let deltas = backend.ca_dual_inner_solve(
             s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n,
         )?;
@@ -194,6 +199,7 @@ fn run_overlapped<C: Communicator>(
     opts.validate(n)?;
     let (s, b) = (opts.s, opts.b);
     let sb = s * b;
+    let gl = packed_len(sb);
     let inv_n = 1.0 / n as f64;
     let lam = opts.lam;
 
@@ -232,14 +238,14 @@ fn run_overlapped<C: Communicator>(
     if outer > 0 {
         blocks = sampler.draw_blocks(s, b);
         flatten_blocks(&blocks, b, &mut idx_cur);
-        next_buf = comm.take_buf(sb * sb + sb);
-        backend.gram_only(a_loc, &idx_cur, &mut next_buf[..sb * sb])?;
+        next_buf = comm.take_buf(gl + sb);
+        backend.gram_only(a_loc, &idx_cur, &mut next_buf[..gl])?;
     }
     'outer_loop: for k in 0..outer {
-        let mut buf = std::mem::take(&mut next_buf); // holds G_k
+        let mut buf = std::mem::take(&mut next_buf); // holds G_k (packed)
 
         // r_k = A_loc[J,:] · w_loc into the buffer tail.
-        backend.resid_only(a_loc, &idx_cur, &w_loc, &mut buf[sb * sb..])?;
+        backend.resid_only(a_loc, &idx_cur, &w_loc, &mut buf[gl..])?;
 
         // THE communication of this outer iteration — non-blocking.
         let handle = comm.iallreduce_start(buf)?;
@@ -249,8 +255,8 @@ fn run_overlapped<C: Communicator>(
         if k + 1 < outer {
             let nb = sampler.draw_blocks(s, b);
             flatten_blocks(&nb, b, &mut idx_next);
-            next_buf = comm.take_buf(sb * sb + sb);
-            backend.gram_only(a_loc, &idx_next, &mut next_buf[..sb * sb])?;
+            next_buf = comm.take_buf(gl + sb);
+            backend.gram_only(a_loc, &idx_next, &mut next_buf[..gl])?;
             pending_blocks = Some(nb);
         }
         overlap_tensor_into(&blocks, &mut overlap);
@@ -266,7 +272,7 @@ fn run_overlapped<C: Communicator>(
         if opts.track_gram_cond && k % cond_stride == 0 {
             for i in 0..sb {
                 for j in 0..sb {
-                    gram_scaled[i * sb + j] = (inv_n * inv_n / lam) * buf[i * sb + j]
+                    gram_scaled[i * sb + j] = (inv_n * inv_n / lam) * buf[pidx(i, j)]
                         + if i == j { inv_n } else { 0.0 };
                 }
             }
@@ -274,7 +280,7 @@ fn run_overlapped<C: Communicator>(
         }
 
         // Replicated dual inner solve (eq. 18) and deferred updates.
-        let (g_buf, r_buf) = buf.split_at(sb * sb);
+        let (g_buf, r_buf) = buf.split_at(gl);
         let deltas = backend.ca_dual_inner_solve(
             s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n,
         )?;

@@ -10,6 +10,12 @@
 //! updates (SDCA with least-squares loss, b′=1) over its own data points
 //! against a stale local copy of w, then the Δw contributions are averaged
 //! (γ = 1/P, the safe CoCoA combiner) with ONE allreduce.
+//!
+//! Note on the packed-Gram wire format used by the CA solvers: CoCoA has
+//! no `[G|r]` payload to pack — its one collective per round is the
+//! length-`d` Δw combine, already minimal (exactly `d` words/rank/round;
+//! asserted alongside the packed-payload word counts in
+//! `tests/packed_gram.rs`).
 
 use crate::comm::Communicator;
 use crate::error::Result;

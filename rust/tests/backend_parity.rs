@@ -18,6 +18,7 @@ use std::path::Path;
 
 use cabcd::comm::SerialComm;
 use cabcd::gram::{ComputeBackend, NativeBackend};
+use cabcd::linalg::packed::{pack_lower, packed_len};
 use cabcd::matrix::{CsrMatrix, DenseMatrix, Matrix};
 use cabcd::runtime::XlaBackend;
 use cabcd::solvers::{bcd, bdcd, SolverOpts};
@@ -51,10 +52,10 @@ fn gram_resid_parity_dense_and_sparse() {
             idx.dedup();
             let sb = idx.len();
             let z = g.vec_normal(n_loc);
-            let mut g_n = vec![0.0; sb * sb];
+            let mut g_n = vec![0.0; packed_len(sb)];
             let mut r_n = vec![0.0; sb];
             nb.gram_resid(&a, &idx, &z, &mut g_n, &mut r_n).unwrap();
-            let mut g_x = vec![0.0; sb * sb];
+            let mut g_x = vec![0.0; packed_len(sb)];
             let mut r_x = vec![0.0; sb];
             xb.gram_resid(&a, &idx, &z, &mut g_x, &mut r_x).unwrap();
             for (i, (p, q)) in g_n.iter().zip(&g_x).enumerate() {
@@ -83,16 +84,19 @@ fn inner_solve_parity_primal_and_dual() {
         // SPD raw Gram from a random factor.
         let m = g.vec_normal(sb * (sb + 16));
         let cols = sb + 16;
-        let mut g_raw = vec![0.0; sb * sb];
+        let mut g_full = vec![0.0; sb * sb];
         for i in 0..sb {
             for j in 0..sb {
                 let mut acc = 0.0;
                 for k in 0..cols {
                     acc += m[i * cols + k] * m[j * cols + k];
                 }
-                g_raw[i * sb + j] = acc;
+                g_full[i * sb + j] = acc;
             }
         }
+        // Both backends consume the packed wire format.
+        let mut g_raw = vec![0.0; packed_len(sb)];
+        pack_lower(&g_full, sb, &mut g_raw);
         let r_raw = g.vec_normal(sb);
         let w_blk = g.vec_normal(sb);
         let y_blk = g.vec_normal(sb);
@@ -186,7 +190,7 @@ fn xla_backend_rejects_oversized_blocks() {
     let a = Matrix::Dense(DenseMatrix::zeros(200, 64));
     let idx: Vec<usize> = (0..128).collect(); // > largest artifact sb (64)
     let z = vec![0.0; 64];
-    let mut g = vec![0.0; 128 * 128];
+    let mut g = vec![0.0; packed_len(128)];
     let mut r = vec![0.0; 128];
     let err = xb.gram_resid(&a, &idx, &z, &mut g, &mut r).unwrap_err();
     assert!(

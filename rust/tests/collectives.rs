@@ -322,6 +322,39 @@ fn length_mismatch_poisons_group_instead_of_hanging() {
     }
 }
 
+/// Receive-side twin of the test above (ROADMAP open item): an
+/// `all_to_all_expect` payload whose length violates the receiver's
+/// contract must poison the group — every rank errors by its second
+/// collective, and `run_spmd` returning at all proves no receiver hung.
+#[test]
+fn all_to_all_length_mismatch_poisons_receivers_instead_of_hanging() {
+    for p in [2usize, 5] {
+        let outcomes = run_spmd(p, |rank, comm| {
+            // Everyone expects 4-word payloads; rank 0 ships 2-word ones.
+            let send: Vec<Vec<f64>> = (0..p)
+                .map(|_| vec![rank as f64; if rank == 0 { 2 } else { 4 }])
+                .collect();
+            let lens = vec![4usize; p];
+            let first = comm
+                .all_to_all_expect(send, &lens)
+                .err()
+                .map(|e| e.to_string());
+            let second = comm.barrier().err().map(|e| e.to_string());
+            (first, second)
+        });
+        for (rank, (first, second)) in outcomes.iter().enumerate() {
+            let failed = first.as_ref().or(second.as_ref());
+            let msg = failed.unwrap_or_else(|| {
+                panic!("p={p} rank={rank}: no collective failed after receive-side mismatch")
+            });
+            assert!(
+                msg.contains("poisoned") || msg.contains("terminated"),
+                "p={p} rank={rank}: unexpected error {msg:?}"
+            );
+        }
+    }
+}
+
 #[test]
 fn spmd_rank_count_does_not_change_solver_numerics() {
     // End-to-end SPMD equivalence: same dataset, P ∈ {1, 2, 5} → same w.
