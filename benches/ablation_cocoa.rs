@@ -46,6 +46,7 @@ fn main() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let shards = partition_dual(&ds, p).unwrap();
         let rref = &reference;

@@ -65,6 +65,7 @@ fn main() {
         track_gram_cond: false,
         tol: Some(tol),
         overlap: false,
+        ..Default::default()
     };
     let p = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be).unwrap();
     let s_bcd = from_history("BCD", Method::Bcd, 4.0, &p.history);

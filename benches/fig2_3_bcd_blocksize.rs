@@ -48,6 +48,7 @@ fn main() {
                 track_gram_cond: false,
                 tol: None,
                 overlap: false,
+                ..Default::default()
             };
             let mut be = NativeBackend::new();
             let out = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be)

@@ -49,6 +49,7 @@ fn main() {
                 track_gram_cond: true,
                 tol: None,
                 overlap: false,
+                ..Default::default()
             };
             let mut be = NativeBackend::new();
             let mut c = SerialComm::new();

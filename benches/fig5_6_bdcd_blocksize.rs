@@ -44,6 +44,7 @@ fn main() {
                 track_gram_cond: false,
                 tol: None,
                 overlap: false,
+                ..Default::default()
             };
             let mut be = NativeBackend::new();
             let out = bdcd::run(&a, &ds.y, d, 0, &opts, Some(&reference), &mut comm, &mut be)

@@ -16,7 +16,11 @@
 //!
 //! Both modes write `BENCH_hotpath.json` (allreduce words/rank, Gram
 //! kernel timings, packed-vs-full payload ratio) so future PRs have a
-//! perf baseline to diff against.
+//! perf baseline to diff against. In `--quick` mode, before overwriting,
+//! the machine-independent **wire/word-count fields of the committed
+//! seed are re-checked**: a current value more than 25% above the seed's
+//! fails the bench (and therefore CI) — a payload-format regression
+//! cannot land silently.
 
 use std::path::Path;
 
@@ -45,6 +49,45 @@ fn sparse_mat(d: usize, n: usize, density: f64, seed: u64) -> CsrMatrix {
     CsrMatrix::from_triplets(d, n, trip)
 }
 
+/// Minimal numeric-field extraction from the committed seed JSON (the
+/// crate is serde-free offline; the seed format is flat `"key": number`).
+fn json_num_field(text: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\":");
+    let at = text.find(&needle)? + needle.len();
+    let rest = text[at..].trim_start();
+    let end = rest
+        .find(|c: char| c == ',' || c == '}')
+        .unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// CI regression gate: compare the current run's machine-independent
+/// wire/word-count metrics against the committed `BENCH_hotpath.json`
+/// seed and fail on >25% growth (timing fields are machine-dependent and
+/// deliberately not gated).
+fn check_against_seed(seed_text: &str, current: &[(&str, f64)]) {
+    const WIRE_FIELDS: &[&str] = &[
+        "allreduce_payload_words_packed",
+        "allreduce_words_per_rank_p8_packed",
+    ];
+    for &key in WIRE_FIELDS {
+        let Some(seed_val) = json_num_field(seed_text, key) else {
+            println!("  seed check: field {key} missing from seed, skipping");
+            continue;
+        };
+        let Some(&(_, cur)) = current.iter().find(|(k, _)| *k == key) else {
+            panic!("seed check: current run never measured {key}");
+        };
+        let limit = seed_val * 1.25;
+        println!("  seed check: {key} = {cur} (seed {seed_val}, limit {limit:.0})");
+        assert!(
+            cur <= limit,
+            "wire regression: {key} = {cur} exceeds 1.25× the committed seed \
+             ({seed_val}) — the packed [G|r] payload grew"
+        );
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let (warm, runs) = if quick { (1usize, 5usize) } else { (3, 15) };
@@ -55,6 +98,8 @@ fn main() {
     let mut be = NativeBackend::new();
     let mut report: Vec<(&str, String)> = Vec::new();
     report.push(("mode", json::string(if quick { "quick" } else { "full" })));
+    // Machine-independent wire metrics, gated against the committed seed.
+    let mut wire_metrics: Vec<(&str, f64)> = Vec::new();
 
     // --- packed gram_resid over dense operands -------------------------
     let n_loc = if quick { 2048 } else { 8192 };
@@ -175,6 +220,33 @@ fn main() {
         report.push(("allreduce_words_per_rank_p8_packed", json::num(w_packed as f64)));
         report.push(("allreduce_words_per_rank_p8_full", json::num(w_full as f64)));
         report.push(("packed_vs_full_payload_ratio", json::num(ratio)));
+        wire_metrics.push(("allreduce_payload_words_packed", packed as f64));
+        wire_metrics.push(("allreduce_words_per_rank_p8_packed", w_packed as f64));
+    }
+
+    // --- prox inner solve (same packed [G|r] inputs, soft-threshold path)
+    {
+        use cabcd::prox::Reg;
+        let (s, b) = (4usize, 8usize);
+        let sb = s * b;
+        let m = dense_mat(sb, sb + 32, 5);
+        let mut g_raw = vec![0.0; packed_len(sb)];
+        let idx: Vec<usize> = (0..sb).collect();
+        m.sampled_gram_packed(&idx, &mut g_raw);
+        let mut rng = Rng64::seed_from_u64(6);
+        let r_raw: Vec<f64> = (0..sb).map(|_| rng.gen_normal()).collect();
+        let w_blk: Vec<f64> = (0..sb).map(|_| rng.gen_normal()).collect();
+        let blocks: Vec<Vec<usize>> = (0..s)
+            .map(|j| (0..b).map(|i| (j * b + i) % (sb / 2 + 1)).collect())
+            .collect();
+        let ov = overlap_tensor(&blocks);
+        let reg = Reg::L1;
+        let (med, _, _) = time_runs(warm, runs, || {
+            be.ca_prox_inner_solve(s, b, &g_raw, &r_raw, &w_blk, &ov, 0.5, 1e-3, &reg)
+                .unwrap()
+        });
+        println!("\nca_prox_inner_solve (s=4, b=8, l1): {}", fmt_secs(med));
+        report.push(("prox_inner_solve_s4_b8_ns", json::num(med * 1e9)));
     }
 
     // Measured allreduce latency on the packed payload.
@@ -274,6 +346,7 @@ fn main() {
                 track_gram_cond: false,
                 tol: None,
                 overlap: false,
+                ..Default::default()
             };
             let mut c = SerialComm::new();
             let (med, _, _) = time_runs(1, 5, || {
@@ -314,6 +387,7 @@ fn main() {
                 track_gram_cond: false,
                 tol: None,
                 overlap,
+                ..Default::default()
             };
             let shards_ref = &shards;
             let optsr = &opts;
@@ -369,6 +443,20 @@ fn main() {
         );
     } else if !quick {
         println!("\n(artifacts/ missing — skipping XLA latency section)");
+    }
+
+    // --- CI regression gate against the committed seed -------------------
+    // Quick mode runs in CI from a fresh checkout, so BENCH_hotpath.json
+    // on disk IS the committed seed at this point; compare before
+    // overwriting. >25% growth of any wire/word-count field fails here.
+    if quick {
+        match std::fs::read_to_string("BENCH_hotpath.json") {
+            Ok(seed_text) => {
+                println!("\nseed regression check (≤1.25× committed wire counts):");
+                check_against_seed(&seed_text, &wire_metrics);
+            }
+            Err(e) => println!("\n(no committed BENCH_hotpath.json seed to check: {e})"),
+        }
     }
 
     // --- perf baseline for future PRs -----------------------------------

@@ -115,6 +115,7 @@ fn main() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let shards = partition_primal(&ds, 8).unwrap();
         let meters: Vec<CostMeter> = run_spmd(8, |rank, comm| {

@@ -47,6 +47,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             track_gram_cond: true,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();

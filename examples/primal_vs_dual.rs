@@ -50,6 +50,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let p = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be)?;

@@ -41,6 +41,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut backend = NativeBackend::new();
         let out = bcd::run(

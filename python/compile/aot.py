@@ -12,7 +12,11 @@ and the Rust side unwraps the tuple.
 
 Artifacts (all float64 — parity with the coordinator's native f64 path):
 
-  gram_resid_sb{SB}_n{NLOC}    (Y[SB,NLOC], z[NLOC]) -> (G[SB,SB], r[SB])
+  gram_resid_packed_sb{SB}_n{NLOC}
+      (Y[SB,NLOC], z[NLOC]) -> (Gpacked[SB(SB+1)/2], r[SB])
+      G rides as its packed lower triangle — the coordinator's wire/solve
+      format — so the Rust runtime accumulates artifact tiles with one
+      elementwise add instead of a fold-to-packed copy.
   inner_solve_s{S}_b{B}        (Graw, rraw, wblk, overlap, lam, inv_n) -> d[S,B]
   alpha_update_sb{SB}_n{NLOC}  (Y[SB,NLOC], dflat[SB]) -> a[NLOC]
 
@@ -64,7 +68,7 @@ def spec(*shape):
 
 
 def lower_gram(sb: int, nloc: int):
-    fn = functools.partial(model.gram_resid_partial, nt=NT)
+    fn = functools.partial(model.gram_resid_packed_partial, nt=NT)
     return jax.jit(fn).lower(spec(sb, nloc), spec(nloc))
 
 
@@ -101,8 +105,9 @@ def build_all(out_dir: str, gram_shapes, solve_shapes, verbose=True) -> dict:
     os.makedirs(out_dir, exist_ok=True)
     manifest: list = []
     for sb, nloc in gram_shapes:
-        emit(out_dir, f"gram_resid_sb{sb}_n{nloc}", lower_gram(sb, nloc),
-             {"kind": "gram_resid", "sb": sb, "nloc": nloc, "nt": NT},
+        emit(out_dir, f"gram_resid_packed_sb{sb}_n{nloc}",
+             lower_gram(sb, nloc),
+             {"kind": "gram_resid_packed", "sb": sb, "nloc": nloc, "nt": NT},
              manifest, verbose)
         emit(out_dir, f"alpha_update_sb{sb}_n{nloc}",
              lower_alpha_update(sb, nloc),

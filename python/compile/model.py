@@ -30,6 +30,7 @@ from .kernels.gram import gram_resid, DEFAULT_NT
 
 __all__ = [
     "gram_resid_partial",
+    "gram_resid_packed_partial",
     "ca_inner_solve",
     "ca_dual_inner_solve",
     "alpha_update_partial",
@@ -41,6 +42,25 @@ __all__ = [
 def gram_resid_partial(y_block, z, *, nt: int = DEFAULT_NT):
     """Per-rank fused partial Gram + residual (wraps the L1 Pallas kernel)."""
     return gram_resid(y_block, z, nt=nt)
+
+
+def gram_resid_packed_partial(y_block, z, *, nt: int = DEFAULT_NT):
+    """``gram_resid_partial`` emitting G as its **packed lower triangle**.
+
+    The coordinator's wire/solve format is the packed triangle (entry
+    ``(r, c)``, ``r ≥ c``, at ``r(r+1)/2 + c`` — ``rust/src/linalg/packed.rs``);
+    emitting it straight from the artifact removes the fold-to-packed copy
+    the Rust runtime used to perform per column chunk. ``jnp.tril_indices``
+    enumerates the triangle in exactly that row-major order, so the gather
+    below IS the packed layout; the first ``sb(sb+1)/2`` entries of a
+    larger artifact's triangle are the complete triangle of any logical
+    ``sb`` ≤ the artifact's (row offsets don't depend on the matrix size),
+    which is what lets the runtime accumulate a zero-padded artifact tile
+    into the logical packed buffer with one elementwise add.
+    """
+    g, r = gram_resid(y_block, z, nt=nt)
+    rows, cols = jnp.tril_indices(g.shape[0])
+    return g[rows, cols], r
 
 
 def cholesky_unrolled(a: jnp.ndarray) -> jnp.ndarray:

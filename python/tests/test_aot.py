@@ -29,8 +29,11 @@ def test_manifest_schema(small_artifacts):
     out, man = small_artifacts
     assert man["dtype"] == "f64"
     names = {a["name"] for a in man["artifacts"]}
-    assert names == {"gram_resid_sb8_n1024", "alpha_update_sb8_n1024",
+    assert names == {"gram_resid_packed_sb8_n1024", "alpha_update_sb8_n1024",
                      "inner_solve_s2_b4", "dual_inner_solve_s2_b4"}
+    kinds = {a["kind"] for a in man["artifacts"]}
+    assert "gram_resid_packed" in kinds
+    assert "gram_resid" not in kinds  # obsolete full-matrix layout
     with open(os.path.join(out, "manifest.json")) as f:
         assert json.load(f) == man
 
@@ -57,10 +60,13 @@ def test_artifacts_parse_as_hlo(small_artifacts):
 
 def test_gram_artifact_declares_expected_io(small_artifacts):
     out, _ = small_artifacts
-    text = open(os.path.join(out, "gram_resid_sb8_n1024.hlo.txt")).read()
-    # entry layout: (Y[8,1024], z[1024]) -> (G[8,8], r[8])
+    text = open(os.path.join(out,
+                             "gram_resid_packed_sb8_n1024.hlo.txt")).read()
+    # entry layout: (Y[8,1024], z[1024]) -> (Gpacked[36], r[8]) — G ships
+    # as its packed lower triangle (sb(sb+1)/2 = 36 words), the
+    # coordinator's wire/solve format end-to-end.
     assert "f64[8,1024]" in text
-    assert "(f64[8,8]{1,0},f64[8]{0})" in text.replace(" ", "")
+    assert "(f64[36]{0},f64[8]{0})" in text.replace(" ", "")
 
 
 def test_inner_solve_artifact_declares_expected_io(small_artifacts):

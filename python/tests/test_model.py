@@ -10,7 +10,8 @@ from numpy.testing import assert_allclose
 from tests._hypothesis_compat import given, settings, st
 
 from compile.model import (alpha_update_partial, ca_dual_inner_solve,
-                           ca_inner_solve, cholesky_unrolled, chol_solve)
+                           ca_inner_solve, cholesky_unrolled, chol_solve,
+                           gram_resid_packed_partial, gram_resid_partial)
 from compile.kernels.ref import ca_inner_solve_ref
 
 
@@ -47,6 +48,51 @@ def test_chol_solve_hypothesis(b, seed):
     rhs = rng.standard_normal(b)
     x = np.asarray(chol_solve(jnp.asarray(a), jnp.asarray(rhs)))
     assert_allclose(a @ x, rhs, rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("sb", [1, 4, 8])
+def test_gram_resid_packed_is_the_lower_triangle(sb):
+    """The packed artifact entry point must emit exactly the coordinator's
+    wire layout: entry (r, c), r ≥ c, at r(r+1)/2 + c — bitwise equal to
+    the full kernel's lower triangle (same accumulation, just a gather)."""
+    rng = np.random.default_rng(sb)
+    nt = 16
+    y = jnp.asarray(rng.standard_normal((sb, 4 * nt)))
+    z = jnp.asarray(rng.standard_normal(4 * nt))
+    g_full, r_full = gram_resid_partial(y, z, nt=nt)
+    g_packed, r_packed = gram_resid_packed_partial(y, z, nt=nt)
+    assert g_packed.shape == (sb * (sb + 1) // 2,)
+    g_full = np.asarray(g_full)
+    g_packed = np.asarray(g_packed)
+    for r in range(sb):
+        for c in range(r + 1):
+            assert g_packed[r * (r + 1) // 2 + c] == g_full[r, c], (r, c)
+    np.testing.assert_array_equal(np.asarray(r_packed), np.asarray(r_full))
+
+
+def test_packed_prefix_property_for_smaller_logical_sb():
+    """First packed_len(sb) entries of a larger artifact's triangle ARE the
+    logical sb-triangle — the layout property the Rust runtime's one-add
+    accumulation of zero-padded tiles relies on. (fp tolerance, not
+    bitwise: XLA's dot picks a different internal summation order per tile
+    height; the runtime itself only ever evaluates the padded shape, so
+    its accumulation is self-consistent.)"""
+    rng = np.random.default_rng(7)
+    nt = 16
+    sb_art, sb = 8, 5
+    y_small = rng.standard_normal((sb, 2 * nt))
+    y_pad = np.zeros((sb_art, 2 * nt))
+    y_pad[:sb] = y_small
+    z = rng.standard_normal(2 * nt)
+    g_small, _ = gram_resid_packed_partial(jnp.asarray(y_small),
+                                           jnp.asarray(z), nt=nt)
+    g_pad, _ = gram_resid_packed_partial(jnp.asarray(y_pad),
+                                         jnp.asarray(z), nt=nt)
+    assert_allclose(np.asarray(g_pad)[: sb * (sb + 1) // 2],
+                    np.asarray(g_small), rtol=1e-12, atol=1e-12)
+    # Every entry past the logical triangle involves a padded (all-zero)
+    # row, so the tail is identically zero — padding is exact.
+    assert np.all(np.asarray(g_pad)[sb * (sb + 1) // 2:] == 0.0)
 
 
 def _random_blocks(d, s, b, rng):

@@ -40,7 +40,7 @@
 //! [`CostMeter::buf_allocs`] measures pool misses and the hot-path
 //! micro-bench asserts it stays flat in steady state.
 //!
-//! # Non-blocking allreduce
+//! # Non-blocking collectives and operation tags
 //!
 //! [`Communicator::iallreduce_start`] posts the protocol's first round and
 //! returns a [`ReduceHandle`]; [`Communicator::iallreduce_wait`] completes
@@ -50,6 +50,20 @@
 //! computation (`SolverOpts::overlap`). The non-blocking path executes the
 //! *same* algorithm in the *same* element order as the blocking path, so
 //! results are **bitwise identical** (asserted by property test).
+//!
+//! [`Communicator::iall_to_all_start`] / [`Communicator::iall_to_all_wait`]
+//! are the personalized-exchange twin (receive-side length contracts
+//! included): the start posts every send, the wait drains the receives —
+//! `bcd_row` uses the pair to hide its Lemma-3 load metering behind the
+//! in-flight Theorem-4 redistribution.
+//!
+//! Every collective *operation* carries a **tag** (a per-endpoint sequence
+//! number, MPI-communicator-context style): point-to-point messages are
+//! matched on `(source, tag)`, so a collective that runs *between* a
+//! non-blocking start and its wait — e.g. an allreduce overlapping an
+//! in-flight all-to-all — cannot steal the in-flight operation's
+//! messages. SPMD determinism makes the tags line up across ranks: every
+//! rank starts its collectives in the same order.
 //!
 //! # Failure semantics
 //!
@@ -87,15 +101,17 @@ pub(crate) enum HandleState {
     /// Nothing left in flight (serial communicator or P = 1).
     Done,
     /// Thread protocol chosen at start time; `first_sent` records whether
-    /// the round-0 send was already posted by `iallreduce_start`.
-    Thread { algo: Algo, first_sent: bool },
+    /// the round-0 send was already posted by `iallreduce_start`, `tag`
+    /// is the operation tag all of this collective's messages carry.
+    Thread { algo: Algo, first_sent: bool, tag: u64 },
 }
 
 /// Handle to an in-flight non-blocking allreduce. Owns the payload buffer
 /// until [`Communicator::iallreduce_wait`] returns it, reduced.
 ///
-/// A handle must be waited on by the same communicator that started it,
-/// before that communicator enters any other collective.
+/// A handle must be waited on by the same communicator that started it.
+/// Other collectives may run between start and wait — operation tags keep
+/// their message streams apart.
 #[derive(Debug)]
 pub struct ReduceHandle {
     pub(crate) buf: Vec<f64>,
@@ -111,6 +127,29 @@ impl ReduceHandle {
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
+}
+
+/// Protocol state carried by an in-flight [`AllToAllHandle`].
+#[derive(Debug)]
+pub(crate) enum A2aState {
+    /// Exchange already complete (serial communicator, P = 1, or a
+    /// default-implementation eager exchange).
+    Ready(Vec<Vec<f64>>),
+    /// Thread protocol: sends posted under `tag`; the wait drains one
+    /// payload per peer against the `recv_lens` length contracts.
+    Thread {
+        tag: u64,
+        recv_lens: Vec<usize>,
+        out: Vec<Vec<f64>>,
+    },
+}
+
+/// Handle to an in-flight non-blocking personalized all-to-all
+/// ([`Communicator::iall_to_all_start`]). Sends are posted at start; the
+/// received payloads are collected by [`Communicator::iall_to_all_wait`].
+#[derive(Debug)]
+pub struct AllToAllHandle {
+    pub(crate) state: A2aState,
 }
 
 /// Rank-local handle to a P-rank communicator.
@@ -175,6 +214,38 @@ pub trait Communicator: Send {
             }
         }
         Ok(out)
+    }
+
+    /// Begin a non-blocking personalized all-to-all with receive-side
+    /// length contracts (the non-blocking twin of
+    /// [`Communicator::all_to_all_expect`]): every send is posted before
+    /// returning, so independent local work — or other tagged collectives
+    /// — can run before [`Communicator::iall_to_all_wait`] drains the
+    /// receives. Bitwise identical to the blocking path (same payloads,
+    /// same per-source ordering). The default implementation exchanges
+    /// eagerly, which is correct for single-process communicators.
+    fn iall_to_all_start(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<AllToAllHandle> {
+        let out = self.all_to_all_expect(send, recv_lens)?;
+        Ok(AllToAllHandle {
+            state: A2aState::Ready(out),
+        })
+    }
+
+    /// Complete a non-blocking all-to-all and return the per-source
+    /// payloads (`out[q]` = the vector received from rank q).
+    fn iall_to_all_wait(&mut self, handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
+        match handle.state {
+            A2aState::Ready(out) => Ok(out),
+            A2aState::Thread { .. } => Err(crate::error::Error::Comm(
+                "iall_to_all_wait: thread-protocol handle waited on a \
+                 communicator without a thread protocol"
+                    .into(),
+            )),
+        }
     }
 
     /// Synchronize all ranks.
@@ -268,6 +339,18 @@ mod tests {
         assert_eq!(c.meter().allreduces, 1);
         let out = c.all_to_all(vec![vec![5.0]]).unwrap();
         assert_eq!(out, vec![vec![5.0]]);
+    }
+
+    #[test]
+    fn serial_nonblocking_all_to_all_roundtrips() {
+        let mut c = SerialComm::new();
+        let h = c
+            .iall_to_all_start(vec![vec![1.0, 2.0]], &[2usize])
+            .unwrap();
+        let out = c.iall_to_all_wait(h).unwrap();
+        assert_eq!(out, vec![vec![1.0, 2.0]]);
+        // Length-contract violation surfaces through the default impl too.
+        assert!(c.iall_to_all_start(vec![vec![1.0]], &[3usize]).is_err());
     }
 
     #[test]

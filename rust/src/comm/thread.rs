@@ -8,7 +8,9 @@
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-use crate::comm::{Algo, Communicator, CostMeter, HandleState, ReduceHandle};
+use crate::comm::{
+    A2aState, Algo, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle,
+};
 use crate::error::{Error, Result};
 
 /// Payload size (f64 words) at which allreduce switches from recursive
@@ -21,9 +23,12 @@ pub const RABENSEIFNER_MIN_WORDS: usize = 256;
 /// memory when collectives of many distinct sizes interleave).
 const POOL_MAX: usize = 64;
 
-/// Wire format of one point-to-point message.
+/// Wire format of one point-to-point message. Data packets carry the
+/// **operation tag** of the collective that sent them: receives match on
+/// `(source, tag)`, so collectives running between a non-blocking start
+/// and its wait cannot steal the in-flight operation's messages.
 enum Packet {
-    Data(Vec<f64>),
+    Data(u64, Vec<f64>),
     /// Group poisoning: a peer detected a protocol violation. Carried to
     /// every rank so nobody blocks forever in `recv`.
     Poison(String),
@@ -36,13 +41,21 @@ pub struct ThreadComm {
     /// `send_to[p]` delivers into rank p's `inbox`, tagged with our rank.
     send_to: Vec<Sender<(usize, Packet)>>,
     inbox: Receiver<(usize, Packet)>,
-    /// Out-of-order stash: data that arrived from rank `s` while we were
-    /// waiting on a different source (per-source FIFO order is preserved).
-    pending: Vec<VecDeque<Vec<f64>>>,
+    /// Out-of-order stash: `(tag, data)` that arrived from rank `s` while
+    /// we were waiting on a different source or operation (per-source,
+    /// per-tag FIFO order is preserved — within one operation every
+    /// message has a distinct round, and rounds are matched in order).
+    pending: Vec<VecDeque<(u64, Vec<f64>)>>,
     /// Recycled message buffers (the zero-allocation hot path).
     pool: Vec<Vec<f64>>,
     /// Sticky failure state: once poisoned, every collective errors.
     poisoned: Option<String>,
+    /// Monotone per-endpoint collective counter — SPMD determinism means
+    /// operation k on one rank is operation k on every rank, which is
+    /// what makes the tag a valid cross-rank match key.
+    op_seq: u64,
+    /// Tag of the operation currently sending/receiving on this endpoint.
+    cur_tag: u64,
     meter: CostMeter,
 }
 
@@ -92,6 +105,8 @@ impl ThreadComm {
                 pending: (0..p).map(|_| VecDeque::new()).collect(),
                 pool: Vec::new(),
                 poisoned: None,
+                op_seq: 0,
+                cur_tag: 0,
                 meter: CostMeter::default(),
             })
             .collect()
@@ -131,6 +146,15 @@ impl ThreadComm {
 
     // ---- point-to-point -------------------------------------------------
 
+    /// Enter a new collective operation: bump the sequence counter and
+    /// make its tag current for every send/receive until the next entry
+    /// (non-blocking waits restore their handle's tag instead).
+    fn begin_op(&mut self) -> u64 {
+        self.op_seq += 1;
+        self.cur_tag = self.op_seq;
+        self.op_seq
+    }
+
     /// Copy `data` into a pooled buffer and send it (slice-based send: the
     /// caller's buffer is never cloned onto the heap after warmup).
     fn send_slice(&mut self, dst: usize, data: &[f64]) -> Result<()> {
@@ -141,7 +165,8 @@ impl ThreadComm {
 
     fn send_owned(&mut self, dst: usize, buf: Vec<f64>) -> Result<()> {
         self.meter.record_send(buf.len());
-        if self.send_to[dst].send((self.rank, Packet::Data(buf))).is_err() {
+        let pkt = Packet::Data(self.cur_tag, buf);
+        if self.send_to[dst].send((self.rank, pkt)).is_err() {
             // The peer dropped its endpoint — almost always because it
             // errored out of the protocol, and its poison broadcast
             // happens-before the drop, so it is already in our inbox:
@@ -191,7 +216,7 @@ impl ThreadComm {
         if self.poisoned.is_none() {
             while let Ok((from, pkt)) = self.inbox.try_recv() {
                 match pkt {
-                    Packet::Data(v) => self.pending[from].push_back(v),
+                    Packet::Data(tag, v) => self.pending[from].push_back((tag, v)),
                     Packet::Poison(m) => {
                         self.poisoned = Some(m);
                         break;
@@ -205,25 +230,28 @@ impl ThreadComm {
         }
     }
 
-    /// Blocking receive from a specific source. Messages from other sources
-    /// are stashed in per-source FIFO order; a poison packet from *any*
-    /// source aborts the wait.
+    /// Blocking receive from a specific source **for the current
+    /// operation tag**. Messages from other sources or other operations
+    /// are stashed (per-source FIFO, matched in tag order within an
+    /// operation); a poison packet from *any* source aborts the wait.
     fn recv(&mut self, src: usize) -> Result<Vec<f64>> {
         if let Some(m) = &self.poisoned {
             return Err(Self::poisoned_err(m));
         }
-        if let Some(v) = self.pending[src].pop_front() {
+        let tag = self.cur_tag;
+        if let Some(pos) = self.pending[src].iter().position(|(t, _)| *t == tag) {
+            let (_, v) = self.pending[src].remove(pos).expect("position just found");
             self.meter.record_recv(v.len());
             return Ok(v);
         }
         loop {
             match self.inbox.recv() {
-                Ok((from, Packet::Data(v))) => {
-                    if from == src {
+                Ok((from, Packet::Data(t, v))) => {
+                    if from == src && t == tag {
                         self.meter.record_recv(v.len());
                         return Ok(v);
                     }
-                    self.pending[from].push_back(v);
+                    self.pending[from].push_back((t, v));
                 }
                 Ok((_from, Packet::Poison(m))) => {
                     let err = Self::poisoned_err(&m);
@@ -434,6 +462,7 @@ impl ThreadComm {
         recv_lens: Option<&[usize]>,
     ) -> Result<Vec<Vec<f64>>> {
         self.meter.all_to_alls += 1;
+        self.begin_op();
         let p = self.size;
         if send.len() != p {
             return Err(self.poison(format!(
@@ -488,6 +517,7 @@ impl ThreadComm {
     /// the property tests; not used by any solver.
     pub fn allreduce_sum_reference(&mut self, buf: &mut [f64]) -> Result<()> {
         self.meter.allreduces += 1;
+        self.begin_op();
         let p = self.size;
         if p == 1 {
             return Ok(());
@@ -554,6 +584,7 @@ impl Communicator for ThreadComm {
 
     fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()> {
         self.meter.allreduces += 1;
+        self.begin_op();
         if self.size == 1 {
             return Ok(());
         }
@@ -566,6 +597,7 @@ impl Communicator for ThreadComm {
 
     fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
         self.meter.allreduces += 1;
+        let tag = self.begin_op();
         if self.size == 1 {
             return Ok(ReduceHandle {
                 buf,
@@ -577,7 +609,11 @@ impl Communicator for ThreadComm {
         let first_sent = self.post_first_send(&buf, algo)?;
         Ok(ReduceHandle {
             buf,
-            state: HandleState::Thread { algo, first_sent },
+            state: HandleState::Thread {
+                algo,
+                first_sent,
+                tag,
+            },
         })
     }
 
@@ -585,7 +621,14 @@ impl Communicator for ThreadComm {
         let ReduceHandle { mut buf, state } = handle;
         match state {
             HandleState::Done => Ok(buf),
-            HandleState::Thread { algo, first_sent } => {
+            HandleState::Thread {
+                algo,
+                first_sent,
+                tag,
+            } => {
+                // Resume under the operation tag assigned at start time —
+                // collectives that ran in between used their own tags.
+                self.cur_tag = tag;
                 match algo {
                     Algo::RecursiveDoubling => self.allreduce_rd(&mut buf, first_sent)?,
                     Algo::Rabenseifner => self.allreduce_rab(&mut buf, first_sent)?,
@@ -596,6 +639,7 @@ impl Communicator for ThreadComm {
     }
 
     fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
+        self.begin_op();
         if self.size == 1 {
             return Ok(());
         }
@@ -621,7 +665,85 @@ impl Communicator for ThreadComm {
         self.all_to_all_inner(send, Some(recv_lens))
     }
 
+    /// Non-blocking personalized exchange: post every send now, drain the
+    /// receives at [`Communicator::iall_to_all_wait`]. Validation and
+    /// poison semantics are identical to the blocking
+    /// [`Communicator::all_to_all_expect`]; payload bytes and per-source
+    /// ordering are unchanged, so results are bitwise identical.
+    fn iall_to_all_start(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<AllToAllHandle> {
+        self.meter.all_to_alls += 1;
+        let tag = self.begin_op();
+        let p = self.size;
+        if send.len() != p {
+            return Err(self.poison(format!(
+                "iall_to_all: rank {} supplied {} buffers for {p} ranks",
+                self.rank,
+                send.len()
+            )));
+        }
+        if recv_lens.len() != p {
+            return Err(self.poison(format!(
+                "iall_to_all: rank {} supplied {} receive lengths for {p} ranks",
+                self.rank,
+                recv_lens.len()
+            )));
+        }
+        if send[self.rank].len() != recv_lens[self.rank] {
+            return Err(self.poison(format!(
+                "iall_to_all: rank {} self-payload {} words != expected {}",
+                self.rank,
+                send[self.rank].len(),
+                recv_lens[self.rank]
+            )));
+        }
+        if p == 1 {
+            return Ok(AllToAllHandle {
+                state: A2aState::Ready(send),
+            });
+        }
+        self.check_poison()?;
+        let mut out: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
+        for (dst, bufv) in send.into_iter().enumerate() {
+            if dst == self.rank {
+                out[dst] = bufv;
+            } else {
+                self.send_owned(dst, bufv)?;
+            }
+        }
+        Ok(AllToAllHandle {
+            state: A2aState::Thread {
+                tag,
+                recv_lens: recv_lens.to_vec(),
+                out,
+            },
+        })
+    }
+
+    fn iall_to_all_wait(&mut self, handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
+        match handle.state {
+            A2aState::Ready(out) => Ok(out),
+            A2aState::Thread {
+                tag,
+                recv_lens,
+                mut out,
+            } => {
+                self.cur_tag = tag;
+                for src in 0..self.size {
+                    if src != self.rank {
+                        out[src] = self.recv_expect(src, recv_lens[src])?;
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
     fn barrier(&mut self) -> Result<()> {
+        self.begin_op();
         if self.size == 1 {
             return Ok(());
         }

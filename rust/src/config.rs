@@ -22,6 +22,8 @@
 //! record_every = 50
 //! track_gram_cond = false
 //! overlap = false         # non-blocking allreduce pipeline
+//! reg = l2                # l2 | l1 | elastic | none (prox subsystem)
+//! l1_ratio = 0.5          # elastic-net L1 fraction (reg = elastic only)
 //!
 //! [run]
 //! ranks = 4
@@ -32,6 +34,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
+use crate::prox::Reg;
 use crate::solvers::SolverOpts;
 use crate::util::ini::{self, Section};
 
@@ -67,6 +70,11 @@ pub struct SolverConfig {
     /// Overlap the Gram/residual reduction with next-iteration compute
     /// (non-blocking allreduce pipeline; bitwise-identical trajectory).
     pub overlap: bool,
+    /// Regularizer: `l2` (exact ridge path, default), `l1`, `elastic`,
+    /// or `none` — non-L2 routes bcd/bdcd through the CA-Prox solvers.
+    pub reg: String,
+    /// Elastic-net L1 fraction ∈ [0, 1] (`reg = elastic` only).
+    pub l1_ratio: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -119,6 +127,8 @@ impl ExperimentConfig {
                 track_gram_cond: sv.bool_or("track_gram_cond", false)?,
                 tol: sv.f64_opt("tol")?,
                 overlap: sv.bool_or("overlap", false)?,
+                reg: sv.str("reg").unwrap_or("l2").to_string(),
+                l1_ratio: sv.f64_opt("l1_ratio")?.unwrap_or(0.5),
             },
             run: RunConfig {
                 ranks: rn.usize_or("ranks", 1)?,
@@ -150,6 +160,13 @@ impl ExperimentConfig {
             "bcd" | "cabcd" | "bdcd" | "cabdcd" | "cg" => {}
             other => return Err(Error::Config(format!("unknown method {other:?}"))),
         }
+        let reg = self.regularizer()?;
+        reg.validate().map_err(|e| Error::Config(e.to_string()))?;
+        if self.solver.method == "cg" && !reg.is_exact_l2() {
+            return Err(Error::Config(
+                "method cg solves the smooth ridge system; reg must be l2".into(),
+            ));
+        }
         match self.run.backend.as_str() {
             "native" | "xla" => {}
             other => return Err(Error::Config(format!("unknown backend {other:?}"))),
@@ -163,6 +180,21 @@ impl ExperimentConfig {
     /// Effective λ: explicit override or the spec's 1000·σ_min rule.
     pub fn effective_lambda(&self, spec_lambda: f64) -> f64 {
         self.solver.lam.unwrap_or(spec_lambda)
+    }
+
+    /// Parse the `[solver] reg` / `l1_ratio` pair into a [`Reg`].
+    pub fn regularizer(&self) -> Result<Reg> {
+        match self.solver.reg.as_str() {
+            "l2" => Ok(Reg::L2),
+            "l1" => Ok(Reg::L1),
+            "none" => Ok(Reg::None),
+            "elastic" => Ok(Reg::Elastic {
+                l1_ratio: self.solver.l1_ratio,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown reg {other:?} (want l1|l2|elastic|none)"
+            ))),
+        }
     }
 
     pub fn solver_opts(&self, lam: f64) -> SolverOpts {
@@ -180,6 +212,13 @@ impl ExperimentConfig {
             track_gram_cond: self.solver.track_gram_cond,
             tol: self.solver.tol,
             overlap: self.solver.overlap,
+            // The parse constructors run `validate()` so this cannot fire
+            // there, but the fields are public — a hand-built config with
+            // a malformed reg string must fail loudly here rather than
+            // silently run the exact-L2 path.
+            reg: self
+                .regularizer()
+                .expect("invalid [solver] reg — call ExperimentConfig::validate() first"),
         }
     }
 }
@@ -221,6 +260,31 @@ mod tests {
         assert!(ExperimentConfig::from_str(on).unwrap().solver_opts(1.0).overlap);
         let off = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cabcd\n";
         assert!(!ExperimentConfig::from_str(off).unwrap().solver_opts(1.0).overlap);
+    }
+
+    #[test]
+    fn reg_parses_and_defaults_to_l2() {
+        let base = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cabcd\n";
+        assert_eq!(
+            ExperimentConfig::from_str(base).unwrap().solver_opts(1.0).reg,
+            Reg::L2
+        );
+        let l1 = format!("{base}reg = l1\n");
+        assert_eq!(
+            ExperimentConfig::from_str(&l1).unwrap().solver_opts(1.0).reg,
+            Reg::L1
+        );
+        let en = format!("{base}reg = elastic\nl1_ratio = 0.25\n");
+        assert_eq!(
+            ExperimentConfig::from_str(&en).unwrap().solver_opts(1.0).reg,
+            Reg::Elastic { l1_ratio: 0.25 }
+        );
+        let bad = format!("{base}reg = l3\n");
+        assert!(ExperimentConfig::from_str(&bad).is_err());
+        let bad_ratio = format!("{base}reg = elastic\nl1_ratio = 1.5\n");
+        assert!(ExperimentConfig::from_str(&bad_ratio).is_err());
+        let cg_l1 = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cg\nreg = l1\n";
+        assert!(ExperimentConfig::from_str(cg_l1).is_err());
     }
 
     #[test]

@@ -31,6 +31,9 @@ pub struct ExperimentReport {
     pub backend: String,
     /// Whether the non-blocking overlap pipeline was enabled.
     pub overlap: bool,
+    /// Regularizer name (`l2` runs the exact solvers; anything else runs
+    /// the CA-Prox loops and reports the prox certificates below).
+    pub reg: String,
     pub wall_ms: f64,
     /// Rank-0 trajectory.
     pub history: History,
@@ -85,10 +88,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
     let p = cfg.run.ranks;
     let opts = cfg.solver_opts(lam);
 
-    // Ground truth from serial CG (excluded from all meters).
-    let reference = {
+    // Ground truth from serial CG (excluded from all meters). The prox
+    // runs have no ridge ground truth — they report the duality-gap /
+    // subgradient certificates instead, so the CG solve is skipped.
+    let reference = if opts.reg.is_exact_l2() {
         let mut comm = SerialComm::new();
-        cg::compute_reference(&ds.x, &ds.y, n, lam, &mut comm)?
+        Some(cg::compute_reference(&ds.x, &ds.y, n, lam, &mut comm)?)
+    } else {
+        None
     };
 
     let start = Instant::now();
@@ -103,7 +110,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
                     &sh.y_loc,
                     sh.n_global,
                     &opts,
-                    Some(&reference),
+                    reference.as_ref(),
                     comm,
                     be.as_mut(),
                 )?;
@@ -122,7 +129,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
                     sh.d_global,
                     sh.d_offset,
                     &opts,
-                    Some(&reference),
+                    reference.as_ref(),
                     comm,
                     be.as_mut(),
                 )?;
@@ -145,7 +152,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
                     &sh.y_loc,
                     sh.n_global,
                     &cg_opts,
-                    Some(&reference),
+                    reference.as_ref(),
                     comm,
                 )?;
                 Ok(out.history)
@@ -168,6 +175,10 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
         lambda: lam,
         backend: cfg.run.backend.clone(),
         overlap: opts.overlap,
+        reg: {
+            use crate::prox::Regularizer;
+            opts.reg.name().to_string()
+        },
         wall_ms,
         final_obj_err: history.final_obj_err(),
         final_sol_err: history.final_sol_err(),
@@ -189,6 +200,15 @@ impl ExperimentReport {
             ])
         }));
         let conds = array(self.history.gram_conds.iter().map(|&c| num(c)));
+        let prox = array(self.history.prox.iter().map(|r| {
+            object(&[
+                ("iter", num(r.iter as f64)),
+                ("pen_obj", num(r.pen_obj)),
+                ("gap", num(r.gap)),
+                ("subgrad", num(r.subgrad)),
+                ("nnz", num(r.nnz as f64)),
+            ])
+        }));
         object(&[
             ("dataset", string(&self.dataset)),
             ("d", num(self.d as f64)),
@@ -200,6 +220,7 @@ impl ExperimentReport {
             ("lambda", num(self.lambda)),
             ("backend", string(&self.backend)),
             ("overlap", num(if self.overlap { 1.0 } else { 0.0 })),
+            ("reg", string(&self.reg)),
             ("wall_ms", num(self.wall_ms)),
             ("iters", num(self.history.iters as f64)),
             ("allreduces", num(self.history.meter.allreduces as f64)),
@@ -208,7 +229,19 @@ impl ExperimentReport {
             ("critical_words", num(self.critical_words as f64)),
             ("final_obj_err", num(self.final_obj_err)),
             ("final_sol_err", num(self.final_sol_err)),
+            ("final_pen_obj", num(self.history.final_pen_obj())),
+            ("final_gap", num(self.history.final_gap())),
+            ("final_subgrad", num(self.history.final_subgrad())),
+            (
+                "final_nnz",
+                num(self
+                    .history
+                    .final_nnz()
+                    .map(|v| v as f64)
+                    .unwrap_or(f64::NAN)),
+            ),
             ("records", records),
+            ("prox_records", prox),
             ("gram_conds", conds),
         ])
     }
@@ -250,6 +283,8 @@ mod tests {
                 track_gram_cond: false,
                 tol: None,
                 overlap: false,
+                reg: "l2".into(),
+                l1_ratio: 0.5,
             },
             run: RunConfig {
                 ranks,
@@ -305,6 +340,41 @@ mod tests {
     fn dual_experiment_runs() {
         let report = run_experiment(&cfg("cabdcd", 2)).unwrap();
         assert!(report.final_obj_err.is_finite());
+    }
+
+    #[test]
+    fn lasso_experiment_reports_prox_certificates() {
+        let mut c = cfg("cabcd", 2);
+        c.solver.reg = "l1".into();
+        c.solver.iters = 400;
+        let report = run_experiment(&c).unwrap();
+        assert_eq!(report.reg, "l1");
+        assert!(!report.history.prox.is_empty(), "no prox records");
+        assert!(report.history.final_pen_obj().is_finite());
+        assert!(report.history.final_gap().is_finite());
+        assert!(report.history.final_nnz().is_some());
+        // The prox path skips the ridge reference entirely.
+        assert!(report.history.records.is_empty());
+        let json = report.to_json();
+        assert!(json.contains("\"prox_records\""));
+        assert!(json.contains("\"reg\":\"l1\""));
+    }
+
+    #[test]
+    fn reg_l2_reports_match_default_path() {
+        // `reg = l2` must be indistinguishable from the pre-prox driver:
+        // the exact path runs (reference errors recorded, no prox
+        // certificates) with identical trajectories, meters, and
+        // critical-path counts.
+        let base = run_experiment(&cfg("cabcd", 2)).unwrap();
+        let mut c = cfg("cabcd", 2);
+        c.solver.reg = "l2".into();
+        let explicit = run_experiment(&c).unwrap();
+        assert!(explicit.history.prox.is_empty(), "l2 routed into the prox loop");
+        assert!(!explicit.history.records.is_empty(), "l2 lost the ridge reference path");
+        assert_eq!(base.final_sol_err, explicit.final_sol_err);
+        assert_eq!(base.history.meter, explicit.history.meter);
+        assert_eq!(base.critical_words, explicit.critical_words);
     }
 
     #[test]

@@ -104,6 +104,54 @@ pub trait ComputeBackend {
         inv_n: f64,
     ) -> Result<Vec<f64>>;
 
+    /// Prox-aware twin of [`ComputeBackend::ca_inner_solve`] (CA-Prox-BCD,
+    /// arXiv:1712.06047): same packed `[G|r]` inputs, but each deferred
+    /// step takes a Lipschitz-scaled gradient step and applies the
+    /// regularizer's separable prox elementwise. The default replicates
+    /// the native implementation — the solve is O(s²b²) coordinator-side
+    /// work on already-reduced data, so no AOT artifact is required (an
+    /// artifact-backed override is a future-work seam, mirroring
+    /// `inner_solve`).
+    #[allow(clippy::too_many_arguments)]
+    fn ca_prox_inner_solve(
+        &mut self,
+        s: usize,
+        b: usize,
+        g_raw: &[f64],
+        r_raw: &[f64],
+        w_blocks: &[f64],
+        overlap: &[f64],
+        lam: f64,
+        inv_n: f64,
+        reg: &crate::prox::Reg,
+    ) -> Result<Vec<f64>> {
+        crate::prox::solve::ca_prox_inner_solve(
+            s, b, g_raw, r_raw, w_blocks, overlap, lam, inv_n, reg,
+        )
+    }
+
+    /// Prox-aware twin of [`ComputeBackend::ca_dual_inner_solve`]
+    /// (CA-Prox-BDCD): proximal-gradient steps on the dual objective with
+    /// a separable regularizer on the dual vector.
+    #[allow(clippy::too_many_arguments)]
+    fn ca_prox_dual_inner_solve(
+        &mut self,
+        s: usize,
+        b: usize,
+        g_raw: &[f64],
+        r_raw: &[f64],
+        a_blocks: &[f64],
+        y_blocks: &[f64],
+        overlap: &[f64],
+        lam: f64,
+        inv_n: f64,
+        reg: &crate::prox::Reg,
+    ) -> Result<Vec<f64>> {
+        crate::prox::solve::ca_prox_dual_inner_solve(
+            s, b, g_raw, r_raw, a_blocks, y_blocks, overlap, lam, inv_n, reg,
+        )
+    }
+
     /// Deferred local vector update `acc += A_loc[idx,:]ᵀ · d`.
     fn alpha_update(
         &mut self,

@@ -16,6 +16,10 @@
 //! * [`gram`] — the compute hot-spot (fused partial Gram + residual) with
 //!   two interchangeable backends: a hand-optimized native path and the
 //!   AOT-compiled JAX/Pallas artifact executed through [`runtime`] (PJRT).
+//! * [`prox`] — the proximal regularization subsystem (L1 / elastic-net /
+//!   none): separable prox operators, subgradient residuals, a
+//!   primal/dual objective-gap certificate, and the CA-Prox-BCD/BDCD
+//!   loops that reuse the packed `[G|r]` collective path verbatim.
 //! * [`costmodel`] — the paper's analytic T = γF + αL + βW machine model
 //!   (Theorems 1–9, Figures 8–9).
 //! * [`matrix`], [`linalg`], [`partition`], [`sampling`] — the substrates:
@@ -36,6 +40,7 @@ pub mod linalg;
 pub mod matrix;
 pub mod metrics;
 pub mod partition;
+pub mod prox;
 pub mod runtime;
 pub mod sampling;
 pub mod solvers;

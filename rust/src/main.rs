@@ -111,6 +111,7 @@ USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
               [--scale K] [--method bcd|cabcd|bdcd|cabdcd|cg] [--b B] [--s S]
               [--iters H] [--lam L] [--ranks P] [--backend native|xla]
               [--artifact-dir DIR] [--seed N] [--overlap] [--json]
+              [--reg l2|l1|elastic|none] [--l1-ratio R]
   gen-data    --out FILE [--name abalone] [--scale K] [--seed N] [--verify]
   cost-table  [--d D] [--n N] [--p P] [--b B] [--s S] [--h H]
   scaling     [--mode strong|weak] [--machine mpi|spark] [--d D] [--log2n E]
@@ -172,6 +173,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 track_gram_cond: args.flag("track-gram-cond"),
                 tol: args.f64_opt("tol")?,
                 overlap: args.flag("overlap"),
+                reg: args.str_or("reg", "l2"),
+                l1_ratio: args.f64_or("l1-ratio", 0.5)?,
             },
             run: RunConfig {
                 ranks: args.usize_or("ranks", 1)?,
@@ -199,10 +202,22 @@ fn cmd_train(args: &Args) -> Result<()> {
             "λ={:.3e}  iters={}  wall={:.1} ms",
             report.lambda, report.history.iters, report.wall_ms
         );
-        println!(
-            "final |objective error|={:.3e}  solution error={:.3e}",
-            report.final_obj_err, report.final_sol_err
-        );
+        if report.history.prox.is_empty() {
+            println!(
+                "final |objective error|={:.3e}  solution error={:.3e}",
+                report.final_obj_err, report.final_sol_err
+            );
+        } else {
+            println!(
+                "reg={}  penalized objective={:.6e}  duality gap={:.3e}  \
+                 subgrad residual={:.3e}  nnz(w)={}",
+                report.reg,
+                report.history.final_pen_obj(),
+                report.history.final_gap(),
+                report.history.final_subgrad(),
+                report.history.final_nnz().unwrap_or(0)
+            );
+        }
         println!(
             "comm: allreduces={}  critical-path msgs={}  words={}",
             report.history.meter.allreduces, report.critical_msgs, report.critical_words

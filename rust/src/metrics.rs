@@ -29,6 +29,28 @@ pub struct IterRecord {
     pub sol_err: f64,
 }
 
+/// One recorded point of a proximal (non-smooth) solver trajectory — the
+/// certificates the CA-Prox solvers report instead of reference-relative
+/// errors (no closed-form `w_opt` exists for L1/elastic-net problems).
+#[derive(Clone, Copy, Debug)]
+pub struct ProxRecord {
+    /// Inner-iteration index h (outer boundaries, like [`IterRecord`]).
+    pub iter: usize,
+    /// Penalized objective `P(w) = ‖Xᵀw − y‖²/(2n) + ψ(w)` (primal
+    /// solvers) or `D(α) + ψ(α)` (dual solvers).
+    pub pen_obj: f64,
+    /// Fenchel duality gap from the scaled-residual dual candidate
+    /// (primal L1/L2/elastic; `NaN` where no conjugate certificate
+    /// applies — `Reg::None` and the dual solvers).
+    pub gap: f64,
+    /// ℓ2 norm of the minimum-norm subgradient of the penalized objective
+    /// at the iterate (zero iff optimal).
+    pub subgrad: f64,
+    /// Exact zeros in the iterate (soft thresholding produces true
+    /// zeros) — the sparsity certificate.
+    pub nnz: usize,
+}
+
 /// Statistics of the per-outer-iteration Gram condition numbers
 /// (Figures 4i–l / 7i–l report min / median / max over iterations).
 #[derive(Clone, Copy, Debug, Default)]
@@ -59,6 +81,10 @@ impl CondStats {
 #[derive(Clone, Debug, Default)]
 pub struct History {
     pub records: Vec<IterRecord>,
+    /// Prox-solver certificates (penalized objective, duality gap,
+    /// subgradient residual, nnz) — populated instead of `records` by the
+    /// CA-Prox solvers ([`crate::prox`]).
+    pub prox: Vec<ProxRecord>,
     /// Gram condition number per outer iteration (if tracked).
     pub gram_conds: Vec<f64>,
     /// This rank's communication meter (solver traffic only — metric
@@ -96,6 +122,26 @@ impl History {
     /// Final solution error.
     pub fn final_sol_err(&self) -> f64 {
         self.records.last().map(|r| r.sol_err).unwrap_or(f64::NAN)
+    }
+
+    /// Final duality gap of a prox run (NaN if none recorded).
+    pub fn final_gap(&self) -> f64 {
+        self.prox.last().map(|r| r.gap).unwrap_or(f64::NAN)
+    }
+
+    /// Final penalized objective of a prox run (NaN if none recorded).
+    pub fn final_pen_obj(&self) -> f64 {
+        self.prox.last().map(|r| r.pen_obj).unwrap_or(f64::NAN)
+    }
+
+    /// Final subgradient residual of a prox run (NaN if none recorded).
+    pub fn final_subgrad(&self) -> f64 {
+        self.prox.last().map(|r| r.subgrad).unwrap_or(f64::NAN)
+    }
+
+    /// Final iterate sparsity of a prox run (None if none recorded).
+    pub fn final_nnz(&self) -> Option<usize> {
+        self.prox.last().map(|r| r.nnz)
     }
 }
 

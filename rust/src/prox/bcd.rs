@@ -1,0 +1,327 @@
+//! CA-Prox-BCD — proximal primal block coordinate descent with the s-step
+//! communication-avoiding unrolling.
+//!
+//! SPMD layout, sampling, Gram engine and the **one packed `[G|r]`
+//! allreduce per outer iteration** are identical to
+//! [`crate::solvers::bcd`] (this loop is entered from `bcd::run` whenever
+//! [`SolverOpts::reg`] is not the exact-L2 path); only the replicated
+//! inner solve differs — [`crate::prox::solve::ca_prox_inner_solve`]
+//! applies the regularizer's separable prox elementwise after
+//! reconstructing each deferred step's gradient from the packed triangle.
+//!
+//! With [`SolverOpts::overlap`] the reduction runs through the
+//! non-blocking allreduce while the overlap tensor and the `w` block
+//! gather (both independent of the reduced values) are computed — same
+//! payload, same reduction algorithm, bitwise-identical trajectory, still
+//! exactly H/s collectives. NOTE: unlike the smooth `bcd::run_overlapped`,
+//! this loop does **not** yet prefetch the next iteration's Gram under
+//! the in-flight reduction, so the dominant flop cost is not hidden —
+//! the Gram-prefetch pipeline for the prox loops is an open ROADMAP
+//! item, not an implied property of `--overlap` here.
+//!
+//! Convergence metrics are the prox certificates ([`ProxRecord`]): the
+//! penalized objective `P(w) = ‖y − Xᵀw‖²/(2n) + ψ(w)`, the Fenchel
+//! duality gap from the scaled-residual dual candidate (the CoCoA-style
+//! primal/dual certificate), the min-norm subgradient residual, and
+//! nnz(w). One meter-excluded `(d+2)`-word allreduce per record.
+
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::gram::ComputeBackend;
+use crate::linalg::packed::packed_len;
+use crate::matrix::Matrix;
+use crate::metrics::{History, ProxRecord};
+use crate::prox::{Reg, Regularizer};
+use crate::sampling::{overlap_tensor_into, BlockSampler};
+use crate::solvers::common::{
+    cond_stride, flatten_blocks, metered_out, packed_gram_cond, should_record, PrimalOutput,
+    SolverOpts,
+};
+
+/// Run CA-Prox-BCD on this rank's 1D-block-column shard (see
+/// [`crate::solvers::bcd::run`] for the shard layout contract).
+pub fn run<C: Communicator>(
+    a_loc: &Matrix,
+    y_loc: &[f64],
+    n_global: usize,
+    opts: &SolverOpts,
+    comm: &mut C,
+    backend: &mut dyn ComputeBackend,
+) -> Result<PrimalOutput> {
+    let d = a_loc.rows();
+    let n_loc = a_loc.cols();
+    opts.validate(d)?;
+    let (s, b) = (opts.s, opts.b);
+    let sb = s * b;
+    let gl = packed_len(sb);
+    let inv_n = 1.0 / n_global as f64;
+    let lam = opts.lam;
+    let reg = opts.reg;
+
+    let mut w = vec![0.0; d];
+    let mut alpha_loc = vec![0.0; n_loc];
+    let mut history = History::default();
+
+    // Hot-path scratch hoisted out of the loop (no per-iteration heap
+    // traffic beyond the pooled collective buffers).
+    let mut buf = vec![0.0; gl + sb]; // packed [G | r] allreduce payload
+    let mut z = vec![0.0; n_loc];
+    let mut w_blocks = vec![0.0; sb];
+    let mut gram_scaled = vec![0.0; sb * sb];
+    let mut idx_flat = vec![0usize; sb];
+    let mut overlap = vec![0.0; s * s * b * b];
+
+    let mut sampler = BlockSampler::new(d, opts.seed);
+
+    record(
+        &mut history,
+        0,
+        &w,
+        &alpha_loc,
+        y_loc,
+        a_loc,
+        n_global,
+        lam,
+        &reg,
+        comm,
+    )?;
+
+    let outer = opts.outer_iters();
+    let stride = cond_stride(sb, outer);
+    'outer_loop: for k in 0..outer {
+        let blocks = sampler.draw_blocks(s, b);
+        flatten_blocks(&blocks, b, &mut idx_flat);
+
+        // z = y − α (local slice), then the raw partial [G | r].
+        for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
+            *zi = yi - ai;
+        }
+        {
+            let (g_buf, r_buf) = buf.split_at_mut(gl);
+            backend.gram_resid(a_loc, &idx_flat, &z, g_buf, r_buf)?;
+        }
+
+        // THE communication of this outer iteration — with overlap, the
+        // tensor assembly and w gather hide behind the in-flight
+        // reduction (they depend only on the shared-seed sample stream).
+        if opts.overlap {
+            let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
+            overlap_tensor_into(&blocks, &mut overlap);
+            gather_w_blocks(&blocks, b, &w, &mut w_blocks);
+            buf = comm.iallreduce_wait(handle)?;
+        } else {
+            comm.allreduce_sum(&mut buf)?;
+            overlap_tensor_into(&blocks, &mut overlap);
+            gather_w_blocks(&blocks, b, &w, &mut w_blocks);
+        }
+
+        if opts.track_gram_cond && k % stride == 0 {
+            // Condition of the smooth block system (1/n)·G + μ₂I
+            // (μ₂ = the regularizer's quadratic weight; pure-L1 runs
+            // report the raw data-term conditioning).
+            let (_, mu2) = reg.weights(lam);
+            history
+                .gram_conds
+                .push(packed_gram_cond(&buf, sb, inv_n, mu2, &mut gram_scaled));
+        }
+
+        // Replicated prox inner solve + deferred updates.
+        let (g_buf, r_buf) = buf.split_at(gl);
+        let deltas = backend
+            .ca_prox_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n, &reg)?;
+        for (j, blk) in blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                w[row] += deltas[j * b + i];
+            }
+        }
+        backend.alpha_update(a_loc, &idx_flat, &deltas, &mut alpha_loc)?;
+
+        let h_now = (k + 1) * s;
+        history.iters = h_now;
+        if should_record(h_now, s, opts) || k + 1 == outer {
+            record(
+                &mut history,
+                h_now,
+                &w,
+                &alpha_loc,
+                y_loc,
+                a_loc,
+                n_global,
+                lam,
+                &reg,
+                comm,
+            )?;
+            if let Some(tol) = opts.tol {
+                if converged(&history, tol) {
+                    break 'outer_loop;
+                }
+            }
+        }
+    }
+
+    history.meter = *comm.meter();
+    Ok(PrimalOutput {
+        w,
+        alpha_loc,
+        history,
+    })
+}
+
+fn gather_w_blocks(blocks: &[Vec<usize>], b: usize, w: &[f64], w_blocks: &mut [f64]) {
+    for (j, blk) in blocks.iter().enumerate() {
+        for (i, &row) in blk.iter().enumerate() {
+            w_blocks[j * b + i] = w[row];
+        }
+    }
+}
+
+/// Stop once the certificate reaches `tol`: the duality gap when the
+/// regularizer has one, the subgradient residual otherwise (`Reg::None`).
+fn converged(history: &History, tol: f64) -> bool {
+    match history.prox.last() {
+        Some(r) if r.gap.is_finite() => r.gap <= tol,
+        Some(r) => r.subgrad <= tol,
+        None => false,
+    }
+}
+
+/// Meter-excluded prox certificate: one `(d+2)`-word allreduce gathers
+/// `[X·z | ‖z‖² | yᵀz]` (z = y − α distributed over ranks, w replicated),
+/// from which the penalized objective, the Fenchel gap, the min-norm
+/// subgradient residual, and nnz(w) all follow rank-locally.
+#[allow(clippy::too_many_arguments)]
+fn record<C: Communicator>(
+    history: &mut History,
+    iter: usize,
+    w: &[f64],
+    alpha_loc: &[f64],
+    y_loc: &[f64],
+    a_loc: &Matrix,
+    n_global: usize,
+    lam: f64,
+    reg: &Reg,
+    comm: &mut C,
+) -> Result<()> {
+    let d = w.len();
+    let payload = metered_out(comm, |c| {
+        let mut payload = vec![0.0; d + 2];
+        let z: Vec<f64> = y_loc
+            .iter()
+            .zip(alpha_loc)
+            .map(|(y, a)| y - a)
+            .collect();
+        a_loc.matvec(&z, &mut payload[..d])?;
+        payload[d] = z.iter().map(|v| v * v).sum();
+        payload[d + 1] = y_loc.iter().zip(&z).map(|(a, b)| a * b).sum();
+        c.allreduce_sum(&mut payload)?;
+        Ok(payload)
+    })?;
+    let (resid_sq, y_dot_z) = (payload[d], payload[d + 1]);
+    let n = n_global as f64;
+    // σ = Xz/n; the smooth data-term gradient is −σ.
+    let sigma: Vec<f64> = payload[..d].iter().map(|v| v / n).collect();
+    let smooth_grad: Vec<f64> = sigma.iter().map(|v| -v).collect();
+    let pen_obj = resid_sq / (2.0 * n) + reg.penalty(w, lam);
+    let gap = reg.duality_gap(w, &sigma, resid_sq, y_dot_z, n_global, lam);
+    let subgrad = reg.subgrad_residual(&smooth_grad, w, lam);
+    history.prox.push(ProxRecord {
+        iter,
+        pen_obj,
+        gap,
+        subgrad,
+        nnz: Reg::nnz(w),
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SerialComm;
+    use crate::gram::NativeBackend;
+    use crate::matrix::DenseMatrix;
+
+    fn toy(d: usize, n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut st = seed | 1;
+        let data: Vec<f64> = (0..d * n)
+            .map(|_| {
+                st ^= st << 13;
+                st ^= st >> 7;
+                st ^= st << 17;
+                (st as f64 / u64::MAX as f64) - 0.5
+            })
+            .collect();
+        let x = Matrix::Dense(DenseMatrix::from_vec(d, n, data));
+        let mut y = vec![0.0; n];
+        // Sparse ground truth: only 2 active features.
+        let mut w_star = vec![0.0; d];
+        w_star[0] = 1.5;
+        w_star[d / 2] = -2.0;
+        x.matvec_t(&w_star, &mut y).unwrap();
+        (x, y)
+    }
+
+    #[test]
+    fn lasso_reaches_tiny_duality_gap() {
+        let (x, y) = toy(8, 60, 5);
+        let opts = SolverOpts {
+            b: 1,
+            s: 2,
+            lam: 0.1,
+            iters: 6000,
+            seed: 3,
+            record_every: 200,
+            tol: Some(1e-10),
+            reg: Reg::L1,
+            ..Default::default()
+        };
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let out = run(&x, &y, 60, &opts, &mut comm, &mut be).unwrap();
+        let last = out.history.prox.last().unwrap();
+        assert!(last.gap <= 1e-10, "gap {}", last.gap);
+        assert!(last.nnz < 8, "no sparsity: nnz {}", last.nnz);
+    }
+
+    #[test]
+    fn prox_overlap_is_bitwise_identical_serial() {
+        let (x, y) = toy(10, 40, 9);
+        let mut opts = SolverOpts {
+            b: 2,
+            s: 3,
+            lam: 0.05,
+            iters: 60,
+            seed: 4,
+            record_every: 0,
+            reg: Reg::Elastic { l1_ratio: 0.7 },
+            ..Default::default()
+        };
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let w1 = run(&x, &y, 40, &opts, &mut comm, &mut be).unwrap().w;
+        opts.overlap = true;
+        let w2 = run(&x, &y, 40, &opts, &mut comm, &mut be).unwrap().w;
+        assert_eq!(w1, w2, "overlap changed the prox trajectory");
+    }
+
+    #[test]
+    fn prox_allreduce_count_is_h_over_s() {
+        let (x, y) = toy(10, 40, 2);
+        for s in [1usize, 4] {
+            let opts = SolverOpts {
+                b: 2,
+                s,
+                lam: 0.05,
+                iters: 40,
+                seed: 8,
+                record_every: 0,
+                reg: Reg::L1,
+                ..Default::default()
+            };
+            let mut comm = SerialComm::new();
+            let mut be = NativeBackend::new();
+            let out = run(&x, &y, 40, &opts, &mut comm, &mut be).unwrap();
+            assert_eq!(out.history.meter.allreduces as usize, 40 / s, "s={s}");
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! CA-Prox-BDCD — proximal dual block coordinate descent with the s-step
+//! communication-avoiding unrolling.
+//!
+//! Mirrors [`crate::solvers::bdcd`] exactly on layout, sampling, the Gram
+//! engine, and the one packed `[G|r]` allreduce per outer iteration; the
+//! inner solve is [`crate::prox::solve::ca_prox_dual_inner_solve`] —
+//! Lipschitz-scaled gradient steps on the dual objective
+//! `D(α) = (1/(2λn²))‖Xα‖² + (1/(2n))‖α‖² + (1/n)yᵀα + ψ(α)` with the
+//! regularizer's separable prox applied to the **dual** vector. This is
+//! the seam box-constraint workloads (SVM hinge) and sparse-dual losses
+//! plug into; `Reg::None` shares the classical BDCD fixed points (same
+//! ridge solution, first-order instead of Newton steps). Like
+//! [`crate::prox::bcd`], `overlap` hides only the tensor/gather work —
+//! the smooth solvers' Gram-prefetch pipeline is a ROADMAP follow-on.
+//!
+//! Records are [`ProxRecord`]s over the dual iterate: penalized dual
+//! objective, min-norm subgradient residual, and nnz(α). The Fenchel gap
+//! field is `NaN` here — the primal-side certificate lives in
+//! [`crate::prox::bcd`] (one record costs a meter-excluded `(n+1)`-word
+//! allreduce).
+
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::gram::ComputeBackend;
+use crate::linalg::packed::packed_len;
+use crate::matrix::Matrix;
+use crate::metrics::{History, ProxRecord};
+use crate::prox::{Reg, Regularizer};
+use crate::sampling::{overlap_tensor_into, BlockSampler};
+use crate::solvers::common::{
+    cond_stride, flatten_blocks, metered_out, packed_gram_cond, should_record, DualOutput,
+    SolverOpts,
+};
+
+/// Run CA-Prox-BDCD on this rank's shard (layout contract of
+/// [`crate::solvers::bdcd::run`]: `a_loc` is the `n × d_loc` feature
+/// slice of `A = Xᵀ`, `y` and α replicated, `w_loc` partitioned).
+pub fn run<C: Communicator>(
+    a_loc: &Matrix,
+    y: &[f64],
+    d_global: usize,
+    d_offset: usize,
+    opts: &SolverOpts,
+    comm: &mut C,
+    backend: &mut dyn ComputeBackend,
+) -> Result<DualOutput> {
+    let n = a_loc.rows();
+    let d_loc = a_loc.cols();
+    opts.validate(n)?;
+    let (s, b) = (opts.s, opts.b);
+    let sb = s * b;
+    let gl = packed_len(sb);
+    let inv_n = 1.0 / n as f64;
+    let lam = opts.lam;
+    let reg = opts.reg;
+
+    let mut alpha = vec![0.0; n];
+    let mut w_loc = vec![0.0; d_loc];
+    let mut history = History::default();
+
+    let mut buf = vec![0.0; gl + sb]; // packed [G | r] allreduce payload
+    let mut a_blocks = vec![0.0; sb];
+    let mut y_blocks = vec![0.0; sb];
+    let mut gram_scaled = vec![0.0; sb * sb];
+    let mut idx_flat = vec![0usize; sb];
+    let mut scaled_deltas = vec![0.0; sb];
+    let mut overlap = vec![0.0; s * s * b * b];
+
+    let mut sampler = BlockSampler::new(n, opts.seed);
+
+    record(&mut history, 0, &alpha, &w_loc, y, a_loc, lam, &reg, comm)?;
+
+    let outer = opts.outer_iters();
+    let stride = cond_stride(sb, outer);
+    'outer_loop: for k in 0..outer {
+        let blocks = sampler.draw_blocks(s, b);
+        flatten_blocks(&blocks, b, &mut idx_flat);
+
+        // Raw partial [G | r]: G = A[J,:]A[J,:]ᵀ, r = A[J,:]·w_loc.
+        {
+            let (g_buf, r_buf) = buf.split_at_mut(gl);
+            backend.gram_resid(a_loc, &idx_flat, &w_loc, g_buf, r_buf)?;
+        }
+
+        // THE communication of this outer iteration.
+        if opts.overlap {
+            let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
+            overlap_tensor_into(&blocks, &mut overlap);
+            gather_blocks(&blocks, b, &alpha, y, &mut a_blocks, &mut y_blocks);
+            buf = comm.iallreduce_wait(handle)?;
+        } else {
+            comm.allreduce_sum(&mut buf)?;
+            overlap_tensor_into(&blocks, &mut overlap);
+            gather_blocks(&blocks, b, &alpha, y, &mut a_blocks, &mut y_blocks);
+        }
+
+        if opts.track_gram_cond && k % stride == 0 {
+            // Θ-scale conditioning, same quantity as the smooth dual
+            // solver (Figs. 7i–l): (1/(λn²))·G + (1/n)I.
+            history.gram_conds.push(packed_gram_cond(
+                &buf,
+                sb,
+                inv_n * inv_n / lam,
+                inv_n,
+                &mut gram_scaled,
+            ));
+        }
+
+        // Replicated dual prox solve + deferred updates.
+        let (g_buf, r_buf) = buf.split_at(gl);
+        let deltas = backend.ca_prox_dual_inner_solve(
+            s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n, &reg,
+        )?;
+        for (j, blk) in blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                alpha[row] += deltas[j * b + i];
+            }
+        }
+        let scale = -1.0 / (lam * n as f64);
+        for (sd, &dv) in scaled_deltas.iter_mut().zip(&deltas) {
+            *sd = scale * dv;
+        }
+        backend.alpha_update(a_loc, &idx_flat, &scaled_deltas, &mut w_loc)?;
+
+        let h_now = (k + 1) * s;
+        history.iters = h_now;
+        if should_record(h_now, s, opts) || k + 1 == outer {
+            record(&mut history, h_now, &alpha, &w_loc, y, a_loc, lam, &reg, comm)?;
+            if let Some(tol) = opts.tol {
+                if history.prox.last().is_some_and(|r| r.subgrad <= tol) {
+                    break 'outer_loop;
+                }
+            }
+        }
+    }
+
+    history.meter = *comm.meter();
+    let w_full = metered_out(comm, |c| {
+        let mut full = vec![0.0; d_global];
+        full[d_offset..d_offset + w_loc.len()].copy_from_slice(&w_loc);
+        c.allreduce_sum(&mut full)?;
+        Ok(full)
+    })?;
+    Ok(DualOutput {
+        w_loc,
+        w_full,
+        alpha,
+        history,
+    })
+}
+
+fn gather_blocks(
+    blocks: &[Vec<usize>],
+    b: usize,
+    alpha: &[f64],
+    y: &[f64],
+    a_blocks: &mut [f64],
+    y_blocks: &mut [f64],
+) {
+    for (j, blk) in blocks.iter().enumerate() {
+        for (i, &row) in blk.iter().enumerate() {
+            a_blocks[j * b + i] = alpha[row];
+            y_blocks[j * b + i] = y[row];
+        }
+    }
+}
+
+/// Meter-excluded dual certificate: one `(n+1)`-word allreduce gathers
+/// `[A·w | ‖w_loc‖²]`, giving the smooth dual gradient
+/// `∇D(α) = (−Xᵀw + α + y)/n` and `‖Xα‖²/(2λn²) = (λ/2)‖w‖²` without a
+/// second pass over the data.
+#[allow(clippy::too_many_arguments)]
+fn record<C: Communicator>(
+    history: &mut History,
+    iter: usize,
+    alpha: &[f64],
+    w_loc: &[f64],
+    y: &[f64],
+    a_loc: &Matrix,
+    lam: f64,
+    reg: &Reg,
+    comm: &mut C,
+) -> Result<()> {
+    let n = a_loc.rows();
+    let payload = metered_out(comm, |c| {
+        let mut payload = vec![0.0; n + 1];
+        a_loc.matvec(w_loc, &mut payload[..n])?;
+        payload[n] = w_loc.iter().map(|v| v * v).sum();
+        c.allreduce_sum(&mut payload)?;
+        Ok(payload)
+    })?;
+    let w_norm_sq = payload[n];
+    let nf = n as f64;
+    let mut smooth = 0.5 * lam * w_norm_sq; // (1/(2λn²))‖Xα‖²
+    let mut grad = vec![0.0; n];
+    for i in 0..n {
+        smooth += alpha[i] * alpha[i] / (2.0 * nf) + y[i] * alpha[i] / nf;
+        grad[i] = (-payload[i] + alpha[i] + y[i]) / nf;
+    }
+    history.prox.push(ProxRecord {
+        iter,
+        pen_obj: smooth + reg.penalty(alpha, lam),
+        gap: f64::NAN,
+        subgrad: reg.subgrad_residual(&grad, alpha, lam),
+        nnz: Reg::nnz(alpha),
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SerialComm;
+    use crate::gram::NativeBackend;
+    use crate::matrix::DenseMatrix;
+    use crate::solvers::bdcd;
+
+    fn toy() -> (Matrix, Vec<f64>) {
+        let mut st = 321u64;
+        let data: Vec<f64> = (0..5 * 30)
+            .map(|_| {
+                st ^= st << 13;
+                st ^= st >> 7;
+                st ^= st << 17;
+                (st as f64 / u64::MAX as f64) - 0.5
+            })
+            .collect();
+        let x = Matrix::Dense(DenseMatrix::from_vec(5, 30, data));
+        let mut y = vec![0.0; 30];
+        x.matvec_t(&[0.5; 5], &mut y).unwrap();
+        (x, y)
+    }
+
+    /// Prox-BDCD with Reg::None shares the classical BDCD fixed point: it
+    /// must converge to the same ridge solution (first-order steps, so
+    /// compare solutions, not trajectories).
+    #[test]
+    fn none_reg_converges_to_bdcd_solution() {
+        let (x, y) = toy();
+        let a = x.transpose();
+        let lam = 0.2;
+        let exact = SolverOpts {
+            b: 4,
+            s: 1,
+            lam,
+            iters: 4000,
+            seed: 2,
+            record_every: 0,
+            ..Default::default()
+        };
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let w_exact = bdcd::run(&a, &y, 5, 0, &exact, None, &mut comm, &mut be)
+            .unwrap()
+            .w_full;
+        let prox_opts = SolverOpts {
+            iters: 40000,
+            reg: Reg::None,
+            ..exact
+        };
+        let out = run(&a, &y, 5, 0, &prox_opts, &mut comm, &mut be).unwrap();
+        for (p, q) in out.w_full.iter().zip(&w_exact) {
+            assert!((p - q).abs() < 1e-6, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn dual_prox_overlap_is_bitwise_identical_serial() {
+        let (x, y) = toy();
+        let a = x.transpose();
+        let mut opts = SolverOpts {
+            b: 3,
+            s: 4,
+            lam: 0.2,
+            iters: 40,
+            seed: 6,
+            record_every: 0,
+            reg: Reg::L1,
+            ..Default::default()
+        };
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let w1 = run(&a, &y, 5, 0, &opts, &mut comm, &mut be).unwrap().w_full;
+        opts.overlap = true;
+        let w2 = run(&a, &y, 5, 0, &opts, &mut comm, &mut be).unwrap().w_full;
+        assert_eq!(w1, w2, "overlap changed the dual prox trajectory");
+    }
+}

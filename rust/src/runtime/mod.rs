@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::gram::ComputeBackend;
-use crate::linalg::packed::{packed_len, pidx, tri_row};
+use crate::linalg::packed::{packed_len, pidx};
 use crate::matrix::Matrix;
 
 // Default offline build: compile against the fail-fast shim. A vendored
@@ -123,7 +123,7 @@ pub struct XlaRuntime {
     dir: PathBuf,
     client: xla::PjRtClient,
     manifest: Manifest,
-    /// (sb, nloc) → gram_resid executable.
+    /// (sb, nloc) → gram_resid_packed executable.
     gram: BTreeMap<(usize, usize), Loaded>,
     /// (sb, nloc) → alpha_update executable.
     alpha: BTreeMap<(usize, usize), Loaded>,
@@ -163,8 +163,19 @@ impl XlaRuntime {
             let exe = rt.compile(&meta.file)?;
             let loaded = Loaded { exe };
             match meta.kind.as_str() {
-                "gram_resid" => {
+                "gram_resid_packed" => {
                     rt.gram.insert((meta.sb, meta.nloc), loaded);
+                }
+                "gram_resid" => {
+                    // Pre-packed-artifact manifests are rejected loudly:
+                    // the runtime's accumulation path assumes the packed
+                    // triangle output layout.
+                    return Err(Error::Runtime(
+                        "artifact kind gram_resid is the obsolete full-matrix \
+                         layout; regenerate with `make artifacts` (aot.py now \
+                         emits gram_resid_packed)"
+                            .into(),
+                    ));
                 }
                 "alpha_update" => {
                     rt.alpha.insert((meta.sb, meta.nloc), loaded);
@@ -266,9 +277,12 @@ impl ComputeBackend for XlaBackend {
         let sb = idx.len();
         let n_loc = a.cols();
         let (sb_art, nloc_art) = self.rt.pick_gram(sb)?;
-        // Gather sampled rows densely once. The artifact returns the full
-        // sb_art × sb_art Gram tile; only its lower triangle is folded
-        // into the packed output `g` (the coordinator's wire format).
+        // Gather sampled rows densely once. The artifact emits G already
+        // as the packed lower triangle of its sb_art × sb_art tile; the
+        // packed row offsets are size-independent, so the logical
+        // triangle is exactly the first packed_len(sb) words of the
+        // artifact's — accumulation is one elementwise add, with no
+        // fold-to-packed copy anywhere.
         self.rows.resize(sb * n_loc, 0.0);
         a.gather_rows(idx, &mut self.rows)?;
         debug_assert_eq!(g.len(), packed_len(sb));
@@ -296,12 +310,12 @@ impl ComputeBackend for XlaBackend {
             let outs = run_tuple(exe, &[y_lit, z_lit])?;
             let gv = outs[0].to_vec::<f64>()?;
             let rv = outs[1].to_vec::<f64>()?;
-            for j in 0..sb {
-                let base = tri_row(j);
-                for t in 0..=j {
-                    g[base + t] += gv[j * sb_art + t];
-                }
-                r[j] += rv[j];
+            debug_assert_eq!(gv.len(), packed_len(sb_art));
+            for (dst, &src) in g.iter_mut().zip(&gv[..packed_len(sb)]) {
+                *dst += src;
+            }
+            for (dst, &src) in r.iter_mut().zip(&rv[..sb]) {
+                *dst += src;
             }
             lo = hi;
         }

@@ -29,15 +29,15 @@
 use crate::comm::Communicator;
 use crate::error::Result;
 use crate::gram::ComputeBackend;
-use crate::linalg::cond::condition_number;
-use crate::linalg::packed::{packed_len, pidx};
+use crate::linalg::packed::packed_len;
 use crate::matrix::Matrix;
 use crate::metrics::{
     relative_objective_error, relative_solution_error, History, IterRecord, Reference,
 };
 use crate::sampling::{overlap_tensor_into, BlockSampler};
 use crate::solvers::common::{
-    flatten_blocks, metered_out, objective_value, PrimalOutput, SolverOpts,
+    cond_stride, flatten_blocks, metered_out, objective_value, packed_gram_cond,
+    should_record, PrimalOutput, SolverOpts,
 };
 
 /// Run BCD / CA-BCD on this rank's shard.
@@ -56,6 +56,12 @@ pub fn run<C: Communicator>(
     comm: &mut C,
     backend: &mut dyn ComputeBackend,
 ) -> Result<PrimalOutput> {
+    if !opts.reg.is_exact_l2() {
+        // Non-smooth regularizer: the CA-Prox loop (same packed [G|r]
+        // payload and H/s collectives; prox certificates instead of the
+        // ridge reference errors — `reference` does not apply there).
+        return crate::prox::bcd::run(a_loc, y_loc, n_global, opts, comm, backend);
+    }
     if opts.overlap {
         return run_overlapped(a_loc, y_loc, n_global, opts, reference, comm, backend);
     }
@@ -96,11 +102,10 @@ pub fn run<C: Communicator>(
     )?;
 
     let outer = opts.outer_iters();
-    // Condition tracking is exact-per-iteration for small Gram matrices;
-    // for large sb (Figs. 4j-l / 7j-l regimes, sb up to 3200) it samples
-    // ~16 outer iterations — the reported min/median/max statistics are
-    // over those samples (estimator: power + inverse-power, linalg::cond).
-    let cond_stride = if sb <= 128 { 1 } else { outer.div_ceil(16).max(1) };
+    // Condition tracking samples ~16 outer iterations for large sb —
+    // the reported min/median/max statistics are over those samples
+    // (estimator: power + inverse-power, linalg::cond).
+    let stride = cond_stride(sb, outer);
     'outer_loop: for k in 0..outer {
         let blocks = sampler.draw_blocks(s, b);
         flatten_blocks(&blocks, b, &mut idx_flat);
@@ -117,17 +122,11 @@ pub fn run<C: Communicator>(
         // THE communication of this outer iteration.
         comm.allreduce_sum(&mut buf)?;
 
-        if opts.track_gram_cond && k % cond_stride == 0 {
-            // Condition number of G = (1/n)·YYᵀ + λI (paper Figs. 4i–l);
-            // the eigensolver wants the full matrix, mirrored off the
-            // packed triangle (diagnostic path only).
-            for i in 0..sb {
-                for j in 0..sb {
-                    gram_scaled[i * sb + j] =
-                        inv_n * buf[pidx(i, j)] + if i == j { lam } else { 0.0 };
-                }
-            }
-            history.gram_conds.push(condition_number(&gram_scaled, sb));
+        if opts.track_gram_cond && k % stride == 0 {
+            // Condition number of G = (1/n)·YYᵀ + λI (paper Figs. 4i–l).
+            history
+                .gram_conds
+                .push(packed_gram_cond(&buf, sb, inv_n, lam, &mut gram_scaled));
         }
 
         // Replicated inner solve (eq. 8).
@@ -230,7 +229,7 @@ fn run_overlapped<C: Communicator>(
     )?;
 
     let outer = opts.outer_iters();
-    let cond_stride = if sb <= 128 { 1 } else { outer.div_ceil(16).max(1) };
+    let stride = cond_stride(sb, outer);
 
     // Pipeline prologue: G_0 is computed before the loop; thereafter
     // G_{k+1} is computed under the in-flight reduction of [G_k | r_k].
@@ -272,14 +271,10 @@ fn run_overlapped<C: Communicator>(
         // ------------------------------------------------------------------
         let buf = comm.iallreduce_wait(handle)?;
 
-        if opts.track_gram_cond && k % cond_stride == 0 {
-            for i in 0..sb {
-                for j in 0..sb {
-                    gram_scaled[i * sb + j] =
-                        inv_n * buf[pidx(i, j)] + if i == j { lam } else { 0.0 };
-                }
-            }
-            history.gram_conds.push(condition_number(&gram_scaled, sb));
+        if opts.track_gram_cond && k % stride == 0 {
+            history
+                .gram_conds
+                .push(packed_gram_cond(&buf, sb, inv_n, lam, &mut gram_scaled));
         }
 
         // Replicated inner solve (eq. 8) and deferred updates (eqs. 9–10).
@@ -332,15 +327,6 @@ fn run_overlapped<C: Communicator>(
         alpha_loc,
         history,
     })
-}
-
-fn should_record(h_now: usize, s: usize, opts: &SolverOpts) -> bool {
-    if opts.record_every == 0 {
-        return false;
-    }
-    // Record at the first outer boundary at or past each record_every mark.
-    let re = opts.record_every.max(s);
-    h_now % ((re / s).max(1) * s) == 0
 }
 
 /// Meter-excluded metric evaluation: objective needs one scalar allreduce

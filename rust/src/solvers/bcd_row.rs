@@ -12,6 +12,14 @@
 //! same seed — asserted by the layout-equivalence integration test — only
 //! the communication pattern differs (extra all-to-all per outer
 //! iteration, exactly Theorem 8's `W` term).
+//!
+//! With [`SolverOpts::overlap`], the Theorem-4 all-to-all itself is
+//! pipelined: sends post through `iall_to_all_start`, the Lemma-3
+//! load-metering allreduce runs while the exchange is in flight
+//! (operation tags keep the streams apart), and `iall_to_all_wait` drains
+//! the receives — in addition to the existing overlap of the
+//! overlap-tensor assembly behind the `[G|r|w]` iallreduce. Both overlaps
+//! are bitwise-identical to the blocking path.
 
 use crate::comm::Communicator;
 use crate::error::{Error, Result};
@@ -23,7 +31,7 @@ use crate::metrics::{
 };
 use crate::partition::BlockPartition;
 use crate::sampling::{overlap_tensor_into, BlockSampler};
-use crate::solvers::common::{metered_out, objective_value, SolverOpts};
+use crate::solvers::common::{metered_out, objective_value, should_record, SolverOpts};
 
 /// Output of the row-layout primal solver.
 #[derive(Clone, Debug)]
@@ -55,6 +63,13 @@ pub fn run<C: Communicator>(
     comm: &mut C,
     backend: &mut dyn ComputeBackend,
 ) -> Result<RowPrimalOutput> {
+    if !opts.reg.is_exact_l2() {
+        return Err(Error::InvalidArg(
+            "bcd_row supports reg = l2 only; prox regularizers run through \
+             solvers::bcd / solvers::bdcd (matched layouts)"
+                .into(),
+        ));
+    }
     let d_loc = x_rows.rows();
     let n = x_rows.cols();
     opts.validate(d_global)?;
@@ -122,12 +137,6 @@ pub fn run<C: Communicator>(
                 }
             }
         }
-        // Measured Lemma-3 load: max over ranks of sampled rows owned.
-        let mut load_buf = vec![0.0f64; p];
-        load_buf[rank] = owned as f64;
-        metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
-        max_loads.push(load_buf.iter().fold(0.0f64, |a, &v| a.max(v)) as usize);
-
         // Receive-side length contract: the shared seed means every rank
         // knows exactly how many sampled rows each owner contributes, so a
         // mis-sized payload poisons the group instead of desynchronizing
@@ -136,7 +145,25 @@ pub fn run<C: Communicator>(
         for &i in &flat {
             recv_lens[row_part.owner(i)] += n_loc;
         }
-        let received = comm.all_to_all_expect(send, &recv_lens)?;
+        // Measured Lemma-3 load: max over ranks of sampled rows owned —
+        // one meter-excluded P-word allreduce. With `opts.overlap` it runs
+        // *inside* the in-flight Theorem-4 all-to-all (the non-blocking
+        // start/wait pair; operation tags keep the two message streams
+        // apart), hiding the metering latency behind the redistribution.
+        // Payloads and per-source ordering are unchanged, so the
+        // trajectory and the measured loads are bitwise identical to the
+        // blocking path.
+        let mut load_buf = vec![0.0f64; p];
+        load_buf[rank] = owned as f64;
+        let received = if opts.overlap {
+            let handle = comm.iall_to_all_start(send, &recv_lens)?;
+            metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
+            comm.iall_to_all_wait(handle)?
+        } else {
+            metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
+            comm.all_to_all_expect(send, &recv_lens)?
+        };
+        max_loads.push(load_buf.iter().fold(0.0f64, |a, &v| a.max(v)) as usize);
         // Reassemble: rank q's payload lists its owned sampled rows' local
         // segments in global sample order.
         let mut y_cols = DenseMatrix::zeros(sb, n_loc);
@@ -197,8 +224,7 @@ pub fn run<C: Communicator>(
 
         let h_now = (k + 1) * s;
         history.iters = h_now;
-        let re = opts.record_every.max(s);
-        if (opts.record_every > 0 && h_now % ((re / s).max(1) * s) == 0) || k + 1 == outer {
+        if should_record(h_now, s, opts) || k + 1 == outer {
             record(
                 &mut history, h_now, &w_loc, &alpha_loc, y_loc, n, lam, reference, comm,
             )?;
@@ -336,6 +362,7 @@ mod tests {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         // Matched layout, serial.
         let mut be = NativeBackend::new();
@@ -398,6 +425,7 @@ mod tests {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let row_part = BlockPartition::new(64, p);
         let col_part = BlockPartition::new(40, p);

@@ -24,15 +24,15 @@
 use crate::comm::Communicator;
 use crate::error::Result;
 use crate::gram::ComputeBackend;
-use crate::linalg::cond::condition_number;
-use crate::linalg::packed::{packed_len, pidx};
+use crate::linalg::packed::packed_len;
 use crate::matrix::Matrix;
 use crate::metrics::{
     relative_objective_error, relative_solution_error, History, IterRecord, Reference,
 };
 use crate::sampling::{overlap_tensor_into, BlockSampler};
 use crate::solvers::common::{
-    flatten_blocks, metered_out, objective_value, DualOutput, SolverOpts,
+    cond_stride, flatten_blocks, metered_out, objective_value, packed_gram_cond,
+    should_record, DualOutput, SolverOpts,
 };
 
 /// Run BDCD / CA-BDCD on this rank's shard.
@@ -52,6 +52,10 @@ pub fn run<C: Communicator>(
     comm: &mut C,
     backend: &mut dyn ComputeBackend,
 ) -> Result<DualOutput> {
+    if !opts.reg.is_exact_l2() {
+        // Non-smooth dual regularizer: the CA-Prox-BDCD loop.
+        return crate::prox::bdcd::run(a_loc, y, d_global, d_offset, opts, comm, backend);
+    }
     if opts.overlap {
         return run_overlapped(a_loc, y, d_global, d_offset, opts, reference, comm, backend);
     }
@@ -93,11 +97,7 @@ pub fn run<C: Communicator>(
     )?;
 
     let outer = opts.outer_iters();
-    // Condition tracking is exact-per-iteration for small Gram matrices;
-    // for large sb (Figs. 4j-l / 7j-l regimes, sb up to 3200) it samples
-    // ~16 outer iterations — the reported min/median/max statistics are
-    // over those samples (estimator: power + inverse-power, linalg::cond).
-    let cond_stride = if sb <= 128 { 1 } else { outer.div_ceil(16).max(1) };
+    let stride = cond_stride(sb, outer);
     'outer_loop: for k in 0..outer {
         let blocks = sampler.draw_blocks(s, b);
         flatten_blocks(&blocks, b, &mut idx_flat);
@@ -110,16 +110,15 @@ pub fn run<C: Communicator>(
         // THE communication of this outer iteration.
         comm.allreduce_sum(&mut buf)?;
 
-        if opts.track_gram_cond && k % cond_stride == 0 {
-            // Θ-scale Gram: G' = (1/λn²)·raw + (1/n)I (paper Figs. 7i–l),
-            // mirrored off the packed triangle for the eigensolver.
-            for i in 0..sb {
-                for j in 0..sb {
-                    gram_scaled[i * sb + j] = (inv_n * inv_n / lam) * buf[pidx(i, j)]
-                        + if i == j { inv_n } else { 0.0 };
-                }
-            }
-            history.gram_conds.push(condition_number(&gram_scaled, sb));
+        if opts.track_gram_cond && k % stride == 0 {
+            // Θ-scale Gram: G' = (1/λn²)·raw + (1/n)I (paper Figs. 7i–l).
+            history.gram_conds.push(packed_gram_cond(
+                &buf,
+                sb,
+                inv_n * inv_n / lam,
+                inv_n,
+                &mut gram_scaled,
+            ));
         }
 
         // Replicated dual inner solve (eq. 18).
@@ -231,7 +230,7 @@ fn run_overlapped<C: Communicator>(
     )?;
 
     let outer = opts.outer_iters();
-    let cond_stride = if sb <= 128 { 1 } else { outer.div_ceil(16).max(1) };
+    let stride = cond_stride(sb, outer);
 
     let mut blocks: Vec<Vec<usize>> = Vec::new();
     let mut next_buf: Vec<f64> = Vec::new();
@@ -269,14 +268,14 @@ fn run_overlapped<C: Communicator>(
         // ------------------------------------------------------------------
         let buf = comm.iallreduce_wait(handle)?;
 
-        if opts.track_gram_cond && k % cond_stride == 0 {
-            for i in 0..sb {
-                for j in 0..sb {
-                    gram_scaled[i * sb + j] = (inv_n * inv_n / lam) * buf[pidx(i, j)]
-                        + if i == j { inv_n } else { 0.0 };
-                }
-            }
-            history.gram_conds.push(condition_number(&gram_scaled, sb));
+        if opts.track_gram_cond && k % stride == 0 {
+            history.gram_conds.push(packed_gram_cond(
+                &buf,
+                sb,
+                inv_n * inv_n / lam,
+                inv_n,
+                &mut gram_scaled,
+            ));
         }
 
         // Replicated dual inner solve (eq. 18) and deferred updates.
@@ -335,14 +334,6 @@ fn run_overlapped<C: Communicator>(
         alpha,
         history,
     })
-}
-
-fn should_record(h_now: usize, s: usize, opts: &SolverOpts) -> bool {
-    if opts.record_every == 0 {
-        return false;
-    }
-    let re = opts.record_every.max(s);
-    h_now % ((re / s).max(1) * s) == 0
 }
 
 /// Assemble the full w by summing zero-padded local slices (metric path).

@@ -4,6 +4,7 @@
 use crate::comm::Communicator;
 use crate::error::Result;
 use crate::metrics::History;
+use crate::prox::Reg;
 
 /// Options shared by all four coordinate-descent variants.
 #[derive(Clone, Debug)]
@@ -33,6 +34,13 @@ pub struct SolverOpts {
     /// trajectory is bitwise identical to the blocking path and the
     /// allreduce count stays exactly H/s.
     pub overlap: bool,
+    /// Regularizer `ψ(w)` of the penalized objective
+    /// `‖Xᵀw − y‖²/(2n) + ψ(w)`. [`Reg::L2`] (the default) takes the
+    /// pre-existing exact-Cholesky solvers bitwise unchanged; every other
+    /// choice routes `bcd`/`bdcd` through the CA-Prox loops
+    /// ([`crate::prox`]) — same packed `[G|r]` payload, same H/s
+    /// collective count.
+    pub reg: Reg,
 }
 
 impl Default for SolverOpts {
@@ -47,6 +55,7 @@ impl Default for SolverOpts {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            reg: Reg::L2,
         }
     }
 }
@@ -66,6 +75,7 @@ impl SolverOpts {
         if self.lam <= 0.0 {
             return Err(Error::InvalidArg("λ must be > 0".into()));
         }
+        self.reg.validate()?;
         Ok(())
     }
 
@@ -91,6 +101,43 @@ pub struct DualOutput {
     pub w_full: Vec<f64>,
     pub alpha: Vec<f64>,
     pub history: History,
+}
+
+/// Condition-tracking sampling stride shared by every solver loop:
+/// exact-per-iteration for small Gram matrices, ~16 samples for large sb
+/// (the Figs. 4i–l / 7i–l regimes, sb up to 3200).
+pub fn cond_stride(sb: usize, outer: usize) -> usize {
+    if sb <= 128 {
+        1
+    } else {
+        outer.div_ceil(16).max(1)
+    }
+}
+
+/// Diagnostic-path condition estimate of `scale·G + shift·I`, where G is
+/// the allreduced packed lower triangle: mirror into `scratch` (`sb²`)
+/// for the eigensolver and run the power/inverse-power estimator. Shared
+/// by the smooth and prox loops so the mirror indexing and estimator
+/// policy cannot drift between them.
+pub fn packed_gram_cond(packed: &[f64], sb: usize, scale: f64, shift: f64, scratch: &mut [f64]) -> f64 {
+    debug_assert!(scratch.len() >= sb * sb);
+    for i in 0..sb {
+        for j in 0..sb {
+            scratch[i * sb + j] = scale * packed[crate::linalg::packed::pidx(i, j)]
+                + if i == j { shift } else { 0.0 };
+        }
+    }
+    crate::linalg::cond::condition_number(scratch, sb)
+}
+
+/// Record cadence shared by every solver loop: record at the first outer
+/// boundary at or past each `record_every` mark (0 = start/end only).
+pub fn should_record(h_now: usize, s: usize, opts: &SolverOpts) -> bool {
+    if opts.record_every == 0 {
+        return false;
+    }
+    let re = opts.record_every.max(s);
+    h_now % ((re / s).max(1) * s) == 0
 }
 
 /// Flatten `s` sampled blocks of size `b` into a contiguous index list

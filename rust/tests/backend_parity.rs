@@ -4,6 +4,15 @@
 //! operation-for-operation, modulo summation order inside the tiled Gram —
 //! tolerance 1e-10 relative).
 //!
+//! Artifact contract (`aot.py` / `runtime/mod.rs`): the gram artifact kind
+//! is `gram_resid_packed` — G arrives as the **packed lower triangle** of
+//! the artifact's sb_art×sb_art tile (entry (r, c), r ≥ c, at
+//! r(r+1)/2 + c), so the runtime accumulates the first packed_len(sb)
+//! words elementwise into the logical packed buffer; there is no
+//! fold-to-packed copy anywhere. Old full-matrix `gram_resid` manifests
+//! are rejected at load with a regenerate hint. Both `gram_resid` calls
+//! below therefore exercise the packed artifact path end-to-end.
+//!
 //! Requires `artifacts/` (run `make artifacts`); tests panic with a clear
 //! message if it is missing, since the three-layer claim is untestable
 //! without the build product.
@@ -153,6 +162,7 @@ fn full_solver_trajectory_parity() {
         track_gram_cond: false,
         tol: None,
         overlap: false,
+        ..Default::default()
     };
 
     let mut nb = NativeBackend::new();

@@ -44,6 +44,7 @@ fn prop_ca_bcd_equals_bcd_for_random_s_and_b() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
@@ -87,6 +88,7 @@ fn prop_ca_bdcd_equals_bdcd_for_random_s_and_b() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
@@ -125,6 +127,7 @@ fn prop_duplicate_coordinates_across_inner_blocks_are_exact() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
@@ -164,6 +167,7 @@ fn overlap_pipeline_is_bitwise_stable_spmd() {
         track_gram_cond: false,
         tol: None,
         overlap,
+        ..Default::default()
     };
     for p in [2usize, 3, 5] {
         // Primal.
@@ -238,6 +242,7 @@ fn allreduce_counts_scale_as_h_over_s() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();

@@ -266,6 +266,116 @@ fn prop_nonblocking_allreduce_bitwise_equals_blocking() {
     });
 }
 
+/// Non-blocking all-to-all (start/wait pair) must be bitwise identical to
+/// the blocking `all_to_all_expect` on the same payloads — including with
+/// a *different collective running between start and wait* (the bcd_row
+/// overlap pattern: the Lemma-3 load-metering allreduce rides inside the
+/// in-flight Theorem-4 exchange). Operation tags keep the two message
+/// streams apart even when payload lengths collide.
+#[test]
+fn prop_nonblocking_all_to_all_bitwise_equals_blocking_with_interleave() {
+    check(12, |g| {
+        let p = g.usize_in(1, 8);
+        let len = g.usize_in(1, 12);
+        let seed = g.seed;
+        let results = run_spmd(p, move |rank, comm| {
+            let mk_send = || -> Vec<Vec<f64>> {
+                (0..p)
+                    .map(|dst| {
+                        let mut gen = Gen::new(seed ^ ((rank * 31 + dst) as u64));
+                        gen.vec_normal(len)
+                    })
+                    .collect()
+            };
+            let lens = vec![len; p];
+            let blocking = comm.all_to_all_expect(mk_send(), &lens).unwrap();
+            let h = comm.iall_to_all_start(mk_send(), &lens).unwrap();
+            // Interleaved collective with the SAME payload length as the
+            // in-flight exchange — the tag-matching stress case.
+            let mut inter = vec![rank as f64; len];
+            comm.allreduce_sum(&mut inter).unwrap();
+            let nonblocking = comm.iall_to_all_wait(h).unwrap();
+            let expect_sum = (0..p).sum::<usize>() as f64;
+            (blocking, nonblocking, inter, expect_sum)
+        });
+        for (rank, (b, nb, inter, expect_sum)) in results.iter().enumerate() {
+            prop_assert!(b == nb, "p={p} len={len} rank={rank}: a2a nb != blocking");
+            for v in inter {
+                prop_assert!(
+                    *v == *expect_sum,
+                    "p={p} rank={rank}: interleaved allreduce corrupted ({v})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same interleave guarantee for the non-blocking allreduce: another
+/// allreduce of the SAME length may run between start and wait without
+/// either operation stealing the other's messages.
+#[test]
+fn nonblocking_allreduce_tolerates_interleaved_collective() {
+    for p in [2usize, 3, 5, 8] {
+        for len in [7usize, RABENSEIFNER_MIN_WORDS + 5] {
+            let results = run_spmd(p, move |rank, comm| {
+                let data: Vec<f64> = (0..len).map(|i| ((rank + 1) * (i + 1)) as f64).collect();
+                let mut blocking = data.clone();
+                comm.allreduce_sum(&mut blocking).unwrap();
+                let h = comm.iallreduce_start(data).unwrap();
+                let mut inter: Vec<f64> = (0..len).map(|i| (rank * len + i) as f64).collect();
+                comm.allreduce_sum(&mut inter).unwrap();
+                let nonblocking = comm.iallreduce_wait(h).unwrap();
+                (blocking, nonblocking, inter)
+            });
+            for i in 0..len {
+                let inter_expect: f64 = (0..p).map(|r| (r * len + i) as f64).sum();
+                for (rank, (b, nb, inter)) in results.iter().enumerate() {
+                    assert_eq!(
+                        b[i], nb[i],
+                        "p={p} len={len} rank={rank}: interleave broke the in-flight reduce"
+                    );
+                    assert_eq!(
+                        inter[i], inter_expect,
+                        "p={p} len={len} rank={rank}: in-flight reduce broke the interleave"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Receive-side poison semantics of the non-blocking all-to-all: a length
+/// contract violated by a peer's payload poisons the group at wait time —
+/// every rank errors, nobody hangs.
+#[test]
+fn nonblocking_all_to_all_length_mismatch_poisons_group() {
+    for p in [2usize, 5] {
+        let outcomes = run_spmd(p, |rank, comm| {
+            let send: Vec<Vec<f64>> = (0..p)
+                .map(|_| vec![rank as f64; if rank == 0 { 2 } else { 4 }])
+                .collect();
+            let lens = vec![4usize; p];
+            let first = match comm.iall_to_all_start(send, &lens) {
+                Ok(h) => comm.iall_to_all_wait(h).err().map(|e| e.to_string()),
+                Err(e) => Some(e.to_string()),
+            };
+            let second = comm.barrier().err().map(|e| e.to_string());
+            (first, second)
+        });
+        for (rank, (first, second)) in outcomes.iter().enumerate() {
+            let failed = first.as_ref().or(second.as_ref());
+            let msg = failed.unwrap_or_else(|| {
+                panic!("p={p} rank={rank}: no collective failed after nb a2a mismatch")
+            });
+            assert!(
+                msg.contains("poisoned") || msg.contains("terminated"),
+                "p={p} rank={rank}: unexpected error {msg:?}"
+            );
+        }
+    }
+}
+
 /// Pool steady state under the solver-shaped workload: repeated
 /// fixed-size non-blocking allreduces stop allocating after warmup.
 #[test]
@@ -375,6 +485,7 @@ fn spmd_rank_count_does_not_change_solver_numerics() {
         track_gram_cond: false,
         tol: None,
         overlap: false,
+        ..Default::default()
     };
     let mut solutions = Vec::new();
     for p in [1usize, 2, 5] {

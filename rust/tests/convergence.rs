@@ -46,6 +46,7 @@ fn all_four_clones_make_objective_progress_under_bcd() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, Some(&reference), &mut comm, &mut be)
@@ -93,6 +94,7 @@ fn larger_block_size_converges_faster_per_iteration() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, Some(&reference), &mut comm, &mut be)
@@ -124,6 +126,7 @@ fn primal_and_dual_agree_on_the_optimum() {
         track_gram_cond: false,
         tol: None,
         overlap: false,
+        ..Default::default()
     };
     let mut be = NativeBackend::new();
     let w_primal = bcd::run(&ds.x, &ds.y, ds.n(), &p_opts, Some(&reference), &mut comm, &mut be)
@@ -141,6 +144,7 @@ fn primal_and_dual_agree_on_the_optimum() {
         track_gram_cond: false,
         tol: None,
         overlap: false,
+        ..Default::default()
     };
     let w_dual = bdcd::run(&a, &ds.y, ds.d(), 0, &d_opts, Some(&reference), &mut comm, &mut be)
         .unwrap()
@@ -188,6 +192,7 @@ fn gram_condition_number_grows_with_s_but_stays_bounded() {
             track_gram_cond: true,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, None, &mut comm, &mut be).unwrap();

@@ -345,6 +345,7 @@ fn prop_trajectories_invariant_across_storage_and_overlap() {
             track_gram_cond: false,
             tol: None,
             overlap,
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
@@ -399,6 +400,7 @@ fn prop_row_layout_matches_column_layout_at_random_shapes() {
             track_gram_cond: false,
             tol: None,
             overlap: g.bool(),
+            ..Default::default()
         };
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
@@ -488,6 +490,7 @@ fn bcd_and_bdcd_allreduce_payload_is_exactly_packed_triangle_plus_resid() {
             track_gram_cond: false,
             tol: None,
             overlap,
+            ..Default::default()
         };
         // Primal.
         let shards = partition_primal(&ds, p).unwrap();
@@ -561,6 +564,7 @@ fn bcd_row_payload_is_packed_triangle_plus_two_vectors_plus_lemma3_volume() {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            ..Default::default()
         };
         let row_part = BlockPartition::new(d, p);
         let col_part = BlockPartition::new(n, p);
