@@ -36,18 +36,16 @@ fn main() {
 
     // --- CA-BDCD: 50 outer iterations × s inner each -------------------
     for s in [1usize, 8] {
-        let opts = SolverOpts {
-            b: 16,
-            s,
-            lam,
-            iters: budget * s,
-            seed: 7,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(16)
+            .s(s)
+            .lam(lam)
+            .iters(budget * s)
+            .seed(7)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let shards = partition_dual(&ds, p).unwrap();
         let rref = &reference;
         let opts2 = opts.clone();

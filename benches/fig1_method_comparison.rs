@@ -55,18 +55,17 @@ fn main() {
     let mut be = NativeBackend::new();
 
     // --- BCD, b=4 ---
-    let opts = SolverOpts {
-        b: 4,
-        s: 1,
-        lam,
-        iters: 40_000,
-        seed: 1,
-        record_every: 500,
-        track_gram_cond: false,
-        tol: Some(tol),
-        overlap: false,
-        ..Default::default()
-    };
+    let opts = SolverOpts::builder()
+        .b(4)
+        .s(1)
+        .lam(lam)
+        .iters(40_000)
+        .seed(1)
+        .record_every(500)
+        .track_gram_cond(false)
+        .tol(tol)
+        .overlap(false)
+        .build();
     let p = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be).unwrap();
     let s_bcd = from_history("BCD", Method::Bcd, 4.0, &p.history);
 

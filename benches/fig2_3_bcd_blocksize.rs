@@ -38,18 +38,16 @@ fn main() {
         );
         for b in bs {
             let b = b.min(d);
-            let opts = SolverOpts {
-                b,
-                s: 1,
-                lam,
-                iters,
-                seed: 5,
-                record_every: iters / 8,
-                track_gram_cond: false,
-                tol: None,
-                overlap: false,
-                ..Default::default()
-            };
+            let opts = SolverOpts::builder()
+                .b(b)
+                .s(1)
+                .lam(lam)
+                .iters(iters)
+                .seed(5)
+                .record_every(iters / 8)
+                .track_gram_cond(false)
+                .overlap(false)
+                .build();
             let mut be = NativeBackend::new();
             let out = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be)
                 .unwrap();

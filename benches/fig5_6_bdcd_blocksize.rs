@@ -34,18 +34,16 @@ fn main() {
         );
         for b in bs {
             let b = b.min(n / 2).max(1);
-            let opts = SolverOpts {
-                b,
-                s: 1,
-                lam,
-                iters,
-                seed: 5,
-                record_every: iters / 8,
-                track_gram_cond: false,
-                tol: None,
-                overlap: false,
-                ..Default::default()
-            };
+            let opts = SolverOpts::builder()
+                .b(b)
+                .s(1)
+                .lam(lam)
+                .iters(iters)
+                .seed(5)
+                .record_every(iters / 8)
+                .track_gram_cond(false)
+                .overlap(false)
+                .build();
             let mut be = NativeBackend::new();
             let out = bdcd::run(&a, &ds.y, d, 0, &opts, Some(&reference), &mut comm, &mut be)
                 .unwrap();

@@ -38,18 +38,16 @@ fn main() {
         );
         let mut w_base: Option<Vec<f64>> = None;
         for s in svals {
-            let opts = SolverOpts {
-                b,
-                s,
-                lam,
-                iters,
-                seed: 9,
-                record_every: 0,
-                track_gram_cond: true,
-                tol: None,
-                overlap: false,
-                ..Default::default()
-            };
+            let opts = SolverOpts::builder()
+                .b(b)
+                .s(s)
+                .lam(lam)
+                .iters(iters)
+                .seed(9)
+                .record_every(0)
+                .track_gram_cond(true)
+                .overlap(false)
+                .build();
             let mut be = NativeBackend::new();
             let mut c = SerialComm::new();
             let out = bdcd::run(&a, &ds.y, d, 0, &opts, Some(&reference), &mut c, &mut be)

@@ -69,6 +69,7 @@ fn check_against_seed(seed_text: &str, current: &[(&str, f64)]) {
     const WIRE_FIELDS: &[&str] = &[
         "allreduce_payload_words_packed",
         "allreduce_words_per_rank_p8_packed",
+        "prox_overlap_allreduces_per_outer",
     ];
     for &key in WIRE_FIELDS {
         let Some(seed_val) = json_num_field(seed_text, key) else {
@@ -249,6 +250,92 @@ fn main() {
         report.push(("prox_inner_solve_s4_b8_ns", json::num(med * 1e9)));
     }
 
+    // --- CA-Prox-BCD overlap pipeline (engine prefetch schedule) --------
+    // The engine port gave the prox loops the smooth solvers' Gram
+    // prefetch: with `overlap`, the next iteration's packed Gram computes
+    // under the in-flight [G|r] reduction. Timing rows land in
+    // BENCH_hotpath.json; the machine-independent collective count (still
+    // exactly one allreduce per outer iteration — the pipeline must not
+    // add collectives) is gated against the committed seed.
+    {
+        use cabcd::coordinator::partition_primal;
+        use cabcd::matrix::io::Dataset;
+        use cabcd::prox::Reg;
+        use cabcd::solvers::{bcd, SolverOpts};
+
+        let (d, n) = if quick { (96usize, 4096usize) } else { (192, 16384) };
+        let x = Matrix::Dense(dense_mat(d, n, 21));
+        let mut y = vec![0.0; n];
+        x.matvec_t(&vec![1.0; d], &mut y).unwrap();
+        let ds = Dataset {
+            name: "prox-bench".into(),
+            x,
+            y,
+        };
+        let p = 2usize;
+        let shards = partition_primal(&ds, p).unwrap();
+        let s = 4usize;
+        let outer = if quick { 4usize } else { 8 };
+        println!("\nCA-Prox-BCD (l1) outer iteration at P={p} (d={d}, n={n}, b=8, s={s}):");
+        let mut medians = Vec::new();
+        let mut overlap_allreduces = 0u64;
+        for overlap in [false, true] {
+            let opts = SolverOpts::builder()
+                .b(8)
+                .s(s)
+                .lam(0.1)
+                .iters(outer * s)
+                .seed(5)
+                .record_every(0)
+                .overlap(overlap)
+                .reg(Reg::L1)
+                .build();
+            let shards_ref = &shards;
+            let optsr = &opts;
+            // Wire accounting (one un-timed run): the prefetch pipeline
+            // must keep exactly H/s collectives.
+            let counts = run_spmd(p, move |rank, comm| {
+                let sh = &shards_ref[rank];
+                let mut be = NativeBackend::new();
+                bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, optsr, None, comm, &mut be)
+                    .unwrap()
+                    .history
+                    .meter
+                    .allreduces
+            });
+            assert_eq!(
+                counts[0] as usize, outer,
+                "overlap={overlap}: prox collective count != H/s"
+            );
+            if overlap {
+                overlap_allreduces = counts[0];
+            }
+            let (med, _, _) = time_runs(1, if quick { 3 } else { 5 }, || {
+                run_spmd(p, move |rank, comm| {
+                    let sh = &shards_ref[rank];
+                    let mut be = NativeBackend::new();
+                    bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, optsr, None, comm, &mut be)
+                        .unwrap()
+                        .w[0]
+                })
+            });
+            println!(
+                "  overlap={overlap:<5} median/outer = {}",
+                fmt_secs(med / outer as f64)
+            );
+            medians.push(med / outer as f64);
+        }
+        println!(
+            "  prox Gram-prefetch pipeline speedup: {:.2}×",
+            medians[0] / medians[1]
+        );
+        report.push(("prox_bcd_blocking_outer_ns", json::num(medians[0] * 1e9)));
+        report.push(("prox_bcd_overlap_outer_ns", json::num(medians[1] * 1e9)));
+        let per_outer = overlap_allreduces as f64 / outer as f64;
+        report.push(("prox_overlap_allreduces_per_outer", json::num(per_outer)));
+        wire_metrics.push(("prox_overlap_allreduces_per_outer", per_outer));
+    }
+
     // Measured allreduce latency on the packed payload.
     let rounds = if quick { 8usize } else { 20 };
     println!("\nallreduce (thread communicator), packed sb(sb+1)/2+sb payloads:");
@@ -336,18 +423,16 @@ fn main() {
         for s in [1usize, 4, 8] {
             use cabcd::comm::SerialComm;
             use cabcd::solvers::{bcd, SolverOpts};
-            let opts = SolverOpts {
-                b: 8,
-                s,
-                lam: 0.1,
-                iters: 4 * s,
-                seed: 3,
-                record_every: 0,
-                track_gram_cond: false,
-                tol: None,
-                overlap: false,
-                ..Default::default()
-            };
+            let opts = SolverOpts::builder()
+                .b(8)
+                .s(s)
+                .lam(0.1)
+                .iters(4 * s)
+                .seed(3)
+                .record_every(0)
+                .track_gram_cond(false)
+                .overlap(false)
+                .build();
             let mut c = SerialComm::new();
             let (med, _, _) = time_runs(1, 5, || {
                 bcd::run(&x, &y, 32768, &opts, None, &mut c, &mut be).unwrap().w[0]
@@ -377,18 +462,16 @@ fn main() {
         println!("\nCA-BCD outer iteration at P=8 (d=192, n=16384, b=8, s=4):");
         let mut medians = Vec::new();
         for overlap in [false, true] {
-            let opts = SolverOpts {
-                b: 8,
-                s: 4,
-                lam: 0.1,
-                iters: 16,
-                seed: 3,
-                record_every: 0,
-                track_gram_cond: false,
-                tol: None,
-                overlap,
-                ..Default::default()
-            };
+            let opts = SolverOpts::builder()
+                .b(8)
+                .s(4)
+                .lam(0.1)
+                .iters(16)
+                .seed(3)
+                .record_every(0)
+                .track_gram_cond(false)
+                .overlap(overlap)
+                .build();
             let shards_ref = &shards;
             let optsr = &opts;
             let (med, _, _) = time_runs(1, 5, || {

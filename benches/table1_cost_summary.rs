@@ -105,18 +105,16 @@ fn main() {
     let ds = generate(spec, 1).unwrap();
     println!("{:>4} {:>12} {:>18} {:>18}", "s", "outer iters", "measured msgs", "formula msgs");
     for s in [1usize, 2, 4, 8] {
-        let opts = SolverOpts {
-            b: 2,
-            s,
-            lam: spec.lambda(),
-            iters: 64,
-            seed: 3,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(2)
+            .s(s)
+            .lam(spec.lambda())
+            .iters(64)
+            .seed(3)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let shards = partition_primal(&ds, 8).unwrap();
         let meters: Vec<CostMeter> = run_spmd(8, |rank, comm| {
             let mut be = NativeBackend::new();

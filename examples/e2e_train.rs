@@ -41,6 +41,9 @@ fn cfg(backend: &str, ranks: usize, iters: usize) -> ExperimentConfig {
             track_gram_cond: false,
             tol: None,
             overlap: false,
+            reg: "l2".into(),
+            l1_ratio: 0.5,
+            local_iters: 100,
         },
         run: RunConfig {
             ranks,

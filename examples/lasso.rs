@@ -50,17 +50,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     };
     let p = 4usize;
     let shards = partition_primal(&ds, p)?;
-    let opts = SolverOpts {
-        b: 4,
-        s: 4,
-        lam,
-        iters: 60_000,
-        seed: 7,
-        record_every: 2000,
-        tol: Some(1e-8), // stop on duality gap ≤ 1e-8
-        reg: Reg::L1,
-        ..Default::default()
-    };
+    let opts = SolverOpts::builder()
+        .b(4)
+        .s(4)
+        .lam(lam)
+        .iters(60_000)
+        .seed(7)
+        .record_every(2000)
+        .tol(1e-8)
+        .reg(Reg::L1)
+        .build();
     let outs = run_spmd(p, |rank, comm| {
         let mut be = NativeBackend::new();
         let sh = &shards[rank];
@@ -121,12 +120,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("\nelastic-net path (b=4, s=4, λ={lam}):");
     println!("{:>9} {:>8} {:>14}", "l1_ratio", "nnz(w)", "penalized obj");
     for ratio in [1.0, 0.75, 0.5, 0.25, 0.0] {
-        let opts = SolverOpts {
-            iters: 20_000,
-            tol: Some(1e-7),
-            reg: Reg::Elastic { l1_ratio: ratio },
-            record_every: 2000,
-            ..opts.clone()
+        let opts = {
+            let mut o = opts.clone();
+            o.iters = 20_000;
+            o.tol = Some(1e-7);
+            o.reg = Reg::Elastic { l1_ratio: ratio };
+            o.record_every = 2000;
+            o
         };
         let outs = run_spmd(p, |rank, comm| {
             let mut be = NativeBackend::new();

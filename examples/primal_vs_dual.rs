@@ -40,25 +40,24 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let b_dual = (n / 8).clamp(1, 32);
         let iters = 600;
 
-        let opts = SolverOpts {
-            b: b_primal,
-            s: 1,
-            lam,
-            iters,
-            seed: 3,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(b_primal)
+            .s(1)
+            .lam(lam)
+            .iters(iters)
+            .seed(3)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let mut be = NativeBackend::new();
         let p = bcd::run(&ds.x, &ds.y, n, &opts, Some(&reference), &mut comm, &mut be)?;
 
         let a = ds.x.transpose();
-        let opts_d = SolverOpts {
-            b: b_dual,
-            ..opts.clone()
+        let opts_d = {
+            let mut o = opts.clone();
+            o.b = b_dual;
+            o
         };
         let du = bdcd::run(&a, &ds.y, d, 0, &opts_d, Some(&reference), &mut comm, &mut be)?;
 

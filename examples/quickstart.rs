@@ -31,18 +31,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // 3. Classical BCD vs communication-avoiding BCD, identical sampling.
     for s in [1usize, 8] {
-        let opts = SolverOpts {
-            b: 4,
-            s,
-            lam,
-            iters: 2000,
-            seed: 7,
-            record_every: 400,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(4)
+            .s(s)
+            .lam(lam)
+            .iters(2000)
+            .seed(7)
+            .record_every(400)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let mut backend = NativeBackend::new();
         let out = bcd::run(
             &ds.x,

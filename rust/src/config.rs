@@ -13,7 +13,7 @@
 //! seed = 42
 //!
 //! [solver]
-//! method = cabcd          # bcd | cabcd | bdcd | cabdcd | cg
+//! method = cabcd          # bcd|cabcd|bdcd|cabdcd|bcdrow|cabcdrow|cocoa|cg
 //! b = 8
 //! s = 4
 //! iters = 2000
@@ -21,9 +21,10 @@
 //! seed = 7
 //! record_every = 50
 //! track_gram_cond = false
-//! overlap = false         # non-blocking allreduce pipeline
+//! overlap = false         # non-blocking overlap pipeline
 //! reg = l2                # l2 | l1 | elastic | none (prox subsystem)
 //! l1_ratio = 0.5          # elastic-net L1 fraction (reg = elastic only)
+//! local_iters = 100       # local dual updates per round (cocoa only)
 //!
 //! [run]
 //! ranks = 4
@@ -33,6 +34,7 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::engine::Method;
 use crate::error::{Error, Result};
 use crate::prox::Reg;
 use crate::solvers::SolverOpts;
@@ -75,6 +77,8 @@ pub struct SolverConfig {
     pub reg: String,
     /// Elastic-net L1 fraction ∈ [0, 1] (`reg = elastic` only).
     pub l1_ratio: f64,
+    /// Local dual updates per round (`method = cocoa` only).
+    pub local_iters: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -129,6 +133,7 @@ impl ExperimentConfig {
                 overlap: sv.bool_or("overlap", false)?,
                 reg: sv.str("reg").unwrap_or("l2").to_string(),
                 l1_ratio: sv.f64_opt("l1_ratio")?.unwrap_or(0.5),
+                local_iters: sv.usize_or("local_iters", 100)?,
             },
             run: RunConfig {
                 ranks: rn.usize_or("ranks", 1)?,
@@ -156,16 +161,23 @@ impl ExperimentConfig {
                 return Err(Error::Config(format!("unknown dataset kind {other:?}")));
             }
         }
-        match self.solver.method.as_str() {
-            "bcd" | "cabcd" | "bdcd" | "cabdcd" | "cg" => {}
-            other => return Err(Error::Config(format!("unknown method {other:?}"))),
-        }
+        // Parse the method and regularizer HERE — unknown strings fail at
+        // config load, not inside the driver dispatch.
+        let method = self.method()?;
         let reg = self.regularizer()?;
         reg.validate().map_err(|e| Error::Config(e.to_string()))?;
-        if self.solver.method == "cg" && !reg.is_exact_l2() {
+        if method == Method::Cocoa && self.solver.local_iters == 0 {
             return Err(Error::Config(
-                "method cg solves the smooth ridge system; reg must be l2".into(),
+                "method cocoa needs local_iters ≥ 1 (0 would allreduce \
+                 all-zero Δw every round)"
+                    .into(),
             ));
+        }
+        if !reg.is_exact_l2() && !method.supports_prox() {
+            return Err(Error::Config(format!(
+                "method {method} solves the smooth ridge system; reg must be l2 \
+                 (prox regularizers run through bcd/cabcd/bdcd/cabdcd)"
+            )));
         }
         match self.run.backend.as_str() {
             "native" | "xla" => {}
@@ -180,6 +192,13 @@ impl ExperimentConfig {
     /// Effective λ: explicit override or the spec's 1000·σ_min rule.
     pub fn effective_lambda(&self, spec_lambda: f64) -> f64 {
         self.solver.lam.unwrap_or(spec_lambda)
+    }
+
+    /// Parse the `[solver] method` string into the engine's [`Method`]
+    /// enum (fails loudly on unknown strings at config load).
+    pub fn method(&self) -> Result<Method> {
+        Method::parse(self.solver.method.as_str())
+            .map_err(|e| Error::Config(e.to_string()))
     }
 
     /// Parse the `[solver] reg` / `l1_ratio` pair into a [`Reg`].
@@ -198,13 +217,19 @@ impl ExperimentConfig {
     }
 
     pub fn solver_opts(&self, lam: f64) -> SolverOpts {
+        // The parse constructors run `validate()` so these cannot fire
+        // there, but the fields are public — a hand-built config with a
+        // malformed method/reg string must fail loudly here rather than
+        // silently run a default path.
+        let method = self
+            .method()
+            .expect("invalid [solver] method — call ExperimentConfig::validate() first");
+        let reg = self
+            .regularizer()
+            .expect("invalid [solver] reg — call ExperimentConfig::validate() first");
         SolverOpts {
             b: self.solver.b,
-            s: if self.solver.method.starts_with("ca") {
-                self.solver.s
-            } else {
-                1
-            },
+            s: if method.is_ca() { self.solver.s } else { 1 },
             lam,
             iters: self.solver.iters,
             seed: self.solver.seed,
@@ -212,13 +237,7 @@ impl ExperimentConfig {
             track_gram_cond: self.solver.track_gram_cond,
             tol: self.solver.tol,
             overlap: self.solver.overlap,
-            // The parse constructors run `validate()` so this cannot fire
-            // there, but the fields are public — a hand-built config with
-            // a malformed reg string must fail loudly here rather than
-            // silently run the exact-L2 path.
-            reg: self
-                .regularizer()
-                .expect("invalid [solver] reg — call ExperimentConfig::validate() first"),
+            reg,
         }
     }
 }

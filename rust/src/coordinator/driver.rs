@@ -1,5 +1,10 @@
 //! End-to-end experiment driver: config → dataset → shards → SPMD solve →
 //! report. This is the launcher's core and what the examples call.
+//!
+//! Dispatch is on the parsed [`Method`] enum (unknown method strings fail
+//! at config load), and every solver runs through the engine's single
+//! [`Session`](crate::engine::Session) entry point — the driver only
+//! chooses the partitioning for the method's layout.
 
 use std::time::Instant;
 
@@ -7,15 +12,16 @@ use crate::comm::cost::CostMeter;
 use crate::comm::thread::run_spmd;
 use crate::comm::SerialComm;
 use crate::config::ExperimentConfig;
+use crate::engine::{Layout, Method, Problem, Session};
 use crate::error::{Error, Result};
 use crate::gram::{ComputeBackend, NativeBackend};
 use crate::matrix::gen::{self, DatasetSpec};
 use crate::matrix::io::{read_libsvm, Dataset};
 use crate::metrics::History;
 use crate::runtime::XlaBackend;
-use crate::solvers::{bcd, bdcd, cg};
+use crate::solvers::cg;
 
-use super::{partition_dual, partition_primal};
+use super::{partition_dual, partition_primal, partition_rows, DualShard, PrimalShard, RowShard};
 
 /// Everything an experiment produces.
 #[derive(Clone, Debug)]
@@ -34,6 +40,10 @@ pub struct ExperimentReport {
     /// Regularizer name (`l2` runs the exact solvers; anything else runs
     /// the CA-Prox loops and reports the prox certificates below).
     pub reg: String,
+    /// Driver-level advisories (e.g. "prox run: ridge reference skipped")
+    /// — surfaced on stderr and in the report JSON so nothing is dropped
+    /// silently.
+    pub notes: Vec<String>,
     pub wall_ms: f64,
     /// Rank-0 trajectory.
     pub history: History,
@@ -80,87 +90,88 @@ fn make_backend(cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
     }
 }
 
+/// The per-layout shard sets the SPMD closure picks a rank's problem from.
+enum ShardSet {
+    Primal(Vec<PrimalShard>),
+    Dual(Vec<DualShard>),
+    Rows(Vec<RowShard>),
+}
+
+impl ShardSet {
+    fn partition(method: Method, ds: &Dataset, p: usize) -> Result<ShardSet> {
+        Ok(match method.layout() {
+            Layout::PrimalCols => ShardSet::Primal(partition_primal(ds, p)?),
+            Layout::DualCols => ShardSet::Dual(partition_dual(ds, p)?),
+            Layout::PrimalRows => ShardSet::Rows(partition_rows(ds, p)?),
+        })
+    }
+
+    fn problem(&self, rank: usize) -> Problem<'_> {
+        match self {
+            ShardSet::Primal(v) => {
+                let sh = &v[rank];
+                Problem::primal(&sh.a_loc, &sh.y_loc, sh.n_global)
+            }
+            ShardSet::Dual(v) => {
+                let sh = &v[rank];
+                Problem::dual(&sh.a_loc, &sh.y, sh.d_global, sh.d_offset)
+            }
+            ShardSet::Rows(v) => {
+                let sh = &v[rank];
+                Problem::primal_rows(&sh.x_rows, &sh.y_loc, sh.d_global, sh.d_offset)
+            }
+        }
+    }
+}
+
 /// Run one configured experiment end to end.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
     cfg.validate()?;
+    let method = cfg.method()?;
     let (ds, lam) = load_dataset(cfg)?;
     let (d, n) = (ds.d(), ds.n());
     let p = cfg.run.ranks;
     let opts = cfg.solver_opts(lam);
+    let mut notes: Vec<String> = Vec::new();
 
     // Ground truth from serial CG (excluded from all meters). The prox
     // runs have no ridge ground truth — they report the duality-gap /
-    // subgradient certificates instead, so the CG solve is skipped.
+    // subgradient certificates instead, so the CG solve is skipped and
+    // the report says so (nothing is dropped silently).
     let reference = if opts.reg.is_exact_l2() {
         let mut comm = SerialComm::new();
         Some(cg::compute_reference(&ds.x, &ds.y, n, lam, &mut comm)?)
     } else {
+        let note = format!(
+            "reg = {}: ridge reference/CG ground truth does not apply; \
+             reporting prox certificates instead of reference errors",
+            cfg.solver.reg
+        );
+        eprintln!("note: {note}");
+        notes.push(note);
         None
     };
 
     let start = Instant::now();
-    let (history, meters): (History, Vec<CostMeter>) = match cfg.solver.method.as_str() {
-        "bcd" | "cabcd" => {
-            let shards = partition_primal(&ds, p)?;
-            let results: Vec<Result<History>> = run_spmd(p, |rank, comm| {
-                let mut be = make_backend(cfg)?;
-                let sh = &shards[rank];
-                let out = bcd::run(
-                    &sh.a_loc,
-                    &sh.y_loc,
-                    sh.n_global,
-                    &opts,
-                    reference.as_ref(),
-                    comm,
-                    be.as_mut(),
-                )?;
-                Ok(out.history)
-            });
-            collect(results)?
+    let shards = ShardSet::partition(method, &ds, p)?;
+    let results: Vec<Result<History>> = run_spmd(p, |rank, comm| {
+        let mut be = if method.needs_backend() {
+            Some(make_backend(cfg)?)
+        } else {
+            None
+        };
+        let problem = shards.problem(rank).with_reference(reference.as_ref());
+        let mut session = Session::new(&problem)
+            .opts(opts.clone())
+            .method(method)
+            .local_iters(cfg.solver.local_iters)
+            .comm(comm);
+        if let Some(be) = be.as_mut() {
+            session = session.backend(be.as_mut());
         }
-        "bdcd" | "cabdcd" => {
-            let shards = partition_dual(&ds, p)?;
-            let results: Vec<Result<History>> = run_spmd(p, |rank, comm| {
-                let mut be = make_backend(cfg)?;
-                let sh = &shards[rank];
-                let out = bdcd::run(
-                    &sh.a_loc,
-                    &sh.y,
-                    sh.d_global,
-                    sh.d_offset,
-                    &opts,
-                    reference.as_ref(),
-                    comm,
-                    be.as_mut(),
-                )?;
-                Ok(out.history)
-            });
-            collect(results)?
-        }
-        "cg" => {
-            let shards = partition_primal(&ds, p)?;
-            let cg_opts = cg::CgOpts {
-                lam,
-                max_iters: cfg.solver.iters,
-                tol: cfg.solver.tol.unwrap_or(1e-12),
-                record_every: cfg.solver.record_every,
-            };
-            let results: Vec<Result<History>> = run_spmd(p, |rank, comm| {
-                let sh = &shards[rank];
-                let out = cg::run(
-                    &sh.a_loc,
-                    &sh.y_loc,
-                    sh.n_global,
-                    &cg_opts,
-                    reference.as_ref(),
-                    comm,
-                )?;
-                Ok(out.history)
-            });
-            collect(results)?
-        }
-        _ => unreachable!("validated"),
-    };
+        Ok(session.run()?.into_history())
+    });
+    let (history, meters) = collect(results)?;
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
 
     let (critical_msgs, critical_words) = CostMeter::critical_path(&meters);
@@ -179,6 +190,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
             use crate::prox::Regularizer;
             opts.reg.name().to_string()
         },
+        notes,
         wall_ms,
         final_obj_err: history.final_obj_err(),
         final_sol_err: history.final_sol_err(),
@@ -209,6 +221,7 @@ impl ExperimentReport {
                 ("nnz", num(r.nnz as f64)),
             ])
         }));
+        let notes = array(self.notes.iter().map(|s| string(s)));
         object(&[
             ("dataset", string(&self.dataset)),
             ("d", num(self.d as f64)),
@@ -221,6 +234,7 @@ impl ExperimentReport {
             ("backend", string(&self.backend)),
             ("overlap", num(if self.overlap { 1.0 } else { 0.0 })),
             ("reg", string(&self.reg)),
+            ("notes", notes),
             ("wall_ms", num(self.wall_ms)),
             ("iters", num(self.history.iters as f64)),
             ("allreduces", num(self.history.meter.allreduces as f64)),
@@ -285,6 +299,7 @@ mod tests {
                 overlap: false,
                 reg: "l2".into(),
                 l1_ratio: 0.5,
+                local_iters: 100,
             },
             run: RunConfig {
                 ranks,
@@ -302,6 +317,7 @@ mod tests {
         assert!(report.final_obj_err.is_finite());
         assert!(!report.history.records.is_empty());
         assert!(report.critical_msgs > 0, "P=2 must communicate");
+        assert!(report.notes.is_empty(), "l2 run should carry no advisories");
     }
 
     #[test]
@@ -343,6 +359,34 @@ mod tests {
     }
 
     #[test]
+    fn row_layout_experiment_matches_matched_layout() {
+        // The new driver-level bcdrow method: same trajectory as the
+        // matched-column layout under the same seed (Theorem 4/8), one
+        // all-to-all per outer iteration on the wire.
+        let col = run_experiment(&cfg("cabcd", 2)).unwrap();
+        let row = run_experiment(&cfg("cabcdrow", 2)).unwrap();
+        assert!(
+            (col.final_sol_err - row.final_sol_err).abs() < 1e-9,
+            "col {} vs row {}",
+            col.final_sol_err,
+            row.final_sol_err
+        );
+        assert_eq!(row.history.meter.all_to_alls as usize, 200 / 4);
+    }
+
+    #[test]
+    fn cocoa_experiment_runs_through_session() {
+        let mut c = cfg("cocoa", 2);
+        c.solver.iters = 30; // rounds
+        c.solver.local_iters = 50;
+        let report = run_experiment(&c).unwrap();
+        assert_eq!(report.method, "cocoa");
+        assert!(report.final_obj_err.is_finite());
+        // One allreduce per round.
+        assert_eq!(report.history.meter.allreduces, 30);
+    }
+
+    #[test]
     fn lasso_experiment_reports_prox_certificates() {
         let mut c = cfg("cabcd", 2);
         c.solver.reg = "l1".into();
@@ -353,11 +397,17 @@ mod tests {
         assert!(report.history.final_pen_obj().is_finite());
         assert!(report.history.final_gap().is_finite());
         assert!(report.history.final_nnz().is_some());
-        // The prox path skips the ridge reference entirely.
+        // The prox path skips the ridge reference entirely — and says so.
         assert!(report.history.records.is_empty());
+        assert!(
+            report.notes.iter().any(|n| n.contains("prox certificates")),
+            "missing the reference-skipped advisory: {:?}",
+            report.notes
+        );
         let json = report.to_json();
         assert!(json.contains("\"prox_records\""));
         assert!(json.contains("\"reg\":\"l1\""));
+        assert!(json.contains("\"notes\":["));
     }
 
     #[test]

@@ -30,6 +30,17 @@ pub struct DualShard {
     pub d_offset: usize,
 }
 
+/// One rank's shard for the row-layout primal solver (Theorem 4/8): a
+/// slab of full rows of X plus the y slice for the canonical column range
+/// the rank owns.
+#[derive(Clone, Debug)]
+pub struct RowShard {
+    pub x_rows: Matrix,
+    pub y_loc: Vec<f64>,
+    pub d_global: usize,
+    pub d_offset: usize,
+}
+
 /// 1D-block-column partition of X for BCD/CA-BCD/CG.
 pub fn partition_primal(ds: &Dataset, p: usize) -> Result<Vec<PrimalShard>> {
     let n = ds.n();
@@ -60,6 +71,34 @@ pub fn partition_dual(ds: &Dataset, p: usize) -> Result<Vec<DualShard>> {
             y: ds.y.clone(),
             d_global: d,
             d_offset: lo,
+        });
+    }
+    Ok(shards)
+}
+
+/// 1D-block-row partition of X for the Theorem-4/8 row-layout solver:
+/// rank r gets the canonical row range of X — in X's **native storage**
+/// (a CSR dataset stays sparse; the per-iteration redistribution reads
+/// row segments through `gather_row_segment`, which handles both kinds)
+/// — and the y slice of the canonical column range
+/// `BlockPartition::new(n, P)`.
+pub fn partition_rows(ds: &Dataset, p: usize) -> Result<Vec<RowShard>> {
+    let d = ds.d();
+    let n = ds.n();
+    let row_part = BlockPartition::new(d, p);
+    let col_part = BlockPartition::new(n, p);
+    // Row range of X = column range of Xᵀ, transposed back — stays in the
+    // dataset's storage format (one O(nnz) transpose shared by all ranks).
+    let xt = ds.x.transpose();
+    let mut shards = Vec::with_capacity(p);
+    for rank in 0..p {
+        let (rlo, rhi) = row_part.range(rank);
+        let (clo, chi) = col_part.range(rank);
+        shards.push(RowShard {
+            x_rows: xt.slice_cols(rlo, rhi)?.transpose(),
+            y_loc: ds.y[clo..chi].to_vec(),
+            d_global: d,
+            d_offset: rlo,
         });
     }
     Ok(shards)

@@ -1,0 +1,733 @@
+#![warn(missing_docs)]
+//! Unified s-step solver engine: the [`Problem`]/[`Session`] API and the
+//! shared pipeline core every CA method runs through.
+//!
+//! The paper's four methods (and the CA-Prox pair from arXiv:1712.06047)
+//! are all the same s-step shape — shared-seed sample, local packed Gram,
+//! one collective, redundant inner solve, deferred update. This module
+//! owns that shape **once**:
+//!
+//! * [`Problem`] — what is being solved: the rank's data shard, labels,
+//!   global dimensions, and the optional ridge ground-truth
+//!   [`Reference`]. The regularizer rides in
+//!   [`SolverOpts::reg`](crate::solvers::SolverOpts).
+//! * [`Session`] — how to solve it: a builder binding a problem to
+//!   [`SolverOpts`], a [`Method`], a
+//!   [`ComputeBackend`](crate::gram::ComputeBackend), and a
+//!   [`Communicator`]; [`Session::run`] dispatches to the method's
+//!   [`CaStep`] and drives it through the one pipeline core
+//!   ([`step::drive`]).
+//! * [`Method`] — the parsed method selector (replaces the stringly
+//!   `match cfg.solver.method.as_str()` driver dispatch; unknown strings
+//!   fail at config load).
+//! * [`CaStep`] — the per-method seam (`sample`, `local_gram`,
+//!   `local_state`, `inner_solve`, `apply`, …); implemented by
+//!   `solvers::{bcd, bdcd, bcd_row, cocoa}` and `prox::{bcd, bdcd}`.
+//!
+//! # Migration example
+//!
+//! The pre-engine free functions survive as thin wrappers, so this:
+//!
+//! ```ignore
+//! let out = bcd::run(&x_loc, &y_loc, n, &opts, Some(&r), comm, be)?;
+//! ```
+//!
+//! is now equivalent to:
+//!
+//! ```ignore
+//! use cabcd::engine::{Method, Problem, Session};
+//! let problem = Problem::primal(&x_loc, &y_loc, n).with_reference(Some(&r));
+//! let out = Session::new(&problem)
+//!     .opts(opts.clone())
+//!     .method(Method::CaBcd)
+//!     .backend(be)
+//!     .comm(comm)
+//!     .run()?
+//!     .into_primal()?;
+//! ```
+//!
+//! Every solver's trajectory and per-rank wire counts are bitwise
+//! identical to the pre-engine per-solver loops (frozen copies of which
+//! are asserted against in `rust/tests/engine_equivalence.rs`).
+
+pub mod step;
+
+pub use step::{drive, CaStep, Sample};
+
+use crate::comm::Communicator;
+use crate::error::{Error, Result};
+use crate::gram::ComputeBackend;
+use crate::matrix::Matrix;
+use crate::metrics::{History, Reference};
+use crate::prox::Regularizer;
+use crate::solvers::cg::{self, CgOpts, CgOutput};
+use crate::solvers::cocoa::{self, CocoaOpts, CocoaOutput};
+use crate::solvers::{bcd, bcd_row, bdcd, DualOutput, PrimalOutput, SolverOpts};
+
+/// Parsed solver-method selector — the driver dispatches on this enum
+/// instead of matching raw config strings, so an unknown method fails at
+/// config load, not deep inside the experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Classical primal BCD (Algorithm 1; the engine forces `s` to 1).
+    Bcd,
+    /// Communication-avoiding primal BCD (Algorithm 2).
+    CaBcd,
+    /// Classical dual BDCD (Algorithm 3; the engine forces `s` to 1).
+    Bdcd,
+    /// Communication-avoiding dual BDCD (Algorithm 4).
+    CaBdcd,
+    /// Primal BCD under the mismatched 1D-block-row layout (Theorem 4;
+    /// the engine forces `s` to 1).
+    BcdRow,
+    /// CA primal BCD under the 1D-block-row layout (Theorem 8).
+    CaBcdRow,
+    /// The CoCoA-style local-solve + average baseline (§1 contrast).
+    Cocoa,
+    /// Conjugate gradients on the regularized normal equations (the
+    /// Krylov baseline and ground-truth source).
+    Cg,
+}
+
+impl Method {
+    /// Parse a config-file method string; unknown strings error loudly.
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "bcd" => Method::Bcd,
+            "cabcd" => Method::CaBcd,
+            "bdcd" => Method::Bdcd,
+            "cabdcd" => Method::CaBdcd,
+            "bcdrow" => Method::BcdRow,
+            "cabcdrow" => Method::CaBcdRow,
+            "cocoa" => Method::Cocoa,
+            "cg" => Method::Cg,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown method {other:?} (want bcd|cabcd|bdcd|cabdcd|\
+                     bcdrow|cabcdrow|cocoa|cg)"
+                )))
+            }
+        })
+    }
+
+    /// Canonical config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Bcd => "bcd",
+            Method::CaBcd => "cabcd",
+            Method::Bdcd => "bdcd",
+            Method::CaBdcd => "cabdcd",
+            Method::BcdRow => "bcdrow",
+            Method::CaBcdRow => "cabcdrow",
+            Method::Cocoa => "cocoa",
+            Method::Cg => "cg",
+        }
+    }
+
+    /// Whether this is a communication-avoiding variant (honours the
+    /// configured loop-blocking factor `s`; classical variants force 1).
+    pub fn is_ca(&self) -> bool {
+        matches!(self, Method::CaBcd | Method::CaBdcd | Method::CaBcdRow)
+    }
+
+    /// The shard layout this method consumes (drives partitioning).
+    pub fn layout(&self) -> Layout {
+        match self {
+            Method::Bcd | Method::CaBcd | Method::Cocoa | Method::Cg => Layout::PrimalCols,
+            Method::Bdcd | Method::CaBdcd => Layout::DualCols,
+            Method::BcdRow | Method::CaBcdRow => Layout::PrimalRows,
+        }
+    }
+
+    /// Whether [`Session::run`] requires a compute backend (CG and CoCoA
+    /// run on plain matvecs).
+    pub fn needs_backend(&self) -> bool {
+        !matches!(self, Method::Cg | Method::Cocoa)
+    }
+
+    /// Whether this method supports non-smooth regularizers via the
+    /// CA-Prox loops (only the matched-layout BCD/BDCD pairs do).
+    pub fn supports_prox(&self) -> bool {
+        matches!(
+            self,
+            Method::Bcd | Method::CaBcd | Method::Bdcd | Method::CaBdcd
+        )
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Method> {
+        Method::parse(s)
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The shard layout a [`Method`] consumes (see [`Method::layout`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// 1D-block-column partition of X (matched primal layout).
+    PrimalCols,
+    /// 1D-block-column partition of `A = Xᵀ` (matched dual layout).
+    DualCols,
+    /// 1D-block-row partition of X (the Theorem-4 mismatched layout).
+    PrimalRows,
+}
+
+/// One rank's view of the problem data, in one of the three layouts.
+#[derive(Clone, Copy, Debug)]
+pub enum Shard<'a> {
+    /// Matched primal layout: `a_loc` is the rank's `d × n_loc` column
+    /// block of X, `y_loc` the matching label slice.
+    PrimalCols {
+        /// Local column block of X.
+        a_loc: &'a Matrix,
+        /// Local slice of the labels.
+        y_loc: &'a [f64],
+        /// Total number of data points n.
+        n_global: usize,
+    },
+    /// Matched dual layout: `a_loc` is the rank's `n × d_loc` column
+    /// block of `A = Xᵀ` (a feature slice); `y` is replicated.
+    DualCols {
+        /// Local column block of `A = Xᵀ`.
+        a_loc: &'a Matrix,
+        /// Full (replicated) label vector.
+        y: &'a [f64],
+        /// Total feature dimension d.
+        d_global: usize,
+        /// Global index of this rank's first feature column.
+        d_offset: usize,
+    },
+    /// Mismatched 1D-block-row layout: `x_rows` is the rank's
+    /// `d_loc × n` slab of full rows of X; `y_loc` covers the canonical
+    /// column range this rank owns.
+    PrimalRows {
+        /// Local row slab of X.
+        x_rows: &'a Matrix,
+        /// Label slice for this rank's canonical column range.
+        y_loc: &'a [f64],
+        /// Total feature dimension d.
+        d_global: usize,
+        /// Global index of this rank's first row.
+        d_offset: usize,
+    },
+}
+
+/// What is being solved: one rank's data shard plus the optional ridge
+/// ground truth. The regularizer ψ(w) rides in [`SolverOpts::reg`], so a
+/// `Problem` + [`SolverOpts`] fully determine the objective.
+#[derive(Clone, Copy, Debug)]
+pub struct Problem<'a> {
+    /// This rank's data shard.
+    pub shard: Shard<'a>,
+    /// Optional `w_opt`/`f_opt` ground truth for error recording
+    /// (smooth/ridge runs only; the prox loops record certificates).
+    pub reference: Option<&'a Reference>,
+}
+
+impl<'a> Problem<'a> {
+    /// Matched primal layout problem (see [`Shard::PrimalCols`]).
+    pub fn primal(a_loc: &'a Matrix, y_loc: &'a [f64], n_global: usize) -> Problem<'a> {
+        Problem {
+            shard: Shard::PrimalCols {
+                a_loc,
+                y_loc,
+                n_global,
+            },
+            reference: None,
+        }
+    }
+
+    /// Matched dual layout problem (see [`Shard::DualCols`]).
+    pub fn dual(
+        a_loc: &'a Matrix,
+        y: &'a [f64],
+        d_global: usize,
+        d_offset: usize,
+    ) -> Problem<'a> {
+        Problem {
+            shard: Shard::DualCols {
+                a_loc,
+                y,
+                d_global,
+                d_offset,
+            },
+            reference: None,
+        }
+    }
+
+    /// Mismatched 1D-block-row layout problem (see [`Shard::PrimalRows`]).
+    pub fn primal_rows(
+        x_rows: &'a Matrix,
+        y_loc: &'a [f64],
+        d_global: usize,
+        d_offset: usize,
+    ) -> Problem<'a> {
+        Problem {
+            shard: Shard::PrimalRows {
+                x_rows,
+                y_loc,
+                d_global,
+                d_offset,
+            },
+            reference: None,
+        }
+    }
+
+    /// Attach (or clear) the ridge ground truth for error recording.
+    pub fn with_reference(mut self, reference: Option<&'a Reference>) -> Problem<'a> {
+        self.reference = reference;
+        self
+    }
+
+    /// The default method for this shard's layout (the CA variant).
+    fn default_method(&self) -> Method {
+        match self.shard {
+            Shard::PrimalCols { .. } => Method::CaBcd,
+            Shard::DualCols { .. } => Method::CaBdcd,
+            Shard::PrimalRows { .. } => Method::CaBcdRow,
+        }
+    }
+}
+
+/// The result of a [`Session::run`], one variant per output shape.
+#[derive(Clone, Debug)]
+pub enum Solution {
+    /// Matched-layout primal solvers (BCD / CA-BCD / CA-Prox-BCD).
+    Primal(PrimalOutput),
+    /// Matched-layout dual solvers (BDCD / CA-BDCD / CA-Prox-BDCD).
+    Dual(DualOutput),
+    /// Row-layout primal solver (Theorem 4/8).
+    RowPrimal(bcd_row::RowPrimalOutput),
+    /// The CoCoA baseline.
+    Cocoa(CocoaOutput),
+    /// The CG baseline.
+    Cg(CgOutput),
+}
+
+impl Solution {
+    /// The run's trajectory + communication accounting, whatever the
+    /// method.
+    pub fn history(&self) -> &History {
+        match self {
+            Solution::Primal(o) => &o.history,
+            Solution::Dual(o) => &o.history,
+            Solution::RowPrimal(o) => &o.history,
+            Solution::Cocoa(o) => &o.history,
+            Solution::Cg(o) => &o.history,
+        }
+    }
+
+    /// Consume the solution, keeping only the history.
+    pub fn into_history(self) -> History {
+        match self {
+            Solution::Primal(o) => o.history,
+            Solution::Dual(o) => o.history,
+            Solution::RowPrimal(o) => o.history,
+            Solution::Cocoa(o) => o.history,
+            Solution::Cg(o) => o.history,
+        }
+    }
+
+    /// Unwrap a matched-layout primal output.
+    pub fn into_primal(self) -> Result<PrimalOutput> {
+        match self {
+            Solution::Primal(o) => Ok(o),
+            other => Err(Error::InvalidArg(format!(
+                "expected a primal solution, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Unwrap a matched-layout dual output.
+    pub fn into_dual(self) -> Result<DualOutput> {
+        match self {
+            Solution::Dual(o) => Ok(o),
+            other => Err(Error::InvalidArg(format!(
+                "expected a dual solution, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Unwrap a row-layout primal output.
+    pub fn into_row_primal(self) -> Result<bcd_row::RowPrimalOutput> {
+        match self {
+            Solution::RowPrimal(o) => Ok(o),
+            other => Err(Error::InvalidArg(format!(
+                "expected a row-layout solution, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Unwrap a CoCoA output.
+    pub fn into_cocoa(self) -> Result<CocoaOutput> {
+        match self {
+            Solution::Cocoa(o) => Ok(o),
+            other => Err(Error::InvalidArg(format!(
+                "expected a CoCoA solution, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Unwrap a CG output.
+    pub fn into_cg(self) -> Result<CgOutput> {
+        match self {
+            Solution::Cg(o) => Ok(o),
+            other => Err(Error::InvalidArg(format!(
+                "expected a CG solution, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Solution::Primal(_) => "primal",
+            Solution::Dual(_) => "dual",
+            Solution::RowPrimal(_) => "row-primal",
+            Solution::Cocoa(_) => "cocoa",
+            Solution::Cg(_) => "cg",
+        }
+    }
+}
+
+/// Builder binding a [`Problem`] to options, method, backend, and
+/// communicator; [`Session::run`] is the single entry point every solver
+/// loop executes through.
+///
+/// ```ignore
+/// let sol = Session::new(&problem)
+///     .opts(opts)
+///     .backend(&mut backend)
+///     .comm(&mut comm)
+///     .run()?;
+/// ```
+pub struct Session<'a, C: Communicator> {
+    problem: &'a Problem<'a>,
+    opts: SolverOpts,
+    method: Option<Method>,
+    local_iters: usize,
+    backend: Option<&'a mut dyn ComputeBackend>,
+    comm: Option<&'a mut C>,
+}
+
+impl<'a, C: Communicator> Session<'a, C> {
+    /// Start a session on `problem`. The method defaults to the CA
+    /// variant matching the shard layout.
+    pub fn new(problem: &'a Problem<'a>) -> Session<'a, C> {
+        Session {
+            problem,
+            opts: SolverOpts::default(),
+            method: None,
+            local_iters: 100,
+            backend: None,
+            comm: None,
+        }
+    }
+
+    /// Set the solver options (block size, s, λ, iters, overlap, reg, …).
+    pub fn opts(mut self, opts: SolverOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Override the method (defaults to the shard layout's CA variant).
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = Some(method);
+        self
+    }
+
+    /// Local dual updates per round ([`Method::Cocoa`] only; default 100).
+    pub fn local_iters(mut self, local_iters: usize) -> Self {
+        self.local_iters = local_iters;
+        self
+    }
+
+    /// Attach the compute backend (required unless the method is CG or
+    /// CoCoA — see [`Method::needs_backend`]).
+    pub fn backend(mut self, backend: &'a mut dyn ComputeBackend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Attach this rank's communicator (always required).
+    pub fn comm(mut self, comm: &'a mut C) -> Self {
+        self.comm = Some(comm);
+        self
+    }
+
+    /// Dispatch to the method's [`CaStep`] and run it through the shared
+    /// pipeline core. Non-smooth regularizers route the matched-layout
+    /// BCD/BDCD methods through the CA-Prox steps (same packed `[G|r]`
+    /// payload, same H/s collective count); `reg = l2` takes the exact
+    /// Cholesky steps bitwise-unchanged (the L2 escape hatch).
+    pub fn run(self) -> Result<Solution> {
+        let problem = self.problem;
+        let method = self.method.unwrap_or_else(|| problem.default_method());
+        let comm = self
+            .comm
+            .ok_or_else(|| Error::InvalidArg("Session needs .comm(…)".into()))?;
+        // The classical variants run the s = 1 algorithm regardless of the
+        // configured loop-blocking factor — only the CA methods honour it
+        // (CoCoA and CG have no s-step structure to force).
+        let mut opts = self.opts;
+        if matches!(method, Method::Bcd | Method::Bdcd | Method::BcdRow) {
+            opts.s = 1;
+        }
+        let opts = &opts;
+        let prox = !opts.reg.is_exact_l2();
+        if prox && !method.supports_prox() {
+            return Err(Error::InvalidArg(format!(
+                "method {method} supports reg = l2 only; prox regularizers \
+                 run through bcd/cabcd/bdcd/cabdcd (matched layouts)"
+            )));
+        }
+        if prox && problem.reference.is_some() && comm.rank() == 0 {
+            // Satellite fix: the ridge reference does not apply on the
+            // prox path — say so instead of silently dropping it.
+            eprintln!(
+                "warning: reg = {} routes through the CA-Prox loop; the ridge \
+                 `reference` does not apply and is ignored (prox certificates \
+                 are recorded instead)",
+                opts.reg.name()
+            );
+        }
+        let mut backend = self.backend;
+        if method.needs_backend() && backend.is_none() {
+            return Err(Error::InvalidArg(format!(
+                "Session needs .backend(…) for method {method}"
+            )));
+        }
+
+        match (method, &problem.shard) {
+            (
+                Method::Bcd | Method::CaBcd,
+                Shard::PrimalCols {
+                    a_loc,
+                    y_loc,
+                    n_global,
+                },
+            ) => {
+                let be = backend.take().expect("backend checked above");
+                if prox {
+                    crate::prox::bcd::run(a_loc, y_loc, *n_global, opts, comm, be)
+                        .map(Solution::Primal)
+                } else {
+                    bcd::engine_run(a_loc, y_loc, *n_global, opts, problem.reference, comm, be)
+                        .map(Solution::Primal)
+                }
+            }
+            (
+                Method::Bdcd | Method::CaBdcd,
+                Shard::DualCols {
+                    a_loc,
+                    y,
+                    d_global,
+                    d_offset,
+                },
+            ) => {
+                let be = backend.take().expect("backend checked above");
+                if prox {
+                    crate::prox::bdcd::run(a_loc, y, *d_global, *d_offset, opts, comm, be)
+                        .map(Solution::Dual)
+                } else {
+                    bdcd::engine_run(
+                        a_loc,
+                        y,
+                        *d_global,
+                        *d_offset,
+                        opts,
+                        problem.reference,
+                        comm,
+                        be,
+                    )
+                    .map(Solution::Dual)
+                }
+            }
+            (
+                Method::BcdRow | Method::CaBcdRow,
+                Shard::PrimalRows {
+                    x_rows,
+                    y_loc,
+                    d_global,
+                    d_offset,
+                },
+            ) => {
+                let be = backend.take().expect("backend checked above");
+                bcd_row::engine_run(
+                    x_rows,
+                    y_loc,
+                    *d_global,
+                    *d_offset,
+                    opts,
+                    problem.reference,
+                    comm,
+                    be,
+                )
+                .map(Solution::RowPrimal)
+            }
+            (
+                Method::Cocoa,
+                Shard::PrimalCols {
+                    a_loc,
+                    y_loc,
+                    n_global,
+                },
+            ) => {
+                if self.local_iters == 0 {
+                    return Err(Error::InvalidArg(
+                        "CoCoA needs local_iters ≥ 1 (0 would allreduce \
+                         all-zero Δw every round)"
+                            .into(),
+                    ));
+                }
+                let copts = CocoaOpts {
+                    lam: opts.lam,
+                    rounds: opts.iters,
+                    local_iters: self.local_iters,
+                    seed: opts.seed,
+                    record_every: opts.record_every,
+                    overlap: opts.overlap,
+                };
+                cocoa::run(a_loc, y_loc, *n_global, &copts, problem.reference, comm)
+                    .map(Solution::Cocoa)
+            }
+            (
+                Method::Cg,
+                Shard::PrimalCols {
+                    a_loc,
+                    y_loc,
+                    n_global,
+                },
+            ) => {
+                let copts = CgOpts {
+                    lam: opts.lam,
+                    max_iters: opts.iters,
+                    tol: opts.tol.unwrap_or(1e-12),
+                    record_every: opts.record_every,
+                };
+                cg::run(a_loc, y_loc, *n_global, &copts, problem.reference, comm)
+                    .map(Solution::Cg)
+            }
+            (method, shard) => Err(Error::InvalidArg(format!(
+                "method {method} needs a {:?} shard, got {:?}",
+                method.layout(),
+                match shard {
+                    Shard::PrimalCols { .. } => Layout::PrimalCols,
+                    Shard::DualCols { .. } => Layout::DualCols,
+                    Shard::PrimalRows { .. } => Layout::PrimalRows,
+                }
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SerialComm;
+    use crate::gram::NativeBackend;
+    use crate::matrix::DenseMatrix;
+
+    fn toy() -> (Matrix, Vec<f64>) {
+        let mut st = 77u64;
+        let data: Vec<f64> = (0..6 * 40)
+            .map(|_| {
+                st ^= st << 13;
+                st ^= st >> 7;
+                st ^= st << 17;
+                (st as f64 / u64::MAX as f64) - 0.5
+            })
+            .collect();
+        let x = Matrix::Dense(DenseMatrix::from_vec(6, 40, data));
+        let mut y = vec![0.0; 40];
+        x.matvec_t(&[1.0; 6], &mut y).unwrap();
+        (x, y)
+    }
+
+    #[test]
+    fn method_parsing_round_trips_and_rejects_unknown() {
+        for m in [
+            Method::Bcd,
+            Method::CaBcd,
+            Method::Bdcd,
+            Method::CaBdcd,
+            Method::BcdRow,
+            Method::CaBcdRow,
+            Method::Cocoa,
+            Method::Cg,
+        ] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("sgd").is_err());
+        assert!("cabcd".parse::<Method>().unwrap().is_ca());
+        assert!(!"bcd".parse::<Method>().unwrap().is_ca());
+    }
+
+    #[test]
+    fn session_defaults_to_layout_ca_method() {
+        let (x, y) = toy();
+        let problem = Problem::primal(&x, &y, 40);
+        let opts = SolverOpts::builder().b(2).s(3).lam(0.05).iters(12).build();
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let sol = Session::new(&problem)
+            .opts(opts)
+            .backend(&mut be)
+            .comm(&mut comm)
+            .run()
+            .unwrap();
+        assert!(matches!(sol, Solution::Primal(_)));
+    }
+
+    #[test]
+    fn session_rejects_layout_mismatch_and_missing_backend() {
+        let (x, y) = toy();
+        let problem = Problem::primal(&x, &y, 40);
+        let mut comm = SerialComm::new();
+        let err = Session::new(&problem)
+            .method(Method::CaBdcd)
+            .backend(&mut NativeBackend::new())
+            .comm(&mut comm)
+            .run();
+        assert!(err.is_err(), "dual method on a primal shard must fail");
+        let err = Session::new(&problem)
+            .method(Method::CaBcd)
+            .comm(&mut comm)
+            .run();
+        assert!(err.is_err(), "missing backend must fail");
+    }
+
+    #[test]
+    fn session_matches_wrapper_entry_point() {
+        let (x, y) = toy();
+        let opts = SolverOpts::builder().b(2).s(2).lam(0.05).iters(20).build();
+        let mut comm = SerialComm::new();
+        let mut be = NativeBackend::new();
+        let w_wrapper = bcd::run(&x, &y, 40, &opts, None, &mut comm, &mut be)
+            .unwrap()
+            .w;
+        let problem = Problem::primal(&x, &y, 40);
+        let w_session = Session::new(&problem)
+            .opts(opts)
+            .backend(&mut be)
+            .comm(&mut comm)
+            .run()
+            .unwrap()
+            .into_primal()
+            .unwrap()
+            .w;
+        assert_eq!(w_wrapper, w_session);
+    }
+}

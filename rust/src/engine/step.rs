@@ -1,0 +1,391 @@
+//! The shared s-step pipeline core: the [`CaStep`] method seam and the
+//! [`drive`] outer loop that owns, exactly once, everything the six solver
+//! loops used to duplicate — scratch-buffer hoisting, the collective
+//! schedule (blocking and overlapped), condition tracking, the
+//! `should_record` cadence, tolerance-based early stop, and the final
+//! [`CostMeter`](crate::comm::CostMeter) snapshot.
+//!
+//! # The s-step shape
+//!
+//! Every CA method in this repo — BCD, BDCD, the Theorem-4 row-layout
+//! BCD, CoCoA, and the CA-Prox pair — is the same outer iteration:
+//!
+//! 1. **sample**: draw this iteration's shared-seed coordinate blocks
+//!    (zero communication, §3.1 of the paper);
+//! 2. **local gram**: the sample-dependent (but *state-independent*) part
+//!    of the collective payload — the packed Gram triangle;
+//! 3. **local state**: the state-dependent payload tail (the residual
+//!    `r`, the piggybacked `w` contribution, CoCoA's Δw);
+//! 4. **one collective** (the method's only communication);
+//! 5. **inner solve** on the reduced payload, replicated on every rank;
+//! 6. **apply** the deferred updates.
+//!
+//! [`drive`] runs that loop under two schedules selected by
+//! [`SolverOpts::overlap`]:
+//!
+//! * **blocking** — `allreduce_sum` between steps 3 and 5;
+//! * **overlapped** — the payload reduces through the non-blocking
+//!   `iallreduce_start`/`iallreduce_wait` pair while the rank computes.
+//!   When the step's [`CaStep::prefetch_gram`] is true, the engine
+//!   software-pipelines the *next* iteration's `local_gram` (legal
+//!   because it never reads the evolving α/w state) under the in-flight
+//!   reduction — the dominant flop cost hides the reduction latency.
+//!   Steps whose gram is not prefetchable still get
+//!   [`CaStep::hidden_work`] (overlap-tensor assembly, block gathers,
+//!   CoCoA's dual-block commit) hidden under the in-flight collective.
+//!
+//! Both schedules issue the same collectives on the same payloads in the
+//! same per-operation element order, so trajectories are **bitwise
+//! identical** across schedules and to the pre-engine per-solver loops
+//! (asserted against frozen copies of those loops in
+//! `rust/tests/engine_equivalence.rs`).
+
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::metrics::History;
+use crate::solvers::common::{cond_stride, packed_gram_cond, should_record, SolverOpts};
+
+/// One outer iteration's shared-seed sample: the `s` drawn blocks of `b`
+/// coordinates plus their flattened kernel-order index list.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Outer-iteration index this sample belongs to (strictly increasing;
+    /// under the prefetch schedule sample `k+1` is drawn while iteration
+    /// `k`'s reduction is still in flight).
+    pub k: usize,
+    /// The `s` sampled blocks, each `b` distinct coordinate indices.
+    pub blocks: Vec<Vec<usize>>,
+    /// The blocks flattened into the contiguous layout every
+    /// [`crate::gram::ComputeBackend`] kernel consumes.
+    pub idx: Vec<usize>,
+}
+
+impl Sample {
+    /// Build a sample from drawn blocks, flattening them into `idx`.
+    pub fn flatten(k: usize, blocks: Vec<Vec<usize>>, b: usize) -> Sample {
+        let mut idx = vec![0usize; blocks.len() * b];
+        crate::solvers::common::flatten_blocks(&blocks, b, &mut idx);
+        Sample { k, blocks, idx }
+    }
+
+    /// An empty sample for methods that do not draw shared-seed blocks
+    /// (CoCoA samples rank-locally inside its local phase).
+    pub fn empty(k: usize) -> Sample {
+        Sample {
+            k,
+            blocks: Vec::new(),
+            idx: Vec::new(),
+        }
+    }
+}
+
+/// One CA method's per-iteration callbacks, driven by [`drive`].
+///
+/// The engine owns the outer loop, the payload buffer (`[gram | state]`,
+/// hoisted once in blocking mode, pooled ping-pong under the prefetch
+/// schedule), the collective, condition tracking, record cadence, and
+/// early stop; the step owns the method's math and iterate state.
+///
+/// Contract for bitwise schedule-equivalence (every implementor must
+/// uphold it; the engine relies on it to reorder work across schedules):
+///
+/// * [`CaStep::sample`] is called exactly once per outer iteration, in
+///   increasing `k` order, but possibly *before* iteration `k−1` has
+///   applied its update — it must not read iterate state.
+/// * [`CaStep::local_gram`] must be a pure function of the data shard and
+///   the sample when [`CaStep::prefetch_gram`] is true (the engine then
+///   calls it one iteration ahead, under the in-flight reduction).
+/// * [`CaStep::local_state`] and [`CaStep::apply`] run strictly in
+///   iteration order.
+/// * [`CaStep::hidden_work`] must not depend on the reduced payload (it
+///   runs while the collective is in flight under the overlap schedules)
+///   and must not touch state that `local_gram` reads.
+pub trait CaStep<C: Communicator> {
+    /// `(gram_words, state_words)` split of the collective payload; the
+    /// engine allocates `gram_words + state_words` and passes the two
+    /// disjoint slices to [`CaStep::local_gram`] / [`CaStep::local_state`].
+    fn payload_split(&self) -> (usize, usize);
+
+    /// True when [`CaStep::local_gram`] depends only on the data shard and
+    /// the shared-seed sample stream — the overlap schedule then
+    /// prefetches the next iteration's gram under the in-flight reduction.
+    fn prefetch_gram(&self) -> bool {
+        false
+    }
+
+    /// Draw outer iteration `k`'s sample. `comm` is available so layouts
+    /// that redistribute sampled data (the Theorem-4 all-to-all) can post
+    /// their exchange as soon as the sample exists.
+    fn sample(&mut self, comm: &mut C, k: usize) -> Result<Sample>;
+
+    /// Fill the sample-dependent payload head (the packed Gram triangle).
+    fn local_gram(&mut self, comm: &mut C, smp: &Sample, head: &mut [f64]) -> Result<()>;
+
+    /// Fill the state-dependent payload tail (residual / `w` piggyback /
+    /// Δw) immediately before the collective.
+    fn local_state(&mut self, smp: &Sample, tail: &mut [f64]) -> Result<()>;
+
+    /// Fill the whole payload in one shot — the hook the blocking and
+    /// non-prefetch overlap schedules use (gram and state are produced
+    /// for the *same* iteration there, so a backend's fused
+    /// Gram+residual kernel can serve both in one pass; the XLA backend
+    /// executes one artifact instead of two). The prefetch schedule
+    /// cannot use it (gram is computed one iteration ahead) and calls
+    /// the split methods instead. Must produce bitwise-identical
+    /// payloads to `local_gram` + `local_state`.
+    fn local_payload(
+        &mut self,
+        comm: &mut C,
+        smp: &Sample,
+        head: &mut [f64],
+        tail: &mut [f64],
+    ) -> Result<()> {
+        self.local_gram(comm, smp, head)?;
+        self.local_state(smp, tail)
+    }
+
+    /// Sample-only work the overlap schedules hide under the in-flight
+    /// collective (overlap-tensor assembly, iterate block gathers); the
+    /// blocking schedule runs it between the collective and the solve.
+    fn hidden_work(&mut self, smp: &Sample) -> Result<()>;
+
+    /// `(scale, shift)` of the Gram conditioning probe
+    /// `scale·G + shift·I` ([`SolverOpts::track_gram_cond`]), or `None`
+    /// when the method does not track conditioning.
+    fn cond_probe(&self) -> Option<(f64, f64)> {
+        None
+    }
+
+    /// Replicated inner solve on the reduced payload; returns the flat
+    /// `s·b` update vector. Returning an **empty** vector means the solve
+    /// is the identity — the engine then passes the reduced payload tail
+    /// straight to [`CaStep::apply`] (CoCoA's Δw combine takes this
+    /// zero-copy path).
+    fn inner_solve(&mut self, smp: &Sample, head: &[f64], tail: &[f64]) -> Result<Vec<f64>>;
+
+    /// Apply the deferred updates to the iterate state.
+    fn apply(&mut self, smp: &Sample, deltas: &[f64]) -> Result<()>;
+
+    /// Record convergence metrics at inner-iteration `h_now` (0 = before
+    /// the first iteration). Metric communication must be meter-excluded
+    /// (see [`crate::solvers::common::metered_out`]).
+    fn record(&mut self, comm: &mut C, history: &mut History, h_now: usize) -> Result<()>;
+
+    /// Whether the latest record satisfies the early-stop tolerance.
+    fn converged(&self, history: &History, tol: f64) -> bool {
+        let _ = (history, tol);
+        false
+    }
+
+    /// Drain any method-internal in-flight operations (e.g. the row
+    /// layout's look-ahead all-to-all) — called once after the outer loop,
+    /// including after a tolerance-triggered early stop.
+    fn flush(&mut self, comm: &mut C) -> Result<()> {
+        let _ = comm;
+        Ok(())
+    }
+}
+
+/// Gram conditioning sampler owned by [`drive`]: probe parameters, the
+/// sampling stride, and the mirror scratch, bundled so the per-iteration
+/// check stays one call.
+struct CondTracker {
+    probe: Option<(f64, f64)>,
+    stride: usize,
+    sb: usize,
+    scratch: Vec<f64>,
+}
+
+impl CondTracker {
+    fn new<C: Communicator, S: CaStep<C> + ?Sized>(
+        step: &S,
+        opts: &SolverOpts,
+        sb: usize,
+        outer: usize,
+    ) -> CondTracker {
+        let probe = if opts.track_gram_cond {
+            step.cond_probe()
+        } else {
+            None
+        };
+        CondTracker {
+            scratch: if probe.is_some() {
+                vec![0.0; sb * sb]
+            } else {
+                Vec::new()
+            },
+            stride: cond_stride(sb, outer),
+            sb,
+            probe,
+        }
+    }
+
+    /// Push the conditioning sample for outer iteration `k` if due.
+    fn check(&mut self, history: &mut History, k: usize, buf: &[f64]) {
+        if let Some((scale, shift)) = self.probe {
+            if k % self.stride == 0 {
+                history.gram_conds.push(packed_gram_cond(
+                    buf,
+                    self.sb,
+                    scale,
+                    shift,
+                    &mut self.scratch,
+                ));
+            }
+        }
+    }
+}
+
+/// Replicated solve + deferred update on the reduced payload. An empty
+/// `inner_solve` result is the identity solve: the reduced state tail is
+/// applied directly (no copy).
+fn solve_apply<C: Communicator, S: CaStep<C> + ?Sized>(
+    step: &mut S,
+    smp: &Sample,
+    buf: &[f64],
+    head: usize,
+) -> Result<()> {
+    let deltas = step.inner_solve(smp, &buf[..head], &buf[head..])?;
+    if deltas.is_empty() {
+        step.apply(smp, &buf[head..])
+    } else {
+        step.apply(smp, &deltas)
+    }
+}
+
+/// Outer-boundary bookkeeping: advance `history.iters`, record on the
+/// shared cadence, and report whether the tolerance stop fired.
+fn boundary<C: Communicator, S: CaStep<C> + ?Sized>(
+    step: &mut S,
+    opts: &SolverOpts,
+    comm: &mut C,
+    history: &mut History,
+    k: usize,
+    outer: usize,
+) -> Result<bool> {
+    let h_now = (k + 1) * opts.s;
+    history.iters = h_now;
+    if should_record(h_now, opts.s, opts) || k + 1 == outer {
+        step.record(comm, history, h_now)?;
+        if let Some(tol) = opts.tol {
+            if step.converged(history, tol) {
+                return Ok(true);
+            }
+        }
+    }
+    Ok(false)
+}
+
+/// Run one CA method's outer loop end to end: the single implementation
+/// of the s-step schedule shared by all six solver loops (see the module
+/// docs for the schedule definitions and the bitwise-equivalence
+/// contract). On return, `history` holds the trajectory and this rank's
+/// solver-traffic [`CostMeter`](crate::comm::CostMeter) snapshot.
+pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
+    step: &mut S,
+    opts: &SolverOpts,
+    comm: &mut C,
+    history: &mut History,
+) -> Result<()> {
+    let (head, tail) = step.payload_split();
+    let total = head + tail;
+    let outer = opts.outer_iters();
+    let sb = opts.s * opts.b;
+    let mut cond = CondTracker::new::<C, S>(&*step, opts, sb, outer);
+
+    step.record(comm, history, 0)?;
+
+    if opts.overlap && step.prefetch_gram() && outer > 0 {
+        // Prefetch schedule. Pipeline prologue: gram 0 is computed before
+        // the loop; thereafter gram k+1 is computed under the in-flight
+        // reduction of [gram_k | state_k]. Payload buffers ping-pong
+        // through the communicator's rank-local pool.
+        let mut smp_cur = step.sample(comm, 0)?;
+        let mut next_buf = comm.take_buf(total);
+        step.local_gram(comm, &smp_cur, &mut next_buf[..head])?;
+        'outer_loop: for k in 0..outer {
+            let mut buf = std::mem::take(&mut next_buf); // holds gram_k
+            step.local_state(&smp_cur, &mut buf[head..])?;
+
+            // THE communication of this outer iteration — non-blocking.
+            let handle = comm.iallreduce_start(buf)?;
+
+            // ---- local work hidden behind the in-flight reduction ------
+            let mut pending: Option<Sample> = None;
+            if k + 1 < outer {
+                let nxt = step.sample(comm, k + 1)?;
+                next_buf = comm.take_buf(total);
+                step.local_gram(comm, &nxt, &mut next_buf[..head])?;
+                pending = Some(nxt);
+            }
+            step.hidden_work(&smp_cur)?;
+            // ------------------------------------------------------------
+            let buf = comm.iallreduce_wait(handle)?;
+
+            cond.check(history, k, &buf);
+            solve_apply::<C, S>(step, &smp_cur, &buf, head)?;
+            comm.give_buf(buf);
+
+            if let Some(nxt) = pending {
+                smp_cur = nxt; // rotate the pipeline
+            }
+            if boundary(step, opts, comm, history, k, outer)? {
+                break 'outer_loop;
+            }
+        }
+        if !next_buf.is_empty() {
+            // Early stop left a prefetched gram in flight-side storage.
+            comm.give_buf(next_buf);
+        }
+    } else if opts.overlap {
+        // Non-prefetch overlap: the payload is produced in iteration
+        // order, but the reduction is non-blocking with `hidden_work`
+        // running under it.
+        let mut buf = vec![0.0; total];
+        'outer_loop2: for k in 0..outer {
+            let smp = step.sample(comm, k)?;
+            {
+                let (h, t) = buf.split_at_mut(head);
+                step.local_payload(comm, &smp, h, t)?;
+            }
+            // Move the hoisted buffer into the handle and take it back
+            // reduced — no payload copies on the hot path.
+            let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
+            step.hidden_work(&smp)?;
+            buf = comm.iallreduce_wait(handle)?;
+
+            cond.check(history, k, &buf);
+            solve_apply::<C, S>(step, &smp, &buf, head)?;
+
+            if boundary(step, opts, comm, history, k, outer)? {
+                break 'outer_loop2;
+            }
+        }
+    } else {
+        // Blocking schedule: one hoisted payload buffer, `allreduce_sum`,
+        // hidden work between the collective and the solve.
+        let mut buf = vec![0.0; total];
+        'outer_loop3: for k in 0..outer {
+            let smp = step.sample(comm, k)?;
+            {
+                let (h, t) = buf.split_at_mut(head);
+                step.local_payload(comm, &smp, h, t)?;
+            }
+
+            // THE communication of this outer iteration.
+            comm.allreduce_sum(&mut buf)?;
+
+            cond.check(history, k, &buf);
+            step.hidden_work(&smp)?;
+            solve_apply::<C, S>(step, &smp, &buf, head)?;
+
+            if boundary(step, opts, comm, history, k, outer)? {
+                break 'outer_loop3;
+            }
+        }
+    }
+
+    step.flush(comm)?;
+    history.meter = *comm.meter();
+    Ok(())
+}

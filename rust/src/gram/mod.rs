@@ -206,6 +206,7 @@ impl ComputeBackend for NativeBackend {
         a.sampled_matvec(idx, z, r)
     }
 
+    #[allow(clippy::too_many_arguments)] // trait-contract signature
     fn ca_inner_solve(
         &mut self,
         s: usize,
@@ -258,6 +259,7 @@ impl ComputeBackend for NativeBackend {
         Ok(deltas)
     }
 
+    #[allow(clippy::too_many_arguments)] // trait-contract signature
     fn ca_dual_inner_solve(
         &mut self,
         s: usize,

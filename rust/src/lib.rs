@@ -7,9 +7,16 @@
 //! The crate is the **Layer-3 coordinator** of a three-layer Rust + JAX +
 //! Pallas stack:
 //!
+//! * [`engine`] — the unified s-step solver engine: the
+//!   [`Problem`](engine::Problem)/[`Session`](engine::Session) API, the
+//!   parsed [`Method`](engine::Method) selector, and the one pipeline
+//!   core ([`engine::drive`]) that owns the outer loop and both
+//!   execution schedules (blocking, and the overlapped prefetch
+//!   pipeline) for every method below.
 //! * [`solvers`] — Algorithms 1–4 of the paper (BCD, CA-BCD, BDCD, CA-BDCD)
 //!   plus the CG and TSQR baselines of its §2.1 survey, all written against
-//!   the [`comm`] communicator so they run SPMD over P simulated ranks.
+//!   the [`comm`] communicator so they run SPMD over P simulated ranks —
+//!   each as a small [`CaStep`](engine::CaStep) implementation.
 //! * [`comm`] — an in-process MPI-like collectives substrate (binomial-tree
 //!   allreduce / broadcast / all-to-all over channels) with per-rank α-β-γ
 //!   cost meters.
@@ -33,6 +40,7 @@ pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;
+pub mod engine;
 pub mod error;
 pub mod gram;
 pub mod kernel;

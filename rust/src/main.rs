@@ -108,10 +108,12 @@ cabcd — communication-avoiding primal/dual block coordinate descent
 USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
 
   train       --config FILE | [--dataset abalone|news20|a9a|real-sim]
-              [--scale K] [--method bcd|cabcd|bdcd|cabdcd|cg] [--b B] [--s S]
-              [--iters H] [--lam L] [--ranks P] [--backend native|xla]
-              [--artifact-dir DIR] [--seed N] [--overlap] [--json]
-              [--reg l2|l1|elastic|none] [--l1-ratio R]
+              [--scale K]
+              [--method bcd|cabcd|bdcd|cabdcd|bcdrow|cabcdrow|cocoa|cg]
+              [--b B] [--s S] [--iters H] [--lam L] [--ranks P]
+              [--backend native|xla] [--artifact-dir DIR] [--seed N]
+              [--overlap] [--json] [--reg l2|l1|elastic|none]
+              [--l1-ratio R] [--local-iters N (cocoa)]
   gen-data    --out FILE [--name abalone] [--scale K] [--seed N] [--verify]
   cost-table  [--d D] [--n N] [--p P] [--b B] [--s S] [--h H]
   scaling     [--mode strong|weak] [--machine mpi|spark] [--d D] [--log2n E]
@@ -175,6 +177,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 overlap: args.flag("overlap"),
                 reg: args.str_or("reg", "l2"),
                 l1_ratio: args.f64_or("l1-ratio", 0.5)?,
+                local_iters: args.usize_or("local-iters", 100)?,
             },
             run: RunConfig {
                 ranks: args.usize_or("ranks", 1)?,

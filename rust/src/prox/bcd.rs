@@ -3,21 +3,24 @@
 //!
 //! SPMD layout, sampling, Gram engine and the **one packed `[G|r]`
 //! allreduce per outer iteration** are identical to
-//! [`crate::solvers::bcd`] (this loop is entered from `bcd::run` whenever
-//! [`SolverOpts::reg`] is not the exact-L2 path); only the replicated
-//! inner solve differs — [`crate::prox::solve::ca_prox_inner_solve`]
-//! applies the regularizer's separable prox elementwise after
-//! reconstructing each deferred step's gradient from the packed triangle.
+//! [`crate::solvers::bcd`] (this loop is entered from the
+//! [`Session`](crate::engine::Session) whenever [`SolverOpts::reg`] is
+//! not the exact-L2 path); only the replicated inner solve differs —
+//! [`crate::prox::solve::ca_prox_inner_solve`] applies the regularizer's
+//! separable prox elementwise after reconstructing each deferred step's
+//! gradient from the packed triangle.
 //!
-//! With [`SolverOpts::overlap`] the reduction runs through the
-//! non-blocking allreduce while the overlap tensor and the `w` block
-//! gather (both independent of the reduced values) are computed — same
-//! payload, same reduction algorithm, bitwise-identical trajectory, still
-//! exactly H/s collectives. NOTE: unlike the smooth `bcd::run_overlapped`,
-//! this loop does **not** yet prefetch the next iteration's Gram under
-//! the in-flight reduction, so the dominant flop cost is not hidden —
-//! the Gram-prefetch pipeline for the prox loops is an open ROADMAP
-//! item, not an implied property of `--overlap` here.
+//! The loop lives in the shared pipeline core
+//! ([`crate::engine::drive`]). With [`SolverOpts::overlap`] the engine's
+//! **prefetch schedule now applies here too**: the next iteration's Gram
+//! (the dominant flop cost, a pure function of X and the shared-seed
+//! sample stream) is computed under the in-flight `[G|r]` reduction,
+//! alongside the overlap-tensor assembly and the `w` block gather —
+//! closing the ROADMAP item that the prox loops hid only the cheap
+//! tensor/gather work. Same payload, same reduction algorithm, still
+//! exactly H/s collectives, bitwise-identical trajectory (asserted
+//! against the frozen pre-engine loop in
+//! `rust/tests/engine_equivalence.rs`).
 //!
 //! Convergence metrics are the prox certificates ([`ProxRecord`]): the
 //! penalized objective `P(w) = ‖y − Xᵀw‖²/(2n) + ψ(w)`, the Fenchel
@@ -26,6 +29,7 @@
 //! nnz(w). One meter-excluded `(d+2)`-word allreduce per record.
 
 use crate::comm::Communicator;
+use crate::engine::{drive, CaStep, Sample};
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -33,13 +37,12 @@ use crate::matrix::Matrix;
 use crate::metrics::{History, ProxRecord};
 use crate::prox::{Reg, Regularizer};
 use crate::sampling::{overlap_tensor_into, BlockSampler};
-use crate::solvers::common::{
-    cond_stride, flatten_blocks, metered_out, packed_gram_cond, should_record, PrimalOutput,
-    SolverOpts,
-};
+use crate::solvers::common::{metered_out, PrimalOutput, SolverOpts};
 
 /// Run CA-Prox-BCD on this rank's 1D-block-column shard (see
-/// [`crate::solvers::bcd::run`] for the shard layout contract).
+/// [`crate::solvers::bcd::run`] for the shard layout contract). This is
+/// the engine entry the [`Session`](crate::engine::Session) dispatches to
+/// for non-L2 regularizers on the matched primal layout.
 pub fn run<C: Communicator>(
     a_loc: &Matrix,
     y_loc: &[f64],
@@ -53,135 +56,170 @@ pub fn run<C: Communicator>(
     opts.validate(d)?;
     let (s, b) = (opts.s, opts.b);
     let sb = s * b;
-    let gl = packed_len(sb);
-    let inv_n = 1.0 / n_global as f64;
-    let lam = opts.lam;
-    let reg = opts.reg;
-
-    let mut w = vec![0.0; d];
-    let mut alpha_loc = vec![0.0; n_loc];
     let mut history = History::default();
-
-    // Hot-path scratch hoisted out of the loop (no per-iteration heap
-    // traffic beyond the pooled collective buffers).
-    let mut buf = vec![0.0; gl + sb]; // packed [G | r] allreduce payload
-    let mut z = vec![0.0; n_loc];
-    let mut w_blocks = vec![0.0; sb];
-    let mut gram_scaled = vec![0.0; sb * sb];
-    let mut idx_flat = vec![0usize; sb];
-    let mut overlap = vec![0.0; s * s * b * b];
-
-    let mut sampler = BlockSampler::new(d, opts.seed);
-
-    record(
-        &mut history,
-        0,
-        &w,
-        &alpha_loc,
-        y_loc,
+    let mut step = ProxBcdStep {
         a_loc,
+        y_loc,
         n_global,
-        lam,
-        &reg,
-        comm,
-    )?;
-
-    let outer = opts.outer_iters();
-    let stride = cond_stride(sb, outer);
-    'outer_loop: for k in 0..outer {
-        let blocks = sampler.draw_blocks(s, b);
-        flatten_blocks(&blocks, b, &mut idx_flat);
-
-        // z = y − α (local slice), then the raw partial [G | r].
-        for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
-            *zi = yi - ai;
-        }
-        {
-            let (g_buf, r_buf) = buf.split_at_mut(gl);
-            backend.gram_resid(a_loc, &idx_flat, &z, g_buf, r_buf)?;
-        }
-
-        // THE communication of this outer iteration — with overlap, the
-        // tensor assembly and w gather hide behind the in-flight
-        // reduction (they depend only on the shared-seed sample stream).
-        if opts.overlap {
-            let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
-            overlap_tensor_into(&blocks, &mut overlap);
-            gather_w_blocks(&blocks, b, &w, &mut w_blocks);
-            buf = comm.iallreduce_wait(handle)?;
-        } else {
-            comm.allreduce_sum(&mut buf)?;
-            overlap_tensor_into(&blocks, &mut overlap);
-            gather_w_blocks(&blocks, b, &w, &mut w_blocks);
-        }
-
-        if opts.track_gram_cond && k % stride == 0 {
-            // Condition of the smooth block system (1/n)·G + μ₂I
-            // (μ₂ = the regularizer's quadratic weight; pure-L1 runs
-            // report the raw data-term conditioning).
-            let (_, mu2) = reg.weights(lam);
-            history
-                .gram_conds
-                .push(packed_gram_cond(&buf, sb, inv_n, mu2, &mut gram_scaled));
-        }
-
-        // Replicated prox inner solve + deferred updates.
-        let (g_buf, r_buf) = buf.split_at(gl);
-        let deltas = backend
-            .ca_prox_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n, &reg)?;
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                w[row] += deltas[j * b + i];
-            }
-        }
-        backend.alpha_update(a_loc, &idx_flat, &deltas, &mut alpha_loc)?;
-
-        let h_now = (k + 1) * s;
-        history.iters = h_now;
-        if should_record(h_now, s, opts) || k + 1 == outer {
-            record(
-                &mut history,
-                h_now,
-                &w,
-                &alpha_loc,
-                y_loc,
-                a_loc,
-                n_global,
-                lam,
-                &reg,
-                comm,
-            )?;
-            if let Some(tol) = opts.tol {
-                if converged(&history, tol) {
-                    break 'outer_loop;
-                }
-            }
-        }
-    }
-
-    history.meter = *comm.meter();
+        backend,
+        s,
+        b,
+        lam: opts.lam,
+        inv_n: 1.0 / n_global as f64,
+        gl: packed_len(sb),
+        reg: opts.reg,
+        sampler: BlockSampler::new(d, opts.seed),
+        w: vec![0.0; d],
+        alpha_loc: vec![0.0; n_loc],
+        z: vec![0.0; n_loc],
+        w_blocks: vec![0.0; sb],
+        overlap: vec![0.0; s * s * b * b],
+    };
+    drive(&mut step, opts, comm, &mut history)?;
     Ok(PrimalOutput {
-        w,
-        alpha_loc,
+        w: step.w,
+        alpha_loc: step.alpha_loc,
         history,
     })
 }
 
-fn gather_w_blocks(blocks: &[Vec<usize>], b: usize, w: &[f64], w_blocks: &mut [f64]) {
-    for (j, blk) in blocks.iter().enumerate() {
-        for (i, &row) in blk.iter().enumerate() {
-            w_blocks[j * b + i] = w[row];
-        }
-    }
+/// The proximal primal method's per-iteration callbacks — identical to
+/// [`BcdStep`](crate::solvers::bcd) except for the prox inner solve, the
+/// μ₂-shifted conditioning probe, and the certificate records.
+struct ProxBcdStep<'a> {
+    a_loc: &'a Matrix,
+    y_loc: &'a [f64],
+    n_global: usize,
+    backend: &'a mut dyn ComputeBackend,
+    s: usize,
+    b: usize,
+    lam: f64,
+    inv_n: f64,
+    gl: usize,
+    reg: Reg,
+    sampler: BlockSampler,
+    w: Vec<f64>,
+    alpha_loc: Vec<f64>,
+    z: Vec<f64>,
+    w_blocks: Vec<f64>,
+    overlap: Vec<f64>,
 }
 
-/// Stop once the certificate reaches `tol`: the duality gap when the
-/// regularizer has one, the subgradient residual otherwise (`Reg::None`).
-fn converged(history: &History, tol: f64) -> bool {
-    match history.prox.last() {
-        Some(r) if r.gap.is_finite() => r.gap <= tol,
-        Some(r) => r.subgrad <= tol,
-        None => false,
+impl<C: Communicator> CaStep<C> for ProxBcdStep<'_> {
+    fn payload_split(&self) -> (usize, usize) {
+        (self.gl, self.s * self.b)
+    }
+
+    fn prefetch_gram(&self) -> bool {
+        // The ROADMAP item closed by the engine port: the prox Gram is as
+        // state-independent as the smooth one, so `--overlap` now
+        // prefetches it under the in-flight reduction.
+        true
+    }
+
+    fn sample(&mut self, _comm: &mut C, k: usize) -> Result<Sample> {
+        Ok(Sample::flatten(
+            k,
+            self.sampler.draw_blocks(self.s, self.b),
+            self.b,
+        ))
+    }
+
+    fn local_gram(&mut self, _comm: &mut C, smp: &Sample, head: &mut [f64]) -> Result<()> {
+        self.backend.gram_only(self.a_loc, &smp.idx, head)
+    }
+
+    fn local_state(&mut self, smp: &Sample, tail: &mut [f64]) -> Result<()> {
+        // z = y − α (local slice), then r = Y_loc·z into the payload tail.
+        for ((zi, yi), ai) in self.z.iter_mut().zip(self.y_loc).zip(&self.alpha_loc) {
+            *zi = yi - ai;
+        }
+        self.backend.resid_only(self.a_loc, &smp.idx, &self.z, tail)
+    }
+
+    fn local_payload(
+        &mut self,
+        _comm: &mut C,
+        smp: &Sample,
+        head: &mut [f64],
+        tail: &mut [f64],
+    ) -> Result<()> {
+        // Same-iteration gram + residual: one fused backend call, like
+        // the pre-engine blocking loop.
+        for ((zi, yi), ai) in self.z.iter_mut().zip(self.y_loc).zip(&self.alpha_loc) {
+            *zi = yi - ai;
+        }
+        self.backend
+            .gram_resid(self.a_loc, &smp.idx, &self.z, head, tail)
+    }
+
+    fn hidden_work(&mut self, smp: &Sample) -> Result<()> {
+        overlap_tensor_into(&smp.blocks, &mut self.overlap);
+        for (j, blk) in smp.blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                self.w_blocks[j * self.b + i] = self.w[row];
+            }
+        }
+        Ok(())
+    }
+
+    fn cond_probe(&self) -> Option<(f64, f64)> {
+        // Condition of the smooth block system (1/n)·G + μ₂I (μ₂ = the
+        // regularizer's quadratic weight; pure-L1 runs report the raw
+        // data-term conditioning).
+        let (_, mu2) = self.reg.weights(self.lam);
+        Some((self.inv_n, mu2))
+    }
+
+    fn inner_solve(&mut self, _smp: &Sample, head: &[f64], tail: &[f64]) -> Result<Vec<f64>> {
+        // Replicated prox inner solve.
+        self.backend.ca_prox_inner_solve(
+            self.s,
+            self.b,
+            head,
+            tail,
+            &self.w_blocks,
+            &self.overlap,
+            self.lam,
+            self.inv_n,
+            &self.reg,
+        )
+    }
+
+    fn apply(&mut self, smp: &Sample, deltas: &[f64]) -> Result<()> {
+        for (j, blk) in smp.blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                self.w[row] += deltas[j * self.b + i];
+            }
+        }
+        self.backend
+            .alpha_update(self.a_loc, &smp.idx, deltas, &mut self.alpha_loc)
+    }
+
+    fn record(&mut self, comm: &mut C, history: &mut History, h_now: usize) -> Result<()> {
+        record(
+            history,
+            h_now,
+            &self.w,
+            &self.alpha_loc,
+            self.y_loc,
+            self.a_loc,
+            self.n_global,
+            self.lam,
+            &self.reg,
+            comm,
+        )
+    }
+
+    fn converged(&self, history: &History, tol: f64) -> bool {
+        // Stop once the certificate reaches tol: the duality gap when the
+        // regularizer has one, the subgradient residual otherwise
+        // (`Reg::None`).
+        match history.prox.last() {
+            Some(r) if r.gap.is_finite() => r.gap <= tol,
+            Some(r) => r.subgrad <= tol,
+            None => false,
+        }
     }
 }
 
@@ -308,20 +346,28 @@ mod tests {
     fn prox_allreduce_count_is_h_over_s() {
         let (x, y) = toy(10, 40, 2);
         for s in [1usize, 4] {
-            let opts = SolverOpts {
-                b: 2,
-                s,
-                lam: 0.05,
-                iters: 40,
-                seed: 8,
-                record_every: 0,
-                reg: Reg::L1,
-                ..Default::default()
-            };
-            let mut comm = SerialComm::new();
-            let mut be = NativeBackend::new();
-            let out = run(&x, &y, 40, &opts, &mut comm, &mut be).unwrap();
-            assert_eq!(out.history.meter.allreduces as usize, 40 / s, "s={s}");
+            for overlap in [false, true] {
+                let opts = SolverOpts {
+                    b: 2,
+                    s,
+                    lam: 0.05,
+                    iters: 40,
+                    seed: 8,
+                    record_every: 0,
+                    overlap,
+                    reg: Reg::L1,
+                    ..Default::default()
+                };
+                let mut comm = SerialComm::new();
+                let mut be = NativeBackend::new();
+                let out = run(&x, &y, 40, &opts, &mut comm, &mut be).unwrap();
+                assert_eq!(
+                    out.history.meter.allreduces as usize,
+                    40 / s,
+                    "s={s} overlap={overlap}: the prefetch pipeline must \
+                     keep exactly H/s collectives"
+                );
+            }
         }
     }
 }

@@ -9,9 +9,14 @@
 //! regularizer's separable prox applied to the **dual** vector. This is
 //! the seam box-constraint workloads (SVM hinge) and sparse-dual losses
 //! plug into; `Reg::None` shares the classical BDCD fixed points (same
-//! ridge solution, first-order instead of Newton steps). Like
-//! [`crate::prox::bcd`], `overlap` hides only the tensor/gather work —
-//! the smooth solvers' Gram-prefetch pipeline is a ROADMAP follow-on.
+//! ridge solution, first-order instead of Newton steps).
+//!
+//! The loop lives in the shared pipeline core ([`crate::engine::drive`]);
+//! like [`crate::prox::bcd`], `--overlap` now runs the engine's
+//! **prefetch schedule** — the next iteration's Gram is computed under
+//! the in-flight `[G|r]` reduction (previously only the tensor/gather
+//! work was hidden; ROADMAP item closed by the engine port). Bitwise
+//! identical trajectory, still exactly H/s collectives.
 //!
 //! Records are [`ProxRecord`]s over the dual iterate: penalized dual
 //! objective, min-norm subgradient residual, and nnz(α). The Fenchel gap
@@ -20,6 +25,7 @@
 //! allreduce).
 
 use crate::comm::Communicator;
+use crate::engine::{drive, CaStep, Sample};
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -27,14 +33,13 @@ use crate::matrix::Matrix;
 use crate::metrics::{History, ProxRecord};
 use crate::prox::{Reg, Regularizer};
 use crate::sampling::{overlap_tensor_into, BlockSampler};
-use crate::solvers::common::{
-    cond_stride, flatten_blocks, metered_out, packed_gram_cond, should_record, DualOutput,
-    SolverOpts,
-};
+use crate::solvers::common::{metered_out, DualOutput, SolverOpts};
 
 /// Run CA-Prox-BDCD on this rank's shard (layout contract of
 /// [`crate::solvers::bdcd::run`]: `a_loc` is the `n × d_loc` feature
-/// slice of `A = Xᵀ`, `y` and α replicated, `w_loc` partitioned).
+/// slice of `A = Xᵀ`, `y` and α replicated, `w_loc` partitioned). This is
+/// the engine entry the [`Session`](crate::engine::Session) dispatches to
+/// for non-L2 regularizers on the matched dual layout.
 pub fn run<C: Communicator>(
     a_loc: &Matrix,
     y: &[f64],
@@ -49,119 +54,168 @@ pub fn run<C: Communicator>(
     opts.validate(n)?;
     let (s, b) = (opts.s, opts.b);
     let sb = s * b;
-    let gl = packed_len(sb);
-    let inv_n = 1.0 / n as f64;
-    let lam = opts.lam;
-    let reg = opts.reg;
-
-    let mut alpha = vec![0.0; n];
-    let mut w_loc = vec![0.0; d_loc];
     let mut history = History::default();
-
-    let mut buf = vec![0.0; gl + sb]; // packed [G | r] allreduce payload
-    let mut a_blocks = vec![0.0; sb];
-    let mut y_blocks = vec![0.0; sb];
-    let mut gram_scaled = vec![0.0; sb * sb];
-    let mut idx_flat = vec![0usize; sb];
-    let mut scaled_deltas = vec![0.0; sb];
-    let mut overlap = vec![0.0; s * s * b * b];
-
-    let mut sampler = BlockSampler::new(n, opts.seed);
-
-    record(&mut history, 0, &alpha, &w_loc, y, a_loc, lam, &reg, comm)?;
-
-    let outer = opts.outer_iters();
-    let stride = cond_stride(sb, outer);
-    'outer_loop: for k in 0..outer {
-        let blocks = sampler.draw_blocks(s, b);
-        flatten_blocks(&blocks, b, &mut idx_flat);
-
-        // Raw partial [G | r]: G = A[J,:]A[J,:]ᵀ, r = A[J,:]·w_loc.
-        {
-            let (g_buf, r_buf) = buf.split_at_mut(gl);
-            backend.gram_resid(a_loc, &idx_flat, &w_loc, g_buf, r_buf)?;
-        }
-
-        // THE communication of this outer iteration.
-        if opts.overlap {
-            let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
-            overlap_tensor_into(&blocks, &mut overlap);
-            gather_blocks(&blocks, b, &alpha, y, &mut a_blocks, &mut y_blocks);
-            buf = comm.iallreduce_wait(handle)?;
-        } else {
-            comm.allreduce_sum(&mut buf)?;
-            overlap_tensor_into(&blocks, &mut overlap);
-            gather_blocks(&blocks, b, &alpha, y, &mut a_blocks, &mut y_blocks);
-        }
-
-        if opts.track_gram_cond && k % stride == 0 {
-            // Θ-scale conditioning, same quantity as the smooth dual
-            // solver (Figs. 7i–l): (1/(λn²))·G + (1/n)I.
-            history.gram_conds.push(packed_gram_cond(
-                &buf,
-                sb,
-                inv_n * inv_n / lam,
-                inv_n,
-                &mut gram_scaled,
-            ));
-        }
-
-        // Replicated dual prox solve + deferred updates.
-        let (g_buf, r_buf) = buf.split_at(gl);
-        let deltas = backend.ca_prox_dual_inner_solve(
-            s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n, &reg,
-        )?;
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                alpha[row] += deltas[j * b + i];
-            }
-        }
-        let scale = -1.0 / (lam * n as f64);
-        for (sd, &dv) in scaled_deltas.iter_mut().zip(&deltas) {
-            *sd = scale * dv;
-        }
-        backend.alpha_update(a_loc, &idx_flat, &scaled_deltas, &mut w_loc)?;
-
-        let h_now = (k + 1) * s;
-        history.iters = h_now;
-        if should_record(h_now, s, opts) || k + 1 == outer {
-            record(&mut history, h_now, &alpha, &w_loc, y, a_loc, lam, &reg, comm)?;
-            if let Some(tol) = opts.tol {
-                if history.prox.last().is_some_and(|r| r.subgrad <= tol) {
-                    break 'outer_loop;
-                }
-            }
-        }
-    }
-
-    history.meter = *comm.meter();
+    let mut step = ProxBdcdStep {
+        a_loc,
+        y,
+        backend,
+        s,
+        b,
+        lam: opts.lam,
+        inv_n: 1.0 / n as f64,
+        w_scale: -1.0 / (opts.lam * n as f64),
+        gl: packed_len(sb),
+        reg: opts.reg,
+        sampler: BlockSampler::new(n, opts.seed),
+        alpha: vec![0.0; n],
+        w_loc: vec![0.0; d_loc],
+        a_blocks: vec![0.0; sb],
+        y_blocks: vec![0.0; sb],
+        scaled_deltas: vec![0.0; sb],
+        overlap: vec![0.0; s * s * b * b],
+    };
+    drive(&mut step, opts, comm, &mut history)?;
     let w_full = metered_out(comm, |c| {
         let mut full = vec![0.0; d_global];
-        full[d_offset..d_offset + w_loc.len()].copy_from_slice(&w_loc);
+        full[d_offset..d_offset + step.w_loc.len()].copy_from_slice(&step.w_loc);
         c.allreduce_sum(&mut full)?;
         Ok(full)
     })?;
     Ok(DualOutput {
-        w_loc,
+        w_loc: step.w_loc,
         w_full,
-        alpha,
+        alpha: step.alpha,
         history,
     })
 }
 
-fn gather_blocks(
-    blocks: &[Vec<usize>],
+/// The proximal dual method's per-iteration callbacks — identical to
+/// [`BdcdStep`](crate::solvers::bdcd) except for the prox inner solve and
+/// the dual certificate records.
+struct ProxBdcdStep<'a> {
+    a_loc: &'a Matrix,
+    y: &'a [f64],
+    backend: &'a mut dyn ComputeBackend,
+    s: usize,
     b: usize,
-    alpha: &[f64],
-    y: &[f64],
-    a_blocks: &mut [f64],
-    y_blocks: &mut [f64],
-) {
-    for (j, blk) in blocks.iter().enumerate() {
-        for (i, &row) in blk.iter().enumerate() {
-            a_blocks[j * b + i] = alpha[row];
-            y_blocks[j * b + i] = y[row];
+    lam: f64,
+    inv_n: f64,
+    /// `−1/(λn)` precomputed with the classical loop's exact expression.
+    w_scale: f64,
+    gl: usize,
+    reg: Reg,
+    sampler: BlockSampler,
+    alpha: Vec<f64>,
+    w_loc: Vec<f64>,
+    a_blocks: Vec<f64>,
+    y_blocks: Vec<f64>,
+    scaled_deltas: Vec<f64>,
+    overlap: Vec<f64>,
+}
+
+impl<C: Communicator> CaStep<C> for ProxBdcdStep<'_> {
+    fn payload_split(&self) -> (usize, usize) {
+        (self.gl, self.s * self.b)
+    }
+
+    fn prefetch_gram(&self) -> bool {
+        true
+    }
+
+    fn sample(&mut self, _comm: &mut C, k: usize) -> Result<Sample> {
+        Ok(Sample::flatten(
+            k,
+            self.sampler.draw_blocks(self.s, self.b),
+            self.b,
+        ))
+    }
+
+    fn local_gram(&mut self, _comm: &mut C, smp: &Sample, head: &mut [f64]) -> Result<()> {
+        // G = A[J,:]A[J,:]ᵀ (packed partial).
+        self.backend.gram_only(self.a_loc, &smp.idx, head)
+    }
+
+    fn local_state(&mut self, smp: &Sample, tail: &mut [f64]) -> Result<()> {
+        // r = A[J,:]·w_loc into the payload tail.
+        self.backend
+            .resid_only(self.a_loc, &smp.idx, &self.w_loc, tail)
+    }
+
+    fn local_payload(
+        &mut self,
+        _comm: &mut C,
+        smp: &Sample,
+        head: &mut [f64],
+        tail: &mut [f64],
+    ) -> Result<()> {
+        // Same-iteration gram + residual: one fused backend call, like
+        // the pre-engine blocking loop.
+        self.backend
+            .gram_resid(self.a_loc, &smp.idx, &self.w_loc, head, tail)
+    }
+
+    fn hidden_work(&mut self, smp: &Sample) -> Result<()> {
+        overlap_tensor_into(&smp.blocks, &mut self.overlap);
+        for (j, blk) in smp.blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                self.a_blocks[j * self.b + i] = self.alpha[row];
+                self.y_blocks[j * self.b + i] = self.y[row];
+            }
         }
+        Ok(())
+    }
+
+    fn cond_probe(&self) -> Option<(f64, f64)> {
+        // Θ-scale conditioning, same quantity as the smooth dual solver
+        // (Figs. 7i–l): (1/(λn²))·G + (1/n)I.
+        Some((self.inv_n * self.inv_n / self.lam, self.inv_n))
+    }
+
+    fn inner_solve(&mut self, _smp: &Sample, head: &[f64], tail: &[f64]) -> Result<Vec<f64>> {
+        // Replicated dual prox solve.
+        self.backend.ca_prox_dual_inner_solve(
+            self.s,
+            self.b,
+            head,
+            tail,
+            &self.a_blocks,
+            &self.y_blocks,
+            &self.overlap,
+            self.lam,
+            self.inv_n,
+            &self.reg,
+        )
+    }
+
+    fn apply(&mut self, smp: &Sample, deltas: &[f64]) -> Result<()> {
+        for (j, blk) in smp.blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                self.alpha[row] += deltas[j * self.b + i];
+            }
+        }
+        for (sd, &dv) in self.scaled_deltas.iter_mut().zip(deltas) {
+            *sd = self.w_scale * dv;
+        }
+        self.backend
+            .alpha_update(self.a_loc, &smp.idx, &self.scaled_deltas, &mut self.w_loc)
+    }
+
+    fn record(&mut self, comm: &mut C, history: &mut History, h_now: usize) -> Result<()> {
+        record(
+            history,
+            h_now,
+            &self.alpha,
+            &self.w_loc,
+            self.y,
+            self.a_loc,
+            self.lam,
+            &self.reg,
+            comm,
+        )
+    }
+
+    fn converged(&self, history: &History, tol: f64) -> bool {
+        history.prox.last().is_some_and(|r| r.subgrad <= tol)
     }
 }
 

@@ -29,11 +29,15 @@
 //!   `[G|r]` triangle ([`crate::gram::ComputeBackend`] exposes them as
 //!   `ca_prox_inner_solve` / `ca_prox_dual_inner_solve` default methods).
 //! * [`bcd`] / [`bdcd`] — the CA-Prox-BCD / CA-Prox-BDCD solver loops
-//!   (entered transparently through `solvers::bcd::run` /
-//!   `solvers::bdcd::run` whenever `SolverOpts::reg` is not the exact-L2
-//!   path), reporting the penalized objective, a CoCoA-style primal/dual
-//!   objective-gap certificate, the min-norm subgradient residual, and
-//!   iterate sparsity per record ([`crate::metrics::ProxRecord`]).
+//!   (entered transparently through the engine's
+//!   [`Session`](crate::engine::Session) — and therefore through
+//!   `solvers::bcd::run` / `solvers::bdcd::run` — whenever
+//!   `SolverOpts::reg` is not the exact-L2 path), reporting the penalized
+//!   objective, a CoCoA-style primal/dual objective-gap certificate, the
+//!   min-norm subgradient residual, and iterate sparsity per record
+//!   ([`crate::metrics::ProxRecord`]). Both run the engine's shared
+//!   pipeline, so `--overlap` prefetches the next iteration's Gram under
+//!   the in-flight `[G|r]` reduction exactly like the smooth solvers.
 //!
 //! With `Reg::L2` the solvers dispatch to the **pre-existing exact path**
 //! — trajectories and per-rank CostMeter word counts are bitwise identical

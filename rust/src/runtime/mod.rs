@@ -322,6 +322,7 @@ impl ComputeBackend for XlaBackend {
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)] // trait-contract signature
     fn ca_inner_solve(
         &mut self,
         s: usize,
@@ -350,6 +351,7 @@ impl ComputeBackend for XlaBackend {
         Ok(unpad_blocks(s, b, sa, ba, &d_p))
     }
 
+    #[allow(clippy::too_many_arguments)] // trait-contract signature
     fn ca_dual_inner_solve(
         &mut self,
         s: usize,

@@ -17,16 +17,21 @@
 //! 4. solves the `s` deferred `b×b` subproblems redundantly (eq. 8),
 //! 5. applies the deferred updates: `w[I_t] += Δ_t`, `α_loc += Y_locᵀ δ`.
 //!
-//! With [`SolverOpts::overlap`] the same iteration is software-pipelined:
-//! the `[G_k | r_k]` buffer reduces through the non-blocking allreduce
-//! while the rank computes `G_{k+1}` (legal because G depends only on X
-//! and the shared-seed sample stream, never on the evolving α/w state) and
-//! assembles the overlap tensor. Still exactly one collective per outer
-//! iteration, same payload, same reduction algorithm — the trajectory is
-//! **bitwise identical** to the blocking path (asserted by integration
-//! test) while the dominant local flops hide the reduction latency.
+//! The loop itself lives in the shared pipeline core
+//! ([`crate::engine::drive`]); this module contributes only the
+//! method-specific callbacks ([`BcdStep`]). With
+//! [`SolverOpts::overlap`] the engine's prefetch schedule software-
+//! pipelines the iteration: the `[G_k | r_k]` buffer reduces through the
+//! non-blocking allreduce while the rank computes `G_{k+1}` (legal
+//! because G depends only on X and the shared-seed sample stream, never
+//! on the evolving α/w state) and assembles the overlap tensor. Still
+//! exactly one collective per outer iteration, same payload, same
+//! reduction algorithm — the trajectory is **bitwise identical** to the
+//! blocking path (asserted against the frozen pre-engine loops in
+//! `rust/tests/engine_equivalence.rs`).
 
 use crate::comm::Communicator;
+use crate::engine::{drive, CaStep, Method, Problem, Sample, Session};
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -35,18 +40,21 @@ use crate::metrics::{
     relative_objective_error, relative_solution_error, History, IterRecord, Reference,
 };
 use crate::sampling::{overlap_tensor_into, BlockSampler};
-use crate::solvers::common::{
-    cond_stride, flatten_blocks, metered_out, objective_value, packed_gram_cond,
-    should_record, PrimalOutput, SolverOpts,
-};
+use crate::solvers::common::{metered_out, objective_value, PrimalOutput, SolverOpts};
 
 /// Run BCD / CA-BCD on this rank's shard.
+///
+/// Thin wrapper over the engine's single entry point — equivalent to
+/// `Session::new(&Problem::primal(…)).opts(…).method(Method::CaBcd)…`;
+/// kept so existing callers (and the paper-numbered docs above) have a
+/// stable address. Non-L2 regularizers route through the CA-Prox loop
+/// (same packed `[G|r]` payload and H/s collectives; `reference` does not
+/// apply there and a warning is emitted if one is supplied).
 ///
 /// * `a_loc` — `d × n_loc` local column block of X.
 /// * `y_loc` — local slice of the labels.
 /// * `n_global` — total number of data points n.
 /// * `reference` — optional `w_opt` ground truth for error recording.
-#[allow(clippy::too_many_arguments)]
 pub fn run<C: Communicator>(
     a_loc: &Matrix,
     y_loc: &[f64],
@@ -56,134 +64,20 @@ pub fn run<C: Communicator>(
     comm: &mut C,
     backend: &mut dyn ComputeBackend,
 ) -> Result<PrimalOutput> {
-    if !opts.reg.is_exact_l2() {
-        // Non-smooth regularizer: the CA-Prox loop (same packed [G|r]
-        // payload and H/s collectives; prox certificates instead of the
-        // ridge reference errors — `reference` does not apply there).
-        return crate::prox::bcd::run(a_loc, y_loc, n_global, opts, comm, backend);
-    }
-    if opts.overlap {
-        return run_overlapped(a_loc, y_loc, n_global, opts, reference, comm, backend);
-    }
-    let d = a_loc.rows();
-    let n_loc = a_loc.cols();
-    opts.validate(d)?;
-    let (s, b) = (opts.s, opts.b);
-    let sb = s * b;
-    let inv_n = 1.0 / n_global as f64;
-    let lam = opts.lam;
-
-    let mut w = vec![0.0; d];
-    let mut alpha_loc = vec![0.0; n_loc];
-    let mut history = History::default();
-
-    // Scratch buffers hoisted out of the iteration loop (no allocation on
-    // the hot path; see EXPERIMENTS.md §Perf).
-    let gl = packed_len(sb);
-    let mut buf = vec![0.0; gl + sb]; // packed [G | r] allreduce payload
-    let mut z = vec![0.0; n_loc];
-    let mut w_blocks = vec![0.0; sb];
-    let mut gram_scaled = vec![0.0; sb * sb];
-    let mut idx_flat = vec![0usize; sb];
-    let mut overlap = vec![0.0; s * s * b * b];
-
-    let mut sampler = BlockSampler::new(d, opts.seed);
-
-    record(
-        &mut history,
-        0,
-        &w,
-        &alpha_loc,
-        y_loc,
-        n_global,
-        lam,
-        reference,
-        comm,
-    )?;
-
-    let outer = opts.outer_iters();
-    // Condition tracking samples ~16 outer iterations for large sb —
-    // the reported min/median/max statistics are over those samples
-    // (estimator: power + inverse-power, linalg::cond).
-    let stride = cond_stride(sb, outer);
-    'outer_loop: for k in 0..outer {
-        let blocks = sampler.draw_blocks(s, b);
-        flatten_blocks(&blocks, b, &mut idx_flat);
-
-        // z = y − α (local slice).
-        for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
-            *zi = yi - ai;
-        }
-
-        // Raw partial Gram + residual through the backend (the L1 hot spot).
-        let (g_buf, r_buf) = buf.split_at_mut(gl);
-        backend.gram_resid(a_loc, &idx_flat, &z, g_buf, r_buf)?;
-
-        // THE communication of this outer iteration.
-        comm.allreduce_sum(&mut buf)?;
-
-        if opts.track_gram_cond && k % stride == 0 {
-            // Condition number of G = (1/n)·YYᵀ + λI (paper Figs. 4i–l).
-            history
-                .gram_conds
-                .push(packed_gram_cond(&buf, sb, inv_n, lam, &mut gram_scaled));
-        }
-
-        // Replicated inner solve (eq. 8).
-        overlap_tensor_into(&blocks, &mut overlap);
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                w_blocks[j * b + i] = w[row];
-            }
-        }
-        let (g_buf, r_buf) = buf.split_at(gl);
-        let deltas =
-            backend.ca_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n)?;
-
-        // Deferred updates (eqs. 9–10).
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                w[row] += deltas[j * b + i];
-            }
-        }
-        backend.alpha_update(a_loc, &idx_flat, &deltas, &mut alpha_loc)?;
-
-        let h_now = (k + 1) * s;
-        history.iters = h_now;
-        if should_record(h_now, s, opts) || k + 1 == outer {
-            record(
-                &mut history,
-                h_now,
-                &w,
-                &alpha_loc,
-                y_loc,
-                n_global,
-                lam,
-                reference,
-                comm,
-            )?;
-            if let (Some(tol), Some(_)) = (opts.tol, reference) {
-                if history.final_obj_err() <= tol {
-                    break 'outer_loop;
-                }
-            }
-        }
-    }
-
-    history.meter = *comm.meter();
-    Ok(PrimalOutput {
-        w,
-        alpha_loc,
-        history,
-    })
+    let problem = Problem::primal(a_loc, y_loc, n_global).with_reference(reference);
+    Session::new(&problem)
+        .opts(opts.clone())
+        .method(Method::CaBcd)
+        .backend(backend)
+        .comm(comm)
+        .run()?
+        .into_primal()
 }
 
-/// Software-pipelined variant (`opts.overlap`): the `[G_k | r_k]` buffer
-/// reduces through `iallreduce_start`/`iallreduce_wait` while this rank
-/// computes `G_{k+1}` and the overlap tensor. One collective per outer
-/// iteration, bitwise-identical trajectory to the blocking path.
-#[allow(clippy::too_many_arguments)]
-fn run_overlapped<C: Communicator>(
+/// Engine entry point: build the [`BcdStep`], drive it through the shared
+/// pipeline, and assemble the output. Called by
+/// [`Session::run`](crate::engine::Session::run).
+pub(crate) fn engine_run<C: Communicator>(
     a_loc: &Matrix,
     y_loc: &[f64],
     n_global: usize,
@@ -197,136 +91,164 @@ fn run_overlapped<C: Communicator>(
     opts.validate(d)?;
     let (s, b) = (opts.s, opts.b);
     let sb = s * b;
-    let gl = packed_len(sb);
-    let inv_n = 1.0 / n_global as f64;
-    let lam = opts.lam;
-
-    let mut w = vec![0.0; d];
-    let mut alpha_loc = vec![0.0; n_loc];
     let mut history = History::default();
-
-    let mut z = vec![0.0; n_loc];
-    let mut w_blocks = vec![0.0; sb];
-    let mut gram_scaled = vec![0.0; sb * sb];
-    // Ping-pong index sets: `idx_cur` feeds this iteration's residual and
-    // α update, `idx_next` the prefetched Gram.
-    let mut idx_cur = vec![0usize; sb];
-    let mut idx_next = vec![0usize; sb];
-    let mut overlap = vec![0.0; s * s * b * b];
-
-    let mut sampler = BlockSampler::new(d, opts.seed);
-
-    record(
-        &mut history,
-        0,
-        &w,
-        &alpha_loc,
+    let mut step = BcdStep {
+        a_loc,
         y_loc,
         n_global,
-        lam,
         reference,
-        comm,
-    )?;
-
-    let outer = opts.outer_iters();
-    let stride = cond_stride(sb, outer);
-
-    // Pipeline prologue: G_0 is computed before the loop; thereafter
-    // G_{k+1} is computed under the in-flight reduction of [G_k | r_k].
-    let mut blocks: Vec<Vec<usize>> = Vec::new();
-    let mut next_buf: Vec<f64> = Vec::new();
-    if outer > 0 {
-        blocks = sampler.draw_blocks(s, b);
-        flatten_blocks(&blocks, b, &mut idx_cur);
-        next_buf = comm.take_buf(gl + sb);
-        backend.gram_only(a_loc, &idx_cur, &mut next_buf[..gl])?;
-    }
-    'outer_loop: for k in 0..outer {
-        let mut buf = std::mem::take(&mut next_buf); // holds G_k (packed)
-
-        // z = y − α (local slice), then r_k into the buffer tail.
-        for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
-            *zi = yi - ai;
-        }
-        backend.resid_only(a_loc, &idx_cur, &z, &mut buf[gl..])?;
-
-        // THE communication of this outer iteration — non-blocking.
-        let handle = comm.iallreduce_start(buf)?;
-
-        // ---- local work hidden behind the in-flight reduction -----------
-        let mut pending_blocks: Option<Vec<Vec<usize>>> = None;
-        if k + 1 < outer {
-            let nb = sampler.draw_blocks(s, b);
-            flatten_blocks(&nb, b, &mut idx_next);
-            next_buf = comm.take_buf(gl + sb);
-            backend.gram_only(a_loc, &idx_next, &mut next_buf[..gl])?;
-            pending_blocks = Some(nb);
-        }
-        overlap_tensor_into(&blocks, &mut overlap);
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                w_blocks[j * b + i] = w[row];
-            }
-        }
-        // ------------------------------------------------------------------
-        let buf = comm.iallreduce_wait(handle)?;
-
-        if opts.track_gram_cond && k % stride == 0 {
-            history
-                .gram_conds
-                .push(packed_gram_cond(&buf, sb, inv_n, lam, &mut gram_scaled));
-        }
-
-        // Replicated inner solve (eq. 8) and deferred updates (eqs. 9–10).
-        let (g_buf, r_buf) = buf.split_at(gl);
-        let deltas =
-            backend.ca_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n)?;
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                w[row] += deltas[j * b + i];
-            }
-        }
-        backend.alpha_update(a_loc, &idx_cur, &deltas, &mut alpha_loc)?;
-        comm.give_buf(buf);
-
-        // Rotate the pipeline.
-        if let Some(nb) = pending_blocks {
-            blocks = nb;
-            std::mem::swap(&mut idx_cur, &mut idx_next);
-        }
-
-        let h_now = (k + 1) * s;
-        history.iters = h_now;
-        if should_record(h_now, s, opts) || k + 1 == outer {
-            record(
-                &mut history,
-                h_now,
-                &w,
-                &alpha_loc,
-                y_loc,
-                n_global,
-                lam,
-                reference,
-                comm,
-            )?;
-            if let (Some(tol), Some(_)) = (opts.tol, reference) {
-                if history.final_obj_err() <= tol {
-                    break 'outer_loop;
-                }
-            }
-        }
-    }
-    if !next_buf.is_empty() {
-        // Early stop left a prefetched Gram in flight-side storage.
-        comm.give_buf(next_buf);
-    }
-
-    history.meter = *comm.meter();
+        backend,
+        s,
+        b,
+        lam: opts.lam,
+        inv_n: 1.0 / n_global as f64,
+        gl: packed_len(sb),
+        sampler: BlockSampler::new(d, opts.seed),
+        w: vec![0.0; d],
+        alpha_loc: vec![0.0; n_loc],
+        z: vec![0.0; n_loc],
+        w_blocks: vec![0.0; sb],
+        overlap: vec![0.0; s * s * b * b],
+    };
+    drive(&mut step, opts, comm, &mut history)?;
     Ok(PrimalOutput {
-        w,
-        alpha_loc,
+        w: step.w,
+        alpha_loc: step.alpha_loc,
         history,
     })
+}
+
+/// The matched-layout primal method's per-iteration callbacks (see the
+/// module docs for the algorithm and [`CaStep`] for the schedule
+/// contract). Scratch buffers are hoisted into the struct once; the only
+/// per-iteration heap traffic is the engine-owned payload buffers (pooled
+/// in overlap mode) and the [`Sample`]'s block/index lists — the same
+/// small vectors `BlockSampler::draw_blocks` always allocated per outer
+/// iteration in the pre-engine loops.
+pub(crate) struct BcdStep<'a> {
+    a_loc: &'a Matrix,
+    y_loc: &'a [f64],
+    n_global: usize,
+    reference: Option<&'a Reference>,
+    backend: &'a mut dyn ComputeBackend,
+    s: usize,
+    b: usize,
+    lam: f64,
+    inv_n: f64,
+    gl: usize,
+    sampler: BlockSampler,
+    /// Replicated primal iterate.
+    w: Vec<f64>,
+    /// This rank's slice of α = Xᵀw.
+    alpha_loc: Vec<f64>,
+    z: Vec<f64>,
+    w_blocks: Vec<f64>,
+    overlap: Vec<f64>,
+}
+
+impl<C: Communicator> CaStep<C> for BcdStep<'_> {
+    fn payload_split(&self) -> (usize, usize) {
+        (self.gl, self.s * self.b)
+    }
+
+    fn prefetch_gram(&self) -> bool {
+        true
+    }
+
+    fn sample(&mut self, _comm: &mut C, k: usize) -> Result<Sample> {
+        Ok(Sample::flatten(
+            k,
+            self.sampler.draw_blocks(self.s, self.b),
+            self.b,
+        ))
+    }
+
+    fn local_gram(&mut self, _comm: &mut C, smp: &Sample, head: &mut [f64]) -> Result<()> {
+        self.backend.gram_only(self.a_loc, &smp.idx, head)
+    }
+
+    fn local_state(&mut self, smp: &Sample, tail: &mut [f64]) -> Result<()> {
+        // z = y − α (local slice), then r = Y_loc·z into the payload tail.
+        for ((zi, yi), ai) in self.z.iter_mut().zip(self.y_loc).zip(&self.alpha_loc) {
+            *zi = yi - ai;
+        }
+        self.backend.resid_only(self.a_loc, &smp.idx, &self.z, tail)
+    }
+
+    fn local_payload(
+        &mut self,
+        _comm: &mut C,
+        smp: &Sample,
+        head: &mut [f64],
+        tail: &mut [f64],
+    ) -> Result<()> {
+        // Same-iteration gram + residual: use the fused kernel (one
+        // backend call — one AOT artifact execution on the XLA path),
+        // exactly like the pre-engine blocking loop.
+        for ((zi, yi), ai) in self.z.iter_mut().zip(self.y_loc).zip(&self.alpha_loc) {
+            *zi = yi - ai;
+        }
+        self.backend
+            .gram_resid(self.a_loc, &smp.idx, &self.z, head, tail)
+    }
+
+    fn hidden_work(&mut self, smp: &Sample) -> Result<()> {
+        overlap_tensor_into(&smp.blocks, &mut self.overlap);
+        for (j, blk) in smp.blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                self.w_blocks[j * self.b + i] = self.w[row];
+            }
+        }
+        Ok(())
+    }
+
+    fn cond_probe(&self) -> Option<(f64, f64)> {
+        // Condition number of G = (1/n)·YYᵀ + λI (paper Figs. 4i–l).
+        Some((self.inv_n, self.lam))
+    }
+
+    fn inner_solve(&mut self, _smp: &Sample, head: &[f64], tail: &[f64]) -> Result<Vec<f64>> {
+        // Replicated inner solve (eq. 8).
+        self.backend.ca_inner_solve(
+            self.s,
+            self.b,
+            head,
+            tail,
+            &self.w_blocks,
+            &self.overlap,
+            self.lam,
+            self.inv_n,
+        )
+    }
+
+    fn apply(&mut self, smp: &Sample, deltas: &[f64]) -> Result<()> {
+        // Deferred updates (eqs. 9–10).
+        for (j, blk) in smp.blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                self.w[row] += deltas[j * self.b + i];
+            }
+        }
+        self.backend
+            .alpha_update(self.a_loc, &smp.idx, deltas, &mut self.alpha_loc)
+    }
+
+    fn record(&mut self, comm: &mut C, history: &mut History, h_now: usize) -> Result<()> {
+        record(
+            history,
+            h_now,
+            &self.w,
+            &self.alpha_loc,
+            self.y_loc,
+            self.n_global,
+            self.lam,
+            self.reference,
+            comm,
+        )
+    }
+
+    fn converged(&self, history: &History, tol: f64) -> bool {
+        self.reference.is_some() && history.final_obj_err() <= tol
+    }
 }
 
 /// Meter-excluded metric evaluation: objective needs one scalar allreduce

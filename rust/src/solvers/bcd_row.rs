@@ -13,15 +13,31 @@
 //! the communication pattern differs (extra all-to-all per outer
 //! iteration, exactly Theorem 8's `W` term).
 //!
-//! With [`SolverOpts::overlap`], the Theorem-4 all-to-all itself is
-//! pipelined: sends post through `iall_to_all_start`, the Lemma-3
-//! load-metering allreduce runs while the exchange is in flight
-//! (operation tags keep the streams apart), and `iall_to_all_wait` drains
-//! the receives — in addition to the existing overlap of the
-//! overlap-tensor assembly behind the `[G|r|w]` iallreduce. Both overlaps
-//! are bitwise-identical to the blocking path.
+//! The loop lives in the shared pipeline core ([`crate::engine::drive`]);
+//! this module contributes the method callbacks ([`BcdRowStep`]). With
+//! [`SolverOpts::overlap`], the step runs a one-iteration **all-to-all
+//! look-ahead** through the engine's prefetch hooks: iteration `k+1`'s
+//! Theorem-4 exchange is posted (`iall_to_all_start`) as soon as
+//! iteration `k`'s receives have drained, so its payloads are in flight
+//! while this rank computes `G_k` — the Y_cols reassembly no longer waits
+//! on cold receives — and the Lemma-3 load-metering allreduce rides inside
+//! the in-flight exchange (operation tags keep the streams apart). The
+//! reassembled panel, the Gram compute, and the overlap-tensor assembly
+//! all additionally hide under the in-flight `[G|r|w]` reduction.
+//! Payloads and per-source ordering are unchanged, so trajectories and
+//! measured loads are **bitwise identical** to the blocking path.
+//!
+//! The look-ahead engages only for fixed-length runs
+//! ([`SolverOpts::tol`] unset): a mid-run tolerance stop would cancel an
+//! exchange whose messages are already on the wire, so with a tolerance
+//! configured the overlap path falls back to the per-iteration
+//! non-blocking exchange (the pre-engine overlap schedule — load
+//! metering still hides inside the in-flight a2a, the tensor under the
+//! `[G|r|w]` reduction), keeping early-stop wire counts and measured
+//! loads exactly equal to the blocking path.
 
-use crate::comm::Communicator;
+use crate::comm::{AllToAllHandle, Communicator};
+use crate::engine::{drive, CaStep, Method, Problem, Sample, Session};
 use crate::error::{Error, Result};
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -31,7 +47,7 @@ use crate::metrics::{
 };
 use crate::partition::BlockPartition;
 use crate::sampling::{overlap_tensor_into, BlockSampler};
-use crate::solvers::common::{metered_out, objective_value, should_record, SolverOpts};
+use crate::solvers::common::{metered_out, objective_value, SolverOpts};
 
 /// Output of the row-layout primal solver.
 #[derive(Clone, Debug)]
@@ -40,6 +56,7 @@ pub struct RowPrimalOutput {
     pub w_loc: Vec<f64>,
     /// Full w (assembled once at the end, metric path).
     pub w_full: Vec<f64>,
+    /// Trajectory + communication accounting of the run.
     pub history: History,
     /// Max sampled rows owned by any single rank, per outer iteration —
     /// the measured Lemma-3 load (tested against O(ln b / ln ln b)).
@@ -48,12 +65,38 @@ pub struct RowPrimalOutput {
 
 /// Run BCD / CA-BCD with X stored 1D-block-row.
 ///
+/// Thin wrapper over the engine's single entry point (see
+/// [`crate::engine::Session`]). Supports `reg = l2` only; prox
+/// regularizers run through the matched layouts.
+///
 /// * `x_rows` — this rank's `d_loc × n` slab of X (full rows).
 /// * `y_loc` — this rank's slice of y for the column range it owns
 ///   (column ranges are the canonical `BlockPartition::new(n, P)`).
 /// * `d_global`, `d_offset` — feature partition bookkeeping.
 #[allow(clippy::too_many_arguments)]
 pub fn run<C: Communicator>(
+    x_rows: &Matrix,
+    y_loc: &[f64],
+    d_global: usize,
+    d_offset: usize,
+    opts: &SolverOpts,
+    reference: Option<&Reference>,
+    comm: &mut C,
+    backend: &mut dyn ComputeBackend,
+) -> Result<RowPrimalOutput> {
+    let problem = Problem::primal_rows(x_rows, y_loc, d_global, d_offset).with_reference(reference);
+    Session::new(&problem)
+        .opts(opts.clone())
+        .method(Method::CaBcdRow)
+        .backend(backend)
+        .comm(comm)
+        .run()?
+        .into_row_primal()
+}
+
+/// Engine entry point: build the [`BcdRowStep`], drive it, gather `w_full`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn engine_run<C: Communicator>(
     x_rows: &Matrix,
     y_loc: &[f64],
     d_global: usize,
@@ -88,167 +131,370 @@ pub fn run<C: Communicator>(
     }
     let (s, b) = (opts.s, opts.b);
     let sb = s * b;
-    let inv_n = 1.0 / n as f64;
-    let lam = opts.lam;
-
-    let mut w_loc = vec![0.0; d_loc];
-    let mut alpha_loc = vec![0.0; n_loc];
     let mut history = History::default();
-    let mut max_loads = Vec::new();
-
-    // [G | r | w_blk] allreduce payload — the Theorem-4 layout's packed
-    // equivalent, `sb(sb+1)/2 + 2sb` words: G rides as its lower triangle,
-    // and w at the sampled indices is contributed by owners (zeros
-    // elsewhere) and summed — piggybacking the gather on the existing
-    // collective instead of a separate broadcast.
-    let gl = packed_len(sb);
-    let mut buf = vec![0.0; gl + sb + sb];
-    let mut z = vec![0.0; n_loc];
-    let mut overlap = vec![0.0; s * s * b * b];
-    let mut deltas_scratch: Vec<f64>;
-
-    let mut sampler = BlockSampler::new(d_global, opts.seed);
-
-    record(
-        &mut history, 0, &w_loc, &alpha_loc, y_loc, n, lam, reference, comm,
-    )?;
-
-    let outer = opts.outer_iters();
-    'outer_loop: for k in 0..outer {
-        let blocks = sampler.draw_blocks(s, b);
-        let flat: Vec<usize> = blocks.iter().flatten().copied().collect();
-
-        // ---- Theorem-4 all-to-all: row slabs → column slabs -------------
-        // Owner of sampled row i sends, to every rank q, the segment
-        // row_i[q's column range]; everyone reassembles Y_cols (sb × n_loc)
-        // in global sample order (deterministic — shared seed means every
-        // rank knows the full index list and the owner map).
-        let mut send: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
-        let mut owned = 0usize;
-        for &i in &flat {
-            if row_part.owner(i) == rank {
-                owned += 1;
-                let local_row = i - d_offset;
-                for (q, dst) in send.iter_mut().enumerate() {
-                    let (lo, hi) = col_part.range(q);
-                    let start = dst.len();
-                    dst.resize(start + (hi - lo), 0.0);
-                    gather_row_segment(x_rows, local_row, lo, hi, &mut dst[start..])?;
-                }
-            }
-        }
-        // Receive-side length contract: the shared seed means every rank
-        // knows exactly how many sampled rows each owner contributes, so a
-        // mis-sized payload poisons the group instead of desynchronizing
-        // the reassembly below.
-        let mut recv_lens = vec![0usize; p];
-        for &i in &flat {
-            recv_lens[row_part.owner(i)] += n_loc;
-        }
-        // Measured Lemma-3 load: max over ranks of sampled rows owned —
-        // one meter-excluded P-word allreduce. With `opts.overlap` it runs
-        // *inside* the in-flight Theorem-4 all-to-all (the non-blocking
-        // start/wait pair; operation tags keep the two message streams
-        // apart), hiding the metering latency behind the redistribution.
-        // Payloads and per-source ordering are unchanged, so the
-        // trajectory and the measured loads are bitwise identical to the
-        // blocking path.
-        let mut load_buf = vec![0.0f64; p];
-        load_buf[rank] = owned as f64;
-        let received = if opts.overlap {
-            let handle = comm.iall_to_all_start(send, &recv_lens)?;
-            metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
-            comm.iall_to_all_wait(handle)?
-        } else {
-            metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
-            comm.all_to_all_expect(send, &recv_lens)?
-        };
-        max_loads.push(load_buf.iter().fold(0.0f64, |a, &v| a.max(v)) as usize);
-        // Reassemble: rank q's payload lists its owned sampled rows' local
-        // segments in global sample order.
-        let mut y_cols = DenseMatrix::zeros(sb, n_loc);
-        let mut cursor = vec![0usize; p];
-        for (row_slot, &i) in flat.iter().enumerate() {
-            let owner = row_part.owner(i);
-            let seg = &received[owner][cursor[owner]..cursor[owner] + n_loc];
-            y_cols.data_mut()[row_slot * n_loc..(row_slot + 1) * n_loc].copy_from_slice(seg);
-            cursor[owner] += n_loc;
-        }
-        let y_cols = Matrix::Dense(y_cols);
-
-        // ---- From here the matched-layout algorithm proceeds -----------
-        for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
-            *zi = yi - ai;
-        }
-        let all_idx: Vec<usize> = (0..sb).collect();
-        {
-            let (g_buf, rest) = buf.split_at_mut(gl);
-            let (r_buf, w_buf) = rest.split_at_mut(sb);
-            backend.gram_resid(&y_cols, &all_idx, &z, g_buf, r_buf)?;
-            // Contribute owned w entries for the replicated inner solve.
-            w_buf.fill(0.0);
-            for (slot, &i) in flat.iter().enumerate() {
-                if row_part.owner(i) == rank {
-                    w_buf[slot] = w_loc[i - d_offset];
-                }
-            }
-        }
-        // THE allreduce of this outer iteration. In overlap mode the
-        // overlap-tensor assembly (independent of the reduced values) is
-        // hidden behind the in-flight reduction; the payload and reduction
-        // algorithm are unchanged, so the trajectory is bitwise identical.
-        if opts.overlap {
-            // Move the hoisted buffer into the handle and take it back
-            // reduced — no payload copies on the hot path.
-            let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
-            overlap_tensor_into(&blocks, &mut overlap);
-            buf = comm.iallreduce_wait(handle)?;
-        } else {
-            comm.allreduce_sum(&mut buf)?;
-            overlap_tensor_into(&blocks, &mut overlap);
-        }
-        {
-            let (g_buf, rest) = buf.split_at(gl);
-            let (r_buf, w_buf) = rest.split_at(sb);
-            deltas_scratch =
-                backend.ca_inner_solve(s, b, g_buf, r_buf, w_buf, &overlap, lam, inv_n)?;
-        }
-
-        // Deferred updates: w on owners, α on column ranges (both local).
-        for (slot, &i) in flat.iter().enumerate() {
-            if row_part.owner(i) == rank {
-                w_loc[i - d_offset] += deltas_scratch[slot];
-            }
-        }
-        backend.alpha_update(&y_cols, &all_idx, &deltas_scratch, &mut alpha_loc)?;
-
-        let h_now = (k + 1) * s;
-        history.iters = h_now;
-        if should_record(h_now, s, opts) || k + 1 == outer {
-            record(
-                &mut history, h_now, &w_loc, &alpha_loc, y_loc, n, lam, reference, comm,
-            )?;
-            if let (Some(tol), Some(_)) = (opts.tol, reference) {
-                if history.final_obj_err() <= tol {
-                    break 'outer_loop;
-                }
-            }
-        }
-    }
-
-    history.meter = *comm.meter();
+    let mut step = BcdRowStep {
+        x_rows,
+        y_loc,
+        d_offset,
+        reference,
+        backend,
+        s,
+        b,
+        lam: opts.lam,
+        inv_n: 1.0 / n as f64,
+        gl: packed_len(sb),
+        n,
+        n_loc,
+        p,
+        rank,
+        row_part,
+        col_part,
+        overlap: opts.overlap,
+        pipeline: opts.overlap && opts.tol.is_none(),
+        outer: opts.outer_iters(),
+        sampler: BlockSampler::new(d_global, opts.seed),
+        w_loc: vec![0.0; d_loc],
+        alpha_loc: vec![0.0; n_loc],
+        z: vec![0.0; n_loc],
+        all_idx: (0..sb).collect(),
+        overlap_tensor: vec![0.0; s * s * b * b],
+        max_loads: Vec::new(),
+        lookahead: None,
+        pending: None,
+        y_cols: Vec::new(),
+    };
+    drive(&mut step, opts, comm, &mut history)?;
     let w_full = metered_out(comm, |c| {
         let mut full = vec![0.0; d_global];
-        full[d_offset..d_offset + d_loc].copy_from_slice(&w_loc);
+        full[d_offset..d_offset + d_loc].copy_from_slice(&step.w_loc);
         c.allreduce_sum(&mut full)?;
         Ok(full)
     })?;
     Ok(RowPrimalOutput {
-        w_loc,
+        w_loc: step.w_loc,
         w_full,
         history,
-        max_loads,
+        max_loads: step.max_loads,
     })
+}
+
+/// The row-layout primal method's per-iteration callbacks, including the
+/// Theorem-4 redistribution and (in overlap mode) its one-iteration
+/// look-ahead pipeline.
+pub(crate) struct BcdRowStep<'a> {
+    x_rows: &'a Matrix,
+    y_loc: &'a [f64],
+    d_offset: usize,
+    reference: Option<&'a Reference>,
+    backend: &'a mut dyn ComputeBackend,
+    s: usize,
+    b: usize,
+    lam: f64,
+    inv_n: f64,
+    gl: usize,
+    n: usize,
+    n_loc: usize,
+    p: usize,
+    rank: usize,
+    row_part: BlockPartition,
+    col_part: BlockPartition,
+    overlap: bool,
+    /// Whether the one-iteration a2a look-ahead is active (overlap mode
+    /// with no tolerance stop — see the module docs).
+    pipeline: bool,
+    outer: usize,
+    sampler: BlockSampler,
+    w_loc: Vec<f64>,
+    alpha_loc: Vec<f64>,
+    z: Vec<f64>,
+    all_idx: Vec<usize>,
+    overlap_tensor: Vec<f64>,
+    max_loads: Vec<usize>,
+    /// Overlap mode: a sample drawn ahead of the engine's `sample(k)` call
+    /// (its exchange is already in flight).
+    lookahead: Option<Sample>,
+    /// Overlap mode: the in-flight Theorem-4 exchange for iteration `.0`.
+    pending: Option<(usize, AllToAllHandle)>,
+    /// Reassembled `sb × n_loc` panels keyed by outer iteration (at most
+    /// two live at once under the prefetch schedule).
+    y_cols: Vec<(usize, Matrix)>,
+}
+
+impl<'a> BcdRowStep<'a> {
+    fn draw(&mut self, k: usize) -> Sample {
+        Sample::flatten(k, self.sampler.draw_blocks(self.s, self.b), self.b)
+    }
+
+    /// Build the Theorem-4 send buffers and receive-length contracts for
+    /// `smp`: the owner of sampled row i sends, to every rank q, the
+    /// segment `row_i[q's column range]`. The shared seed means every rank
+    /// knows the full index list and the owner map, so `recv_lens` (and
+    /// the reassembly below) are deterministic.
+    fn build_exchange(&self, smp: &Sample) -> Result<(Vec<Vec<f64>>, Vec<usize>, usize)> {
+        let mut send: Vec<Vec<f64>> = (0..self.p).map(|_| Vec::new()).collect();
+        let mut owned = 0usize;
+        for &i in &smp.idx {
+            if self.row_part.owner(i) == self.rank {
+                owned += 1;
+                let local_row = i - self.d_offset;
+                for (q, dst) in send.iter_mut().enumerate() {
+                    let (lo, hi) = self.col_part.range(q);
+                    let start = dst.len();
+                    dst.resize(start + (hi - lo), 0.0);
+                    gather_row_segment(self.x_rows, local_row, lo, hi, &mut dst[start..])?;
+                }
+            }
+        }
+        // Receive-side length contract: a mis-sized payload poisons the
+        // group instead of desynchronizing the reassembly.
+        let mut recv_lens = vec![0usize; self.p];
+        for &i in &smp.idx {
+            recv_lens[self.row_part.owner(i)] += self.n_loc;
+        }
+        Ok((send, recv_lens, owned))
+    }
+
+    /// Measured Lemma-3 load for this iteration: max over ranks of sampled
+    /// rows owned — one meter-excluded P-word allreduce. In overlap mode
+    /// it runs *inside* the in-flight Theorem-4 exchange.
+    fn meter_load<C: Communicator>(&mut self, comm: &mut C, owned: usize) -> Result<()> {
+        let mut load_buf = vec![0.0f64; self.p];
+        load_buf[self.rank] = owned as f64;
+        metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
+        self.max_loads
+            .push(load_buf.iter().fold(0.0f64, |a, &v| a.max(v)) as usize);
+        Ok(())
+    }
+
+    /// Overlap mode: post `smp`'s exchange non-blockingly and hide the
+    /// load-metering allreduce inside it (operation tags keep the two
+    /// message streams apart).
+    fn post_exchange<C: Communicator>(&mut self, comm: &mut C, smp: &Sample) -> Result<()> {
+        let (send, recv_lens, owned) = self.build_exchange(smp)?;
+        let handle = comm.iall_to_all_start(send, &recv_lens)?;
+        self.pending = Some((smp.k, handle));
+        self.meter_load(comm, owned)
+    }
+
+    /// Run (or complete) `smp`'s Theorem-4 exchange and reassemble its
+    /// `Y_cols` panel into `self.y_cols`. In overlap mode the exchange
+    /// was posted in [`CaStep::sample`] and is drained here; the blocking
+    /// path meters the Lemma-3 load first, then exchanges.
+    fn acquire_panel<C: Communicator>(&mut self, comm: &mut C, smp: &Sample) -> Result<()> {
+        let received = if self.overlap {
+            let (k, handle) = self.pending.take().expect("exchange posted for iteration");
+            debug_assert_eq!(k, smp.k, "exchange/iteration mismatch");
+            comm.iall_to_all_wait(handle)?
+        } else {
+            // Blocking path: load metering first, then the exchange.
+            let (send, recv_lens, owned) = self.build_exchange(smp)?;
+            self.meter_load(comm, owned)?;
+            comm.all_to_all_expect(send, &recv_lens)?
+        };
+        self.reassemble(smp, received);
+        Ok(())
+    }
+
+    /// z = y − α (this rank's column range), refreshed once per
+    /// iteration before the residual kernel.
+    fn refresh_z(&mut self) {
+        for ((zi, yi), ai) in self.z.iter_mut().zip(self.y_loc).zip(&self.alpha_loc) {
+            *zi = yi - ai;
+        }
+    }
+
+    /// Contribute this rank's owned `w` entries at the sampled indices
+    /// into the payload's `w` segment (zeros elsewhere; the allreduce
+    /// sums the contributions into the replicated gather).
+    fn fill_owned_w(&self, smp: &Sample, w_buf: &mut [f64]) {
+        w_buf.fill(0.0);
+        for (slot, &i) in smp.idx.iter().enumerate() {
+            if self.row_part.owner(i) == self.rank {
+                w_buf[slot] = self.w_loc[i - self.d_offset];
+            }
+        }
+    }
+
+    /// Reassemble the `sb × n_loc` column panel from the per-owner
+    /// payloads: rank q's payload lists its owned sampled rows' local
+    /// segments in global sample order.
+    fn reassemble(&mut self, smp: &Sample, received: Vec<Vec<f64>>) {
+        let sb = self.s * self.b;
+        let mut panel = DenseMatrix::zeros(sb, self.n_loc);
+        let mut cursor = vec![0usize; self.p];
+        for (row_slot, &i) in smp.idx.iter().enumerate() {
+            let owner = self.row_part.owner(i);
+            let seg = &received[owner][cursor[owner]..cursor[owner] + self.n_loc];
+            panel.data_mut()[row_slot * self.n_loc..(row_slot + 1) * self.n_loc]
+                .copy_from_slice(seg);
+            cursor[owner] += self.n_loc;
+        }
+        self.y_cols.push((smp.k, Matrix::Dense(panel)));
+    }
+}
+
+/// Look up iteration `k`'s reassembled panel. A free function (not a
+/// method) so callers keep field-precise borrows: the panel reference
+/// pins only `y_cols` while the mutable backend call runs.
+fn find_panel(y_cols: &[(usize, Matrix)], k: usize) -> &Matrix {
+    &y_cols
+        .iter()
+        .find(|(kk, _)| *kk == k)
+        .expect("Y_cols panel present for iteration")
+        .1
+}
+
+impl<C: Communicator> CaStep<C> for BcdRowStep<'_> {
+    fn payload_split(&self) -> (usize, usize) {
+        // [G | r | w_blk] — the Theorem-4 layout's packed payload,
+        // `sb(sb+1)/2 + 2sb` words: G rides as its lower triangle, and w
+        // at the sampled indices is contributed by owners (zeros
+        // elsewhere) and summed — piggybacking the gather on the existing
+        // collective instead of a separate broadcast.
+        (self.gl, 2 * self.s * self.b)
+    }
+
+    fn prefetch_gram(&self) -> bool {
+        // The panel exchange + reassembly + Gram compute are all pure
+        // functions of X and the shared-seed sample stream, so the engine
+        // may run them one iteration ahead, under the in-flight [G|r|w]
+        // reduction — unless a tolerance stop is configured (a cancelled
+        // iteration must not have communicated; see the module docs).
+        self.pipeline
+    }
+
+    fn sample(&mut self, comm: &mut C, k: usize) -> Result<Sample> {
+        if let Some(ahead) = self.lookahead.take() {
+            debug_assert_eq!(ahead.k, k, "look-ahead sample out of order");
+            return Ok(ahead);
+        }
+        let smp = self.draw(k);
+        if self.overlap {
+            // First iteration (no look-ahead yet): post its exchange now.
+            self.post_exchange(comm, &smp)?;
+        }
+        Ok(smp)
+    }
+
+    fn local_gram(&mut self, comm: &mut C, smp: &Sample, head: &mut [f64]) -> Result<()> {
+        self.acquire_panel(comm, smp)?;
+        if self.pipeline && smp.k + 1 < self.outer {
+            // Look-ahead: draw iteration k+1 and post its exchange before
+            // computing G_k, so the redistribution payloads fly while this
+            // rank crunches the Gram (and, one level up, while the
+            // engine's [G|r|w] reduction for iteration k−1 is in flight).
+            let nxt = self.draw(smp.k + 1);
+            self.post_exchange(comm, &nxt)?;
+            self.lookahead = Some(nxt);
+        }
+        let panel = find_panel(&self.y_cols, smp.k);
+        self.backend.gram_only(panel, &self.all_idx, head)
+    }
+
+    fn local_state(&mut self, smp: &Sample, tail: &mut [f64]) -> Result<()> {
+        self.refresh_z();
+        let sb = self.s * self.b;
+        let (r_buf, w_buf) = tail.split_at_mut(sb);
+        {
+            let panel = find_panel(&self.y_cols, smp.k);
+            self.backend
+                .resid_only(panel, &self.all_idx, &self.z, r_buf)?;
+        }
+        self.fill_owned_w(smp, w_buf);
+        Ok(())
+    }
+
+    fn local_payload(
+        &mut self,
+        comm: &mut C,
+        smp: &Sample,
+        head: &mut [f64],
+        tail: &mut [f64],
+    ) -> Result<()> {
+        // Same-iteration panel + gram + residual (blocking and
+        // non-prefetch overlap schedules): exchange, then one fused
+        // backend call, exactly like the pre-engine loop.
+        self.acquire_panel(comm, smp)?;
+        self.refresh_z();
+        let sb = self.s * self.b;
+        let (r_buf, w_buf) = tail.split_at_mut(sb);
+        {
+            let panel = find_panel(&self.y_cols, smp.k);
+            self.backend
+                .gram_resid(panel, &self.all_idx, &self.z, head, r_buf)?;
+        }
+        self.fill_owned_w(smp, w_buf);
+        Ok(())
+    }
+
+    fn hidden_work(&mut self, smp: &Sample) -> Result<()> {
+        overlap_tensor_into(&smp.blocks, &mut self.overlap_tensor);
+        Ok(())
+    }
+
+    fn inner_solve(&mut self, _smp: &Sample, head: &[f64], tail: &[f64]) -> Result<Vec<f64>> {
+        let sb = self.s * self.b;
+        let (r_buf, w_buf) = tail.split_at(sb);
+        self.backend.ca_inner_solve(
+            self.s,
+            self.b,
+            head,
+            r_buf,
+            w_buf,
+            &self.overlap_tensor,
+            self.lam,
+            self.inv_n,
+        )
+    }
+
+    fn apply(&mut self, smp: &Sample, deltas: &[f64]) -> Result<()> {
+        // Deferred updates: w on owners, α on column ranges (both local).
+        for (slot, &i) in smp.idx.iter().enumerate() {
+            if self.row_part.owner(i) == self.rank {
+                self.w_loc[i - self.d_offset] += deltas[slot];
+            }
+        }
+        // Take the panel out for the α update; it is dead afterwards (at
+        // most one other panel — the prefetched one — stays live).
+        let pos = self
+            .y_cols
+            .iter()
+            .position(|(kk, _)| *kk == smp.k)
+            .expect("panel present in apply");
+        let (_, panel) = self.y_cols.swap_remove(pos);
+        self.backend
+            .alpha_update(&panel, &self.all_idx, deltas, &mut self.alpha_loc)?;
+        Ok(())
+    }
+
+    fn record(&mut self, comm: &mut C, history: &mut History, h_now: usize) -> Result<()> {
+        record(
+            history,
+            h_now,
+            &self.w_loc,
+            &self.alpha_loc,
+            self.y_loc,
+            self.n,
+            self.lam,
+            self.reference,
+            comm,
+        )
+    }
+
+    fn converged(&self, history: &History, tol: f64) -> bool {
+        self.reference.is_some() && history.final_obj_err() <= tol
+    }
+
+    fn flush(&mut self, comm: &mut C) -> Result<()> {
+        // Early stop can leave a look-ahead exchange in flight: drain it
+        // so later collectives (the final w gather) see a clean stream.
+        if let Some((_, handle)) = self.pending.take() {
+            comm.iall_to_all_wait(handle)?;
+        }
+        self.lookahead = None;
+        self.y_cols.clear();
+        Ok(())
+    }
 }
 
 fn gather_row_segment(
@@ -407,6 +653,56 @@ mod tests {
             }
             // Every outer iteration performed one all-to-all.
             assert_eq!(outs[0].history.meter.all_to_alls, 24 / 4, "P={p}");
+        }
+    }
+
+    /// Satellite acceptance: the look-ahead a2a pipeline (overlap mode)
+    /// is bitwise-equivalent to the blocking path SPMD — trajectories,
+    /// measured Lemma-3 loads, and wire counts all identical.
+    #[test]
+    fn overlapped_a2a_pipeline_is_bitwise_equal_to_blocking() {
+        let (x, y) = toy(16, 40, 3);
+        let p = 4usize;
+        let mk = |overlap: bool| SolverOpts {
+            b: 4,
+            s: 2,
+            lam: 0.15,
+            iters: 16,
+            seed: 9,
+            record_every: 0,
+            overlap,
+            ..Default::default()
+        };
+        let row_part = BlockPartition::new(16, p);
+        let col_part = BlockPartition::new(40, p);
+        let x2 = &x;
+        let y2 = &y;
+        let mut runs = Vec::new();
+        for overlap in [false, true] {
+            let opts = mk(overlap);
+            let outs = run_spmd(p, move |rank, comm| {
+                let (rlo, rhi) = row_part.range(rank);
+                let (clo, chi) = col_part.range(rank);
+                let idx: Vec<usize> = (rlo..rhi).collect();
+                let mut slab = vec![0.0; idx.len() * 40];
+                x2.gather_rows(&idx, &mut slab).unwrap();
+                let slab = Matrix::Dense(DenseMatrix::from_vec(idx.len(), 40, slab));
+                let mut be = NativeBackend::new();
+                run(&slab, &y2[clo..chi], 16, rlo, &opts, None, comm, &mut be).unwrap()
+            });
+            runs.push(outs);
+        }
+        for (rank, (ob, oo)) in runs[0].iter().zip(&runs[1]).enumerate() {
+            assert_eq!(ob.w_full, oo.w_full, "rank {rank}: trajectory diverged");
+            assert_eq!(ob.w_loc, oo.w_loc, "rank {rank}: w_loc diverged");
+            assert_eq!(ob.max_loads, oo.max_loads, "rank {rank}: loads diverged");
+            let (mb, mo) = (&ob.history.meter, &oo.history.meter);
+            assert_eq!(mb.allreduces, mo.allreduces, "rank {rank}");
+            assert_eq!(mb.all_to_alls, mo.all_to_alls, "rank {rank}");
+            assert_eq!(mb.msgs, mo.msgs, "rank {rank}");
+            assert_eq!(mb.words, mo.words, "rank {rank}");
+            assert_eq!(mb.recv_msgs, mo.recv_msgs, "rank {rank}");
+            assert_eq!(mb.recv_words, mo.recv_words, "rank {rank}");
         }
     }
 

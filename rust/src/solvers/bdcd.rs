@@ -15,13 +15,15 @@
 //! subproblem solves of eq. (18), then the deferred updates
 //! `α[J_t] += Δα_t` (replicated) and `w_loc -= (1/λn)·A_loc[J,:]ᵀ δ`.
 //!
-//! With [`SolverOpts::overlap`] the iteration is software-pipelined like
-//! the primal solver: `G_{k+1}` (a function of A and the shared-seed
-//! sample stream only) is computed while `[G_k | r_k]` reduces through the
-//! non-blocking allreduce — one collective per outer iteration, bitwise
-//! identical trajectory.
+//! The loop lives in the shared pipeline core ([`crate::engine::drive`]);
+//! this module contributes the method callbacks ([`BdcdStep`]). With
+//! [`SolverOpts::overlap`] the engine's prefetch schedule computes
+//! `G_{k+1}` (a function of A and the shared-seed sample stream only)
+//! while `[G_k | r_k]` reduces through the non-blocking allreduce — one
+//! collective per outer iteration, bitwise identical trajectory.
 
 use crate::comm::Communicator;
+use crate::engine::{drive, CaStep, Method, Problem, Sample, Session};
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -30,12 +32,13 @@ use crate::metrics::{
     relative_objective_error, relative_solution_error, History, IterRecord, Reference,
 };
 use crate::sampling::{overlap_tensor_into, BlockSampler};
-use crate::solvers::common::{
-    cond_stride, flatten_blocks, metered_out, objective_value, packed_gram_cond,
-    should_record, DualOutput, SolverOpts,
-};
+use crate::solvers::common::{metered_out, objective_value, DualOutput, SolverOpts};
 
 /// Run BDCD / CA-BDCD on this rank's shard.
+///
+/// Thin wrapper over the engine's single entry point (see
+/// [`crate::engine::Session`]); non-L2 regularizers route through the
+/// CA-Prox-BDCD loop.
 ///
 /// * `a_loc` — `n × d_loc` local column block of `A = Xᵀ`.
 /// * `y` — full (replicated) label vector, length n.
@@ -52,138 +55,19 @@ pub fn run<C: Communicator>(
     comm: &mut C,
     backend: &mut dyn ComputeBackend,
 ) -> Result<DualOutput> {
-    if !opts.reg.is_exact_l2() {
-        // Non-smooth dual regularizer: the CA-Prox-BDCD loop.
-        return crate::prox::bdcd::run(a_loc, y, d_global, d_offset, opts, comm, backend);
-    }
-    if opts.overlap {
-        return run_overlapped(a_loc, y, d_global, d_offset, opts, reference, comm, backend);
-    }
-    let n = a_loc.rows();
-    let d_loc = a_loc.cols();
-    opts.validate(n)?;
-    let (s, b) = (opts.s, opts.b);
-    let sb = s * b;
-    let inv_n = 1.0 / n as f64;
-    let lam = opts.lam;
-
-    // α₀ = 0 → w₀ = −(1/λn)·X·0 = 0.
-    let mut alpha = vec![0.0; n];
-    let mut w_loc = vec![0.0; d_loc];
-    let mut history = History::default();
-
-    let gl = packed_len(sb);
-    let mut buf = vec![0.0; gl + sb]; // packed [G | r] allreduce payload
-    let mut a_blocks = vec![0.0; sb];
-    let mut y_blocks = vec![0.0; sb];
-    let mut gram_scaled = vec![0.0; sb * sb];
-    let mut idx_flat = vec![0usize; sb];
-    let mut scaled_deltas = vec![0.0; sb];
-    let mut overlap = vec![0.0; s * s * b * b];
-
-    let mut sampler = BlockSampler::new(n, opts.seed);
-
-    record(
-        &mut history,
-        0,
-        &w_loc,
-        d_global,
-        d_offset,
-        a_loc,
-        y,
-        lam,
-        reference,
-        comm,
-    )?;
-
-    let outer = opts.outer_iters();
-    let stride = cond_stride(sb, outer);
-    'outer_loop: for k in 0..outer {
-        let blocks = sampler.draw_blocks(s, b);
-        flatten_blocks(&blocks, b, &mut idx_flat);
-
-        // Raw partial Gram + residual (contracting along the local feature
-        // slice): G_part = A[J,:]·A[J,:]ᵀ (packed), r_part = A[J,:]·w_loc.
-        let (g_buf, r_buf) = buf.split_at_mut(gl);
-        backend.gram_resid(a_loc, &idx_flat, &w_loc, g_buf, r_buf)?;
-
-        // THE communication of this outer iteration.
-        comm.allreduce_sum(&mut buf)?;
-
-        if opts.track_gram_cond && k % stride == 0 {
-            // Θ-scale Gram: G' = (1/λn²)·raw + (1/n)I (paper Figs. 7i–l).
-            history.gram_conds.push(packed_gram_cond(
-                &buf,
-                sb,
-                inv_n * inv_n / lam,
-                inv_n,
-                &mut gram_scaled,
-            ));
-        }
-
-        // Replicated dual inner solve (eq. 18).
-        overlap_tensor_into(&blocks, &mut overlap);
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                a_blocks[j * b + i] = alpha[row];
-                y_blocks[j * b + i] = y[row];
-            }
-        }
-        let (g_buf, r_buf) = buf.split_at(gl);
-        let deltas = backend.ca_dual_inner_solve(
-            s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n,
-        )?;
-
-        // Deferred updates (eqs. 19–20).
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                alpha[row] += deltas[j * b + i];
-            }
-        }
-        let scale = -1.0 / (lam * n as f64);
-        for (sd, &dv) in scaled_deltas.iter_mut().zip(&deltas) {
-            *sd = scale * dv;
-        }
-        backend.alpha_update(a_loc, &idx_flat, &scaled_deltas, &mut w_loc)?;
-
-        let h_now = (k + 1) * s;
-        history.iters = h_now;
-        if should_record(h_now, s, opts) || k + 1 == outer {
-            record(
-                &mut history,
-                h_now,
-                &w_loc,
-                d_global,
-                d_offset,
-                a_loc,
-                y,
-                lam,
-                reference,
-                comm,
-            )?;
-            if let (Some(tol), Some(_)) = (opts.tol, reference) {
-                if history.final_obj_err() <= tol {
-                    break 'outer_loop;
-                }
-            }
-        }
-    }
-
-    history.meter = *comm.meter();
-    let w_full = gather_w(&w_loc, d_global, d_offset, comm)?;
-    Ok(DualOutput {
-        w_loc,
-        w_full,
-        alpha,
-        history,
-    })
+    let problem = Problem::dual(a_loc, y, d_global, d_offset).with_reference(reference);
+    Session::new(&problem)
+        .opts(opts.clone())
+        .method(Method::CaBdcd)
+        .backend(backend)
+        .comm(comm)
+        .run()?
+        .into_dual()
 }
 
-/// Software-pipelined variant (`opts.overlap`): `[G_k | r_k]` reduces
-/// non-blockingly while `G_{k+1}` and the overlap tensor are computed.
-/// One collective per outer iteration, bitwise identical to blocking.
+/// Engine entry point: build the [`BdcdStep`], drive it, gather `w_full`.
 #[allow(clippy::too_many_arguments)]
-fn run_overlapped<C: Communicator>(
+pub(crate) fn engine_run<C: Communicator>(
     a_loc: &Matrix,
     y: &[f64],
     d_global: usize,
@@ -198,142 +82,169 @@ fn run_overlapped<C: Communicator>(
     opts.validate(n)?;
     let (s, b) = (opts.s, opts.b);
     let sb = s * b;
-    let gl = packed_len(sb);
-    let inv_n = 1.0 / n as f64;
-    let lam = opts.lam;
-
-    let mut alpha = vec![0.0; n];
-    let mut w_loc = vec![0.0; d_loc];
     let mut history = History::default();
-
-    let mut a_blocks = vec![0.0; sb];
-    let mut y_blocks = vec![0.0; sb];
-    let mut gram_scaled = vec![0.0; sb * sb];
-    let mut idx_cur = vec![0usize; sb];
-    let mut idx_next = vec![0usize; sb];
-    let mut scaled_deltas = vec![0.0; sb];
-    let mut overlap = vec![0.0; s * s * b * b];
-
-    let mut sampler = BlockSampler::new(n, opts.seed);
-
-    record(
-        &mut history,
-        0,
-        &w_loc,
-        d_global,
-        d_offset,
+    let mut step = BdcdStep {
         a_loc,
         y,
-        lam,
+        d_offset,
         reference,
-        comm,
-    )?;
-
-    let outer = opts.outer_iters();
-    let stride = cond_stride(sb, outer);
-
-    let mut blocks: Vec<Vec<usize>> = Vec::new();
-    let mut next_buf: Vec<f64> = Vec::new();
-    if outer > 0 {
-        blocks = sampler.draw_blocks(s, b);
-        flatten_blocks(&blocks, b, &mut idx_cur);
-        next_buf = comm.take_buf(gl + sb);
-        backend.gram_only(a_loc, &idx_cur, &mut next_buf[..gl])?;
-    }
-    'outer_loop: for k in 0..outer {
-        let mut buf = std::mem::take(&mut next_buf); // holds G_k (packed)
-
-        // r_k = A_loc[J,:] · w_loc into the buffer tail.
-        backend.resid_only(a_loc, &idx_cur, &w_loc, &mut buf[gl..])?;
-
-        // THE communication of this outer iteration — non-blocking.
-        let handle = comm.iallreduce_start(buf)?;
-
-        // ---- local work hidden behind the in-flight reduction -----------
-        let mut pending_blocks: Option<Vec<Vec<usize>>> = None;
-        if k + 1 < outer {
-            let nb = sampler.draw_blocks(s, b);
-            flatten_blocks(&nb, b, &mut idx_next);
-            next_buf = comm.take_buf(gl + sb);
-            backend.gram_only(a_loc, &idx_next, &mut next_buf[..gl])?;
-            pending_blocks = Some(nb);
-        }
-        overlap_tensor_into(&blocks, &mut overlap);
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                a_blocks[j * b + i] = alpha[row];
-                y_blocks[j * b + i] = y[row];
-            }
-        }
-        // ------------------------------------------------------------------
-        let buf = comm.iallreduce_wait(handle)?;
-
-        if opts.track_gram_cond && k % stride == 0 {
-            history.gram_conds.push(packed_gram_cond(
-                &buf,
-                sb,
-                inv_n * inv_n / lam,
-                inv_n,
-                &mut gram_scaled,
-            ));
-        }
-
-        // Replicated dual inner solve (eq. 18) and deferred updates.
-        let (g_buf, r_buf) = buf.split_at(gl);
-        let deltas = backend.ca_dual_inner_solve(
-            s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n,
-        )?;
-        for (j, blk) in blocks.iter().enumerate() {
-            for (i, &row) in blk.iter().enumerate() {
-                alpha[row] += deltas[j * b + i];
-            }
-        }
-        let scale = -1.0 / (lam * n as f64);
-        for (sd, &dv) in scaled_deltas.iter_mut().zip(&deltas) {
-            *sd = scale * dv;
-        }
-        backend.alpha_update(a_loc, &idx_cur, &scaled_deltas, &mut w_loc)?;
-        comm.give_buf(buf);
-
-        if let Some(nb) = pending_blocks {
-            blocks = nb;
-            std::mem::swap(&mut idx_cur, &mut idx_next);
-        }
-
-        let h_now = (k + 1) * s;
-        history.iters = h_now;
-        if should_record(h_now, s, opts) || k + 1 == outer {
-            record(
-                &mut history,
-                h_now,
-                &w_loc,
-                d_global,
-                d_offset,
-                a_loc,
-                y,
-                lam,
-                reference,
-                comm,
-            )?;
-            if let (Some(tol), Some(_)) = (opts.tol, reference) {
-                if history.final_obj_err() <= tol {
-                    break 'outer_loop;
-                }
-            }
-        }
-    }
-    if !next_buf.is_empty() {
-        comm.give_buf(next_buf);
-    }
-
-    history.meter = *comm.meter();
-    let w_full = gather_w(&w_loc, d_global, d_offset, comm)?;
+        backend,
+        s,
+        b,
+        lam: opts.lam,
+        inv_n: 1.0 / n as f64,
+        w_scale: -1.0 / (opts.lam * n as f64),
+        gl: packed_len(sb),
+        sampler: BlockSampler::new(n, opts.seed),
+        // α₀ = 0 → w₀ = −(1/λn)·X·0 = 0.
+        alpha: vec![0.0; n],
+        w_loc: vec![0.0; d_loc],
+        a_blocks: vec![0.0; sb],
+        y_blocks: vec![0.0; sb],
+        scaled_deltas: vec![0.0; sb],
+        overlap: vec![0.0; s * s * b * b],
+    };
+    drive(&mut step, opts, comm, &mut history)?;
+    let w_full = gather_w(&step.w_loc, d_global, d_offset, comm)?;
     Ok(DualOutput {
-        w_loc,
+        w_loc: step.w_loc,
         w_full,
-        alpha,
+        alpha: step.alpha,
         history,
     })
+}
+
+/// The matched-layout dual method's per-iteration callbacks.
+pub(crate) struct BdcdStep<'a> {
+    a_loc: &'a Matrix,
+    y: &'a [f64],
+    d_offset: usize,
+    reference: Option<&'a Reference>,
+    backend: &'a mut dyn ComputeBackend,
+    s: usize,
+    b: usize,
+    lam: f64,
+    inv_n: f64,
+    /// `−1/(λn)`, the deferred w-update scale of eq. (20) — precomputed
+    /// with the exact expression the classical loop used so the
+    /// trajectory stays bitwise identical.
+    w_scale: f64,
+    gl: usize,
+    sampler: BlockSampler,
+    /// Replicated dual iterate.
+    alpha: Vec<f64>,
+    /// This rank's slice of w = −(1/λn)·Xα.
+    w_loc: Vec<f64>,
+    a_blocks: Vec<f64>,
+    y_blocks: Vec<f64>,
+    scaled_deltas: Vec<f64>,
+    overlap: Vec<f64>,
+}
+
+impl<C: Communicator> CaStep<C> for BdcdStep<'_> {
+    fn payload_split(&self) -> (usize, usize) {
+        (self.gl, self.s * self.b)
+    }
+
+    fn prefetch_gram(&self) -> bool {
+        true
+    }
+
+    fn sample(&mut self, _comm: &mut C, k: usize) -> Result<Sample> {
+        Ok(Sample::flatten(
+            k,
+            self.sampler.draw_blocks(self.s, self.b),
+            self.b,
+        ))
+    }
+
+    fn local_gram(&mut self, _comm: &mut C, smp: &Sample, head: &mut [f64]) -> Result<()> {
+        // Raw partial Gram (contracting along the local feature slice):
+        // G_part = A[J,:]·A[J,:]ᵀ (packed).
+        self.backend.gram_only(self.a_loc, &smp.idx, head)
+    }
+
+    fn local_state(&mut self, smp: &Sample, tail: &mut [f64]) -> Result<()> {
+        // r_part = A[J,:]·w_loc into the payload tail.
+        self.backend
+            .resid_only(self.a_loc, &smp.idx, &self.w_loc, tail)
+    }
+
+    fn local_payload(
+        &mut self,
+        _comm: &mut C,
+        smp: &Sample,
+        head: &mut [f64],
+        tail: &mut [f64],
+    ) -> Result<()> {
+        // Same-iteration gram + residual: one fused backend call, like
+        // the pre-engine blocking loop.
+        self.backend
+            .gram_resid(self.a_loc, &smp.idx, &self.w_loc, head, tail)
+    }
+
+    fn hidden_work(&mut self, smp: &Sample) -> Result<()> {
+        overlap_tensor_into(&smp.blocks, &mut self.overlap);
+        for (j, blk) in smp.blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                self.a_blocks[j * self.b + i] = self.alpha[row];
+                self.y_blocks[j * self.b + i] = self.y[row];
+            }
+        }
+        Ok(())
+    }
+
+    fn cond_probe(&self) -> Option<(f64, f64)> {
+        // Θ-scale Gram: G' = (1/λn²)·raw + (1/n)I (paper Figs. 7i–l).
+        Some((self.inv_n * self.inv_n / self.lam, self.inv_n))
+    }
+
+    fn inner_solve(&mut self, _smp: &Sample, head: &[f64], tail: &[f64]) -> Result<Vec<f64>> {
+        // Replicated dual inner solve (eq. 18).
+        self.backend.ca_dual_inner_solve(
+            self.s,
+            self.b,
+            head,
+            tail,
+            &self.a_blocks,
+            &self.y_blocks,
+            &self.overlap,
+            self.lam,
+            self.inv_n,
+        )
+    }
+
+    fn apply(&mut self, smp: &Sample, deltas: &[f64]) -> Result<()> {
+        // Deferred updates (eqs. 19–20).
+        for (j, blk) in smp.blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                self.alpha[row] += deltas[j * self.b + i];
+            }
+        }
+        for (sd, &dv) in self.scaled_deltas.iter_mut().zip(deltas) {
+            *sd = self.w_scale * dv;
+        }
+        self.backend
+            .alpha_update(self.a_loc, &smp.idx, &self.scaled_deltas, &mut self.w_loc)
+    }
+
+    fn record(&mut self, comm: &mut C, history: &mut History, h_now: usize) -> Result<()> {
+        record(
+            history,
+            h_now,
+            &self.w_loc,
+            self.d_offset,
+            self.a_loc,
+            self.y,
+            self.lam,
+            self.reference,
+            comm,
+        )
+    }
+
+    fn converged(&self, history: &History, tol: f64) -> bool {
+        self.reference.is_some() && history.final_obj_err() <= tol
+    }
 }
 
 /// Assemble the full w by summing zero-padded local slices (metric path).
@@ -359,7 +270,6 @@ fn record<C: Communicator>(
     history: &mut History,
     iter: usize,
     w_loc: &[f64],
-    _d_global: usize,
     d_offset: usize,
     a_loc: &Matrix,
     y: &[f64],

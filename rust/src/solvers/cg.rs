@@ -18,10 +18,13 @@ use crate::solvers::common::{metered_out, objective_value};
 /// CG options.
 #[derive(Clone, Debug)]
 pub struct CgOpts {
+    /// Regularization λ.
     pub lam: f64,
+    /// Iteration cap.
     pub max_iters: usize,
     /// Stop when ‖residual‖/‖rhs‖ ≤ tol.
     pub tol: f64,
+    /// Record convergence metrics every this many iterations (0 = ends).
     pub record_every: usize,
 }
 
@@ -39,8 +42,11 @@ impl Default for CgOpts {
 /// CG output: replicated solution + iteration count + trajectory.
 #[derive(Clone, Debug)]
 pub struct CgOutput {
+    /// Replicated CG solution.
     pub w: Vec<f64>,
+    /// Iterations executed before the residual tolerance was met.
     pub iters: usize,
+    /// Trajectory + communication accounting of the run.
     pub history: History,
 }
 

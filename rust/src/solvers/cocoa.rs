@@ -9,7 +9,11 @@
 //! One round: every rank performs `local_iters` single-coordinate dual
 //! updates (SDCA with least-squares loss, b′=1) over its own data points
 //! against a stale local copy of w, then the Δw contributions are averaged
-//! (γ = 1/P, the safe CoCoA combiner) with ONE allreduce.
+//! (γ = 1/P, the safe CoCoA combiner) with ONE allreduce. The round loop
+//! runs through the shared pipeline core ([`crate::engine::drive`]) with a
+//! `d`-word state-only payload; in overlap mode the engine hides the
+//! local dual-block commit (independent of the combined Δw) behind the
+//! in-flight non-blocking reduction — bitwise identical to blocking.
 //!
 //! Note on the packed-Gram wire format used by the CA solvers: CoCoA has
 //! no `[G|r]` payload to pack — its one collective per round is the
@@ -18,22 +22,28 @@
 //! `tests/packed_gram.rs`).
 
 use crate::comm::Communicator;
+use crate::engine::{drive, CaStep, Sample};
 use crate::error::Result;
 use crate::matrix::Matrix;
 use crate::metrics::{relative_objective_error, relative_solution_error, History, IterRecord,
     Reference};
+use crate::prox::Reg;
 use crate::sampling::BlockSampler;
-use crate::solvers::common::{metered_out, objective_value};
+use crate::solvers::common::{metered_out, objective_value, SolverOpts};
 
 /// CoCoA options.
 #[derive(Clone, Debug)]
 pub struct CocoaOpts {
+    /// Regularization λ.
     pub lam: f64,
     /// Outer (communication) rounds.
     pub rounds: usize,
     /// Local dual coordinate updates per round.
     pub local_iters: usize,
+    /// Base sampling seed (decorrelated per rank — CoCoA *wants* each
+    /// rank to walk its own coordinates).
     pub seed: u64,
+    /// Record convergence metrics every this many rounds (0 = start/end).
     pub record_every: usize,
     /// Reduce the Δw contribution with the non-blocking allreduce, hiding
     /// it behind the local dual-block commit (which is independent of the
@@ -57,8 +67,11 @@ impl Default for CocoaOpts {
 /// Output: replicated w, this rank's dual slice, history.
 #[derive(Clone, Debug)]
 pub struct CocoaOutput {
+    /// Replicated primal iterate.
     pub w: Vec<f64>,
+    /// This rank's dual block.
     pub alpha_loc: Vec<f64>,
+    /// Trajectory + communication accounting of the run.
     pub history: History,
 }
 
@@ -73,13 +86,7 @@ pub fn run<C: Communicator>(
 ) -> Result<CocoaOutput> {
     let d = a_loc.rows();
     let n_loc = a_loc.cols();
-    let lam = opts.lam;
-    let n = n_global as f64;
-    let p = comm.size() as f64;
 
-    let mut w = vec![0.0; d];
-    let mut alpha_loc = vec![0.0; n_loc];
-    let mut history = History::default();
     // Local columns as rows of Aᵀ for cheap column access.
     let at = a_loc.transpose(); // n_loc × d
     // Per-point squared norms ‖x_j‖² (the SDCA denominator).
@@ -89,82 +96,163 @@ pub fn run<C: Communicator>(
         at.gather_rows(&[j], &mut row)?;
         col_norms[j] = row.iter().map(|v| v * v).sum();
     }
-
     // Rank-decorrelated sampling (unlike the CA solvers, CoCoA WANTS each
     // rank to walk its own coordinates).
-    let mut sampler = if n_loc > 0 {
-        Some(BlockSampler::new(n_loc, opts.seed ^ (comm.rank() as u64) << 32))
+    let sampler = if n_loc > 0 {
+        Some(BlockSampler::new(
+            n_loc,
+            opts.seed ^ (comm.rank() as u64) << 32,
+        ))
     } else {
         None
     };
 
-    record(&mut history, 0, &w, a_loc, y_loc, n_global, lam, reference, comm)?;
+    let mut history = History::default();
+    let mut step = CocoaStep {
+        a_loc,
+        y_loc,
+        n_global,
+        reference,
+        at,
+        col_norms,
+        sampler,
+        lam: opts.lam,
+        n: n_global as f64,
+        p: comm.size() as f64,
+        local_iters: opts.local_iters,
+        w: vec![0.0; d],
+        alpha_loc: vec![0.0; n_loc],
+        alpha_work: vec![0.0; n_loc],
+        xrow: vec![0.0; d],
+    };
+    // Map the round loop onto the engine's outer loop: one round = one
+    // outer iteration with s = 1 and a d-word state-only payload. The
+    // engine's record cadence with s = 1 reproduces CoCoA's
+    // `round % record_every == 0` exactly.
+    let eopts = SolverOpts::builder()
+        .b(1)
+        .s(1)
+        .lam(opts.lam)
+        .iters(opts.rounds)
+        .seed(opts.seed)
+        .record_every(opts.record_every)
+        .overlap(opts.overlap)
+        .reg(Reg::L2)
+        .build();
+    drive(&mut step, &eopts, comm, &mut history)?;
+    Ok(CocoaOutput {
+        w: step.w,
+        alpha_loc: step.alpha_loc,
+        history,
+    })
+}
 
-    let mut xrow = vec![0.0; d];
-    let mut alpha_work = vec![0.0; n_loc];
-    for round in 1..=opts.rounds {
+/// CoCoA's per-round callbacks: the whole SDCA local phase is the
+/// state-dependent payload production (nothing is prefetchable — the
+/// local solve reads the evolving w), and the dual-block commit is the
+/// hidden work the overlap schedule runs under the in-flight Δw combine.
+struct CocoaStep<'a> {
+    a_loc: &'a Matrix,
+    y_loc: &'a [f64],
+    n_global: usize,
+    reference: Option<&'a Reference>,
+    at: Matrix,
+    col_norms: Vec<f64>,
+    sampler: Option<BlockSampler>,
+    lam: f64,
+    n: f64,
+    p: f64,
+    local_iters: usize,
+    w: Vec<f64>,
+    alpha_loc: Vec<f64>,
+    alpha_work: Vec<f64>,
+    xrow: Vec<f64>,
+}
+
+impl<C: Communicator> CaStep<C> for CocoaStep<'_> {
+    fn payload_split(&self) -> (usize, usize) {
+        (0, self.w.len())
+    }
+
+    fn sample(&mut self, _comm: &mut C, k: usize) -> Result<Sample> {
+        // CoCoA samples rank-locally inside the SDCA epoch.
+        Ok(Sample::empty(k))
+    }
+
+    fn local_gram(&mut self, _comm: &mut C, _smp: &Sample, _head: &mut [f64]) -> Result<()> {
+        Ok(()) // no sample-dependent payload — the head is empty
+    }
+
+    fn local_state(&mut self, _smp: &Sample, tail: &mut [f64]) -> Result<()> {
         // Local phase: SDCA epochs against a frozen w, on a WORKING copy
-        // of the local dual block (committed scaled by γ below — the
-        // CoCoA-v1 averaging combiner, which keeps w = −(1/λn)·Xα exact).
-        let mut w_local = w.clone();
-        let mut dw = vec![0.0; d];
-        alpha_work.copy_from_slice(&alpha_loc);
-        if let Some(sampler) = sampler.as_mut() {
-            for _ in 0..opts.local_iters {
+        // of the local dual block (committed scaled by γ in `hidden_work`
+        // / `apply` — the CoCoA-v1 averaging combiner, which keeps
+        // w = −(1/λn)·Xα exact). `tail` accumulates this rank's Δw.
+        tail.fill(0.0);
+        let mut w_local = self.w.clone();
+        self.alpha_work.copy_from_slice(&self.alpha_loc);
+        let (lam, n) = (self.lam, self.n);
+        if let Some(sampler) = self.sampler.as_mut() {
+            for _ in 0..self.local_iters {
                 let j = sampler.draw_block(1)[0];
-                at.gather_rows(&[j], &mut xrow)?;
+                self.at.gather_rows(&[j], &mut self.xrow)?;
                 // Single-coordinate dual step (eq. 17 with b′=1):
                 // θ = ‖x_j‖²/(λn²) + 1/n ; Δα = −(1/n)·θ⁻¹(−x_jᵀw + α_j + y_j)
-                let theta = col_norms[j] / (lam * n * n) + 1.0 / n;
-                let xw: f64 = xrow.iter().zip(&w_local).map(|(a, b)| a * b).sum();
-                let rhs = -xw + alpha_work[j] + y_loc[j];
+                let theta = self.col_norms[j] / (lam * n * n) + 1.0 / n;
+                let xw: f64 = self.xrow.iter().zip(&w_local).map(|(a, b)| a * b).sum();
+                let rhs = -xw + self.alpha_work[j] + self.y_loc[j];
                 let da = -(1.0 / n) * rhs / theta;
-                alpha_work[j] += da;
+                self.alpha_work[j] += da;
                 let scale = -da / (lam * n);
-                for (t, &xv) in xrow.iter().enumerate() {
+                for (t, &xv) in self.xrow.iter().enumerate() {
                     w_local[t] += scale * xv;
-                    dw[t] += scale * xv;
+                    tail[t] += scale * xv;
                 }
             }
         }
-        // Combine with γ = 1/P: α_[k] += γΔα_[k]; w += γ·ΣΔw_k. The
-        // averaging preserves the primal-dual coupling but damps every
-        // machine's progress — the "changes the convergence behavior"
-        // contrast the paper draws against the CA transformation. In
-        // overlap mode the local dual-block commit (independent of the
-        // combined Δw) hides the in-flight reduction.
-        if opts.overlap {
-            let handle = comm.iallreduce_start(dw)?;
-            for (a, &work) in alpha_loc.iter_mut().zip(&alpha_work) {
-                *a += (work - *a) / p;
-            }
-            let dw = comm.iallreduce_wait(handle)?;
-            for (wi, dv) in w.iter_mut().zip(&dw) {
-                *wi += dv / p;
-            }
-            comm.give_buf(dw);
-        } else {
-            comm.allreduce_sum(&mut dw)?;
-            for (wi, dv) in w.iter_mut().zip(&dw) {
-                *wi += dv / p;
-            }
-            for (a, &work) in alpha_loc.iter_mut().zip(&alpha_work) {
-                *a += (work - *a) / p;
-            }
-        }
-
-        if (opts.record_every > 0 && round % opts.record_every == 0) || round == opts.rounds {
-            record(&mut history, round, &w, a_loc, y_loc, n_global, lam, reference, comm)?;
-        }
-        history.iters = round;
+        Ok(())
     }
 
-    history.meter = *comm.meter();
-    Ok(CocoaOutput {
-        w,
-        alpha_loc,
-        history,
-    })
+    fn hidden_work(&mut self, _smp: &Sample) -> Result<()> {
+        // Combine with γ = 1/P, dual side: α_[k] += γΔα_[k]. Independent
+        // of the combined Δw, so the overlap schedule hides it under the
+        // in-flight reduction. The averaging preserves the primal-dual
+        // coupling but damps every machine's progress — the "changes the
+        // convergence behavior" contrast the paper draws against the CA
+        // transformation.
+        for (a, &work) in self.alpha_loc.iter_mut().zip(&self.alpha_work) {
+            *a += (work - *a) / self.p;
+        }
+        Ok(())
+    }
+
+    fn inner_solve(&mut self, _smp: &Sample, _head: &[f64], _tail: &[f64]) -> Result<Vec<f64>> {
+        // Nothing to solve — the reduced ΣΔw IS the update; the empty
+        // result tells the engine to apply the payload tail zero-copy.
+        Ok(Vec::new())
+    }
+
+    fn apply(&mut self, _smp: &Sample, deltas: &[f64]) -> Result<()> {
+        // Primal side of the γ = 1/P combine: w += γ·ΣΔw_k.
+        for (wi, dv) in self.w.iter_mut().zip(deltas) {
+            *wi += dv / self.p;
+        }
+        Ok(())
+    }
+
+    fn record(&mut self, comm: &mut C, history: &mut History, h_now: usize) -> Result<()> {
+        record(
+            history,
+            h_now,
+            &self.w,
+            self.a_loc,
+            self.y_loc,
+            self.n_global,
+            self.lam,
+            self.reference,
+            comm,
+        )
+    }
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -6,8 +6,13 @@ use crate::error::Result;
 use crate::metrics::History;
 use crate::prox::Reg;
 
-/// Options shared by all four coordinate-descent variants.
+/// Options shared by every coordinate-descent variant.
+///
+/// `#[non_exhaustive]`: construct via [`SolverOpts::builder`] (or
+/// [`SolverOpts::default`] + field mutation) outside this crate, so the
+/// next field addition does not touch every literal in the tree again.
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct SolverOpts {
     /// Block size (b for primal, b' for dual).
     pub b: usize,
@@ -60,7 +65,90 @@ impl Default for SolverOpts {
     }
 }
 
+/// Fluent constructor for [`SolverOpts`] (the struct is
+/// `#[non_exhaustive]`, so cross-crate callers build it here). Unset
+/// fields keep the [`SolverOpts::default`] values; validation stays in
+/// [`SolverOpts::validate`] (called by every solver entry point).
+#[derive(Clone, Debug, Default)]
+pub struct SolverOptsBuilder {
+    opts: SolverOpts,
+}
+
+impl SolverOptsBuilder {
+    /// Block size (b for primal, b' for dual).
+    pub fn b(mut self, b: usize) -> Self {
+        self.opts.b = b;
+        self
+    }
+
+    /// Loop-blocking factor; 1 = the classical algorithm.
+    pub fn s(mut self, s: usize) -> Self {
+        self.opts.s = s;
+        self
+    }
+
+    /// Regularization λ.
+    pub fn lam(mut self, lam: f64) -> Self {
+        self.opts.lam = lam;
+        self
+    }
+
+    /// Total inner iterations H (rounded down to a multiple of `s`).
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.opts.iters = iters;
+        self
+    }
+
+    /// Shared sampling seed (identical on every rank — §3.1).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts.seed = seed;
+        self
+    }
+
+    /// Record cadence in inner iterations (0 = start/end only).
+    pub fn record_every(mut self, record_every: usize) -> Self {
+        self.opts.record_every = record_every;
+        self
+    }
+
+    /// Track the Gram condition number each outer iteration.
+    pub fn track_gram_cond(mut self, track: bool) -> Self {
+        self.opts.track_gram_cond = track;
+        self
+    }
+
+    /// Early stop once the method's certificate reaches `tol`.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.opts.tol = Some(tol);
+        self
+    }
+
+    /// Overlap communication with computation (non-blocking pipeline).
+    pub fn overlap(mut self, overlap: bool) -> Self {
+        self.opts.overlap = overlap;
+        self
+    }
+
+    /// Regularizer ψ(w) (non-L2 routes through the CA-Prox loops).
+    pub fn reg(mut self, reg: Reg) -> Self {
+        self.opts.reg = reg;
+        self
+    }
+
+    /// Finish building.
+    pub fn build(self) -> SolverOpts {
+        self.opts
+    }
+}
+
 impl SolverOpts {
+    /// Start a [`SolverOptsBuilder`] seeded with the default options.
+    pub fn builder() -> SolverOptsBuilder {
+        SolverOptsBuilder::default()
+    }
+
+    /// Sanity-check the options against the sampled dimension (the
+    /// primal feature count d or the dual point count n).
     pub fn validate(&self, sample_dim: usize) -> Result<()> {
         use crate::error::Error;
         if self.b == 0 || self.s == 0 {
@@ -88,8 +176,11 @@ impl SolverOpts {
 /// Output of the primal solvers: replicated `w`, this rank's α slice.
 #[derive(Clone, Debug)]
 pub struct PrimalOutput {
+    /// Replicated primal solution.
     pub w: Vec<f64>,
+    /// This rank's slice of α = Xᵀw.
     pub alpha_loc: Vec<f64>,
+    /// Trajectory + communication accounting of the run.
     pub history: History,
 }
 
@@ -97,9 +188,13 @@ pub struct PrimalOutput {
 /// gathered once at the end for convenience — the full `w`.
 #[derive(Clone, Debug)]
 pub struct DualOutput {
+    /// This rank's slice of the primal vector.
     pub w_loc: Vec<f64>,
+    /// Full primal vector (assembled once at the end, metric path).
     pub w_full: Vec<f64>,
+    /// Replicated dual solution.
     pub alpha: Vec<f64>,
+    /// Trajectory + communication accounting of the run.
     pub history: History,
 }
 

@@ -1,4 +1,11 @@
-//! The paper's algorithms, SPMD over a [`crate::comm::Communicator`]:
+#![warn(missing_docs)]
+//! The paper's algorithms, SPMD over a [`crate::comm::Communicator`].
+//!
+//! Every coordinate-descent loop runs through the shared pipeline core of
+//! [`crate::engine`] — the modules here contribute the per-method
+//! [`CaStep`](crate::engine::CaStep) callbacks plus thin, stably-named
+//! `run()` wrappers over the engine's single
+//! [`Session`](crate::engine::Session) entry point:
 //!
 //! * [`bcd`] — Algorithms 1 & 2 (BCD / CA-BCD): one implementation
 //!   parameterized by the loop-blocking factor `s` (`s = 1` ≡ Algorithm 1;
@@ -21,4 +28,4 @@ pub mod cocoa;
 pub mod common;
 pub mod tsqr_ls;
 
-pub use common::{PrimalOutput, DualOutput, SolverOpts};
+pub use common::{DualOutput, PrimalOutput, SolverOpts, SolverOptsBuilder};

@@ -19,9 +19,11 @@ use crate::solvers::common::objective_value;
 /// Output of the TSQR baseline.
 #[derive(Clone, Debug)]
 pub struct TsqrOutput {
+    /// The direct least-squares solution.
     pub w: Vec<f64>,
     /// Tree combine levels executed (= the single-allreduce latency).
     pub combine_levels: usize,
+    /// The single-pass "trajectory" (flat, then machine precision).
     pub history: History,
 }
 

@@ -152,18 +152,16 @@ fn full_solver_trajectory_parity() {
     let x = Matrix::Dense(DenseMatrix::from_vec(d, n, g.vec_normal(d * n)));
     let mut y = vec![0.0; n];
     x.matvec_t(&g.vec_normal(d), &mut y).unwrap();
-    let opts = SolverOpts {
-        b: 4,
-        s: 4,
-        lam: 0.2,
-        iters: 24,
-        seed: 11,
-        record_every: 0,
-        track_gram_cond: false,
-        tol: None,
-        overlap: false,
-        ..Default::default()
-    };
+    let opts = SolverOpts::builder()
+        .b(4)
+        .s(4)
+        .lam(0.2)
+        .iters(24)
+        .seed(11)
+        .record_every(0)
+        .track_gram_cond(false)
+        .overlap(false)
+        .build();
 
     let mut nb = NativeBackend::new();
     let mut xb = XlaBackend::new(artifact_dir()).unwrap();

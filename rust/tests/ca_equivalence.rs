@@ -34,18 +34,16 @@ fn prop_ca_bcd_equals_bcd_for_random_s_and_b() {
         let lam = 0.02 + g.f64_unit();
         let seed = g.seed ^ 0xABCD;
         let total_inner = outer * s; // SAME inner-iteration count for both
-        let mk = |s: usize| SolverOpts {
-            b,
-            s,
-            lam,
-            iters: total_inner,
-            seed,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let mk = |s: usize| SolverOpts::builder()
+            .b(b)
+            .s(s)
+            .lam(lam)
+            .iters(total_inner)
+            .seed(seed)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
         let w1 = bcd::run(&x, &y, n, &mk(1), None, &mut c, &mut be)
@@ -78,18 +76,16 @@ fn prop_ca_bdcd_equals_bdcd_for_random_s_and_b() {
         let lam = 0.05 + g.f64_unit();
         let seed = g.seed ^ 0x1234;
         let total_inner = outer * s;
-        let mk = |s: usize| SolverOpts {
-            b,
-            s,
-            lam,
-            iters: total_inner,
-            seed,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let mk = |s: usize| SolverOpts::builder()
+            .b(b)
+            .s(s)
+            .lam(lam)
+            .iters(total_inner)
+            .seed(seed)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
         let w1 = bdcd::run(&a, &y, d, 0, &mk(1), None, &mut c, &mut be)
@@ -117,18 +113,16 @@ fn prop_duplicate_coordinates_across_inner_blocks_are_exact() {
         let d = g.usize_in(3, 5); // b=2, s=4 over d≤5 → guaranteed overlaps
         let n = 40;
         let (x, y) = random_problem(g, d, n);
-        let mk = |s: usize| SolverOpts {
-            b: 2,
-            s,
-            lam: 0.3,
-            iters: 12,
-            seed: g.seed,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let mk = |s: usize| SolverOpts::builder()
+            .b(2)
+            .s(s)
+            .lam(0.3)
+            .iters(12)
+            .seed(g.seed)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
         let w1 = bcd::run(&x, &y, n, &mk(1), None, &mut c, &mut be)
@@ -157,18 +151,16 @@ fn overlap_pipeline_is_bitwise_stable_spmd() {
 
     let spec = &scaled_specs(8)[0]; // abalone-s8
     let ds = generate(spec, 5).unwrap();
-    let mk = |overlap: bool| SolverOpts {
-        b: 2,
-        s: 4,
-        lam: spec.lambda(),
-        iters: 48,
-        seed: 13,
-        record_every: 0,
-        track_gram_cond: false,
-        tol: None,
-        overlap,
-        ..Default::default()
-    };
+    let mk = |overlap: bool| SolverOpts::builder()
+        .b(2)
+        .s(4)
+        .lam(spec.lambda())
+        .iters(48)
+        .seed(13)
+        .record_every(0)
+        .track_gram_cond(false)
+        .overlap(overlap)
+        .build();
     for p in [2usize, 3, 5] {
         // Primal.
         let shards = partition_primal(&ds, p).unwrap();
@@ -232,18 +224,16 @@ fn allreduce_counts_scale_as_h_over_s() {
     let mut g = Gen::new(99);
     let (x, y) = random_problem(&mut g, 10, 50);
     for s in [1usize, 2, 5, 10] {
-        let opts = SolverOpts {
-            b: 3,
-            s,
-            lam: 0.1,
-            iters: 40,
-            seed: 5,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(3)
+            .s(s)
+            .lam(0.1)
+            .iters(40)
+            .seed(5)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
         let out = bcd::run(&x, &y, 50, &opts, None, &mut c, &mut be).unwrap();

@@ -475,18 +475,16 @@ fn spmd_rank_count_does_not_change_solver_numerics() {
 
     let spec = &scaled_specs(8)[0]; // abalone-s8
     let ds = generate(spec, 3).unwrap();
-    let opts = SolverOpts {
-        b: 2,
-        s: 3,
-        lam: spec.lambda(),
-        iters: 60,
-        seed: 7,
-        record_every: 0,
-        track_gram_cond: false,
-        tol: None,
-        overlap: false,
-        ..Default::default()
-    };
+    let opts = SolverOpts::builder()
+        .b(2)
+        .s(3)
+        .lam(spec.lambda())
+        .iters(60)
+        .seed(7)
+        .record_every(0)
+        .track_gram_cond(false)
+        .overlap(false)
+        .build();
     let mut solutions = Vec::new();
     for p in [1usize, 2, 5] {
         let shards = partition_primal(&ds, p).unwrap();

@@ -36,18 +36,16 @@ fn all_four_clones_make_objective_progress_under_bcd() {
         let lam = spec.lambda();
         let mut comm = SerialComm::new();
         let reference = cg::compute_reference(&ds.x, &ds.y, ds.n(), lam, &mut comm).unwrap();
-        let opts = SolverOpts {
-            b: (ds.d() / 4).clamp(1, 16),
-            s: 1,
-            lam,
-            iters,
-            seed: 1,
-            record_every: iters / 4,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b((ds.d() / 4).clamp(1, 16))
+            .s(1)
+            .lam(lam)
+            .iters(iters)
+            .seed(1)
+            .record_every(iters / 4)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, Some(&reference), &mut comm, &mut be)
             .unwrap();
@@ -84,18 +82,16 @@ fn larger_block_size_converges_faster_per_iteration() {
     let reference = cg::compute_reference(&ds.x, &ds.y, ds.n(), lam, &mut comm).unwrap();
     let mut errs = Vec::new();
     for b in [1usize, 4, 8] {
-        let opts = SolverOpts {
-            b,
-            s: 1,
-            lam,
-            iters: 60,
-            seed: 3,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(b)
+            .s(1)
+            .lam(lam)
+            .iters(60)
+            .seed(3)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, Some(&reference), &mut comm, &mut be)
             .unwrap();
@@ -116,36 +112,32 @@ fn primal_and_dual_agree_on_the_optimum() {
     let mut comm = SerialComm::new();
     let reference = cg::compute_reference(&ds.x, &ds.y, ds.n(), lam, &mut comm).unwrap();
 
-    let p_opts = SolverOpts {
-        b: ds.d().min(4),
-        s: 2,
-        lam,
-        iters: 3000,
-        seed: 5,
-        record_every: 0,
-        track_gram_cond: false,
-        tol: None,
-        overlap: false,
-        ..Default::default()
-    };
+    let p_opts = SolverOpts::builder()
+        .b(ds.d().min(4))
+        .s(2)
+        .lam(lam)
+        .iters(3000)
+        .seed(5)
+        .record_every(0)
+        .track_gram_cond(false)
+        .overlap(false)
+        .build();
     let mut be = NativeBackend::new();
     let w_primal = bcd::run(&ds.x, &ds.y, ds.n(), &p_opts, Some(&reference), &mut comm, &mut be)
         .unwrap()
         .w;
 
     let a = ds.x.transpose();
-    let d_opts = SolverOpts {
-        b: 32.min(ds.n() / 4),
-        s: 2,
-        lam,
-        iters: 6000,
-        seed: 5,
-        record_every: 0,
-        track_gram_cond: false,
-        tol: None,
-        overlap: false,
-        ..Default::default()
-    };
+    let d_opts = SolverOpts::builder()
+        .b(32.min(ds.n() / 4))
+        .s(2)
+        .lam(lam)
+        .iters(6000)
+        .seed(5)
+        .record_every(0)
+        .track_gram_cond(false)
+        .overlap(false)
+        .build();
     let w_dual = bdcd::run(&a, &ds.y, ds.d(), 0, &d_opts, Some(&reference), &mut comm, &mut be)
         .unwrap()
         .w_full;
@@ -182,18 +174,16 @@ fn gram_condition_number_grows_with_s_but_stays_bounded() {
     let mut comm = SerialComm::new();
     let mut meds = Vec::new();
     for s in [1usize, 5, 20] {
-        let opts = SolverOpts {
-            b: 2,
-            s,
-            lam,
-            iters: 60,
-            seed: 2,
-            record_every: 0,
-            track_gram_cond: true,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(2)
+            .s(s)
+            .lam(lam)
+            .iters(60)
+            .seed(2)
+            .record_every(0)
+            .track_gram_cond(true)
+            .overlap(false)
+            .build();
         let mut be = NativeBackend::new();
         let out = bcd::run(&ds.x, &ds.y, ds.n(), &opts, None, &mut comm, &mut be).unwrap();
         let stats = out.history.cond_stats();

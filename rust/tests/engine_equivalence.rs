@@ -1,0 +1,1920 @@
+//! Golden-equivalence suite for the unified s-step engine (PR 5).
+//!
+//! The redesign's hard constraint: porting all six solver loops onto the
+//! one `engine::Session` pipeline core must leave every trajectory AND
+//! every per-rank wire count **bitwise identical** to the pre-redesign
+//! per-solver loops. Two golden fixtures enforce that:
+//!
+//! 1. **Frozen legacy loops** (`mod legacy` below): verbatim copies of
+//!    the pre-engine `run()`/`run_overlapped()` implementations of all
+//!    six methods, captured at the commit before the redesign. The matrix
+//!    test runs every method × s∈{1,4} × overlap∈{off,on} × P∈{1,4}
+//!    through both the frozen loop and the engine path and asserts
+//!    bitwise equality of iterates, records, prox certificates, Gram
+//!    conditioning samples, measured Lemma-3 loads, and CostMeters.
+//! 2. **Committed closed-form meter fixture**
+//!    (`fixtures/engine_meters.tsv`): the exact per-rank allreduce /
+//!    all-to-all / message / word counts each config must produce,
+//!    derived from the recursive-doubling formulas — so a payload or
+//!    collective-count regression fails even if both paths drift
+//!    together.
+//!
+//! `buf_allocs` (pool warm-up misses) is asserted equal wherever the
+//! schedule is unchanged; the four configs whose overlap schedule the PR
+//! deliberately improves (prox Gram prefetch, bcd_row's a2a look-ahead,
+//! cocoa's pooled combine) exempt only that one field — their wire
+//! fields and trajectories stay bitwise-locked.
+//!
+//! The file also hosts the tooling gate freezing the per-site
+//! `clippy::too_many_arguments` allow count in `rust/src/`.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::collections::HashMap;
+
+use cabcd::comm::thread::run_spmd;
+use cabcd::comm::SerialComm;
+use cabcd::coordinator::{partition_dual, partition_primal, partition_rows};
+use cabcd::matrix::io::Dataset;
+use cabcd::matrix::{DenseMatrix, Matrix};
+use cabcd::metrics::{History, Reference};
+use cabcd::prox::Reg;
+use cabcd::solvers::cocoa::CocoaOpts;
+use cabcd::solvers::{cg, SolverOpts};
+
+/// Frozen pre-engine solver loops — the golden reference implementations,
+/// copied verbatim (modulo `crate::` → `cabcd::` paths) from the commit
+/// before the engine redesign. DO NOT "improve" this module: its whole
+/// value is that it never changes.
+mod legacy {
+    use cabcd::comm::Communicator;
+    use cabcd::error::{Error, Result};
+    use cabcd::gram::ComputeBackend;
+    use cabcd::linalg::packed::packed_len;
+    use cabcd::matrix::{DenseMatrix, Matrix};
+    use cabcd::metrics::{
+        relative_objective_error, relative_solution_error, History, IterRecord, ProxRecord,
+        Reference,
+    };
+    use cabcd::partition::BlockPartition;
+    use cabcd::prox::{Reg, Regularizer};
+    use cabcd::sampling::{overlap_tensor_into, BlockSampler};
+    use cabcd::solvers::bcd_row::RowPrimalOutput;
+    use cabcd::solvers::cocoa::{CocoaOpts, CocoaOutput};
+    use cabcd::solvers::common::{
+        cond_stride, flatten_blocks, metered_out, objective_value, packed_gram_cond,
+        should_record, DualOutput, PrimalOutput, SolverOpts,
+    };
+
+    // ---------------- legacy solvers::bcd ------------------------------
+
+    pub fn bcd_run<C: Communicator>(
+        a_loc: &Matrix,
+        y_loc: &[f64],
+        n_global: usize,
+        opts: &SolverOpts,
+        reference: Option<&Reference>,
+        comm: &mut C,
+        backend: &mut dyn ComputeBackend,
+    ) -> Result<PrimalOutput> {
+        if !opts.reg.is_exact_l2() {
+            return prox_bcd_run(a_loc, y_loc, n_global, opts, comm, backend);
+        }
+        if opts.overlap {
+            return bcd_run_overlapped(a_loc, y_loc, n_global, opts, reference, comm, backend);
+        }
+        let d = a_loc.rows();
+        let n_loc = a_loc.cols();
+        opts.validate(d)?;
+        let (s, b) = (opts.s, opts.b);
+        let sb = s * b;
+        let inv_n = 1.0 / n_global as f64;
+        let lam = opts.lam;
+
+        let mut w = vec![0.0; d];
+        let mut alpha_loc = vec![0.0; n_loc];
+        let mut history = History::default();
+
+        let gl = packed_len(sb);
+        let mut buf = vec![0.0; gl + sb];
+        let mut z = vec![0.0; n_loc];
+        let mut w_blocks = vec![0.0; sb];
+        let mut gram_scaled = vec![0.0; sb * sb];
+        let mut idx_flat = vec![0usize; sb];
+        let mut overlap = vec![0.0; s * s * b * b];
+
+        let mut sampler = BlockSampler::new(d, opts.seed);
+
+        bcd_record(
+            &mut history,
+            0,
+            &w,
+            &alpha_loc,
+            y_loc,
+            n_global,
+            lam,
+            reference,
+            comm,
+        )?;
+
+        let outer = opts.outer_iters();
+        let stride = cond_stride(sb, outer);
+        'outer_loop: for k in 0..outer {
+            let blocks = sampler.draw_blocks(s, b);
+            flatten_blocks(&blocks, b, &mut idx_flat);
+
+            for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
+                *zi = yi - ai;
+            }
+
+            let (g_buf, r_buf) = buf.split_at_mut(gl);
+            backend.gram_resid(a_loc, &idx_flat, &z, g_buf, r_buf)?;
+
+            comm.allreduce_sum(&mut buf)?;
+
+            if opts.track_gram_cond && k % stride == 0 {
+                history
+                    .gram_conds
+                    .push(packed_gram_cond(&buf, sb, inv_n, lam, &mut gram_scaled));
+            }
+
+            overlap_tensor_into(&blocks, &mut overlap);
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    w_blocks[j * b + i] = w[row];
+                }
+            }
+            let (g_buf, r_buf) = buf.split_at(gl);
+            let deltas =
+                backend.ca_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n)?;
+
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    w[row] += deltas[j * b + i];
+                }
+            }
+            backend.alpha_update(a_loc, &idx_flat, &deltas, &mut alpha_loc)?;
+
+            let h_now = (k + 1) * s;
+            history.iters = h_now;
+            if should_record(h_now, s, opts) || k + 1 == outer {
+                bcd_record(
+                    &mut history,
+                    h_now,
+                    &w,
+                    &alpha_loc,
+                    y_loc,
+                    n_global,
+                    lam,
+                    reference,
+                    comm,
+                )?;
+                if let (Some(tol), Some(_)) = (opts.tol, reference) {
+                    if history.final_obj_err() <= tol {
+                        break 'outer_loop;
+                    }
+                }
+            }
+        }
+
+        history.meter = *comm.meter();
+        Ok(PrimalOutput {
+            w,
+            alpha_loc,
+            history,
+        })
+    }
+
+    fn bcd_run_overlapped<C: Communicator>(
+        a_loc: &Matrix,
+        y_loc: &[f64],
+        n_global: usize,
+        opts: &SolverOpts,
+        reference: Option<&Reference>,
+        comm: &mut C,
+        backend: &mut dyn ComputeBackend,
+    ) -> Result<PrimalOutput> {
+        let d = a_loc.rows();
+        let n_loc = a_loc.cols();
+        opts.validate(d)?;
+        let (s, b) = (opts.s, opts.b);
+        let sb = s * b;
+        let gl = packed_len(sb);
+        let inv_n = 1.0 / n_global as f64;
+        let lam = opts.lam;
+
+        let mut w = vec![0.0; d];
+        let mut alpha_loc = vec![0.0; n_loc];
+        let mut history = History::default();
+
+        let mut z = vec![0.0; n_loc];
+        let mut w_blocks = vec![0.0; sb];
+        let mut gram_scaled = vec![0.0; sb * sb];
+        let mut idx_cur = vec![0usize; sb];
+        let mut idx_next = vec![0usize; sb];
+        let mut overlap = vec![0.0; s * s * b * b];
+
+        let mut sampler = BlockSampler::new(d, opts.seed);
+
+        bcd_record(
+            &mut history,
+            0,
+            &w,
+            &alpha_loc,
+            y_loc,
+            n_global,
+            lam,
+            reference,
+            comm,
+        )?;
+
+        let outer = opts.outer_iters();
+        let stride = cond_stride(sb, outer);
+
+        let mut blocks: Vec<Vec<usize>> = Vec::new();
+        let mut next_buf: Vec<f64> = Vec::new();
+        if outer > 0 {
+            blocks = sampler.draw_blocks(s, b);
+            flatten_blocks(&blocks, b, &mut idx_cur);
+            next_buf = comm.take_buf(gl + sb);
+            backend.gram_only(a_loc, &idx_cur, &mut next_buf[..gl])?;
+        }
+        'outer_loop: for k in 0..outer {
+            let mut buf = std::mem::take(&mut next_buf);
+
+            for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
+                *zi = yi - ai;
+            }
+            backend.resid_only(a_loc, &idx_cur, &z, &mut buf[gl..])?;
+
+            let handle = comm.iallreduce_start(buf)?;
+
+            let mut pending_blocks: Option<Vec<Vec<usize>>> = None;
+            if k + 1 < outer {
+                let nb = sampler.draw_blocks(s, b);
+                flatten_blocks(&nb, b, &mut idx_next);
+                next_buf = comm.take_buf(gl + sb);
+                backend.gram_only(a_loc, &idx_next, &mut next_buf[..gl])?;
+                pending_blocks = Some(nb);
+            }
+            overlap_tensor_into(&blocks, &mut overlap);
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    w_blocks[j * b + i] = w[row];
+                }
+            }
+            let buf = comm.iallreduce_wait(handle)?;
+
+            if opts.track_gram_cond && k % stride == 0 {
+                history
+                    .gram_conds
+                    .push(packed_gram_cond(&buf, sb, inv_n, lam, &mut gram_scaled));
+            }
+
+            let (g_buf, r_buf) = buf.split_at(gl);
+            let deltas =
+                backend.ca_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n)?;
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    w[row] += deltas[j * b + i];
+                }
+            }
+            backend.alpha_update(a_loc, &idx_cur, &deltas, &mut alpha_loc)?;
+            comm.give_buf(buf);
+
+            if let Some(nb) = pending_blocks {
+                blocks = nb;
+                std::mem::swap(&mut idx_cur, &mut idx_next);
+            }
+
+            let h_now = (k + 1) * s;
+            history.iters = h_now;
+            if should_record(h_now, s, opts) || k + 1 == outer {
+                bcd_record(
+                    &mut history,
+                    h_now,
+                    &w,
+                    &alpha_loc,
+                    y_loc,
+                    n_global,
+                    lam,
+                    reference,
+                    comm,
+                )?;
+                if let (Some(tol), Some(_)) = (opts.tol, reference) {
+                    if history.final_obj_err() <= tol {
+                        break 'outer_loop;
+                    }
+                }
+            }
+        }
+        if !next_buf.is_empty() {
+            comm.give_buf(next_buf);
+        }
+
+        history.meter = *comm.meter();
+        Ok(PrimalOutput {
+            w,
+            alpha_loc,
+            history,
+        })
+    }
+
+    fn bcd_record<C: Communicator>(
+        history: &mut History,
+        iter: usize,
+        w: &[f64],
+        alpha_loc: &[f64],
+        y_loc: &[f64],
+        n_global: usize,
+        lam: f64,
+        reference: Option<&Reference>,
+        comm: &mut C,
+    ) -> Result<()> {
+        let Some(r) = reference else { return Ok(()) };
+        let resid_sq = metered_out(comm, |c| {
+            let mut part = [alpha_loc
+                .iter()
+                .zip(y_loc)
+                .map(|(a, y)| (a - y) * (a - y))
+                .sum::<f64>()];
+            c.allreduce_sum(&mut part)?;
+            Ok(part[0])
+        })?;
+        let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+        let f_alg = objective_value(resid_sq, w_norm_sq, n_global, lam);
+        history.records.push(IterRecord {
+            iter,
+            obj_err: relative_objective_error(f_alg, r.f_opt),
+            sol_err: relative_solution_error(w, &r.w_opt),
+        });
+        Ok(())
+    }
+
+    // ---------------- legacy solvers::bdcd -----------------------------
+
+    pub fn bdcd_run<C: Communicator>(
+        a_loc: &Matrix,
+        y: &[f64],
+        d_global: usize,
+        d_offset: usize,
+        opts: &SolverOpts,
+        reference: Option<&Reference>,
+        comm: &mut C,
+        backend: &mut dyn ComputeBackend,
+    ) -> Result<DualOutput> {
+        if !opts.reg.is_exact_l2() {
+            return prox_bdcd_run(a_loc, y, d_global, d_offset, opts, comm, backend);
+        }
+        if opts.overlap {
+            return bdcd_run_overlapped(a_loc, y, d_global, d_offset, opts, reference, comm, backend);
+        }
+        let n = a_loc.rows();
+        let d_loc = a_loc.cols();
+        opts.validate(n)?;
+        let (s, b) = (opts.s, opts.b);
+        let sb = s * b;
+        let inv_n = 1.0 / n as f64;
+        let lam = opts.lam;
+
+        let mut alpha = vec![0.0; n];
+        let mut w_loc = vec![0.0; d_loc];
+        let mut history = History::default();
+
+        let gl = packed_len(sb);
+        let mut buf = vec![0.0; gl + sb];
+        let mut a_blocks = vec![0.0; sb];
+        let mut y_blocks = vec![0.0; sb];
+        let mut gram_scaled = vec![0.0; sb * sb];
+        let mut idx_flat = vec![0usize; sb];
+        let mut scaled_deltas = vec![0.0; sb];
+        let mut overlap = vec![0.0; s * s * b * b];
+
+        let mut sampler = BlockSampler::new(n, opts.seed);
+
+        bdcd_record(
+            &mut history,
+            0,
+            &w_loc,
+            d_offset,
+            a_loc,
+            y,
+            lam,
+            reference,
+            comm,
+        )?;
+
+        let outer = opts.outer_iters();
+        let stride = cond_stride(sb, outer);
+        'outer_loop: for k in 0..outer {
+            let blocks = sampler.draw_blocks(s, b);
+            flatten_blocks(&blocks, b, &mut idx_flat);
+
+            let (g_buf, r_buf) = buf.split_at_mut(gl);
+            backend.gram_resid(a_loc, &idx_flat, &w_loc, g_buf, r_buf)?;
+
+            comm.allreduce_sum(&mut buf)?;
+
+            if opts.track_gram_cond && k % stride == 0 {
+                history.gram_conds.push(packed_gram_cond(
+                    &buf,
+                    sb,
+                    inv_n * inv_n / lam,
+                    inv_n,
+                    &mut gram_scaled,
+                ));
+            }
+
+            overlap_tensor_into(&blocks, &mut overlap);
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    a_blocks[j * b + i] = alpha[row];
+                    y_blocks[j * b + i] = y[row];
+                }
+            }
+            let (g_buf, r_buf) = buf.split_at(gl);
+            let deltas = backend.ca_dual_inner_solve(
+                s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n,
+            )?;
+
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    alpha[row] += deltas[j * b + i];
+                }
+            }
+            let scale = -1.0 / (lam * n as f64);
+            for (sd, &dv) in scaled_deltas.iter_mut().zip(&deltas) {
+                *sd = scale * dv;
+            }
+            backend.alpha_update(a_loc, &idx_flat, &scaled_deltas, &mut w_loc)?;
+
+            let h_now = (k + 1) * s;
+            history.iters = h_now;
+            if should_record(h_now, s, opts) || k + 1 == outer {
+                bdcd_record(
+                    &mut history,
+                    h_now,
+                    &w_loc,
+                    d_offset,
+                    a_loc,
+                    y,
+                    lam,
+                    reference,
+                    comm,
+                )?;
+                if let (Some(tol), Some(_)) = (opts.tol, reference) {
+                    if history.final_obj_err() <= tol {
+                        break 'outer_loop;
+                    }
+                }
+            }
+        }
+
+        history.meter = *comm.meter();
+        let w_full = gather_w(&w_loc, d_global, d_offset, comm)?;
+        Ok(DualOutput {
+            w_loc,
+            w_full,
+            alpha,
+            history,
+        })
+    }
+
+    fn bdcd_run_overlapped<C: Communicator>(
+        a_loc: &Matrix,
+        y: &[f64],
+        d_global: usize,
+        d_offset: usize,
+        opts: &SolverOpts,
+        reference: Option<&Reference>,
+        comm: &mut C,
+        backend: &mut dyn ComputeBackend,
+    ) -> Result<DualOutput> {
+        let n = a_loc.rows();
+        let d_loc = a_loc.cols();
+        opts.validate(n)?;
+        let (s, b) = (opts.s, opts.b);
+        let sb = s * b;
+        let gl = packed_len(sb);
+        let inv_n = 1.0 / n as f64;
+        let lam = opts.lam;
+
+        let mut alpha = vec![0.0; n];
+        let mut w_loc = vec![0.0; d_loc];
+        let mut history = History::default();
+
+        let mut a_blocks = vec![0.0; sb];
+        let mut y_blocks = vec![0.0; sb];
+        let mut gram_scaled = vec![0.0; sb * sb];
+        let mut idx_cur = vec![0usize; sb];
+        let mut idx_next = vec![0usize; sb];
+        let mut scaled_deltas = vec![0.0; sb];
+        let mut overlap = vec![0.0; s * s * b * b];
+
+        let mut sampler = BlockSampler::new(n, opts.seed);
+
+        bdcd_record(
+            &mut history,
+            0,
+            &w_loc,
+            d_offset,
+            a_loc,
+            y,
+            lam,
+            reference,
+            comm,
+        )?;
+
+        let outer = opts.outer_iters();
+        let stride = cond_stride(sb, outer);
+
+        let mut blocks: Vec<Vec<usize>> = Vec::new();
+        let mut next_buf: Vec<f64> = Vec::new();
+        if outer > 0 {
+            blocks = sampler.draw_blocks(s, b);
+            flatten_blocks(&blocks, b, &mut idx_cur);
+            next_buf = comm.take_buf(gl + sb);
+            backend.gram_only(a_loc, &idx_cur, &mut next_buf[..gl])?;
+        }
+        'outer_loop: for k in 0..outer {
+            let mut buf = std::mem::take(&mut next_buf);
+
+            backend.resid_only(a_loc, &idx_cur, &w_loc, &mut buf[gl..])?;
+
+            let handle = comm.iallreduce_start(buf)?;
+
+            let mut pending_blocks: Option<Vec<Vec<usize>>> = None;
+            if k + 1 < outer {
+                let nb = sampler.draw_blocks(s, b);
+                flatten_blocks(&nb, b, &mut idx_next);
+                next_buf = comm.take_buf(gl + sb);
+                backend.gram_only(a_loc, &idx_next, &mut next_buf[..gl])?;
+                pending_blocks = Some(nb);
+            }
+            overlap_tensor_into(&blocks, &mut overlap);
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    a_blocks[j * b + i] = alpha[row];
+                    y_blocks[j * b + i] = y[row];
+                }
+            }
+            let buf = comm.iallreduce_wait(handle)?;
+
+            if opts.track_gram_cond && k % stride == 0 {
+                history.gram_conds.push(packed_gram_cond(
+                    &buf,
+                    sb,
+                    inv_n * inv_n / lam,
+                    inv_n,
+                    &mut gram_scaled,
+                ));
+            }
+
+            let (g_buf, r_buf) = buf.split_at(gl);
+            let deltas = backend.ca_dual_inner_solve(
+                s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n,
+            )?;
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    alpha[row] += deltas[j * b + i];
+                }
+            }
+            let scale = -1.0 / (lam * n as f64);
+            for (sd, &dv) in scaled_deltas.iter_mut().zip(&deltas) {
+                *sd = scale * dv;
+            }
+            backend.alpha_update(a_loc, &idx_cur, &scaled_deltas, &mut w_loc)?;
+            comm.give_buf(buf);
+
+            if let Some(nb) = pending_blocks {
+                blocks = nb;
+                std::mem::swap(&mut idx_cur, &mut idx_next);
+            }
+
+            let h_now = (k + 1) * s;
+            history.iters = h_now;
+            if should_record(h_now, s, opts) || k + 1 == outer {
+                bdcd_record(
+                    &mut history,
+                    h_now,
+                    &w_loc,
+                    d_offset,
+                    a_loc,
+                    y,
+                    lam,
+                    reference,
+                    comm,
+                )?;
+                if let (Some(tol), Some(_)) = (opts.tol, reference) {
+                    if history.final_obj_err() <= tol {
+                        break 'outer_loop;
+                    }
+                }
+            }
+        }
+        if !next_buf.is_empty() {
+            comm.give_buf(next_buf);
+        }
+
+        history.meter = *comm.meter();
+        let w_full = gather_w(&w_loc, d_global, d_offset, comm)?;
+        Ok(DualOutput {
+            w_loc,
+            w_full,
+            alpha,
+            history,
+        })
+    }
+
+    fn gather_w<C: Communicator>(
+        w_loc: &[f64],
+        d_global: usize,
+        d_offset: usize,
+        comm: &mut C,
+    ) -> Result<Vec<f64>> {
+        metered_out(comm, |c| {
+            let mut full = vec![0.0; d_global];
+            full[d_offset..d_offset + w_loc.len()].copy_from_slice(w_loc);
+            c.allreduce_sum(&mut full)?;
+            Ok(full)
+        })
+    }
+
+    fn bdcd_record<C: Communicator>(
+        history: &mut History,
+        iter: usize,
+        w_loc: &[f64],
+        d_offset: usize,
+        a_loc: &Matrix,
+        y: &[f64],
+        lam: f64,
+        reference: Option<&Reference>,
+        comm: &mut C,
+    ) -> Result<()> {
+        let Some(r) = reference else { return Ok(()) };
+        let n = a_loc.rows();
+        let (xtw, w_norm_sq, sol_err_sq) = metered_out(comm, |c| {
+            let mut payload = vec![0.0; n + 2];
+            let (head, tail) = payload.split_at_mut(n);
+            a_loc.matvec(w_loc, head)?;
+            tail[0] = w_loc.iter().map(|v| v * v).sum();
+            tail[1] = w_loc
+                .iter()
+                .zip(&r.w_opt[d_offset..d_offset + w_loc.len()])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            c.allreduce_sum(&mut payload)?;
+            let wns = payload[n];
+            let ses = payload[n + 1];
+            payload.truncate(n);
+            Ok((payload, wns, ses))
+        })?;
+        let resid_sq: f64 = xtw.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+        let f_alg = objective_value(resid_sq, w_norm_sq, n, lam);
+        let w_opt_norm_sq: f64 = r.w_opt.iter().map(|v| v * v).sum();
+        history.records.push(IterRecord {
+            iter,
+            obj_err: relative_objective_error(f_alg, r.f_opt),
+            sol_err: (sol_err_sq / w_opt_norm_sq.max(1e-300)).sqrt(),
+        });
+        Ok(())
+    }
+
+    // ---------------- legacy solvers::bcd_row --------------------------
+
+    pub fn bcd_row_run<C: Communicator>(
+        x_rows: &Matrix,
+        y_loc: &[f64],
+        d_global: usize,
+        d_offset: usize,
+        opts: &SolverOpts,
+        reference: Option<&Reference>,
+        comm: &mut C,
+        backend: &mut dyn ComputeBackend,
+    ) -> Result<RowPrimalOutput> {
+        if !opts.reg.is_exact_l2() {
+            return Err(Error::InvalidArg("legacy bcd_row: l2 only".into()));
+        }
+        let d_loc = x_rows.rows();
+        let n = x_rows.cols();
+        opts.validate(d_global)?;
+        let p = comm.size();
+        let rank = comm.rank();
+        let row_part = BlockPartition::new(d_global, p);
+        let col_part = BlockPartition::new(n, p);
+        let (col_lo, col_hi) = col_part.range(rank);
+        let n_loc = col_hi - col_lo;
+        if y_loc.len() != n_loc {
+            return Err(Error::Shape("legacy bcd_row: y_loc length".into()));
+        }
+        let (s, b) = (opts.s, opts.b);
+        let sb = s * b;
+        let inv_n = 1.0 / n as f64;
+        let lam = opts.lam;
+
+        let mut w_loc = vec![0.0; d_loc];
+        let mut alpha_loc = vec![0.0; n_loc];
+        let mut history = History::default();
+        let mut max_loads = Vec::new();
+
+        let gl = packed_len(sb);
+        let mut buf = vec![0.0; gl + sb + sb];
+        let mut z = vec![0.0; n_loc];
+        let mut overlap = vec![0.0; s * s * b * b];
+        let mut deltas_scratch: Vec<f64>;
+
+        let mut sampler = BlockSampler::new(d_global, opts.seed);
+
+        bcd_row_record(
+            &mut history, 0, &w_loc, &alpha_loc, y_loc, n, lam, reference, comm,
+        )?;
+
+        let outer = opts.outer_iters();
+        'outer_loop: for k in 0..outer {
+            let blocks = sampler.draw_blocks(s, b);
+            let flat: Vec<usize> = blocks.iter().flatten().copied().collect();
+
+            let mut send: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
+            let mut owned = 0usize;
+            for &i in &flat {
+                if row_part.owner(i) == rank {
+                    owned += 1;
+                    let local_row = i - d_offset;
+                    for (q, dst) in send.iter_mut().enumerate() {
+                        let (lo, hi) = col_part.range(q);
+                        let start = dst.len();
+                        dst.resize(start + (hi - lo), 0.0);
+                        gather_row_segment(x_rows, local_row, lo, hi, &mut dst[start..])?;
+                    }
+                }
+            }
+            let mut recv_lens = vec![0usize; p];
+            for &i in &flat {
+                recv_lens[row_part.owner(i)] += n_loc;
+            }
+            let mut load_buf = vec![0.0f64; p];
+            load_buf[rank] = owned as f64;
+            let received = if opts.overlap {
+                let handle = comm.iall_to_all_start(send, &recv_lens)?;
+                metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
+                comm.iall_to_all_wait(handle)?
+            } else {
+                metered_out(comm, |c| c.allreduce_sum(&mut load_buf))?;
+                comm.all_to_all_expect(send, &recv_lens)?
+            };
+            max_loads.push(load_buf.iter().fold(0.0f64, |a, &v| a.max(v)) as usize);
+            let mut y_cols = DenseMatrix::zeros(sb, n_loc);
+            let mut cursor = vec![0usize; p];
+            for (row_slot, &i) in flat.iter().enumerate() {
+                let owner = row_part.owner(i);
+                let seg = &received[owner][cursor[owner]..cursor[owner] + n_loc];
+                y_cols.data_mut()[row_slot * n_loc..(row_slot + 1) * n_loc].copy_from_slice(seg);
+                cursor[owner] += n_loc;
+            }
+            let y_cols = Matrix::Dense(y_cols);
+
+            for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
+                *zi = yi - ai;
+            }
+            let all_idx: Vec<usize> = (0..sb).collect();
+            {
+                let (g_buf, rest) = buf.split_at_mut(gl);
+                let (r_buf, w_buf) = rest.split_at_mut(sb);
+                backend.gram_resid(&y_cols, &all_idx, &z, g_buf, r_buf)?;
+                w_buf.fill(0.0);
+                for (slot, &i) in flat.iter().enumerate() {
+                    if row_part.owner(i) == rank {
+                        w_buf[slot] = w_loc[i - d_offset];
+                    }
+                }
+            }
+            if opts.overlap {
+                let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
+                overlap_tensor_into(&blocks, &mut overlap);
+                buf = comm.iallreduce_wait(handle)?;
+            } else {
+                comm.allreduce_sum(&mut buf)?;
+                overlap_tensor_into(&blocks, &mut overlap);
+            }
+            {
+                let (g_buf, rest) = buf.split_at(gl);
+                let (r_buf, w_buf) = rest.split_at(sb);
+                deltas_scratch =
+                    backend.ca_inner_solve(s, b, g_buf, r_buf, w_buf, &overlap, lam, inv_n)?;
+            }
+
+            for (slot, &i) in flat.iter().enumerate() {
+                if row_part.owner(i) == rank {
+                    w_loc[i - d_offset] += deltas_scratch[slot];
+                }
+            }
+            backend.alpha_update(&y_cols, &all_idx, &deltas_scratch, &mut alpha_loc)?;
+
+            let h_now = (k + 1) * s;
+            history.iters = h_now;
+            if should_record(h_now, s, opts) || k + 1 == outer {
+                bcd_row_record(
+                    &mut history, h_now, &w_loc, &alpha_loc, y_loc, n, lam, reference, comm,
+                )?;
+                if let (Some(tol), Some(_)) = (opts.tol, reference) {
+                    if history.final_obj_err() <= tol {
+                        break 'outer_loop;
+                    }
+                }
+            }
+        }
+
+        history.meter = *comm.meter();
+        let w_full = metered_out(comm, |c| {
+            let mut full = vec![0.0; d_global];
+            full[d_offset..d_offset + d_loc].copy_from_slice(&w_loc);
+            c.allreduce_sum(&mut full)?;
+            Ok(full)
+        })?;
+        Ok(RowPrimalOutput {
+            w_loc,
+            w_full,
+            history,
+            max_loads,
+        })
+    }
+
+    fn gather_row_segment(
+        x: &Matrix,
+        row: usize,
+        lo: usize,
+        hi: usize,
+        out: &mut [f64],
+    ) -> Result<()> {
+        match x {
+            Matrix::Dense(m) => {
+                out.copy_from_slice(&m.row(row)[lo..hi]);
+            }
+            Matrix::Csr(m) => {
+                out.fill(0.0);
+                let (cols, vals) = m.row(row);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let c = c as usize;
+                    if c >= lo && c < hi {
+                        out[c - lo] = v;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn bcd_row_record<C: Communicator>(
+        history: &mut History,
+        iter: usize,
+        w_loc: &[f64],
+        alpha_loc: &[f64],
+        y_loc: &[f64],
+        n: usize,
+        lam: f64,
+        reference: Option<&Reference>,
+        comm: &mut C,
+    ) -> Result<()> {
+        let Some(r) = reference else { return Ok(()) };
+        let rank = comm.rank();
+        let p = comm.size();
+        let d_part = BlockPartition::new(r.w_opt.len(), p);
+        let (d_lo, _d_hi) = d_part.range(rank);
+        let sums = metered_out(comm, |c| {
+            let mut part = [
+                alpha_loc
+                    .iter()
+                    .zip(y_loc)
+                    .map(|(a, y)| (a - y) * (a - y))
+                    .sum::<f64>(),
+                w_loc.iter().map(|v| v * v).sum::<f64>(),
+                w_loc
+                    .iter()
+                    .zip(&r.w_opt[d_lo..d_lo + w_loc.len()])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>(),
+            ];
+            c.allreduce_sum(&mut part)?;
+            Ok(part)
+        })?;
+        let f_alg = objective_value(sums[0], sums[1], n, lam);
+        let w_opt_norm_sq: f64 = r.w_opt.iter().map(|v| v * v).sum();
+        history.records.push(IterRecord {
+            iter,
+            obj_err: relative_objective_error(f_alg, r.f_opt),
+            sol_err: (sums[2] / w_opt_norm_sq.max(1e-300)).sqrt(),
+        });
+        Ok(())
+    }
+
+    // ---------------- legacy solvers::cocoa ----------------------------
+
+    pub fn cocoa_run<C: Communicator>(
+        a_loc: &Matrix,
+        y_loc: &[f64],
+        n_global: usize,
+        opts: &CocoaOpts,
+        reference: Option<&Reference>,
+        comm: &mut C,
+    ) -> Result<CocoaOutput> {
+        let d = a_loc.rows();
+        let n_loc = a_loc.cols();
+        let lam = opts.lam;
+        let n = n_global as f64;
+        let p = comm.size() as f64;
+
+        let mut w = vec![0.0; d];
+        let mut alpha_loc = vec![0.0; n_loc];
+        let mut history = History::default();
+        let at = a_loc.transpose();
+        let mut col_norms = vec![0.0; n_loc];
+        for j in 0..n_loc {
+            let mut row = vec![0.0; d];
+            at.gather_rows(&[j], &mut row)?;
+            col_norms[j] = row.iter().map(|v| v * v).sum();
+        }
+
+        let mut sampler = if n_loc > 0 {
+            Some(BlockSampler::new(n_loc, opts.seed ^ (comm.rank() as u64) << 32))
+        } else {
+            None
+        };
+
+        cocoa_record(&mut history, 0, &w, a_loc, y_loc, n_global, lam, reference, comm)?;
+
+        let mut xrow = vec![0.0; d];
+        let mut alpha_work = vec![0.0; n_loc];
+        for round in 1..=opts.rounds {
+            let mut w_local = w.clone();
+            let mut dw = vec![0.0; d];
+            alpha_work.copy_from_slice(&alpha_loc);
+            if let Some(sampler) = sampler.as_mut() {
+                for _ in 0..opts.local_iters {
+                    let j = sampler.draw_block(1)[0];
+                    at.gather_rows(&[j], &mut xrow)?;
+                    let theta = col_norms[j] / (lam * n * n) + 1.0 / n;
+                    let xw: f64 = xrow.iter().zip(&w_local).map(|(a, b)| a * b).sum();
+                    let rhs = -xw + alpha_work[j] + y_loc[j];
+                    let da = -(1.0 / n) * rhs / theta;
+                    alpha_work[j] += da;
+                    let scale = -da / (lam * n);
+                    for (t, &xv) in xrow.iter().enumerate() {
+                        w_local[t] += scale * xv;
+                        dw[t] += scale * xv;
+                    }
+                }
+            }
+            if opts.overlap {
+                let handle = comm.iallreduce_start(dw)?;
+                for (a, &work) in alpha_loc.iter_mut().zip(&alpha_work) {
+                    *a += (work - *a) / p;
+                }
+                let dw = comm.iallreduce_wait(handle)?;
+                for (wi, dv) in w.iter_mut().zip(&dw) {
+                    *wi += dv / p;
+                }
+                comm.give_buf(dw);
+            } else {
+                comm.allreduce_sum(&mut dw)?;
+                for (wi, dv) in w.iter_mut().zip(&dw) {
+                    *wi += dv / p;
+                }
+                for (a, &work) in alpha_loc.iter_mut().zip(&alpha_work) {
+                    *a += (work - *a) / p;
+                }
+            }
+
+            if (opts.record_every > 0 && round % opts.record_every == 0) || round == opts.rounds {
+                cocoa_record(&mut history, round, &w, a_loc, y_loc, n_global, lam, reference, comm)?;
+            }
+            history.iters = round;
+        }
+
+        history.meter = *comm.meter();
+        Ok(CocoaOutput {
+            w,
+            alpha_loc,
+            history,
+        })
+    }
+
+    fn cocoa_record<C: Communicator>(
+        history: &mut History,
+        iter: usize,
+        w: &[f64],
+        a_loc: &Matrix,
+        y_loc: &[f64],
+        n_global: usize,
+        lam: f64,
+        reference: Option<&Reference>,
+        comm: &mut C,
+    ) -> Result<()> {
+        let Some(r) = reference else { return Ok(()) };
+        let resid_sq = metered_out(comm, |c| {
+            let mut xtw = vec![0.0; a_loc.cols()];
+            a_loc.matvec_t(w, &mut xtw)?;
+            let mut part = [xtw
+                .iter()
+                .zip(y_loc)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()];
+            c.allreduce_sum(&mut part)?;
+            Ok(part[0])
+        })?;
+        let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+        let f_alg = objective_value(resid_sq, w_norm_sq, n_global, lam);
+        history.records.push(IterRecord {
+            iter,
+            obj_err: relative_objective_error(f_alg, r.f_opt),
+            sol_err: relative_solution_error(w, &r.w_opt),
+        });
+        Ok(())
+    }
+
+    // ---------------- legacy prox::bcd ---------------------------------
+
+    pub fn prox_bcd_run<C: Communicator>(
+        a_loc: &Matrix,
+        y_loc: &[f64],
+        n_global: usize,
+        opts: &SolverOpts,
+        comm: &mut C,
+        backend: &mut dyn ComputeBackend,
+    ) -> Result<PrimalOutput> {
+        let d = a_loc.rows();
+        let n_loc = a_loc.cols();
+        opts.validate(d)?;
+        let (s, b) = (opts.s, opts.b);
+        let sb = s * b;
+        let gl = packed_len(sb);
+        let inv_n = 1.0 / n_global as f64;
+        let lam = opts.lam;
+        let reg = opts.reg;
+
+        let mut w = vec![0.0; d];
+        let mut alpha_loc = vec![0.0; n_loc];
+        let mut history = History::default();
+
+        let mut buf = vec![0.0; gl + sb];
+        let mut z = vec![0.0; n_loc];
+        let mut w_blocks = vec![0.0; sb];
+        let mut gram_scaled = vec![0.0; sb * sb];
+        let mut idx_flat = vec![0usize; sb];
+        let mut overlap = vec![0.0; s * s * b * b];
+
+        let mut sampler = BlockSampler::new(d, opts.seed);
+
+        prox_bcd_record(
+            &mut history,
+            0,
+            &w,
+            &alpha_loc,
+            y_loc,
+            a_loc,
+            n_global,
+            lam,
+            &reg,
+            comm,
+        )?;
+
+        let outer = opts.outer_iters();
+        let stride = cond_stride(sb, outer);
+        'outer_loop: for k in 0..outer {
+            let blocks = sampler.draw_blocks(s, b);
+            flatten_blocks(&blocks, b, &mut idx_flat);
+
+            for ((zi, yi), ai) in z.iter_mut().zip(y_loc).zip(&alpha_loc) {
+                *zi = yi - ai;
+            }
+            {
+                let (g_buf, r_buf) = buf.split_at_mut(gl);
+                backend.gram_resid(a_loc, &idx_flat, &z, g_buf, r_buf)?;
+            }
+
+            if opts.overlap {
+                let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
+                overlap_tensor_into(&blocks, &mut overlap);
+                gather_w_blocks(&blocks, b, &w, &mut w_blocks);
+                buf = comm.iallreduce_wait(handle)?;
+            } else {
+                comm.allreduce_sum(&mut buf)?;
+                overlap_tensor_into(&blocks, &mut overlap);
+                gather_w_blocks(&blocks, b, &w, &mut w_blocks);
+            }
+
+            if opts.track_gram_cond && k % stride == 0 {
+                let (_, mu2) = reg.weights(lam);
+                history
+                    .gram_conds
+                    .push(packed_gram_cond(&buf, sb, inv_n, mu2, &mut gram_scaled));
+            }
+
+            let (g_buf, r_buf) = buf.split_at(gl);
+            let deltas = backend
+                .ca_prox_inner_solve(s, b, g_buf, r_buf, &w_blocks, &overlap, lam, inv_n, &reg)?;
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    w[row] += deltas[j * b + i];
+                }
+            }
+            backend.alpha_update(a_loc, &idx_flat, &deltas, &mut alpha_loc)?;
+
+            let h_now = (k + 1) * s;
+            history.iters = h_now;
+            if should_record(h_now, s, opts) || k + 1 == outer {
+                prox_bcd_record(
+                    &mut history,
+                    h_now,
+                    &w,
+                    &alpha_loc,
+                    y_loc,
+                    a_loc,
+                    n_global,
+                    lam,
+                    &reg,
+                    comm,
+                )?;
+                if let Some(tol) = opts.tol {
+                    if prox_converged(&history, tol) {
+                        break 'outer_loop;
+                    }
+                }
+            }
+        }
+
+        history.meter = *comm.meter();
+        Ok(PrimalOutput {
+            w,
+            alpha_loc,
+            history,
+        })
+    }
+
+    fn gather_w_blocks(blocks: &[Vec<usize>], b: usize, w: &[f64], w_blocks: &mut [f64]) {
+        for (j, blk) in blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                w_blocks[j * b + i] = w[row];
+            }
+        }
+    }
+
+    fn prox_converged(history: &History, tol: f64) -> bool {
+        match history.prox.last() {
+            Some(r) if r.gap.is_finite() => r.gap <= tol,
+            Some(r) => r.subgrad <= tol,
+            None => false,
+        }
+    }
+
+    fn prox_bcd_record<C: Communicator>(
+        history: &mut History,
+        iter: usize,
+        w: &[f64],
+        alpha_loc: &[f64],
+        y_loc: &[f64],
+        a_loc: &Matrix,
+        n_global: usize,
+        lam: f64,
+        reg: &Reg,
+        comm: &mut C,
+    ) -> Result<()> {
+        let d = w.len();
+        let payload = metered_out(comm, |c| {
+            let mut payload = vec![0.0; d + 2];
+            let z: Vec<f64> = y_loc
+                .iter()
+                .zip(alpha_loc)
+                .map(|(y, a)| y - a)
+                .collect();
+            a_loc.matvec(&z, &mut payload[..d])?;
+            payload[d] = z.iter().map(|v| v * v).sum();
+            payload[d + 1] = y_loc.iter().zip(&z).map(|(a, b)| a * b).sum();
+            c.allreduce_sum(&mut payload)?;
+            Ok(payload)
+        })?;
+        let (resid_sq, y_dot_z) = (payload[d], payload[d + 1]);
+        let n = n_global as f64;
+        let sigma: Vec<f64> = payload[..d].iter().map(|v| v / n).collect();
+        let smooth_grad: Vec<f64> = sigma.iter().map(|v| -v).collect();
+        let pen_obj = resid_sq / (2.0 * n) + reg.penalty(w, lam);
+        let gap = reg.duality_gap(w, &sigma, resid_sq, y_dot_z, n_global, lam);
+        let subgrad = reg.subgrad_residual(&smooth_grad, w, lam);
+        history.prox.push(ProxRecord {
+            iter,
+            pen_obj,
+            gap,
+            subgrad,
+            nnz: Reg::nnz(w),
+        });
+        Ok(())
+    }
+
+    // ---------------- legacy prox::bdcd --------------------------------
+
+    pub fn prox_bdcd_run<C: Communicator>(
+        a_loc: &Matrix,
+        y: &[f64],
+        d_global: usize,
+        d_offset: usize,
+        opts: &SolverOpts,
+        comm: &mut C,
+        backend: &mut dyn ComputeBackend,
+    ) -> Result<DualOutput> {
+        let n = a_loc.rows();
+        let d_loc = a_loc.cols();
+        opts.validate(n)?;
+        let (s, b) = (opts.s, opts.b);
+        let sb = s * b;
+        let gl = packed_len(sb);
+        let inv_n = 1.0 / n as f64;
+        let lam = opts.lam;
+        let reg = opts.reg;
+
+        let mut alpha = vec![0.0; n];
+        let mut w_loc = vec![0.0; d_loc];
+        let mut history = History::default();
+
+        let mut buf = vec![0.0; gl + sb];
+        let mut a_blocks = vec![0.0; sb];
+        let mut y_blocks = vec![0.0; sb];
+        let mut gram_scaled = vec![0.0; sb * sb];
+        let mut idx_flat = vec![0usize; sb];
+        let mut scaled_deltas = vec![0.0; sb];
+        let mut overlap = vec![0.0; s * s * b * b];
+
+        let mut sampler = BlockSampler::new(n, opts.seed);
+
+        prox_bdcd_record(&mut history, 0, &alpha, &w_loc, y, a_loc, lam, &reg, comm)?;
+
+        let outer = opts.outer_iters();
+        let stride = cond_stride(sb, outer);
+        'outer_loop: for k in 0..outer {
+            let blocks = sampler.draw_blocks(s, b);
+            flatten_blocks(&blocks, b, &mut idx_flat);
+
+            {
+                let (g_buf, r_buf) = buf.split_at_mut(gl);
+                backend.gram_resid(a_loc, &idx_flat, &w_loc, g_buf, r_buf)?;
+            }
+
+            if opts.overlap {
+                let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
+                overlap_tensor_into(&blocks, &mut overlap);
+                gather_blocks(&blocks, b, &alpha, y, &mut a_blocks, &mut y_blocks);
+                buf = comm.iallreduce_wait(handle)?;
+            } else {
+                comm.allreduce_sum(&mut buf)?;
+                overlap_tensor_into(&blocks, &mut overlap);
+                gather_blocks(&blocks, b, &alpha, y, &mut a_blocks, &mut y_blocks);
+            }
+
+            if opts.track_gram_cond && k % stride == 0 {
+                history.gram_conds.push(packed_gram_cond(
+                    &buf,
+                    sb,
+                    inv_n * inv_n / lam,
+                    inv_n,
+                    &mut gram_scaled,
+                ));
+            }
+
+            let (g_buf, r_buf) = buf.split_at(gl);
+            let deltas = backend.ca_prox_dual_inner_solve(
+                s, b, g_buf, r_buf, &a_blocks, &y_blocks, &overlap, lam, inv_n, &reg,
+            )?;
+            for (j, blk) in blocks.iter().enumerate() {
+                for (i, &row) in blk.iter().enumerate() {
+                    alpha[row] += deltas[j * b + i];
+                }
+            }
+            let scale = -1.0 / (lam * n as f64);
+            for (sd, &dv) in scaled_deltas.iter_mut().zip(&deltas) {
+                *sd = scale * dv;
+            }
+            backend.alpha_update(a_loc, &idx_flat, &scaled_deltas, &mut w_loc)?;
+
+            let h_now = (k + 1) * s;
+            history.iters = h_now;
+            if should_record(h_now, s, opts) || k + 1 == outer {
+                prox_bdcd_record(&mut history, h_now, &alpha, &w_loc, y, a_loc, lam, &reg, comm)?;
+                if let Some(tol) = opts.tol {
+                    if history.prox.last().is_some_and(|r| r.subgrad <= tol) {
+                        break 'outer_loop;
+                    }
+                }
+            }
+        }
+
+        history.meter = *comm.meter();
+        let w_full = metered_out(comm, |c| {
+            let mut full = vec![0.0; d_global];
+            full[d_offset..d_offset + w_loc.len()].copy_from_slice(&w_loc);
+            c.allreduce_sum(&mut full)?;
+            Ok(full)
+        })?;
+        Ok(DualOutput {
+            w_loc,
+            w_full,
+            alpha,
+            history,
+        })
+    }
+
+    fn gather_blocks(
+        blocks: &[Vec<usize>],
+        b: usize,
+        alpha: &[f64],
+        y: &[f64],
+        a_blocks: &mut [f64],
+        y_blocks: &mut [f64],
+    ) {
+        for (j, blk) in blocks.iter().enumerate() {
+            for (i, &row) in blk.iter().enumerate() {
+                a_blocks[j * b + i] = alpha[row];
+                y_blocks[j * b + i] = y[row];
+            }
+        }
+    }
+
+    fn prox_bdcd_record<C: Communicator>(
+        history: &mut History,
+        iter: usize,
+        alpha: &[f64],
+        w_loc: &[f64],
+        y: &[f64],
+        a_loc: &Matrix,
+        lam: f64,
+        reg: &Reg,
+        comm: &mut C,
+    ) -> Result<()> {
+        let n = a_loc.rows();
+        let payload = metered_out(comm, |c| {
+            let mut payload = vec![0.0; n + 1];
+            a_loc.matvec(w_loc, &mut payload[..n])?;
+            payload[n] = w_loc.iter().map(|v| v * v).sum();
+            c.allreduce_sum(&mut payload)?;
+            Ok(payload)
+        })?;
+        let w_norm_sq = payload[n];
+        let nf = n as f64;
+        let mut smooth = 0.5 * lam * w_norm_sq;
+        let mut grad = vec![0.0; n];
+        for i in 0..n {
+            smooth += alpha[i] * alpha[i] / (2.0 * nf) + y[i] * alpha[i] / nf;
+            grad[i] = (-payload[i] + alpha[i] + y[i]) / nf;
+        }
+        history.prox.push(ProxRecord {
+            iter,
+            pen_obj: smooth + reg.penalty(alpha, lam),
+            gap: f64::NAN,
+            subgrad: reg.subgrad_residual(&grad, alpha, lam),
+            nnz: Reg::nnz(alpha),
+        });
+        Ok(())
+    }
+}
+
+// ======================= equivalence harness ===========================
+
+const LAM: f64 = 0.2;
+const ITERS: usize = 16;
+const SEED: u64 = 7;
+const B: usize = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum M {
+    Bcd,
+    Bdcd,
+    BcdRow,
+    Cocoa,
+    ProxBcd,
+    ProxBdcd,
+}
+
+impl M {
+    fn id(self) -> &'static str {
+        match self {
+            M::Bcd => "bcd",
+            M::Bdcd => "bdcd",
+            M::BcdRow => "bcdrow",
+            M::Cocoa => "cocoa",
+            M::ProxBcd => "prox_bcd",
+            M::ProxBdcd => "prox_bdcd",
+        }
+    }
+
+    const ALL: [M; 6] = [M::Bcd, M::Bdcd, M::BcdRow, M::Cocoa, M::ProxBcd, M::ProxBdcd];
+
+    /// The "s" axis: loop-blocking factor, or local_iters for CoCoA.
+    fn s_axis(self) -> [usize; 2] {
+        match self {
+            M::Cocoa => [2, 8],
+            _ => [1, 4],
+        }
+    }
+}
+
+/// One rank's comparable output: concatenated iterate vectors, the full
+/// history, and (bcd_row) the measured Lemma-3 loads.
+struct RankOut {
+    vecs: Vec<f64>,
+    history: History,
+    loads: Vec<usize>,
+}
+
+fn toy_dataset() -> Dataset {
+    let (d, n) = (12usize, 48usize);
+    let mut st = 0x5EED5EEDu64;
+    let data: Vec<f64> = (0..d * n)
+        .map(|_| {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            (st as f64 / u64::MAX as f64) - 0.5
+        })
+        .collect();
+    let x = Matrix::Dense(DenseMatrix::from_vec(d, n, data));
+    let mut y = vec![0.0; n];
+    let mut w_star = vec![0.0; d];
+    w_star[0] = 1.5;
+    w_star[d / 2] = -2.0;
+    w_star[d - 1] = 0.75;
+    x.matvec_t(&w_star, &mut y).unwrap();
+    Dataset {
+        name: "engine-eq".into(),
+        x,
+        y,
+    }
+}
+
+fn solver_opts(m: M, s: usize, overlap: bool) -> SolverOpts {
+    let reg = match m {
+        M::ProxBcd | M::ProxBdcd => Reg::L1,
+        _ => Reg::L2,
+    };
+    SolverOpts::builder()
+        .b(B)
+        .s(s)
+        .lam(LAM)
+        .iters(ITERS)
+        .seed(SEED)
+        .record_every(4)
+        .track_gram_cond(true)
+        .overlap(overlap)
+        .reg(reg)
+        .build()
+}
+
+/// Run one config through either the frozen legacy loop or the engine
+/// path; returns per-rank outputs.
+fn run_config(
+    m: M,
+    use_legacy: bool,
+    s: usize,
+    overlap: bool,
+    p: usize,
+    ds: &Dataset,
+    reference: &Reference,
+) -> Vec<RankOut> {
+    use cabcd::gram::NativeBackend;
+    let n = ds.n();
+    match m {
+        M::Bcd | M::ProxBcd => {
+            let shards = partition_primal(ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            let rref = if m == M::Bcd { Some(reference) } else { None };
+            run_spmd(p, move |rank, comm| {
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out = if use_legacy {
+                    legacy::bcd_run(&sh.a_loc, &sh.y_loc, n, &opts, rref, comm, &mut be).unwrap()
+                } else {
+                    cabcd::solvers::bcd::run(&sh.a_loc, &sh.y_loc, n, &opts, rref, comm, &mut be)
+                        .unwrap()
+                };
+                let mut vecs = out.w;
+                vecs.extend_from_slice(&out.alpha_loc);
+                RankOut {
+                    vecs,
+                    history: out.history,
+                    loads: Vec::new(),
+                }
+            })
+        }
+        M::Bdcd | M::ProxBdcd => {
+            let shards = partition_dual(ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            let rref = if m == M::Bdcd { Some(reference) } else { None };
+            run_spmd(p, move |rank, comm| {
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out = if use_legacy {
+                    legacy::bdcd_run(
+                        &sh.a_loc,
+                        &sh.y,
+                        sh.d_global,
+                        sh.d_offset,
+                        &opts,
+                        rref,
+                        comm,
+                        &mut be,
+                    )
+                    .unwrap()
+                } else {
+                    cabcd::solvers::bdcd::run(
+                        &sh.a_loc,
+                        &sh.y,
+                        sh.d_global,
+                        sh.d_offset,
+                        &opts,
+                        rref,
+                        comm,
+                        &mut be,
+                    )
+                    .unwrap()
+                };
+                let mut vecs = out.w_full;
+                vecs.extend_from_slice(&out.w_loc);
+                vecs.extend_from_slice(&out.alpha);
+                RankOut {
+                    vecs,
+                    history: out.history,
+                    loads: Vec::new(),
+                }
+            })
+        }
+        M::BcdRow => {
+            let shards = partition_rows(ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            run_spmd(p, move |rank, comm| {
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out = if use_legacy {
+                    legacy::bcd_row_run(
+                        &sh.x_rows,
+                        &sh.y_loc,
+                        sh.d_global,
+                        sh.d_offset,
+                        &opts,
+                        Some(reference),
+                        comm,
+                        &mut be,
+                    )
+                    .unwrap()
+                } else {
+                    cabcd::solvers::bcd_row::run(
+                        &sh.x_rows,
+                        &sh.y_loc,
+                        sh.d_global,
+                        sh.d_offset,
+                        &opts,
+                        Some(reference),
+                        comm,
+                        &mut be,
+                    )
+                    .unwrap()
+                };
+                let mut vecs = out.w_full;
+                vecs.extend_from_slice(&out.w_loc);
+                RankOut {
+                    vecs,
+                    history: out.history,
+                    loads: out.max_loads,
+                }
+            })
+        }
+        M::Cocoa => {
+            let shards = partition_primal(ds, p).unwrap();
+            let copts = CocoaOpts {
+                lam: LAM,
+                rounds: ITERS,
+                local_iters: s,
+                seed: SEED,
+                record_every: 4,
+                overlap,
+            };
+            run_spmd(p, move |rank, comm| {
+                let sh = &shards[rank];
+                let out = if use_legacy {
+                    legacy::cocoa_run(&sh.a_loc, &sh.y_loc, n, &copts, Some(reference), comm)
+                        .unwrap()
+                } else {
+                    cabcd::solvers::cocoa::run(
+                        &sh.a_loc,
+                        &sh.y_loc,
+                        n,
+                        &copts,
+                        Some(reference),
+                        comm,
+                    )
+                    .unwrap()
+                };
+                let mut vecs = out.w;
+                vecs.extend_from_slice(&out.alpha_loc);
+                RankOut {
+                    vecs,
+                    history: out.history,
+                    loads: Vec::new(),
+                }
+            })
+        }
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_histories_equal(ctx: &str, a: &History, b: &History, check_allocs: bool) {
+    assert_eq!(a.iters, b.iters, "{ctx}: iters");
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(ra.iter, rb.iter, "{ctx}: record[{i}].iter");
+        assert_eq!(
+            ra.obj_err.to_bits(),
+            rb.obj_err.to_bits(),
+            "{ctx}: record[{i}].obj_err"
+        );
+        assert_eq!(
+            ra.sol_err.to_bits(),
+            rb.sol_err.to_bits(),
+            "{ctx}: record[{i}].sol_err"
+        );
+    }
+    assert_eq!(a.prox.len(), b.prox.len(), "{ctx}: prox record count");
+    for (i, (ra, rb)) in a.prox.iter().zip(&b.prox).enumerate() {
+        assert_eq!(ra.iter, rb.iter, "{ctx}: prox[{i}].iter");
+        assert_eq!(
+            ra.pen_obj.to_bits(),
+            rb.pen_obj.to_bits(),
+            "{ctx}: prox[{i}].pen_obj"
+        );
+        assert_eq!(ra.gap.to_bits(), rb.gap.to_bits(), "{ctx}: prox[{i}].gap");
+        assert_eq!(
+            ra.subgrad.to_bits(),
+            rb.subgrad.to_bits(),
+            "{ctx}: prox[{i}].subgrad"
+        );
+        assert_eq!(ra.nnz, rb.nnz, "{ctx}: prox[{i}].nnz");
+    }
+    assert_eq!(
+        bits(&a.gram_conds),
+        bits(&b.gram_conds),
+        "{ctx}: gram_conds"
+    );
+    let (ma, mb) = (&a.meter, &b.meter);
+    assert_eq!(ma.allreduces, mb.allreduces, "{ctx}: meter.allreduces");
+    assert_eq!(ma.all_to_alls, mb.all_to_alls, "{ctx}: meter.all_to_alls");
+    assert_eq!(ma.msgs, mb.msgs, "{ctx}: meter.msgs");
+    assert_eq!(ma.words, mb.words, "{ctx}: meter.words");
+    assert_eq!(ma.recv_msgs, mb.recv_msgs, "{ctx}: meter.recv_msgs");
+    assert_eq!(ma.recv_words, mb.recv_words, "{ctx}: meter.recv_words");
+    if check_allocs {
+        assert_eq!(ma.buf_allocs, mb.buf_allocs, "{ctx}: meter.buf_allocs");
+    }
+}
+
+/// Parsed row of fixtures/engine_meters.tsv.
+struct FixtureRow {
+    allreduces: u64,
+    all_to_alls: u64,
+    msgs: u64,
+    words: Option<u64>,
+}
+
+fn load_fixture() -> HashMap<(String, usize, bool, usize), FixtureRow> {
+    let text = include_str!("fixtures/engine_meters.tsv");
+    let mut map = HashMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(f.len(), 8, "fixture row {line:?}");
+        map.insert(
+            (
+                f[0].to_string(),
+                f[1].parse::<usize>().unwrap(),
+                f[2] == "1",
+                f[3].parse::<usize>().unwrap(),
+            ),
+            FixtureRow {
+                allreduces: f[4].parse().unwrap(),
+                all_to_alls: f[5].parse().unwrap(),
+                msgs: f[6].parse().unwrap(),
+                words: if f[7] == "-" { None } else { Some(f[7].parse().unwrap()) },
+            },
+        );
+    }
+    map
+}
+
+/// The tentpole acceptance test: every method × s × overlap × P, engine
+/// path vs the frozen pre-engine loop, bitwise — plus the committed
+/// closed-form meter fixture.
+#[test]
+fn engine_reproduces_frozen_legacy_loops_bitwise() {
+    let ds = toy_dataset();
+    let reference = {
+        let mut comm = SerialComm::new();
+        cg::compute_reference(&ds.x, &ds.y, ds.n(), LAM, &mut comm).unwrap()
+    };
+    let fixture = load_fixture();
+    let mut configs_checked = 0usize;
+
+    for m in M::ALL {
+        for s in m.s_axis() {
+            for overlap in [false, true] {
+                for p in [1usize, 4] {
+                    let ctx = format!("{} s={s} overlap={overlap} P={p}", m.id());
+                    let legacy_outs = run_config(m, true, s, overlap, p, &ds, &reference);
+                    let engine_outs = run_config(m, false, s, overlap, p, &ds, &reference);
+                    // buf_allocs is exempt only where this PR deliberately
+                    // changes the overlap schedule (prox Gram prefetch,
+                    // bcd_row a2a look-ahead, cocoa pooled combine).
+                    let check_allocs = !(overlap
+                        && matches!(m, M::ProxBcd | M::ProxBdcd | M::BcdRow | M::Cocoa));
+                    for (rank, (lo, eo)) in
+                        legacy_outs.iter().zip(&engine_outs).enumerate()
+                    {
+                        let ctx = format!("{ctx} rank={rank}");
+                        assert_eq!(
+                            bits(&lo.vecs),
+                            bits(&eo.vecs),
+                            "{ctx}: iterate vectors diverged from the frozen loop"
+                        );
+                        assert_eq!(lo.loads, eo.loads, "{ctx}: Lemma-3 loads");
+                        assert_histories_equal(&ctx, &lo.history, &eo.history, check_allocs);
+                    }
+                    // Committed closed-form wire fixture (engine side; the
+                    // legacy side is transitively pinned by the equality
+                    // assertions above).
+                    let row = fixture
+                        .get(&(m.id().to_string(), s, overlap, p))
+                        .unwrap_or_else(|| panic!("{ctx}: missing fixture row"));
+                    for (rank, eo) in engine_outs.iter().enumerate() {
+                        let mt = &eo.history.meter;
+                        let ctx = format!("{ctx} rank={rank} (fixture)");
+                        assert_eq!(mt.allreduces, row.allreduces, "{ctx}: allreduces");
+                        assert_eq!(mt.all_to_alls, row.all_to_alls, "{ctx}: all_to_alls");
+                        assert_eq!(mt.msgs, row.msgs, "{ctx}: msgs");
+                        assert_eq!(mt.recv_msgs, row.msgs, "{ctx}: recv_msgs");
+                        if let Some(words) = row.words {
+                            assert_eq!(mt.words, words, "{ctx}: words");
+                            assert_eq!(mt.recv_words, words, "{ctx}: recv_words");
+                        }
+                    }
+                    configs_checked += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(configs_checked, 48, "coverage matrix shrank");
+}
+
+/// Tolerance-based early stop must behave identically through the engine
+/// (including draining the look-ahead exchange / prefetched gram).
+#[test]
+fn early_stop_is_identical_and_drains_pipelines() {
+    let ds = toy_dataset();
+    let reference = {
+        let mut comm = SerialComm::new();
+        cg::compute_reference(&ds.x, &ds.y, ds.n(), LAM, &mut comm).unwrap()
+    };
+    for m in [M::Bcd, M::BcdRow] {
+        for overlap in [false, true] {
+            let p = 4usize;
+            // A loose tolerance the run hits mid-way: record_every=4 and
+            // iters large enough that the stop fires before the end.
+            let mk = |use_legacy: bool| {
+                let mut opts = solver_opts(m, 4, overlap);
+                opts.iters = 64;
+                // An always-satisfied tolerance: the stop fires at the
+                // FIRST record boundary (h = 4), deterministically — the
+                // interesting part is that the overlap pipelines must
+                // drain their in-flight look-ahead state on the way out.
+                opts.tol = Some(f64::INFINITY);
+                match m {
+                    M::Bcd => {
+                        let shards = partition_primal(&ds, p).unwrap();
+                        let n = ds.n();
+                        let rref = &reference;
+                        let opts = &opts;
+                        run_spmd(p, move |rank, comm| {
+                            let sh = &shards[rank];
+                            let mut be = cabcd::gram::NativeBackend::new();
+                            let out = if use_legacy {
+                                legacy::bcd_run(
+                                    &sh.a_loc, &sh.y_loc, n, opts, Some(rref), comm, &mut be,
+                                )
+                                .unwrap()
+                            } else {
+                                cabcd::solvers::bcd::run(
+                                    &sh.a_loc, &sh.y_loc, n, opts, Some(rref), comm, &mut be,
+                                )
+                                .unwrap()
+                            };
+                            (out.w, out.history.iters, out.history.meter)
+                        })
+                    }
+                    _ => {
+                        let shards = partition_rows(&ds, p).unwrap();
+                        let rref = &reference;
+                        let opts = &opts;
+                        run_spmd(p, move |rank, comm| {
+                            let sh = &shards[rank];
+                            let mut be = cabcd::gram::NativeBackend::new();
+                            let out = if use_legacy {
+                                legacy::bcd_row_run(
+                                    &sh.x_rows,
+                                    &sh.y_loc,
+                                    sh.d_global,
+                                    sh.d_offset,
+                                    opts,
+                                    Some(rref),
+                                    comm,
+                                    &mut be,
+                                )
+                                .unwrap()
+                            } else {
+                                cabcd::solvers::bcd_row::run(
+                                    &sh.x_rows,
+                                    &sh.y_loc,
+                                    sh.d_global,
+                                    sh.d_offset,
+                                    opts,
+                                    Some(rref),
+                                    comm,
+                                    &mut be,
+                                )
+                                .unwrap()
+                            };
+                            (out.w_full, out.history.iters, out.history.meter)
+                        })
+                    }
+                }
+            };
+            let legacy_outs = mk(true);
+            let engine_outs = mk(false);
+            for (rank, ((wl, il, ml), (we, ie, me))) in
+                legacy_outs.iter().zip(&engine_outs).enumerate()
+            {
+                let ctx = format!("{:?} overlap={overlap} rank={rank}", m);
+                assert_eq!(bits(wl), bits(we), "{ctx}: early-stop trajectory");
+                assert_eq!(il, ie, "{ctx}: early-stop iteration count");
+                assert_eq!(
+                    *ie, 4,
+                    "{ctx}: the always-true tolerance must stop at the first \
+                     record boundary"
+                );
+                assert_eq!(ml.allreduces, me.allreduces, "{ctx}: allreduces");
+                assert_eq!(ml.all_to_alls, me.all_to_alls, "{ctx}: all_to_alls");
+            }
+        }
+    }
+}
+
+/// Tooling gate: the blanket crate-wide `too_many_arguments` allow was
+/// removed with the engine redesign; what remains is a frozen set of
+/// per-site allows (trait-contract signatures, the paper-shaped record
+/// helpers, and the stable 8-argument wrappers). New 8+-argument entry
+/// points should thread context through `engine::Problem`/`Session` (or a
+/// step struct) instead of adding another allow.
+#[test]
+fn too_many_arguments_allows_are_frozen() {
+    fn count_in(dir: &std::path::Path, total: &mut usize, hits: &mut Vec<String>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                count_in(&path, total, hits);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let text = std::fs::read_to_string(&path).unwrap();
+                let n = text.matches("clippy::too_many_arguments").count();
+                if n > 0 {
+                    *total += n;
+                    hits.push(format!("{}: {n}", path.display()));
+                }
+            }
+        }
+    }
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let mut total = 0usize;
+    let mut hits = Vec::new();
+    count_in(&root, &mut total, &mut hits);
+    const FROZEN_ALLOW_COUNT: usize = 23;
+    assert!(
+        total <= FROZEN_ALLOW_COUNT,
+        "rust/src gained new clippy::too_many_arguments allows \
+         ({total} > frozen {FROZEN_ALLOW_COUNT}).\n\
+         Thread context through engine::Problem/Session or a CaStep struct \
+         instead of widening a signature.\nSites:\n{}",
+        hits.join("\n")
+    );
+    assert!(
+        total > 0,
+        "scan found no allows at all — the gate is probably scanning the \
+         wrong directory ({})",
+        root.display()
+    );
+}

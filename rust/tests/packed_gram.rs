@@ -335,18 +335,16 @@ fn prop_trajectories_invariant_across_storage_and_overlap() {
             Matrix::Dense(m) => Matrix::Csr(CsrMatrix::from_dense(m)),
             _ => unreachable!(),
         };
-        let mk = |overlap: bool| SolverOpts {
-            b,
-            s,
-            lam: 0.3,
-            iters: outer * s,
-            seed: g.seed ^ 0xFEED,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap,
-            ..Default::default()
-        };
+        let mk = |overlap: bool| SolverOpts::builder()
+            .b(b)
+            .s(s)
+            .lam(0.3)
+            .iters(outer * s)
+            .seed(g.seed ^ 0xFEED)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(overlap)
+            .build();
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
         // Primal: blocking ≡ overlapped, bitwise, on both storages.
@@ -390,18 +388,16 @@ fn prop_row_layout_matches_column_layout_at_random_shapes() {
         let outer = g.usize_in(2, 5);
         let p = g.usize_in(2, 5);
         let ds = random_dataset(g, d, n);
-        let opts = SolverOpts {
-            b,
-            s,
-            lam: 0.25,
-            iters: outer * s,
-            seed: g.seed ^ 0xB10C,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: g.bool(),
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(b)
+            .s(s)
+            .lam(0.25)
+            .iters(outer * s)
+            .seed(g.seed ^ 0xB10C)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(g.bool())
+            .build();
         let mut be = NativeBackend::new();
         let mut c = SerialComm::new();
         let w_col = bcd::run(&ds.x, &ds.y, n, &opts, None, &mut c, &mut be)
@@ -480,18 +476,16 @@ fn bcd_and_bdcd_allreduce_payload_is_exactly_packed_triangle_plus_resid() {
         let sb = s * b;
         let payload = packed_len(sb) + sb;
         let outer = 6usize;
-        let opts = SolverOpts {
-            b,
-            s,
-            lam: 0.2,
-            iters: outer * s,
-            seed: 9,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(b)
+            .s(s)
+            .lam(0.2)
+            .iters(outer * s)
+            .seed(9)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(overlap)
+            .build();
         // Primal.
         let shards = partition_primal(&ds, p).unwrap();
         let opts2 = opts.clone();
@@ -554,18 +548,16 @@ fn bcd_row_payload_is_packed_triangle_plus_two_vectors_plus_lemma3_volume() {
         let sb = s * b;
         let payload = packed_len(sb) + 2 * sb; // Theorem-4 layout: [G|r|w]
         let outer = 5usize;
-        let opts = SolverOpts {
-            b,
-            s,
-            lam: 0.3,
-            iters: outer * s,
-            seed: 21,
-            record_every: 0,
-            track_gram_cond: false,
-            tol: None,
-            overlap: false,
-            ..Default::default()
-        };
+        let opts = SolverOpts::builder()
+            .b(b)
+            .s(s)
+            .lam(0.3)
+            .iters(outer * s)
+            .seed(21)
+            .record_every(0)
+            .track_gram_cond(false)
+            .overlap(false)
+            .build();
         let row_part = BlockPartition::new(d, p);
         let col_part = BlockPartition::new(n, p);
         let x2 = &ds.x;

@@ -96,16 +96,15 @@ fn reference_cd(x: &Matrix, y: &[f64], mu1: f64, mu2: f64, sweeps: usize) -> Vec
 fn ca_prox_bcd_is_s_invariant() {
     let (x, y, _) = sparse_problem(12, 80, 7);
     for reg in [Reg::L1, Reg::Elastic { l1_ratio: 0.5 }] {
-        let mk = |s: usize| SolverOpts {
-            b: 2,
-            s,
-            lam: 0.05,
-            iters: 48, // divisible by every s below
-            seed: 11,
-            record_every: 0,
-            reg,
-            ..Default::default()
-        };
+        let mk = |s: usize| SolverOpts::builder()
+            .b(2)
+            .s(s)
+            .lam(0.05)
+            .iters(48)
+            .seed(11)
+            .record_every(0)
+            .reg(reg)
+            .build();
         let mut be = NativeBackend::new();
         let mut comm = SerialComm::new();
         let w1 = bcd::run(&x, &y, 80, &mk(1), None, &mut comm, &mut be)
@@ -131,16 +130,15 @@ fn ca_prox_bdcd_is_s_invariant() {
     let (x, y, _) = sparse_problem(6, 48, 9);
     let a = x.transpose();
     for reg in [Reg::L1, Reg::None] {
-        let mk = |s: usize| SolverOpts {
-            b: 2,
-            s,
-            lam: 0.1,
-            iters: 48,
-            seed: 5,
-            record_every: 0,
-            reg,
-            ..Default::default()
-        };
+        let mk = |s: usize| SolverOpts::builder()
+            .b(2)
+            .s(s)
+            .lam(0.1)
+            .iters(48)
+            .seed(5)
+            .record_every(0)
+            .reg(reg)
+            .build();
         let mut be = NativeBackend::new();
         let mut comm = SerialComm::new();
         let w1 = bdcd::run(&a, &y, 6, 0, &mk(1), None, &mut comm, &mut be)
@@ -170,16 +168,15 @@ fn ca_prox_bdcd_is_s_invariant() {
 fn l2_reg_is_bitwise_equal_to_pre_refactor_solvers() {
     let spec = &scaled_specs(8)[0]; // abalone-s8
     let ds = generate(spec, 5).unwrap();
-    let mk = |reg: Reg| SolverOpts {
-        b: 2,
-        s: 4,
-        lam: spec.lambda(),
-        iters: 32,
-        seed: 13,
-        record_every: 4,
-        reg,
-        ..Default::default()
-    };
+    let mk = |reg: Reg| SolverOpts::builder()
+        .b(2)
+        .s(4)
+        .lam(spec.lambda())
+        .iters(32)
+        .seed(13)
+        .record_every(4)
+        .reg(reg)
+        .build();
     for p in [1usize, 3] {
         let shards = partition_primal(&ds, p).unwrap();
         let mut runs = Vec::new();
@@ -230,17 +227,16 @@ fn lasso_matches_scalar_reference_cd_with_tiny_gap() {
     let lam = 0.05;
     let w_ref = reference_cd(&x, &y, lam, 0.0, 200_000);
 
-    let opts = SolverOpts {
-        b: 1,
-        s: 4,
-        lam,
-        iters: 40_000,
-        seed: 2,
-        record_every: 400,
-        tol: Some(1e-9),
-        reg: Reg::L1,
-        ..Default::default()
-    };
+    let opts = SolverOpts::builder()
+        .b(1)
+        .s(4)
+        .lam(lam)
+        .iters(40_000)
+        .seed(2)
+        .record_every(400)
+        .tol(1e-9)
+        .reg(Reg::L1)
+        .build();
     let mut comm = SerialComm::new();
     let mut be = NativeBackend::new();
     let out = bcd::run(&x, &y, 80, &opts, None, &mut comm, &mut be).unwrap();
@@ -272,25 +268,22 @@ fn lasso_matches_scalar_reference_cd_with_tiny_gap() {
 fn elastic_ratio_zero_converges_to_ridge_solution() {
     let (x, y, _) = sparse_problem(8, 60, 21);
     let lam = 0.1;
-    let exact = SolverOpts {
-        b: 2,
-        s: 1,
-        lam,
-        iters: 4000,
-        seed: 1,
-        record_every: 0,
-        ..Default::default()
-    };
+    let exact = SolverOpts::builder()
+        .b(2)
+        .s(1)
+        .lam(lam)
+        .iters(4000)
+        .seed(1)
+        .record_every(0)
+        .build();
     let mut comm = SerialComm::new();
     let mut be = NativeBackend::new();
     let w_ridge = bcd::run(&x, &y, 60, &exact, None, &mut comm, &mut be)
         .unwrap()
         .w;
-    let prox_opts = SolverOpts {
-        iters: 40_000,
-        reg: Reg::Elastic { l1_ratio: 0.0 },
-        ..exact
-    };
+    let mut prox_opts = exact.clone();
+    prox_opts.iters = 40_000;
+    prox_opts.reg = Reg::Elastic { l1_ratio: 0.0 };
     let w_prox = bcd::run(&x, &y, 60, &prox_opts, None, &mut comm, &mut be)
         .unwrap()
         .w;
@@ -319,17 +312,16 @@ fn prox_wire_volume_is_h_over_s_packed_payloads() {
         let shards = partition_primal(&ds, p).unwrap();
         let mut runs = Vec::new();
         for overlap in [false, true] {
-            let opts = SolverOpts {
-                b,
-                s,
-                lam: 0.05,
-                iters,
-                seed: 3,
-                record_every: 10,
-                overlap,
-                reg: Reg::L1,
-                ..Default::default()
-            };
+            let opts = SolverOpts::builder()
+                .b(b)
+                .s(s)
+                .lam(0.05)
+                .iters(iters)
+                .seed(3)
+                .record_every(10)
+                .overlap(overlap)
+                .reg(Reg::L1)
+                .build();
             let outs = run_spmd(p, |rank, comm| {
                 let mut be = NativeBackend::new();
                 let sh = &shards[rank];
@@ -368,16 +360,15 @@ fn prox_wire_volume_is_h_over_s_packed_payloads() {
 fn prox_rank_count_does_not_change_numerics() {
     let spec = &scaled_specs(8)[0];
     let ds = generate(spec, 6).unwrap();
-    let opts = SolverOpts {
-        b: 2,
-        s: 2,
-        lam: 0.05,
-        iters: 60,
-        seed: 17,
-        record_every: 0,
-        reg: Reg::L1,
-        ..Default::default()
-    };
+    let opts = SolverOpts::builder()
+        .b(2)
+        .s(2)
+        .lam(0.05)
+        .iters(60)
+        .seed(17)
+        .record_every(0)
+        .reg(Reg::L1)
+        .build();
     let mut solutions = Vec::new();
     for p in [1usize, 4] {
         let shards = partition_primal(&ds, p).unwrap();
@@ -402,10 +393,9 @@ fn prox_rank_count_does_not_change_numerics() {
 #[test]
 fn bcd_row_rejects_prox_regularizers() {
     let (x, y, _) = sparse_problem(8, 32, 1);
-    let opts = SolverOpts {
-        reg: Reg::L1,
-        ..Default::default()
-    };
+    let opts = SolverOpts::builder()
+        .reg(Reg::L1)
+        .build();
     let mut comm = SerialComm::new();
     let mut be = NativeBackend::new();
     let err = bcd_row::run(&x, &y[..32], 8, 0, &opts, None, &mut comm, &mut be).unwrap_err();
