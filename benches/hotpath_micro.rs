@@ -70,6 +70,8 @@ fn check_against_seed(seed_text: &str, current: &[(&str, f64)]) {
         "allreduce_payload_words_packed",
         "allreduce_words_per_rank_p8_packed",
         "prox_overlap_allreduces_per_outer",
+        "trace_allocs_steady_state",
+        "trace_spans_per_outer",
     ];
     for &key in WIRE_FIELDS {
         let Some(seed_val) = json_num_field(seed_text, key) else {
@@ -334,6 +336,86 @@ fn main() {
         let per_outer = overlap_allreduces as f64 / outer as f64;
         report.push(("prox_overlap_allreduces_per_outer", json::num(per_outer)));
         wire_metrics.push(("prox_overlap_allreduces_per_outer", per_outer));
+    }
+
+    // --- span tracer: zero-alloc steady state + span accounting ---------
+    // A traced overlapped CA-BCD run at P=4 (the acceptance config).
+    // Machine-independent gates: the tracer ring must never grow
+    // (`trace_allocs == 0` — preallocated, wrap-in-place) and the spans
+    // per outer iteration are a fixed function of the prefetch schedule
+    // (7·outer + 2 per rank), so any instrumentation drift shows up as a
+    // seed regression. The overlap-efficiency figure is printed for the
+    // record (timing-dependent, not gated).
+    {
+        use cabcd::coordinator::partition_primal;
+        use cabcd::matrix::io::Dataset;
+        use cabcd::solvers::{bcd, SolverOpts};
+        use cabcd::trace::{self, TraceSummary, Tracer};
+
+        let (d, n) = (96usize, 4096usize);
+        let x = Matrix::Dense(dense_mat(d, n, 31));
+        let mut y = vec![0.0; n];
+        x.matvec_t(&vec![1.0; d], &mut y).unwrap();
+        let ds = Dataset {
+            name: "trace-bench".into(),
+            x,
+            y,
+        };
+        let p = 4usize;
+        let shards = partition_primal(&ds, p).unwrap();
+        let (s, outer) = (4usize, 8usize);
+        let opts = SolverOpts::builder()
+            .b(8)
+            .s(s)
+            .lam(0.1)
+            .iters(outer * s)
+            .seed(5)
+            .record_every(0)
+            .overlap(true)
+            .build();
+        let shards_ref = &shards;
+        let optsr = &opts;
+        let outs = run_spmd(p, move |rank, comm| {
+            trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+            let sh = &shards_ref[rank];
+            let mut be = NativeBackend::new();
+            let out = bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, optsr, None, comm, &mut be)
+                .unwrap();
+            (out.history.meter, trace::take().unwrap())
+        });
+        let mut tracers = Vec::with_capacity(p);
+        for (rank, (meter, tracer)) in outs.into_iter().enumerate() {
+            trace::cross_check(&tracer, &meter)
+                .unwrap_or_else(|e| panic!("trace/meter cross-check, rank {rank}: {e}"));
+            tracers.push(tracer);
+        }
+        let sum = TraceSummary::from_tracers(&tracers);
+        assert_eq!(
+            sum.trace_allocs, 0,
+            "tracer ring reallocated in steady state"
+        );
+        assert_eq!(sum.dropped, 0, "default ring capacity dropped spans");
+        let spans_per_outer = sum.spans as f64 / (p * outer) as f64;
+        let bd0 = &sum.breakdown[0];
+        println!(
+            "\nspan tracer (CA-BCD overlap, P={p}, {outer} outers): {} spans \
+             ({spans_per_outer} per rank-outer), 0 ring allocs",
+            sum.spans
+        );
+        println!(
+            "  overlap efficiency = {:.3} ({} windows)   rank0 breakdown: \
+             compute {} / wire {} / idle {}",
+            sum.overlap_efficiency(),
+            sum.overlap.pairs,
+            fmt_secs(bd0.compute_ns as f64 * 1e-9),
+            fmt_secs(bd0.wire_ns as f64 * 1e-9),
+            fmt_secs(bd0.idle_ns as f64 * 1e-9),
+        );
+        report.push(("trace_allocs_steady_state", json::num(sum.trace_allocs as f64)));
+        report.push(("trace_spans_per_outer", json::num(spans_per_outer)));
+        report.push(("trace_overlap_efficiency", json::num(sum.overlap_efficiency())));
+        wire_metrics.push(("trace_allocs_steady_state", sum.trace_allocs as f64));
+        wire_metrics.push(("trace_spans_per_outer", spans_per_outer));
     }
 
     // Measured allreduce latency on the packed payload.

@@ -49,6 +49,7 @@ fn cfg(backend: &str, ranks: usize, iters: usize) -> ExperimentConfig {
             ranks,
             backend: backend.into(),
             artifact_dir: "artifacts".into(),
+            trace: None,
         },
     }
 }

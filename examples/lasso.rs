@@ -5,12 +5,14 @@
 //! `[G|r]` payload the ridge solvers ship.
 //!
 //! ```sh
-//! cargo run --release --example lasso
+//! cargo run --release --example lasso            # plain
+//! cargo run --release --example lasso -- --trace lasso.trace.json
 //! ```
 //!
 //! Runs SPMD over 4 simulated ranks, then sweeps the elastic-net mixing
 //! ratio to show the regularization-path seam. CI runs this example as an
-//! acceptance check (gap ≤ 1e-6, exact support recovery).
+//! acceptance check (gap ≤ 1e-6, exact support recovery) and validates
+//! the `--trace` Chrome trace-event output with `python/check_trace.py`.
 
 use cabcd::comm::thread::run_spmd;
 use cabcd::coordinator::partition_primal;
@@ -19,9 +21,19 @@ use cabcd::matrix::io::Dataset;
 use cabcd::matrix::{DenseMatrix, Matrix};
 use cabcd::prox::Reg;
 use cabcd::solvers::{bcd, SolverOpts};
+use cabcd::trace::{self, TraceSummary, Tracer};
 use cabcd::util::Rng64;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Optional: `--trace PATH` writes a per-rank Chrome trace-event JSON
+    // of the main SPMD solve (loadable in Perfetto; schema-checked in CI).
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let trace_path = match argv.as_slice() {
+        [] => None,
+        [flag, path] if flag == "--trace" => Some(std::path::PathBuf::from(path)),
+        other => return Err(format!("usage: lasso [--trace PATH], got {other:?}").into()),
+    };
+
     // 1. Planted sparse-recovery instance: d = 64 features, only 6
     //    active, n = 512 noisy measurements.
     let (d, n, k_active) = (64usize, 512usize, 6usize);
@@ -60,11 +72,33 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .tol(1e-8)
         .reg(Reg::L1)
         .build();
+    let tracing = trace_path.is_some();
     let outs = run_spmd(p, |rank, comm| {
+        if tracing {
+            trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+        }
         let mut be = NativeBackend::new();
         let sh = &shards[rank];
-        bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, &opts, None, comm, &mut be).unwrap()
+        let out =
+            bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, &opts, None, comm, &mut be).unwrap();
+        (out, trace::take())
     });
+    let (outs, tracers): (Vec<_>, Vec<_>) = outs.into_iter().unzip();
+    let tracers: Vec<Tracer> = tracers.into_iter().flatten().collect();
+    if let Some(path) = &trace_path {
+        std::fs::write(path, trace::chrome_trace_json(&tracers))?;
+        let sum = TraceSummary::from_tracers(&tracers);
+        for (tracer, out) in tracers.iter().zip(&outs) {
+            trace::cross_check(tracer, &out.history.meter)?;
+        }
+        println!(
+            "trace: {} spans over {} ranks → {} (overlap efficiency {:.3})",
+            sum.spans,
+            sum.ranks,
+            path.display(),
+            sum.overlap_efficiency()
+        );
+    }
     let out = &outs[0];
 
     println!("\n  iter    penalized obj    duality gap    subgrad      nnz(w)");

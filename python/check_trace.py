@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Schema checker for the tracer's Chrome trace-event JSON export.
+
+CI runs the lasso example with ``--trace`` and validates the emitted file
+here: the Rust exporter is hand-rolled (no serde in the offline vendor
+set), so a malformed envelope or a drifting field name would otherwise
+only surface when someone loads a trace into Perfetto months later.
+
+Checks:
+  * the envelope parses as JSON and has ``traceEvents`` (list) plus
+    ``displayTimeUnit``;
+  * every rank track announces itself with a ``thread_name`` metadata
+    event (``ph: "M"``);
+  * every span is a complete event (``ph: "X"``) with numeric
+    ``ts``/``dur`` (``dur >= 0``), integer ``pid``/``tid``, a ``name``
+    from the span taxonomy, a ``cat`` from the op-class taxonomy, and
+    ``args.tag``/``args.words``;
+  * the kinds a solver run must produce (Sample, GramLocal,
+    CollectiveStart, CollectiveWait, InnerSolve, Apply) all appear, and
+    every metadata-announced rank has at least one span.
+
+Usage: python3 python/check_trace.py <trace.json>
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+SPAN_KINDS = {
+    "Sample",
+    "GramLocal",
+    "CollectiveStart",
+    "CollectiveWait",
+    "InnerSolve",
+    "Apply",
+    "ProxStep",
+    "Record",
+}
+OP_CLASSES = {"compute", "allreduce", "all_to_all", "barrier"}
+# Kinds any traced solver run is guaranteed to emit (ProxStep/Record are
+# config-dependent and not required).
+REQUIRED_KINDS = {
+    "Sample",
+    "GramLocal",
+    "CollectiveStart",
+    "CollectiveWait",
+    "InnerSolve",
+    "Apply",
+}
+
+
+def fail(msg: str) -> None:
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(path: str) -> None:
+    with open(path, encoding="utf-8") as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(f"{path} is not valid JSON: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level is not an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents missing, not a list, or empty")
+    if doc.get("displayTimeUnit") not in ("ms", "ns"):
+        fail(f"displayTimeUnit {doc.get('displayTimeUnit')!r} invalid")
+
+    meta_ranks: set[int] = set()
+    span_ranks: set[int] = set()
+    kinds_seen: set[str] = set()
+    spans = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"traceEvents[{i}] is not an object")
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") != "thread_name":
+                fail(f"traceEvents[{i}]: metadata event is not thread_name")
+            if not isinstance(ev.get("tid"), int):
+                fail(f"traceEvents[{i}]: metadata tid is not an integer")
+            meta_ranks.add(ev["tid"])
+            continue
+        if ph != "X":
+            fail(f"traceEvents[{i}]: unexpected ph {ph!r} (want 'X' or 'M')")
+        spans += 1
+        name = ev.get("name")
+        if name not in SPAN_KINDS:
+            fail(f"traceEvents[{i}]: span name {name!r} not in taxonomy")
+        kinds_seen.add(name)
+        if ev.get("cat") not in OP_CLASSES:
+            fail(f"traceEvents[{i}]: cat {ev.get('cat')!r} not an op class")
+        for key in ("ts", "dur"):
+            v = ev.get(key)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                fail(f"traceEvents[{i}]: {key} is {v!r}, want a number")
+        if ev["dur"] < 0:
+            fail(f"traceEvents[{i}]: negative dur {ev['dur']}")
+        if ev["ts"] < 0:
+            fail(f"traceEvents[{i}]: negative ts {ev['ts']}")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                fail(f"traceEvents[{i}]: {key} is {ev.get(key)!r}, want int")
+        span_ranks.add(ev["tid"])
+        args = ev.get("args")
+        if not isinstance(args, dict):
+            fail(f"traceEvents[{i}]: args missing")
+        for key in ("tag", "words"):
+            v = args.get(key)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                fail(f"traceEvents[{i}]: args.{key} is {v!r}, want a number")
+
+    if not meta_ranks:
+        fail("no thread_name metadata events (rank tracks unnamed)")
+    missing_kinds = REQUIRED_KINDS - kinds_seen
+    if missing_kinds:
+        fail(f"required span kinds never emitted: {sorted(missing_kinds)}")
+    silent = meta_ranks - span_ranks
+    if silent:
+        fail(f"ranks announced but produced no spans: {sorted(silent)}")
+    orphans = span_ranks - meta_ranks
+    if orphans:
+        fail(f"spans on unannounced rank tracks: {sorted(orphans)}")
+
+    print(
+        f"check_trace: OK: {path}: {spans} spans on {len(span_ranks)} rank "
+        f"track(s), kinds {sorted(kinds_seen)}"
+    )
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        fail("usage: check_trace.py <trace.json>")
+    check(sys.argv[1])
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,12 @@ pub struct CostMeter {
     pub allreduces: u64,
     /// Number of all-to-all collectives entered.
     pub all_to_alls: u64,
+    /// Number of **deferred** collective completions — `iallreduce_wait`
+    /// / `iall_to_all_wait` calls — counted separately from the
+    /// `*_start` posts above so fixtures can assert the overlapped
+    /// schedule actually defers its waits (blocking collectives complete
+    /// inside the call and contribute 0 here).
+    pub collective_waits: u64,
     /// Heap allocations taken by the message buffer pool (pool misses and
     /// capacity growth). Zero after warmup on a steady-state payload — the
     /// invariant the hot-path micro-bench asserts.
@@ -45,6 +51,7 @@ impl CostMeter {
         self.recv_words += other.recv_words;
         self.allreduces += other.allreduces;
         self.all_to_alls += other.all_to_alls;
+        self.collective_waits += other.collective_waits;
         self.buf_allocs += other.buf_allocs;
     }
 

@@ -237,6 +237,12 @@ pub trait Communicator: Send {
 
     /// Complete a non-blocking all-to-all and return the per-source
     /// payloads (`out[q]` = the vector received from rank q).
+    ///
+    /// The default implementation pairs with the eager default
+    /// [`Communicator::iall_to_all_start`]: the exchange already
+    /// completed inside the start, so there is no deferred completion to
+    /// count — it contributes neither `CostMeter::collective_waits` nor
+    /// a trace span (matching `SerialComm`, which meters no all-to-alls).
     fn iall_to_all_wait(&mut self, handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
         match handle.state {
             A2aState::Ready(out) => Ok(out),
@@ -288,13 +294,34 @@ impl Communicator for SerialComm {
         1
     }
 
-    fn allreduce_sum(&mut self, _buf: &mut [f64]) -> Result<()> {
+    fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()> {
         self.meter.allreduces += 1;
+        // Blocking collective: instantaneous start marker + wait marker,
+        // so span counts match the meters under either schedule.
+        let words = buf.len() as u64;
+        crate::trace::mark(
+            crate::trace::SpanKind::CollectiveStart,
+            crate::trace::OpClass::Allreduce,
+            0,
+            words,
+        );
+        crate::trace::mark(
+            crate::trace::SpanKind::CollectiveWait,
+            crate::trace::OpClass::Allreduce,
+            0,
+            words,
+        );
         Ok(())
     }
 
     fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
         self.meter.allreduces += 1;
+        crate::trace::mark(
+            crate::trace::SpanKind::CollectiveStart,
+            crate::trace::OpClass::Allreduce,
+            0,
+            buf.len() as u64,
+        );
         Ok(ReduceHandle {
             buf,
             state: HandleState::Done,
@@ -302,6 +329,13 @@ impl Communicator for SerialComm {
     }
 
     fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>> {
+        self.meter.collective_waits += 1;
+        crate::trace::mark(
+            crate::trace::SpanKind::CollectiveWait,
+            crate::trace::OpClass::Allreduce,
+            0,
+            handle.buf.len() as u64,
+        );
         Ok(handle.buf)
     }
 

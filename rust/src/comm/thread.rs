@@ -12,6 +12,7 @@ use crate::comm::{
     A2aState, Algo, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle,
 };
 use crate::error::{Error, Result};
+use crate::trace::{self, OpClass, SpanKind};
 
 /// Payload size (f64 words) at which allreduce switches from recursive
 /// doubling (latency-optimal, `len·log₂P` words/rank) to Rabenseifner
@@ -462,7 +463,23 @@ impl ThreadComm {
         recv_lens: Option<&[usize]>,
     ) -> Result<Vec<Vec<f64>>> {
         self.meter.all_to_alls += 1;
-        self.begin_op();
+        let tag = self.begin_op();
+        let words: u64 = send.iter().map(|v| v.len() as u64).sum();
+        // Blocking exchange: instantaneous start marker, wait span over
+        // the whole protocol (start counts thus match the meters under
+        // either schedule).
+        trace::mark(SpanKind::CollectiveStart, OpClass::AllToAll, tag, words);
+        let t0 = trace::now();
+        let res = self.all_to_all_body(send, recv_lens);
+        trace::record(SpanKind::CollectiveWait, OpClass::AllToAll, tag, words, t0);
+        res
+    }
+
+    fn all_to_all_body(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: Option<&[usize]>,
+    ) -> Result<Vec<Vec<f64>>> {
         let p = self.size;
         if send.len() != p {
             return Err(self.poison(format!(
@@ -517,7 +534,16 @@ impl ThreadComm {
     /// the property tests; not used by any solver.
     pub fn allreduce_sum_reference(&mut self, buf: &mut [f64]) -> Result<()> {
         self.meter.allreduces += 1;
-        self.begin_op();
+        let tag = self.begin_op();
+        let words = buf.len() as u64;
+        trace::mark(SpanKind::CollectiveStart, OpClass::Allreduce, tag, words);
+        let t0 = trace::now();
+        let res = self.allreduce_reference_body(buf);
+        trace::record(SpanKind::CollectiveWait, OpClass::Allreduce, tag, words, t0);
+        res
+    }
+
+    fn allreduce_reference_body(&mut self, buf: &mut [f64]) -> Result<()> {
         let p = self.size;
         if p == 1 {
             return Ok(());
@@ -584,43 +610,57 @@ impl Communicator for ThreadComm {
 
     fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()> {
         self.meter.allreduces += 1;
-        self.begin_op();
-        if self.size == 1 {
-            return Ok(());
-        }
-        self.check_poison()?;
-        match self.select_algo(buf.len()) {
-            Algo::RecursiveDoubling => self.allreduce_rd(buf, false),
-            Algo::Rabenseifner => self.allreduce_rab(buf, false),
-        }
+        let tag = self.begin_op();
+        let words = buf.len() as u64;
+        trace::mark(SpanKind::CollectiveStart, OpClass::Allreduce, tag, words);
+        let t0 = trace::now();
+        let res = if self.size == 1 {
+            Ok(())
+        } else {
+            self.check_poison().and_then(|_| match self.select_algo(buf.len()) {
+                Algo::RecursiveDoubling => self.allreduce_rd(buf, false),
+                Algo::Rabenseifner => self.allreduce_rab(buf, false),
+            })
+        };
+        trace::record(SpanKind::CollectiveWait, OpClass::Allreduce, tag, words, t0);
+        res
     }
 
     fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
         self.meter.allreduces += 1;
         let tag = self.begin_op();
-        if self.size == 1 {
-            return Ok(ReduceHandle {
+        let words = buf.len() as u64;
+        let t0 = trace::now();
+        let res = (|| {
+            if self.size == 1 {
+                return Ok(ReduceHandle {
+                    buf,
+                    state: HandleState::Done,
+                });
+            }
+            self.check_poison()?;
+            let algo = self.select_algo(buf.len());
+            let first_sent = self.post_first_send(&buf, algo)?;
+            Ok(ReduceHandle {
                 buf,
-                state: HandleState::Done,
-            });
-        }
-        self.check_poison()?;
-        let algo = self.select_algo(buf.len());
-        let first_sent = self.post_first_send(&buf, algo)?;
-        Ok(ReduceHandle {
-            buf,
-            state: HandleState::Thread {
-                algo,
-                first_sent,
-                tag,
-            },
-        })
+                state: HandleState::Thread {
+                    algo,
+                    first_sent,
+                    tag,
+                },
+            })
+        })();
+        trace::record(SpanKind::CollectiveStart, OpClass::Allreduce, tag, words, t0);
+        res
     }
 
     fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>> {
+        self.meter.collective_waits += 1;
         let ReduceHandle { mut buf, state } = handle;
-        match state {
-            HandleState::Done => Ok(buf),
+        let words = buf.len() as u64;
+        let t0 = trace::now();
+        let (tag, res) = match state {
+            HandleState::Done => (self.cur_tag, Ok(())),
             HandleState::Thread {
                 algo,
                 first_sent,
@@ -629,13 +669,15 @@ impl Communicator for ThreadComm {
                 // Resume under the operation tag assigned at start time —
                 // collectives that ran in between used their own tags.
                 self.cur_tag = tag;
-                match algo {
-                    Algo::RecursiveDoubling => self.allreduce_rd(&mut buf, first_sent)?,
-                    Algo::Rabenseifner => self.allreduce_rab(&mut buf, first_sent)?,
-                }
-                Ok(buf)
+                let r = match algo {
+                    Algo::RecursiveDoubling => self.allreduce_rd(&mut buf, first_sent),
+                    Algo::Rabenseifner => self.allreduce_rab(&mut buf, first_sent),
+                };
+                (tag, r)
             }
-        }
+        };
+        trace::record(SpanKind::CollectiveWait, OpClass::Allreduce, tag, words, t0);
+        res.map(|()| buf)
     }
 
     fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
@@ -677,6 +719,70 @@ impl Communicator for ThreadComm {
     ) -> Result<AllToAllHandle> {
         self.meter.all_to_alls += 1;
         let tag = self.begin_op();
+        let words: u64 = send.iter().map(|v| v.len() as u64).sum();
+        let t0 = trace::now();
+        let res = self.iall_to_all_start_body(send, recv_lens, tag);
+        trace::record(SpanKind::CollectiveStart, OpClass::AllToAll, tag, words, t0);
+        res
+    }
+
+    fn iall_to_all_wait(&mut self, handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
+        self.meter.collective_waits += 1;
+        let t0 = trace::now();
+        let (tag, words_hint, res) = match handle.state {
+            A2aState::Ready(out) => {
+                let words: u64 = out.iter().map(|v| v.len() as u64).sum();
+                (self.cur_tag, words, Ok(out))
+            }
+            A2aState::Thread {
+                tag,
+                recv_lens,
+                out,
+            } => {
+                self.cur_tag = tag;
+                let words: u64 = recv_lens.iter().map(|&l| l as u64).sum();
+                (tag, words, self.iall_to_all_drain(recv_lens, out))
+            }
+        };
+        trace::record(SpanKind::CollectiveWait, OpClass::AllToAll, tag, words_hint, t0);
+        res
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.begin_op();
+        if self.size == 1 {
+            return Ok(());
+        }
+        self.check_poison()?;
+        // Zero-payload recursive doubling: counts the message rounds, no
+        // words.
+        self.allreduce_rd(&mut [], false)
+    }
+
+    fn take_buf(&mut self, len: usize) -> Vec<f64> {
+        self.take_buf_inner(len)
+    }
+
+    fn give_buf(&mut self, buf: Vec<f64>) {
+        self.give_buf_inner(buf)
+    }
+
+    fn meter(&self) -> &CostMeter {
+        &self.meter
+    }
+
+    fn meter_mut(&mut self) -> &mut CostMeter {
+        &mut self.meter
+    }
+}
+
+impl ThreadComm {
+    fn iall_to_all_start_body(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+        tag: u64,
+    ) -> Result<AllToAllHandle> {
         let p = self.size;
         if send.len() != p {
             return Err(self.poison(format!(
@@ -723,50 +829,18 @@ impl Communicator for ThreadComm {
         })
     }
 
-    fn iall_to_all_wait(&mut self, handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
-        match handle.state {
-            A2aState::Ready(out) => Ok(out),
-            A2aState::Thread {
-                tag,
-                recv_lens,
-                mut out,
-            } => {
-                self.cur_tag = tag;
-                for src in 0..self.size {
-                    if src != self.rank {
-                        out[src] = self.recv_expect(src, recv_lens[src])?;
-                    }
-                }
-                Ok(out)
+    /// Receive side of an in-flight all-to-all, resumed under its tag.
+    fn iall_to_all_drain(
+        &mut self,
+        recv_lens: Vec<usize>,
+        mut out: Vec<Vec<f64>>,
+    ) -> Result<Vec<Vec<f64>>> {
+        for src in 0..self.size {
+            if src != self.rank {
+                out[src] = self.recv_expect(src, recv_lens[src])?;
             }
         }
-    }
-
-    fn barrier(&mut self) -> Result<()> {
-        self.begin_op();
-        if self.size == 1 {
-            return Ok(());
-        }
-        self.check_poison()?;
-        // Zero-payload recursive doubling: counts the message rounds, no
-        // words.
-        self.allreduce_rd(&mut [], false)
-    }
-
-    fn take_buf(&mut self, len: usize) -> Vec<f64> {
-        self.take_buf_inner(len)
-    }
-
-    fn give_buf(&mut self, buf: Vec<f64>) {
-        self.give_buf_inner(buf)
-    }
-
-    fn meter(&self) -> &CostMeter {
-        &self.meter
-    }
-
-    fn meter_mut(&mut self) -> &mut CostMeter {
-        &mut self.meter
+        Ok(out)
     }
 }
 

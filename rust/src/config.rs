@@ -30,6 +30,7 @@
 //! ranks = 4
 //! backend = native        # native | xla
 //! artifact_dir = artifacts
+//! # trace = run.trace.json  # per-rank span trace (Chrome trace-event JSON)
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -86,6 +87,11 @@ pub struct RunConfig {
     pub ranks: usize,
     pub backend: String,
     pub artifact_dir: PathBuf,
+    /// When set, install a per-rank span tracer ([`crate::trace`]) for the
+    /// run and write the merged Chrome trace-event JSON here (loadable in
+    /// Perfetto / `chrome://tracing`). Tracing is observer-neutral: the
+    /// trajectory and cost meters are bitwise-identical with it on or off.
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -94,6 +100,7 @@ impl Default for RunConfig {
             ranks: 1,
             backend: "native".into(),
             artifact_dir: PathBuf::from("artifacts"),
+            trace: None,
         }
     }
 }
@@ -139,6 +146,7 @@ impl ExperimentConfig {
                 ranks: rn.usize_or("ranks", 1)?,
                 backend: rn.str("backend").unwrap_or("native").to_string(),
                 artifact_dir: PathBuf::from(rn.str("artifact_dir").unwrap_or("artifacts")),
+                trace: rn.str("trace").map(PathBuf::from),
             },
         };
         cfg.validate()?;

@@ -20,6 +20,7 @@ use crate::matrix::io::{read_libsvm, Dataset};
 use crate::metrics::History;
 use crate::runtime::XlaBackend;
 use crate::solvers::cg;
+use crate::trace::{self, TraceSummary, Tracer};
 
 use super::{partition_dual, partition_primal, partition_rows, DualShard, PrimalShard, RowShard};
 
@@ -52,6 +53,11 @@ pub struct ExperimentReport {
     pub critical_words: u64,
     pub final_obj_err: f64,
     pub final_sol_err: f64,
+    /// Per-rank span-trace summary (`[run] trace` / `--trace` only):
+    /// compute/wire/idle breakdown, per-kind histograms, and the
+    /// overlap-efficiency accounting. The raw Chrome trace-event JSON is
+    /// written to the configured path.
+    pub trace: Option<TraceSummary>,
 }
 
 /// Load the configured dataset (synthetic clone or LIBSVM file) and its λ.
@@ -154,25 +160,57 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
 
     let start = Instant::now();
     let shards = ShardSet::partition(method, &ds, p)?;
-    let results: Vec<Result<History>> = run_spmd(p, |rank, comm| {
-        let mut be = if method.needs_backend() {
-            Some(make_backend(cfg)?)
-        } else {
-            None
-        };
-        let problem = shards.problem(rank).with_reference(reference.as_ref());
-        let mut session = Session::new(&problem)
-            .opts(opts.clone())
-            .method(method)
-            .local_iters(cfg.solver.local_iters)
-            .comm(comm);
-        if let Some(be) = be.as_mut() {
-            session = session.backend(be.as_mut());
+    let tracing = cfg.run.trace.is_some();
+    let results: Vec<Result<(History, Option<Tracer>)>> = run_spmd(p, |rank, comm| {
+        if tracing {
+            // Per-rank tracer lives in this worker's thread-local slot for
+            // the whole solve; reclaimed below even on error so a failed
+            // rank cannot leak an active tracer into a reused thread.
+            trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
         }
-        Ok(session.run()?.into_history())
+        let run_one = || -> Result<History> {
+            let mut be = if method.needs_backend() {
+                Some(make_backend(cfg)?)
+            } else {
+                None
+            };
+            let problem = shards.problem(rank).with_reference(reference.as_ref());
+            let mut session = Session::new(&problem)
+                .opts(opts.clone())
+                .method(method)
+                .local_iters(cfg.solver.local_iters)
+                .comm(comm);
+            if let Some(be) = be.as_mut() {
+                session = session.backend(be.as_mut());
+            }
+            Ok(session.run()?.into_history())
+        };
+        let history = run_one();
+        let tracer = trace::take();
+        history.map(|h| (h, tracer))
     });
-    let (history, meters) = collect(results)?;
+    let (history, meters, tracers) = collect(results)?;
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+
+    let trace_summary = if tracing {
+        // Observer gate: every rank's span counts must agree exactly with
+        // its CostMeter (one CollectiveStart per posted collective, one
+        // CollectiveWait span per completion). A mismatch is an
+        // instrumentation bug — surface it as a report advisory rather
+        // than failing the solve.
+        for (tracer, meter) in tracers.iter().zip(&meters) {
+            if let Err(e) = trace::cross_check(tracer, meter) {
+                let note = format!("trace/meter cross-check failed: {e}");
+                eprintln!("note: {note}");
+                notes.push(note);
+            }
+        }
+        let path = cfg.run.trace.as_ref().unwrap();
+        std::fs::write(path, trace::chrome_trace_json(&tracers))?;
+        Some(TraceSummary::from_tracers(&tracers))
+    } else {
+        None
+    };
 
     let (critical_msgs, critical_words) = CostMeter::critical_path(&meters);
     Ok(ExperimentReport {
@@ -197,6 +235,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
         history,
         critical_msgs,
         critical_words,
+        trace: trace_summary,
     })
 }
 
@@ -254,6 +293,13 @@ impl ExperimentReport {
                     .map(|v| v as f64)
                     .unwrap_or(f64::NAN)),
             ),
+            (
+                "trace",
+                self.trace
+                    .as_ref()
+                    .map(trace::summary_json)
+                    .unwrap_or_else(|| "null".into()),
+            ),
             ("records", records),
             ("prox_records", prox),
             ("gram_conds", conds),
@@ -262,14 +308,19 @@ impl ExperimentReport {
 }
 
 /// Unwrap per-rank results; rank 0's history is the report's, all meters
-/// feed the critical path.
-fn collect(results: Vec<Result<History>>) -> Result<(History, Vec<CostMeter>)> {
+/// feed the critical path, all tracers (when tracing) feed the summary.
+fn collect(
+    results: Vec<Result<(History, Option<Tracer>)>>,
+) -> Result<(History, Vec<CostMeter>, Vec<Tracer>)> {
     let mut histories = Vec::with_capacity(results.len());
+    let mut tracers = Vec::new();
     for r in results {
-        histories.push(r?);
+        let (h, t) = r?;
+        histories.push(h);
+        tracers.extend(t);
     }
     let meters: Vec<CostMeter> = histories.iter().map(|h| h.meter).collect();
-    Ok((histories.swap_remove(0), meters))
+    Ok((histories.swap_remove(0), meters, tracers))
 }
 
 #[cfg(test)]
@@ -305,6 +356,7 @@ mod tests {
                 ranks,
                 backend: "native".into(),
                 artifact_dir: "artifacts".into(),
+                trace: None,
             },
         }
     }
@@ -425,6 +477,36 @@ mod tests {
         assert_eq!(base.final_sol_err, explicit.final_sol_err);
         assert_eq!(base.history.meter, explicit.history.meter);
         assert_eq!(base.critical_words, explicit.critical_words);
+    }
+
+    #[test]
+    fn traced_run_is_observer_neutral_and_writes_chrome_json() {
+        let mut c = cfg("cabcd", 2);
+        c.solver.overlap = true;
+        let plain = run_experiment(&c).unwrap();
+        let path = std::env::temp_dir().join("cabcd_driver_trace_test.json");
+        c.run.trace = Some(path.clone());
+        let traced = run_experiment(&c).unwrap();
+
+        // Observer-neutral: identical trajectory and meters with the
+        // tracer installed.
+        assert_eq!(plain.final_sol_err, traced.final_sol_err);
+        assert_eq!(plain.history.meter, traced.history.meter);
+
+        let sum = traced.trace.as_ref().expect("traced run lost its summary");
+        assert_eq!(sum.ranks, 2);
+        assert!(sum.spans > 0, "no spans recorded");
+        assert_eq!(sum.dropped, 0);
+        assert!(
+            !traced.notes.iter().any(|n| n.contains("cross-check")),
+            "span/meter cross-check failed: {:?}",
+            traced.notes
+        );
+        assert!(traced.to_json().contains("\"overlap_efficiency\""));
+
+        let chrome = std::fs::read_to_string(&path).unwrap();
+        assert!(chrome.starts_with("{\"traceEvents\":["));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

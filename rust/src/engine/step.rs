@@ -44,6 +44,7 @@ use crate::comm::Communicator;
 use crate::error::Result;
 use crate::metrics::History;
 use crate::solvers::common::{cond_stride, packed_gram_cond, should_record, SolverOpts};
+use crate::trace::{self, OpClass, SpanKind};
 
 /// One outer iteration's shared-seed sample: the `s` drawn blocks of `b`
 /// coordinates plus their flattened kernel-order index list.
@@ -245,12 +246,18 @@ fn solve_apply<C: Communicator, S: CaStep<C> + ?Sized>(
     buf: &[f64],
     head: usize,
 ) -> Result<()> {
+    let k = smp.k as u64;
+    let t0 = trace::now();
     let deltas = step.inner_solve(smp, &buf[..head], &buf[head..])?;
-    if deltas.is_empty() {
+    trace::record(SpanKind::InnerSolve, OpClass::Compute, k, buf.len() as u64, t0);
+    let t0 = trace::now();
+    let res = if deltas.is_empty() {
         step.apply(smp, &buf[head..])
     } else {
         step.apply(smp, &deltas)
-    }
+    };
+    trace::record(SpanKind::Apply, OpClass::Compute, k, (buf.len() - head) as u64, t0);
+    res
 }
 
 /// Outer-boundary bookkeeping: advance `history.iters`, record on the
@@ -266,7 +273,9 @@ fn boundary<C: Communicator, S: CaStep<C> + ?Sized>(
     let h_now = (k + 1) * opts.s;
     history.iters = h_now;
     if should_record(h_now, opts.s, opts) || k + 1 == outer {
+        let t0 = trace::now();
         step.record(comm, history, h_now)?;
+        trace::record(SpanKind::Record, OpClass::Compute, h_now as u64, 0, t0);
         if let Some(tol) = opts.tol {
             if step.converged(history, tol) {
                 return Ok(true);
@@ -293,29 +302,44 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
     let sb = opts.s * opts.b;
     let mut cond = CondTracker::new::<C, S>(&*step, opts, sb, outer);
 
+    let t0 = trace::now();
     step.record(comm, history, 0)?;
+    trace::record(SpanKind::Record, OpClass::Compute, 0, 0, t0);
 
     if opts.overlap && step.prefetch_gram() && outer > 0 {
         // Prefetch schedule. Pipeline prologue: gram 0 is computed before
         // the loop; thereafter gram k+1 is computed under the in-flight
         // reduction of [gram_k | state_k]. Payload buffers ping-pong
         // through the communicator's rank-local pool.
+        let t0 = trace::now();
         let mut smp_cur = step.sample(comm, 0)?;
+        trace::record(SpanKind::Sample, OpClass::Compute, 0, 0, t0);
         let mut next_buf = comm.take_buf(total);
+        let t0 = trace::now();
         step.local_gram(comm, &smp_cur, &mut next_buf[..head])?;
+        trace::record(SpanKind::GramLocal, OpClass::Compute, 0, head as u64, t0);
         'outer_loop: for k in 0..outer {
             let mut buf = std::mem::take(&mut next_buf); // holds gram_k
+            let t0 = trace::now();
             step.local_state(&smp_cur, &mut buf[head..])?;
+            trace::record(SpanKind::GramLocal, OpClass::Compute, k as u64, tail as u64, t0);
 
             // THE communication of this outer iteration — non-blocking.
             let handle = comm.iallreduce_start(buf)?;
 
             // ---- local work hidden behind the in-flight reduction ------
+            // The prefetched GramLocal span below lands inside the
+            // in-flight window [start, wait] — exactly what the overlap-
+            // efficiency analysis measures.
             let mut pending: Option<Sample> = None;
             if k + 1 < outer {
+                let t0 = trace::now();
                 let nxt = step.sample(comm, k + 1)?;
+                trace::record(SpanKind::Sample, OpClass::Compute, (k + 1) as u64, 0, t0);
                 next_buf = comm.take_buf(total);
+                let t0 = trace::now();
                 step.local_gram(comm, &nxt, &mut next_buf[..head])?;
+                trace::record(SpanKind::GramLocal, OpClass::Compute, (k + 1) as u64, head as u64, t0);
                 pending = Some(nxt);
             }
             step.hidden_work(&smp_cur)?;
@@ -343,10 +367,14 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
         // running under it.
         let mut buf = vec![0.0; total];
         'outer_loop2: for k in 0..outer {
+            let t0 = trace::now();
             let smp = step.sample(comm, k)?;
+            trace::record(SpanKind::Sample, OpClass::Compute, k as u64, 0, t0);
             {
+                let t0 = trace::now();
                 let (h, t) = buf.split_at_mut(head);
                 step.local_payload(comm, &smp, h, t)?;
+                trace::record(SpanKind::GramLocal, OpClass::Compute, k as u64, total as u64, t0);
             }
             // Move the hoisted buffer into the handle and take it back
             // reduced — no payload copies on the hot path.
@@ -366,10 +394,14 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
         // hidden work between the collective and the solve.
         let mut buf = vec![0.0; total];
         'outer_loop3: for k in 0..outer {
+            let t0 = trace::now();
             let smp = step.sample(comm, k)?;
+            trace::record(SpanKind::Sample, OpClass::Compute, k as u64, 0, t0);
             {
+                let t0 = trace::now();
                 let (h, t) = buf.split_at_mut(head);
                 step.local_payload(comm, &smp, h, t)?;
+                trace::record(SpanKind::GramLocal, OpClass::Compute, k as u64, total as u64, t0);
             }
 
             // THE communication of this outer iteration.

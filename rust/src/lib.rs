@@ -52,6 +52,7 @@ pub mod prox;
 pub mod runtime;
 pub mod sampling;
 pub mod solvers;
+pub mod trace;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -114,6 +114,7 @@ USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
               [--backend native|xla] [--artifact-dir DIR] [--seed N]
               [--overlap] [--json] [--reg l2|l1|elastic|none]
               [--l1-ratio R] [--local-iters N (cocoa)]
+              [--trace FILE (Chrome trace-event JSON, one track per rank)]
   gen-data    --out FILE [--name abalone] [--scale K] [--seed N] [--verify]
   cost-table  [--d D] [--n N] [--p P] [--b B] [--s S] [--h H]
   scaling     [--mode strong|weak] [--machine mpi|spark] [--d D] [--log2n E]
@@ -183,9 +184,15 @@ fn cmd_train(args: &Args) -> Result<()> {
                 ranks: args.usize_or("ranks", 1)?,
                 backend: args.str_or("backend", "native"),
                 artifact_dir: PathBuf::from(args.str_or("artifact-dir", "artifacts")),
+                trace: args.str_opt("trace").map(PathBuf::from),
             },
         }
     };
+    // `--trace PATH` also overrides a config file's [run] trace setting.
+    let mut cfg = cfg;
+    if let Some(path) = args.str_opt("trace") {
+        cfg.run.trace = Some(PathBuf::from(path));
+    }
     let report = run_experiment(&cfg)?;
     if args.flag("json") {
         println!("{}", report.to_json());
@@ -225,6 +232,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             "comm: allreduces={}  critical-path msgs={}  words={}",
             report.history.meter.allreduces, report.critical_msgs, report.critical_words
         );
+        if let Some(t) = &report.trace {
+            println!(
+                "trace: {} spans over {} ranks  overlap efficiency={:.3}  \
+                 (chrome trace written to {})",
+                t.spans,
+                t.ranks,
+                t.overlap_efficiency(),
+                cfg.run.trace.as_ref().unwrap().display()
+            );
+        }
     }
     Ok(())
 }

@@ -171,9 +171,11 @@ impl<C: Communicator> CaStep<C> for ProxBdcdStep<'_> {
         Some((self.inv_n * self.inv_n / self.lam, self.inv_n))
     }
 
-    fn inner_solve(&mut self, _smp: &Sample, head: &[f64], tail: &[f64]) -> Result<Vec<f64>> {
-        // Replicated dual prox solve.
-        self.backend.ca_prox_dual_inner_solve(
+    fn inner_solve(&mut self, smp: &Sample, head: &[f64], tail: &[f64]) -> Result<Vec<f64>> {
+        // Replicated dual prox solve (ProxStep span nests inside the
+        // engine's InnerSolve span).
+        let t0 = crate::trace::now();
+        let out = self.backend.ca_prox_dual_inner_solve(
             self.s,
             self.b,
             head,
@@ -184,7 +186,15 @@ impl<C: Communicator> CaStep<C> for ProxBdcdStep<'_> {
             self.lam,
             self.inv_n,
             &self.reg,
-        )
+        );
+        crate::trace::record(
+            crate::trace::SpanKind::ProxStep,
+            crate::trace::OpClass::Compute,
+            smp.k as u64,
+            (head.len() + tail.len()) as u64,
+            t0,
+        );
+        out
     }
 
     fn apply(&mut self, smp: &Sample, deltas: &[f64]) -> Result<()> {

@@ -1,0 +1,333 @@
+//! Post-run trace analysis: overlap efficiency, per-rank critical-path
+//! breakdown, per-kind histograms, and the span/meter cross-check gate.
+
+use super::{OpClass, Span, SpanKind, Tracer};
+use crate::comm::CostMeter;
+
+/// Aggregate duration statistics for one [`SpanKind`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KindStat {
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+impl KindStat {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+}
+
+/// Per-rank wall-clock decomposition. `compute_ns` sums the top-level
+/// compute spans (`Sample`, `GramLocal`, `InnerSolve`, `Apply`,
+/// `Record`; `ProxStep` is nested inside `InnerSolve` and deliberately
+/// excluded to avoid double counting), `wire_ns` sums collective
+/// start/wait spans, and `idle_ns` is the untraced remainder of the
+/// rank's wall time (scheduler gaps, span overhead, hidden work).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankBreakdown {
+    pub rank: u32,
+    pub wall_ns: u64,
+    pub compute_ns: u64,
+    pub wire_ns: u64,
+    pub idle_ns: u64,
+}
+
+/// Overlap accounting over FIFO-paired `CollectiveStart`/`CollectiveWait`
+/// spans. For each pair the **in-flight window** is
+/// `[start.t_end, wait.t_start]`; `covered_ns` is the `GramLocal` span
+/// time falling inside such windows (the prefetch compute the pipeline
+/// hid under the wire) and `exposed_ns` is the summed `CollectiveWait`
+/// durations (the wire time nothing hid). Blocking schedules have empty
+/// windows, so their efficiency is 0 by construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapStat {
+    pub pairs: u64,
+    pub covered_ns: u64,
+    pub exposed_ns: u64,
+}
+
+impl OverlapStat {
+    /// `covered / (covered + exposed)` — the fraction of collective time
+    /// the Gram-prefetch pipeline actually hid. 0 when nothing was
+    /// covered (or no collectives ran).
+    pub fn efficiency(&self) -> f64 {
+        let denom = self.covered_ns + self.exposed_ns;
+        if denom == 0 {
+            0.0
+        } else {
+            self.covered_ns as f64 / denom as f64
+        }
+    }
+}
+
+/// The compact post-run summary: merged into the driver report JSON and
+/// printed by `hotpath_micro`.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub ranks: usize,
+    pub spans: u64,
+    pub dropped: u64,
+    pub trace_allocs: u64,
+    /// Indexed parallel to [`SpanKind::ALL`].
+    pub per_kind: [KindStat; 8],
+    pub breakdown: Vec<RankBreakdown>,
+    pub overlap: OverlapStat,
+    /// `CollectiveStart` span counts per class, summed over ranks — the
+    /// quantities the cross-check compares to the meters.
+    pub allreduce_starts: u64,
+    pub all_to_all_starts: u64,
+    pub collective_wait_spans: u64,
+}
+
+fn kind_index(kind: SpanKind) -> usize {
+    SpanKind::ALL.iter().position(|&k| k == kind).unwrap()
+}
+
+fn sorted_spans(tracer: &Tracer) -> Vec<Span> {
+    let mut v = tracer.spans().to_vec();
+    v.sort_by_key(|s| (s.t_start, s.t_end));
+    v
+}
+
+/// Clamped intersection length of `[a0,a1)` and `[b0,b1)`.
+fn overlap_ns(a0: u64, a1: u64, b0: u64, b1: u64) -> u64 {
+    let lo = a0.max(b0);
+    let hi = a1.min(b1);
+    hi.saturating_sub(lo)
+}
+
+/// FIFO-pair starts with waits per [`OpClass`] and accumulate the
+/// overlap accounting for one rank's chronologically sorted spans.
+fn rank_overlap(spans: &[Span]) -> OverlapStat {
+    let mut stat = OverlapStat::default();
+    let grams: Vec<&Span> = spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::GramLocal)
+        .collect();
+    for class in [OpClass::Allreduce, OpClass::AllToAll] {
+        let mut open: std::collections::VecDeque<&Span> = Default::default();
+        for s in spans {
+            if s.op != class {
+                continue;
+            }
+            match s.kind {
+                SpanKind::CollectiveStart => open.push_back(s),
+                SpanKind::CollectiveWait => {
+                    let Some(start) = open.pop_front() else {
+                        continue; // unmatched wait (ring dropped the start)
+                    };
+                    stat.pairs += 1;
+                    stat.exposed_ns += s.dur_ns();
+                    let (w0, w1) = (start.t_end, s.t_start);
+                    for g in &grams {
+                        stat.covered_ns += overlap_ns(g.t_start, g.t_end, w0, w1);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    stat
+}
+
+impl TraceSummary {
+    pub fn from_tracers(tracers: &[Tracer]) -> Self {
+        let mut sum = TraceSummary {
+            ranks: tracers.len(),
+            ..Default::default()
+        };
+        for tr in tracers {
+            let spans = sorted_spans(tr);
+            sum.spans += spans.len() as u64;
+            sum.dropped += tr.dropped();
+            sum.trace_allocs += tr.trace_allocs();
+            let mut bd = RankBreakdown {
+                rank: tr.rank(),
+                ..Default::default()
+            };
+            for s in &spans {
+                let st = &mut sum.per_kind[kind_index(s.kind)];
+                st.count += 1;
+                st.total_ns += s.dur_ns();
+                st.max_ns = st.max_ns.max(s.dur_ns());
+                match s.kind {
+                    SpanKind::Sample
+                    | SpanKind::GramLocal
+                    | SpanKind::InnerSolve
+                    | SpanKind::Apply
+                    | SpanKind::Record => bd.compute_ns += s.dur_ns(),
+                    SpanKind::CollectiveStart | SpanKind::CollectiveWait => {
+                        bd.wire_ns += s.dur_ns();
+                        match (s.kind, s.op) {
+                            (SpanKind::CollectiveStart, OpClass::Allreduce) => {
+                                sum.allreduce_starts += 1
+                            }
+                            (SpanKind::CollectiveStart, OpClass::AllToAll) => {
+                                sum.all_to_all_starts += 1
+                            }
+                            (SpanKind::CollectiveWait, _) => sum.collective_wait_spans += 1,
+                            _ => {}
+                        }
+                    }
+                    SpanKind::ProxStep => {} // nested inside InnerSolve
+                }
+            }
+            if let (Some(first), Some(last)) = (spans.first(), spans.last()) {
+                let t_end = spans.iter().map(|s| s.t_end).max().unwrap_or(last.t_end);
+                bd.wall_ns = t_end.saturating_sub(first.t_start);
+            }
+            bd.idle_ns = bd.wall_ns.saturating_sub(bd.compute_ns + bd.wire_ns);
+            let rank_stat = rank_overlap(&spans);
+            sum.overlap.pairs += rank_stat.pairs;
+            sum.overlap.covered_ns += rank_stat.covered_ns;
+            sum.overlap.exposed_ns += rank_stat.exposed_ns;
+            sum.breakdown.push(bd);
+        }
+        sum
+    }
+
+    pub fn overlap_efficiency(&self) -> f64 {
+        self.overlap.efficiency()
+    }
+
+    pub fn kind_stat(&self, kind: SpanKind) -> KindStat {
+        self.per_kind[kind_index(kind)]
+    }
+}
+
+/// The correctness gate: one rank's collective span counts must equal its
+/// `CostMeter` exactly — every metered collective produced exactly one
+/// `CollectiveStart`, and every deferred wait (`collective_waits`)
+/// produced exactly one non-blocking `CollectiveWait`. Metric traffic is
+/// excluded from both sides (`metered_out` in `solvers::common` pauses
+/// the tracer), so any drift means an instrumentation seam is missing
+/// or double-counting.
+pub fn cross_check(tracer: &Tracer, meter: &CostMeter) -> Result<(), String> {
+    if tracer.dropped() > 0 {
+        return Err(format!(
+            "rank {}: ring dropped {} spans — counts unusable; raise capacity",
+            tracer.rank(),
+            tracer.dropped()
+        ));
+    }
+    let count = |kind: SpanKind, op: OpClass| -> u64 {
+        tracer
+            .spans()
+            .iter()
+            .filter(|s| s.kind == kind && s.op == op)
+            .count() as u64
+    };
+    let checks = [
+        (
+            "allreduce starts",
+            count(SpanKind::CollectiveStart, OpClass::Allreduce),
+            meter.allreduces,
+        ),
+        (
+            "all_to_all starts",
+            count(SpanKind::CollectiveStart, OpClass::AllToAll),
+            meter.all_to_alls,
+        ),
+        (
+            "allreduce waits",
+            count(SpanKind::CollectiveWait, OpClass::Allreduce),
+            meter.allreduces,
+        ),
+        (
+            "all_to_all waits",
+            count(SpanKind::CollectiveWait, OpClass::AllToAll),
+            meter.all_to_alls,
+        ),
+    ];
+    for (what, got, want) in checks {
+        if got != want {
+            return Err(format!(
+                "rank {}: {what}: {got} spans vs {want} metered",
+                tracer.rank()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(kind: SpanKind, op: OpClass, t0: u64, t1: u64) -> Span {
+        Span {
+            kind,
+            op,
+            tag: 0,
+            rank: 0,
+            t_start: t0,
+            t_end: t1,
+            words: 0,
+        }
+    }
+
+    /// Hand-built prefetch timeline: start[10,11], gram[12,20] inside the
+    /// window, wait[22,25]. covered = 8 (gram ∩ [11,22]), exposed = 3.
+    #[test]
+    fn overlap_efficiency_covers_prefetch_window() {
+        let mut tr = Tracer::new(0, 16);
+        tr.push(sp(SpanKind::CollectiveStart, OpClass::Allreduce, 10, 11));
+        tr.push(sp(SpanKind::GramLocal, OpClass::Compute, 12, 20));
+        tr.push(sp(SpanKind::CollectiveWait, OpClass::Allreduce, 22, 25));
+        let sum = TraceSummary::from_tracers(&[tr]);
+        assert_eq!(sum.overlap.pairs, 1);
+        assert_eq!(sum.overlap.covered_ns, 8);
+        assert_eq!(sum.overlap.exposed_ns, 3);
+        let eff = sum.overlap_efficiency();
+        assert!((eff - 8.0 / 11.0).abs() < 1e-12, "{eff}");
+    }
+
+    /// Blocking timeline: the start marker is instantaneous and the wait
+    /// immediately follows — zero window, zero covered, efficiency 0.
+    #[test]
+    fn blocking_schedule_has_zero_efficiency() {
+        let mut tr = Tracer::new(0, 16);
+        tr.push(sp(SpanKind::GramLocal, OpClass::Compute, 0, 9));
+        tr.push(sp(SpanKind::CollectiveStart, OpClass::Allreduce, 10, 10));
+        tr.push(sp(SpanKind::CollectiveWait, OpClass::Allreduce, 10, 14));
+        let sum = TraceSummary::from_tracers(&[tr]);
+        assert_eq!(sum.overlap.covered_ns, 0);
+        assert_eq!(sum.overlap.exposed_ns, 4);
+        assert_eq!(sum.overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn breakdown_splits_compute_wire_idle() {
+        let mut tr = Tracer::new(2, 16);
+        tr.push(sp(SpanKind::Sample, OpClass::Compute, 0, 5));
+        tr.push(sp(SpanKind::InnerSolve, OpClass::Compute, 5, 15));
+        tr.push(sp(SpanKind::ProxStep, OpClass::Compute, 6, 14)); // nested
+        tr.push(sp(SpanKind::CollectiveWait, OpClass::Allreduce, 20, 30));
+        let sum = TraceSummary::from_tracers(&[tr]);
+        let bd = &sum.breakdown[0];
+        assert_eq!(bd.rank, 2);
+        assert_eq!(bd.wall_ns, 30);
+        assert_eq!(bd.compute_ns, 15, "ProxStep must not double count");
+        assert_eq!(bd.wire_ns, 10);
+        assert_eq!(bd.idle_ns, 5);
+        assert_eq!(sum.kind_stat(SpanKind::ProxStep).count, 1);
+    }
+
+    #[test]
+    fn cross_check_counts_spans_against_meter() {
+        let mut tr = Tracer::new(0, 16);
+        tr.push(sp(SpanKind::CollectiveStart, OpClass::Allreduce, 0, 0));
+        tr.push(sp(SpanKind::CollectiveWait, OpClass::Allreduce, 0, 1));
+        let mut meter = CostMeter::default();
+        meter.allreduces = 1;
+        assert!(cross_check(&tr, &meter).is_ok());
+        meter.allreduces = 2;
+        let err = cross_check(&tr, &meter).unwrap_err();
+        assert!(err.contains("allreduce starts"), "{err}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Trace exporters: Chrome trace-event JSON (load at `ui.perfetto.dev`
+//! or `chrome://tracing`) and the compact summary object merged into the
+//! driver report.
+
+use super::analysis::TraceSummary;
+use super::{OpClass, SpanKind, Tracer};
+use crate::util::json;
+
+fn micros(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// Emit the Chrome trace-event JSON object for a set of per-rank
+/// tracers: one complete (`ph:"X"`) event per span on `pid 0`, one
+/// thread track per rank (`tid = rank`, named via `thread_name`
+/// metadata), `cat` = the span's [`OpClass`] so Perfetto can filter
+/// compute vs wire.
+pub fn chrome_trace_json(tracers: &[Tracer]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for tr in tracers {
+        events.push(json::object(&[
+            ("name", json::string("thread_name")),
+            ("ph", json::string("M")),
+            ("pid", json::num(0.0)),
+            ("tid", json::num(tr.rank() as f64)),
+            (
+                "args",
+                json::object(&[("name", json::string(&format!("rank {}", tr.rank())))]),
+            ),
+        ]));
+    }
+    for tr in tracers {
+        let mut spans = tr.spans().to_vec();
+        spans.sort_by_key(|s| (s.t_start, s.t_end));
+        for s in spans {
+            events.push(json::object(&[
+                ("name", json::string(s.kind.name())),
+                ("cat", json::string(s.op.name())),
+                ("ph", json::string("X")),
+                ("ts", json::num(micros(s.t_start))),
+                ("dur", json::num(micros(s.dur_ns()))),
+                ("pid", json::num(0.0)),
+                ("tid", json::num(s.rank as f64)),
+                (
+                    "args",
+                    json::object(&[
+                        ("tag", json::num(s.tag as f64)),
+                        ("words", json::num(s.words as f64)),
+                    ]),
+                ),
+            ]));
+        }
+    }
+    json::object(&[
+        ("traceEvents", json::array(events)),
+        ("displayTimeUnit", json::string("ms")),
+    ])
+}
+
+/// The compact summary block: overlap efficiency, per-rank
+/// compute/wire/idle, per-kind histograms, and the ring counters. Keys
+/// are stable — `python/check_trace.py` and `BENCH_hotpath.json` consume
+/// them.
+pub fn summary_json(sum: &TraceSummary) -> String {
+    let per_kind = json::object(
+        &SpanKind::ALL
+            .iter()
+            .map(|&k| {
+                let st = sum.kind_stat(k);
+                (
+                    k.name(),
+                    json::object(&[
+                        ("count", json::num(st.count as f64)),
+                        ("total_ns", json::num(st.total_ns as f64)),
+                        ("max_ns", json::num(st.max_ns as f64)),
+                        ("mean_ns", json::num(st.mean_ns())),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    let ranks = json::array(sum.breakdown.iter().map(|bd| {
+        json::object(&[
+            ("rank", json::num(bd.rank as f64)),
+            ("wall_ns", json::num(bd.wall_ns as f64)),
+            ("compute_ns", json::num(bd.compute_ns as f64)),
+            ("wire_ns", json::num(bd.wire_ns as f64)),
+            ("idle_ns", json::num(bd.idle_ns as f64)),
+        ])
+    }));
+    json::object(&[
+        ("spans", json::num(sum.spans as f64)),
+        ("dropped", json::num(sum.dropped as f64)),
+        ("trace_allocs", json::num(sum.trace_allocs as f64)),
+        ("allreduce_starts", json::num(sum.allreduce_starts as f64)),
+        ("all_to_all_starts", json::num(sum.all_to_all_starts as f64)),
+        (
+            "collective_wait_spans",
+            json::num(sum.collective_wait_spans as f64),
+        ),
+        ("overlap_pairs", json::num(sum.overlap.pairs as f64)),
+        ("overlap_covered_ns", json::num(sum.overlap.covered_ns as f64)),
+        ("overlap_exposed_ns", json::num(sum.overlap.exposed_ns as f64)),
+        ("overlap_efficiency", json::num(sum.overlap_efficiency())),
+        ("per_kind", per_kind),
+        ("ranks", ranks),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Span;
+
+    #[test]
+    fn chrome_trace_shape() {
+        let mut tr = Tracer::new(1, 8);
+        tr.push(Span {
+            kind: SpanKind::GramLocal,
+            op: OpClass::Compute,
+            tag: 3,
+            rank: 1,
+            t_start: 1000,
+            t_end: 2500,
+            words: 20,
+        });
+        let out = chrome_trace_json(&[tr]);
+        assert!(out.starts_with("{\"traceEvents\":["), "{out}");
+        assert!(out.contains("\"name\":\"GramLocal\""));
+        assert!(out.contains("\"ph\":\"X\""));
+        assert!(out.contains("\"ts\":1"));
+        assert!(out.contains("\"dur\":1.5"));
+        assert!(out.contains("\"thread_name\""));
+        assert!(out.contains("\"tid\":1"));
+    }
+
+    #[test]
+    fn summary_has_stable_keys() {
+        let sum = TraceSummary::from_tracers(&[Tracer::new(0, 4)]);
+        let out = summary_json(&sum);
+        for key in [
+            "\"spans\"",
+            "\"trace_allocs\"",
+            "\"overlap_efficiency\"",
+            "\"per_kind\"",
+            "\"ranks\"",
+            "\"GramLocal\"",
+        ] {
+            assert!(out.contains(key), "missing {key} in {out}");
+        }
+    }
+}

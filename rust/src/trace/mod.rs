@@ -1,0 +1,388 @@
+//! Per-rank structured span tracing — the instrument behind the paper's
+//! time claim.
+//!
+//! [`CostMeter`](crate::comm::CostMeter) *counts* communication; this
+//! module *times* it. Each rank owns a [`Tracer`] with a preallocated
+//! ring buffer of [`Span`] events (steady-state zero-alloc, same pool
+//! discipline as `comm/` — guarded by the [`Tracer::trace_allocs`]
+//! tripwire), installed thread-locally so the engine, the solvers, and
+//! the communicator all record through the
+//! [`CaStep`](crate::engine::CaStep) contract without per-solver
+//! duplication.
+//!
+//! # Span taxonomy
+//!
+//! | kind              | where                 | covers                             |
+//! |-------------------|-----------------------|------------------------------------|
+//! | `Sample`          | `engine::drive`       | block sampling (`BlockSampler`)    |
+//! | `GramLocal`       | `engine::drive`       | local Gram / `[G\|r]` payload      |
+//! | `CollectiveStart` | `comm/*`              | blocking entry marker or `i*_start`|
+//! | `CollectiveWait`  | `comm/*`              | blocking protocol or `i*_wait`     |
+//! | `InnerSolve`      | `engine::solve_apply` | replicated s-step inner solve      |
+//! | `ProxStep`        | `prox/*` (nested)     | the backend prox kernel call       |
+//! | `Apply`           | `engine::solve_apply` | iterate update / `alpha_update`    |
+//! | `Record`          | `engine::drive`       | convergence records (meter-excl.)  |
+//!
+//! Collective spans carry an [`OpClass`] discriminant (allreduce vs
+//! all-to-all vs barrier) so the analysis pass can cross-validate span
+//! counts against `CostMeter.allreduces` / `all_to_alls` *exactly* — a
+//! correctness gate, not just telemetry (see [`cross_check`]).
+//!
+//! # Observer neutrality
+//!
+//! Tracing never touches the communicator pool, never communicates, and
+//! never reads or writes a `CostMeter`: trajectories, records, and meter
+//! counts with tracing enabled are bitwise-equal to tracing disabled
+//! (enforced by `rust/tests/trace.rs` over the pinned
+//! `engine_equivalence` configs). Metric traffic that
+//! [`metered_out`](crate::solvers::common::metered_out) excludes from
+//! the meters is likewise excluded from the trace via [`pause`], so the
+//! span/meter count gate holds by construction.
+//!
+//! # Analysis & export
+//!
+//! [`analysis::TraceSummary`] derives overlap efficiency (how much of
+//! each in-flight collective window is covered by Gram prefetch),
+//! per-rank compute/wire/idle breakdown, and per-kind histograms;
+//! [`export::chrome_trace_json`] emits Perfetto-loadable Chrome
+//! trace-event JSON (one track per rank), wired to `--trace <path>` /
+//! `trace =` in the driver.
+
+pub mod analysis;
+pub mod export;
+
+pub use analysis::{cross_check, OverlapStat, RankBreakdown, TraceSummary};
+pub use export::{chrome_trace_json, summary_json};
+
+use std::cell::{Cell, RefCell};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Default per-rank ring capacity: comfortably above the span volume of
+/// every in-repo run (6 spans/outer × H outers + records), small enough
+/// (~3 MiB of `Span`s) to preallocate per rank without thought.
+pub const DEFAULT_SPAN_CAPACITY: usize = 1 << 16;
+
+/// What a span measures. See the module-level taxonomy table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    Sample,
+    GramLocal,
+    CollectiveStart,
+    CollectiveWait,
+    InnerSolve,
+    Apply,
+    ProxStep,
+    Record,
+}
+
+impl SpanKind {
+    /// All kinds, in fixed display order (histogram / JSON ordering).
+    pub const ALL: [SpanKind; 8] = [
+        SpanKind::Sample,
+        SpanKind::GramLocal,
+        SpanKind::CollectiveStart,
+        SpanKind::CollectiveWait,
+        SpanKind::InnerSolve,
+        SpanKind::Apply,
+        SpanKind::ProxStep,
+        SpanKind::Record,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Sample => "Sample",
+            SpanKind::GramLocal => "GramLocal",
+            SpanKind::CollectiveStart => "CollectiveStart",
+            SpanKind::CollectiveWait => "CollectiveWait",
+            SpanKind::InnerSolve => "InnerSolve",
+            SpanKind::Apply => "Apply",
+            SpanKind::ProxStep => "ProxStep",
+            SpanKind::Record => "Record",
+        }
+    }
+}
+
+/// Which collective family a `CollectiveStart`/`CollectiveWait` span
+/// belongs to (`Compute` for everything else). The analysis pass pairs
+/// starts with waits FIFO **per class per rank** — all in-repo schedules
+/// issue and wait collectives in order within a class, with at most one
+/// outstanding allreduce and one outstanding all-to-all (bcdrow).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    Compute,
+    Allreduce,
+    AllToAll,
+    Barrier,
+}
+
+impl OpClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Compute => "compute",
+            OpClass::Allreduce => "allreduce",
+            OpClass::AllToAll => "all_to_all",
+            OpClass::Barrier => "barrier",
+        }
+    }
+}
+
+/// One traced event. Timestamps are nanoseconds since the process-wide
+/// trace epoch (first clock read), so spans from different rank threads
+/// share a timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub op: OpClass,
+    /// Collective op tag (`ThreadComm` op sequence) or outer-iteration
+    /// index for compute spans — diagnostic only; pairing is FIFO.
+    pub tag: u64,
+    pub rank: u32,
+    pub t_start: u64,
+    pub t_end: u64,
+    /// Payload words for collectives / payload length for compute spans.
+    pub words: u64,
+}
+
+impl Span {
+    pub fn dur_ns(&self) -> u64 {
+        self.t_end.saturating_sub(self.t_start)
+    }
+}
+
+/// Per-rank span recorder: a fixed-capacity ring buffer. Once the buffer
+/// fills, the oldest span is overwritten and `dropped` counts the loss;
+/// the backing `Vec` never reallocates after construction — any capacity
+/// growth trips `trace_allocs` (the tracing analogue of the comm pool's
+/// `buf_allocs`), which the bench gates at 0.
+#[derive(Debug)]
+pub struct Tracer {
+    rank: u32,
+    cap: usize,
+    buf: Vec<Span>,
+    /// Next overwrite position once `buf.len() == cap`.
+    next: usize,
+    dropped: u64,
+    trace_allocs: u64,
+}
+
+impl Tracer {
+    pub fn new(rank: usize, capacity: usize) -> Self {
+        Tracer {
+            rank: rank as u32,
+            cap: capacity,
+            buf: Vec::with_capacity(capacity),
+            next: 0,
+            dropped: 0,
+            trace_allocs: 0,
+        }
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Steady-state allocation tripwire; 0 for any correctly sized run.
+    pub fn trace_allocs(&self) -> u64 {
+        self.trace_allocs
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Retained spans in ring order (NOT chronological once wrapped —
+    /// the analysis pass sorts by `t_start`).
+    pub fn spans(&self) -> &[Span] {
+        &self.buf
+    }
+
+    pub fn push(&mut self, span: Span) {
+        let cap_before = self.buf.capacity();
+        if self.buf.len() < self.cap {
+            self.buf.push(span);
+        } else if self.cap > 0 {
+            self.buf[self.next] = span;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        } else {
+            self.dropped += 1;
+        }
+        if self.buf.capacity() != cap_before {
+            self.trace_allocs += 1;
+        }
+    }
+}
+
+thread_local! {
+    static TRACER: RefCell<Option<Tracer>> = const { RefCell::new(None) };
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static PAUSE_DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn clock_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Install a tracer on the current thread (one per rank thread; the
+/// driver installs inside the `run_spmd` closure). Replaces and returns
+/// any previously installed tracer.
+pub fn install(tracer: Tracer) -> Option<Tracer> {
+    ACTIVE.with(|a| a.set(true));
+    TRACER.with(|t| t.borrow_mut().replace(tracer))
+}
+
+/// Remove and return the current thread's tracer.
+pub fn take() -> Option<Tracer> {
+    ACTIVE.with(|a| a.set(false));
+    TRACER.with(|t| t.borrow_mut().take())
+}
+
+/// True when spans are being recorded on this thread (installed and not
+/// inside a [`pause`] scope). All record paths are no-ops otherwise, so
+/// instrumented code pays two thread-local reads when tracing is off.
+pub fn enabled() -> bool {
+    ACTIVE.with(|a| a.get()) && PAUSE_DEPTH.with(|p| p.get()) == 0
+}
+
+/// Timestamp for an upcoming [`record`] call; 0 (and no clock read) when
+/// tracing is disabled.
+pub fn now() -> u64 {
+    if enabled() {
+        clock_ns()
+    } else {
+        0
+    }
+}
+
+/// Record a span that started at `t_start` (from [`now`]) and ends now.
+pub fn record(kind: SpanKind, op: OpClass, tag: u64, words: u64, t_start: u64) {
+    if !enabled() {
+        return;
+    }
+    let t_end = clock_ns();
+    TRACER.with(|t| {
+        if let Some(tr) = t.borrow_mut().as_mut() {
+            let rank = tr.rank;
+            tr.push(Span {
+                kind,
+                op,
+                tag,
+                rank,
+                t_start,
+                t_end,
+                words,
+            });
+        }
+    });
+}
+
+/// Record an instantaneous marker (e.g. the entry of a blocking
+/// collective, so start counts match meter counts for both schedules).
+pub fn mark(kind: SpanKind, op: OpClass, tag: u64, words: u64) {
+    let t = now();
+    record(kind, op, tag, words, t);
+}
+
+/// Suspends span recording on this thread until the guard drops. Used by
+/// [`metered_out`](crate::solvers::common::metered_out) so diagnostic
+/// traffic excluded from the meters is also excluded from the trace —
+/// keeping the span/meter cross-check exact. Nests.
+pub fn pause() -> PauseGuard {
+    PAUSE_DEPTH.with(|p| p.set(p.get() + 1));
+    PauseGuard
+}
+
+pub struct PauseGuard;
+
+impl Drop for PauseGuard {
+    fn drop(&mut self) {
+        PAUSE_DEPTH.with(|p| p.set(p.get().saturating_sub(1)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, t0: u64, t1: u64) -> Span {
+        Span {
+            kind,
+            op: OpClass::Compute,
+            tag: 0,
+            rank: 0,
+            t_start: t0,
+            t_end: t1,
+            words: 0,
+        }
+    }
+
+    #[test]
+    fn ring_wraps_without_allocating() {
+        let mut tr = Tracer::new(0, 4);
+        for i in 0..10u64 {
+            tr.push(span(SpanKind::Sample, i, i + 1));
+        }
+        assert_eq!(tr.len(), 4, "ring retains exactly capacity spans");
+        assert_eq!(tr.dropped(), 6);
+        assert_eq!(tr.trace_allocs(), 0, "wrap must overwrite in place");
+        // The retained set is the newest 4 spans (6..10), in some ring order.
+        let mut starts: Vec<u64> = tr.spans().iter().map(|s| s.t_start).collect();
+        starts.sort_unstable();
+        assert_eq!(starts, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn zero_capacity_drops_everything() {
+        let mut tr = Tracer::new(0, 0);
+        tr.push(span(SpanKind::Apply, 0, 1));
+        assert_eq!(tr.len(), 0);
+        assert_eq!(tr.dropped(), 1);
+        assert_eq!(tr.trace_allocs(), 0);
+    }
+
+    #[test]
+    fn install_record_take_roundtrip() {
+        assert!(!enabled());
+        // Disabled: record is a no-op, now() skips the clock.
+        record(SpanKind::Sample, OpClass::Compute, 0, 0, now());
+        install(Tracer::new(3, 16));
+        assert!(enabled());
+        let t0 = now();
+        record(SpanKind::InnerSolve, OpClass::Compute, 7, 42, t0);
+        {
+            let _g = pause();
+            assert!(!enabled());
+            record(SpanKind::Sample, OpClass::Compute, 0, 0, now());
+            {
+                let _g2 = pause();
+                assert!(!enabled());
+            }
+            assert!(!enabled(), "pause must nest");
+        }
+        assert!(enabled());
+        let tr = take().unwrap();
+        assert!(!enabled());
+        assert_eq!(tr.len(), 1, "paused spans must not be recorded");
+        let s = tr.spans()[0];
+        assert_eq!(s.kind, SpanKind::InnerSolve);
+        assert_eq!(s.rank, 3);
+        assert_eq!(s.tag, 7);
+        assert_eq!(s.words, 42);
+        assert!(s.t_end >= s.t_start);
+    }
+}

@@ -1665,6 +1665,10 @@ fn assert_histories_equal(ctx: &str, a: &History, b: &History, check_allocs: boo
     let (ma, mb) = (&a.meter, &b.meter);
     assert_eq!(ma.allreduces, mb.allreduces, "{ctx}: meter.allreduces");
     assert_eq!(ma.all_to_alls, mb.all_to_alls, "{ctx}: meter.all_to_alls");
+    assert_eq!(
+        ma.collective_waits, mb.collective_waits,
+        "{ctx}: meter.collective_waits"
+    );
     assert_eq!(ma.msgs, mb.msgs, "{ctx}: meter.msgs");
     assert_eq!(ma.words, mb.words, "{ctx}: meter.words");
     assert_eq!(ma.recv_msgs, mb.recv_msgs, "{ctx}: meter.recv_msgs");
@@ -1680,6 +1684,7 @@ struct FixtureRow {
     all_to_alls: u64,
     msgs: u64,
     words: Option<u64>,
+    collective_waits: u64,
 }
 
 fn load_fixture() -> HashMap<(String, usize, bool, usize), FixtureRow> {
@@ -1691,7 +1696,7 @@ fn load_fixture() -> HashMap<(String, usize, bool, usize), FixtureRow> {
             continue;
         }
         let f: Vec<&str> = line.split_whitespace().collect();
-        assert_eq!(f.len(), 8, "fixture row {line:?}");
+        assert_eq!(f.len(), 9, "fixture row {line:?}");
         map.insert(
             (
                 f[0].to_string(),
@@ -1704,6 +1709,7 @@ fn load_fixture() -> HashMap<(String, usize, bool, usize), FixtureRow> {
                 all_to_alls: f[5].parse().unwrap(),
                 msgs: f[6].parse().unwrap(),
                 words: if f[7] == "-" { None } else { Some(f[7].parse().unwrap()) },
+                collective_waits: f[8].parse().unwrap(),
             },
         );
     }
@@ -1758,6 +1764,10 @@ fn engine_reproduces_frozen_legacy_loops_bitwise() {
                         let ctx = format!("{ctx} rank={rank} (fixture)");
                         assert_eq!(mt.allreduces, row.allreduces, "{ctx}: allreduces");
                         assert_eq!(mt.all_to_alls, row.all_to_alls, "{ctx}: all_to_alls");
+                        assert_eq!(
+                            mt.collective_waits, row.collective_waits,
+                            "{ctx}: collective_waits"
+                        );
                         assert_eq!(mt.msgs, row.msgs, "{ctx}: msgs");
                         assert_eq!(mt.recv_msgs, row.msgs, "{ctx}: recv_msgs");
                         if let Some(words) = row.words {

@@ -1,0 +1,453 @@
+//! Observability suite for the per-rank span tracer (PR 6).
+//!
+//! Three gates:
+//!
+//! 1. **Observer neutrality** — running any method with a tracer
+//!    installed must leave the iterates, the history records, and every
+//!    CostMeter field bitwise identical to the untraced run. The tracer
+//!    reads the clock and appends to a preallocated ring; it must never
+//!    touch the numerics or the wire.
+//! 2. **Span/meter cross-check** — per rank, the number of
+//!    `CollectiveStart` spans per class equals the meter's collective
+//!    counts exactly, and under overlap the `CollectiveWait` spans equal
+//!    the new `collective_waits` counter (one deferred completion per
+//!    posted non-blocking collective; 0 under the blocking schedule).
+//! 3. **Steady-state zero-alloc** — the ring never grows (`trace_allocs
+//!    == 0`), wraps in place when full, and drops the oldest spans with
+//!    an exact `dropped` count.
+//!
+//! Plus the PR's acceptance criterion: a P=4 overlapped CA-BCD run must
+//! report strictly positive overlap efficiency (some of each in-flight
+//! allreduce window is covered by prefetched Gram compute).
+
+use cabcd::comm::thread::run_spmd;
+use cabcd::comm::SerialComm;
+use cabcd::coordinator::{partition_dual, partition_primal, partition_rows};
+use cabcd::matrix::io::Dataset;
+use cabcd::matrix::{DenseMatrix, Matrix};
+use cabcd::metrics::{History, Reference};
+use cabcd::prox::Reg;
+use cabcd::solvers::cocoa::CocoaOpts;
+use cabcd::solvers::{cg, SolverOpts};
+use cabcd::trace::{self, OpClass, Span, SpanKind, TraceSummary, Tracer};
+
+const LAM: f64 = 0.2;
+const ITERS: usize = 16;
+const SEED: u64 = 7;
+const B: usize = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum M {
+    Bcd,
+    Bdcd,
+    BcdRow,
+    Cocoa,
+    ProxBcd,
+    ProxBdcd,
+}
+
+impl M {
+    const ALL: [M; 6] = [M::Bcd, M::Bdcd, M::BcdRow, M::Cocoa, M::ProxBcd, M::ProxBdcd];
+
+    fn id(self) -> &'static str {
+        match self {
+            M::Bcd => "bcd",
+            M::Bdcd => "bdcd",
+            M::BcdRow => "bcdrow",
+            M::Cocoa => "cocoa",
+            M::ProxBcd => "prox_bcd",
+            M::ProxBdcd => "prox_bdcd",
+        }
+    }
+}
+
+fn toy_dataset() -> Dataset {
+    let (d, n) = (12usize, 48usize);
+    let mut st = 0x5EED5EEDu64;
+    let data: Vec<f64> = (0..d * n)
+        .map(|_| {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            (st as f64 / u64::MAX as f64) - 0.5
+        })
+        .collect();
+    let x = Matrix::Dense(DenseMatrix::from_vec(d, n, data));
+    let mut y = vec![0.0; n];
+    let mut w_star = vec![0.0; d];
+    w_star[0] = 1.5;
+    w_star[d / 2] = -2.0;
+    w_star[d - 1] = 0.75;
+    x.matvec_t(&w_star, &mut y).unwrap();
+    Dataset {
+        name: "trace-suite".into(),
+        x,
+        y,
+    }
+}
+
+fn reference(ds: &Dataset) -> Reference {
+    let mut comm = SerialComm::new();
+    cg::compute_reference(&ds.x, &ds.y, ds.n(), LAM, &mut comm).unwrap()
+}
+
+fn solver_opts(m: M, s: usize, overlap: bool) -> SolverOpts {
+    let reg = match m {
+        M::ProxBcd | M::ProxBdcd => Reg::L1,
+        _ => Reg::L2,
+    };
+    SolverOpts::builder()
+        .b(B)
+        .s(s)
+        .lam(LAM)
+        .iters(ITERS)
+        .seed(SEED)
+        .record_every(4)
+        .overlap(overlap)
+        .reg(reg)
+        .build()
+}
+
+/// One rank's output: concatenated iterate vectors, the history, and the
+/// tracer (when `traced`).
+struct RankOut {
+    vecs: Vec<f64>,
+    history: History,
+    tracer: Option<Tracer>,
+}
+
+/// Run one engine config at P ranks, optionally with a per-rank tracer
+/// installed for the whole solve.
+fn run_config(m: M, s: usize, overlap: bool, p: usize, traced: bool) -> Vec<RankOut> {
+    use cabcd::gram::NativeBackend;
+    let ds = toy_dataset();
+    let rf = reference(&ds);
+    let n = ds.n();
+    let finish = |vecs: Vec<f64>, history: History| RankOut {
+        vecs,
+        history,
+        tracer: trace::take(),
+    };
+    match m {
+        M::Bcd | M::ProxBcd => {
+            let shards = partition_primal(&ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            let rref = if m == M::Bcd { Some(&rf) } else { None };
+            run_spmd(p, move |rank, comm| {
+                if traced {
+                    trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+                }
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out =
+                    cabcd::solvers::bcd::run(&sh.a_loc, &sh.y_loc, n, &opts, rref, comm, &mut be)
+                        .unwrap();
+                let mut vecs = out.w;
+                vecs.extend_from_slice(&out.alpha_loc);
+                finish(vecs, out.history)
+            })
+        }
+        M::Bdcd | M::ProxBdcd => {
+            let shards = partition_dual(&ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            let rref = if m == M::Bdcd { Some(&rf) } else { None };
+            run_spmd(p, move |rank, comm| {
+                if traced {
+                    trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+                }
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out = cabcd::solvers::bdcd::run(
+                    &sh.a_loc,
+                    &sh.y,
+                    sh.d_global,
+                    sh.d_offset,
+                    &opts,
+                    rref,
+                    comm,
+                    &mut be,
+                )
+                .unwrap();
+                let mut vecs = out.w_full;
+                vecs.extend_from_slice(&out.w_loc);
+                vecs.extend_from_slice(&out.alpha);
+                finish(vecs, out.history)
+            })
+        }
+        M::BcdRow => {
+            let shards = partition_rows(&ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            run_spmd(p, move |rank, comm| {
+                if traced {
+                    trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+                }
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out = cabcd::solvers::bcd_row::run(
+                    &sh.x_rows,
+                    &sh.y_loc,
+                    sh.d_global,
+                    sh.d_offset,
+                    &opts,
+                    Some(&rf),
+                    comm,
+                    &mut be,
+                )
+                .unwrap();
+                let mut vecs = out.w_full;
+                vecs.extend_from_slice(&out.w_loc);
+                finish(vecs, out.history)
+            })
+        }
+        M::Cocoa => {
+            let shards = partition_primal(&ds, p).unwrap();
+            let copts = CocoaOpts {
+                lam: LAM,
+                rounds: ITERS,
+                local_iters: s,
+                seed: SEED,
+                record_every: 4,
+                overlap,
+            };
+            run_spmd(p, move |rank, comm| {
+                if traced {
+                    trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+                }
+                let sh = &shards[rank];
+                let out =
+                    cabcd::solvers::cocoa::run(&sh.a_loc, &sh.y_loc, n, &copts, Some(&rf), comm)
+                        .unwrap();
+                let mut vecs = out.w;
+                vecs.extend_from_slice(&out.alpha_loc);
+                finish(vecs, out.history)
+            })
+        }
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The s axis per method (local_iters for cocoa), matching the
+/// engine_equivalence fixture.
+fn s_of(m: M) -> usize {
+    match m {
+        M::Cocoa => 2,
+        _ => 4,
+    }
+}
+
+// ---------------------- 1. observer neutrality -------------------------
+
+#[test]
+fn tracing_is_observer_neutral_bitwise() {
+    for m in M::ALL {
+        for overlap in [false, true] {
+            let ctx = format!("{} overlap={}", m.id(), overlap);
+            let plain = run_config(m, s_of(m), overlap, 4, false);
+            let traced = run_config(m, s_of(m), overlap, 4, true);
+            assert_eq!(plain.len(), traced.len());
+            for (rank, (a, b)) in plain.iter().zip(&traced).enumerate() {
+                assert!(a.tracer.is_none(), "{ctx}: untraced rank {rank} has a tracer");
+                assert!(b.tracer.is_some(), "{ctx}: traced rank {rank} lost its tracer");
+                assert_eq!(
+                    bits(&a.vecs),
+                    bits(&b.vecs),
+                    "{ctx}: rank {rank} iterates changed under tracing"
+                );
+                assert_eq!(
+                    a.history.meter, b.history.meter,
+                    "{ctx}: rank {rank} meter changed under tracing"
+                );
+                assert_eq!(a.history.iters, b.history.iters, "{ctx}: iters");
+                assert_eq!(
+                    a.history.records.len(),
+                    b.history.records.len(),
+                    "{ctx}: record count"
+                );
+                for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+                    assert_eq!(ra.obj_err.to_bits(), rb.obj_err.to_bits(), "{ctx}: obj_err");
+                    assert_eq!(ra.sol_err.to_bits(), rb.sol_err.to_bits(), "{ctx}: sol_err");
+                }
+                for (ra, rb) in a.history.prox.iter().zip(&b.history.prox) {
+                    assert_eq!(ra.pen_obj.to_bits(), rb.pen_obj.to_bits(), "{ctx}: pen_obj");
+                }
+            }
+        }
+    }
+}
+
+// ------------------- 2. span/meter cross-validation --------------------
+
+#[test]
+fn span_counts_match_meters_for_all_methods() {
+    for m in M::ALL {
+        for overlap in [false, true] {
+            let ctx = format!("{} overlap={}", m.id(), overlap);
+            let outs = run_config(m, s_of(m), overlap, 4, true);
+            for (rank, out) in outs.iter().enumerate() {
+                let tracer = out.tracer.as_ref().unwrap();
+                let meter = &out.history.meter;
+                trace::cross_check(tracer, meter)
+                    .unwrap_or_else(|e| panic!("{ctx} rank {rank}: {e}"));
+                // The new counter: one deferred completion per posted
+                // non-blocking collective, zero under blocking.
+                let want_waits = if overlap {
+                    meter.allreduces
+                        + if m == M::BcdRow { meter.all_to_alls } else { 0 }
+                } else {
+                    0
+                };
+                assert_eq!(
+                    meter.collective_waits, want_waits,
+                    "{ctx} rank {rank}: collective_waits"
+                );
+                assert_eq!(tracer.dropped(), 0, "{ctx} rank {rank}: ring dropped spans");
+                assert_eq!(
+                    tracer.trace_allocs(),
+                    0,
+                    "{ctx} rank {rank}: ring reallocated"
+                );
+                assert!(!tracer.is_empty(), "{ctx} rank {rank}: no spans at all");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_span_kind_is_exercised() {
+    // One overlapped prox run + one bcdrow run together must touch the
+    // whole taxonomy (ProxStep comes from the prox inner solve, the
+    // all-to-all spans from bcdrow).
+    let mut seen = std::collections::HashSet::new();
+    for outs in [
+        run_config(M::ProxBcd, 4, true, 4, true),
+        run_config(M::BcdRow, 4, true, 4, true),
+    ] {
+        for out in &outs {
+            for sp in out.tracer.as_ref().unwrap().spans() {
+                seen.insert(sp.kind);
+            }
+        }
+    }
+    for kind in SpanKind::ALL {
+        assert!(seen.contains(&kind), "span kind {kind:?} never emitted");
+    }
+}
+
+// --------------------- 3. acceptance: overlap wins ---------------------
+
+#[test]
+fn overlapped_cabcd_reports_positive_overlap_efficiency() {
+    let outs = run_config(M::Bcd, 4, true, 4, true);
+    let tracers: Vec<Tracer> = outs.into_iter().map(|o| o.tracer.unwrap()).collect();
+    let sum = TraceSummary::from_tracers(&tracers);
+    assert_eq!(sum.ranks, 4);
+    assert!(sum.overlap.pairs > 0, "no collective windows paired");
+    let eff = sum.overlap_efficiency();
+    assert!(
+        eff > 0.0,
+        "overlap efficiency must be strictly positive for the prefetch \
+         schedule, got {eff} ({:?})",
+        sum.overlap
+    );
+    assert!(eff <= 1.0, "efficiency {eff} > 1");
+}
+
+#[test]
+fn blocking_schedule_reports_zero_overlap_efficiency() {
+    // Blocking collectives have (by construction) empty in-flight
+    // windows: the CollectiveStart mark and the CollectiveWait span are
+    // adjacent, so nothing can be covered.
+    let outs = run_config(M::Bcd, 4, false, 4, true);
+    let tracers: Vec<Tracer> = outs.into_iter().map(|o| o.tracer.unwrap()).collect();
+    let sum = TraceSummary::from_tracers(&tracers);
+    assert_eq!(sum.overlap_efficiency(), 0.0);
+}
+
+// ----------------- 4. ring discipline & zero-alloc ---------------------
+
+#[test]
+fn ring_wraps_in_place_without_reallocating() {
+    let cap = 8usize;
+    let mut tr = Tracer::new(3, cap);
+    for i in 0..20u64 {
+        tr.push(Span {
+            kind: SpanKind::Sample,
+            op: OpClass::Compute,
+            tag: i,
+            rank: 3,
+            t_start: 10 * i,
+            t_end: 10 * i + 5,
+            words: 1,
+        });
+    }
+    assert_eq!(tr.len(), cap);
+    assert_eq!(tr.dropped(), 20 - cap as u64);
+    assert_eq!(tr.trace_allocs(), 0);
+    assert_eq!(tr.capacity(), cap);
+    // The survivors are exactly the newest `cap` spans.
+    let mut tags: Vec<u64> = tr.spans().iter().map(|s| s.tag).collect();
+    tags.sort_unstable();
+    assert_eq!(tags, (12..20).collect::<Vec<u64>>());
+}
+
+#[test]
+fn tiny_ring_drops_spans_but_keeps_counts_honest() {
+    // A deliberately undersized ring on a real run: the solve itself is
+    // untouched (observer neutrality does not depend on capacity), spans
+    // are dropped, and cross_check refuses to certify the lossy trace.
+    use cabcd::gram::NativeBackend;
+    let ds = toy_dataset();
+    let shards = partition_primal(&ds, 1).unwrap();
+    let opts = solver_opts(M::Bcd, 1, false);
+    let outs = run_spmd(1, move |rank, comm| {
+        trace::install(Tracer::new(rank, 4));
+        let sh = &shards[rank];
+        let mut be = NativeBackend::new();
+        let out = cabcd::solvers::bcd::run(
+            &sh.a_loc,
+            &sh.y_loc,
+            ds.n(),
+            &opts,
+            None,
+            comm,
+            &mut be,
+        )
+        .unwrap();
+        (out.history, trace::take().unwrap())
+    });
+    let (history, tracer) = &outs[0];
+    assert_eq!(tracer.len(), 4);
+    assert!(tracer.dropped() > 0, "16 outers cannot fit in 4 slots");
+    assert_eq!(tracer.trace_allocs(), 0, "ring grew under pressure");
+    let err = trace::cross_check(tracer, &history.meter).unwrap_err();
+    assert!(err.contains("dropped"), "unexpected cross_check error: {err}");
+}
+
+// --------------------------- 5. exporters ------------------------------
+
+#[test]
+fn chrome_trace_export_covers_every_rank_track() {
+    let outs = run_config(M::Bcd, 4, true, 4, true);
+    let tracers: Vec<Tracer> = outs.into_iter().map(|o| o.tracer.unwrap()).collect();
+    let json = trace::chrome_trace_json(&tracers);
+    assert!(json.starts_with("{\"traceEvents\":["), "bad envelope");
+    for rank in 0..4 {
+        assert!(
+            json.contains(&format!("\"name\":\"rank {rank}\"")),
+            "missing thread_name track for rank {rank}"
+        );
+    }
+    for name in ["Sample", "GramLocal", "CollectiveStart", "CollectiveWait", "InnerSolve"] {
+        assert!(json.contains(&format!("\"name\":\"{name}\"")), "missing {name}");
+    }
+    assert!(json.contains("\"cat\":\"allreduce\""));
+    assert!(json.contains("\"displayTimeUnit\":\"ms\""));
+
+    let summary = trace::summary_json(&TraceSummary::from_tracers(&tracers));
+    for key in ["\"overlap_efficiency\"", "\"compute_ns\"", "\"wire_ns\"", "\"idle_ns\""] {
+        assert!(summary.contains(key), "summary missing {key}");
+    }
+}
