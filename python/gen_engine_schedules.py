@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/fixtures/engine_schedules.tsv.
+
+Mirrors the abstract collective schedule that `engine::drive`
+(rust/src/engine/step.rs) executes for each of the 48 configurations of
+rust/tests/engine_equivalence.rs, in the token grammar of
+`cabcd::analysis::spec::SpecEvent::token`:
+
+    A<tag>/<len>    blocking allreduce             S<tag>/<len>  non-blocking start
+    W<tag>          allreduce wait (tag of start)  X<tag>/<recv> blocking all-to-all
+    Y<tag>/<recv>   all-to-all start               Z<tag>        all-to-all wait
+    m<prefix>       metered (meter-excluded diagnostic traffic)
+
+Tags mirror ThreadComm's per-endpoint op sequence: every collective
+*entry* (blocking or start, metered or not, any P) pre-increments the
+counter; waits carry the tag of the operation they complete. All-to-all
+tokens carry the total receive-contract words (send splits are
+rank-dependent by Lemma 3 and checked cross-rank by the checker, not
+pinned here). Streams are rank-identical, so one row pins every rank.
+
+The schedule model below restates, method by method, exactly which
+callbacks issue collectives (see the corresponding CaStep impls):
+
+  matched (bcd, bdcd, prox_bcd, prox_bdcd): the engine's one [G|r]
+    reduction per outer iteration (A blocking, S/W prefetch-overlap);
+    record() = one metered allreduce (bcd 1 word, bdcd n+2, prox_bcd
+    d+2, prox_bdcd n+1; prox records unconditionally, bcd/bdcd under a
+    reference — always present in the fixture runs); bdcd/prox_bdcd end
+    with a metered d-word w gather after drive().
+  cocoa: non-prefetch — one d-word reduction per round (A or S/W);
+    record() = one metered scalar allreduce.
+  bcdrow: record() = metered 3-word allreduce; final metered d-word
+    gather. Blocking: per iteration, metered P-word Lemma-3 load
+    allreduce, blocking exchange X, then A. Overlap (pipeline): the
+    look-ahead posts exchange k+1 (Y + metered load) while draining
+    k (Z) under the in-flight [G|r|w] reduction (S/W).
+
+Run:  python3 python/gen_engine_schedules.py  (from the repo root)
+"""
+
+import os
+
+D, N, B, ITERS, RECORD_EVERY = 12, 48, 2, 16, 4
+
+METHODS = ["bcd", "bdcd", "bcdrow", "cocoa", "prox_bcd", "prox_bdcd"]
+
+
+class Stream:
+    """Rank-0 event stream with ThreadComm tag discipline."""
+
+    def __init__(self):
+        self.t = 0
+        self.ar_fifo = []   # tags of in-flight iallreduces
+        self.a2a_fifo = []  # tags of in-flight all-to-alls
+        self.ev = []
+
+    def _begin(self):
+        self.t += 1
+        return self.t
+
+    def allreduce(self, ln, metered=False):
+        self.ev.append(f"{'m' if metered else ''}A{self._begin()}/{ln}")
+
+    def istart(self, ln):
+        tag = self._begin()
+        self.ar_fifo.append(tag)
+        self.ev.append(f"S{tag}/{ln}")
+
+    def iwait(self):
+        self.ev.append(f"W{self.ar_fifo.pop(0)}")
+
+    def a2a(self, recv_total, metered=False):
+        self.ev.append(f"{'m' if metered else ''}X{self._begin()}/{recv_total}")
+
+    def ia2a_start(self, recv_total):
+        tag = self._begin()
+        self.a2a_fifo.append(tag)
+        self.ev.append(f"Y{tag}/{recv_total}")
+
+    def ia2a_wait(self):
+        self.ev.append(f"Z{self.a2a_fifo.pop(0)}")
+
+
+def should_record(h_now, s):
+    # solvers::common::should_record with record_every = 4.
+    re = max(RECORD_EVERY, s)
+    return h_now % (max(re // s, 1) * s) == 0
+
+
+def packed_len(sb):
+    return sb * (sb + 1) // 2
+
+
+def record_len(method):
+    return {
+        "bcd": 1,
+        "bdcd": N + 2,
+        "bcdrow": 3,
+        "cocoa": 1,
+        "prox_bcd": D + 2,
+        "prox_bdcd": N + 1,
+    }[method]
+
+
+def gen(method, s, overlap, p):
+    st = Stream()
+    rec = lambda: st.allreduce(record_len(method), metered=True)
+
+    if method == "cocoa":
+        # CocoaStep drives with SolverOpts{s=1,b=1}; `s` is local_iters,
+        # which never touches the wire. Non-prefetch, d-word payload.
+        outer, eff_s, total = ITERS, 1, D
+        prefetch = False
+    elif method == "bcdrow":
+        sb = s * B
+        outer, eff_s, total = ITERS // s, s, packed_len(sb) + 2 * sb
+        prefetch = overlap  # pipeline = overlap && tol.is_none()
+    else:
+        sb = s * B
+        outer, eff_s, total = ITERS // s, s, packed_len(sb) + sb
+        prefetch = overlap
+
+    n_loc = N // p
+    recv_total = (s if method == "bcdrow" else 0) * B * n_loc
+
+    def post_exchange():  # BcdRowStep::post_exchange
+        st.ia2a_start(recv_total)
+        st.allreduce(p, metered=True)  # Lemma-3 load meter
+
+    rec()  # drive(): step.record(comm, history, 0)
+
+    if method == "bcdrow" and prefetch:
+        # Prologue: sample(0) posts exchange 0; local_gram(0) drains it
+        # and posts the look-ahead exchange for iteration 1.
+        post_exchange()
+        st.ia2a_wait()
+        if outer > 1:
+            post_exchange()
+        for k in range(outer):
+            st.istart(total)  # the [G|r|w] reduction
+            if k + 1 < outer:
+                # engine pending block: sample(k+1) returns the look-ahead
+                # (no comm); local_gram(k+1) drains exchange k+1 and, if
+                # k+2 exists, posts its exchange.
+                st.ia2a_wait()
+                if k + 2 < outer:
+                    post_exchange()
+            st.iwait()
+            if should_record((k + 1) * eff_s, eff_s) or k + 1 == outer:
+                rec()
+    elif method == "bcdrow":
+        # Blocking: local_payload = metered load allreduce, blocking
+        # exchange, then the engine's blocking reduction.
+        for k in range(outer):
+            st.allreduce(p, metered=True)
+            st.a2a(recv_total)
+            st.allreduce(total)
+            if should_record((k + 1) * eff_s, eff_s) or k + 1 == outer:
+                rec()
+    else:
+        # Matched methods and cocoa: the only loop collective is the
+        # engine's reduction (prefetch and non-prefetch overlap produce
+        # the same S/W stream — sampling and gram are communication-free).
+        for k in range(outer):
+            if overlap:
+                st.istart(total)
+                st.iwait()
+            else:
+                st.allreduce(total)
+            if should_record((k + 1) * eff_s, eff_s) or k + 1 == outer:
+                rec()
+
+    if method in ("bdcd", "bcdrow", "prox_bdcd"):
+        st.allreduce(D, metered=True)  # final metered w gather
+
+    assert not st.ar_fifo and not st.a2a_fifo, (method, s, overlap, p)
+    return st.ev
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_path = os.path.join(root, "rust", "tests", "fixtures", "engine_schedules.tsv")
+    rows = []
+    for method in METHODS:
+        for s in ([2, 8] if method == "cocoa" else [1, 4]):
+            for overlap in (False, True):
+                for p in (1, 4):
+                    ev = gen(method, s, overlap, p)
+                    rows.append(
+                        f"{method}\t{s}\t{str(overlap).lower()}\t{p}"
+                        f"\t{len(ev)}\t{' '.join(ev)}"
+                    )
+    header = [
+        "# Golden per-rank collective schedules (PR 7), one row per",
+        "# engine_equivalence.rs config, token grammar of",
+        "# cabcd::analysis::spec::SpecEvent::token (A/S/W allreduce,",
+        "# X/Y/Z all-to-all by total recv words, m = metered).",
+        "# Streams are rank-identical (checker invariant (a)), so one row",
+        "# pins every rank. Regenerate: python3 python/gen_engine_schedules.py",
+        "# method\ts\toverlap\tp\tn_events\tevents",
+    ]
+    with open(out_path, "w") as f:
+        f.write("\n".join(header) + "\n")
+        f.write("\n".join(rows) + "\n")
+    print(f"wrote {len(rows)} rows -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+//! The schedule checker: SPMD-safety invariants over per-rank
+//! [`SpecEvent`] streams.
+//!
+//! [`check_streams`] proves four properties of an abstract schedule, each
+//! a hard error when violated:
+//!
+//! * **(a) Lockstep** — all ranks issue identical op/tag/length
+//!   sequences (deadlock-freedom of the SPMD schedule). Allreduce and
+//!   broadcast payload lengths must match exactly; all-to-all *send*
+//!   lengths are rank-dependent (Lemma-3 load imbalance), so the check
+//!   is the transpose condition `send[r][q] == recv[q][r]` — every word
+//!   rank r addresses to rank q is a word q's receive contract expects.
+//! * **(b) Handle hygiene** — every `i*_start` is matched by exactly one
+//!   wait before rank exit; no wait without a start.
+//! * **(c) No tag aliasing** — while an operation is in flight, no other
+//!   collective may carry its tag (tags are what keep in-flight message
+//!   streams apart on the thread transport).
+//! * **(d) Poison domination** — after a refused (poisoned) event,
+//!   nothing but refused events may follow on any rank: a poisoned group
+//!   must fail fast everywhere, never half-continue.
+//!
+//! Errors are [`Error::Comm`] with rank, stream position, and both sides
+//! of the disagreement — enough to identify the offending `CaStep`
+//! callback without rerunning anything.
+
+use std::collections::VecDeque;
+
+use crate::analysis::spec::{SpecEvent, SpecOp};
+use crate::error::{Error, Result};
+
+fn fail(msg: String) -> Result<()> {
+    Err(Error::Comm(format!("schedule violation: {msg}")))
+}
+
+/// Verify invariants (a)–(d) over one stream per rank. `streams[r]` is
+/// rank r's recorded sequence; an empty outer slice is an error (a
+/// schedule with no ranks verifies nothing).
+pub fn check_streams(streams: &[Vec<SpecEvent>]) -> Result<()> {
+    if streams.is_empty() {
+        return fail("no rank streams supplied".into());
+    }
+    let p = streams.len();
+
+    // (a) lockstep: equal length, then position-wise agreement.
+    let len0 = streams[0].len();
+    for (r, st) in streams.iter().enumerate().skip(1) {
+        if st.len() != len0 {
+            let shorter = st.len().min(len0);
+            let (lr, le) = if st.len() < len0 { (r, 0) } else { (0, r) };
+            return fail(format!(
+                "rank {lr} issued {} collectives but rank {le} issued {}; first \
+                 missing position is {shorter} (rank {le} continues with `{}`)",
+                streams[lr].len(),
+                streams[le].len(),
+                streams[le][shorter].token(),
+            ));
+        }
+    }
+    for pos in 0..len0 {
+        let e0 = &streams[0][pos];
+        for (r, st) in streams.iter().enumerate().skip(1) {
+            let e = &st[pos];
+            if e.tag != e0.tag || e.metered != e0.metered || e.op.class() != e0.op.class() {
+                return fail(format!(
+                    "rank divergence at position {pos}: rank 0 issued `{}` but rank \
+                     {r} issued `{}` (op/tag/metered must match on every rank)",
+                    e0.token(),
+                    e.token(),
+                ));
+            }
+            let lens_agree = match (&e0.op, &e.op) {
+                (SpecOp::Allreduce { len: a }, SpecOp::Allreduce { len: b })
+                | (SpecOp::IAllreduceStart { len: a }, SpecOp::IAllreduceStart { len: b })
+                | (SpecOp::IAllreduceWait { len: a }, SpecOp::IAllreduceWait { len: b }) => a == b,
+                (
+                    SpecOp::Broadcast { root: ra, len: a },
+                    SpecOp::Broadcast { root: rb, len: b },
+                ) => ra == rb && a == b,
+                // All-to-all payload agreement is the transpose condition,
+                // checked across the whole group below.
+                _ => true,
+            };
+            if !lens_agree {
+                return fail(format!(
+                    "payload divergence at position {pos}: rank 0 issued `{}` but \
+                     rank {r} issued `{}`",
+                    e0.token(),
+                    e.token(),
+                ));
+            }
+        }
+        // (a) continued: all-to-all transpose condition over the group.
+        let a2a = |op: &SpecOp| -> Option<(Vec<usize>, Vec<usize>)> {
+            match op {
+                SpecOp::AllToAll {
+                    send_lens,
+                    recv_lens,
+                }
+                | SpecOp::IAllToAllStart {
+                    send_lens,
+                    recv_lens,
+                } => Some((send_lens.clone(), recv_lens.clone())),
+                _ => None,
+            }
+        };
+        if a2a(&e0.op).is_some() {
+            let mut mats: Vec<(Vec<usize>, Vec<usize>)> = Vec::with_capacity(p);
+            for (r, st) in streams.iter().enumerate() {
+                match a2a(&st[pos].op) {
+                    Some(m) => mats.push(m),
+                    // Unreachable: op classes were matched above.
+                    None => {
+                        return fail(format!(
+                            "internal: rank {r} op class changed at position {pos}"
+                        ))
+                    }
+                }
+            }
+            for (r, (send, recv)) in mats.iter().enumerate() {
+                if send.len() != p || recv.len() != p {
+                    return fail(format!(
+                        "all-to-all at position {pos}: rank {r} supplied {} send / \
+                         {} receive lengths for a {p}-rank group",
+                        send.len(),
+                        recv.len(),
+                    ));
+                }
+            }
+            for r in 0..p {
+                for q in 0..p {
+                    if mats[r].0[q] != mats[q].1[r] {
+                        return fail(format!(
+                            "all-to-all length mismatch at position {pos} (tag {}): \
+                             rank {r} sends {} words to rank {q}, but rank {q} \
+                             expects {} words from rank {r}",
+                            e0.tag, mats[r].0[q], mats[q].1[r],
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // (b) + (c) + (d): per-rank in-flight simulation.
+    for (r, st) in streams.iter().enumerate() {
+        let mut flight_ar: VecDeque<u64> = VecDeque::new();
+        let mut flight_a2a: VecDeque<u64> = VecDeque::new();
+        let mut poisoned_at: Option<usize> = None;
+        for (pos, e) in st.iter().enumerate() {
+            // (d) nothing but refusals after a refusal.
+            if let Some(first) = poisoned_at {
+                if !matches!(e.op, SpecOp::Refused) {
+                    return fail(format!(
+                        "rank {r} issued `{}` at position {pos} after the group was \
+                         poisoned at position {first}; a poisoned group must refuse \
+                         every later collective",
+                        e.token(),
+                    ));
+                }
+                continue;
+            }
+            match &e.op {
+                SpecOp::Refused => poisoned_at = Some(pos),
+                SpecOp::IAllreduceWait { .. } => {
+                    let Some(started) = flight_ar.pop_front() else {
+                        return fail(format!(
+                            "rank {r} waited on an allreduce at position {pos} (tag \
+                             {}) with none in flight",
+                            e.tag,
+                        ));
+                    };
+                    if started != e.tag {
+                        return fail(format!(
+                            "rank {r} completed allreduce tag {} at position {pos} \
+                             but the oldest in-flight allreduce is tag {started} \
+                             (waits must complete in FIFO order)",
+                            e.tag,
+                        ));
+                    }
+                }
+                SpecOp::IAllToAllWait { .. } => {
+                    let Some(started) = flight_a2a.pop_front() else {
+                        return fail(format!(
+                            "rank {r} waited on an all-to-all at position {pos} (tag \
+                             {}) with none in flight",
+                            e.tag,
+                        ));
+                    };
+                    if started != e.tag {
+                        return fail(format!(
+                            "rank {r} completed all-to-all tag {} at position {pos} \
+                             but the oldest in-flight all-to-all is tag {started}",
+                            e.tag,
+                        ));
+                    }
+                }
+                op => {
+                    // (c) a new operation must not alias an in-flight tag.
+                    if flight_ar.contains(&e.tag) || flight_a2a.contains(&e.tag) {
+                        return fail(format!(
+                            "tag aliasing on rank {r} at position {pos}: `{}` reuses \
+                             tag {} while that tag is still in flight — its messages \
+                             would be indistinguishable from the pending operation's",
+                            e.token(),
+                            e.tag,
+                        ));
+                    }
+                    match op {
+                        SpecOp::IAllreduceStart { .. } => flight_ar.push_back(e.tag),
+                        SpecOp::IAllToAllStart { .. } => flight_a2a.push_back(e.tag),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        // (b) every start matched by a wait before rank exit.
+        if let Some(&tag) = flight_ar.front() {
+            return fail(format!(
+                "rank {r} exited with allreduce tag {tag} still in flight ({} \
+                 orphaned allreduce start{}): every iallreduce_start needs exactly \
+                 one iallreduce_wait",
+                flight_ar.len(),
+                if flight_ar.len() == 1 { "" } else { "s" },
+            ));
+        }
+        if let Some(&tag) = flight_a2a.front() {
+            return fail(format!(
+                "rank {r} exited with all-to-all tag {tag} still in flight ({} \
+                 orphaned all-to-all start{}): every iall_to_all_start needs \
+                 exactly one iall_to_all_wait",
+                flight_a2a.len(),
+                if flight_a2a.len() == 1 { "" } else { "s" },
+            ));
+        }
+    }
+
+    Ok(())
+}

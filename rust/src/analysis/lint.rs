@@ -1,0 +1,575 @@
+//! `ca_lint`: a stdlib-only, token-level hygiene lint over `rust/src/**`.
+//!
+//! Clippy cannot see the project's SPMD discipline, so this pass encodes
+//! it directly. Four rules, all scoped to **library** code — `main.rs`
+//! and `bin/**` are driver surfaces and exempt, and `#[cfg(test)]` items
+//! are stripped before scanning:
+//!
+//! * **`no-unwrap`** — `.unwrap(` / `.expect(` / `panic!(` are forbidden
+//!   in library paths: on the thread transport a panicking rank strands
+//!   its peers mid-collective, so fallible paths must return `Error` or
+//!   poison the group. The audited remainder (seed parsing after
+//!   validation, test-only generators, the deliberate panic propagation
+//!   in `run_spmd`'s join) is frozen in [`ALLOW`].
+//! * **`start-wait`** — within each file, `iallreduce_start` /
+//!   `iallreduce_wait` (and the all-to-all pair) must appear the same
+//!   number of times: a lexical proxy for "no handle escapes the file
+//!   that created it". Files that intentionally split (the row solver
+//!   posts one exchange and drains it at two sites) are frozen with
+//!   their imbalance.
+//! * **`collective-seam`** — dotted collective calls outside `comm/`,
+//!   `engine/`, and `analysis/` are confined to two seams: the
+//!   `metered_out` closure parameter (receiver `c`, the metrics seam)
+//!   and the frozen direct-call sites (the row solver's exchange, the
+//!   CG baseline). Everything else must route communication through
+//!   `engine::drive`, where schedules are verified.
+//! * **`hot-loop`** — `Instant::now(` may appear only in `trace/`,
+//!   `util/bench.rs`, and `coordinator/driver.rs`; allocation tokens
+//!   (`vec![`, `Vec::with_capacity(`, `Vec::new(`, `.to_vec(`) in the
+//!   traced hot loop `engine/step.rs` are budgeted at their audited
+//!   count — steady-state iterations must reuse pooled buffers.
+//!
+//! The scanner strips `//` and nested `/* */` comments, string / raw
+//! string / char literals (lifetime-aware), and `#[cfg(test)]`-gated
+//! items before matching, so rule needles can be written as plain
+//! literals without self-matching.
+//!
+//! [`ALLOW`] ratchets **both ways**: a count drifting above its frozen
+//! value is a violation, and so is a stale entry whose count dropped —
+//! shrink the allowlist instead of leaving dead exemptions. The gate
+//! test `lint_is_clean_and_allowlist_is_frozen` in
+//! `rust/tests/analysis.rs` keeps CI honest, and the `ca_lint` binary
+//! runs the same pass from the command line.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// The audited, frozen exemptions: `(rule, file, count)`. Counts are
+/// exact — any drift in either direction is a violation.
+pub const ALLOW: &[(&str, &str, usize)] = &[
+    // Deliberate panic propagation when joining SPMD worker threads: a
+    // panicked worker already tore down the group, and swallowing the
+    // join error would hide the original panic message.
+    ("no-unwrap", "comm/thread.rs", 2),
+    // Seed/shape parsing immediately after explicit validation.
+    ("no-unwrap", "config.rs", 2),
+    // Eigenvalue sort over values already filtered finite.
+    ("no-unwrap", "linalg/cond.rs", 1),
+    ("no-unwrap", "matrix/csr.rs", 1),
+    // Synthetic dataset generators (library API, but test/bench only).
+    ("no-unwrap", "matrix/gen.rs", 4),
+    ("no-unwrap", "metrics.rs", 2),
+    ("no-unwrap", "trace/analysis.rs", 1),
+    ("no-unwrap", "util/bench.rs", 2),
+    ("no-unwrap", "util/proptest.rs", 3),
+    // The row solver posts one look-ahead exchange and drains it at two
+    // sites (pipelined and non-pipelined acquire): one start, two waits.
+    ("start-wait", "solvers/bcd_row.rs", 1),
+    // Direct collective calls that predate `engine::drive` seams: the
+    // row solver's all-to-all exchange (4 sites) and the CG baseline's
+    // two allreduces. New solvers must route through the engine.
+    ("collective-seam", "solvers/bcd_row.rs", 4),
+    ("collective-seam", "solvers/cg.rs", 2),
+    // Audited allocation tokens in the engine hot loop: setup-phase
+    // buffer pools and per-run history vectors, none per-iteration.
+    ("hot-loop-alloc", "engine/step.rs", 7),
+];
+
+/// Collective method names whose call sites rule `collective-seam`
+/// confines to approved modules and seams.
+const COLLECTIVES: [&str; 9] = [
+    "allreduce_sum",
+    "iallreduce_start",
+    "iallreduce_wait",
+    "broadcast",
+    "all_to_all_expect",
+    "iall_to_all_start",
+    "iall_to_all_wait",
+    "barrier",
+    "all_to_all",
+];
+
+/// Files (relative to the source root) where `Instant::now(` is
+/// legitimate: the tracer clock, the bench harness, and the driver's
+/// wall-time report.
+const INSTANT_OK: [&str; 3] = ["trace/mod.rs", "util/bench.rs", "coordinator/driver.rs"];
+
+/// Allocation tokens budgeted in the engine hot loop.
+const ALLOC_TOKENS: [&str; 4] = ["vec![", "Vec::with_capacity(", "Vec::new(", ".to_vec("];
+
+/// One lint finding: which rule, which file, and what went wrong.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Rule identifier (`no-unwrap`, `start-wait`, `collective-seam`,
+    /// `instant-now`, `hot-loop-alloc`, or `allowlist`).
+    pub rule: &'static str,
+    /// File path relative to the scanned source root.
+    pub file: String,
+    /// Human-readable diagnosis with the measured numbers.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.rule, self.file, self.detail)
+    }
+}
+
+/// Outcome of a full lint pass.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// Library `.rs` files scanned (bin surfaces excluded).
+    pub files_scanned: usize,
+    /// All violations, in deterministic (rule, file) order.
+    pub violations: Vec<Violation>,
+    /// Allowlist entries whose frozen count matched exactly.
+    pub allow_matched: usize,
+}
+
+impl LintReport {
+    /// True when the pass found nothing — the CI gate condition.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+impl fmt::Display for LintReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "ca_lint: {} files scanned, {} allowlist entries matched, {} violation(s)",
+            self.files_scanned,
+            self.allow_matched,
+            self.violations.len()
+        )?;
+        for v in &self.violations {
+            writeln!(f, "  {v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Run the full lint pass over `src_root` (normally `rust/src`).
+///
+/// Returns `Err` only for IO problems (unreadable tree); lint findings
+/// are reported in the [`LintReport`], clean or not.
+pub fn run_lint(src_root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+
+    let mut report = LintReport::default();
+    // Measured (rule, file) -> count, reconciled against ALLOW below.
+    let mut measured: BTreeMap<(&'static str, String), usize> = BTreeMap::new();
+
+    for path in &files {
+        let rel = relative_name(src_root, path)?;
+        if rel == "main.rs" || rel.starts_with("bin/") {
+            continue; // driver surfaces: exempt from library rules
+        }
+        let raw = std::fs::read_to_string(path)?;
+        let text = strip_cfg_test(&strip_source(&raw));
+        report.files_scanned += 1;
+
+        // no-unwrap
+        let unwraps = count_substr(&text, ".unwrap(")
+            + count_substr(&text, ".expect(")
+            + count_substr(&text, "panic!(");
+        if unwraps > 0 {
+            measured.insert(("no-unwrap", rel.clone()), unwraps);
+        }
+
+        // start-wait lexical pairing
+        let imbalance = count_ident(&text, "iallreduce_start")
+            .abs_diff(count_ident(&text, "iallreduce_wait"))
+            + count_ident(&text, "iall_to_all_start")
+                .abs_diff(count_ident(&text, "iall_to_all_wait"));
+        if imbalance > 0 {
+            measured.insert(("start-wait", rel.clone()), imbalance);
+        }
+
+        // collective-seam (outside the modules that own communication)
+        if !rel.starts_with("comm/") && !rel.starts_with("engine/") && !rel.starts_with("analysis/")
+        {
+            let calls = seam_calls(&text);
+            if calls > 0 {
+                measured.insert(("collective-seam", rel.clone()), calls);
+            }
+        }
+
+        // hot-loop: Instant::now outside the approved clock sites
+        if !INSTANT_OK.contains(&rel.as_str()) {
+            let nows = count_substr(&text, "Instant::now(");
+            if nows > 0 {
+                report.violations.push(Violation {
+                    rule: "instant-now",
+                    file: rel.clone(),
+                    detail: format!(
+                        "{nows} Instant::now() call(s); wall-clock reads belong in \
+                         {INSTANT_OK:?} so traced schedules stay deterministic"
+                    ),
+                });
+            }
+        }
+
+        // hot-loop: allocation budget in the engine inner loop
+        if rel == "engine/step.rs" {
+            let allocs: usize = ALLOC_TOKENS.iter().map(|t| count_substr(&text, t)).sum();
+            if allocs > 0 {
+                measured.insert(("hot-loop-alloc", rel.clone()), allocs);
+            }
+        }
+    }
+
+    // Reconcile measured counts against the frozen allowlist, both ways.
+    for ((rule, file), count) in &measured {
+        match ALLOW
+            .iter()
+            .find(|(r, f, _)| r == rule && f == file)
+            .map(|(_, _, frozen)| *frozen)
+        {
+            Some(frozen) if frozen == *count => report.allow_matched += 1,
+            Some(frozen) => report.violations.push(Violation {
+                rule,
+                file: file.clone(),
+                detail: format!(
+                    "count {count} != frozen allowlist count {frozen}; fix the new \
+                     site(s) or re-audit and update ALLOW in analysis/lint.rs"
+                ),
+            }),
+            None => report.violations.push(Violation {
+                rule,
+                file: file.clone(),
+                detail: format!(
+                    "{count} occurrence(s) and no allowlist entry; fix the site(s) \
+                     or audit them into ALLOW in analysis/lint.rs"
+                ),
+            }),
+        }
+    }
+    for (rule, file, frozen) in ALLOW {
+        let have = measured
+            .get(&(*rule, (*file).to_string()))
+            .copied()
+            .unwrap_or(0);
+        if have == 0 {
+            report.violations.push(Violation {
+                rule: "allowlist",
+                file: (*file).to_string(),
+                detail: format!(
+                    "stale entry ({rule}, frozen {frozen}): the file now measures 0 — \
+                     delete the entry so the ratchet keeps its teeth"
+                ),
+            });
+        }
+    }
+
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        entries.push(e?);
+    }
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|x| x == "rs") == Some(true) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn relative_name(root: &Path, path: &Path) -> Result<String> {
+    let rel = path.strip_prefix(root).map_err(|_| {
+        Error::Runtime(format!(
+            "lint: {} is not under the scanned root {}",
+            path.display(),
+            root.display()
+        ))
+    })?;
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    Ok(parts.join("/"))
+}
+
+/// Replace comments and string/char literals with blanks (newlines are
+/// preserved so stripped text keeps its line structure).
+fn strip_source(text: &str) -> String {
+    let b = text.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        let nxt = if i + 1 < b.len() { b[i + 1] } else { 0 };
+        if c == b'/' && nxt == b'/' {
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+        } else if c == b'/' && nxt == b'*' {
+            // Block comments nest in Rust.
+            i += 2;
+            let mut depth = 1usize;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        out.push(b'\n');
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == b'r' && (nxt == b'"' || nxt == b'#') {
+            // Raw string r"..." / r#"..."# (raw identifiers like r#type
+            // have no quote after the hashes and fall through).
+            let mut h = i + 1;
+            while h < b.len() && b[h] == b'#' {
+                h += 1;
+            }
+            if h < b.len() && b[h] == b'"' {
+                let hashes = h - (i + 1);
+                let mut j = h + 1;
+                'raw: while j < b.len() {
+                    if b[j] == b'"' {
+                        let mut k = 0;
+                        while k < hashes && j + 1 + k < b.len() && b[j + 1 + k] == b'#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    if b[j] == b'\n' {
+                        out.push(b'\n');
+                    }
+                    j += 1;
+                }
+                out.extend_from_slice(b"\"\"");
+                i = j;
+            } else {
+                out.push(c);
+                i += 1;
+            }
+        } else if c == b'"' {
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == b'\n' {
+                    out.push(b'\n');
+                }
+                i += 1;
+            }
+            out.extend_from_slice(b"\"\"");
+        } else if c == b'\'' {
+            if nxt == b'\\' {
+                // Escaped char literal: consume the opening quote, the
+                // backslash, and the escaped byte (so '\'' terminates on
+                // the real closing quote), then scan to the close.
+                i += 3;
+                while i < b.len() && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+                out.extend_from_slice(b"' '");
+            } else if i + 2 < b.len() && b[i + 2] == b'\'' && nxt != b'\'' {
+                // Plain one-byte char literal 'x'.
+                i += 3;
+                out.extend_from_slice(b"' '");
+            } else {
+                // Lifetime.
+                out.push(c);
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Drop `#[cfg(test)]`-gated items by brace counting on the
+/// comment/string-stripped text.
+fn strip_cfg_test(text: &str) -> String {
+    let lines: Vec<&str> = text.split('\n').collect();
+    let mut keep: Vec<&str> = Vec::with_capacity(lines.len());
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].trim() == "#[cfg(test)]" {
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut j = i;
+            while j < lines.len() {
+                for ch in lines[j].bytes() {
+                    match ch {
+                        b'{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        b'}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                if !opened && j > i && lines[j].trim_end().ends_with(';') {
+                    break; // `#[cfg(test)] mod x;` outline form
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            keep.push(lines[i]);
+            i += 1;
+        }
+    }
+    keep.join("\n")
+}
+
+fn count_substr(hay: &str, needle: &str) -> usize {
+    hay.matches(needle).count()
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Count whole-identifier occurrences of `name`.
+fn count_ident(hay: &str, name: &str) -> usize {
+    let hb = hay.as_bytes();
+    let mut n = 0;
+    let mut from = 0;
+    while let Some(pos) = hay
+        .get(from..)
+        .and_then(|s| s.find(name).map(|p| from + p))
+    {
+        let end = pos + name.len();
+        let ok_left = pos == 0 || !is_ident(hb[pos - 1]);
+        let ok_right = end >= hb.len() || !is_ident(hb[end]);
+        if ok_left && ok_right {
+            n += 1;
+        }
+        from = pos + 1;
+    }
+    n
+}
+
+/// Count dotted collective calls whose receiver identifier is not the
+/// `metered_out` closure parameter `c`. Chained receivers (`foo().bar`)
+/// have no receiver identifier and are not counted — direct calls are
+/// what the seam rule polices.
+fn seam_calls(text: &str) -> usize {
+    let b = text.as_bytes();
+    let mut count = 0;
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'.' {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < b.len() && is_ident(b[j]) {
+            j += 1;
+        }
+        if j > name_start {
+            let name = &text[name_start..j];
+            if COLLECTIVES.contains(&name) {
+                let mut k = j;
+                while k < b.len() && b[k].is_ascii_whitespace() {
+                    k += 1;
+                }
+                if k < b.len() && b[k] == b'(' {
+                    let mut r = i;
+                    while r > 0 && b[r - 1].is_ascii_whitespace() {
+                        r -= 1;
+                    }
+                    let recv_end = r;
+                    while r > 0 && is_ident(b[r - 1]) {
+                        r -= 1;
+                    }
+                    if recv_end > r && &text[r..recv_end] != "c" {
+                        count += 1;
+                    }
+                }
+            }
+        }
+        i = if j > i { j } else { i + 1 };
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripper_removes_comments_strings_chars() {
+        let src = "let a = \".unwrap(\"; // .expect(\nlet b = '\\''; /* panic!( */ let c = 'x';";
+        let t = strip_source(src);
+        assert!(!t.contains(".unwrap("));
+        assert!(!t.contains(".expect("));
+        assert!(!t.contains("panic!("));
+        assert_eq!(t.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn stripper_keeps_lifetimes_and_code() {
+        let t = strip_source("fn f<'a>(x: &'a str) -> &'a str { x.trim() }");
+        assert!(t.contains("<'a>"));
+        assert!(t.contains("x.trim()"));
+    }
+
+    #[test]
+    fn raw_strings_are_stripped() {
+        let t = strip_source("let s = r#\"panic!( .unwrap( \"# ; let k = 1;");
+        assert!(!t.contains("panic!("));
+        assert!(t.contains("let k = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_dropped() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn lib2() {}";
+        let t = strip_cfg_test(src);
+        assert!(!t.contains("unwrap"));
+        assert!(t.contains("lib2"));
+    }
+
+    #[test]
+    fn ident_counting_respects_boundaries() {
+        let t = "iallreduce_start iallreduce_start_extra x.iallreduce_start(";
+        assert_eq!(count_ident(t, "iallreduce_start"), 2);
+    }
+
+    #[test]
+    fn seam_calls_exempt_metered_closure_receiver() {
+        let t = "c.allreduce_sum(&mut v); comm.allreduce_sum(&mut v); self.comm.barrier();";
+        assert_eq!(seam_calls(t), 2);
+    }
+}

@@ -1,0 +1,114 @@
+//! [`MockBackend`]: the trivial compute backend behind the schedule
+//! verifier.
+//!
+//! Schedules must not depend on data values — that is exactly the SPMD
+//! property the verifier proves — so the symbolic runs replace every
+//! kernel with a zero fill. Pooled buffers are reused across iterations,
+//! so each fill overwrites the *full* output slice rather than assuming
+//! zeroed storage. The two prox solves are overridden as well: the
+//! default trait implementations estimate a Lipschitz step from the Gram
+//! diagonal, which is zero here and would divide by zero.
+
+use crate::error::Result;
+use crate::gram::ComputeBackend;
+use crate::matrix::Matrix;
+
+/// Compute backend whose every kernel returns zeros of the right shape.
+#[derive(Debug, Default)]
+pub struct MockBackend;
+
+impl MockBackend {
+    /// A stateless mock backend.
+    pub fn new() -> Self {
+        MockBackend
+    }
+}
+
+impl ComputeBackend for MockBackend {
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn gram_resid(
+        &mut self,
+        _a: &Matrix,
+        _idx: &[usize],
+        _z: &[f64],
+        g: &mut [f64],
+        r: &mut [f64],
+    ) -> Result<()> {
+        g.fill(0.0);
+        r.fill(0.0);
+        Ok(())
+    }
+
+    fn ca_inner_solve(
+        &mut self,
+        s: usize,
+        b: usize,
+        _g_raw: &[f64],
+        _r_raw: &[f64],
+        _w_blocks: &[f64],
+        _overlap: &[f64],
+        _lam: f64,
+        _inv_n: f64,
+    ) -> Result<Vec<f64>> {
+        Ok(vec![0.0; s * b])
+    }
+
+    fn ca_dual_inner_solve(
+        &mut self,
+        s: usize,
+        b: usize,
+        _g_raw: &[f64],
+        _r_raw: &[f64],
+        _a_blocks: &[f64],
+        _y_blocks: &[f64],
+        _overlap: &[f64],
+        _lam: f64,
+        _inv_n: f64,
+    ) -> Result<Vec<f64>> {
+        Ok(vec![0.0; s * b])
+    }
+
+    fn ca_prox_inner_solve(
+        &mut self,
+        s: usize,
+        b: usize,
+        _g_raw: &[f64],
+        _r_raw: &[f64],
+        _w_blocks: &[f64],
+        _overlap: &[f64],
+        _lam: f64,
+        _inv_n: f64,
+        _reg: &crate::prox::Reg,
+    ) -> Result<Vec<f64>> {
+        Ok(vec![0.0; s * b])
+    }
+
+    fn ca_prox_dual_inner_solve(
+        &mut self,
+        s: usize,
+        b: usize,
+        _g_raw: &[f64],
+        _r_raw: &[f64],
+        _a_blocks: &[f64],
+        _y_blocks: &[f64],
+        _overlap: &[f64],
+        _lam: f64,
+        _inv_n: f64,
+        _reg: &crate::prox::Reg,
+    ) -> Result<Vec<f64>> {
+        Ok(vec![0.0; s * b])
+    }
+
+    fn alpha_update(
+        &mut self,
+        _a: &Matrix,
+        _idx: &[usize],
+        _d: &[f64],
+        _acc: &mut [f64],
+    ) -> Result<()> {
+        Ok(())
+    }
+}

@@ -1,0 +1,47 @@
+//! Static analysis for the SPMD solver suite: a symbolic schedule
+//! verifier and a project-local lint pass.
+//!
+//! Communication bugs in this codebase are not value bugs — they are
+//! *schedule* bugs: a rank that skips a collective, a wait that never
+//! happens, a tag reused while its operation is still in flight, a
+//! poisoned group that half-continues. None of those are visible to unit
+//! tests of the math, and on the thread transport they surface as hangs
+//! or heisenbugs. This module attacks them statically, in two layers:
+//!
+//! * **Schedule verification** ([`spec`], [`checker`], [`verify`],
+//!   [`mock`]) — run every solver through `engine::drive` against a
+//!   [`SpecComm`]: a [`Communicator`](crate::comm::Communicator) that
+//!   moves no data and records each rank's abstract event stream (op
+//!   class, tag, payload length, blocking vs start/wait, poison state).
+//!   [`check_streams`] then proves lockstep, handle hygiene, tag
+//!   uniqueness, and poison domination over the per-rank streams. Because
+//!   schedules are data-independent (the property being proved), ranks
+//!   can run sequentially in one thread with a zero-fill [`MockBackend`]
+//!   — no transport, no threads, no flakiness.
+//! * **Lint** ([`lint`]) — a stdlib-only token-level pass over
+//!   `rust/src/**` enforcing the project's SPMD hygiene rules: lexical
+//!   start/wait pairing, no `unwrap`/`expect`/`panic!` in non-test
+//!   library paths, collectives called only from approved seams, and no
+//!   allocation or `Instant::now` in the traced hot loop outside
+//!   approved sites. The audited remainder is frozen in an allowlist
+//!   that ratchets both ways. Run it as `cargo run --bin ca_lint`.
+//!
+//! Tests in `rust/tests/analysis.rs` pin the full 48-config schedule
+//! matrix of `engine_equivalence.rs` to the committed fixture
+//! `rust/tests/fixtures/engine_schedules.tsv` and demonstrate that
+//! seeded faults (skipped wait, rank-divergent collective, tag aliasing,
+//! post-poison traffic) are caught with actionable errors.
+
+#![warn(missing_docs)]
+
+pub mod checker;
+pub mod lint;
+pub mod mock;
+pub mod spec;
+pub mod verify;
+
+pub use checker::check_streams;
+pub use lint::{run_lint, LintReport, Violation};
+pub use mock::MockBackend;
+pub use spec::{SpecComm, SpecEvent, SpecOp};
+pub use verify::{engine_schedule_runs, run_symbolic, verify_all, ScheduleRun, METHODS};

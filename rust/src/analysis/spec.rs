@@ -1,0 +1,464 @@
+//! [`SpecComm`]: the symbolic communicator behind the schedule verifier.
+//!
+//! A `SpecComm` implements [`Communicator`] but moves **no data**: every
+//! collective records one [`SpecEvent`] (op class, tag, payload lengths,
+//! blocking vs start/wait, metered flag, poison state) and returns a
+//! shape-correct zero payload. Driving a solver through `engine::drive`
+//! with one `SpecComm` per rank therefore produces the rank's *abstract
+//! schedule* — the exact op/tag/length sequence the thread transport
+//! would execute — which [`crate::analysis::checker`] then verifies for
+//! SPMD safety before any real transport runs it.
+//!
+//! Tag discipline mirrors [`ThreadComm`](crate::comm::ThreadComm): every
+//! collective *entry* (blocking call or `i*_start`, including metered
+//! diagnostic traffic and the P = 1 case) bumps the per-endpoint op
+//! sequence; waits complete an existing tag and bump nothing. The meter
+//! mirrors the thread transport too ([`expected_allreduce_sends`] for
+//! allreduce wire counts, `P − 1` messages per personalized exchange),
+//! so symbolic meters are comparable against `engine_meters.tsv`.
+
+use std::collections::VecDeque;
+
+use crate::comm::thread::expected_allreduce_sends;
+use crate::comm::{A2aState, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle};
+use crate::error::{Error, Result};
+
+/// The abstract operation one [`SpecEvent`] records.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpecOp {
+    /// Blocking allreduce of `len` words.
+    Allreduce {
+        /// Payload length in f64 words.
+        len: usize,
+    },
+    /// Non-blocking allreduce post of `len` words.
+    IAllreduceStart {
+        /// Payload length in f64 words.
+        len: usize,
+    },
+    /// Completion of the in-flight allreduce that carried this event's tag.
+    IAllreduceWait {
+        /// Payload length of the completed operation.
+        len: usize,
+    },
+    /// Broadcast of `len` words from `root`.
+    Broadcast {
+        /// Broadcasting rank.
+        root: usize,
+        /// Payload length in f64 words.
+        len: usize,
+    },
+    /// Blocking personalized all-to-all (with receive-side contracts).
+    AllToAll {
+        /// Words sent to each rank (index = destination, self included).
+        send_lens: Vec<usize>,
+        /// Words expected from each rank (index = source, self included).
+        recv_lens: Vec<usize>,
+    },
+    /// Non-blocking personalized all-to-all post.
+    IAllToAllStart {
+        /// Words sent to each rank.
+        send_lens: Vec<usize>,
+        /// Words expected from each rank.
+        recv_lens: Vec<usize>,
+    },
+    /// Completion of the in-flight all-to-all carrying this event's tag.
+    IAllToAllWait {
+        /// Total words received across sources.
+        recv_total: usize,
+    },
+    /// Barrier synchronization.
+    Barrier,
+    /// A collective refused because the group is poisoned.
+    Refused,
+}
+
+impl SpecOp {
+    /// Short class name for error messages and tokens.
+    pub fn class(&self) -> &'static str {
+        match self {
+            SpecOp::Allreduce { .. } => "allreduce",
+            SpecOp::IAllreduceStart { .. } => "iallreduce_start",
+            SpecOp::IAllreduceWait { .. } => "iallreduce_wait",
+            SpecOp::Broadcast { .. } => "broadcast",
+            SpecOp::AllToAll { .. } => "all_to_all",
+            SpecOp::IAllToAllStart { .. } => "iall_to_all_start",
+            SpecOp::IAllToAllWait { .. } => "iall_to_all_wait",
+            SpecOp::Barrier => "barrier",
+            SpecOp::Refused => "refused",
+        }
+    }
+}
+
+/// One entry of a rank's abstract event stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpecEvent {
+    /// Operation tag (the `ThreadComm` op-sequence number the transport
+    /// would assign). Waits carry the tag of the operation they complete.
+    pub tag: u64,
+    /// True when the event was issued inside a
+    /// [`metered_out`](crate::solvers::common::metered_out) scope —
+    /// diagnostic traffic excluded from meters and traces.
+    pub metered: bool,
+    /// What was issued.
+    pub op: SpecOp,
+}
+
+impl SpecEvent {
+    /// Compact fixture token, e.g. `A3/5` (blocking 5-word allreduce, tag
+    /// 3), `S4/44` / `W4` (non-blocking pair), `X7/24` / `Y8/96` / `Z8`
+    /// (all-to-all: blocking / start / wait, `/total-recv-words`),
+    /// `B2/12`, `R5` (barrier), with an `m` prefix for metered traffic.
+    /// All-to-all send lengths are rank-dependent (Lemma 3 load
+    /// imbalance) and deliberately absent — tokens must be identical on
+    /// every rank; cross-rank send/recv consistency is the checker's job.
+    pub fn token(&self) -> String {
+        let m = if self.metered { "m" } else { "" };
+        match &self.op {
+            SpecOp::Allreduce { len } => format!("{m}A{}/{len}", self.tag),
+            SpecOp::IAllreduceStart { len } => format!("{m}S{}/{len}", self.tag),
+            SpecOp::IAllreduceWait { .. } => format!("{m}W{}", self.tag),
+            SpecOp::Broadcast { root, len } => format!("{m}B{}/{root}/{len}", self.tag),
+            SpecOp::AllToAll { recv_lens, .. } => {
+                format!("{m}X{}/{}", self.tag, recv_lens.iter().sum::<usize>())
+            }
+            SpecOp::IAllToAllStart { recv_lens, .. } => {
+                format!("{m}Y{}/{}", self.tag, recv_lens.iter().sum::<usize>())
+            }
+            SpecOp::IAllToAllWait { .. } => format!("{m}Z{}", self.tag),
+            SpecOp::Barrier => format!("{m}R{}", self.tag),
+            SpecOp::Refused => format!("{m}P{}", self.tag),
+        }
+    }
+}
+
+/// Symbolic communicator: one per (virtual) rank. Ranks run sequentially
+/// in the same thread — legal because no event depends on peer data.
+#[derive(Debug)]
+pub struct SpecComm {
+    rank: usize,
+    size: usize,
+    op_seq: u64,
+    meter: CostMeter,
+    events: Vec<SpecEvent>,
+    /// In-flight allreduces, FIFO: (tag, len).
+    pending_ar: VecDeque<(u64, usize)>,
+    /// In-flight all-to-alls, FIFO: (tag, recv_lens).
+    pending_a2a: VecDeque<(u64, Vec<usize>)>,
+    poisoned: bool,
+    /// Fault injection: when set, `begin_op` stops advancing the op
+    /// sequence, so every subsequent collective reuses the current tag —
+    /// the aliasing scenario invariant (c) must catch.
+    freeze_tags: bool,
+    /// Fault injection: constant added to every issued tag, used to
+    /// simulate a rank whose tag stream diverged from its peers.
+    tag_skew: u64,
+}
+
+impl SpecComm {
+    /// A fresh symbolic endpoint for `rank` of `size`.
+    pub fn new(rank: usize, size: usize) -> Self {
+        assert!(size > 0 && rank < size, "rank {rank} outside group of {size}");
+        SpecComm {
+            rank,
+            size,
+            op_seq: 0,
+            meter: CostMeter::default(),
+            events: Vec::new(),
+            pending_ar: VecDeque::new(),
+            pending_a2a: VecDeque::new(),
+            poisoned: false,
+            freeze_tags: false,
+            tag_skew: 0,
+        }
+    }
+
+    /// The recorded event stream so far.
+    pub fn events(&self) -> &[SpecEvent] {
+        &self.events
+    }
+
+    /// Consume the endpoint, returning its full event stream.
+    pub fn into_events(self) -> Vec<SpecEvent> {
+        self.events
+    }
+
+    /// Fixture-token rendering of the whole stream.
+    pub fn tokens(&self) -> Vec<String> {
+        self.events.iter().map(SpecEvent::token).collect()
+    }
+
+    /// Fault injection: freeze the tag sequence so later collectives
+    /// alias the current tag (exercises checker invariant (c)).
+    pub fn set_freeze_tags(&mut self, freeze: bool) {
+        self.freeze_tags = freeze;
+    }
+
+    /// Fault injection: skew every subsequently issued tag by `skew`
+    /// (exercises the cross-rank divergence check, invariant (a)).
+    pub fn set_tag_skew(&mut self, skew: u64) {
+        self.tag_skew = skew;
+    }
+
+    /// Poison the endpoint: every later collective records a `Refused`
+    /// event and errors, mirroring the thread transport's sticky group
+    /// poison. Returns the error the refusing collective would surface.
+    pub fn poison(&mut self, msg: &str) -> Error {
+        self.poisoned = true;
+        Error::Comm(format!("group poisoned: {msg}"))
+    }
+
+    /// Mirror of `ThreadComm::begin_op`: every collective entry (blocking
+    /// or start, metered or not, any P) takes the next tag.
+    fn begin_op(&mut self) -> u64 {
+        if !self.freeze_tags {
+            self.op_seq += 1;
+        }
+        self.op_seq + self.tag_skew
+    }
+
+    fn push(&mut self, tag: u64, op: SpecOp) {
+        self.events.push(SpecEvent {
+            tag,
+            metered: crate::trace::paused(),
+            op,
+        });
+    }
+
+    /// Record a refused collective and return the sticky poison error.
+    fn refuse(&mut self, what: &'static str) -> Error {
+        let tag = self.op_seq + self.tag_skew;
+        self.push(tag, SpecOp::Refused);
+        Error::Comm(format!(
+            "group poisoned: rank {} refused {what} (endpoint poisoned earlier)",
+            self.rank
+        ))
+    }
+
+    fn meter_allreduce_entry(&mut self, len: usize) {
+        self.meter.allreduces += 1;
+        if self.size > 1 {
+            let (msgs, words) = expected_allreduce_sends(self.size, self.rank, len);
+            self.meter.msgs += msgs;
+            self.meter.words += words;
+            self.meter.recv_msgs += msgs;
+            self.meter.recv_words += words;
+        }
+    }
+
+    fn meter_a2a_entry(&mut self, send_lens: &[usize], recv_lens: &[usize]) {
+        self.meter.all_to_alls += 1;
+        if self.size > 1 {
+            self.meter.msgs += (self.size - 1) as u64;
+            self.meter.recv_msgs += (self.size - 1) as u64;
+            for (q, &len) in send_lens.iter().enumerate() {
+                if q != self.rank {
+                    self.meter.words += len as u64;
+                }
+            }
+            for (q, &len) in recv_lens.iter().enumerate() {
+                if q != self.rank {
+                    self.meter.recv_words += len as u64;
+                }
+            }
+        }
+    }
+}
+
+impl Communicator for SpecComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()> {
+        if self.poisoned {
+            return Err(self.refuse("allreduce_sum"));
+        }
+        let tag = self.begin_op();
+        self.meter_allreduce_entry(buf.len());
+        self.push(tag, SpecOp::Allreduce { len: buf.len() });
+        // Identity reduction: the caller's local contribution stands in
+        // for the group sum — values never influence the schedule.
+        Ok(())
+    }
+
+    fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
+        if self.poisoned {
+            return Err(self.refuse("iallreduce_start"));
+        }
+        let tag = self.begin_op();
+        self.meter_allreduce_entry(buf.len());
+        self.push(tag, SpecOp::IAllreduceStart { len: buf.len() });
+        self.pending_ar.push_back((tag, buf.len()));
+        Ok(ReduceHandle {
+            buf,
+            state: HandleState::Done,
+        })
+    }
+
+    fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>> {
+        if self.poisoned {
+            return Err(self.refuse("iallreduce_wait"));
+        }
+        let Some((tag, len)) = self.pending_ar.pop_front() else {
+            return Err(Error::Comm(format!(
+                "schedule violation: rank {} waited on an allreduce with none in flight",
+                self.rank
+            )));
+        };
+        self.meter.collective_waits += 1;
+        self.push(tag, SpecOp::IAllreduceWait { len });
+        Ok(handle.buf)
+    }
+
+    fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
+        if self.poisoned {
+            return Err(self.refuse("broadcast"));
+        }
+        let tag = self.begin_op();
+        self.push(
+            tag,
+            SpecOp::Broadcast {
+                root,
+                len: buf.len(),
+            },
+        );
+        Ok(())
+    }
+
+    fn all_to_all(&mut self, send: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        if self.poisoned {
+            return Err(self.refuse("all_to_all"));
+        }
+        if send.len() != self.size {
+            return Err(self.poison(&format!(
+                "all_to_all: rank {} supplied {} send buffers for {} ranks",
+                self.rank,
+                send.len(),
+                self.size
+            )));
+        }
+        // No receive-side contract: symbolically echo the send shape
+        // (the self-exchange identity), recording it as both directions.
+        let lens: Vec<usize> = send.iter().map(Vec::len).collect();
+        let tag = self.begin_op();
+        self.meter_a2a_entry(&lens, &lens);
+        self.push(
+            tag,
+            SpecOp::AllToAll {
+                send_lens: lens.clone(),
+                recv_lens: lens,
+            },
+        );
+        Ok(send)
+    }
+
+    fn all_to_all_expect(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        if self.poisoned {
+            return Err(self.refuse("all_to_all_expect"));
+        }
+        if send.len() != self.size || recv_lens.len() != self.size {
+            return Err(self.poison(&format!(
+                "all_to_all_expect: rank {} supplied {} send buffers / {} receive \
+                 lengths for {} ranks",
+                self.rank,
+                send.len(),
+                recv_lens.len(),
+                self.size
+            )));
+        }
+        let send_lens: Vec<usize> = send.iter().map(Vec::len).collect();
+        let tag = self.begin_op();
+        self.meter_a2a_entry(&send_lens, recv_lens);
+        self.push(
+            tag,
+            SpecOp::AllToAll {
+                send_lens,
+                recv_lens: recv_lens.to_vec(),
+            },
+        );
+        // Shape-correct zero payloads honoring the receive contract (the
+        // default trait impl would echo the sends and fail its own
+        // length validation).
+        Ok(recv_lens.iter().map(|&l| vec![0.0; l]).collect())
+    }
+
+    fn iall_to_all_start(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<AllToAllHandle> {
+        if self.poisoned {
+            return Err(self.refuse("iall_to_all_start"));
+        }
+        if send.len() != self.size || recv_lens.len() != self.size {
+            return Err(self.poison(&format!(
+                "iall_to_all_start: rank {} supplied {} send buffers / {} receive \
+                 lengths for {} ranks",
+                self.rank,
+                send.len(),
+                recv_lens.len(),
+                self.size
+            )));
+        }
+        let send_lens: Vec<usize> = send.iter().map(Vec::len).collect();
+        let tag = self.begin_op();
+        self.meter_a2a_entry(&send_lens, recv_lens);
+        self.push(
+            tag,
+            SpecOp::IAllToAllStart {
+                send_lens,
+                recv_lens: recv_lens.to_vec(),
+            },
+        );
+        self.pending_a2a.push_back((tag, recv_lens.to_vec()));
+        Ok(AllToAllHandle {
+            state: A2aState::Ready(Vec::new()),
+        })
+    }
+
+    fn iall_to_all_wait(&mut self, _handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
+        if self.poisoned {
+            return Err(self.refuse("iall_to_all_wait"));
+        }
+        let Some((tag, recv_lens)) = self.pending_a2a.pop_front() else {
+            return Err(Error::Comm(format!(
+                "schedule violation: rank {} waited on an all-to-all with none in flight",
+                self.rank
+            )));
+        };
+        self.meter.collective_waits += 1;
+        self.push(
+            tag,
+            SpecOp::IAllToAllWait {
+                recv_total: recv_lens.iter().sum(),
+            },
+        );
+        Ok(recv_lens.iter().map(|&l| vec![0.0; l]).collect())
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        if self.poisoned {
+            return Err(self.refuse("barrier"));
+        }
+        let tag = self.begin_op();
+        self.push(tag, SpecOp::Barrier);
+        Ok(())
+    }
+
+    fn meter(&self) -> &CostMeter {
+        &self.meter
+    }
+
+    fn meter_mut(&mut self) -> &mut CostMeter {
+        &mut self.meter
+    }
+}

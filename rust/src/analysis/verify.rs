@@ -1,0 +1,300 @@
+//! Symbolic schedule extraction and verification for the solver suite.
+//!
+//! [`run_symbolic`] drives one solver configuration through
+//! `engine::drive` with a [`SpecComm`] per rank and the zero-fill
+//! [`MockBackend`] — ranks execute *sequentially in one thread*, which is
+//! sound precisely because a `SpecComm` never depends on peer data. The
+//! result is each rank's abstract collective schedule, checkable by
+//! [`check_streams`](crate::analysis::checker::check_streams) without a
+//! transport, a scheduler, or any risk of an actual deadlock.
+//!
+//! [`verify_all`] sweeps every method over {blocking, overlap} ×
+//! P ∈ {1, 3, 4} (plus the early-tolerance-stop drain paths) and checks
+//! each; [`engine_schedule_runs`] reproduces the exact 48-config matrix
+//! of `rust/tests/engine_equivalence.rs` so the per-rank schedules can be
+//! pinned as the committed fixture
+//! `rust/tests/fixtures/engine_schedules.tsv`.
+//!
+//! The symbolic runs set `track_gram_cond = false` where the dynamic
+//! matrix uses `true`: condition tracking is a rank-local eigensolve with
+//! no collectives (schedule-invariant), and the mock backend's zero Gram
+//! would make its NaN handling the test subject instead of the schedule.
+
+use crate::analysis::checker::check_streams;
+use crate::analysis::mock::MockBackend;
+use crate::analysis::spec::{SpecComm, SpecEvent};
+use crate::comm::{Communicator, CostMeter};
+use crate::coordinator::{partition_dual, partition_primal, partition_rows};
+use crate::error::{Error, Result};
+use crate::matrix::io::Dataset;
+use crate::matrix::{DenseMatrix, Matrix};
+use crate::metrics::Reference;
+use crate::prox::Reg;
+use crate::solvers::cocoa::CocoaOpts;
+use crate::solvers::SolverOpts;
+
+/// The solver configurations the verifier understands, by fixture name:
+/// `bcd`, `bdcd`, `bcdrow`, `cocoa`, `prox_bcd`, `prox_bdcd`.
+pub const METHODS: [&str; 6] = ["bcd", "bdcd", "bcdrow", "cocoa", "prox_bcd", "prox_bdcd"];
+
+/// Matrix constants shared with `rust/tests/engine_equivalence.rs` — the
+/// fixture schedules are only meaningful against that exact toy problem.
+const LAM: f64 = 0.2;
+const ITERS: usize = 16;
+const SEED: u64 = 7;
+const B: usize = 2;
+
+/// One symbolic run: the per-rank event streams and meters of a solver
+/// configuration, plus the fixture key that identifies it.
+#[derive(Clone, Debug)]
+pub struct ScheduleRun {
+    /// Fixture method name (one of [`METHODS`]).
+    pub method: &'static str,
+    /// Fixture `s` column (`local_iters` for cocoa — wire-invariant).
+    pub s: usize,
+    /// Overlap schedule?
+    pub overlap: bool,
+    /// Rank count.
+    pub p: usize,
+    /// `streams[r]` = rank r's abstract event sequence.
+    pub streams: Vec<Vec<SpecEvent>>,
+    /// `meters[r]` = rank r's symbolic cost meter.
+    pub meters: Vec<CostMeter>,
+}
+
+impl ScheduleRun {
+    /// Rank-0 stream as fixture tokens.
+    pub fn rank0_tokens(&self) -> Vec<String> {
+        self.streams[0].iter().map(SpecEvent::token).collect()
+    }
+}
+
+/// The d=12, n=48 toy problem of `rust/tests/engine_equivalence.rs`
+/// (xorshift64 fill, planted 3-sparse `w*`). Values never influence a
+/// schedule, but shapes (n_loc, d_loc, recv contracts) do — so the
+/// symbolic runs use the exact dataset the dynamic matrix pins.
+pub fn toy_dataset() -> Dataset {
+    let (d, n) = (12usize, 48usize);
+    let mut st = 0x5EED5EEDu64;
+    let data: Vec<f64> = (0..d * n)
+        .map(|_| {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            (st as f64 / u64::MAX as f64) - 0.5
+        })
+        .collect();
+    let x = Matrix::Dense(DenseMatrix::from_vec(d, n, data));
+    let mut y = vec![0.0; n];
+    let mut w_star = vec![0.0; d];
+    w_star[0] = 1.5;
+    w_star[d / 2] = -2.0;
+    w_star[d - 1] = 0.75;
+    if let Err(e) = x.matvec_t(&w_star, &mut y) {
+        // Unreachable: shapes are constants; keep the path panic-free.
+        debug_assert!(false, "toy matvec failed: {e}");
+    }
+    Dataset {
+        name: "schedule-verify".into(),
+        x,
+        y,
+    }
+}
+
+/// Dummy reference: triggers the same record schedule as a CG-computed
+/// one (the record path branches on *presence*, never on values).
+fn dummy_reference(d: usize) -> Reference {
+    Reference {
+        w_opt: vec![1.0; d],
+        f_opt: 1.0,
+    }
+}
+
+fn solver_opts(method: &'static str, s: usize, overlap: bool, tol: Option<f64>) -> SolverOpts {
+    let reg = match method {
+        "prox_bcd" | "prox_bdcd" => Reg::L1,
+        _ => Reg::L2,
+    };
+    let mut b = SolverOpts::builder()
+        .b(B)
+        .s(s)
+        .lam(LAM)
+        .iters(ITERS)
+        .seed(SEED)
+        .record_every(4)
+        .track_gram_cond(false)
+        .overlap(overlap)
+        .reg(reg);
+    if let Some(t) = tol {
+        b = b.tol(t);
+    }
+    b.build()
+}
+
+/// Drive one configuration symbolically: one [`SpecComm`] per rank, ranks
+/// in sequence, mock compute. Returns the per-rank streams and meters.
+///
+/// `tol` enables the early-tolerance-stop drain path (requires a
+/// reference, so it applies to the non-prox methods only).
+pub fn run_symbolic(
+    method: &'static str,
+    s: usize,
+    overlap: bool,
+    p: usize,
+    tol: Option<f64>,
+) -> Result<ScheduleRun> {
+    let ds = toy_dataset();
+    let reference = dummy_reference(ds.d());
+    let n = ds.n();
+    let mut streams = Vec::with_capacity(p);
+    let mut meters = Vec::with_capacity(p);
+    for rank in 0..p {
+        let mut comm = SpecComm::new(rank, p);
+        let mut be = MockBackend::new();
+        match method {
+            "bcd" | "prox_bcd" => {
+                let shards = partition_primal(&ds, p)?;
+                let sh = &shards[rank];
+                let opts = solver_opts(method, s, overlap, tol);
+                let rref = (method == "bcd").then_some(&reference);
+                crate::solvers::bcd::run(&sh.a_loc, &sh.y_loc, n, &opts, rref, &mut comm, &mut be)?;
+            }
+            "bdcd" | "prox_bdcd" => {
+                let shards = partition_dual(&ds, p)?;
+                let sh = &shards[rank];
+                let opts = solver_opts(method, s, overlap, tol);
+                let rref = (method == "bdcd").then_some(&reference);
+                crate::solvers::bdcd::run(
+                    &sh.a_loc,
+                    &sh.y,
+                    sh.d_global,
+                    sh.d_offset,
+                    &opts,
+                    rref,
+                    &mut comm,
+                    &mut be,
+                )?;
+            }
+            "bcdrow" => {
+                let shards = partition_rows(&ds, p)?;
+                let sh = &shards[rank];
+                let opts = solver_opts(method, s, overlap, tol);
+                crate::solvers::bcd_row::run(
+                    &sh.x_rows,
+                    &sh.y_loc,
+                    sh.d_global,
+                    sh.d_offset,
+                    &opts,
+                    Some(&reference),
+                    &mut comm,
+                    &mut be,
+                )?;
+            }
+            "cocoa" => {
+                let shards = partition_primal(&ds, p)?;
+                let sh = &shards[rank];
+                let copts = CocoaOpts {
+                    lam: LAM,
+                    rounds: ITERS,
+                    local_iters: s,
+                    seed: SEED,
+                    record_every: 4,
+                    overlap,
+                };
+                crate::solvers::cocoa::run(
+                    &sh.a_loc,
+                    &sh.y_loc,
+                    n,
+                    &copts,
+                    Some(&reference),
+                    &mut comm,
+                )?;
+            }
+            other => {
+                return Err(Error::InvalidArg(format!(
+                    "run_symbolic: unknown method `{other}` (expected one of {METHODS:?})"
+                )))
+            }
+        }
+        meters.push(*comm.meter());
+        streams.push(comm.into_events());
+    }
+    Ok(ScheduleRun {
+        method,
+        s,
+        overlap,
+        p,
+        streams,
+        meters,
+    })
+}
+
+/// Fixture `s`-axis per method (`local_iters` for cocoa), matching
+/// `rust/tests/engine_equivalence.rs`.
+pub fn s_axis(method: &str) -> [usize; 2] {
+    if method == "cocoa" {
+        [2, 8]
+    } else {
+        [1, 4]
+    }
+}
+
+/// The exact 48-config matrix of `engine_equivalence.rs`: 6 methods ×
+/// s-axis × {blocking, overlap} × P ∈ {1, 4}, in fixture row order.
+pub fn engine_schedule_runs() -> Result<Vec<ScheduleRun>> {
+    let mut runs = Vec::with_capacity(48);
+    for method in METHODS {
+        for s in s_axis(method) {
+            for overlap in [false, true] {
+                for p in [1usize, 4] {
+                    runs.push(run_symbolic(method, s, overlap, p, None)?);
+                }
+            }
+        }
+    }
+    Ok(runs)
+}
+
+/// Sweep every method × s-axis × {blocking, overlap} × P ∈ {1, 3, 4},
+/// plus the early-tolerance-stop drain paths (matched prefetch pipeline
+/// and the row layout's non-pipelined overlap), and run
+/// [`check_streams`] on each. Returns the number of configurations
+/// verified; the first violation aborts with the checker's diagnosis.
+///
+/// P = 3 exercises the non-power-of-two allreduce fold/unfold, whose
+/// wire counts are rank-dependent — lockstep of op/tag/length streams
+/// must hold regardless.
+pub fn verify_all() -> Result<usize> {
+    let mut verified = 0usize;
+    for method in METHODS {
+        for s in s_axis(method) {
+            for overlap in [false, true] {
+                for p in [1usize, 3, 4] {
+                    let run = run_symbolic(method, s, overlap, p, None)?;
+                    check_streams(&run.streams).map_err(|e| {
+                        annotate(e, method, s, overlap, p, "steady")
+                    })?;
+                    verified += 1;
+                }
+            }
+        }
+    }
+    // Early-tolerance-stop drain paths: an infinite tolerance stops at
+    // the first recorded boundary, exercising pipeline teardown (matched
+    // prefetch look-ahead; bcdrow falls back to non-pipelined overlap
+    // when a tolerance is set, draining its posted exchange in-loop).
+    for method in ["bcd", "bdcd", "bcdrow"] {
+        for p in [1usize, 3, 4] {
+            let run = run_symbolic(method, 2, true, p, Some(f64::INFINITY))?;
+            check_streams(&run.streams).map_err(|e| annotate(e, method, 2, true, p, "drain"))?;
+            verified += 1;
+        }
+    }
+    Ok(verified)
+}
+
+fn annotate(e: Error, method: &str, s: usize, overlap: bool, p: usize, phase: &str) -> Error {
+    Error::Comm(format!(
+        "[{method} s={s} overlap={overlap} p={p} {phase}] {e}"
+    ))
+}

@@ -1,0 +1,33 @@
+//! `ca_lint` — run the project's SPMD hygiene lint from the command line.
+//!
+//! Usage: `cargo run --bin ca_lint [src-root]` (default `rust/src`).
+//! Exits 0 when clean, 1 on violations, 2 on IO failure — CI runs it as
+//! a gating step, and `rust/tests/analysis.rs` runs the same pass as the
+//! `lint_is_clean_and_allowlist_is_frozen` gate test.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "rust/src".to_string());
+    match cabcd::analysis::run_lint(Path::new(&root)) {
+        Ok(report) => {
+            print!("{report}");
+            if report.is_clean() {
+                ExitCode::SUCCESS
+            } else {
+                eprintln!(
+                    "ca_lint: FAIL — fix the site(s) or re-audit ALLOW in \
+                     rust/src/analysis/lint.rs (counts ratchet both ways)"
+                );
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("ca_lint: cannot scan {root}: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

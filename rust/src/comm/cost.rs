@@ -33,11 +33,13 @@ pub struct CostMeter {
 }
 
 impl CostMeter {
+    /// Count one outbound point-to-point message of `words` payload.
     pub fn record_send(&mut self, words: usize) {
         self.msgs += 1;
         self.words += words as u64;
     }
 
+    /// Count one inbound point-to-point message of `words` payload.
     pub fn record_recv(&mut self, words: usize) {
         self.recv_msgs += 1;
         self.recv_words += words as u64;

@@ -1,3 +1,4 @@
+#![warn(missing_docs)]
 //! In-process MPI-like communicator substrate.
 //!
 //! The paper's machine is a distributed-memory cluster programmed with MPI
@@ -124,6 +125,7 @@ impl ReduceHandle {
         self.buf.len()
     }
 
+    /// True when the in-flight payload has zero length.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
@@ -280,6 +282,7 @@ pub struct SerialComm {
 }
 
 impl SerialComm {
+    /// A fresh single-rank communicator with zeroed meters.
     pub fn new() -> Self {
         SerialComm::default()
     }

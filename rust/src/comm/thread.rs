@@ -241,7 +241,13 @@ impl ThreadComm {
         }
         let tag = self.cur_tag;
         if let Some(pos) = self.pending[src].iter().position(|(t, _)| *t == tag) {
-            let (_, v) = self.pending[src].remove(pos).expect("position just found");
+            let Some((_, v)) = self.pending[src].remove(pos) else {
+                // Unreachable (position was just found); poison instead
+                // of aborting so peers fail fast rather than hang.
+                return Err(self.poison(format!(
+                    "internal: stashed packet vanished (src {src}, tag {tag})"
+                )));
+            };
             self.meter.record_recv(v.len());
             return Ok(v);
         }

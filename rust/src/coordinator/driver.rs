@@ -64,7 +64,9 @@ pub struct ExperimentReport {
 pub fn load_dataset(cfg: &ExperimentConfig) -> Result<(Dataset, f64)> {
     match cfg.dataset.kind.as_str() {
         "synthetic" => {
-            let name = cfg.dataset.name.as_ref().unwrap();
+            let name = cfg.dataset.name.as_ref().ok_or_else(|| {
+                Error::Config("synthetic datasets need `dataset.name`".into())
+            })?;
             let mut spec: DatasetSpec = gen::spec_by_name(name)?;
             if cfg.dataset.scale > 1 {
                 let f = cfg.dataset.scale;
@@ -76,7 +78,9 @@ pub fn load_dataset(cfg: &ExperimentConfig) -> Result<(Dataset, f64)> {
             Ok((gen::generate(&spec, cfg.dataset.seed)?, lam))
         }
         "libsvm" => {
-            let path = cfg.dataset.path.as_ref().unwrap();
+            let path = cfg.dataset.path.as_ref().ok_or_else(|| {
+                Error::Config("libsvm datasets need `dataset.path`".into())
+            })?;
             let ds = read_libsvm(path, None)?;
             let lam = cfg
                 .solver
@@ -84,7 +88,9 @@ pub fn load_dataset(cfg: &ExperimentConfig) -> Result<(Dataset, f64)> {
                 .ok_or_else(|| Error::Config("libsvm datasets need explicit `lam`".into()))?;
             Ok((ds, lam))
         }
-        _ => unreachable!("validated"),
+        other => Err(Error::Config(format!(
+            "unknown dataset kind `{other}` (config validation should have caught this)"
+        ))),
     }
 }
 
@@ -92,7 +98,9 @@ fn make_backend(cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
     match cfg.run.backend.as_str() {
         "native" => Ok(Box::new(NativeBackend::new())),
         "xla" => Ok(Box::new(XlaBackend::new(&cfg.run.artifact_dir)?)),
-        _ => unreachable!("validated"),
+        other => Err(Error::Config(format!(
+            "unknown backend `{other}` (config validation should have caught this)"
+        ))),
     }
 }
 
@@ -192,7 +200,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
     let (history, meters, tracers) = collect(results)?;
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
 
-    let trace_summary = if tracing {
+    let trace_summary = if let Some(path) = cfg.run.trace.as_ref() {
         // Observer gate: every rank's span counts must agree exactly with
         // its CostMeter (one CollectiveStart per posted collective, one
         // CollectiveWait span per completion). A mismatch is an
@@ -205,7 +213,6 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
                 notes.push(note);
             }
         }
-        let path = cfg.run.trace.as_ref().unwrap();
         std::fs::write(path, trace::chrome_trace_json(&tracers))?;
         Some(TraceSummary::from_tracers(&tracers))
     } else {

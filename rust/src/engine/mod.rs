@@ -1,4 +1,4 @@
-#![warn(missing_docs)]
+#![deny(missing_docs)]
 //! Unified s-step solver engine: the [`Problem`]/[`Session`] API and the
 //! shared pipeline core every CA method runs through.
 //!
@@ -519,7 +519,9 @@ impl<'a, C: Communicator> Session<'a, C> {
                     n_global,
                 },
             ) => {
-                let be = backend.take().expect("backend checked above");
+                let be = backend.take().ok_or_else(|| {
+                    Error::InvalidArg(format!("Session needs .backend(…) for method {method}"))
+                })?;
                 if prox {
                     crate::prox::bcd::run(a_loc, y_loc, *n_global, opts, comm, be)
                         .map(Solution::Primal)
@@ -537,7 +539,9 @@ impl<'a, C: Communicator> Session<'a, C> {
                     d_offset,
                 },
             ) => {
-                let be = backend.take().expect("backend checked above");
+                let be = backend.take().ok_or_else(|| {
+                    Error::InvalidArg(format!("Session needs .backend(…) for method {method}"))
+                })?;
                 if prox {
                     crate::prox::bdcd::run(a_loc, y, *d_global, *d_offset, opts, comm, be)
                         .map(Solution::Dual)
@@ -564,7 +568,9 @@ impl<'a, C: Communicator> Session<'a, C> {
                     d_offset,
                 },
             ) => {
-                let be = backend.take().expect("backend checked above");
+                let be = backend.take().ok_or_else(|| {
+                    Error::InvalidArg(format!("Session needs .backend(…) for method {method}"))
+                })?;
                 bcd_row::engine_run(
                     x_rows,
                     y_loc,

@@ -29,6 +29,11 @@
 //!   loops that reuse the packed `[G|r]` collective path verbatim.
 //! * [`costmodel`] — the paper's analytic T = γF + αL + βW machine model
 //!   (Theorems 1–9, Figures 8–9).
+//! * [`analysis`] — static SPMD safety: a symbolic schedule verifier
+//!   (record every rank's abstract collective stream against a data-free
+//!   [`SpecComm`](analysis::SpecComm), then prove lockstep / handle
+//!   hygiene / tag uniqueness / poison domination) and the `ca_lint`
+//!   token-level hygiene pass.
 //! * [`matrix`], [`linalg`], [`partition`], [`sampling`] — the substrates:
 //!   dense/CSR matrices, LIBSVM IO, dataset-clone generation, small SPD
 //!   solves, TSQR, 1D layouts, shared-seed block sampling.
@@ -36,6 +41,7 @@
 //! Python/JAX appears **only at build time** (`make artifacts`); the binary
 //! is self-contained once `artifacts/` exists.
 
+pub mod analysis;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

@@ -306,7 +306,16 @@ impl ComputeBackend for XlaBackend {
                 .reshape(&[sb_art as i64, nloc_art as i64])?;
             let z_lit = xla::Literal::vec1(&z_chunk);
             self.executions += 1;
-            let exe = &self.rt.gram.get(&(sb_art, nloc_art)).unwrap().exe;
+            let exe = &self
+                .rt
+                .gram
+                .get(&(sb_art, nloc_art))
+                .ok_or_else(|| {
+                    Error::Xla(format!(
+                        "missing AOT gram artifact for (sb={sb_art}, n_loc={nloc_art})"
+                    ))
+                })?
+                .exe;
             let outs = run_tuple(exe, &[y_lit, z_lit])?;
             let gv = outs[0].to_vec::<f64>()?;
             let rv = outs[1].to_vec::<f64>()?;
@@ -346,7 +355,10 @@ impl ComputeBackend for XlaBackend {
             xla::Literal::from(inv_n),
         ];
         self.executions += 1;
-        let outs = run_tuple(&self.rt.inner.get(&(sa, ba)).unwrap().exe, &args)?;
+        let inner = self.rt.inner.get(&(sa, ba)).ok_or_else(|| {
+            Error::Xla(format!("missing AOT inner-solve artifact for (s={sa}, b={ba})"))
+        })?;
+        let outs = run_tuple(&inner.exe, &args)?;
         let d_p = outs[0].to_vec::<f64>()?;
         Ok(unpad_blocks(s, b, sa, ba, &d_p))
     }
@@ -378,7 +390,12 @@ impl ComputeBackend for XlaBackend {
             xla::Literal::from(inv_n),
         ];
         self.executions += 1;
-        let outs = run_tuple(&self.rt.dual_inner.get(&(sa, ba)).unwrap().exe, &args)?;
+        let dual = self.rt.dual_inner.get(&(sa, ba)).ok_or_else(|| {
+            Error::Xla(format!(
+                "missing AOT dual-inner-solve artifact for (s={sa}, b={ba})"
+            ))
+        })?;
+        let outs = run_tuple(&dual.exe, &args)?;
         let d_p = outs[0].to_vec::<f64>()?;
         Ok(unpad_blocks(s, b, sa, ba, &d_p))
     }
@@ -416,7 +433,16 @@ impl ComputeBackend for XlaBackend {
             let y_lit = xla::Literal::vec1(&y_chunk)
                 .reshape(&[sb_art as i64, nloc_art as i64])?;
             self.executions += 1;
-            let exe = &self.rt.alpha.get(&(sb_art, nloc_art)).unwrap().exe;
+            let exe = &self
+                .rt
+                .alpha
+                .get(&(sb_art, nloc_art))
+                .ok_or_else(|| {
+                    Error::Xla(format!(
+                        "missing AOT alpha-update artifact for (sb={sb_art}, n_loc={nloc_art})"
+                    ))
+                })?
+                .exe;
             let outs = run_tuple(exe, &[y_lit, d_lit.clone()])?;
             let av = outs[0].to_vec::<f64>()?;
             for (dst, &v) in acc[lo..hi].iter_mut().zip(&av[..w]) {

@@ -282,7 +282,11 @@ impl<'a> BcdRowStep<'a> {
     /// path meters the Lemma-3 load first, then exchanges.
     fn acquire_panel<C: Communicator>(&mut self, comm: &mut C, smp: &Sample) -> Result<()> {
         let received = if self.overlap {
-            let (k, handle) = self.pending.take().expect("exchange posted for iteration");
+            let (k, handle) = self.pending.take().ok_or_else(|| {
+                Error::Runtime(
+                    "bcd_row: overlap panel acquire found no posted exchange".into(),
+                )
+            })?;
             debug_assert_eq!(k, smp.k, "exchange/iteration mismatch");
             comm.iall_to_all_wait(handle)?
         } else {
@@ -336,12 +340,16 @@ impl<'a> BcdRowStep<'a> {
 /// Look up iteration `k`'s reassembled panel. A free function (not a
 /// method) so callers keep field-precise borrows: the panel reference
 /// pins only `y_cols` while the mutable backend call runs.
-fn find_panel(y_cols: &[(usize, Matrix)], k: usize) -> &Matrix {
-    &y_cols
+fn find_panel(y_cols: &[(usize, Matrix)], k: usize) -> Result<&Matrix> {
+    y_cols
         .iter()
         .find(|(kk, _)| *kk == k)
-        .expect("Y_cols panel present for iteration")
-        .1
+        .map(|(_, panel)| panel)
+        .ok_or_else(|| {
+            Error::Runtime(format!(
+                "bcd_row: Y_cols panel for iteration {k} missing (exchange never drained?)"
+            ))
+        })
 }
 
 impl<C: Communicator> CaStep<C> for BcdRowStep<'_> {
@@ -387,7 +395,7 @@ impl<C: Communicator> CaStep<C> for BcdRowStep<'_> {
             self.post_exchange(comm, &nxt)?;
             self.lookahead = Some(nxt);
         }
-        let panel = find_panel(&self.y_cols, smp.k);
+        let panel = find_panel(&self.y_cols, smp.k)?;
         self.backend.gram_only(panel, &self.all_idx, head)
     }
 
@@ -396,7 +404,7 @@ impl<C: Communicator> CaStep<C> for BcdRowStep<'_> {
         let sb = self.s * self.b;
         let (r_buf, w_buf) = tail.split_at_mut(sb);
         {
-            let panel = find_panel(&self.y_cols, smp.k);
+            let panel = find_panel(&self.y_cols, smp.k)?;
             self.backend
                 .resid_only(panel, &self.all_idx, &self.z, r_buf)?;
         }
@@ -419,7 +427,7 @@ impl<C: Communicator> CaStep<C> for BcdRowStep<'_> {
         let sb = self.s * self.b;
         let (r_buf, w_buf) = tail.split_at_mut(sb);
         {
-            let panel = find_panel(&self.y_cols, smp.k);
+            let panel = find_panel(&self.y_cols, smp.k)?;
             self.backend
                 .gram_resid(panel, &self.all_idx, &self.z, head, r_buf)?;
         }
@@ -460,7 +468,12 @@ impl<C: Communicator> CaStep<C> for BcdRowStep<'_> {
             .y_cols
             .iter()
             .position(|(kk, _)| *kk == smp.k)
-            .expect("panel present in apply");
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "bcd_row: panel for iteration {} missing in apply",
+                    smp.k
+                ))
+            })?;
         let (_, panel) = self.y_cols.swap_remove(pos);
         self.backend
             .alpha_update(&panel, &self.all_idx, deltas, &mut self.alpha_loc)?;

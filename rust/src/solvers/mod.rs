@@ -1,4 +1,4 @@
-#![warn(missing_docs)]
+#![deny(missing_docs)]
 //! The paper's algorithms, SPMD over a [`crate::comm::Communicator`].
 //!
 //! Every coordinate-descent loop runs through the shared pipeline core of

@@ -7,12 +7,16 @@ use crate::comm::CostMeter;
 /// Aggregate duration statistics for one [`SpanKind`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct KindStat {
+    /// Number of spans of this kind.
     pub count: u64,
+    /// Summed duration in nanoseconds.
     pub total_ns: u64,
+    /// Longest single span in nanoseconds.
     pub max_ns: u64,
 }
 
 impl KindStat {
+    /// Mean span duration in nanoseconds (0 when empty).
     pub fn mean_ns(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -30,10 +34,15 @@ impl KindStat {
 /// rank's wall time (scheduler gaps, span overhead, hidden work).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RankBreakdown {
+    /// Rank this breakdown describes.
     pub rank: u32,
+    /// Wall-clock extent of the rank timeline (first start to last end).
     pub wall_ns: u64,
+    /// Time inside compute-class spans.
     pub compute_ns: u64,
+    /// Time inside collective (wire) spans.
     pub wire_ns: u64,
+    /// Wall time covered by neither compute nor wire spans.
     pub idle_ns: u64,
 }
 
@@ -46,8 +55,11 @@ pub struct RankBreakdown {
 /// windows, so their efficiency is 0 by construction.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OverlapStat {
+    /// Number of start/wait pairs that entered the statistic.
     pub pairs: u64,
+    /// In-flight window time covered by local compute.
     pub covered_ns: u64,
+    /// In-flight window time left exposed (rank idle in `wait`).
     pub exposed_ns: u64,
 }
 
@@ -69,18 +81,26 @@ impl OverlapStat {
 /// printed by `hotpath_micro`.
 #[derive(Clone, Debug, Default)]
 pub struct TraceSummary {
+    /// Number of rank timelines summarized.
     pub ranks: usize,
+    /// Total retained spans across ranks.
     pub spans: u64,
+    /// Total ring-buffer overwrites across ranks.
     pub dropped: u64,
+    /// Total tracer allocation-tripwire count across ranks.
     pub trace_allocs: u64,
     /// Indexed parallel to [`SpanKind::ALL`].
     pub per_kind: [KindStat; 8],
+    /// Per-rank critical-path breakdowns, rank order.
     pub breakdown: Vec<RankBreakdown>,
+    /// Overlap statistics per collective class.
     pub overlap: OverlapStat,
     /// `CollectiveStart` span counts per class, summed over ranks — the
     /// quantities the cross-check compares to the meters.
     pub allreduce_starts: u64,
+    /// `CollectiveStart` spans of all-to-all class, for meter checks.
     pub all_to_all_starts: u64,
+    /// Total `CollectiveWait` spans, for meter checks.
     pub collective_wait_spans: u64,
 }
 
@@ -136,6 +156,7 @@ fn rank_overlap(spans: &[Span]) -> OverlapStat {
 }
 
 impl TraceSummary {
+    /// Build a summary from per-rank tracers (sorts spans by start).
     pub fn from_tracers(tracers: &[Tracer]) -> Self {
         let mut sum = TraceSummary {
             ranks: tracers.len(),
@@ -191,10 +212,12 @@ impl TraceSummary {
         sum
     }
 
+    /// Fraction of in-flight collective time hidden by compute, 0..=1.
     pub fn overlap_efficiency(&self) -> f64 {
         self.overlap.efficiency()
     }
 
+    /// Histogram entry for one span kind.
     pub fn kind_stat(&self, kind: SpanKind) -> KindStat {
         self.per_kind[kind_index(kind)]
     }

@@ -1,3 +1,4 @@
+#![warn(missing_docs)]
 //! Per-rank structured span tracing — the instrument behind the paper's
 //! time claim.
 //!
@@ -66,13 +67,21 @@ pub const DEFAULT_SPAN_CAPACITY: usize = 1 << 16;
 /// What a span measures. See the module-level taxonomy table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SpanKind {
+    /// Block sampling (`BlockSampler`) in `engine::drive`.
     Sample,
+    /// Local Gram / payload assembly.
     GramLocal,
+    /// Blocking-collective entry marker or `i*_start`.
     CollectiveStart,
+    /// Blocking protocol body or `i*_wait`.
     CollectiveWait,
+    /// Replicated s-step inner solve.
     InnerSolve,
+    /// Iterate update / `alpha_update`.
     Apply,
+    /// Backend prox kernel call (nested inside `InnerSolve`).
     ProxStep,
+    /// Convergence record (meter-excluded traffic).
     Record,
 }
 
@@ -89,6 +98,7 @@ impl SpanKind {
         SpanKind::Record,
     ];
 
+    /// Stable display name (histogram / JSON key).
     pub fn name(self) -> &'static str {
         match self {
             SpanKind::Sample => "Sample",
@@ -110,13 +120,18 @@ impl SpanKind {
 /// outstanding allreduce and one outstanding all-to-all (bcdrow).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OpClass {
+    /// Non-collective span.
     Compute,
+    /// Allreduce-family collective.
     Allreduce,
+    /// All-to-all-family collective.
     AllToAll,
+    /// Barrier collective.
     Barrier,
 }
 
 impl OpClass {
+    /// Stable display name used by exporters.
     pub fn name(self) -> &'static str {
         match self {
             OpClass::Compute => "compute",
@@ -132,19 +147,25 @@ impl OpClass {
 /// share a timeline.
 #[derive(Clone, Copy, Debug)]
 pub struct Span {
+    /// What the span measures.
     pub kind: SpanKind,
+    /// Collective family (`Compute` for everything else).
     pub op: OpClass,
     /// Collective op tag (`ThreadComm` op sequence) or outer-iteration
     /// index for compute spans — diagnostic only; pairing is FIFO.
     pub tag: u64,
+    /// Owning rank (tracer thread).
     pub rank: u32,
+    /// Start timestamp, ns since trace epoch.
     pub t_start: u64,
+    /// End timestamp, ns since trace epoch.
     pub t_end: u64,
     /// Payload words for collectives / payload length for compute spans.
     pub words: u64,
 }
 
 impl Span {
+    /// Span duration in nanoseconds (saturating).
     pub fn dur_ns(&self) -> u64 {
         self.t_end.saturating_sub(self.t_start)
     }
@@ -167,6 +188,7 @@ pub struct Tracer {
 }
 
 impl Tracer {
+    /// A ring-buffer tracer for `rank` retaining at most `capacity` spans.
     pub fn new(rank: usize, capacity: usize) -> Self {
         Tracer {
             rank: rank as u32,
@@ -178,14 +200,17 @@ impl Tracer {
         }
     }
 
+    /// Rank this tracer records for.
     pub fn rank(&self) -> u32 {
         self.rank
     }
 
+    /// Fixed ring capacity chosen at construction.
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Spans lost to ring overwrite.
     pub fn dropped(&self) -> u64 {
         self.dropped
     }
@@ -195,10 +220,12 @@ impl Tracer {
         self.trace_allocs
     }
 
+    /// Number of retained spans.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// True when no spans are retained.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
@@ -209,6 +236,7 @@ impl Tracer {
         &self.buf
     }
 
+    /// Append a span, overwriting the oldest once the ring is full.
     pub fn push(&mut self, span: Span) {
         let cap_before = self.buf.capacity();
         if self.buf.len() < self.cap {
@@ -307,6 +335,15 @@ pub fn pause() -> PauseGuard {
     PauseGuard
 }
 
+/// True while the current thread is inside a [`pause`] scope. The
+/// schedule verifier ([`crate::analysis`]) uses this to tag diagnostic
+/// collectives (record/`metered_out` traffic) in its symbolic event
+/// streams, mirroring how the tracer excludes them from spans.
+pub fn paused() -> bool {
+    PAUSE_DEPTH.with(|p| p.get() > 0)
+}
+
+/// RAII guard returned by [`pause`]; recording resumes when it drops.
 pub struct PauseGuard;
 
 impl Drop for PauseGuard {

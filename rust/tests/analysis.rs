@@ -1,0 +1,423 @@
+//! Static-analysis suite (PR 7): the symbolic SPMD schedule verifier and
+//! the project lint gate.
+//!
+//! * The verifier sweep proves every solver schedule (6 methods ×
+//!   {blocking, overlap} × P ∈ {1, 3, 4}, plus the early-tolerance-stop
+//!   drain paths) satisfies the checker's four invariants.
+//! * The 48-config matrix of `engine_equivalence.rs` is pinned, event by
+//!   event, to `fixtures/engine_schedules.tsv`, and the symbolic meters
+//!   are cross-checked against `fixtures/engine_meters.tsv`.
+//! * Seeded faults — a rank-divergent collective, a skipped wait, tag
+//!   aliasing, traffic after poison — must be *caught* with actionable
+//!   errors (the verifier's reason to exist).
+//! * The lint pass must be clean with its allowlist frozen at the
+//!   audited counts.
+
+use std::collections::HashMap;
+
+use cabcd::analysis::lint::ALLOW;
+use cabcd::analysis::{
+    check_streams, engine_schedule_runs, run_lint, verify_all, ScheduleRun, SpecComm, SpecEvent,
+    SpecOp,
+};
+use cabcd::comm::Communicator;
+use cabcd::engine::{drive, CaStep, Sample};
+use cabcd::error::Result;
+use cabcd::metrics::History;
+use cabcd::solvers::SolverOpts;
+
+// ---------------------------------------------------------------------------
+// Verifier sweep
+// ---------------------------------------------------------------------------
+
+#[test]
+fn verifier_passes_every_method_schedule_and_drain_path() {
+    // 6 methods x 2 s-values x {blocking, overlap} x P in {1,3,4} = 72
+    // steady configs, plus 3 drain methods x 3 P = 9 tolerance-stop runs.
+    let verified = verify_all().expect("symbolic schedule verification failed");
+    assert_eq!(verified, 81, "config sweep shrank — update the sweep or this count");
+}
+
+// ---------------------------------------------------------------------------
+// Fixture pinning: schedules and meters
+// ---------------------------------------------------------------------------
+
+struct MeterRow {
+    allreduces: u64,
+    all_to_alls: u64,
+    msgs: u64,
+    words: Option<u64>,
+    waits: u64,
+}
+
+fn fixture_key(method: &str, s: usize, overlap: bool, p: usize) -> String {
+    format!("{method}/s{s}/overlap{overlap}/p{p}")
+}
+
+fn load_meters() -> HashMap<String, MeterRow> {
+    let text = include_str!("fixtures/engine_meters.tsv");
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split('\t').collect();
+        assert_eq!(f.len(), 9, "meters fixture row: {line}");
+        let key = fixture_key(
+            f[0],
+            f[1].parse().unwrap(),
+            f[2] == "1",
+            f[3].parse().unwrap(),
+        );
+        out.insert(
+            key,
+            MeterRow {
+                allreduces: f[4].parse().unwrap(),
+                all_to_alls: f[5].parse().unwrap(),
+                msgs: f[6].parse().unwrap(),
+                words: if f[7] == "-" { None } else { Some(f[7].parse().unwrap()) },
+                waits: f[8].parse().unwrap(),
+            },
+        );
+    }
+    assert_eq!(out.len(), 48);
+    out
+}
+
+fn load_schedules() -> Vec<(String, usize, String)> {
+    let text = include_str!("fixtures/engine_schedules.tsv");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split('\t').collect();
+        assert_eq!(f.len(), 6, "schedules fixture row: {line}");
+        let key = fixture_key(
+            f[0],
+            f[1].parse().unwrap(),
+            f[2] == "true",
+            f[3].parse().unwrap(),
+        );
+        out.push((key, f[4].parse().unwrap(), f[5].to_string()));
+    }
+    assert_eq!(out.len(), 48);
+    out
+}
+
+/// Count a run's unmetered tokens per collective class; they must equal
+/// the meter counters (metered diagnostic traffic nets to zero through
+/// the `metered_out` snapshot/restore, so only solver traffic counts).
+fn token_counts(run: &ScheduleRun, rank: usize) -> (u64, u64, u64) {
+    let (mut ars, mut a2as, mut waits) = (0u64, 0u64, 0u64);
+    for e in &run.streams[rank] {
+        if e.metered {
+            continue;
+        }
+        match &e.op {
+            SpecOp::Allreduce { .. } | SpecOp::IAllreduceStart { .. } => ars += 1,
+            SpecOp::AllToAll { .. } | SpecOp::IAllToAllStart { .. } => a2as += 1,
+            SpecOp::IAllreduceWait { .. } | SpecOp::IAllToAllWait { .. } => waits += 1,
+            _ => {}
+        }
+    }
+    (ars, a2as, waits)
+}
+
+#[test]
+fn engine_schedules_match_fixture_and_meters() {
+    let runs = engine_schedule_runs().expect("symbolic runs failed");
+    assert_eq!(runs.len(), 48);
+    let schedules = load_schedules();
+    let meters = load_meters();
+
+    for (run, (key, n_events, events)) in runs.iter().zip(&schedules) {
+        let got_key = fixture_key(run.method, run.s, run.overlap, run.p);
+        assert_eq!(&got_key, key, "fixture row order diverged");
+
+        // Every rank's stream verifies and matches rank 0 (invariant (a)),
+        // so pinning rank 0 pins them all.
+        check_streams(&run.streams)
+            .unwrap_or_else(|e| panic!("[{key}] checker rejected engine schedule: {e}"));
+        let got = run.rank0_tokens().join(" ");
+        assert_eq!(
+            run.streams[0].len(),
+            *n_events,
+            "[{key}] event count: fixture {n_events}, got {} — stream:\n{got}",
+            run.streams[0].len(),
+        );
+        assert_eq!(
+            &got, events,
+            "[{key}] schedule drifted from fixture.\nexpected: {events}\ngot:      {got}"
+        );
+
+        // Meters: symbolic counters must match the engine_meters golden
+        // row on every rank (counts are rank-invariant; wire words for
+        // the row layout's exchange are not pinned there — '-').
+        let mrow = meters.get(key).unwrap_or_else(|| panic!("no meter row {key}"));
+        for (rank, m) in run.meters.iter().enumerate() {
+            assert_eq!(m.allreduces, mrow.allreduces, "[{key}] rank {rank} allreduces");
+            assert_eq!(m.all_to_alls, mrow.all_to_alls, "[{key}] rank {rank} all_to_alls");
+            assert_eq!(m.collective_waits, mrow.waits, "[{key}] rank {rank} waits");
+            assert_eq!(m.msgs, mrow.msgs, "[{key}] rank {rank} msgs");
+            if let Some(words) = mrow.words {
+                assert_eq!(m.words, words, "[{key}] rank {rank} words");
+            }
+
+            // Token-level cross-check: unmetered events are the meter.
+            let (ars, a2as, waits) = token_counts(run, rank);
+            assert_eq!(ars, m.allreduces, "[{key}] rank {rank} AR tokens vs meter");
+            assert_eq!(a2as, m.all_to_alls, "[{key}] rank {rank} a2a tokens vs meter");
+            assert_eq!(waits, m.collective_waits, "[{key}] rank {rank} wait tokens vs meter");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seeded faults: the verifier must catch them, with actionable errors
+// ---------------------------------------------------------------------------
+
+/// Minimal CaStep whose only purpose is to inject schedule faults.
+struct ToyStep {
+    rank: usize,
+    fault: Fault,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Fault {
+    None,
+    /// Rank 1 issues an extra collective inside `record` — the classic
+    /// "metric code communicates on one rank only" deadlock.
+    DivergentRecord,
+    /// Every rank posts a non-blocking reduction it never waits for.
+    SkippedWait,
+}
+
+impl<C: Communicator> CaStep<C> for ToyStep {
+    fn payload_split(&self) -> (usize, usize) {
+        (2, 2)
+    }
+
+    fn sample(&mut self, _comm: &mut C, k: usize) -> Result<Sample> {
+        Ok(Sample::empty(k))
+    }
+
+    fn local_gram(&mut self, _comm: &mut C, _smp: &Sample, head: &mut [f64]) -> Result<()> {
+        head.fill(0.0);
+        Ok(())
+    }
+
+    fn local_state(&mut self, _smp: &Sample, tail: &mut [f64]) -> Result<()> {
+        tail.fill(0.0);
+        Ok(())
+    }
+
+    fn local_payload(
+        &mut self,
+        comm: &mut C,
+        smp: &Sample,
+        head: &mut [f64],
+        tail: &mut [f64],
+    ) -> Result<()> {
+        if self.fault == Fault::SkippedWait && smp.k == 1 {
+            // Post and drop: the handle never reaches a wait.
+            let _ = comm.iallreduce_start(vec![0.0])?;
+        }
+        head.fill(0.0);
+        tail.fill(0.0);
+        Ok(())
+    }
+
+    fn hidden_work(&mut self, _smp: &Sample) -> Result<()> {
+        Ok(())
+    }
+
+    fn inner_solve(&mut self, _smp: &Sample, _head: &[f64], _tail: &[f64]) -> Result<Vec<f64>> {
+        Ok(Vec::new()) // identity solve: apply the payload tail directly
+    }
+
+    fn apply(&mut self, _smp: &Sample, _deltas: &[f64]) -> Result<()> {
+        Ok(())
+    }
+
+    fn record(&mut self, comm: &mut C, _history: &mut History, h_now: usize) -> Result<()> {
+        if self.fault == Fault::DivergentRecord && self.rank == 1 && h_now == 4 {
+            let mut extra = [0.0];
+            comm.allreduce_sum(&mut extra)?;
+        }
+        Ok(())
+    }
+}
+
+fn drive_toy(fault: Fault, p: usize) -> Vec<Vec<SpecEvent>> {
+    let opts = SolverOpts::builder()
+        .b(1)
+        .s(1)
+        .iters(4)
+        .record_every(4)
+        .build();
+    let mut streams = Vec::new();
+    for rank in 0..p {
+        let mut comm = SpecComm::new(rank, p);
+        let mut step = ToyStep { rank, fault };
+        let mut history = History::default();
+        drive(&mut step, &opts, &mut comm, &mut history).expect("toy drive failed");
+        streams.push(comm.into_events());
+    }
+    streams
+}
+
+#[test]
+fn clean_toy_step_verifies() {
+    check_streams(&drive_toy(Fault::None, 3)).expect("clean toy schedule must verify");
+}
+
+#[test]
+fn rank_divergent_collective_is_caught() {
+    let err = check_streams(&drive_toy(Fault::DivergentRecord, 3))
+        .expect_err("divergent record must be caught");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("schedule violation") && msg.contains("rank"),
+        "diagnosis must name the violation and the rank: {msg}"
+    );
+}
+
+#[test]
+fn skipped_wait_is_caught() {
+    let err =
+        check_streams(&drive_toy(Fault::SkippedWait, 2)).expect_err("orphan start must be caught");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("still in flight") && msg.contains("iallreduce_wait"),
+        "diagnosis must point at the missing wait: {msg}"
+    );
+}
+
+#[test]
+fn tag_aliasing_is_caught() {
+    let mut c = SpecComm::new(0, 2);
+    let h1 = c.iallreduce_start(vec![0.0; 3]).unwrap();
+    c.set_freeze_tags(true); // next entry reuses the in-flight tag
+    let h2 = c.iallreduce_start(vec![0.0; 3]).unwrap();
+    let _ = c.iallreduce_wait(h1).unwrap();
+    let _ = c.iallreduce_wait(h2).unwrap();
+    let err = check_streams(&[c.into_events()]).expect_err("tag reuse must be caught");
+    assert!(
+        err.to_string().contains("tag aliasing"),
+        "diagnosis must name the aliased tag: {err}"
+    );
+}
+
+#[test]
+fn rank_divergent_tags_are_caught() {
+    let mut streams = Vec::new();
+    for rank in 0..2 {
+        let mut c = SpecComm::new(rank, 2);
+        if rank == 1 {
+            c.set_tag_skew(7); // rank 1's tag stream diverged
+        }
+        c.allreduce_sum(&mut [0.0; 4]).unwrap();
+        streams.push(c.into_events());
+    }
+    let err = check_streams(&streams).expect_err("tag divergence must be caught");
+    assert!(
+        err.to_string().contains("rank divergence"),
+        "diagnosis must show both sides: {err}"
+    );
+}
+
+#[test]
+fn traffic_after_poison_is_caught() {
+    let stream = vec![
+        SpecEvent {
+            tag: 3,
+            metered: false,
+            op: SpecOp::Refused,
+        },
+        SpecEvent {
+            tag: 4,
+            metered: false,
+            op: SpecOp::Allreduce { len: 2 },
+        },
+    ];
+    let err = check_streams(&[stream]).expect_err("post-poison traffic must be caught");
+    assert!(
+        err.to_string().contains("poisoned"),
+        "diagnosis must name the poison position: {err}"
+    );
+}
+
+#[test]
+fn poisoned_endpoint_refuses_and_refusals_verify() {
+    let mut c = SpecComm::new(0, 2);
+    c.allreduce_sum(&mut [0.0]).unwrap();
+    let _ = c.poison("seeded fault");
+    assert!(c.allreduce_sum(&mut [0.0]).is_err(), "poisoned endpoint must refuse");
+    assert!(c.barrier().is_err());
+    // A stream that refuses everything after the poison is exactly the
+    // fail-fast behaviour invariant (d) demands.
+    check_streams(&[c.into_events()]).expect("all-refused tail must verify");
+}
+
+#[test]
+fn wait_without_start_is_caught() {
+    let stream = vec![SpecEvent {
+        tag: 1,
+        metered: false,
+        op: SpecOp::IAllreduceWait { len: 2 },
+    }];
+    let err = check_streams(&[stream]).expect_err("bare wait must be caught");
+    assert!(
+        err.to_string().contains("none in flight"),
+        "diagnosis must say nothing was in flight: {err}"
+    );
+}
+
+#[test]
+fn mismatched_a2a_contracts_are_caught() {
+    // Rank 0 sends 5 words to rank 1, but rank 1 expects 6 from rank 0.
+    let mk = |send: Vec<usize>, recv: Vec<usize>| {
+        vec![SpecEvent {
+            tag: 1,
+            metered: false,
+            op: SpecOp::AllToAll {
+                send_lens: send,
+                recv_lens: recv,
+            },
+        }]
+    };
+    let err = check_streams(&[mk(vec![0, 5], vec![0, 5]), mk(vec![5, 0], vec![6, 0])])
+        .expect_err("transpose-condition break must be caught");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("sends 5 words") && msg.contains("expects 6 words"),
+        "diagnosis must show both sides of the contract: {msg}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Lint gate
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lint_is_clean_and_allowlist_is_frozen() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = run_lint(&root).expect("lint scan failed");
+    assert!(
+        report.is_clean(),
+        "ca_lint found violations (fix them or re-audit ALLOW in \
+         rust/src/analysis/lint.rs):\n{report}"
+    );
+    assert!(
+        report.files_scanned > 30,
+        "lint scanned only {} files — wrong root?",
+        report.files_scanned
+    );
+    // The freeze: every audited exemption is present and exact. Adding an
+    // unwrap/collective/alloc bumps a count and fails `is_clean`; removing
+    // one leaves a stale entry, which also fails `is_clean` — this gate
+    // pins the list itself so it cannot silently grow.
+    assert_eq!(report.allow_matched, ALLOW.len(), "allowlist no longer exact:\n{report}");
+    assert!(!ALLOW.is_empty());
+}
