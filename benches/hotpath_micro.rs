@@ -72,6 +72,9 @@ fn check_against_seed(seed_text: &str, current: &[(&str, f64)]) {
         "prox_overlap_allreduces_per_outer",
         "trace_allocs_steady_state",
         "trace_spans_per_outer",
+        "comm_retries_fault_free",
+        "comm_timeouts_fault_free",
+        "checkpoint_state_words_bcd",
     ];
     for &key in WIRE_FIELDS {
         let Some(seed_val) = json_num_field(seed_text, key) else {
@@ -281,6 +284,7 @@ fn main() {
         println!("\nCA-Prox-BCD (l1) outer iteration at P={p} (d={d}, n={n}, b=8, s={s}):");
         let mut medians = Vec::new();
         let mut overlap_allreduces = 0u64;
+        let (mut ff_retries, mut ff_timeouts) = (0u64, 0u64);
         for overlap in [false, true] {
             let opts = SolverOpts::builder()
                 .b(8)
@@ -295,22 +299,27 @@ fn main() {
             let shards_ref = &shards;
             let optsr = &opts;
             // Wire accounting (one un-timed run): the prefetch pipeline
-            // must keep exactly H/s collectives.
+            // must keep exactly H/s collectives, and a fault-free run
+            // must never touch the retry/timeout paths.
             let counts = run_spmd(p, move |rank, comm| {
                 let sh = &shards_ref[rank];
                 let mut be = NativeBackend::new();
-                bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, optsr, None, comm, &mut be)
+                let m = bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, optsr, None, comm, &mut be)
                     .unwrap()
                     .history
-                    .meter
-                    .allreduces
+                    .meter;
+                (m.allreduces, m.retries, m.timeouts)
             });
             assert_eq!(
-                counts[0] as usize, outer,
+                counts[0].0 as usize, outer,
                 "overlap={overlap}: prox collective count != H/s"
             );
+            for &(_, r, t) in &counts {
+                ff_retries += r;
+                ff_timeouts += t;
+            }
             if overlap {
-                overlap_allreduces = counts[0];
+                overlap_allreduces = counts[0].0;
             }
             let (med, _, _) = time_runs(1, if quick { 3 } else { 5 }, || {
                 run_spmd(p, move |rank, comm| {
@@ -336,6 +345,13 @@ fn main() {
         let per_outer = overlap_allreduces as f64 / outer as f64;
         report.push(("prox_overlap_allreduces_per_outer", json::num(per_outer)));
         wire_metrics.push(("prox_overlap_allreduces_per_outer", per_outer));
+        // PR-8 fault-tolerance invariant: with no chaos and no deadline,
+        // the retry/timeout counters stay flat at zero. Seeded at 0 in
+        // the committed baseline, so any nonzero value fails the gate.
+        report.push(("comm_retries_fault_free", json::num(ff_retries as f64)));
+        report.push(("comm_timeouts_fault_free", json::num(ff_timeouts as f64)));
+        wire_metrics.push(("comm_retries_fault_free", ff_retries as f64));
+        wire_metrics.push(("comm_timeouts_fault_free", ff_timeouts as f64));
     }
 
     // --- span tracer: zero-alloc steady state + span accounting ---------
@@ -416,6 +432,49 @@ fn main() {
         report.push(("trace_overlap_efficiency", json::num(sum.overlap_efficiency())));
         wire_metrics.push(("trace_allocs_steady_state", sum.trace_allocs as f64));
         wire_metrics.push(("trace_spans_per_outer", spans_per_outer));
+    }
+
+    // --- checkpoint snapshot size (machine-independent) -----------------
+    // One serial CA-BCD run with an in-memory sink: the snapshot's solver
+    // state (sampler RNG + w + alpha_loc) is a fixed function of the
+    // problem shape — 4 + d + n_loc words here — so growth means a new
+    // state segment slipped into the capture path. Gated against the
+    // committed seed like the other wire fields.
+    {
+        use cabcd::comm::SerialComm;
+        use cabcd::engine::{checkpoint, MemorySink};
+        use cabcd::solvers::{bcd, SolverOpts};
+
+        let (d, n) = (64usize, 512usize);
+        let x = Matrix::Dense(dense_mat(d, n, 51));
+        let mut y = vec![0.0; n];
+        x.matvec_t(&vec![1.0; d], &mut y).unwrap();
+        let opts = SolverOpts::builder()
+            .b(8)
+            .s(4)
+            .lam(0.1)
+            .iters(32)
+            .seed(5)
+            .record_every(0)
+            .overlap(false)
+            .build();
+        let sink = MemorySink::new();
+        checkpoint::install(Box::new(sink.clone()), 4);
+        let mut c = SerialComm::new();
+        bcd::run(&x, &y, n, &opts, None, &mut c, &mut be).unwrap();
+        checkpoint::take();
+        let ck = sink
+            .load(0)
+            .unwrap()
+            .expect("checkpointed run left no snapshot");
+        let words = ck.state_words() as f64;
+        println!(
+            "\ncheckpoint snapshot (CA-BCD serial, d={d}, n={n}): {words} state words \
+             (next_k = {})",
+            ck.next_k
+        );
+        report.push(("checkpoint_state_words_bcd", json::num(words)));
+        wire_metrics.push(("checkpoint_state_words_bcd", words));
     }
 
     // Measured allreduce latency on the packed payload.

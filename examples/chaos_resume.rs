@@ -1,0 +1,208 @@
+//! Fault-tolerance walkthrough: kill a rank mid-lasso, resume from the
+//! last checkpoint, land on the bitwise-identical answer.
+//!
+//! ```sh
+//! cargo run --release --example chaos_resume
+//! ```
+//!
+//! Three acts over the same planted sparse-recovery instance (4 ranks,
+//! CA-Prox-BCD):
+//!
+//! 1. **Baseline** — fault-free run with file-backed checkpointing every
+//!    50 s-step blocks ([`FileSink`], one snapshot file per rank).
+//! 2. **Chaos** — the same run under a seeded [`ChaosComm`]: rank 2 dies
+//!    at its 300th collective without a farewell. Peers discover the
+//!    death through their receive deadlines, the group poisons, and
+//!    every rank reports an actionable `Error::Comm` — nobody hangs.
+//! 3. **Resume** — [`Session::resume`] restarts each rank from its last
+//!    on-disk snapshot and replays to completion. The final iterate,
+//!    prox certificates, and wire meters are asserted **bitwise equal**
+//!    to the baseline (buffer-pool warm-up misses are the one legitimate
+//!    difference; see the `engine::checkpoint` module docs).
+//!
+//! CI runs this binary as the chaos acceptance check.
+
+use std::time::Duration;
+
+use cabcd::comm::thread::run_spmd;
+use cabcd::comm::{ChaosComm, ChaosSpec, Communicator, CostMeter, ThreadComm};
+use cabcd::coordinator::partition_primal;
+use cabcd::engine::{checkpoint, FileSink, Problem, Session};
+use cabcd::error::Result;
+use cabcd::matrix::io::Dataset;
+use cabcd::matrix::{DenseMatrix, Matrix};
+use cabcd::prox::Reg;
+use cabcd::solvers::SolverOpts;
+use cabcd::util::Rng64;
+
+const P: usize = 4;
+const CKPT_EVERY: usize = 50;
+
+/// One rank's outcome: the solve result plus the endpoint's final meter
+/// (the meter survives a failed solve; the output does not).
+type RankResult = (std::result::Result<(Vec<f64>, cabcd::metrics::History), String>, CostMeter);
+
+fn main() -> std::result::Result<(), Box<dyn std::error::Error>> {
+    // Planted sparse instance, as in the lasso example but smaller.
+    let (d, n, k_active) = (32usize, 256usize, 4usize);
+    let mut rng = Rng64::seed_from_u64(42);
+    let data: Vec<f64> = (0..d * n).map(|_| rng.gen_normal()).collect();
+    let x = Matrix::Dense(DenseMatrix::from_vec(d, n, data));
+    let mut w_star = vec![0.0; d];
+    for k in 0..k_active {
+        w_star[k * (d / k_active)] = if k % 2 == 0 { 1.5 } else { -2.0 };
+    }
+    let mut y = vec![0.0; n];
+    x.matvec_t(&w_star, &mut y)?;
+    for v in y.iter_mut() {
+        *v += 0.05 * rng.gen_normal();
+    }
+    let ds = Dataset {
+        name: "planted-sparse".into(),
+        x,
+        y,
+    };
+    let shards = partition_primal(&ds, P)?;
+    let opts = SolverOpts::builder()
+        .b(4)
+        .s(4)
+        .lam(0.1)
+        .iters(2_000)
+        .seed(7)
+        .record_every(500)
+        .reg(Reg::L1)
+        .build();
+    let ckpt_dir = std::env::temp_dir().join(format!("cabcd_chaos_resume_{}", std::process::id()));
+
+    let run = |spec: ChaosSpec, deadline: Option<Duration>, resume: bool| -> Vec<RankResult> {
+        let shards = &shards;
+        let opts = &opts;
+        let ckpt_dir = &ckpt_dir;
+        run_spmd(P, move |rank, comm| {
+            // The chaos wrapper wants ownership of the endpoint; swap in a
+            // one-rank placeholder for the duration of the solve.
+            let mut stub_group = ThreadComm::group(1);
+            let stub = stub_group.pop().expect("group(1) returns one endpoint");
+            let inner = std::mem::replace(comm, stub);
+            let mut chaos = ChaosComm::new(inner, spec);
+            chaos.set_deadline(deadline);
+            let run_one = || -> Result<(Vec<f64>, cabcd::metrics::History)> {
+                checkpoint::install(Box::new(FileSink::new(ckpt_dir)?), CKPT_EVERY);
+                let sh = &shards[rank];
+                let problem = Problem::primal(&sh.a_loc, &sh.y_loc, sh.n_global);
+                let mut be = cabcd::gram::NativeBackend::new();
+                let mut session = Session::new(&problem)
+                    .opts(opts.clone())
+                    .comm(&mut chaos)
+                    .backend(&mut be);
+                if resume {
+                    let ckpt = FileSink::new(ckpt_dir)?
+                        .load(rank)?
+                        .ok_or_else(|| {
+                            cabcd::error::Error::Runtime(format!(
+                                "rank {rank}: no checkpoint on disk"
+                            ))
+                        })?;
+                    session = session.resume(ckpt);
+                }
+                let out = session.run()?.into_primal()?;
+                Ok((out.w, out.history))
+            };
+            let res = run_one().map_err(|e| e.to_string());
+            checkpoint::take();
+            chaos.set_deadline(None);
+            let meter = *chaos.meter();
+            *comm = chaos.into_inner();
+            (res, meter)
+        })
+    };
+
+    // Act 1: fault-free baseline, checkpointing on.
+    println!("act 1: fault-free lasso (P={P}, checkpoint every {CKPT_EVERY} blocks)");
+    let baseline = run(ChaosSpec::default(), None, false);
+    let (base_w, base_h) = match &baseline[0].0 {
+        Ok((w, h)) => (w.clone(), h.clone()),
+        Err(e) => return Err(format!("baseline failed: {e}").into()),
+    };
+    println!(
+        "  {} iters, {} allreduces, gap {:.3e}",
+        base_h.iters,
+        base_h.meter.allreduces,
+        base_h.prox.last().map(|r| r.gap).unwrap_or(f64::NAN)
+    );
+
+    // Act 2: rank 2 dies mid-run; peers poison via their deadlines.
+    println!("act 2: rank 2 dies at collective 300 (peer deadline 500 ms)");
+    let spec = ChaosSpec {
+        die_at: Some(300),
+        victim: 2,
+        ..ChaosSpec::default()
+    };
+    let dead = run(spec, Some(Duration::from_millis(500)), false);
+    for (rank, (res, meter)) in dead.iter().enumerate() {
+        let err = match res {
+            Err(e) => e,
+            Ok(_) => return Err(format!("rank {rank} survived a dead peer").into()),
+        };
+        let actionable = err.contains("died at collective")
+            || err.contains("timed out")
+            || err.contains("poisoned");
+        if !actionable {
+            return Err(format!("rank {rank}: unactionable error: {err}").into());
+        }
+        println!("  rank {rank}: {err} (timeouts metered: {})", meter.timeouts);
+    }
+
+    // Act 3: resume every rank from its last on-disk snapshot.
+    let probe = FileSink::new(&ckpt_dir)?
+        .load(0)?
+        .ok_or("no checkpoint survived the crash")?;
+    println!(
+        "act 3: resuming all ranks from block {} ({} state words per rank)",
+        probe.next_k,
+        probe.state_words()
+    );
+    let resumed = run(ChaosSpec::default(), None, true);
+    for (rank, (res, _)) in resumed.iter().enumerate() {
+        let (w, h) = match res {
+            Ok(out) => out,
+            Err(e) => return Err(format!("resume failed on rank {rank}: {e}").into()),
+        };
+        // Bitwise recovery: iterate, certificates, and wire meters all
+        // match the fault-free run (buf_allocs — pool re-warm — differs
+        // by design and is excluded).
+        if w.iter().zip(&base_w).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("rank {rank}: resumed iterate diverged").into());
+        }
+        let same_certs = h.prox.len() == base_h.prox.len()
+            && h.prox
+                .iter()
+                .zip(&base_h.prox)
+                .all(|(a, b)| a.gap.to_bits() == b.gap.to_bits() && a.nnz == b.nnz);
+        if !same_certs {
+            return Err(format!("rank {rank}: resumed certificates diverged").into());
+        }
+        let base_rank_meter = match &baseline[rank].0 {
+            Ok((_, h)) => h.meter,
+            Err(_) => unreachable!("baseline succeeded on every rank"),
+        };
+        let (m, b) = (h.meter, base_rank_meter);
+        let wire_equal = m.msgs == b.msgs
+            && m.words == b.words
+            && m.recv_msgs == b.recv_msgs
+            && m.recv_words == b.recv_words
+            && m.allreduces == b.allreduces
+            && m.all_to_alls == b.all_to_alls
+            && m.collective_waits == b.collective_waits;
+        if !wire_equal {
+            return Err(format!("rank {rank}: resumed wire meters diverged").into());
+        }
+    }
+    println!(
+        "  recovered bitwise: {} allreduces total, identical wire meters on all ranks",
+        resumed[0].0.as_ref().map(|(_, h)| h.meter.allreduces).unwrap_or(0)
+    );
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    println!("\nchaos_resume example: OK");
+    Ok(())
+}

@@ -36,6 +36,7 @@ SPAN_KINDS = {
     "Apply",
     "ProxStep",
     "Record",
+    "Retry",
 }
 OP_CLASSES = {"compute", "allreduce", "all_to_all", "barrier"}
 # Kinds any traced solver run is guaranteed to emit (ProxStep/Record are

@@ -23,11 +23,14 @@
 //!   and the frozen direct-call sites (the row solver's exchange, the
 //!   CG baseline). Everything else must route communication through
 //!   `engine::drive`, where schedules are verified.
-//! * **`hot-loop`** — `Instant::now(` may appear only in `trace/`,
-//!   `util/bench.rs`, and `coordinator/driver.rs`; allocation tokens
-//!   (`vec![`, `Vec::with_capacity(`, `Vec::new(`, `.to_vec(`) in the
-//!   traced hot loop `engine/step.rs` are budgeted at their audited
-//!   count — steady-state iterations must reuse pooled buffers.
+//! * **`hot-loop`** — `Instant::now(` is free only in the clock-owner
+//!   files (`trace/mod.rs`, `util/bench.rs`, `coordinator/driver.rs`);
+//!   everywhere else each file's count must be budgeted in [`ALLOW`]
+//!   under the `instant-now` rule (currently just the thread
+//!   transport's receive-deadline clock). Allocation tokens (`vec![`,
+//!   `Vec::with_capacity(`, `Vec::new(`, `.to_vec(`) in the traced hot
+//!   loop `engine/step.rs` are budgeted at their audited count —
+//!   steady-state iterations must reuse pooled buffers.
 //!
 //! The scanner strips `//` and nested `/* */` comments, string / raw
 //! string / char literals (lifetime-aware), and `#[cfg(test)]`-gated
@@ -76,6 +79,12 @@ pub const ALLOW: &[(&str, &str, usize)] = &[
     // Audited allocation tokens in the engine hot loop: setup-phase
     // buffer pools and per-run history vectors, none per-iteration.
     ("hot-loop-alloc", "engine/step.rs", 7),
+    // The receive-deadline clock (PR 8): one read to arm the expiry when
+    // a deadline is set, one inside the poll loop to compute the budget
+    // remaining. Both sit on the already-blocking recv path — never on
+    // the deadline-free fast path — so traced schedules stay
+    // deterministic when no timeout is configured.
+    ("instant-now", "comm/thread.rs", 2),
 ];
 
 /// Collective method names whose call sites rule `collective-seam`
@@ -92,9 +101,10 @@ const COLLECTIVES: [&str; 9] = [
     "all_to_all",
 ];
 
-/// Files (relative to the source root) where `Instant::now(` is
-/// legitimate: the tracer clock, the bench harness, and the driver's
-/// wall-time report.
+/// Files (relative to the source root) that **own** a wall clock and may
+/// call `Instant::now(` freely: the tracer clock, the bench harness, and
+/// the driver's wall-time report. Any other file's calls are budgeted
+/// per-file in [`ALLOW`] under the `instant-now` rule.
 const INSTANT_OK: [&str; 3] = ["trace/mod.rs", "util/bench.rs", "coordinator/driver.rs"];
 
 /// Allocation tokens budgeted in the engine hot loop.
@@ -200,18 +210,13 @@ pub fn run_lint(src_root: &Path) -> Result<LintReport> {
             }
         }
 
-        // hot-loop: Instant::now outside the approved clock sites
+        // hot-loop: Instant::now outside the clock-owner files goes
+        // through the frozen budget like every other audited exemption
+        // (e.g. the thread transport's receive-deadline clock).
         if !INSTANT_OK.contains(&rel.as_str()) {
             let nows = count_substr(&text, "Instant::now(");
             if nows > 0 {
-                report.violations.push(Violation {
-                    rule: "instant-now",
-                    file: rel.clone(),
-                    detail: format!(
-                        "{nows} Instant::now() call(s); wall-clock reads belong in \
-                         {INSTANT_OK:?} so traced schedules stay deterministic"
-                    ),
-                });
+                measured.insert(("instant-now", rel.clone()), nows);
             }
         }
 

@@ -1,0 +1,358 @@
+//! Deterministic fault injection over any [`Communicator`].
+//!
+//! [`ChaosComm`] decorates a transport and injects seeded faults at
+//! collective entry, giving every invariant the symbolic verifier
+//! ([`crate::analysis`]) checks statically a dynamic twin:
+//!
+//! * **Latency spikes** — a per-collective coin flip adds a fixed sleep
+//!   before the collective runs. Payload bytes are untouched, so a run
+//!   that completes is bitwise-equal to the fault-free run (the chaos
+//!   test matrix asserts exactly this).
+//! * **Transient delivery failures** — a per-collective coin flip makes
+//!   the attempt "fail" before anything is sent; the decorator retries
+//!   with bounded exponential backoff, metering each retry in
+//!   [`CostMeter::retries`](crate::comm::CostMeter::retries) and tracing
+//!   it as a [`SpanKind::Retry`] span. The delegated collective still
+//!   runs **exactly once**, so wire traffic is identical to fault-free.
+//!   Exhausting `max_retries` surfaces as `Error::Comm`.
+//! * **Rank stalls** — at a chosen collective index the victim rank
+//!   sleeps past its peers' deadline
+//!   ([`Communicator::set_deadline`]), driving the timeout → poison →
+//!   `Error::Comm`-everywhere path.
+//! * **Hard rank death** — at a chosen collective index the victim rank
+//!   errors out *without communicating*, mid-protocol from its peers'
+//!   point of view. Peers discover the death through their receive
+//!   deadlines; recovery is a checkpoint resume
+//!   ([`crate::engine::Session::resume`]).
+//!
+//! All randomness comes from a [`Rng64`] seeded with `seed ^ rank`, so a
+//! fault schedule is a pure function of ([`ChaosSpec`], rank, collective
+//! index) — reproducible across runs, machines, and schedules.
+
+use std::time::Duration;
+
+use crate::comm::{AllToAllHandle, Communicator, CostMeter, ReduceHandle};
+use crate::error::{Error, Result};
+use crate::trace::{self, OpClass, SpanKind};
+use crate::util::Rng64;
+
+/// Seeded fault plan for one [`ChaosComm`] endpoint. The default spec
+/// injects nothing — `ChaosComm` with a default spec behaves exactly
+/// like its inner transport (plus one RNG construction).
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosSpec {
+    /// Seed for the per-rank fault stream (the endpoint draws from
+    /// `Rng64::seed_from_u64(seed ^ rank)`).
+    pub seed: u64,
+    /// Probability (0..=1) that a collective entry takes a latency spike.
+    pub latency_prob: f64,
+    /// Sleep injected by a latency spike, in milliseconds.
+    pub latency_ms: u64,
+    /// Probability (0..=1) that a collective attempt transiently fails
+    /// before sending (each retry re-flips the coin).
+    pub transient_prob: f64,
+    /// Retry budget per collective; exceeding it is `Error::Comm`.
+    pub max_retries: u32,
+    /// First backoff sleep in milliseconds; doubles per retry.
+    pub backoff_base_ms: u64,
+    /// Collective index at which the victim rank stalls.
+    pub stall_at: Option<u64>,
+    /// Stall duration in milliseconds (set it above the group deadline).
+    pub stall_ms: u64,
+    /// Collective index at which the victim rank dies (errors out
+    /// without communicating).
+    pub die_at: Option<u64>,
+    /// Rank subject to `stall_at` / `die_at`.
+    pub victim: usize,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            seed: 0,
+            latency_prob: 0.0,
+            latency_ms: 1,
+            transient_prob: 0.0,
+            max_retries: 4,
+            backoff_base_ms: 1,
+            stall_at: None,
+            stall_ms: 100,
+            die_at: None,
+            victim: 0,
+        }
+    }
+}
+
+/// Fault-injecting decorator over any transport. See the module docs
+/// for the fault taxonomy and determinism contract.
+pub struct ChaosComm<C: Communicator> {
+    inner: C,
+    spec: ChaosSpec,
+    rng: Rng64,
+    /// Monotone count of collective entries on this endpoint — the
+    /// cross-run-stable index `stall_at` / `die_at` select on (SPMD
+    /// determinism makes index k the same operation on every rank).
+    op_idx: u64,
+}
+
+impl<C: Communicator> ChaosComm<C> {
+    /// Wrap `inner` under the fault plan `spec`.
+    pub fn new(inner: C, spec: ChaosSpec) -> Self {
+        let rank = inner.rank() as u64;
+        ChaosComm {
+            inner,
+            spec,
+            rng: Rng64::seed_from_u64(spec.seed ^ rank),
+            op_idx: 0,
+        }
+    }
+
+    /// Unwrap the inner transport.
+    pub fn into_inner(self) -> C {
+        self.inner
+    }
+
+    /// Collective entries seen so far (the next entry's index).
+    pub fn op_idx(&self) -> u64 {
+        self.op_idx
+    }
+
+    /// Run the fault plan for one collective entry: targeted death /
+    /// stall first (deterministic, index-based), then the seeded latency
+    /// and transient-failure coins. Returns `Ok` once the delegated
+    /// collective may run (exactly once).
+    fn inject(&mut self, what: &str, words: u64) -> Result<()> {
+        let idx = self.op_idx;
+        self.op_idx += 1;
+        let rank = self.inner.rank();
+        let targeted = rank == self.spec.victim;
+        if targeted && self.spec.die_at == Some(idx) {
+            // Hard death: no poison, no farewell — peers must discover
+            // this through their receive deadlines.
+            return Err(Error::Comm(format!(
+                "chaos: rank {rank} died at collective {idx} ({what})"
+            )));
+        }
+        if targeted && self.spec.stall_at == Some(idx) {
+            std::thread::sleep(Duration::from_millis(self.spec.stall_ms));
+        }
+        if self.spec.latency_prob > 0.0 && self.rng.gen_f64() < self.spec.latency_prob {
+            std::thread::sleep(Duration::from_millis(self.spec.latency_ms));
+        }
+        if self.spec.transient_prob > 0.0 {
+            let mut attempt = 0u32;
+            while self.rng.gen_f64() < self.spec.transient_prob {
+                attempt += 1;
+                if attempt > self.spec.max_retries {
+                    return Err(Error::Comm(format!(
+                        "chaos: rank {rank} collective {idx} ({what}) failed \
+                         {attempt} transient attempts (budget {})",
+                        self.spec.max_retries
+                    )));
+                }
+                self.inner.meter_mut().retries += 1;
+                let t0 = trace::now();
+                std::thread::sleep(Duration::from_millis(
+                    self.spec.backoff_base_ms << (attempt - 1).min(16),
+                ));
+                trace::record(SpanKind::Retry, OpClass::Compute, idx, words, t0);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<C: Communicator> Communicator for ChaosComm<C> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()> {
+        self.inject("allreduce", buf.len() as u64)?;
+        self.inner.allreduce_sum(buf)
+    }
+
+    fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
+        self.inject("iallreduce_start", buf.len() as u64)?;
+        self.inner.iallreduce_start(buf)
+    }
+
+    fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>> {
+        // Completions are not separate entries: the fault plan indexed
+        // the start, and a wait never initiates traffic of its own.
+        self.inner.iallreduce_wait(handle)
+    }
+
+    fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
+        self.inject("broadcast", buf.len() as u64)?;
+        self.inner.broadcast(root, buf)
+    }
+
+    fn all_to_all(&mut self, send: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        let words: u64 = send.iter().map(|v| v.len() as u64).sum();
+        self.inject("all_to_all", words)?;
+        self.inner.all_to_all(send)
+    }
+
+    fn all_to_all_expect(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        let words: u64 = send.iter().map(|v| v.len() as u64).sum();
+        self.inject("all_to_all_expect", words)?;
+        self.inner.all_to_all_expect(send, recv_lens)
+    }
+
+    fn iall_to_all_start(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<AllToAllHandle> {
+        let words: u64 = send.iter().map(|v| v.len() as u64).sum();
+        self.inject("iall_to_all_start", words)?;
+        self.inner.iall_to_all_start(send, recv_lens)
+    }
+
+    fn iall_to_all_wait(&mut self, handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
+        self.inner.iall_to_all_wait(handle)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.inject("barrier", 0)?;
+        self.inner.barrier()
+    }
+
+    fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.inner.set_deadline(deadline)
+    }
+
+    fn take_buf(&mut self, len: usize) -> Vec<f64> {
+        self.inner.take_buf(len)
+    }
+
+    fn give_buf(&mut self, buf: Vec<f64>) {
+        self.inner.give_buf(buf)
+    }
+
+    fn meter(&self) -> &CostMeter {
+        self.inner.meter()
+    }
+
+    fn meter_mut(&mut self) -> &mut CostMeter {
+        self.inner.meter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{run_spmd, SerialComm};
+
+    #[test]
+    fn default_spec_is_transparent() {
+        let mut c = ChaosComm::new(SerialComm::new(), ChaosSpec::default());
+        let mut buf = vec![1.0, 2.0, 3.0];
+        c.allreduce_sum(&mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.meter().retries, 0);
+        assert_eq!(c.meter().allreduces, 1);
+        assert_eq!(c.op_idx(), 1);
+    }
+
+    #[test]
+    fn transient_faults_retry_and_meter_without_changing_results() {
+        let spec = ChaosSpec {
+            seed: 7,
+            transient_prob: 0.5,
+            max_retries: 64,
+            backoff_base_ms: 0,
+            ..ChaosSpec::default()
+        };
+        let results = run_spmd(4, move |rank, comm| {
+            // Move each rank's endpoint into a chaos wrapper.
+            let inner = std::mem::replace(comm, ThreadCommStub::stub());
+            let mut chaos = ChaosComm::new(inner, spec);
+            let mut buf = vec![rank as f64; 8];
+            for _ in 0..20 {
+                chaos.allreduce_sum(&mut buf).unwrap();
+            }
+            let retries = chaos.meter().retries;
+            *comm = chaos.into_inner();
+            (buf[0], retries)
+        });
+        for (v, retries) in &results {
+            // 20 allreduces of the rank sum: value is deterministic and
+            // equal to the fault-free result regardless of retries.
+            assert_eq!(*v, 6.0 * 4f64.powi(19), "faults changed the payload");
+            assert!(*retries > 0, "p=0.5 over 20 collectives never retried");
+        }
+    }
+
+    /// `run_spmd` hands out `&mut ThreadComm`; the chaos wrapper wants
+    /// ownership. A one-rank placeholder group swaps in while the real
+    /// endpoint is wrapped.
+    struct ThreadCommStub;
+    impl ThreadCommStub {
+        fn stub() -> crate::comm::ThreadComm {
+            let mut g = crate::comm::ThreadComm::group(1);
+            let Some(c) = g.pop() else {
+                unreachable!("group(1) returns one endpoint")
+            };
+            c
+        }
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_an_error() {
+        let spec = ChaosSpec {
+            seed: 1,
+            transient_prob: 1.0, // every attempt fails
+            max_retries: 3,
+            backoff_base_ms: 0,
+            ..ChaosSpec::default()
+        };
+        let mut c = ChaosComm::new(SerialComm::new(), spec);
+        let err = c.allreduce_sum(&mut [1.0]).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("transient attempts"), "{msg}");
+        assert_eq!(c.meter().retries, 3, "budget must be fully consumed");
+    }
+
+    #[test]
+    fn death_is_targeted_and_indexed() {
+        let spec = ChaosSpec {
+            die_at: Some(2),
+            victim: 0,
+            ..ChaosSpec::default()
+        };
+        let mut c = ChaosComm::new(SerialComm::new(), spec);
+        c.allreduce_sum(&mut [1.0]).unwrap(); // idx 0
+        c.barrier().unwrap(); // idx 1
+        let err = c.allreduce_sum(&mut [1.0]).unwrap_err(); // idx 2
+        assert!(format!("{err:?}").contains("died at collective 2"));
+    }
+
+    #[test]
+    fn same_seed_same_fault_schedule() {
+        let spec = ChaosSpec {
+            seed: 42,
+            transient_prob: 0.3,
+            max_retries: 32,
+            backoff_base_ms: 0,
+            ..ChaosSpec::default()
+        };
+        let run = || {
+            let mut c = ChaosComm::new(SerialComm::new(), spec);
+            for _ in 0..50 {
+                c.allreduce_sum(&mut [0.0]).unwrap();
+            }
+            c.meter().retries
+        };
+        assert_eq!(run(), run(), "fault schedule must be seed-deterministic");
+    }
+}

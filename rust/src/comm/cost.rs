@@ -30,6 +30,16 @@ pub struct CostMeter {
     /// capacity growth). Zero after warmup on a steady-state payload — the
     /// invariant the hot-path micro-bench asserts.
     pub buf_allocs: u64,
+    /// Transient-fault retries taken by a fault-injecting decorator
+    /// ([`crate::comm::ChaosComm`]) before the delegated collective ran.
+    /// Zero on a fault-free run — the invariant the chaos tests subtract
+    /// when comparing meters against the fault-free baseline.
+    pub retries: u64,
+    /// Receive deadlines that expired
+    /// ([`crate::comm::Communicator::set_deadline`]).
+    /// Each expiry poisons the group, so a nonzero count accompanies an
+    /// `Error::Comm` abort rather than a completed run.
+    pub timeouts: u64,
 }
 
 impl CostMeter {
@@ -55,6 +65,8 @@ impl CostMeter {
         self.all_to_alls += other.all_to_alls;
         self.collective_waits += other.collective_waits;
         self.buf_allocs += other.buf_allocs;
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
     }
 
     /// Critical-path message/word counts over a group of rank meters:

@@ -78,12 +78,22 @@
 //! ([`Communicator::all_to_all_expect`] checks every incoming payload
 //! against the caller's expected length).
 //!
+//! Rank *death* is covered by deadlines: [`Communicator::set_deadline`]
+//! bounds every blocking receive, and an expiry counts a
+//! [`CostMeter::timeouts`] and poisons the group exactly like a protocol
+//! violation — so a crashed or stalled peer surfaces as `Error::Comm` on
+//! every surviving rank instead of a hang. The [`chaos`] module provides
+//! [`ChaosComm`], a deterministic fault-injecting decorator over any
+//! transport, which is how these paths are exercised under test.
+//!
 //! Every send is metered; [`CostMeter::critical_path`] takes the max over
 //! ranks, which is what the paper's `O(·)` latency/bandwidth terms bound.
 
+pub mod chaos;
 pub mod cost;
 pub mod thread;
 
+pub use chaos::{ChaosComm, ChaosSpec};
 pub use cost::CostMeter;
 pub use thread::{run_spmd, ThreadComm};
 
@@ -258,6 +268,16 @@ pub trait Communicator: Send {
 
     /// Synchronize all ranks.
     fn barrier(&mut self) -> Result<()>;
+
+    /// Set (or clear) the per-receive deadline for this endpoint's blocking
+    /// receive paths — blocking collectives and the `i*_wait` completions.
+    /// When a peer's message fails to arrive within the deadline, the
+    /// endpoint counts a [`CostMeter::timeouts`], **poisons the group**
+    /// (PR-2 propagation: every rank observes `Error::Comm` instead of
+    /// hanging), and errors out. `None` restores the default unbounded
+    /// wait. Single-process communicators with no inter-rank blocking
+    /// (e.g. [`SerialComm`]) ignore the deadline — the default is a no-op.
+    fn set_deadline(&mut self, _deadline: Option<std::time::Duration>) {}
 
     /// Borrow a zeroed length-`len` buffer from the rank-local pool
     /// (allocates only on pool miss).

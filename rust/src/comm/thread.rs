@@ -6,7 +6,8 @@
 //! failure semantics.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 use crate::comm::{
     A2aState, Algo, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle,
@@ -57,6 +58,11 @@ pub struct ThreadComm {
     op_seq: u64,
     /// Tag of the operation currently sending/receiving on this endpoint.
     cur_tag: u64,
+    /// Per-receive deadline ([`Communicator::set_deadline`]): `None` waits
+    /// forever (the pre-PR-8 behaviour), `Some(d)` bounds every blocking
+    /// receive and converts an expiry into a poisoned group — so a dead or
+    /// stalled peer is an `Error::Comm` on every rank, never a hang.
+    deadline: Option<Duration>,
     meter: CostMeter,
 }
 
@@ -108,6 +114,7 @@ impl ThreadComm {
                 poisoned: None,
                 op_seq: 0,
                 cur_tag: 0,
+                deadline: None,
                 meter: CostMeter::default(),
             })
             .collect()
@@ -234,7 +241,11 @@ impl ThreadComm {
     /// Blocking receive from a specific source **for the current
     /// operation tag**. Messages from other sources or other operations
     /// are stashed (per-source FIFO, matched in tag order within an
-    /// operation); a poison packet from *any* source aborts the wait.
+    /// operation); a poison packet from *any* source aborts the wait; an
+    /// expired deadline ([`Communicator::set_deadline`]) counts one
+    /// [`CostMeter::timeouts`] and poisons the group, so a dead or
+    /// stalled peer surfaces as `Error::Comm` everywhere instead of this
+    /// rank blocking forever on its inbox.
     fn recv(&mut self, src: usize) -> Result<Vec<f64>> {
         if let Some(m) = &self.poisoned {
             return Err(Self::poisoned_err(m));
@@ -251,8 +262,22 @@ impl ThreadComm {
             self.meter.record_recv(v.len());
             return Ok(v);
         }
+        // The deadline is per-receive, armed on entering the blocking wait
+        // (not per-message-attempt: stashed traffic from other operations
+        // must not extend it).
+        let expiry = self.deadline.map(|d| (Instant::now() + d, d));
         loop {
-            match self.inbox.recv() {
+            let received = match expiry {
+                None => self.inbox.recv().map_err(|_| None),
+                Some((limit, budget)) => {
+                    let remaining = limit.saturating_duration_since(Instant::now());
+                    self.inbox.recv_timeout(remaining).map_err(|e| match e {
+                        RecvTimeoutError::Timeout => Some(budget),
+                        RecvTimeoutError::Disconnected => None,
+                    })
+                }
+            };
+            match received {
                 Ok((from, Packet::Data(t, v))) => {
                     if from == src && t == tag {
                         self.meter.record_recv(v.len());
@@ -265,7 +290,14 @@ impl ThreadComm {
                     self.poisoned = Some(m);
                     return Err(err);
                 }
-                Err(_) => {
+                Err(Some(budget)) => {
+                    self.meter.timeouts += 1;
+                    return Err(self.poison(format!(
+                        "rank {} timed out after {budget:?} waiting for rank {src} (op tag {tag})",
+                        self.rank,
+                    )));
+                }
+                Err(None) => {
                     return Err(Error::Comm(format!(
                         "recv {}←{src}: channel closed",
                         self.rank
@@ -765,6 +797,10 @@ impl Communicator for ThreadComm {
         self.allreduce_rd(&mut [], false)
     }
 
+    fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
+
     fn take_buf(&mut self, len: usize) -> Vec<f64> {
         self.take_buf_inner(len)
     }
@@ -1102,6 +1138,68 @@ mod tests {
                     );
                 });
             }
+        }
+    }
+
+    #[test]
+    fn stalled_peer_times_out_and_poisons_the_group() {
+        let results = run_spmd(2, |rank, comm| {
+            comm.set_deadline(Some(Duration::from_millis(40)));
+            let mut buf = vec![rank as f64; 4];
+            if rank == 1 {
+                // Stall well past rank 0's deadline before participating.
+                std::thread::sleep(Duration::from_millis(400));
+            }
+            let res = comm.allreduce_sum(&mut buf);
+            (res.err(), comm.meter().timeouts)
+        });
+        let (err0, t0) = &results[0];
+        let e0 = format!("{:?}", err0.as_ref().expect("rank 0 should time out"));
+        assert!(e0.contains("timed out"), "{e0}");
+        assert!(e0.contains("poisoned"), "{e0}");
+        assert_eq!(*t0, 1, "timeout must be metered");
+        let (err1, t1) = &results[1];
+        let e1 = format!("{:?}", err1.as_ref().expect("rank 1 should see poison"));
+        assert!(e1.contains("poisoned"), "{e1}");
+        assert_eq!(*t1, 0, "rank 1 stalled, it did not time out");
+    }
+
+    #[test]
+    fn dead_peer_times_out_instead_of_hanging() {
+        // Rank 1 "dies" before entering the collective (never sends).
+        // Without a deadline this receive blocks forever — the latent hang
+        // this PR closes. Either failure surface is acceptable: the
+        // deadline expiry (peer still draining) or the terminated-peer
+        // send error (peer already gone); both are Error::Comm, not hangs.
+        let results = run_spmd(2, |rank, comm| {
+            if rank == 1 {
+                return (None, 0);
+            }
+            comm.set_deadline(Some(Duration::from_millis(40)));
+            let mut buf = vec![1.0; 4];
+            (comm.allreduce_sum(&mut buf).err(), comm.meter().timeouts)
+        });
+        let (err0, timeouts) = &results[0];
+        let e = format!("{:?}", err0.as_ref().expect("rank 0 must error"));
+        assert!(
+            e.contains("timed out") || e.contains("peer terminated"),
+            "{e}"
+        );
+        assert!(*timeouts <= 1);
+    }
+
+    #[test]
+    fn clearing_the_deadline_restores_unbounded_waits() {
+        let results = run_spmd(3, |rank, comm| {
+            comm.set_deadline(Some(Duration::from_secs(5)));
+            comm.set_deadline(None);
+            let mut buf = vec![rank as f64; 8];
+            comm.allreduce_sum(&mut buf).unwrap();
+            (buf, comm.meter().timeouts)
+        });
+        for (buf, timeouts) in results {
+            assert_eq!(buf, vec![3.0; 8]);
+            assert_eq!(timeouts, 0);
         }
     }
 

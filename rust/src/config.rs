@@ -31,6 +31,9 @@
 //! backend = native        # native | xla
 //! artifact_dir = artifacts
 //! # trace = run.trace.json  # per-rank span trace (Chrome trace-event JSON)
+//! # comm_timeout_ms = 5000  # deadline per blocking receive (default: unbounded)
+//! # checkpoint_every = 10   # snapshot state every k-th s-step block (0 = off)
+//! # checkpoint_dir = ckpts  # default: <artifact_dir>/checkpoints
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -92,6 +95,20 @@ pub struct RunConfig {
     /// Perfetto / `chrome://tracing`). Tracing is observer-neutral: the
     /// trajectory and cost meters are bitwise-identical with it on or off.
     pub trace: Option<PathBuf>,
+    /// Deadline for every blocking receive (milliseconds). A peer that
+    /// fails to deliver within the deadline counts a
+    /// [`CostMeter::timeouts`](crate::comm::CostMeter) and poisons the
+    /// group, so a dead or stalled rank surfaces as `Error::Comm` on every
+    /// surviving rank instead of a hang. `None` = unbounded (the default).
+    pub comm_timeout_ms: Option<u64>,
+    /// Snapshot full solver state every k-th s-step block through a
+    /// per-rank [`FileSink`](crate::engine::FileSink) (0 = off). Resuming
+    /// is bitwise-exact; see `[crate::engine::checkpoint]` for what
+    /// enabling this does to the prefetch schedule.
+    pub checkpoint_every: usize,
+    /// Directory for the per-rank checkpoint files; defaults to
+    /// `<artifact_dir>/checkpoints` when checkpointing is on.
+    pub checkpoint_dir: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -101,6 +118,9 @@ impl Default for RunConfig {
             backend: "native".into(),
             artifact_dir: PathBuf::from("artifacts"),
             trace: None,
+            comm_timeout_ms: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
         }
     }
 }
@@ -147,6 +167,9 @@ impl ExperimentConfig {
                 backend: rn.str("backend").unwrap_or("native").to_string(),
                 artifact_dir: PathBuf::from(rn.str("artifact_dir").unwrap_or("artifacts")),
                 trace: rn.str("trace").map(PathBuf::from),
+                comm_timeout_ms: rn.u64_opt("comm_timeout_ms")?,
+                checkpoint_every: rn.usize_or("checkpoint_every", 0)?,
+                checkpoint_dir: rn.str("checkpoint_dir").map(PathBuf::from),
             },
         };
         cfg.validate()?;
@@ -193,6 +216,11 @@ impl ExperimentConfig {
         }
         if self.run.ranks == 0 {
             return Err(Error::Config("ranks must be ≥ 1".into()));
+        }
+        if self.run.comm_timeout_ms == Some(0) {
+            return Err(Error::Config(
+                "comm_timeout_ms must be ≥ 1 (omit the key for an unbounded wait)".into(),
+            ));
         }
         Ok(())
     }
@@ -312,6 +340,26 @@ mod tests {
         assert!(ExperimentConfig::from_str(&bad_ratio).is_err());
         let cg_l1 = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cg\nreg = l1\n";
         assert!(ExperimentConfig::from_str(cg_l1).is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse_and_default_off() {
+        let base = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cabcd\n";
+        let cfg = ExperimentConfig::from_str(base).unwrap();
+        assert_eq!(cfg.run.comm_timeout_ms, None);
+        assert_eq!(cfg.run.checkpoint_every, 0);
+        assert_eq!(cfg.run.checkpoint_dir, None);
+        let on = format!(
+            "{base}[run]\ncomm_timeout_ms = 5000\ncheckpoint_every = 10\ncheckpoint_dir = ckpts\n"
+        );
+        let cfg = ExperimentConfig::from_str(&on).unwrap();
+        assert_eq!(cfg.run.comm_timeout_ms, Some(5000));
+        assert_eq!(cfg.run.checkpoint_every, 10);
+        assert_eq!(cfg.run.checkpoint_dir, Some(PathBuf::from("ckpts")));
+        // A zero deadline would poison every receive instantly; reject it
+        // at config load, where the typo is visible.
+        let zero = format!("{base}[run]\ncomm_timeout_ms = 0\n");
+        assert!(ExperimentConfig::from_str(&zero).is_err());
     }
 
     #[test]

@@ -6,13 +6,13 @@
 //! [`Session`](crate::engine::Session) entry point — the driver only
 //! chooses the partitioning for the method's layout.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::comm::cost::CostMeter;
 use crate::comm::thread::run_spmd;
-use crate::comm::SerialComm;
+use crate::comm::{Communicator, SerialComm};
 use crate::config::ExperimentConfig;
-use crate::engine::{Layout, Method, Problem, Session};
+use crate::engine::{checkpoint, FileSink, Layout, Method, Problem, Session};
 use crate::error::{Error, Result};
 use crate::gram::{ComputeBackend, NativeBackend};
 use crate::matrix::gen::{self, DatasetSpec};
@@ -58,6 +58,40 @@ pub struct ExperimentReport {
     /// overlap-efficiency accounting. The raw Chrome trace-event JSON is
     /// written to the configured path.
     pub trace: Option<TraceSummary>,
+    /// Set when the SPMD solve aborted (poisoned group, rank death,
+    /// exhausted retry budget, …). The report then carries everything the
+    /// ranks produced up to the failure — per-rank meters, the failing
+    /// collective, and the checkpoint to resume from — instead of
+    /// discarding the run.
+    pub aborted_at: Option<AbortInfo>,
+}
+
+/// Where and why an SPMD solve stopped early. `run_experiment` returns a
+/// *partial* [`ExperimentReport`] carrying this instead of an `Err`, so a
+/// multi-hour run that dies keeps its measurements and names the
+/// checkpoint to resume from.
+#[derive(Clone, Debug)]
+pub struct AbortInfo {
+    /// Lowest-numbered failing rank (every poisoned rank fails; this one
+    /// is the report's exemplar).
+    pub rank: usize,
+    /// That rank's error — the poison diagnostic, which names the peer
+    /// and the collective's operation tag.
+    pub error: String,
+    /// Collectives the failing rank had completed (allreduces +
+    /// all-to-alls): the ordinal of the operation that failed, and — at
+    /// one solver collective per outer iteration — an upper bound on the
+    /// outer iteration reached.
+    pub collectives_done: u64,
+    /// Outer iteration (s-step block index) a resume would restart from:
+    /// `next_k` of the failing rank's last on-disk checkpoint. `None`
+    /// when checkpointing was off or nothing was snapshotted yet.
+    pub resume_at: Option<u64>,
+    /// The failing rank's checkpoint file, when checkpointing was on.
+    pub checkpoint: Option<String>,
+    /// Per-rank meters at failure (index = rank), including the
+    /// fault-path counters `retries` and `timeouts`.
+    pub meters: Vec<CostMeter>,
 }
 
 /// Load the configured dataset (synthetic clone or LIBSVM file) and its λ.
@@ -169,14 +203,28 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
     let start = Instant::now();
     let shards = ShardSet::partition(method, &ds, p)?;
     let tracing = cfg.run.trace.is_some();
-    let results: Vec<Result<(History, Option<Tracer>)>> = run_spmd(p, |rank, comm| {
+    let outcomes: Vec<RankOutcome> = run_spmd(p, |rank, comm| {
         if tracing {
             // Per-rank tracer lives in this worker's thread-local slot for
             // the whole solve; reclaimed below even on error so a failed
             // rank cannot leak an active tracer into a reused thread.
             trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
         }
+        if let Some(ms) = cfg.run.comm_timeout_ms {
+            comm.set_deadline(Some(Duration::from_millis(ms)));
+        }
         let run_one = || -> Result<History> {
+            if cfg.run.checkpoint_every > 0 {
+                let dir = cfg
+                    .run
+                    .checkpoint_dir
+                    .clone()
+                    .unwrap_or_else(|| cfg.run.artifact_dir.join("checkpoints"));
+                checkpoint::install(
+                    Box::new(FileSink::new(dir)?),
+                    cfg.run.checkpoint_every,
+                );
+            }
             let mut be = if method.needs_backend() {
                 Some(make_backend(cfg)?)
             } else {
@@ -194,23 +242,57 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
             Ok(session.run()?.into_history())
         };
         let history = run_one();
-        let tracer = trace::take();
-        history.map(|h| (h, tracer))
+        // Reclaim the thread-local sink even on error (reused worker
+        // threads must not inherit it), but remember where it wrote so an
+        // abort report can name the file to resume from.
+        let ckpt = checkpoint::describe_sink(rank);
+        checkpoint::take();
+        RankOutcome {
+            meter: *comm.meter(),
+            tracer: trace::take(),
+            checkpoint: ckpt,
+            history,
+        }
     });
-    let (history, meters, tracers) = collect(results)?;
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let meters: Vec<CostMeter> = outcomes.iter().map(|o| o.meter).collect();
+    let aborted_at = abort_info(&outcomes, &meters);
+    let (history, tracers) = collect(outcomes, &mut notes);
+    if let Some(a) = &aborted_at {
+        let note = format!(
+            "aborted: rank {} failed after {} collectives: {}",
+            a.rank, a.collectives_done, a.error
+        );
+        eprintln!("note: {note}");
+        notes.push(note);
+        let note = match (&a.checkpoint, a.resume_at) {
+            (Some(path), Some(k)) => format!(
+                "resume from checkpoint {path} (restarts at s-step block {k})"
+            ),
+            (Some(path), None) => format!(
+                "checkpointing was on ({path}) but no block completed before \
+                 the fault; rerun from scratch"
+            ),
+            _ => "no checkpoint to resume from (set [run] checkpoint_every)".into(),
+        };
+        eprintln!("note: {note}");
+        notes.push(note);
+    }
 
     let trace_summary = if let Some(path) = cfg.run.trace.as_ref() {
         // Observer gate: every rank's span counts must agree exactly with
         // its CostMeter (one CollectiveStart per posted collective, one
         // CollectiveWait span per completion). A mismatch is an
         // instrumentation bug — surface it as a report advisory rather
-        // than failing the solve.
-        for (tracer, meter) in tracers.iter().zip(&meters) {
-            if let Err(e) = trace::cross_check(tracer, meter) {
-                let note = format!("trace/meter cross-check failed: {e}");
-                eprintln!("note: {note}");
-                notes.push(note);
+        // than failing the solve. Skipped on abort: a poisoned rank
+        // legitimately dies between a start and its wait.
+        if aborted_at.is_none() {
+            for (tracer, meter) in tracers.iter().zip(&meters) {
+                if let Err(e) = trace::cross_check(tracer, meter) {
+                    let note = format!("trace/meter cross-check failed: {e}");
+                    eprintln!("note: {note}");
+                    notes.push(note);
+                }
             }
         }
         std::fs::write(path, trace::chrome_trace_json(&tracers))?;
@@ -243,6 +325,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
         critical_msgs,
         critical_words,
         trace: trace_summary,
+        aborted_at,
     })
 }
 
@@ -307,6 +390,13 @@ impl ExperimentReport {
                     .map(trace::summary_json)
                     .unwrap_or_else(|| "null".into()),
             ),
+            (
+                "aborted_at",
+                self.aborted_at
+                    .as_ref()
+                    .map(abort_json)
+                    .unwrap_or_else(|| "null".into()),
+            ),
             ("records", records),
             ("prox_records", prox),
             ("gram_conds", conds),
@@ -314,20 +404,105 @@ impl ExperimentReport {
     }
 }
 
-/// Unwrap per-rank results; rank 0's history is the report's, all meters
-/// feed the critical path, all tracers (when tracing) feed the summary.
-fn collect(
-    results: Vec<Result<(History, Option<Tracer>)>>,
-) -> Result<(History, Vec<CostMeter>, Vec<Tracer>)> {
-    let mut histories = Vec::with_capacity(results.len());
+/// JSON object for [`AbortInfo`] (the report's `"aborted_at"` field).
+fn abort_json(a: &AbortInfo) -> String {
+    use crate::util::json::{array, num, object, string};
+    let meters = array(a.meters.iter().map(|m| {
+        object(&[
+            ("msgs", num(m.msgs as f64)),
+            ("words", num(m.words as f64)),
+            ("recv_msgs", num(m.recv_msgs as f64)),
+            ("recv_words", num(m.recv_words as f64)),
+            ("allreduces", num(m.allreduces as f64)),
+            ("all_to_alls", num(m.all_to_alls as f64)),
+            ("collective_waits", num(m.collective_waits as f64)),
+            ("buf_allocs", num(m.buf_allocs as f64)),
+            ("retries", num(m.retries as f64)),
+            ("timeouts", num(m.timeouts as f64)),
+        ])
+    }));
+    object(&[
+        ("rank", num(a.rank as f64)),
+        ("error", string(&a.error)),
+        ("collectives_done", num(a.collectives_done as f64)),
+        (
+            "resume_at",
+            a.resume_at
+                .map(|k| num(k as f64))
+                .unwrap_or_else(|| "null".into()),
+        ),
+        (
+            "checkpoint",
+            a.checkpoint
+                .as_deref()
+                .map(string)
+                .unwrap_or_else(|| "null".into()),
+        ),
+        ("meters", meters),
+    ])
+}
+
+/// What one rank's SPMD closure hands back: its solve result, plus the
+/// observability state that must survive a failed solve (the meter and
+/// tracer live in the communicator / thread-local slot, both gone once
+/// the worker thread exits).
+struct RankOutcome {
+    history: Result<History>,
+    tracer: Option<Tracer>,
+    meter: CostMeter,
+    /// `CheckpointSink::describe` of the installed sink (the per-rank
+    /// checkpoint file path), when checkpointing was on.
+    checkpoint: Option<String>,
+}
+
+/// Build the [`AbortInfo`] for a failed solve — `None` when every rank
+/// succeeded. The exemplar is the lowest-numbered failing rank; its last
+/// on-disk checkpoint (if any) names the s-step block a resume restarts
+/// from.
+fn abort_info(outcomes: &[RankOutcome], meters: &[CostMeter]) -> Option<AbortInfo> {
+    let (rank, failed) = outcomes
+        .iter()
+        .enumerate()
+        .find(|(_, o)| o.history.is_err())?;
+    let error = match &failed.history {
+        Err(e) => e.to_string(),
+        Ok(_) => unreachable!("find() matched is_err"),
+    };
+    let checkpoint = failed.checkpoint.clone();
+    let resume_at = checkpoint
+        .as_deref()
+        .and_then(|path| checkpoint::load_checkpoint_file(std::path::Path::new(path)).ok())
+        .map(|c| c.next_k);
+    Some(AbortInfo {
+        rank,
+        error,
+        collectives_done: meters[rank].allreduces + meters[rank].all_to_alls,
+        resume_at,
+        checkpoint,
+        meters: meters.to_vec(),
+    })
+}
+
+/// Split the outcomes: the report's history is rank 0's (or the first
+/// surviving rank's on abort — an empty default if none survived, with a
+/// note saying so), all tracers (when tracing) feed the summary.
+fn collect(outcomes: Vec<RankOutcome>, notes: &mut Vec<String>) -> (History, Vec<Tracer>) {
+    let mut histories: Vec<Option<History>> = Vec::with_capacity(outcomes.len());
     let mut tracers = Vec::new();
-    for r in results {
-        let (h, t) = r?;
-        histories.push(h);
-        tracers.extend(t);
+    for o in outcomes {
+        histories.push(o.history.ok());
+        tracers.extend(o.tracer);
     }
-    let meters: Vec<CostMeter> = histories.iter().map(|h| h.meter).collect();
-    Ok((histories.swap_remove(0), meters, tracers))
+    let history = match histories.iter_mut().find_map(|h| h.take()) {
+        Some(h) => h,
+        None => {
+            let note = "no rank completed: the report's trajectory fields are empty".to_string();
+            eprintln!("note: {note}");
+            notes.push(note);
+            History::default()
+        }
+    };
+    (history, tracers)
 }
 
 #[cfg(test)]
@@ -364,6 +539,9 @@ mod tests {
                 backend: "native".into(),
                 artifact_dir: "artifacts".into(),
                 trace: None,
+                comm_timeout_ms: None,
+                checkpoint_every: 0,
+                checkpoint_dir: None,
             },
         }
     }
@@ -514,6 +692,75 @@ mod tests {
         let chrome = std::fs::read_to_string(&path).unwrap();
         assert!(chrome.starts_with("{\"traceEvents\":["));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn deadline_is_neutral_on_a_healthy_run() {
+        // A generous receive deadline must not perturb the trajectory or
+        // the wire meters — the timeout path only costs when it fires.
+        let plain = run_experiment(&cfg("cabcd", 2)).unwrap();
+        let mut c = cfg("cabcd", 2);
+        c.run.comm_timeout_ms = Some(60_000);
+        let bounded = run_experiment(&c).unwrap();
+        assert_eq!(plain.final_sol_err, bounded.final_sol_err);
+        assert_eq!(plain.history.meter, bounded.history.meter);
+        assert_eq!(bounded.history.meter.timeouts, 0);
+        assert!(bounded.aborted_at.is_none());
+    }
+
+    #[test]
+    fn checkpointed_run_writes_resumable_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "cabcd_driver_ckpt_{}",
+            std::process::id()
+        ));
+        let plain = run_experiment(&cfg("cabcd", 2)).unwrap();
+        let mut c = cfg("cabcd", 2);
+        c.run.checkpoint_every = 10;
+        c.run.checkpoint_dir = Some(dir.clone());
+        let ckpt_run = run_experiment(&c).unwrap();
+        // Checkpointing is trajectory-neutral under the blocking schedule.
+        assert_eq!(plain.final_sol_err, ckpt_run.final_sol_err);
+        // Every rank left a loadable, correctly-typed snapshot behind.
+        let sink = FileSink::new(&dir).unwrap();
+        for rank in 0..2 {
+            let ckpt = sink.load(rank).unwrap().expect("missing checkpoint");
+            assert_eq!(ckpt.kind, "bcd");
+            assert_eq!(ckpt.rank, rank as u32);
+            assert_eq!(ckpt.ranks, 2);
+            assert!(ckpt.next_k > 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_rank_yields_partial_report_with_abort_info() {
+        // Force a per-rank failure *inside* the SPMD closure without a
+        // fault injector: the checkpoint sink cannot be created under a
+        // regular file, so every rank errors before its first collective.
+        let blocker = std::env::temp_dir().join(format!(
+            "cabcd_driver_abort_{}",
+            std::process::id()
+        ));
+        std::fs::write(&blocker, b"not a directory").unwrap();
+        let mut c = cfg("cabcd", 2);
+        c.run.checkpoint_every = 5;
+        c.run.checkpoint_dir = Some(blocker.join("sub"));
+        let report = run_experiment(&c).expect("abort must yield a partial report");
+        let a = report.aborted_at.as_ref().expect("missing abort info");
+        assert_eq!(a.rank, 0, "exemplar must be the lowest failing rank");
+        assert_eq!(a.meters.len(), 2);
+        assert_eq!(a.resume_at, None);
+        assert!(
+            report.notes.iter().any(|n| n.starts_with("aborted:")),
+            "abort note missing: {:?}",
+            report.notes
+        );
+        let json = report.to_json();
+        assert!(json.contains("\"aborted_at\":{"), "{json}");
+        assert!(json.contains("\"collectives_done\""), "{json}");
+        assert!(json.contains("\"retries\""), "{json}");
+        std::fs::remove_file(&blocker).ok();
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 pub mod driver;
 
-pub use driver::{run_experiment, ExperimentReport};
+pub use driver::{run_experiment, AbortInfo, ExperimentReport};
 
 use crate::error::Result;
 use crate::matrix::io::Dataset;

@@ -1,0 +1,726 @@
+//! Bitwise-exact s-step checkpoint/restart.
+//!
+//! The s-step structure makes solver state at an outer boundary *tiny*:
+//! the iterate vectors, the sampler's four RNG words (the scratch
+//! permutation is identity between draws), the recorded history, and
+//! this rank's [`CostMeter`]. [`crate::engine::drive`] snapshots exactly
+//! that every `every`-th outer iteration through a [`CheckpointSink`],
+//! and [`Session::resume`](crate::engine::Session::resume) replays the
+//! remaining iterations — **bitwise-equal** to an uninterrupted run with
+//! the same checkpoint cadence, for every method under both schedules
+//! (asserted by `rust/tests/chaos.rs`).
+//!
+//! # Capture semantics
+//!
+//! A checkpoint taken at outer iteration `k` holds the state *after*
+//! `apply(k)` and `boundary(k)`: sampler RNG after draws `0..=k`, the
+//! iterate after update `k`, history through `h = (k+1)·s`, and the
+//! meter after every collective of iterations `0..=k`. `next_k = k+1`
+//! is the first iteration the resumed run executes.
+//!
+//! While checkpointing (or a staged resume) is active, the engine runs
+//! the **non-prefetch** schedules: the cross-iteration Gram prefetch
+//! (and `bcd_row`'s look-ahead all-to-all) would leave iteration `k+1`'s
+//! collectives in flight at the capture point, so capture serializes the
+//! pipeline instead of trying to attribute cross-iteration traffic.
+//! Collective and word counts are schedule-invariant (the
+//! `engine_equivalence` suite pins this), only the overlap window
+//! shrinks. With checkpointing **off** nothing changes — the enable
+//! check is two thread-local reads, and the 48 pinned engine configs
+//! stay bitwise/event-identical.
+//!
+//! The meter is restored wholesale at resume, with one caveat:
+//! [`CostMeter::buf_allocs`] counts pool warmup, and a resumed run
+//! re-warms its fresh communicator pool, so that one field may exceed
+//! the uninterrupted run's count. All wire counts (messages, words,
+//! collectives, waits) are exact.
+//!
+//! # Wire format
+//!
+//! [`Checkpoint::to_bytes`] is a little-endian, versioned, stdlib-only
+//! layout: magic `CABCDCKP`, format version, method tag, rank geometry,
+//! `next_k`, RNG words, named `f64`/`u64` state segments, history
+//! records, meter. [`Checkpoint::state_words`] (the machine-independent
+//! size of the solver state proper) is gated in `BENCH_hotpath.json`.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::comm::CostMeter;
+use crate::error::{Error, Result};
+use crate::metrics::{History, IterRecord, ProxRecord};
+
+/// Format version written into every serialized checkpoint. Bump on any
+/// layout change; [`Checkpoint::from_bytes`] rejects other versions.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// Magic prefix of a serialized checkpoint.
+pub const CHECKPOINT_MAGIC: &[u8; 8] = b"CABCDCKP";
+
+/// One rank's full solver snapshot at an outer-iteration boundary.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    /// Step-kind tag ([`crate::engine::CaStep::ckpt_kind`]) — validated
+    /// at restore so a BDCD checkpoint cannot resume a BCD run.
+    pub kind: String,
+    /// Owning rank.
+    pub rank: u32,
+    /// Group size the snapshot was taken under.
+    pub ranks: u32,
+    /// First outer iteration the resumed run executes.
+    pub next_k: u64,
+    /// `History::iters` at capture.
+    pub iters: u64,
+    /// Sampler RNG words (empty for sampler-less steps).
+    pub rng: Vec<u64>,
+    /// Named `f64` state segments (iterates, residuals) in a fixed
+    /// per-method order.
+    pub seg_f64: Vec<(String, Vec<f64>)>,
+    /// Named `u64` state segments (e.g. `bcd_row`'s per-iteration load
+    /// maxima).
+    pub seg_u64: Vec<(String, Vec<u64>)>,
+    /// Smooth-solver records at capture.
+    pub records: Vec<IterRecord>,
+    /// Prox certificates at capture.
+    pub prox: Vec<ProxRecord>,
+    /// Gram conditioning samples at capture.
+    pub gram_conds: Vec<f64>,
+    /// This rank's meter after every collective of iterations `0..next_k`.
+    pub meter: CostMeter,
+}
+
+impl Checkpoint {
+    /// Append a named `f64` segment (save-hook helper).
+    pub fn push_f64(&mut self, name: &str, data: &[f64]) {
+        self.seg_f64.push((name.to_string(), data.to_vec()));
+    }
+
+    /// Append a named `u64` segment.
+    pub fn push_u64(&mut self, name: &str, data: &[u64]) {
+        self.seg_u64.push((name.to_string(), data.to_vec()));
+    }
+
+    /// Fetch a named `f64` segment (restore-hook helper).
+    pub fn get_f64(&self, name: &str) -> Result<&[f64]> {
+        self.seg_f64
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| d.as_slice())
+            .ok_or_else(|| Error::Runtime(format!("checkpoint missing f64 segment {name:?}")))
+    }
+
+    /// The four xoshiro words of the sampler RNG (restore-hook helper for
+    /// the shared-seed steps, which all store exactly one sampler state).
+    pub fn rng_words(&self) -> Result<[u64; 4]> {
+        if self.rng.len() != 4 {
+            return Err(Error::Runtime(format!(
+                "checkpoint: {} RNG words, expected 4",
+                self.rng.len()
+            )));
+        }
+        Ok([self.rng[0], self.rng[1], self.rng[2], self.rng[3]])
+    }
+
+    /// Fetch a named `u64` segment.
+    pub fn get_u64(&self, name: &str) -> Result<&[u64]> {
+        self.seg_u64
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| d.as_slice())
+            .ok_or_else(|| Error::Runtime(format!("checkpoint missing u64 segment {name:?}")))
+    }
+
+    /// Copy a named `f64` segment into an existing buffer of the same
+    /// length (the common restore path).
+    pub fn read_f64_into(&self, name: &str, out: &mut [f64]) -> Result<()> {
+        let seg = self.get_f64(name)?;
+        if seg.len() != out.len() {
+            return Err(Error::Runtime(format!(
+                "checkpoint segment {name:?}: {} words, expected {}",
+                seg.len(),
+                out.len()
+            )));
+        }
+        out.copy_from_slice(seg);
+        Ok(())
+    }
+
+    /// 64-bit words of solver state proper (RNG + named segments) — the
+    /// machine-independent size gated by the hot-path bench. History and
+    /// meter are bookkeeping, not solver state, and scale with the record
+    /// cadence rather than the method.
+    pub fn state_words(&self) -> usize {
+        self.rng.len()
+            + self.seg_f64.iter().map(|(_, d)| d.len()).sum::<usize>()
+            + self.seg_u64.iter().map(|(_, d)| d.len()).sum::<usize>()
+    }
+
+    /// Serialize (little-endian, versioned; see the module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(128 + 8 * self.state_words());
+        out.extend_from_slice(CHECKPOINT_MAGIC);
+        put_u32(&mut out, CHECKPOINT_VERSION);
+        put_str(&mut out, &self.kind);
+        put_u32(&mut out, self.rank);
+        put_u32(&mut out, self.ranks);
+        put_u64(&mut out, self.next_k);
+        put_u64(&mut out, self.iters);
+        put_u32(&mut out, self.rng.len() as u32);
+        for &w in &self.rng {
+            put_u64(&mut out, w);
+        }
+        put_u32(&mut out, self.seg_f64.len() as u32);
+        for (name, data) in &self.seg_f64 {
+            put_str(&mut out, name);
+            put_u64(&mut out, data.len() as u64);
+            for &v in data {
+                put_f64(&mut out, v);
+            }
+        }
+        put_u32(&mut out, self.seg_u64.len() as u32);
+        for (name, data) in &self.seg_u64 {
+            put_str(&mut out, name);
+            put_u64(&mut out, data.len() as u64);
+            for &v in data {
+                put_u64(&mut out, v);
+            }
+        }
+        put_u32(&mut out, self.records.len() as u32);
+        for r in &self.records {
+            put_u64(&mut out, r.iter as u64);
+            put_f64(&mut out, r.obj_err);
+            put_f64(&mut out, r.sol_err);
+        }
+        put_u32(&mut out, self.prox.len() as u32);
+        for r in &self.prox {
+            put_u64(&mut out, r.iter as u64);
+            put_f64(&mut out, r.pen_obj);
+            put_f64(&mut out, r.gap);
+            put_f64(&mut out, r.subgrad);
+            put_u64(&mut out, r.nnz as u64);
+        }
+        put_u32(&mut out, self.gram_conds.len() as u32);
+        for &v in &self.gram_conds {
+            put_f64(&mut out, v);
+        }
+        for v in [
+            self.meter.msgs,
+            self.meter.words,
+            self.meter.recv_msgs,
+            self.meter.recv_words,
+            self.meter.allreduces,
+            self.meter.all_to_alls,
+            self.meter.collective_waits,
+            self.meter.buf_allocs,
+            self.meter.retries,
+            self.meter.timeouts,
+        ] {
+            put_u64(&mut out, v);
+        }
+        out
+    }
+
+    /// Deserialize a [`Checkpoint::to_bytes`] blob, validating magic and
+    /// version.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut rd = Reader { buf: bytes, pos: 0 };
+        let magic = rd.bytes(8)?;
+        if magic != CHECKPOINT_MAGIC {
+            return Err(Error::Runtime("checkpoint: bad magic".into()));
+        }
+        let version = rd.u32()?;
+        if version != CHECKPOINT_VERSION {
+            return Err(Error::Runtime(format!(
+                "checkpoint: format version {version} (this build reads {CHECKPOINT_VERSION})"
+            )));
+        }
+        let kind = rd.string()?;
+        let rank = rd.u32()?;
+        let ranks = rd.u32()?;
+        let next_k = rd.u64()?;
+        let iters = rd.u64()?;
+        let nrng = rd.u32()? as usize;
+        let mut rng = Vec::with_capacity(nrng);
+        for _ in 0..nrng {
+            rng.push(rd.u64()?);
+        }
+        let nf = rd.u32()? as usize;
+        let mut seg_f64 = Vec::with_capacity(nf);
+        for _ in 0..nf {
+            let name = rd.string()?;
+            let len = rd.u64()? as usize;
+            let mut data = Vec::with_capacity(len);
+            for _ in 0..len {
+                data.push(rd.f64()?);
+            }
+            seg_f64.push((name, data));
+        }
+        let nu = rd.u32()? as usize;
+        let mut seg_u64 = Vec::with_capacity(nu);
+        for _ in 0..nu {
+            let name = rd.string()?;
+            let len = rd.u64()? as usize;
+            let mut data = Vec::with_capacity(len);
+            for _ in 0..len {
+                data.push(rd.u64()?);
+            }
+            seg_u64.push((name, data));
+        }
+        let nr = rd.u32()? as usize;
+        let mut records = Vec::with_capacity(nr);
+        for _ in 0..nr {
+            records.push(IterRecord {
+                iter: rd.u64()? as usize,
+                obj_err: rd.f64()?,
+                sol_err: rd.f64()?,
+            });
+        }
+        let np = rd.u32()? as usize;
+        let mut prox = Vec::with_capacity(np);
+        for _ in 0..np {
+            prox.push(ProxRecord {
+                iter: rd.u64()? as usize,
+                pen_obj: rd.f64()?,
+                gap: rd.f64()?,
+                subgrad: rd.f64()?,
+                nnz: rd.u64()? as usize,
+            });
+        }
+        let ng = rd.u32()? as usize;
+        let mut gram_conds = Vec::with_capacity(ng);
+        for _ in 0..ng {
+            gram_conds.push(rd.f64()?);
+        }
+        let meter = CostMeter {
+            msgs: rd.u64()?,
+            words: rd.u64()?,
+            recv_msgs: rd.u64()?,
+            recv_words: rd.u64()?,
+            allreduces: rd.u64()?,
+            all_to_alls: rd.u64()?,
+            collective_waits: rd.u64()?,
+            buf_allocs: rd.u64()?,
+            retries: rd.u64()?,
+            timeouts: rd.u64()?,
+        };
+        Ok(Checkpoint {
+            kind,
+            rank,
+            ranks,
+            next_k,
+            iters,
+            rng,
+            seg_f64,
+            seg_u64,
+            records,
+            prox,
+            gram_conds,
+            meter,
+        })
+    }
+
+    /// Restore this checkpoint's history bookkeeping into `history`
+    /// (engine resume path).
+    pub(crate) fn restore_history(&self, history: &mut History) {
+        history.records = self.records.clone();
+        history.prox = self.prox.clone();
+        history.gram_conds = self.gram_conds.clone();
+        history.iters = self.iters as usize;
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn bytes(&mut self, n: usize) -> Result<&[u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Runtime(format!(
+                "checkpoint: truncated at byte {} (wanted {n} more of {})",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let b = self.bytes(len)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| Error::Runtime("checkpoint: non-UTF8 name".into()))
+    }
+}
+
+/// Where captured checkpoints go. Each rank thread installs its own sink
+/// (a [`MemorySink`] clone sharing one store, or a [`FileSink`] writing
+/// per-rank files).
+pub trait CheckpointSink {
+    /// Persist `ckpt` as the latest snapshot for `ckpt.rank` (previous
+    /// snapshots for the rank may be overwritten).
+    fn store(&mut self, ckpt: &Checkpoint) -> Result<()>;
+
+    /// Human-readable location of `rank`'s latest snapshot (driver
+    /// reports name it so an aborted run's notes say what to resume from).
+    fn describe(&self, rank: usize) -> String;
+}
+
+/// In-memory sink: clones share one store, so P rank threads install P
+/// clones and the test harness reads every rank's snapshot afterwards.
+#[derive(Clone, Default)]
+pub struct MemorySink {
+    store: Arc<Mutex<HashMap<u32, Vec<u8>>>>,
+}
+
+impl MemorySink {
+    /// A fresh, empty shared store.
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+
+    /// Deserialize `rank`'s latest snapshot, if one was captured.
+    pub fn load(&self, rank: usize) -> Result<Option<Checkpoint>> {
+        let store = self
+            .store
+            .lock()
+            .map_err(|_| Error::Runtime("checkpoint store poisoned".into()))?;
+        match store.get(&(rank as u32)) {
+            Some(bytes) => Checkpoint::from_bytes(bytes).map(Some),
+            None => Ok(None),
+        }
+    }
+}
+
+impl CheckpointSink for MemorySink {
+    fn store(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        let bytes = ckpt.to_bytes();
+        let mut store = self
+            .store
+            .lock()
+            .map_err(|_| Error::Runtime("checkpoint store poisoned".into()))?;
+        store.insert(ckpt.rank, bytes);
+        Ok(())
+    }
+
+    fn describe(&self, _rank: usize) -> String {
+        "memory".to_string()
+    }
+}
+
+/// File-backed sink: one file per rank under a directory, written whole
+/// then renamed so readers never observe a torn snapshot.
+#[derive(Clone, Debug)]
+pub struct FileSink {
+    dir: PathBuf,
+}
+
+impl FileSink {
+    /// A sink writing `ckpt_r<rank>.bin` files under `dir` (created if
+    /// missing).
+    pub fn new(dir: impl Into<PathBuf>) -> Result<FileSink> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(FileSink { dir })
+    }
+
+    /// Path of `rank`'s snapshot file.
+    pub fn rank_path(&self, rank: usize) -> PathBuf {
+        self.dir.join(format!("ckpt_r{rank}.bin"))
+    }
+
+    /// Load and deserialize `rank`'s snapshot, if the file exists.
+    pub fn load(&self, rank: usize) -> Result<Option<Checkpoint>> {
+        let path = self.rank_path(rank);
+        if !path.exists() {
+            return Ok(None);
+        }
+        load_checkpoint_file(&path).map(Some)
+    }
+}
+
+impl CheckpointSink for FileSink {
+    fn store(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        let path = self.rank_path(ckpt.rank as usize);
+        let tmp = self.dir.join(format!("ckpt_r{}.tmp", ckpt.rank));
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&ckpt.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    fn describe(&self, rank: usize) -> String {
+        self.rank_path(rank).display().to_string()
+    }
+}
+
+/// Read and deserialize one checkpoint file.
+pub fn load_checkpoint_file(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)?;
+    Checkpoint::from_bytes(&bytes)
+}
+
+// ---- thread-local engine hookup (mirrors `trace`'s install/take) -------
+
+struct CkptState {
+    sink: Box<dyn CheckpointSink>,
+    every: usize,
+}
+
+thread_local! {
+    static STATE: RefCell<Option<CkptState>> = const { RefCell::new(None) };
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static STAGED: RefCell<Option<Checkpoint>> = const { RefCell::new(None) };
+    static STAGED_FLAG: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Install a capture sink on the current thread (one per rank thread,
+/// like [`crate::trace::install`]): subsequent [`crate::engine::drive`]
+/// calls snapshot every `every`-th outer iteration. Replaces and returns
+/// any previously installed sink.
+pub fn install(sink: Box<dyn CheckpointSink>, every: usize) -> Option<Box<dyn CheckpointSink>> {
+    ACTIVE.with(|a| a.set(every > 0));
+    STATE.with(|s| {
+        s.borrow_mut()
+            .replace(CkptState { sink, every })
+            .map(|st| st.sink)
+    })
+}
+
+/// Remove and return the current thread's capture sink.
+pub fn take() -> Option<Box<dyn CheckpointSink>> {
+    ACTIVE.with(|a| a.set(false));
+    STATE.with(|s| s.borrow_mut().take().map(|st| st.sink))
+}
+
+/// True when a capture sink is installed on this thread. Cost when off:
+/// one thread-local read — the zero-overhead-when-disabled contract.
+pub fn enabled() -> bool {
+    ACTIVE.with(|a| a.get())
+}
+
+/// Stage a checkpoint for the next [`crate::engine::drive`] call on this
+/// thread to resume from ([`crate::engine::Session::resume`] does this).
+pub fn stage_resume(ckpt: Checkpoint) {
+    STAGED_FLAG.with(|f| f.set(true));
+    STAGED.with(|s| *s.borrow_mut() = Some(ckpt));
+}
+
+/// True when a staged resume is pending on this thread.
+pub fn resume_staged() -> bool {
+    STAGED_FLAG.with(|f| f.get())
+}
+
+/// True when checkpointing affects the engine schedule on this thread —
+/// capture installed or a resume staged. The engine (and `bcd_row`'s
+/// look-ahead pipeline) disable cross-iteration prefetch while active;
+/// see the module docs.
+pub fn active() -> bool {
+    enabled() || resume_staged()
+}
+
+/// Consume the staged resume checkpoint, if any (engine entry).
+pub(crate) fn take_staged() -> Option<Checkpoint> {
+    STAGED_FLAG.with(|f| f.set(false));
+    STAGED.with(|s| s.borrow_mut().take())
+}
+
+/// Whether the engine should capture after completing outer iteration
+/// `k` (0-based): every `every`-th boundary.
+pub(crate) fn capture_due(k: usize) -> bool {
+    enabled()
+        && STATE.with(|s| {
+            s.borrow()
+                .as_ref()
+                .is_some_and(|st| st.every > 0 && (k + 1) % st.every == 0)
+        })
+}
+
+/// Store a captured checkpoint through the installed sink.
+pub(crate) fn store(ckpt: &Checkpoint) -> Result<()> {
+    STATE.with(|s| match s.borrow_mut().as_mut() {
+        Some(st) => st.sink.store(ckpt),
+        None => Err(Error::Runtime(
+            "checkpoint capture with no sink installed".into(),
+        )),
+    })
+}
+
+/// Location of this thread's latest snapshot for `rank`, if a sink is
+/// installed (driver abort notes).
+pub fn describe_sink(rank: usize) -> Option<String> {
+    STATE.with(|s| s.borrow().as_ref().map(|st| st.sink.describe(rank)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_ckpt() -> Checkpoint {
+        Checkpoint {
+            kind: "bcd".into(),
+            rank: 2,
+            ranks: 4,
+            next_k: 7,
+            iters: 21,
+            rng: vec![1, 2, 3, 4],
+            seg_f64: vec![
+                ("w".into(), vec![1.5, -2.25, 0.0]),
+                ("alpha".into(), vec![f64::NAN, 1e-300]),
+            ],
+            seg_u64: vec![("max_loads".into(), vec![9, 8, 7])],
+            records: vec![IterRecord {
+                iter: 3,
+                obj_err: -0.5,
+                sol_err: 0.25,
+            }],
+            prox: vec![ProxRecord {
+                iter: 3,
+                pen_obj: 1.0,
+                gap: f64::NAN,
+                subgrad: 0.125,
+                nnz: 5,
+            }],
+            gram_conds: vec![10.0, 20.0],
+            meter: CostMeter {
+                msgs: 1,
+                words: 2,
+                recv_msgs: 3,
+                recv_words: 4,
+                allreduces: 5,
+                all_to_alls: 6,
+                collective_waits: 7,
+                buf_allocs: 8,
+                retries: 9,
+                timeouts: 10,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let c = sample_ckpt();
+        let bytes = c.to_bytes();
+        let d = Checkpoint::from_bytes(&bytes).unwrap();
+        // Compare through re-serialization: covers every field,
+        // including NaN payload bits.
+        assert_eq!(bytes, d.to_bytes());
+        assert_eq!(d.kind, "bcd");
+        assert_eq!(d.next_k, 7);
+        assert_eq!(d.get_f64("w").unwrap(), &[1.5, -2.25, 0.0]);
+        assert_eq!(d.get_u64("max_loads").unwrap(), &[9, 8, 7]);
+        assert_eq!(d.meter, c.meter);
+        assert_eq!(d.state_words(), 4 + 5 + 3);
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut bytes = sample_ckpt().to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..6]).is_err(), "truncated");
+        bytes[0] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bytes).is_err(), "magic");
+        let mut bytes = sample_ckpt().to_bytes();
+        bytes[8] = 99; // version LE byte 0
+        let err = format!("{:?}", Checkpoint::from_bytes(&bytes).unwrap_err());
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn memory_sink_roundtrips_per_rank() {
+        let sink = MemorySink::new();
+        let mut s0 = sink.clone();
+        let mut c = sample_ckpt();
+        s0.store(&c).unwrap();
+        c.rank = 3;
+        c.next_k = 11;
+        s0.store(&c).unwrap();
+        let got = sink.load(2).unwrap().unwrap();
+        assert_eq!(got.next_k, 7);
+        let got3 = sink.load(3).unwrap().unwrap();
+        assert_eq!(got3.next_k, 11);
+        assert!(sink.load(0).unwrap().is_none());
+    }
+
+    #[test]
+    fn file_sink_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("cabcd_ckpt_test_{}", std::process::id()));
+        let mut sink = FileSink::new(&dir).unwrap();
+        let c = sample_ckpt();
+        sink.store(&c).unwrap();
+        let got = sink.load(2).unwrap().unwrap();
+        assert_eq!(got.to_bytes(), c.to_bytes());
+        assert!(sink.describe(2).contains("ckpt_r2.bin"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn thread_local_install_take_and_cadence() {
+        assert!(!enabled());
+        assert!(!capture_due(0));
+        install(Box::new(MemorySink::new()), 3);
+        assert!(enabled());
+        assert!(active());
+        // every=3: capture after outer iterations 2, 5, 8, … (0-based).
+        assert!(!capture_due(0));
+        assert!(!capture_due(1));
+        assert!(capture_due(2));
+        assert!(capture_due(5));
+        let _ = take();
+        assert!(!enabled());
+        assert!(!active());
+    }
+
+    #[test]
+    fn staging_roundtrip() {
+        assert!(!resume_staged());
+        stage_resume(sample_ckpt());
+        assert!(resume_staged());
+        assert!(active());
+        let got = take_staged().unwrap();
+        assert_eq!(got.next_k, 7);
+        assert!(!resume_staged());
+        assert!(take_staged().is_none());
+    }
+}

@@ -50,8 +50,10 @@
 //! identical to the pre-engine per-solver loops (frozen copies of which
 //! are asserted against in `rust/tests/engine_equivalence.rs`).
 
+pub mod checkpoint;
 pub mod step;
 
+pub use checkpoint::{Checkpoint, CheckpointSink, FileSink, MemorySink};
 pub use step::{drive, CaStep, Sample};
 
 use crate::comm::Communicator;
@@ -467,6 +469,19 @@ impl<'a, C: Communicator> Session<'a, C> {
         self
     }
 
+    /// Resume this session's run from a [`Checkpoint`] instead of
+    /// starting at iteration 0. The snapshot is staged on the current
+    /// thread; the subsequent [`Session::run`] restores the solver state,
+    /// history, and meter, then executes the remaining outer iterations —
+    /// bitwise-equal to an uninterrupted run at the same checkpoint
+    /// cadence (see the [`checkpoint`] module docs for the schedule
+    /// implications). The checkpoint's method tag and rank geometry are
+    /// validated inside the engine.
+    pub fn resume(self, ckpt: Checkpoint) -> Self {
+        checkpoint::stage_resume(ckpt);
+        self
+    }
+
     /// Dispatch to the method's [`CaStep`] and run it through the shared
     /// pipeline core. Non-smooth regularizers route the matched-layout
     /// BCD/BDCD methods through the CA-Prox steps (same packed `[G|r]`
@@ -617,6 +632,16 @@ impl<'a, C: Communicator> Session<'a, C> {
                     n_global,
                 },
             ) => {
+                if checkpoint::resume_staged() {
+                    // Consume the stale staging so it cannot leak into an
+                    // unrelated later run on this thread.
+                    let _ = checkpoint::take_staged();
+                    return Err(Error::InvalidArg(
+                        "method cg does not run through the s-step engine and \
+                         cannot resume from a checkpoint"
+                            .into(),
+                    ));
+                }
                 let copts = CgOpts {
                     lam: opts.lam,
                     max_iters: opts.iters,

@@ -41,7 +41,8 @@
 //! `rust/tests/engine_equivalence.rs`).
 
 use crate::comm::Communicator;
-use crate::error::Result;
+use crate::engine::checkpoint::{self, Checkpoint};
+use crate::error::{Error, Result};
 use crate::metrics::History;
 use crate::solvers::common::{cond_stride, packed_gram_cond, should_record, SolverOpts};
 use crate::trace::{self, OpClass, SpanKind};
@@ -185,6 +186,63 @@ pub trait CaStep<C: Communicator> {
         let _ = comm;
         Ok(())
     }
+
+    /// Stable tag identifying this step's checkpoint layout, written into
+    /// every [`Checkpoint`] and validated at resume so a snapshot from one
+    /// method cannot restore another. The default marks the step as not
+    /// checkpointable.
+    fn ckpt_kind(&self) -> &'static str {
+        "unsupported"
+    }
+
+    /// Serialize the step's full mutable state — sampler RNG words plus
+    /// every evolving iterate segment — into `ckpt`. Scratch that is
+    /// recomputed from scratch each outer iteration must **not** be
+    /// saved. Override together with [`CaStep::restore_state`].
+    fn save_state(&self, ckpt: &mut Checkpoint) -> Result<()> {
+        let _ = ckpt;
+        Err(Error::Runtime(
+            "this method does not support checkpointing".into(),
+        ))
+    }
+
+    /// Restore the step's mutable state from a [`Checkpoint`] produced by
+    /// [`CaStep::save_state`] on the same method and geometry. After this
+    /// call the step must be bitwise-indistinguishable from one that ran
+    /// iterations `0..ckpt.next_k` live.
+    fn restore_state(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        let _ = ckpt;
+        Err(Error::Runtime(
+            "this method does not support checkpointing".into(),
+        ))
+    }
+}
+
+/// Snapshot the full solver state after completing outer iteration `k`
+/// and hand it to the installed [`checkpoint`] sink. Runs only on the
+/// non-prefetch schedules (capture is a clean boundary there: every
+/// collective of iterations `0..=k` has completed, none of `k+1`'s has
+/// started).
+fn capture<C: Communicator, S: CaStep<C> + ?Sized>(
+    step: &S,
+    comm: &C,
+    history: &History,
+    k: usize,
+) -> Result<()> {
+    let mut ckpt = Checkpoint {
+        kind: step.ckpt_kind().to_string(),
+        rank: comm.rank() as u32,
+        ranks: comm.size() as u32,
+        next_k: (k + 1) as u64,
+        iters: history.iters as u64,
+        records: history.records.clone(),
+        prox: history.prox.clone(),
+        gram_conds: history.gram_conds.clone(),
+        meter: *comm.meter(),
+        ..Checkpoint::default()
+    };
+    step.save_state(&mut ckpt)?;
+    checkpoint::store(&ckpt)
 }
 
 /// Gram conditioning sampler owned by [`drive`]: probe parameters, the
@@ -302,11 +360,46 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
     let sb = opts.s * opts.b;
     let mut cond = CondTracker::new::<C, S>(&*step, opts, sb, outer);
 
-    let t0 = trace::now();
-    step.record(comm, history, 0)?;
-    trace::record(SpanKind::Record, OpClass::Compute, 0, 0, t0);
+    // Staged resume (`Session::resume`): restore the step's iterate
+    // state, the recorded history, and this rank's meter, then continue
+    // from the checkpoint's `next_k`. `ckpt_on` must be latched *before*
+    // the staged checkpoint is consumed — it selects the non-prefetch
+    // schedules (see the `checkpoint` module docs).
+    let ckpt_on = checkpoint::active();
+    let resumed = checkpoint::take_staged();
+    let k0 = match &resumed {
+        Some(ckpt) => {
+            if ckpt.kind != step.ckpt_kind() {
+                return Err(Error::Runtime(format!(
+                    "checkpoint kind {:?} cannot resume a {:?} run",
+                    ckpt.kind,
+                    step.ckpt_kind()
+                )));
+            }
+            if ckpt.ranks as usize != comm.size() || ckpt.rank as usize != comm.rank() {
+                return Err(Error::Runtime(format!(
+                    "checkpoint from rank {} of {} cannot resume rank {} of {}",
+                    ckpt.rank,
+                    ckpt.ranks,
+                    comm.rank(),
+                    comm.size()
+                )));
+            }
+            step.restore_state(ckpt)?;
+            ckpt.restore_history(history);
+            *comm.meter_mut() = ckpt.meter;
+            ckpt.next_k as usize
+        }
+        None => 0,
+    };
 
-    if opts.overlap && step.prefetch_gram() && outer > 0 {
+    if resumed.is_none() {
+        let t0 = trace::now();
+        step.record(comm, history, 0)?;
+        trace::record(SpanKind::Record, OpClass::Compute, 0, 0, t0);
+    }
+
+    if opts.overlap && step.prefetch_gram() && outer > 0 && !ckpt_on {
         // Prefetch schedule. Pipeline prologue: gram 0 is computed before
         // the loop; thereafter gram k+1 is computed under the in-flight
         // reduction of [gram_k | state_k]. Payload buffers ping-pong
@@ -366,7 +459,7 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
         // order, but the reduction is non-blocking with `hidden_work`
         // running under it.
         let mut buf = vec![0.0; total];
-        'outer_loop2: for k in 0..outer {
+        'outer_loop2: for k in k0..outer {
             let t0 = trace::now();
             let smp = step.sample(comm, k)?;
             trace::record(SpanKind::Sample, OpClass::Compute, k as u64, 0, t0);
@@ -388,12 +481,15 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
             if boundary(step, opts, comm, history, k, outer)? {
                 break 'outer_loop2;
             }
+            if checkpoint::capture_due(k) {
+                capture::<C, S>(step, comm, history, k)?;
+            }
         }
     } else {
         // Blocking schedule: one hoisted payload buffer, `allreduce_sum`,
         // hidden work between the collective and the solve.
         let mut buf = vec![0.0; total];
-        'outer_loop3: for k in 0..outer {
+        'outer_loop3: for k in k0..outer {
             let t0 = trace::now();
             let smp = step.sample(comm, k)?;
             trace::record(SpanKind::Sample, OpClass::Compute, k as u64, 0, t0);
@@ -413,6 +509,9 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
 
             if boundary(step, opts, comm, history, k, outer)? {
                 break 'outer_loop3;
+            }
+            if checkpoint::capture_due(k) {
+                capture::<C, S>(step, comm, history, k)?;
             }
         }
     }

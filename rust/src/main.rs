@@ -86,6 +86,16 @@ impl Args {
         }
     }
 
+    fn u64_opt(&self, key: &str) -> Result<Option<u64>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| Error::InvalidArg(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
     fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
         match self.map.get(key) {
             None => Ok(None),
@@ -115,6 +125,10 @@ USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
               [--overlap] [--json] [--reg l2|l1|elastic|none]
               [--l1-ratio R] [--local-iters N (cocoa)]
               [--trace FILE (Chrome trace-event JSON, one track per rank)]
+              [--comm-timeout MS (deadline per blocking receive; a stalled
+               or dead rank poisons the group instead of hanging)]
+              [--checkpoint-every K (snapshot state every K-th s-step
+               block)] [--checkpoint-dir DIR (default ARTIFACTS/checkpoints)]
   gen-data    --out FILE [--name abalone] [--scale K] [--seed N] [--verify]
   cost-table  [--d D] [--n N] [--p P] [--b B] [--s S] [--h H]
   scaling     [--mode strong|weak] [--machine mpi|spark] [--d D] [--log2n E]
@@ -185,17 +199,43 @@ fn cmd_train(args: &Args) -> Result<()> {
                 backend: args.str_or("backend", "native"),
                 artifact_dir: PathBuf::from(args.str_or("artifact-dir", "artifacts")),
                 trace: args.str_opt("trace").map(PathBuf::from),
+                comm_timeout_ms: args.u64_opt("comm-timeout")?,
+                checkpoint_every: args.usize_or("checkpoint-every", 0)?,
+                checkpoint_dir: args.str_opt("checkpoint-dir").map(PathBuf::from),
             },
         }
     };
-    // `--trace PATH` also overrides a config file's [run] trace setting.
+    // These flags also override a config file's [run] settings.
     let mut cfg = cfg;
     if let Some(path) = args.str_opt("trace") {
         cfg.run.trace = Some(PathBuf::from(path));
     }
+    if let Some(ms) = args.u64_opt("comm-timeout")? {
+        cfg.run.comm_timeout_ms = Some(ms);
+    }
+    if let Some(every) = args.str_opt("checkpoint-every") {
+        cfg.run.checkpoint_every = every
+            .parse()
+            .map_err(|e| Error::InvalidArg(format!("--checkpoint-every {every:?}: {e}")))?;
+    }
+    if let Some(dir) = args.str_opt("checkpoint-dir") {
+        cfg.run.checkpoint_dir = Some(PathBuf::from(dir));
+    }
+    cfg.validate()?;
     let report = run_experiment(&cfg)?;
     if args.flag("json") {
         println!("{}", report.to_json());
+    } else if let Some(a) = &report.aborted_at {
+        println!(
+            "ABORTED: rank {} failed after {} collectives: {}",
+            a.rank, a.collectives_done, a.error
+        );
+        match (&a.checkpoint, a.resume_at) {
+            (Some(path), Some(k)) => {
+                println!("resume from checkpoint {path} (restarts at s-step block {k})")
+            }
+            _ => println!("no resumable checkpoint (run with --checkpoint-every K)"),
+        }
     } else {
         println!(
             "dataset={} (d={}, n={})  method={}  b={} s={}  P={}  backend={}",

@@ -29,7 +29,7 @@
 //! nnz(w). One meter-excluded `(d+2)`-word allreduce per record.
 
 use crate::comm::Communicator;
-use crate::engine::{drive, CaStep, Sample};
+use crate::engine::{drive, CaStep, Checkpoint, Sample};
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -230,6 +230,25 @@ impl<C: Communicator> CaStep<C> for ProxBcdStep<'_> {
             Some(r) => r.subgrad <= tol,
             None => false,
         }
+    }
+
+    fn ckpt_kind(&self) -> &'static str {
+        "prox_bcd"
+    }
+
+    fn save_state(&self, ckpt: &mut Checkpoint) -> Result<()> {
+        // Same state set as the smooth primal step: sampler RNG + the two
+        // iterates (z / w_blocks / overlap are per-iteration scratch).
+        ckpt.rng = self.sampler.rng_state().to_vec();
+        ckpt.push_f64("w", &self.w);
+        ckpt.push_f64("alpha_loc", &self.alpha_loc);
+        Ok(())
+    }
+
+    fn restore_state(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        self.sampler.set_rng_state(ckpt.rng_words()?);
+        ckpt.read_f64_into("w", &mut self.w)?;
+        ckpt.read_f64_into("alpha_loc", &mut self.alpha_loc)
     }
 }
 

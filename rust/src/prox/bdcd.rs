@@ -25,7 +25,7 @@
 //! allreduce).
 
 use crate::comm::Communicator;
-use crate::engine::{drive, CaStep, Sample};
+use crate::engine::{drive, CaStep, Checkpoint, Sample};
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -226,6 +226,26 @@ impl<C: Communicator> CaStep<C> for ProxBdcdStep<'_> {
 
     fn converged(&self, history: &History, tol: f64) -> bool {
         history.prox.last().is_some_and(|r| r.subgrad <= tol)
+    }
+
+    fn ckpt_kind(&self) -> &'static str {
+        "prox_bdcd"
+    }
+
+    fn save_state(&self, ckpt: &mut Checkpoint) -> Result<()> {
+        // Same state set as the smooth dual step: sampler RNG + dual
+        // iterate + this rank's w slice (the block gathers and the
+        // overlap tensor are per-iteration scratch).
+        ckpt.rng = self.sampler.rng_state().to_vec();
+        ckpt.push_f64("alpha", &self.alpha);
+        ckpt.push_f64("w_loc", &self.w_loc);
+        Ok(())
+    }
+
+    fn restore_state(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        self.sampler.set_rng_state(ckpt.rng_words()?);
+        ckpt.read_f64_into("alpha", &mut self.alpha)?;
+        ckpt.read_f64_into("w_loc", &mut self.w_loc)
     }
 }
 

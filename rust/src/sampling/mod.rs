@@ -36,6 +36,21 @@ impl BlockSampler {
         self.dim
     }
 
+    /// Snapshot the sampler's RNG state. Between draws the scratch
+    /// permutation is identity (the swap log is undone after every
+    /// [`BlockSampler::draw_block`]), so the four RNG words are the
+    /// sampler's *entire* mutable state — restoring them with
+    /// [`BlockSampler::set_rng_state`] replays the exact future draw
+    /// sequence. This is what makes s-step checkpoints tiny.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore a [`BlockSampler::rng_state`] snapshot (checkpoint resume).
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng64::from_state(s);
+    }
+
     /// Draw `b ≤ dim` distinct indices (partial Fisher–Yates, O(b) per draw
     /// — the scratch permutation is restored by undoing the swap log, not
     /// rebuilt).
@@ -141,6 +156,18 @@ mod tests {
         let mut sorted2 = blk2.clone();
         sorted2.sort_unstable();
         assert_eq!(sorted2, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rng_state_roundtrip_replays_draws() {
+        let mut a = BlockSampler::new(64, 5);
+        a.draw_blocks(3, 4);
+        let snap = a.rng_state();
+        let future: Vec<_> = (0..20).map(|_| a.draw_block(6)).collect();
+        let mut b = BlockSampler::new(64, 5);
+        b.set_rng_state(snap);
+        let replay: Vec<_> = (0..20).map(|_| b.draw_block(6)).collect();
+        assert_eq!(future, replay, "sampler state is not just the RNG words");
     }
 
     #[test]

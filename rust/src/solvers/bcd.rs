@@ -31,7 +31,7 @@
 //! `rust/tests/engine_equivalence.rs`).
 
 use crate::comm::Communicator;
-use crate::engine::{drive, CaStep, Method, Problem, Sample, Session};
+use crate::engine::{drive, CaStep, Checkpoint, Method, Problem, Sample, Session};
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -248,6 +248,25 @@ impl<C: Communicator> CaStep<C> for BcdStep<'_> {
 
     fn converged(&self, history: &History, tol: f64) -> bool {
         self.reference.is_some() && history.final_obj_err() <= tol
+    }
+
+    fn ckpt_kind(&self) -> &'static str {
+        "bcd"
+    }
+
+    fn save_state(&self, ckpt: &mut Checkpoint) -> Result<()> {
+        // Full mutable state: sampler RNG + the two iterates. z /
+        // w_blocks / overlap are scratch, refilled before every use.
+        ckpt.rng = self.sampler.rng_state().to_vec();
+        ckpt.push_f64("w", &self.w);
+        ckpt.push_f64("alpha_loc", &self.alpha_loc);
+        Ok(())
+    }
+
+    fn restore_state(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        self.sampler.set_rng_state(ckpt.rng_words()?);
+        ckpt.read_f64_into("w", &mut self.w)?;
+        ckpt.read_f64_into("alpha_loc", &mut self.alpha_loc)
     }
 }
 

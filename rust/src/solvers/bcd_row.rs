@@ -37,7 +37,7 @@
 //! loads exactly equal to the blocking path.
 
 use crate::comm::{AllToAllHandle, Communicator};
-use crate::engine::{drive, CaStep, Method, Problem, Sample, Session};
+use crate::engine::{checkpoint, drive, CaStep, Checkpoint, Method, Problem, Sample, Session};
 use crate::error::{Error, Result};
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -150,7 +150,11 @@ pub(crate) fn engine_run<C: Communicator>(
         row_part,
         col_part,
         overlap: opts.overlap,
-        pipeline: opts.overlap && opts.tol.is_none(),
+        // The one-iteration look-ahead would leave iteration k+1's
+        // exchange in flight at a checkpoint boundary (and a cancelled
+        // early-stop iteration must not have communicated), so it engages
+        // only for fixed-length, non-checkpointed runs.
+        pipeline: opts.overlap && opts.tol.is_none() && !checkpoint::active(),
         outer: opts.outer_iters(),
         sampler: BlockSampler::new(d_global, opts.seed),
         w_loc: vec![0.0; d_loc],
@@ -506,6 +510,32 @@ impl<C: Communicator> CaStep<C> for BcdRowStep<'_> {
         }
         self.lookahead = None;
         self.y_cols.clear();
+        Ok(())
+    }
+
+    fn ckpt_kind(&self) -> &'static str {
+        "bcd_row"
+    }
+
+    fn save_state(&self, ckpt: &mut Checkpoint) -> Result<()> {
+        // Capture runs at an outer boundary on the non-pipelined
+        // schedules, where no exchange is in flight and every panel is
+        // consumed — the mutable state is the sampler RNG, the two
+        // partitioned iterates, and the measured Lemma-3 load series.
+        debug_assert!(self.pending.is_none() && self.lookahead.is_none());
+        ckpt.rng = self.sampler.rng_state().to_vec();
+        ckpt.push_f64("w_loc", &self.w_loc);
+        ckpt.push_f64("alpha_loc", &self.alpha_loc);
+        let loads: Vec<u64> = self.max_loads.iter().map(|&l| l as u64).collect();
+        ckpt.push_u64("max_loads", &loads);
+        Ok(())
+    }
+
+    fn restore_state(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        self.sampler.set_rng_state(ckpt.rng_words()?);
+        ckpt.read_f64_into("w_loc", &mut self.w_loc)?;
+        ckpt.read_f64_into("alpha_loc", &mut self.alpha_loc)?;
+        self.max_loads = ckpt.get_u64("max_loads")?.iter().map(|&l| l as usize).collect();
         Ok(())
     }
 }

@@ -23,7 +23,7 @@
 //! collective per outer iteration, bitwise identical trajectory.
 
 use crate::comm::Communicator;
-use crate::engine::{drive, CaStep, Method, Problem, Sample, Session};
+use crate::engine::{drive, CaStep, Checkpoint, Method, Problem, Sample, Session};
 use crate::error::Result;
 use crate::gram::ComputeBackend;
 use crate::linalg::packed::packed_len;
@@ -244,6 +244,26 @@ impl<C: Communicator> CaStep<C> for BdcdStep<'_> {
 
     fn converged(&self, history: &History, tol: f64) -> bool {
         self.reference.is_some() && history.final_obj_err() <= tol
+    }
+
+    fn ckpt_kind(&self) -> &'static str {
+        "bdcd"
+    }
+
+    fn save_state(&self, ckpt: &mut Checkpoint) -> Result<()> {
+        // Full mutable state: sampler RNG + the dual iterate + this
+        // rank's w slice. a_blocks / y_blocks / scaled_deltas / overlap
+        // are scratch, refilled before every use.
+        ckpt.rng = self.sampler.rng_state().to_vec();
+        ckpt.push_f64("alpha", &self.alpha);
+        ckpt.push_f64("w_loc", &self.w_loc);
+        Ok(())
+    }
+
+    fn restore_state(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        self.sampler.set_rng_state(ckpt.rng_words()?);
+        ckpt.read_f64_into("alpha", &mut self.alpha)?;
+        ckpt.read_f64_into("w_loc", &mut self.w_loc)
     }
 }
 

@@ -22,7 +22,7 @@
 //! `tests/packed_gram.rs`).
 
 use crate::comm::Communicator;
-use crate::engine::{drive, CaStep, Sample};
+use crate::engine::{drive, CaStep, Checkpoint, Sample};
 use crate::error::Result;
 use crate::matrix::Matrix;
 use crate::metrics::{relative_objective_error, relative_solution_error, History, IterRecord,
@@ -252,6 +252,31 @@ impl<C: Communicator> CaStep<C> for CocoaStep<'_> {
             self.reference,
             comm,
         )
+    }
+
+    fn ckpt_kind(&self) -> &'static str {
+        "cocoa"
+    }
+
+    fn save_state(&self, ckpt: &mut Checkpoint) -> Result<()> {
+        // alpha_work / xrow are scratch (re-seeded from alpha_loc at the
+        // top of every local phase); the rank-decorrelated sampler RNG
+        // plus the two iterates are the whole mutable state. Empty shards
+        // have no sampler and store no RNG words.
+        if let Some(sampler) = self.sampler.as_ref() {
+            ckpt.rng = sampler.rng_state().to_vec();
+        }
+        ckpt.push_f64("w", &self.w);
+        ckpt.push_f64("alpha_loc", &self.alpha_loc);
+        Ok(())
+    }
+
+    fn restore_state(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        if let Some(sampler) = self.sampler.as_mut() {
+            sampler.set_rng_state(ckpt.rng_words()?);
+        }
+        ckpt.read_f64_into("w", &mut self.w)?;
+        ckpt.read_f64_into("alpha_loc", &mut self.alpha_loc)
     }
 }
 

@@ -90,7 +90,7 @@ pub struct TraceSummary {
     /// Total tracer allocation-tripwire count across ranks.
     pub trace_allocs: u64,
     /// Indexed parallel to [`SpanKind::ALL`].
-    pub per_kind: [KindStat; 8],
+    pub per_kind: [KindStat; 9],
     /// Per-rank critical-path breakdowns, rank order.
     pub breakdown: Vec<RankBreakdown>,
     /// Overlap statistics per collective class.
@@ -196,6 +196,9 @@ impl TraceSummary {
                         }
                     }
                     SpanKind::ProxStep => {} // nested inside InnerSolve
+                    // Backoff before a retried collective: time lost to
+                    // the transport, not to compute.
+                    SpanKind::Retry => bd.wire_ns += s.dur_ns(),
                 }
             }
             if let (Some(first), Some(last)) = (spans.first(), spans.last()) {

@@ -23,6 +23,7 @@
 //! | `ProxStep`        | `prox/*` (nested)     | the backend prox kernel call       |
 //! | `Apply`           | `engine::solve_apply` | iterate update / `alpha_update`    |
 //! | `Record`          | `engine::drive`       | convergence records (meter-excl.)  |
+//! | `Retry`           | `comm/chaos.rs`       | transient-fault retry + backoff    |
 //!
 //! Collective spans carry an [`OpClass`] discriminant (allreduce vs
 //! all-to-all vs barrier) so the analysis pass can cross-validate span
@@ -83,11 +84,16 @@ pub enum SpanKind {
     ProxStep,
     /// Convergence record (meter-excluded traffic).
     Record,
+    /// Transient-fault retry taken by a fault-injecting communicator
+    /// decorator ([`crate::comm::ChaosComm`]) before the delegated
+    /// collective ran — covers the backoff sleep. Absent from fault-free
+    /// traces.
+    Retry,
 }
 
 impl SpanKind {
     /// All kinds, in fixed display order (histogram / JSON ordering).
-    pub const ALL: [SpanKind; 8] = [
+    pub const ALL: [SpanKind; 9] = [
         SpanKind::Sample,
         SpanKind::GramLocal,
         SpanKind::CollectiveStart,
@@ -96,6 +102,7 @@ impl SpanKind {
         SpanKind::Apply,
         SpanKind::ProxStep,
         SpanKind::Record,
+        SpanKind::Retry,
     ];
 
     /// Stable display name (histogram / JSON key).
@@ -109,6 +116,7 @@ impl SpanKind {
             SpanKind::Apply => "Apply",
             SpanKind::ProxStep => "ProxStep",
             SpanKind::Record => "Record",
+            SpanKind::Retry => "Retry",
         }
     }
 }

@@ -81,6 +81,15 @@ impl<'a> Section<'a> {
         }
     }
 
+    pub fn u64_opt(&self, key: &str) -> Result<Option<u64>> {
+        match self.str(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|e| {
+                Error::Config(format!("[{}] {key}: bad integer {v:?}: {e}", self.name))
+            }),
+        }
+    }
+
     pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
         match self.str(key) {
             None => Ok(None),

@@ -1,0 +1,526 @@
+//! Chaos test matrix (PR 8): every solver × schedule × injected fault.
+//!
+//! [`ChaosComm`] wraps each rank's thread transport with a seeded fault
+//! plan, exercising the three fault-tolerance layers end to end:
+//!
+//! * **latency** — spikes delay collectives but touch no payload bytes:
+//!   a completed run must be bitwise-equal to the fault-free run.
+//! * **transient-retry** — delivery failures are retried with bounded
+//!   backoff ([`CostMeter::retries`] metered); the delegated collective
+//!   still runs exactly once, so the trajectory and wire counts match
+//!   fault-free bitwise.
+//! * **stall → timeout** — a rank sleeping past the group deadline
+//!   ([`Communicator::set_deadline`]) poisons the group: every rank gets
+//!   an actionable `Error::Comm` instead of a hang.
+//! * **rank death → resume** — a rank dying mid-protocol is discovered
+//!   through peer deadlines; a [`Session::resume`] from the last
+//!   checkpoint replays to a final state bitwise-equal to the fault-free
+//!   checkpointed run, with identical wire meters (`buf_allocs` — pool
+//!   re-warm — and the fault-path counters are excluded by design; see
+//!   `engine::checkpoint` module docs).
+//!
+//! All runs are P = 4, both blocking and overlap schedules, all six
+//! methods (bcd, bdcd, bcd_row, cocoa, prox_bcd, prox_bdcd).
+
+use std::time::Duration;
+
+use cabcd::comm::thread::run_spmd;
+use cabcd::comm::{ChaosComm, ChaosSpec, Communicator, CostMeter, SerialComm, ThreadComm};
+use cabcd::coordinator::{partition_dual, partition_primal, partition_rows};
+use cabcd::engine::{checkpoint, Checkpoint, MemorySink, Method, Problem, Session, Solution};
+use cabcd::error::Result;
+use cabcd::gram::NativeBackend;
+use cabcd::matrix::io::Dataset;
+use cabcd::matrix::{DenseMatrix, Matrix};
+use cabcd::metrics::{History, Reference};
+use cabcd::prox::Reg;
+use cabcd::solvers::{cg, SolverOpts};
+
+const P: usize = 4;
+const LAM: f64 = 0.35;
+const ITERS: usize = 24;
+const S: usize = 4;
+const B: usize = 2;
+const SEED: u64 = 7;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum M {
+    Bcd,
+    Bdcd,
+    BcdRow,
+    Cocoa,
+    ProxBcd,
+    ProxBdcd,
+}
+
+impl M {
+    const ALL: [M; 6] = [M::Bcd, M::Bdcd, M::BcdRow, M::Cocoa, M::ProxBcd, M::ProxBdcd];
+
+    fn id(self) -> &'static str {
+        match self {
+            M::Bcd => "bcd",
+            M::Bdcd => "bdcd",
+            M::BcdRow => "bcd_row",
+            M::Cocoa => "cocoa",
+            M::ProxBcd => "prox_bcd",
+            M::ProxBdcd => "prox_bdcd",
+        }
+    }
+
+    fn method(self) -> Method {
+        let name = match self {
+            M::Bcd | M::ProxBcd => "cabcd",
+            M::Bdcd | M::ProxBdcd => "cabdcd",
+            M::BcdRow => "cabcdrow",
+            M::Cocoa => "cocoa",
+        };
+        Method::parse(name).unwrap()
+    }
+
+    fn reg(self) -> Reg {
+        match self {
+            M::ProxBcd | M::ProxBdcd => Reg::L1,
+            _ => Reg::L2,
+        }
+    }
+
+    /// The ridge reference only applies to the exact-L2 runs.
+    fn wants_reference(self) -> bool {
+        self.reg() == Reg::L2
+    }
+}
+
+fn toy_dataset() -> Dataset {
+    let (d, n) = (12usize, 48usize);
+    let mut st = 0xC4A05EEDu64;
+    let data: Vec<f64> = (0..d * n)
+        .map(|_| {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            (st as f64 / u64::MAX as f64) - 0.5
+        })
+        .collect();
+    let x = Matrix::Dense(DenseMatrix::from_vec(d, n, data));
+    let mut y = vec![0.0; n];
+    let mut w_star = vec![0.0; d];
+    w_star[0] = 1.5;
+    w_star[d / 2] = -2.0;
+    w_star[d - 1] = 0.75;
+    x.matvec_t(&w_star, &mut y).unwrap();
+    Dataset {
+        name: "chaos".into(),
+        x,
+        y,
+    }
+}
+
+fn reference(ds: &Dataset) -> Reference {
+    let mut comm = SerialComm::new();
+    cg::compute_reference(&ds.x, &ds.y, ds.n(), LAM, &mut comm).unwrap()
+}
+
+fn solver_opts(m: M, overlap: bool) -> SolverOpts {
+    SolverOpts::builder()
+        .b(B)
+        .s(S)
+        .lam(LAM)
+        .iters(ITERS)
+        .seed(SEED)
+        .record_every(4)
+        .overlap(overlap)
+        .reg(m.reg())
+        .build()
+}
+
+/// One rank's comparable output: concatenated iterate vectors + history.
+struct RankOut {
+    vecs: Vec<f64>,
+    history: History,
+}
+
+fn unpack(m: M, sol: Solution) -> RankOut {
+    match m {
+        M::Bcd | M::ProxBcd => {
+            let out = sol.into_primal().unwrap();
+            let mut vecs = out.w;
+            vecs.extend_from_slice(&out.alpha_loc);
+            RankOut {
+                vecs,
+                history: out.history,
+            }
+        }
+        M::Bdcd | M::ProxBdcd => {
+            let out = sol.into_dual().unwrap();
+            let mut vecs = out.w_full;
+            vecs.extend_from_slice(&out.w_loc);
+            vecs.extend_from_slice(&out.alpha);
+            RankOut {
+                vecs,
+                history: out.history,
+            }
+        }
+        M::BcdRow => {
+            let out = sol.into_row_primal().unwrap();
+            let mut vecs = out.w_full;
+            vecs.extend_from_slice(&out.w_loc);
+            vecs.extend(out.max_loads.iter().map(|&l| l as f64));
+            RankOut {
+                vecs,
+                history: out.history,
+            }
+        }
+        M::Cocoa => {
+            let out = sol.into_cocoa().unwrap();
+            let mut vecs = out.w;
+            vecs.extend_from_slice(&out.alpha_loc);
+            RankOut {
+                vecs,
+                history: out.history,
+            }
+        }
+    }
+}
+
+/// One-rank placeholder endpoint: `run_spmd` hands out `&mut ThreadComm`,
+/// the chaos wrapper wants ownership, so the real endpoint is swapped out
+/// for the solve and restored after.
+fn stub() -> ThreadComm {
+    let mut g = ThreadComm::group(1);
+    let Some(c) = g.pop() else {
+        unreachable!("group(1) returns one endpoint")
+    };
+    c
+}
+
+/// Run one (method, schedule) config at P = 4 under a fault plan.
+/// `deadline` bounds every blocking receive; `ckpt = (sink, every)`
+/// installs per-rank checkpointing; `resume` restarts each rank from its
+/// entry in the sink. Per rank: the solve result (error stringified) and
+/// the endpoint's final meter (available even when the solve failed).
+fn run_config(
+    m: M,
+    overlap: bool,
+    ds: &Dataset,
+    rref: Option<&Reference>,
+    spec: ChaosSpec,
+    deadline: Option<Duration>,
+    ckpt: Option<(MemorySink, usize)>,
+    resume: bool,
+) -> Vec<(std::result::Result<RankOut, String>, CostMeter)> {
+    let opts = solver_opts(m, overlap);
+    let method = m.method();
+    let rref = rref.filter(|_| m.wants_reference());
+    enum Shards {
+        Primal(Vec<cabcd::coordinator::PrimalShard>),
+        Dual(Vec<cabcd::coordinator::DualShard>),
+        Rows(Vec<cabcd::coordinator::RowShard>),
+    }
+    let shards = match m {
+        M::Bcd | M::ProxBcd | M::Cocoa => Shards::Primal(partition_primal(ds, P).unwrap()),
+        M::Bdcd | M::ProxBdcd => Shards::Dual(partition_dual(ds, P).unwrap()),
+        M::BcdRow => Shards::Rows(partition_rows(ds, P).unwrap()),
+    };
+    run_spmd(P, move |rank, comm| {
+        let inner = std::mem::replace(comm, stub());
+        let mut chaos = ChaosComm::new(inner, spec);
+        chaos.set_deadline(deadline);
+        if let Some((sink, every)) = &ckpt {
+            checkpoint::install(Box::new(sink.clone()), *every);
+        }
+        let run_one = || -> Result<RankOut> {
+            let problem = match &shards {
+                Shards::Primal(v) => {
+                    let sh = &v[rank];
+                    Problem::primal(&sh.a_loc, &sh.y_loc, sh.n_global)
+                }
+                Shards::Dual(v) => {
+                    let sh = &v[rank];
+                    Problem::dual(&sh.a_loc, &sh.y, sh.d_global, sh.d_offset)
+                }
+                Shards::Rows(v) => {
+                    let sh = &v[rank];
+                    Problem::primal_rows(&sh.x_rows, &sh.y_loc, sh.d_global, sh.d_offset)
+                }
+            };
+            let problem = problem.with_reference(rref);
+            let mut be = NativeBackend::new();
+            let mut session = Session::new(&problem)
+                .opts(opts.clone())
+                .method(method)
+                .local_iters(S)
+                .comm(&mut chaos);
+            if method.needs_backend() {
+                session = session.backend(&mut be);
+            }
+            if resume {
+                let (sink, _) = ckpt.as_ref().expect("resume needs a checkpoint sink");
+                let c = sink.load(rank)?.expect("no checkpoint to resume from");
+                session = session.resume(c);
+            }
+            Ok(unpack(m, session.run()?))
+        };
+        let res = run_one().map_err(|e| e.to_string());
+        checkpoint::take();
+        chaos.set_deadline(None);
+        let meter = *chaos.meter();
+        *comm = chaos.into_inner();
+        (res, meter)
+    })
+}
+
+fn wire(m: &CostMeter) -> [u64; 7] {
+    [
+        m.msgs,
+        m.words,
+        m.recv_msgs,
+        m.recv_words,
+        m.allreduces,
+        m.all_to_alls,
+        m.collective_waits,
+    ]
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_histories_equal(ctx: &str, a: &History, b: &History) {
+    assert_eq!(a.iters, b.iters, "{ctx}: iters");
+    let rec = |h: &History| -> Vec<(usize, u64, u64)> {
+        h.records
+            .iter()
+            .map(|r| (r.iter, r.obj_err.to_bits(), r.sol_err.to_bits()))
+            .collect()
+    };
+    assert_eq!(rec(a), rec(b), "{ctx}: iterate records");
+    let prox = |h: &History| -> Vec<(usize, u64, u64, u64, usize)> {
+        h.prox
+            .iter()
+            .map(|r| {
+                (
+                    r.iter,
+                    r.pen_obj.to_bits(),
+                    r.gap.to_bits(),
+                    r.subgrad.to_bits(),
+                    r.nnz,
+                )
+            })
+            .collect()
+    };
+    assert_eq!(prox(a), prox(b), "{ctx}: prox records");
+    assert_eq!(bits(&a.gram_conds), bits(&b.gram_conds), "{ctx}: gram conds");
+    assert_eq!(wire(&a.meter), wire(&b.meter), "{ctx}: wire meters");
+}
+
+fn assert_rank_outs_equal(
+    ctx: &str,
+    a: &[(std::result::Result<RankOut, String>, CostMeter)],
+    b: &[(std::result::Result<RankOut, String>, CostMeter)],
+) {
+    for (rank, ((ra, ma), (rb, mb))) in a.iter().zip(b).enumerate() {
+        let oa = ra.as_ref().unwrap_or_else(|e| panic!("{ctx}: rank {rank} failed: {e}"));
+        let ob = rb.as_ref().unwrap_or_else(|e| panic!("{ctx}: rank {rank} failed: {e}"));
+        assert_eq!(
+            bits(&oa.vecs),
+            bits(&ob.vecs),
+            "{ctx}: rank {rank} iterate vectors diverged"
+        );
+        assert_histories_equal(&format!("{ctx}: rank {rank}"), &oa.history, &ob.history);
+        assert_eq!(wire(ma), wire(mb), "{ctx}: rank {rank} endpoint wire meters");
+    }
+}
+
+#[test]
+fn latency_spikes_leave_results_bitwise_intact() {
+    let ds = toy_dataset();
+    let rref = reference(&ds);
+    for m in M::ALL {
+        for overlap in [false, true] {
+            let ctx = format!("latency/{}/overlap={overlap}", m.id());
+            let clean = run_config(
+                m,
+                overlap,
+                &ds,
+                Some(&rref),
+                ChaosSpec::default(),
+                None,
+                None,
+                false,
+            );
+            let spec = ChaosSpec {
+                seed: 11,
+                latency_prob: 0.3,
+                latency_ms: 1,
+                ..ChaosSpec::default()
+            };
+            let faulted = run_config(m, overlap, &ds, Some(&rref), spec, None, None, false);
+            assert_rank_outs_equal(&ctx, &clean, &faulted);
+            for (_, meter) in &faulted {
+                assert_eq!(meter.retries, 0, "{ctx}: latency must not retry");
+                assert_eq!(meter.timeouts, 0, "{ctx}: latency must not time out");
+            }
+        }
+    }
+}
+
+#[test]
+fn transient_faults_retry_to_the_same_answer() {
+    let ds = toy_dataset();
+    let rref = reference(&ds);
+    for m in M::ALL {
+        for overlap in [false, true] {
+            let ctx = format!("transient/{}/overlap={overlap}", m.id());
+            let clean = run_config(
+                m,
+                overlap,
+                &ds,
+                Some(&rref),
+                ChaosSpec::default(),
+                None,
+                None,
+                false,
+            );
+            let spec = ChaosSpec {
+                seed: 23,
+                transient_prob: 0.4,
+                max_retries: 64,
+                backoff_base_ms: 0,
+                ..ChaosSpec::default()
+            };
+            let faulted = run_config(m, overlap, &ds, Some(&rref), spec, None, None, false);
+            assert_rank_outs_equal(&ctx, &clean, &faulted);
+            let retries: u64 = faulted.iter().map(|(_, meter)| meter.retries).sum();
+            assert!(
+                retries > 0,
+                "{ctx}: p = 0.4 over every collective never drew a fault"
+            );
+        }
+    }
+}
+
+#[test]
+fn stalls_hit_the_deadline_and_poison_every_rank() {
+    let ds = toy_dataset();
+    let rref = reference(&ds);
+    for m in M::ALL {
+        for overlap in [false, true] {
+            let ctx = format!("stall/{}/overlap={overlap}", m.id());
+            let spec = ChaosSpec {
+                stall_at: Some(5),
+                stall_ms: 1_000,
+                victim: 1,
+                ..ChaosSpec::default()
+            };
+            let outs = run_config(
+                m,
+                overlap,
+                &ds,
+                Some(&rref),
+                spec,
+                Some(Duration::from_millis(150)),
+                None,
+                false,
+            );
+            let mut timed_out = 0u64;
+            for (rank, (res, meter)) in outs.iter().enumerate() {
+                let err = match res {
+                    Err(e) => e,
+                    Ok(_) => panic!("{ctx}: rank {rank} completed through a stalled group"),
+                };
+                assert!(
+                    err.contains("timed out") || err.contains("poisoned"),
+                    "{ctx}: rank {rank} error not actionable: {err}"
+                );
+                timed_out += meter.timeouts;
+            }
+            assert!(timed_out > 0, "{ctx}: no rank metered a timeout");
+        }
+    }
+}
+
+#[test]
+fn rank_death_resumes_bitwise_from_the_last_checkpoint() {
+    let ds = toy_dataset();
+    let rref = reference(&ds);
+    const EVERY: usize = 2;
+    for m in M::ALL {
+        for overlap in [false, true] {
+            let ctx = format!("death/{}/overlap={overlap}", m.id());
+
+            // Fault-free baseline WITH checkpointing at the same cadence
+            // (checkpointing pins the capture-compatible schedule, so this
+            // is the state a resume must reproduce bitwise).
+            let sink_base = MemorySink::new();
+            let clean = run_config(
+                m,
+                overlap,
+                &ds,
+                Some(&rref),
+                ChaosSpec::default(),
+                None,
+                Some((sink_base, EVERY)),
+                false,
+            );
+
+            // Chaos run: rank 2 dies mid-protocol; peers discover the
+            // death through their receive deadlines.
+            let sink = MemorySink::new();
+            let spec = ChaosSpec {
+                die_at: Some(7),
+                victim: 2,
+                ..ChaosSpec::default()
+            };
+            let dead = run_config(
+                m,
+                overlap,
+                &ds,
+                Some(&rref),
+                spec,
+                Some(Duration::from_millis(400)),
+                Some((sink.clone(), EVERY)),
+                false,
+            );
+            for (rank, (res, _)) in dead.iter().enumerate() {
+                let err = match res {
+                    Err(e) => e,
+                    Ok(_) => panic!("{ctx}: rank {rank} survived a dead peer"),
+                };
+                assert!(
+                    err.contains("died at collective")
+                        || err.contains("timed out")
+                        || err.contains("poisoned"),
+                    "{ctx}: rank {rank} error not actionable: {err}"
+                );
+            }
+
+            // Every rank checkpointed the same block before the death.
+            let ckpts: Vec<Checkpoint> = (0..P)
+                .map(|r| {
+                    sink.load(r)
+                        .unwrap()
+                        .unwrap_or_else(|| panic!("{ctx}: rank {r} has no checkpoint"))
+                })
+                .collect();
+            let next_k = ckpts[0].next_k;
+            assert!(next_k > 0, "{ctx}: checkpoint captured nothing");
+            for c in &ckpts {
+                assert_eq!(c.next_k, next_k, "{ctx}: ranks checkpointed different blocks");
+            }
+
+            // Resume from the survivors' checkpoints: bitwise-equal final
+            // state and identical wire meters vs the fault-free baseline.
+            let resumed = run_config(
+                m,
+                overlap,
+                &ds,
+                Some(&rref),
+                ChaosSpec::default(),
+                None,
+                Some((sink, EVERY)),
+                true,
+            );
+            assert_rank_outs_equal(&ctx, &clean, &resumed);
+        }
+    }
+}

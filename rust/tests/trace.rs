@@ -21,7 +21,7 @@
 //! allreduce window is covered by prefetched Gram compute).
 
 use cabcd::comm::thread::run_spmd;
-use cabcd::comm::SerialComm;
+use cabcd::comm::{ChaosComm, ChaosSpec, Communicator, SerialComm};
 use cabcd::coordinator::{partition_dual, partition_primal, partition_rows};
 use cabcd::matrix::io::Dataset;
 use cabcd::matrix::{DenseMatrix, Matrix};
@@ -317,8 +317,8 @@ fn span_counts_match_meters_for_all_methods() {
 
 #[test]
 fn every_span_kind_is_exercised() {
-    // One overlapped prox run + one bcdrow run together must touch the
-    // whole taxonomy (ProxStep comes from the prox inner solve, the
+    // One overlapped prox run + one bcdrow run together touch the whole
+    // fault-free taxonomy (ProxStep comes from the prox inner solve, the
     // all-to-all spans from bcdrow).
     let mut seen = std::collections::HashSet::new();
     for outs in [
@@ -330,6 +330,27 @@ fn every_span_kind_is_exercised() {
                 seen.insert(sp.kind);
             }
         }
+    }
+    // `Retry` fires only on the transient-fault path: a seeded chaos
+    // endpoint over SerialComm (fault injection is transport-agnostic)
+    // covers the ninth kind without an SPMD group.
+    trace::install(Tracer::new(0, trace::DEFAULT_SPAN_CAPACITY));
+    let spec = ChaosSpec {
+        seed: 9,
+        transient_prob: 0.5,
+        max_retries: 64,
+        backoff_base_ms: 0,
+        ..ChaosSpec::default()
+    };
+    let mut chaos = ChaosComm::new(SerialComm::new(), spec);
+    let mut buf = [1.0f64; 4];
+    for _ in 0..16 {
+        chaos.allreduce_sum(&mut buf).unwrap();
+    }
+    assert!(chaos.meter().retries > 0, "seeded coin never flipped a retry");
+    let chaos_tracer = trace::take().unwrap();
+    for sp in chaos_tracer.spans() {
+        seen.insert(sp.kind);
     }
     for kind in SpanKind::ALL {
         assert!(seen.contains(&kind), "span kind {kind:?} never emitted");
