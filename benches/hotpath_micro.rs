@@ -75,6 +75,8 @@ fn check_against_seed(seed_text: &str, current: &[(&str, f64)]) {
         "comm_retries_fault_free",
         "comm_timeouts_fault_free",
         "checkpoint_state_words_bcd",
+        "telemetry_allocs_steady_state",
+        "telemetry_snapshot_words",
     ];
     for &key in WIRE_FIELDS {
         let Some(seed_val) = json_num_field(seed_text, key) else {
@@ -432,6 +434,85 @@ fn main() {
         report.push(("trace_overlap_efficiency", json::num(sum.overlap_efficiency())));
         wire_metrics.push(("trace_allocs_steady_state", sum.trace_allocs as f64));
         wire_metrics.push(("trace_spans_per_outer", spans_per_outer));
+    }
+
+    // --- telemetry registry: zero-alloc steady state + snapshot size ----
+    // A telemetered overlapped CA-BCD run at P=4. Machine-independent
+    // gates: metric recording must never allocate after registry
+    // construction (`telemetry_allocs == 0` — fixed-size counter/gauge/
+    // histogram arrays plus a preallocated snapshot ring), and the
+    // aggregation allreduce payload is a fixed function of the registry
+    // layout (P · REGISTRY_WORDS), so any metric added to the wire format
+    // shows up as a seed regression.
+    {
+        use cabcd::coordinator::partition_primal;
+        use cabcd::matrix::io::Dataset;
+        use cabcd::solvers::{bcd, SolverOpts};
+        use cabcd::telemetry::{self, Registry, TelemetrySummary};
+
+        let (d, n) = (96usize, 4096usize);
+        let x = Matrix::Dense(dense_mat(d, n, 41));
+        let mut y = vec![0.0; n];
+        x.matvec_t(&vec![1.0; d], &mut y).unwrap();
+        let ds = Dataset {
+            name: "telemetry-bench".into(),
+            x,
+            y,
+        };
+        let p = 4usize;
+        let shards = partition_primal(&ds, p).unwrap();
+        let (s, outer) = (4usize, 8usize);
+        let opts = SolverOpts::builder()
+            .b(8)
+            .s(s)
+            .lam(0.1)
+            .iters(outer * s)
+            .seed(5)
+            .record_every(4)
+            .overlap(true)
+            .build();
+        let shards_ref = &shards;
+        let optsr = &opts;
+        let regs = run_spmd(p, move |rank, comm| {
+            telemetry::install(Registry::new(rank, p));
+            let sh = &shards_ref[rank];
+            let mut be = NativeBackend::new();
+            bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, optsr, None, comm, &mut be).unwrap();
+            telemetry::take().unwrap()
+        });
+        let sum = TelemetrySummary::from_registries(&regs);
+        assert_eq!(
+            sum.telemetry_allocs, 0,
+            "telemetry registry allocated in steady state"
+        );
+        assert_eq!(sum.dropped_snapshots, 0, "snapshot ring dropped snapshots");
+        assert!(sum.snapshots > 0, "record cadence produced no snapshots");
+        let snapshot_words = (p * telemetry::REGISTRY_WORDS) as f64;
+        assert_eq!(sum.snapshot_words as f64, snapshot_words);
+        let last = sum.last.as_ref().expect("no final cluster snapshot");
+        println!(
+            "\ntelemetry registry (CA-BCD overlap, P={p}, {outer} outers): {} cluster \
+             snapshots, {} allreduce words each, 0 registry allocs, {} straggler flag(s)",
+            sum.snapshots,
+            snapshot_words,
+            sum.straggler_flags
+        );
+        println!(
+            "  final snapshot @ outer {}: fleet allreduce p99 {} — rank0 \
+             compute {} / wire {} / idle {}",
+            last.outer,
+            fmt_secs(last.fleet.allreduce.p99 as f64 * 1e-9),
+            fmt_secs(last.ranks[0].compute_ns as f64 * 1e-9),
+            fmt_secs(last.ranks[0].wire_ns as f64 * 1e-9),
+            fmt_secs(last.ranks[0].idle_ns as f64 * 1e-9),
+        );
+        report.push((
+            "telemetry_allocs_steady_state",
+            json::num(sum.telemetry_allocs as f64),
+        ));
+        report.push(("telemetry_snapshot_words", json::num(snapshot_words)));
+        wire_metrics.push(("telemetry_allocs_steady_state", sum.telemetry_allocs as f64));
+        wire_metrics.push(("telemetry_snapshot_words", snapshot_words));
     }
 
     // --- checkpoint snapshot size (machine-independent) -----------------

@@ -7,12 +7,15 @@
 //! ```sh
 //! cargo run --release --example lasso            # plain
 //! cargo run --release --example lasso -- --trace lasso.trace.json
+//! cargo run --release --example lasso -- --telemetry lasso.telemetry.json
 //! ```
 //!
 //! Runs SPMD over 4 simulated ranks, then sweeps the elastic-net mixing
 //! ratio to show the regularization-path seam. CI runs this example as an
 //! acceptance check (gap ≤ 1e-6, exact support recovery) and validates
-//! the `--trace` Chrome trace-event output with `python/check_trace.py`.
+//! the `--trace` Chrome trace-event output with `python/check_trace.py`
+//! and the `--telemetry` snapshot/exposition pair with
+//! `python/check_telemetry.py`.
 
 use cabcd::comm::thread::run_spmd;
 use cabcd::coordinator::partition_primal;
@@ -21,18 +24,36 @@ use cabcd::matrix::io::Dataset;
 use cabcd::matrix::{DenseMatrix, Matrix};
 use cabcd::prox::Reg;
 use cabcd::solvers::{bcd, SolverOpts};
+use cabcd::telemetry::{self, Registry, TelemetrySummary};
 use cabcd::trace::{self, TraceSummary, Tracer};
 use cabcd::util::Rng64;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    // Optional: `--trace PATH` writes a per-rank Chrome trace-event JSON
-    // of the main SPMD solve (loadable in Perfetto; schema-checked in CI).
+    // Optional, in any order: `--trace PATH` writes a per-rank Chrome
+    // trace-event JSON of the main SPMD solve (loadable in Perfetto);
+    // `--telemetry PATH` writes the cluster health snapshots as JSON plus
+    // a Prometheus exposition at PATH with a `.prom` extension. Both are
+    // schema-checked in CI.
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let trace_path = match argv.as_slice() {
-        [] => None,
-        [flag, path] if flag == "--trace" => Some(std::path::PathBuf::from(path)),
-        other => return Err(format!("usage: lasso [--trace PATH], got {other:?}").into()),
-    };
+    let mut trace_path: Option<std::path::PathBuf> = None;
+    let mut telemetry_path: Option<std::path::PathBuf> = None;
+    let mut it = argv.iter();
+    while let Some(flag) = it.next() {
+        let slot = match flag.as_str() {
+            "--trace" => &mut trace_path,
+            "--telemetry" => &mut telemetry_path,
+            other => {
+                return Err(
+                    format!("usage: lasso [--trace PATH] [--telemetry PATH], got {other:?}")
+                        .into(),
+                )
+            }
+        };
+        let Some(path) = it.next() else {
+            return Err(format!("{flag} needs a PATH argument").into());
+        };
+        *slot = Some(std::path::PathBuf::from(path));
+    }
 
     // 1. Planted sparse-recovery instance: d = 64 features, only 6
     //    active, n = 512 noisy measurements.
@@ -73,18 +94,30 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .reg(Reg::L1)
         .build();
     let tracing = trace_path.is_some();
+    let telemetering = telemetry_path.is_some();
     let outs = run_spmd(p, |rank, comm| {
         if tracing {
             trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+        }
+        if telemetering {
+            telemetry::install(Registry::new(rank, p));
         }
         let mut be = NativeBackend::new();
         let sh = &shards[rank];
         let out =
             bcd::run(&sh.a_loc, &sh.y_loc, sh.n_global, &opts, None, comm, &mut be).unwrap();
-        (out, trace::take())
+        (out, trace::take(), telemetry::take())
     });
-    let (outs, tracers): (Vec<_>, Vec<_>) = outs.into_iter().unzip();
-    let tracers: Vec<Tracer> = tracers.into_iter().flatten().collect();
+    let mut tracers: Vec<Tracer> = Vec::new();
+    let mut registries: Vec<Registry> = Vec::new();
+    let outs: Vec<_> = outs
+        .into_iter()
+        .map(|(out, tracer, reg)| {
+            tracers.extend(tracer);
+            registries.extend(reg);
+            out
+        })
+        .collect();
     if let Some(path) = &trace_path {
         std::fs::write(path, trace::chrome_trace_json(&tracers))?;
         let sum = TraceSummary::from_tracers(&tracers);
@@ -97,6 +130,27 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             sum.ranks,
             path.display(),
             sum.overlap_efficiency()
+        );
+    }
+    if let Some(path) = &telemetry_path {
+        std::fs::write(path, telemetry::snapshots_json(&registries))?;
+        let prom = path.with_extension("prom");
+        std::fs::write(&prom, telemetry::prometheus_text(&registries))?;
+        let sum = TelemetrySummary::from_registries(&registries);
+        // Hot-path guarantees CI leans on: metric recording never
+        // allocates after registry construction, every rank aggregated
+        // at least the forced final snapshot, and no snapshot was lost
+        // to a full ring buffer.
+        assert_eq!(sum.telemetry_allocs, 0, "telemetry allocated on the hot path");
+        assert!(sum.snapshots > 0, "no cluster snapshots were aggregated");
+        assert_eq!(sum.dropped_snapshots, 0, "snapshot ring overflowed");
+        println!(
+            "telemetry: {} cluster snapshots over {} ranks, {} straggler flags → {} (+ {})",
+            sum.snapshots,
+            sum.ranks,
+            sum.straggler_flags,
+            path.display(),
+            prom.display()
         );
     }
     let out = &outs[0];

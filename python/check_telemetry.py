@@ -1,0 +1,303 @@
+#!/usr/bin/env python3
+"""Schema checker for the telemetry JSON snapshot dump + Prometheus text.
+
+CI runs the lasso example with ``--telemetry`` and validates both emitted
+files here: the Rust exporters are hand-rolled (no serde in the offline
+vendor set), so a malformed envelope, a drifting key, or a broken
+cumulative-bucket invariant would otherwise only surface when someone
+points a scraper at the exposition months later.
+
+JSON checks (``<telemetry.json>``):
+  * parses; ``ranks``/``registry_words``/``snapshot_words`` are consistent
+    (``snapshot_words == ranks * registry_words``);
+  * ``z_threshold`` > 0, ``min_dev_ns`` >= 0;
+  * at least one snapshot, each with monotone non-decreasing ``outer``,
+    a per-rank health list of length ``ranks`` plus a ``"fleet"`` rollup,
+    every health block carrying the full key set with non-negative
+    numbers and ``p50 <= p99`` quantile pairs;
+  * every straggler flag names a valid rank and an op from the detector
+    taxonomy (``gram``/``wait``), and ``straggler_flags`` equals the sum
+    over snapshots;
+  * the hot-path tripwires hold: ``telemetry_allocs == 0`` and
+    ``dropped_snapshots == 0``.
+
+Prometheus checks (``<telemetry.prom>``, default: JSON path with a
+``.prom`` extension):
+  * exposition-format 0.0.4 lines only (``# HELP``/``# TYPE`` comments and
+    ``name{labels} value`` samples);
+  * every metric family of the registry taxonomy is declared with the
+    right type (counters ``cabcd_*_total``, gauges, histograms);
+  * every sample carries a ``rank`` label covering all ranks;
+  * histogram bucket series are cumulative (non-decreasing in ``le``)
+    and end with ``+Inf == _count``.
+
+Usage: python3 python/check_telemetry.py <telemetry.json> [<telemetry.prom>]
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+PREFIX = "cabcd"
+COUNTERS = [
+    "outers",
+    "inners",
+    "records",
+    "collectives",
+    "retries",
+    "timeouts",
+    "ckpt_saves",
+    "ckpt_restores",
+]
+GAUGES = ["last_outer", "last_h", "inflight_ns", "payload_words"]
+HISTS = [
+    "gram_ns",
+    "inner_solve_ns",
+    "apply_ns",
+    "sample_ns",
+    "allreduce_ns",
+    "all_to_all_ns",
+    "barrier_ns",
+    "wait_ns",
+    "allreduce_words",
+    "all_to_all_words",
+    "ckpt_save_ns",
+    "ckpt_restore_ns",
+]
+STRAGGLER_OPS = {"gram", "wait"}
+HEALTH_KEYS = {
+    "rank",
+    "wall_ns",
+    "compute_ns",
+    "wire_ns",
+    "idle_ns",
+    "wire_words",
+    "gram",
+    "allreduce",
+    "all_to_all",
+    "barrier",
+    "wait",
+}
+QUANTILE_KEYS = ("gram", "allreduce", "all_to_all", "barrier", "wait")
+
+SAMPLE_RE = re.compile(r'^([a-z_0-9]+)\{([^}]*)\}\s+(\S+)$')
+LABEL_RE = re.compile(r'(\w+)="([^"]*)"')
+
+
+def fail(msg: str) -> None:
+    print(f"check_telemetry: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def num(obj: dict, key: str, ctx: str) -> float:
+    v = obj.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        fail(f"{ctx}: {key} is {v!r}, want a number")
+    return v
+
+
+def check_health(rh: object, ranks: int, fleet: bool, ctx: str) -> None:
+    if not isinstance(rh, dict):
+        fail(f"{ctx}: health block is not an object")
+    missing = HEALTH_KEYS - rh.keys()
+    if missing:
+        fail(f"{ctx}: health keys missing: {sorted(missing)}")
+    if fleet:
+        if rh.get("rank") != "fleet":
+            fail(f"{ctx}: fleet rollup rank is {rh.get('rank')!r}")
+    else:
+        r = rh.get("rank")
+        if not isinstance(r, int) or not 0 <= r < ranks:
+            fail(f"{ctx}: rank {r!r} outside 0..{ranks}")
+    for key in ("wall_ns", "compute_ns", "wire_ns", "idle_ns", "wire_words"):
+        if num(rh, key, ctx) < 0:
+            fail(f"{ctx}: negative {key}")
+    for key in QUANTILE_KEYS:
+        q = rh.get(key)
+        if not isinstance(q, dict):
+            fail(f"{ctx}: {key} quantiles missing")
+        p50, p99 = num(q, "p50", f"{ctx}.{key}"), num(q, "p99", f"{ctx}.{key}")
+        if not 0 <= p50 <= p99:
+            fail(f"{ctx}: {key} quantiles disordered (p50={p50}, p99={p99})")
+
+
+def check_json(path: str) -> int:
+    with open(path, encoding="utf-8") as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(f"{path} is not valid JSON: {e}")
+    if not isinstance(doc, dict):
+        fail("top level is not an object")
+
+    ranks = doc.get("ranks")
+    if not isinstance(ranks, int) or ranks < 1:
+        fail(f"ranks is {ranks!r}, want a positive integer")
+    registry_words = num(doc, "registry_words", "doc")
+    snapshot_words = num(doc, "snapshot_words", "doc")
+    if snapshot_words != ranks * registry_words:
+        fail(
+            f"snapshot_words {snapshot_words} != ranks {ranks} × "
+            f"registry_words {registry_words}"
+        )
+    if num(doc, "z_threshold", "doc") <= 0:
+        fail("z_threshold must be > 0")
+    if num(doc, "min_dev_ns", "doc") < 0:
+        fail("min_dev_ns must be >= 0")
+
+    snaps = doc.get("snapshots")
+    if not isinstance(snaps, list) or not snaps:
+        fail("snapshots missing, not a list, or empty")
+    prev_outer = -1.0
+    flags = 0
+    for i, snap in enumerate(snaps):
+        ctx = f"snapshots[{i}]"
+        if not isinstance(snap, dict):
+            fail(f"{ctx} is not an object")
+        outer = num(snap, "outer", ctx)
+        if outer < prev_outer:
+            fail(f"{ctx}: outer {outer} went backwards (prev {prev_outer})")
+        prev_outer = outer
+        num(snap, "h", ctx)
+        num(snap, "at_collective", ctx)
+        rank_healths = snap.get("ranks")
+        if not isinstance(rank_healths, list) or len(rank_healths) != ranks:
+            fail(f"{ctx}: per-rank health list is not {ranks} entries")
+        for j, rh in enumerate(rank_healths):
+            check_health(rh, ranks, False, f"{ctx}.ranks[{j}]")
+        check_health(snap.get("fleet"), ranks, True, f"{ctx}.fleet")
+        stragglers = snap.get("stragglers")
+        if not isinstance(stragglers, list):
+            fail(f"{ctx}: stragglers is not a list")
+        for j, s in enumerate(stragglers):
+            sctx = f"{ctx}.stragglers[{j}]"
+            if not isinstance(s, dict):
+                fail(f"{sctx} is not an object")
+            r = s.get("rank")
+            if not isinstance(r, int) or not 0 <= r < ranks:
+                fail(f"{sctx}: rank {r!r} outside 0..{ranks}")
+            if s.get("op") not in STRAGGLER_OPS:
+                fail(f"{sctx}: op {s.get('op')!r} not in {sorted(STRAGGLER_OPS)}")
+            num(s, "z", sctx)
+            num(s, "dev_ns", sctx)
+            num(s, "at_collective", sctx)
+        flags += len(stragglers)
+
+    if num(doc, "straggler_flags", "doc") != flags:
+        fail(f"straggler_flags {doc['straggler_flags']} != counted {flags}")
+    if num(doc, "dropped_snapshots", "doc") != 0:
+        fail(f"dropped_snapshots = {doc['dropped_snapshots']} (ring overflowed)")
+    if num(doc, "telemetry_allocs", "doc") != 0:
+        fail(f"telemetry_allocs = {doc['telemetry_allocs']} (hot path allocated)")
+
+    print(
+        f"check_telemetry: OK: {path}: {len(snaps)} snapshot(s) over {ranks} "
+        f"rank(s), {flags} straggler flag(s)"
+    )
+    return ranks
+
+
+def check_prom(path: str, ranks: int) -> None:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    if not text.endswith("\n"):
+        fail(f"{path}: exposition does not end with a newline")
+
+    declared: dict[str, str] = {}
+    # family -> rank label -> list of (le, cumulative count) / scalar samples
+    buckets: dict[tuple[str, str], list[tuple[str, float]]] = {}
+    tails: dict[tuple[str, str], dict[str, float]] = {}
+    seen_ranks: dict[str, set[str]] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line:
+            fail(f"{path}:{lineno}: blank line in exposition")
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            parts = line.split(maxsplit=3)
+            if len(parts) < 4:
+                fail(f"{path}:{lineno}: malformed comment {line!r}")
+            if parts[1] == "TYPE":
+                declared[parts[2]] = parts[3]
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            fail(f"{path}:{lineno}: unparsable sample {line!r}")
+        name, labels_raw, value_raw = m.groups()
+        labels = dict(LABEL_RE.findall(labels_raw))
+        if "rank" not in labels:
+            fail(f"{path}:{lineno}: sample {name} has no rank label")
+        try:
+            value = float(value_raw)
+        except ValueError:
+            fail(f"{path}:{lineno}: value {value_raw!r} is not a number")
+        if value < 0:
+            fail(f"{path}:{lineno}: negative sample {line!r}")
+        family = re.sub(r"_(bucket|sum|count)$", "", name)
+        seen_ranks.setdefault(family, set()).add(labels["rank"])
+        if name.endswith("_bucket"):
+            if "le" not in labels:
+                fail(f"{path}:{lineno}: bucket sample has no le label")
+            buckets.setdefault((family, labels["rank"]), []).append(
+                (labels["le"], value)
+            )
+        elif name.endswith(("_sum", "_count")) and family in {
+            f"{PREFIX}_{h}" for h in HISTS
+        }:
+            tails.setdefault((family, labels["rank"]), {})[
+                name.rsplit("_", 1)[1]
+            ] = value
+
+    expect = (
+        [(f"{PREFIX}_{c}_total", "counter") for c in COUNTERS]
+        + [(f"{PREFIX}_{g}", "gauge") for g in GAUGES]
+        + [(f"{PREFIX}_{h}", "histogram") for h in HISTS]
+    )
+    want_ranks = {str(r) for r in range(ranks)}
+    for family, kind in expect:
+        if declared.get(family) != kind:
+            fail(f"{family}: declared {declared.get(family)!r}, want {kind!r}")
+        if seen_ranks.get(family) != want_ranks:
+            fail(
+                f"{family}: rank labels {sorted(seen_ranks.get(family, set()))} "
+                f"!= {sorted(want_ranks)}"
+            )
+    for h in HISTS:
+        family = f"{PREFIX}_{h}"
+        for rank in want_ranks:
+            series = buckets.get((family, rank))
+            if not series:
+                fail(f"{family}{{rank={rank}}}: no bucket series")
+            if series[-1][0] != "+Inf":
+                fail(f"{family}{{rank={rank}}}: last bucket le != +Inf")
+            counts = [v for _, v in series]
+            if counts != sorted(counts):
+                fail(f"{family}{{rank={rank}}}: buckets not cumulative")
+            tail = tails.get((family, rank), {})
+            if tail.get("count") != counts[-1]:
+                fail(
+                    f"{family}{{rank={rank}}}: _count {tail.get('count')} != "
+                    f"+Inf bucket {counts[-1]}"
+                )
+            if "sum" not in tail:
+                fail(f"{family}{{rank={rank}}}: _sum series missing")
+
+    print(
+        f"check_telemetry: OK: {path}: {len(expect)} metric families over "
+        f"{ranks} rank(s)"
+    )
+
+
+def main() -> None:
+    if len(sys.argv) not in (2, 3):
+        fail("usage: check_telemetry.py <telemetry.json> [<telemetry.prom>]")
+    json_path = sys.argv[1]
+    prom_path = (
+        sys.argv[2] if len(sys.argv) == 3 else re.sub(r"\.[^./]*$", "", json_path) + ".prom"
+    )
+    ranks = check_json(json_path)
+    check_prom(prom_path, ranks)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,8 @@
 //!   CG baseline). Everything else must route communication through
 //!   `engine::drive`, where schedules are verified.
 //! * **`hot-loop`** — `Instant::now(` is free only in the clock-owner
-//!   files (`trace/mod.rs`, `util/bench.rs`, `coordinator/driver.rs`);
+//!   files (`trace/mod.rs`, `telemetry/mod.rs`, `util/bench.rs`,
+//!   `coordinator/driver.rs`);
 //!   everywhere else each file's count must be budgeted in [`ALLOW`]
 //!   under the `instant-now` rule (currently just the thread
 //!   transport's receive-deadline clock). Allocation tokens (`vec![`,
@@ -76,6 +77,13 @@ pub const ALLOW: &[(&str, &str, usize)] = &[
     // two allreduces. New solvers must route through the engine.
     ("collective-seam", "solvers/bcd_row.rs", 4),
     ("collective-seam", "solvers/cg.rs", 2),
+    // The telemetry aggregation allreduce (PR 9): one metered-out,
+    // trace- and telemetry-paused collective that merges per-rank
+    // registries on the record cadence. It runs at a schedule-verified
+    // call site inside `engine::drive`'s boundary hook, so lockstep
+    // order is preserved; it cannot route through the engine seam
+    // itself because it ships registry blocks, not solver payloads.
+    ("collective-seam", "telemetry/aggregate.rs", 1),
     // Audited allocation tokens in the engine hot loop: setup-phase
     // buffer pools and per-run history vectors, none per-iteration.
     ("hot-loop-alloc", "engine/step.rs", 7),
@@ -102,10 +110,16 @@ const COLLECTIVES: [&str; 9] = [
 ];
 
 /// Files (relative to the source root) that **own** a wall clock and may
-/// call `Instant::now(` freely: the tracer clock, the bench harness, and
-/// the driver's wall-time report. Any other file's calls are budgeted
-/// per-file in [`ALLOW`] under the `instant-now` rule.
-const INSTANT_OK: [&str; 3] = ["trace/mod.rs", "util/bench.rs", "coordinator/driver.rs"];
+/// call `Instant::now(` freely: the tracer clock, the telemetry epoch
+/// clock, the bench harness, and the driver's wall-time report. Any
+/// other file's calls are budgeted per-file in [`ALLOW`] under the
+/// `instant-now` rule.
+const INSTANT_OK: [&str; 4] = [
+    "trace/mod.rs",
+    "telemetry/mod.rs",
+    "util/bench.rs",
+    "coordinator/driver.rs",
+];
 
 /// Allocation tokens budgeted in the engine hot loop.
 const ALLOC_TOKENS: [&str; 4] = ["vec![", "Vec::with_capacity(", "Vec::new(", ".to_vec("];

@@ -151,6 +151,7 @@ impl<C: Communicator> ChaosComm<C> {
                     )));
                 }
                 self.inner.meter_mut().retries += 1;
+                crate::telemetry::count(crate::telemetry::Counter::Retries, 1);
                 let t0 = trace::now();
                 std::thread::sleep(Duration::from_millis(
                     self.spec.backoff_base_ms << (attempt - 1).min(16),

@@ -322,6 +322,7 @@ impl Communicator for SerialComm {
         // Blocking collective: instantaneous start marker + wait marker,
         // so span counts match the meters under either schedule.
         let words = buf.len() as u64;
+        let u0 = crate::telemetry::now();
         crate::trace::mark(
             crate::trace::SpanKind::CollectiveStart,
             crate::trace::OpClass::Allreduce,
@@ -334,17 +335,25 @@ impl Communicator for SerialComm {
             0,
             words,
         );
+        crate::telemetry::count(crate::telemetry::Counter::Collectives, 1);
+        crate::telemetry::gauge(crate::telemetry::Gauge::PayloadWords, words);
+        crate::telemetry::observe(crate::telemetry::Hist::AllreduceWords, words);
+        crate::telemetry::observe_since(crate::telemetry::Hist::AllreduceNs, u0);
         Ok(())
     }
 
     fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
         self.meter.allreduces += 1;
+        let words = buf.len() as u64;
         crate::trace::mark(
             crate::trace::SpanKind::CollectiveStart,
             crate::trace::OpClass::Allreduce,
             0,
-            buf.len() as u64,
+            words,
         );
+        crate::telemetry::count(crate::telemetry::Counter::Collectives, 1);
+        crate::telemetry::gauge(crate::telemetry::Gauge::PayloadWords, words);
+        crate::telemetry::observe(crate::telemetry::Hist::AllreduceWords, words);
         Ok(ReduceHandle {
             buf,
             state: HandleState::Done,
@@ -353,12 +362,14 @@ impl Communicator for SerialComm {
 
     fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>> {
         self.meter.collective_waits += 1;
+        let u0 = crate::telemetry::now();
         crate::trace::mark(
             crate::trace::SpanKind::CollectiveWait,
             crate::trace::OpClass::Allreduce,
             0,
             handle.buf.len() as u64,
         );
+        crate::telemetry::observe_since(crate::telemetry::Hist::WaitNs, u0);
         Ok(handle.buf)
     }
 

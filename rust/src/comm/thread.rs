@@ -13,6 +13,7 @@ use crate::comm::{
     A2aState, Algo, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle,
 };
 use crate::error::{Error, Result};
+use crate::telemetry;
 use crate::trace::{self, OpClass, SpanKind};
 
 /// Payload size (f64 words) at which allreduce switches from recursive
@@ -292,6 +293,7 @@ impl ThreadComm {
                 }
                 Err(Some(budget)) => {
                     self.meter.timeouts += 1;
+                    telemetry::count(telemetry::Counter::Timeouts, 1);
                     return Err(self.poison(format!(
                         "rank {} timed out after {budget:?} waiting for rank {src} (op tag {tag})",
                         self.rank,
@@ -508,8 +510,13 @@ impl ThreadComm {
         // either schedule).
         trace::mark(SpanKind::CollectiveStart, OpClass::AllToAll, tag, words);
         let t0 = trace::now();
+        let u0 = telemetry::now();
         let res = self.all_to_all_body(send, recv_lens);
         trace::record(SpanKind::CollectiveWait, OpClass::AllToAll, tag, words, t0);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::gauge(telemetry::Gauge::PayloadWords, words);
+        telemetry::observe(telemetry::Hist::AllToAllWords, words);
+        telemetry::observe_since(telemetry::Hist::AllToAllNs, u0);
         res
     }
 
@@ -652,6 +659,7 @@ impl Communicator for ThreadComm {
         let words = buf.len() as u64;
         trace::mark(SpanKind::CollectiveStart, OpClass::Allreduce, tag, words);
         let t0 = trace::now();
+        let u0 = telemetry::now();
         let res = if self.size == 1 {
             Ok(())
         } else {
@@ -661,6 +669,10 @@ impl Communicator for ThreadComm {
             })
         };
         trace::record(SpanKind::CollectiveWait, OpClass::Allreduce, tag, words, t0);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::gauge(telemetry::Gauge::PayloadWords, words);
+        telemetry::observe(telemetry::Hist::AllreduceWords, words);
+        telemetry::observe_since(telemetry::Hist::AllreduceNs, u0);
         res
     }
 
@@ -689,6 +701,9 @@ impl Communicator for ThreadComm {
             })
         })();
         trace::record(SpanKind::CollectiveStart, OpClass::Allreduce, tag, words, t0);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::gauge(telemetry::Gauge::PayloadWords, words);
+        telemetry::observe(telemetry::Hist::AllreduceWords, words);
         res
     }
 
@@ -697,6 +712,7 @@ impl Communicator for ThreadComm {
         let ReduceHandle { mut buf, state } = handle;
         let words = buf.len() as u64;
         let t0 = trace::now();
+        let u0 = telemetry::now();
         let (tag, res) = match state {
             HandleState::Done => (self.cur_tag, Ok(())),
             HandleState::Thread {
@@ -715,6 +731,7 @@ impl Communicator for ThreadComm {
             }
         };
         trace::record(SpanKind::CollectiveWait, OpClass::Allreduce, tag, words, t0);
+        telemetry::observe_since(telemetry::Hist::WaitNs, u0);
         res.map(|()| buf)
     }
 
@@ -761,12 +778,16 @@ impl Communicator for ThreadComm {
         let t0 = trace::now();
         let res = self.iall_to_all_start_body(send, recv_lens, tag);
         trace::record(SpanKind::CollectiveStart, OpClass::AllToAll, tag, words, t0);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::gauge(telemetry::Gauge::PayloadWords, words);
+        telemetry::observe(telemetry::Hist::AllToAllWords, words);
         res
     }
 
     fn iall_to_all_wait(&mut self, handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
         self.meter.collective_waits += 1;
         let t0 = trace::now();
+        let u0 = telemetry::now();
         let (tag, words_hint, res) = match handle.state {
             A2aState::Ready(out) => {
                 let words: u64 = out.iter().map(|v| v.len() as u64).sum();
@@ -783,6 +804,7 @@ impl Communicator for ThreadComm {
             }
         };
         trace::record(SpanKind::CollectiveWait, OpClass::AllToAll, tag, words_hint, t0);
+        telemetry::observe_since(telemetry::Hist::WaitNs, u0);
         res
     }
 
@@ -794,7 +816,11 @@ impl Communicator for ThreadComm {
         self.check_poison()?;
         // Zero-payload recursive doubling: counts the message rounds, no
         // words.
-        self.allreduce_rd(&mut [], false)
+        let u0 = telemetry::now();
+        let res = self.allreduce_rd(&mut [], false);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::observe_since(telemetry::Hist::BarrierNs, u0);
+        res
     }
 
     fn set_deadline(&mut self, deadline: Option<Duration>) {

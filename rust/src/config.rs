@@ -31,6 +31,8 @@
 //! backend = native        # native | xla
 //! artifact_dir = artifacts
 //! # trace = run.trace.json  # per-rank span trace (Chrome trace-event JSON)
+//! # telemetry = run.telemetry.json  # cluster health snapshots (+ .prom exposition)
+//! # telemetry_z = 1.25      # straggler z-score threshold (default 1.25)
 //! # comm_timeout_ms = 5000  # deadline per blocking receive (default: unbounded)
 //! # checkpoint_every = 10   # snapshot state every k-th s-step block (0 = off)
 //! # checkpoint_dir = ckpts  # default: <artifact_dir>/checkpoints
@@ -95,6 +97,19 @@ pub struct RunConfig {
     /// Perfetto / `chrome://tracing`). Tracing is observer-neutral: the
     /// trajectory and cost meters are bitwise-identical with it on or off.
     pub trace: Option<PathBuf>,
+    /// When set, install a per-rank telemetry registry
+    /// ([`crate::telemetry`]) for the run and write the cluster health
+    /// snapshots here as JSON, plus a Prometheus text exposition next to
+    /// it (same path, `.prom` extension). Like tracing, telemetry is
+    /// observer-neutral: trajectories and metered wire counts are
+    /// bitwise-identical with it on or off.
+    pub telemetry: Option<PathBuf>,
+    /// Straggler z-score threshold for telemetry aggregation (default
+    /// [`crate::telemetry::DEFAULT_Z_THRESHOLD`]). A rank whose per-class
+    /// timing deviates from the fleet mean by at least this many
+    /// population standard deviations (and by an absolute floor) is
+    /// flagged in the snapshot.
+    pub telemetry_z: Option<f64>,
     /// Deadline for every blocking receive (milliseconds). A peer that
     /// fails to deliver within the deadline counts a
     /// [`CostMeter::timeouts`](crate::comm::CostMeter) and poisons the
@@ -118,6 +133,8 @@ impl Default for RunConfig {
             backend: "native".into(),
             artifact_dir: PathBuf::from("artifacts"),
             trace: None,
+            telemetry: None,
+            telemetry_z: None,
             comm_timeout_ms: None,
             checkpoint_every: 0,
             checkpoint_dir: None,
@@ -167,6 +184,8 @@ impl ExperimentConfig {
                 backend: rn.str("backend").unwrap_or("native").to_string(),
                 artifact_dir: PathBuf::from(rn.str("artifact_dir").unwrap_or("artifacts")),
                 trace: rn.str("trace").map(PathBuf::from),
+                telemetry: rn.str("telemetry").map(PathBuf::from),
+                telemetry_z: rn.f64_opt("telemetry_z")?,
                 comm_timeout_ms: rn.u64_opt("comm_timeout_ms")?,
                 checkpoint_every: rn.usize_or("checkpoint_every", 0)?,
                 checkpoint_dir: rn.str("checkpoint_dir").map(PathBuf::from),
@@ -221,6 +240,14 @@ impl ExperimentConfig {
             return Err(Error::Config(
                 "comm_timeout_ms must be ≥ 1 (omit the key for an unbounded wait)".into(),
             ));
+        }
+        if let Some(z) = self.run.telemetry_z {
+            if !z.is_finite() || z <= 0.0 {
+                return Err(Error::Config(
+                    "telemetry_z must be a finite value > 0 (omit the key for the default)"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -360,6 +387,24 @@ mod tests {
         // at config load, where the typo is visible.
         let zero = format!("{base}[run]\ncomm_timeout_ms = 0\n");
         assert!(ExperimentConfig::from_str(&zero).is_err());
+    }
+
+    #[test]
+    fn telemetry_keys_parse_and_default_off() {
+        let base = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cabcd\n";
+        let cfg = ExperimentConfig::from_str(base).unwrap();
+        assert_eq!(cfg.run.telemetry, None);
+        assert_eq!(cfg.run.telemetry_z, None);
+        let on = format!("{base}[run]\ntelemetry = run.telemetry.json\ntelemetry_z = 2.5\n");
+        let cfg = ExperimentConfig::from_str(&on).unwrap();
+        assert_eq!(cfg.run.telemetry, Some(PathBuf::from("run.telemetry.json")));
+        assert_eq!(cfg.run.telemetry_z, Some(2.5));
+        // A non-positive threshold would flag every rank (or none,
+        // NaN-style); reject it at config load.
+        let zero = format!("{base}[run]\ntelemetry_z = 0\n");
+        assert!(ExperimentConfig::from_str(&zero).is_err());
+        let neg = format!("{base}[run]\ntelemetry_z = -1.5\n");
+        assert!(ExperimentConfig::from_str(&neg).is_err());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::matrix::io::{read_libsvm, Dataset};
 use crate::metrics::History;
 use crate::runtime::XlaBackend;
 use crate::solvers::cg;
+use crate::telemetry::{self, Registry, TelemetrySummary};
 use crate::trace::{self, TraceSummary, Tracer};
 
 use super::{partition_dual, partition_primal, partition_rows, DualShard, PrimalShard, RowShard};
@@ -58,6 +59,12 @@ pub struct ExperimentReport {
     /// overlap-efficiency accounting. The raw Chrome trace-event JSON is
     /// written to the configured path.
     pub trace: Option<TraceSummary>,
+    /// Cluster-health rollup (`[run] telemetry` / `--telemetry` only):
+    /// snapshot counts, the steady-state allocation tripwire, straggler
+    /// verdicts, and the final [`ClusterSnapshot`](telemetry::ClusterSnapshot).
+    /// The full snapshot JSON and the Prometheus exposition are written
+    /// to the configured path (and its `.prom` sibling).
+    pub telemetry: Option<TelemetrySummary>,
     /// Set when the SPMD solve aborted (poisoned group, rank death,
     /// exhausted retry budget, …). The report then carries everything the
     /// ranks produced up to the failure — per-rank meters, the failing
@@ -203,12 +210,23 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
     let start = Instant::now();
     let shards = ShardSet::partition(method, &ds, p)?;
     let tracing = cfg.run.trace.is_some();
+    let telemetering = cfg.run.telemetry.is_some();
     let outcomes: Vec<RankOutcome> = run_spmd(p, |rank, comm| {
         if tracing {
             // Per-rank tracer lives in this worker's thread-local slot for
             // the whole solve; reclaimed below even on error so a failed
             // rank cannot leak an active tracer into a reused thread.
             trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+        }
+        if telemetering {
+            // Same thread-local discipline as the tracer. Installed on
+            // every rank (the aggregation collective must be lockstep);
+            // only rank 0 prints the live progress line.
+            let mut reg = Registry::new(rank, p).with_live(rank == 0);
+            if let Some(z) = cfg.run.telemetry_z {
+                reg = reg.with_z_threshold(z);
+            }
+            telemetry::install(reg);
         }
         if let Some(ms) = cfg.run.comm_timeout_ms {
             comm.set_deadline(Some(Duration::from_millis(ms)));
@@ -250,6 +268,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
         RankOutcome {
             meter: *comm.meter(),
             tracer: trace::take(),
+            registry: telemetry::take(),
             checkpoint: ckpt,
             history,
         }
@@ -257,7 +276,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
     let meters: Vec<CostMeter> = outcomes.iter().map(|o| o.meter).collect();
     let aborted_at = abort_info(&outcomes, &meters);
-    let (history, tracers) = collect(outcomes, &mut notes);
+    let (history, tracers, registries) = collect(outcomes, &mut notes);
     if let Some(a) = &aborted_at {
         let note = format!(
             "aborted: rank {} failed after {} collectives: {}",
@@ -301,6 +320,21 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
         None
     };
 
+    // Like the trace above, telemetry artifacts are written even when the
+    // run aborted: the partial snapshots and per-rank fault counters are
+    // exactly what a postmortem needs. The Prometheus exposition goes to
+    // the JSON path's `.prom` sibling.
+    let telemetry_summary = if let Some(path) = cfg.run.telemetry.as_ref() {
+        std::fs::write(path, telemetry::snapshots_json(&registries))?;
+        std::fs::write(
+            path.with_extension("prom"),
+            telemetry::prometheus_text(&registries),
+        )?;
+        Some(TelemetrySummary::from_registries(&registries))
+    } else {
+        None
+    };
+
     let (critical_msgs, critical_words) = CostMeter::critical_path(&meters);
     Ok(ExperimentReport {
         dataset: ds.name.clone(),
@@ -325,6 +359,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
         critical_msgs,
         critical_words,
         trace: trace_summary,
+        telemetry: telemetry_summary,
         aborted_at,
     })
 }
@@ -391,6 +426,13 @@ impl ExperimentReport {
                     .unwrap_or_else(|| "null".into()),
             ),
             (
+                "telemetry",
+                self.telemetry
+                    .as_ref()
+                    .map(telemetry::summary_json)
+                    .unwrap_or_else(|| "null".into()),
+            ),
+            (
                 "aborted_at",
                 self.aborted_at
                     .as_ref()
@@ -449,6 +491,7 @@ fn abort_json(a: &AbortInfo) -> String {
 struct RankOutcome {
     history: Result<History>,
     tracer: Option<Tracer>,
+    registry: Option<Registry>,
     meter: CostMeter,
     /// `CheckpointSink::describe` of the installed sink (the per-rank
     /// checkpoint file path), when checkpointing was on.
@@ -485,13 +528,19 @@ fn abort_info(outcomes: &[RankOutcome], meters: &[CostMeter]) -> Option<AbortInf
 
 /// Split the outcomes: the report's history is rank 0's (or the first
 /// surviving rank's on abort — an empty default if none survived, with a
-/// note saying so), all tracers (when tracing) feed the summary.
-fn collect(outcomes: Vec<RankOutcome>, notes: &mut Vec<String>) -> (History, Vec<Tracer>) {
+/// note saying so), all tracers (when tracing) feed the trace summary,
+/// all registries (when telemetering) feed the telemetry exports.
+fn collect(
+    outcomes: Vec<RankOutcome>,
+    notes: &mut Vec<String>,
+) -> (History, Vec<Tracer>, Vec<Registry>) {
     let mut histories: Vec<Option<History>> = Vec::with_capacity(outcomes.len());
     let mut tracers = Vec::new();
+    let mut registries = Vec::new();
     for o in outcomes {
         histories.push(o.history.ok());
         tracers.extend(o.tracer);
+        registries.extend(o.registry);
     }
     let history = match histories.iter_mut().find_map(|h| h.take()) {
         Some(h) => h,
@@ -502,7 +551,7 @@ fn collect(outcomes: Vec<RankOutcome>, notes: &mut Vec<String>) -> (History, Vec
             History::default()
         }
     };
-    (history, tracers)
+    (history, tracers, registries)
 }
 
 #[cfg(test)]
@@ -539,6 +588,8 @@ mod tests {
                 backend: "native".into(),
                 artifact_dir: "artifacts".into(),
                 trace: None,
+                telemetry: None,
+                telemetry_z: None,
                 comm_timeout_ms: None,
                 checkpoint_every: 0,
                 checkpoint_dir: None,
@@ -692,6 +743,106 @@ mod tests {
         let chrome = std::fs::read_to_string(&path).unwrap();
         assert!(chrome.starts_with("{\"traceEvents\":["));
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Meter equality modulo `buf_allocs`: the aggregation collective
+    /// warms the rank-local buffer pool with its own payload size, so
+    /// pool-miss counts may differ while every wire-visible field must
+    /// not.
+    fn assert_wire_meters_eq(a: &CostMeter, b: &CostMeter) {
+        let (mut a, mut b) = (*a, *b);
+        a.buf_allocs = 0;
+        b.buf_allocs = 0;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn telemetry_run_is_observer_neutral_and_exports() {
+        let mut c = cfg("cabcd", 2);
+        c.solver.overlap = true;
+        let plain = run_experiment(&c).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "cabcd_driver_telemetry_{}.json",
+            std::process::id()
+        ));
+        c.run.telemetry = Some(path.clone());
+        let telemetered = run_experiment(&c).unwrap();
+
+        // Observer-neutral: identical trajectory and wire meters with the
+        // registries installed.
+        assert_eq!(plain.final_sol_err, telemetered.final_sol_err);
+        assert_wire_meters_eq(&plain.history.meter, &telemetered.history.meter);
+
+        let sum = telemetered
+            .telemetry
+            .as_ref()
+            .expect("telemetered run lost its summary");
+        assert_eq!(sum.ranks, 2);
+        assert_eq!(sum.snapshot_words, 2 * telemetry::REGISTRY_WORDS);
+        // record_every = 50, s = 4 → cadence 48 inner iterations: record
+        // boundaries at h = 48, 96, 144, 192, plus the forced final
+        // boundary at h = 200 — one cluster snapshot each (none at the
+        // h = 0 initial record).
+        assert_eq!(sum.snapshots, 5);
+        assert_eq!(sum.dropped_snapshots, 0);
+        assert_eq!(sum.telemetry_allocs, 0, "steady state must not allocate");
+        let last = sum.last.as_ref().expect("no final snapshot");
+        assert_eq!(last.h, 200);
+        assert_eq!(last.ranks.len(), 2);
+        assert!(telemetered.to_json().contains("\"telemetry\":{"));
+
+        let json = std::fs::read_to_string(&path).unwrap();
+        assert!(json.starts_with("{\"ranks\":2,"), "{json}");
+        let prom = std::fs::read_to_string(path.with_extension("prom")).unwrap();
+        assert!(prom.contains("# TYPE cabcd_collectives_total counter"));
+        assert!(prom.contains("cabcd_gram_ns_count{rank=\"1\"}"));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(path.with_extension("prom")).ok();
+    }
+
+    #[test]
+    fn aborted_run_still_exports_trace_and_telemetry() {
+        // Same abort-forcing trick as the partial-report test: the
+        // checkpoint sink cannot be created under a regular file. The
+        // observability artifacts must still land on disk — an aborted
+        // multi-hour run with no trace or telemetry is undebuggable.
+        let blocker = std::env::temp_dir().join(format!(
+            "cabcd_driver_abort_export_{}",
+            std::process::id()
+        ));
+        std::fs::write(&blocker, b"not a directory").unwrap();
+        let trace_path = std::env::temp_dir().join(format!(
+            "cabcd_driver_abort_trace_{}.json",
+            std::process::id()
+        ));
+        let telem_path = std::env::temp_dir().join(format!(
+            "cabcd_driver_abort_telemetry_{}.json",
+            std::process::id()
+        ));
+        let mut c = cfg("cabcd", 2);
+        c.run.checkpoint_every = 5;
+        c.run.checkpoint_dir = Some(blocker.join("sub"));
+        c.run.trace = Some(trace_path.clone());
+        c.run.telemetry = Some(telem_path.clone());
+        let report = run_experiment(&c).expect("abort must yield a partial report");
+        assert!(report.aborted_at.is_some());
+        let chrome = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(chrome.starts_with("{\"traceEvents\":["), "partial trace missing");
+        let json = std::fs::read_to_string(&telem_path).unwrap();
+        assert!(json.starts_with("{\"ranks\":2,"), "partial telemetry missing");
+        assert!(
+            std::fs::read_to_string(telem_path.with_extension("prom"))
+                .unwrap()
+                .contains("# TYPE cabcd_timeouts_total counter"),
+            "partial exposition missing"
+        );
+        let sum = report.telemetry.as_ref().expect("summary must survive abort");
+        assert_eq!(sum.ranks, 2);
+        assert_eq!(sum.snapshots, 0, "ranks died before the first record");
+        std::fs::remove_file(&blocker).ok();
+        std::fs::remove_file(&trace_path).ok();
+        std::fs::remove_file(&telem_path).ok();
+        std::fs::remove_file(telem_path.with_extension("prom")).ok();
     }
 
     #[test]

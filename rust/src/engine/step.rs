@@ -45,6 +45,7 @@ use crate::engine::checkpoint::{self, Checkpoint};
 use crate::error::{Error, Result};
 use crate::metrics::History;
 use crate::solvers::common::{cond_stride, packed_gram_cond, should_record, SolverOpts};
+use crate::telemetry;
 use crate::trace::{self, OpClass, SpanKind};
 
 /// One outer iteration's shared-seed sample: the `s` drawn blocks of `b`
@@ -241,8 +242,12 @@ fn capture<C: Communicator, S: CaStep<C> + ?Sized>(
         meter: *comm.meter(),
         ..Checkpoint::default()
     };
+    let u0 = telemetry::now();
     step.save_state(&mut ckpt)?;
-    checkpoint::store(&ckpt)
+    checkpoint::store(&ckpt)?;
+    telemetry::observe_since(telemetry::Hist::CkptSaveNs, u0);
+    telemetry::count(telemetry::Counter::CkptSaves, 1);
+    Ok(())
 }
 
 /// Gram conditioning sampler owned by [`drive`]: probe parameters, the
@@ -306,15 +311,19 @@ fn solve_apply<C: Communicator, S: CaStep<C> + ?Sized>(
 ) -> Result<()> {
     let k = smp.k as u64;
     let t0 = trace::now();
+    let u0 = telemetry::now();
     let deltas = step.inner_solve(smp, &buf[..head], &buf[head..])?;
     trace::record(SpanKind::InnerSolve, OpClass::Compute, k, buf.len() as u64, t0);
+    telemetry::observe_since(telemetry::Hist::InnerSolveNs, u0);
     let t0 = trace::now();
+    let u0 = telemetry::now();
     let res = if deltas.is_empty() {
         step.apply(smp, &buf[head..])
     } else {
         step.apply(smp, &deltas)
     };
     trace::record(SpanKind::Apply, OpClass::Compute, k, (buf.len() - head) as u64, t0);
+    telemetry::observe_since(telemetry::Hist::ApplyNs, u0);
     res
 }
 
@@ -330,10 +339,25 @@ fn boundary<C: Communicator, S: CaStep<C> + ?Sized>(
 ) -> Result<bool> {
     let h_now = (k + 1) * opts.s;
     history.iters = h_now;
+    telemetry::count(telemetry::Counter::Outers, 1);
+    telemetry::count(telemetry::Counter::Inners, opts.s as u64);
+    telemetry::gauge(telemetry::Gauge::LastOuter, (k + 1) as u64);
+    telemetry::gauge(telemetry::Gauge::LastH, h_now as u64);
     if should_record(h_now, opts.s, opts) || k + 1 == outer {
         let t0 = trace::now();
         step.record(comm, history, h_now)?;
         trace::record(SpanKind::Record, OpClass::Compute, h_now as u64, 0, t0);
+        telemetry::count(telemetry::Counter::Records, 1);
+        // Cross-rank health rollup, same cadence as the record (the
+        // enabled check inside is rank-identical, so the aggregation
+        // collective stays in lockstep; its traffic is meter-excluded,
+        // trace-paused, and telemetry-paused).
+        telemetry::aggregate_snapshot(
+            comm,
+            (k + 1) as u64,
+            h_now as u64,
+            telemetry::aggregate::last_cert(history),
+        )?;
         if let Some(tol) = opts.tol {
             if step.converged(history, tol) {
                 return Ok(true);
@@ -385,9 +409,12 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
                     comm.size()
                 )));
             }
+            let u0 = telemetry::now();
             step.restore_state(ckpt)?;
             ckpt.restore_history(history);
             *comm.meter_mut() = ckpt.meter;
+            telemetry::observe_since(telemetry::Hist::CkptRestoreNs, u0);
+            telemetry::count(telemetry::Counter::CkptRestores, 1);
             ckpt.next_k as usize
         }
         None => 0,
@@ -397,6 +424,7 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
         let t0 = trace::now();
         step.record(comm, history, 0)?;
         trace::record(SpanKind::Record, OpClass::Compute, 0, 0, t0);
+        telemetry::count(telemetry::Counter::Records, 1);
     }
 
     if opts.overlap && step.prefetch_gram() && outer > 0 && !ckpt_on {
@@ -405,20 +433,27 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
         // reduction of [gram_k | state_k]. Payload buffers ping-pong
         // through the communicator's rank-local pool.
         let t0 = trace::now();
+        let u0 = telemetry::now();
         let mut smp_cur = step.sample(comm, 0)?;
         trace::record(SpanKind::Sample, OpClass::Compute, 0, 0, t0);
+        telemetry::observe_since(telemetry::Hist::SampleNs, u0);
         let mut next_buf = comm.take_buf(total);
         let t0 = trace::now();
+        let u0 = telemetry::now();
         step.local_gram(comm, &smp_cur, &mut next_buf[..head])?;
         trace::record(SpanKind::GramLocal, OpClass::Compute, 0, head as u64, t0);
+        telemetry::observe_since(telemetry::Hist::GramNs, u0);
         'outer_loop: for k in 0..outer {
             let mut buf = std::mem::take(&mut next_buf); // holds gram_k
             let t0 = trace::now();
+            let u0 = telemetry::now();
             step.local_state(&smp_cur, &mut buf[head..])?;
             trace::record(SpanKind::GramLocal, OpClass::Compute, k as u64, tail as u64, t0);
+            telemetry::observe_since(telemetry::Hist::GramNs, u0);
 
             // THE communication of this outer iteration — non-blocking.
             let handle = comm.iallreduce_start(buf)?;
+            let u_win = telemetry::now();
 
             // ---- local work hidden behind the in-flight reduction ------
             // The prefetched GramLocal span below lands inside the
@@ -427,16 +462,24 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
             let mut pending: Option<Sample> = None;
             if k + 1 < outer {
                 let t0 = trace::now();
+                let u0 = telemetry::now();
                 let nxt = step.sample(comm, k + 1)?;
                 trace::record(SpanKind::Sample, OpClass::Compute, (k + 1) as u64, 0, t0);
+                telemetry::observe_since(telemetry::Hist::SampleNs, u0);
                 next_buf = comm.take_buf(total);
                 let t0 = trace::now();
+                let u0 = telemetry::now();
                 step.local_gram(comm, &nxt, &mut next_buf[..head])?;
                 trace::record(SpanKind::GramLocal, OpClass::Compute, (k + 1) as u64, head as u64, t0);
+                telemetry::observe_since(telemetry::Hist::GramNs, u0);
                 pending = Some(nxt);
             }
             step.hidden_work(&smp_cur)?;
             // ------------------------------------------------------------
+            telemetry::gauge(
+                telemetry::Gauge::InflightNs,
+                telemetry::now().saturating_sub(u_win),
+            );
             let buf = comm.iallreduce_wait(handle)?;
 
             cond.check(history, k, &buf);
@@ -461,18 +504,27 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
         let mut buf = vec![0.0; total];
         'outer_loop2: for k in k0..outer {
             let t0 = trace::now();
+            let u0 = telemetry::now();
             let smp = step.sample(comm, k)?;
             trace::record(SpanKind::Sample, OpClass::Compute, k as u64, 0, t0);
+            telemetry::observe_since(telemetry::Hist::SampleNs, u0);
             {
                 let t0 = trace::now();
+                let u0 = telemetry::now();
                 let (h, t) = buf.split_at_mut(head);
                 step.local_payload(comm, &smp, h, t)?;
                 trace::record(SpanKind::GramLocal, OpClass::Compute, k as u64, total as u64, t0);
+                telemetry::observe_since(telemetry::Hist::GramNs, u0);
             }
             // Move the hoisted buffer into the handle and take it back
             // reduced — no payload copies on the hot path.
             let handle = comm.iallreduce_start(std::mem::take(&mut buf))?;
+            let u_win = telemetry::now();
             step.hidden_work(&smp)?;
+            telemetry::gauge(
+                telemetry::Gauge::InflightNs,
+                telemetry::now().saturating_sub(u_win),
+            );
             buf = comm.iallreduce_wait(handle)?;
 
             cond.check(history, k, &buf);
@@ -491,13 +543,17 @@ pub fn drive<C: Communicator, S: CaStep<C> + ?Sized>(
         let mut buf = vec![0.0; total];
         'outer_loop3: for k in k0..outer {
             let t0 = trace::now();
+            let u0 = telemetry::now();
             let smp = step.sample(comm, k)?;
             trace::record(SpanKind::Sample, OpClass::Compute, k as u64, 0, t0);
+            telemetry::observe_since(telemetry::Hist::SampleNs, u0);
             {
                 let t0 = trace::now();
+                let u0 = telemetry::now();
                 let (h, t) = buf.split_at_mut(head);
                 step.local_payload(comm, &smp, h, t)?;
                 trace::record(SpanKind::GramLocal, OpClass::Compute, k as u64, total as u64, t0);
+                telemetry::observe_since(telemetry::Hist::GramNs, u0);
             }
 
             // THE communication of this outer iteration.

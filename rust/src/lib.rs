@@ -29,6 +29,10 @@
 //!   loops that reuse the packed `[G|r]` collective path verbatim.
 //! * [`costmodel`] — the paper's analytic T = γF + αL + βW machine model
 //!   (Theorems 1–9, Figures 8–9).
+//! * [`telemetry`] — cross-rank runtime health: a zero-allocation
+//!   metrics registry (counters / gauges / log2 histograms) aggregated
+//!   on the record cadence into cluster snapshots with straggler
+//!   detection, exported as Prometheus text and JSON.
 //! * [`analysis`] — static SPMD safety: a symbolic schedule verifier
 //!   (record every rank's abstract collective stream against a data-free
 //!   [`SpecComm`](analysis::SpecComm), then prove lockstep / handle
@@ -58,6 +62,7 @@ pub mod prox;
 pub mod runtime;
 pub mod sampling;
 pub mod solvers;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 

@@ -125,6 +125,9 @@ USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
               [--overlap] [--json] [--reg l2|l1|elastic|none]
               [--l1-ratio R] [--local-iters N (cocoa)]
               [--trace FILE (Chrome trace-event JSON, one track per rank)]
+              [--telemetry FILE (cluster health snapshots as JSON, plus a
+               Prometheus exposition at FILE with a .prom extension)]
+              [--telemetry-z Z (straggler z-score threshold, default 1.25)]
               [--comm-timeout MS (deadline per blocking receive; a stalled
                or dead rank poisons the group instead of hanging)]
               [--checkpoint-every K (snapshot state every K-th s-step
@@ -199,6 +202,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 backend: args.str_or("backend", "native"),
                 artifact_dir: PathBuf::from(args.str_or("artifact-dir", "artifacts")),
                 trace: args.str_opt("trace").map(PathBuf::from),
+                telemetry: args.str_opt("telemetry").map(PathBuf::from),
+                telemetry_z: args.f64_opt("telemetry-z")?,
                 comm_timeout_ms: args.u64_opt("comm-timeout")?,
                 checkpoint_every: args.usize_or("checkpoint-every", 0)?,
                 checkpoint_dir: args.str_opt("checkpoint-dir").map(PathBuf::from),
@@ -209,6 +214,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = cfg;
     if let Some(path) = args.str_opt("trace") {
         cfg.run.trace = Some(PathBuf::from(path));
+    }
+    if let Some(path) = args.str_opt("telemetry") {
+        cfg.run.telemetry = Some(PathBuf::from(path));
+    }
+    if let Some(z) = args.f64_opt("telemetry-z")? {
+        cfg.run.telemetry_z = Some(z);
     }
     if let Some(ms) = args.u64_opt("comm-timeout")? {
         cfg.run.comm_timeout_ms = Some(ms);
@@ -235,6 +246,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                 println!("resume from checkpoint {path} (restarts at s-step block {k})")
             }
             _ => println!("no resumable checkpoint (run with --checkpoint-every K)"),
+        }
+        // The observability artifacts are written even on abort — name
+        // them so the postmortem starts from the right files.
+        if let Some(path) = cfg.run.trace.as_ref() {
+            println!("partial chrome trace written to {}", path.display());
+        }
+        if let Some(path) = cfg.run.telemetry.as_ref() {
+            println!(
+                "partial telemetry written to {} (+ {})",
+                path.display(),
+                path.with_extension("prom").display()
+            );
         }
     } else {
         println!(
@@ -280,6 +303,17 @@ fn cmd_train(args: &Args) -> Result<()> {
                 t.ranks,
                 t.overlap_efficiency(),
                 cfg.run.trace.as_ref().unwrap().display()
+            );
+        }
+        if let (Some(t), Some(path)) = (&report.telemetry, cfg.run.telemetry.as_ref()) {
+            println!(
+                "telemetry: {} snapshots over {} ranks  straggler flags={}  \
+                 (json written to {}, exposition to {})",
+                t.snapshots,
+                t.ranks,
+                t.straggler_flags,
+                path.display(),
+                path.with_extension("prom").display()
             );
         }
     }

@@ -246,16 +246,18 @@ pub fn flatten_blocks(blocks: &[Vec<usize>], b: usize, idx_flat: &mut [usize]) {
 }
 
 /// Run `f` (metric-evaluation communication) without polluting the solver's
-/// cost meter: snapshot, run, restore. The span tracer is paused for the
-/// same scope, so diagnostic collectives stay invisible to both the
-/// meters and the trace — keeping the span-count/meter cross-check gate
-/// (`crate::trace::cross_check`) exact.
+/// cost meter: snapshot, run, restore. The span tracer and the telemetry
+/// registry are paused for the same scope, so diagnostic collectives stay
+/// invisible to the meters, the trace, and the health metrics — keeping
+/// the span-count/meter cross-check gate (`crate::trace::cross_check`)
+/// exact.
 pub fn metered_out<C: Communicator, T>(
     comm: &mut C,
     f: impl FnOnce(&mut C) -> Result<T>,
 ) -> Result<T> {
     let snap = *comm.meter();
     let _trace_pause = crate::trace::pause();
+    let _telemetry_pause = crate::telemetry::pause();
     let out = f(comm);
     *comm.meter_mut() = snap;
     out

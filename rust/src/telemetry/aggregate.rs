@@ -1,0 +1,479 @@
+//! Cross-rank rollup: one meter-excluded collective turns P per-rank
+//! registries into a [`ClusterSnapshot`] with straggler verdicts.
+//!
+//! On the record cadence the engine calls [`aggregate_snapshot`]: each
+//! rank serializes its [`Registry`](super::Registry) into its
+//! [`REGISTRY_WORDS`]-word slice of a `P·REGISTRY_WORDS` payload (zeros
+//! elsewhere) and the group allreduces the payload — after which **every
+//! rank** holds every rank's block and decodes the identical snapshot, so
+//! no separate broadcast is needed and rank 0 is special only for the
+//! live progress line. The collective rides the same exclusion pattern
+//! as [`metered_out`](crate::solvers::common::metered_out): meters
+//! snapshotted and restored, tracer paused, and telemetry itself paused
+//! so the aggregation never observes its own traffic.
+//!
+//! # Straggler semantics
+//!
+//! Two per-rank totals are z-scored across the group at each snapshot:
+//!
+//! * **`gram`** — cumulative local-Gram time. A rank flagged *high*
+//!   (`z ≥ threshold`) is compute-bound relative to its peers (skewed
+//!   shard, slow core).
+//! * **`wait`** — cumulative wire time (collective bodies + waits). A
+//!   rank flagged *low* (`z ≤ −threshold`) is the *late arriver*: every
+//!   peer burns wall-clock blocked in the collective waiting for it, so
+//!   the straggler is the one rank that barely waits at all.
+//!
+//! A flag additionally requires the absolute deviation from the group
+//! mean to exceed the configured floor
+//! ([`DEFAULT_MIN_DEV_NS`](super::DEFAULT_MIN_DEV_NS)), so fault-free
+//! runs with microsecond jitter never flag. Note the population z-score
+//! of a single outlier among P ranks is bounded by `sqrt(P−1)`; the
+//! default threshold ([`super::DEFAULT_Z_THRESHOLD`]) is set below that
+//! bound on purpose.
+
+use super::histogram::Histogram;
+use super::{Counter, Hist, REGISTRY_WORDS};
+use crate::comm::Communicator;
+use crate::error::Result;
+use crate::metrics::History;
+
+/// p50/p99 pair from one histogram (bucket-resolution estimates clamped
+/// to the exact max; see [`Histogram::quantile`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Quantiles {
+    /// Median estimate.
+    pub p50: u64,
+    /// 99th-percentile estimate.
+    pub p99: u64,
+}
+
+impl Quantiles {
+    fn of(h: &Histogram) -> Quantiles {
+        Quantiles {
+            p50: h.quantile(0.5),
+            p99: h.quantile(0.99),
+        }
+    }
+}
+
+/// One rank's health at a snapshot (or the fleet-wide rollup, where the
+/// histograms are merged across ranks and the time shares are summed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankHealth {
+    /// Owning rank (`u32::MAX` marks the fleet rollup).
+    pub rank: u32,
+    /// Telemetry-epoch wall clock at serialization, ns (fleet: max).
+    pub wall_ns: u64,
+    /// Cumulative compute time: gram + inner solve + apply + sample, ns.
+    pub compute_ns: u64,
+    /// Cumulative wire time: collective bodies + waits + barriers, ns.
+    pub wire_ns: u64,
+    /// Wall time not accounted compute or wire, ns.
+    pub idle_ns: u64,
+    /// Cumulative collective payload words (allreduce + all-to-all).
+    pub wire_words: u64,
+    /// Local-Gram latency quantiles.
+    pub gram: Quantiles,
+    /// Allreduce latency quantiles.
+    pub allreduce: Quantiles,
+    /// All-to-all latency quantiles.
+    pub all_to_all: Quantiles,
+    /// Barrier latency quantiles.
+    pub barrier: Quantiles,
+    /// Non-blocking completion (`i*_wait`) latency quantiles.
+    pub wait: Quantiles,
+}
+
+/// One straggler verdict: which rank, which metric, how far out.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Straggler {
+    /// Flagged rank.
+    pub rank: u32,
+    /// Deviating op class: `"gram"` (compute-bound, flagged high) or
+    /// `"wait"` (late arriver, flagged low — see the module docs).
+    pub op: &'static str,
+    /// Population z-score of the rank's total against the group.
+    pub z: f64,
+    /// Signed deviation from the group mean, ns.
+    pub dev_ns: i64,
+    /// The flagged rank's metered-collective count at the snapshot —
+    /// names *when* in the schedule the imbalance was observed.
+    pub at_collective: u64,
+}
+
+/// Fleet-wide health at one record boundary, identically decoded on
+/// every rank from the aggregation payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSnapshot {
+    /// Outer iterations completed when the snapshot was taken.
+    pub outer: u64,
+    /// Inner iterations completed (h).
+    pub h: u64,
+    /// Highest metered-collective count across ranks at the snapshot.
+    pub at_collective: u64,
+    /// Per-rank health, indexed by rank.
+    pub ranks: Vec<RankHealth>,
+    /// Fleet rollup: merged histograms, summed shares.
+    pub fleet: RankHealth,
+    /// Straggler verdicts (empty when the group is balanced).
+    pub stragglers: Vec<Straggler>,
+}
+
+/// One decoded per-rank registry block.
+struct Block {
+    wall_ns: u64,
+    counters: [u64; super::NUM_COUNTERS],
+    hists: Vec<Histogram>,
+}
+
+fn decode_block(words: &[f64]) -> Block {
+    let dec = |v: f64| -> u64 {
+        if v > 0.0 {
+            v as u64
+        } else {
+            0
+        }
+    };
+    let mut counters = [0u64; super::NUM_COUNTERS];
+    for (i, c) in counters.iter_mut().enumerate() {
+        *c = dec(words[1 + i]);
+    }
+    let h0 = 1 + super::NUM_COUNTERS + super::NUM_GAUGES;
+    let hists = (0..super::NUM_HISTS)
+        .map(|i| Histogram::from_words(&words[h0 + i * Histogram::WORDS..]))
+        .collect();
+    Block {
+        wall_ns: dec(words[0]),
+        counters,
+        hists,
+    }
+}
+
+fn health_of(rank: u32, wall_ns: u64, hists: &[Histogram]) -> RankHealth {
+    let sum = |h: Hist| hists[h as usize].sum();
+    let compute_ns = sum(Hist::GramNs) + sum(Hist::InnerSolveNs) + sum(Hist::ApplyNs) + sum(Hist::SampleNs);
+    let wire_ns =
+        sum(Hist::AllreduceNs) + sum(Hist::AllToAllNs) + sum(Hist::BarrierNs) + sum(Hist::WaitNs);
+    RankHealth {
+        rank,
+        wall_ns,
+        compute_ns,
+        wire_ns,
+        idle_ns: wall_ns.saturating_sub(compute_ns + wire_ns),
+        wire_words: sum(Hist::AllreduceWords) + sum(Hist::AllToAllWords),
+        gram: Quantiles::of(&hists[Hist::GramNs as usize]),
+        allreduce: Quantiles::of(&hists[Hist::AllreduceNs as usize]),
+        all_to_all: Quantiles::of(&hists[Hist::AllToAllNs as usize]),
+        barrier: Quantiles::of(&hists[Hist::BarrierNs as usize]),
+        wait: Quantiles::of(&hists[Hist::WaitNs as usize]),
+    }
+}
+
+/// Population mean and standard deviation of per-rank totals; `None`
+/// when the group is degenerate (fewer than 2 ranks, or zero spread).
+fn stats(vals: &[f64]) -> Option<(f64, f64)> {
+    if vals.len() < 2 {
+        return None;
+    }
+    let n = vals.len() as f64;
+    let mean = vals.iter().sum::<f64>() / n;
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    let std = var.sqrt();
+    if std > 0.0 {
+        Some((mean, std))
+    } else {
+        None
+    }
+}
+
+/// Z-score one per-rank total and emit verdicts. `flag_high` selects the
+/// tail that indicts a straggler for this metric: high for compute
+/// totals, low for wire totals (the late arriver waits the least).
+fn detect(
+    vals: &[f64],
+    op: &'static str,
+    flag_high: bool,
+    z_threshold: f64,
+    min_dev_ns: u64,
+    collectives: &[u64],
+    out: &mut Vec<Straggler>,
+) {
+    let Some((mean, std)) = stats(vals) else {
+        return;
+    };
+    for (rank, &v) in vals.iter().enumerate() {
+        let dev = v - mean;
+        let z = dev / std;
+        let outlier = if flag_high { z >= z_threshold } else { z <= -z_threshold };
+        if outlier && dev.abs() >= min_dev_ns as f64 {
+            out.push(Straggler {
+                rank: rank as u32,
+                op,
+                z,
+                dev_ns: dev as i64,
+                at_collective: collectives[rank],
+            });
+        }
+    }
+}
+
+impl ClusterSnapshot {
+    /// Decode the allreduced `P·REGISTRY_WORDS` payload into the
+    /// snapshot every rank agrees on. Pure function of the payload and
+    /// the thresholds — unit-testable without a communicator.
+    pub fn from_blocks(
+        buf: &[f64],
+        p: usize,
+        outer: u64,
+        h: u64,
+        z_threshold: f64,
+        min_dev_ns: u64,
+    ) -> ClusterSnapshot {
+        debug_assert!(buf.len() >= p * REGISTRY_WORDS);
+        let blocks: Vec<Block> = (0..p)
+            .map(|r| decode_block(&buf[r * REGISTRY_WORDS..(r + 1) * REGISTRY_WORDS]))
+            .collect();
+        let ranks: Vec<RankHealth> = blocks
+            .iter()
+            .enumerate()
+            .map(|(r, b)| health_of(r as u32, b.wall_ns, &b.hists))
+            .collect();
+
+        let mut fleet_hists = vec![Histogram::new(); super::NUM_HISTS];
+        let mut fleet_wall = 0u64;
+        for b in &blocks {
+            fleet_wall = fleet_wall.max(b.wall_ns);
+            for (i, fh) in fleet_hists.iter_mut().enumerate() {
+                fh.merge(&b.hists[i]);
+            }
+        }
+        let mut fleet = health_of(u32::MAX, fleet_wall, &fleet_hists);
+        // Shares are per-rank sums; idle is the sum of per-rank idles
+        // (max-wall minus summed busy time would double-count skew).
+        fleet.idle_ns = ranks.iter().map(|r| r.idle_ns).sum();
+
+        let collectives: Vec<u64> = blocks
+            .iter()
+            .map(|b| b.counters[Counter::Collectives as usize])
+            .collect();
+        let gram: Vec<f64> = blocks
+            .iter()
+            .map(|b| b.hists[Hist::GramNs as usize].sum() as f64)
+            .collect();
+        let wire: Vec<f64> = ranks.iter().map(|r| r.wire_ns as f64).collect();
+        let mut stragglers = Vec::new();
+        detect(&gram, "gram", true, z_threshold, min_dev_ns, &collectives, &mut stragglers);
+        detect(&wire, "wait", false, z_threshold, min_dev_ns, &collectives, &mut stragglers);
+
+        ClusterSnapshot {
+            outer,
+            h,
+            at_collective: collectives.iter().copied().max().unwrap_or(0),
+            ranks,
+            fleet,
+            stragglers,
+        }
+    }
+}
+
+/// The most recent convergence certificate in `history`, for the live
+/// progress line: the prox duality gap when the run records
+/// certificates, else the smooth objective error.
+pub fn last_cert(history: &History) -> Option<f64> {
+    history
+        .prox
+        .last()
+        .map(|r| r.gap)
+        .or_else(|| history.records.last().map(|r| r.obj_err))
+}
+
+/// Aggregate every rank's registry into a [`ClusterSnapshot`] with one
+/// meter-excluded, trace-paused, telemetry-paused allreduce, store the
+/// snapshot in each rank's registry, and (when the registry's live flag
+/// is set) print the rank-0 progress line. No-op when telemetry is
+/// disabled on this thread — the caller's `enabled()` check and this one
+/// are both deterministic and rank-identical, so the collective stays in
+/// lockstep.
+pub fn aggregate_snapshot<C: Communicator>(
+    comm: &mut C,
+    outer: u64,
+    h: u64,
+    cert: Option<f64>,
+) -> Result<()> {
+    if !super::enabled() {
+        return Ok(());
+    }
+    let p = comm.size();
+    let rank = comm.rank();
+    let Some((z_threshold, min_dev_ns, live)) =
+        super::with_registry(|r| (r.z_threshold(), r.min_dev_ns(), r.live()))
+    else {
+        return Ok(());
+    };
+    // Same exclusion pattern as `metered_out`, plus telemetry's own
+    // pause: the rollup must not meter, trace, or observe itself.
+    let meter_snap = *comm.meter();
+    let _trace_pause = crate::trace::pause();
+    let _self_pause = super::pause();
+    let wall = super::wall_ns();
+    let mut buf = comm.take_buf(p * REGISTRY_WORDS);
+    super::with_registry(|r| {
+        r.write_block(&mut buf[rank * REGISTRY_WORDS..(rank + 1) * REGISTRY_WORDS], wall)
+    });
+    let res = comm.allreduce_sum(&mut buf);
+    *comm.meter_mut() = meter_snap;
+    if let Err(e) = res {
+        comm.give_buf(buf);
+        return Err(e);
+    }
+    let snap = ClusterSnapshot::from_blocks(&buf, p, outer, h, z_threshold, min_dev_ns);
+    comm.give_buf(buf);
+    if live && rank == 0 {
+        print_live(&snap, cert);
+    }
+    super::store_snapshot(snap);
+    Ok(())
+}
+
+/// The rank-0 live progress line (stderr, so `--json` stdout stays
+/// machine-readable).
+fn print_live(snap: &ClusterSnapshot, cert: Option<f64>) {
+    let secs = snap.fleet.wall_ns as f64 / 1e9;
+    let words_per_s = if secs > 0.0 {
+        snap.fleet.wire_words as f64 / secs
+    } else {
+        0.0
+    };
+    let cert = cert
+        .map(|c| format!("{c:.3e}"))
+        .unwrap_or_else(|| "-".into());
+    let stragglers = if snap.stragglers.is_empty() {
+        "none".to_string()
+    } else {
+        snap.stragglers
+            .iter()
+            .map(|s| format!("r{}:{}(z={:+.2})", s.rank, s.op, s.z))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    eprintln!(
+        "[telemetry] outer={} h={} cert={} wire={:.0} words/s stragglers={}",
+        snap.outer, snap.h, cert, words_per_s, stragglers
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SerialComm;
+
+    /// Build a P-rank aggregation payload from synthetic per-rank
+    /// (gram_ns, wire_ns, collectives) triples.
+    fn payload(specs: &[(u64, u64, u64)]) -> Vec<f64> {
+        let mut buf = vec![0.0; specs.len() * REGISTRY_WORDS];
+        for (rank, &(gram, wire, colls)) in specs.iter().enumerate() {
+            let mut reg = super::super::Registry::new(rank, specs.len());
+            reg.counters[Counter::Collectives as usize] = colls;
+            reg.hists[Hist::GramNs as usize].observe(gram);
+            reg.hists[Hist::AllreduceNs as usize].observe(wire);
+            reg.write_block(
+                &mut buf[rank * REGISTRY_WORDS..(rank + 1) * REGISTRY_WORDS],
+                gram + wire + 50,
+            );
+        }
+        buf
+    }
+
+    #[test]
+    fn balanced_group_flags_nothing() {
+        let ms = 1_000_000; // 1ms per op, jitter below the 10ms floor
+        let buf = payload(&[(ms, ms, 6), (ms + 99, ms, 6), (ms, ms + 99, 6), (ms, ms, 6)]);
+        let snap = ClusterSnapshot::from_blocks(
+            &buf,
+            4,
+            6,
+            24,
+            super::super::DEFAULT_Z_THRESHOLD,
+            super::super::DEFAULT_MIN_DEV_NS,
+        );
+        assert!(snap.stragglers.is_empty(), "{:?}", snap.stragglers);
+        assert_eq!(snap.ranks.len(), 4);
+        assert_eq!(snap.at_collective, 6);
+        assert_eq!(snap.fleet.rank, u32::MAX);
+        assert_eq!(snap.fleet.wire_words, 0);
+    }
+
+    #[test]
+    fn slow_gram_rank_is_flagged_high() {
+        let ms = 1_000_000;
+        // Rank 1 spends 100ms in gram vs 1ms peers.
+        let buf = payload(&[(ms, ms, 9), (100 * ms, ms, 9), (ms, ms, 9), (ms, ms, 9)]);
+        let snap = ClusterSnapshot::from_blocks(&buf, 4, 3, 12, 1.25, 10_000_000);
+        assert_eq!(snap.stragglers.len(), 1, "{:?}", snap.stragglers);
+        let s = &snap.stragglers[0];
+        assert_eq!(s.rank, 1);
+        assert_eq!(s.op, "gram");
+        assert!(s.z > 1.25 && s.z < 1.7321, "one outlier of 4 → z≈√3: {}", s.z);
+        assert!(s.dev_ns > 0);
+        assert_eq!(s.at_collective, 9);
+    }
+
+    #[test]
+    fn late_arriver_is_flagged_low_on_wait() {
+        let ms = 1_000_000;
+        // Peers burn 80ms waiting for rank 2; rank 2 itself barely waits.
+        let buf = payload(&[(ms, 80 * ms, 5), (ms, 80 * ms, 5), (ms, ms, 5), (ms, 80 * ms, 5)]);
+        let snap = ClusterSnapshot::from_blocks(&buf, 4, 2, 8, 1.25, 10_000_000);
+        assert_eq!(snap.stragglers.len(), 1, "{:?}", snap.stragglers);
+        let s = &snap.stragglers[0];
+        assert_eq!(s.rank, 2);
+        assert_eq!(s.op, "wait");
+        assert!(s.z < -1.25);
+        assert!(s.dev_ns < 0);
+    }
+
+    #[test]
+    fn zero_spread_and_tiny_groups_are_degenerate() {
+        let buf = payload(&[(5, 5, 1), (5, 5, 1)]);
+        let snap = ClusterSnapshot::from_blocks(&buf, 2, 1, 4, 1.25, 0);
+        assert!(snap.stragglers.is_empty(), "zero std must not divide");
+        let buf1 = payload(&[(1_000_000_000, 0, 1)]);
+        let snap1 = ClusterSnapshot::from_blocks(&buf1, 1, 1, 4, 1.25, 0);
+        assert!(snap1.stragglers.is_empty(), "P=1 has no peers to deviate from");
+    }
+
+    #[test]
+    fn shares_decompose_wall() {
+        let buf = payload(&[(30, 20, 2), (10, 40, 2)]);
+        let snap = ClusterSnapshot::from_blocks(&buf, 2, 1, 2, 1.25, 0);
+        let r0 = &snap.ranks[0];
+        assert_eq!(r0.compute_ns, 30);
+        assert_eq!(r0.wire_ns, 20);
+        assert_eq!(r0.idle_ns, 50, "wall was gram+wire+50");
+        assert_eq!(snap.fleet.compute_ns, 40);
+        assert_eq!(snap.fleet.wire_ns, 60);
+        assert_eq!(snap.fleet.wall_ns, 100, "fleet wall is the max");
+    }
+
+    #[test]
+    fn aggregate_on_serial_comm_is_meter_neutral_and_stores() {
+        let mut comm = SerialComm::new();
+        let before = *comm.meter();
+        // Disabled: no-op.
+        aggregate_snapshot(&mut comm, 1, 4, None).unwrap();
+        assert_eq!(*comm.meter(), before);
+        super::super::install(super::super::Registry::new(0, 1));
+        super::super::observe(Hist::GramNs, 123);
+        aggregate_snapshot(&mut comm, 1, 4, Some(1e-3)).unwrap();
+        assert_eq!(*comm.meter(), before, "aggregation must be meter-excluded");
+        let Some(reg) = super::super::take() else {
+            panic!("registry was installed");
+        };
+        assert_eq!(reg.snapshots().len(), 1);
+        let snap = &reg.snapshots()[0];
+        assert_eq!(snap.outer, 1);
+        assert_eq!(snap.ranks[0].compute_ns, 123);
+        assert_eq!(reg.telemetry_allocs(), 0);
+    }
+}

@@ -1,0 +1,302 @@
+//! Telemetry exporters: Prometheus text exposition (scrape-ready), the
+//! `--telemetry FILE` JSON snapshot dump, and the compact summary object
+//! merged into the driver report.
+//!
+//! Keys and metric names are stable — `python/check_telemetry.py` and
+//! `BENCH_hotpath.json` consume them.
+
+use super::aggregate::{ClusterSnapshot, Quantiles, RankHealth, Straggler};
+use super::histogram::{Histogram, BUCKETS};
+use super::{Counter, Gauge, Hist, Registry, REGISTRY_WORDS};
+use crate::util::json;
+
+/// Prometheus metric-name prefix.
+const PREFIX: &str = "cabcd";
+
+/// Render the Prometheus text exposition (format 0.0.4) for a set of
+/// per-rank registries: counters as `<prefix>_<name>_total`, gauges
+/// bare, histograms with cumulative `_bucket{le=…}` / `_sum` / `_count`
+/// series, all labeled `{rank="r"}`.
+pub fn prometheus_text(regs: &[Registry]) -> String {
+    let mut out = String::new();
+    for c in Counter::ALL {
+        let metric = format!("{PREFIX}_{}_total", c.name());
+        out.push_str(&format!("# HELP {metric} Total {} events.\n", c.name()));
+        out.push_str(&format!("# TYPE {metric} counter\n"));
+        for reg in regs {
+            out.push_str(&format!(
+                "{metric}{{rank=\"{}\"}} {}\n",
+                reg.rank(),
+                reg.counter(c)
+            ));
+        }
+    }
+    for g in Gauge::ALL {
+        let metric = format!("{PREFIX}_{}", g.name());
+        out.push_str(&format!("# HELP {metric} Last observed {}.\n", g.name()));
+        out.push_str(&format!("# TYPE {metric} gauge\n"));
+        for reg in regs {
+            out.push_str(&format!(
+                "{metric}{{rank=\"{}\"}} {}\n",
+                reg.rank(),
+                reg.gauge(g)
+            ));
+        }
+    }
+    for h in Hist::ALL {
+        let metric = format!("{PREFIX}_{}", h.name());
+        out.push_str(&format!(
+            "# HELP {metric} Distribution of {} observations.\n",
+            h.name()
+        ));
+        out.push_str(&format!("# TYPE {metric} histogram\n"));
+        for reg in regs {
+            let hist = reg.hist(h);
+            let rank = reg.rank();
+            let mut cum = 0u64;
+            for i in 0..BUCKETS {
+                cum += hist.bucket(i);
+                let le = if i == BUCKETS - 1 {
+                    "+Inf".to_string()
+                } else {
+                    Histogram::le(i).to_string()
+                };
+                out.push_str(&format!(
+                    "{metric}_bucket{{rank=\"{rank}\",le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            out.push_str(&format!("{metric}_sum{{rank=\"{rank}\"}} {}\n", hist.sum()));
+            out.push_str(&format!(
+                "{metric}_count{{rank=\"{rank}\"}} {}\n",
+                hist.count()
+            ));
+        }
+    }
+    out
+}
+
+fn quantiles_json(q: &Quantiles) -> String {
+    json::object(&[
+        ("p50", json::num(q.p50 as f64)),
+        ("p99", json::num(q.p99 as f64)),
+    ])
+}
+
+fn health_json(rh: &RankHealth) -> String {
+    let rank = if rh.rank == u32::MAX {
+        json::string("fleet")
+    } else {
+        json::num(rh.rank as f64)
+    };
+    json::object(&[
+        ("rank", rank),
+        ("wall_ns", json::num(rh.wall_ns as f64)),
+        ("compute_ns", json::num(rh.compute_ns as f64)),
+        ("wire_ns", json::num(rh.wire_ns as f64)),
+        ("idle_ns", json::num(rh.idle_ns as f64)),
+        ("wire_words", json::num(rh.wire_words as f64)),
+        ("gram", quantiles_json(&rh.gram)),
+        ("allreduce", quantiles_json(&rh.allreduce)),
+        ("all_to_all", quantiles_json(&rh.all_to_all)),
+        ("barrier", quantiles_json(&rh.barrier)),
+        ("wait", quantiles_json(&rh.wait)),
+    ])
+}
+
+fn straggler_json(s: &Straggler) -> String {
+    json::object(&[
+        ("rank", json::num(s.rank as f64)),
+        ("op", json::string(s.op)),
+        ("z", json::num(s.z)),
+        ("dev_ns", json::num(s.dev_ns as f64)),
+        ("at_collective", json::num(s.at_collective as f64)),
+    ])
+}
+
+fn snapshot_json(snap: &ClusterSnapshot) -> String {
+    json::object(&[
+        ("outer", json::num(snap.outer as f64)),
+        ("h", json::num(snap.h as f64)),
+        ("at_collective", json::num(snap.at_collective as f64)),
+        ("ranks", json::array(snap.ranks.iter().map(health_json))),
+        ("fleet", health_json(&snap.fleet)),
+        (
+            "stragglers",
+            json::array(snap.stragglers.iter().map(straggler_json)),
+        ),
+    ])
+}
+
+/// The `--telemetry FILE` JSON document: run geometry, the full snapshot
+/// sequence (taken from the first registry — every rank decodes the same
+/// snapshots), and the health tripwires.
+pub fn snapshots_json(regs: &[Registry]) -> String {
+    let ranks = regs.len();
+    let group = regs.first().map(|r| r.ranks() as usize).unwrap_or(ranks);
+    let snaps: &[ClusterSnapshot] = regs.first().map(|r| r.snapshots()).unwrap_or(&[]);
+    let straggler_flags: usize = snaps.iter().map(|s| s.stragglers.len()).sum();
+    json::object(&[
+        ("ranks", json::num(ranks as f64)),
+        ("registry_words", json::num(REGISTRY_WORDS as f64)),
+        (
+            "snapshot_words",
+            json::num((group * REGISTRY_WORDS) as f64),
+        ),
+        (
+            "z_threshold",
+            json::num(regs.first().map(|r| r.z_threshold()).unwrap_or(0.0)),
+        ),
+        (
+            "min_dev_ns",
+            json::num(regs.first().map(|r| r.min_dev_ns() as f64).unwrap_or(0.0)),
+        ),
+        ("snapshots", json::array(snaps.iter().map(snapshot_json))),
+        (
+            "dropped_snapshots",
+            json::num(regs.first().map(|r| r.dropped_snapshots() as f64).unwrap_or(0.0)),
+        ),
+        (
+            "telemetry_allocs",
+            json::num(regs.iter().map(|r| r.telemetry_allocs()).max().unwrap_or(0) as f64),
+        ),
+        ("straggler_flags", json::num(straggler_flags as f64)),
+    ])
+}
+
+/// The compact block merged into the driver report (`"telemetry"` key),
+/// built once from the reclaimed per-rank registries.
+#[derive(Clone, Debug)]
+pub struct TelemetrySummary {
+    /// Registries collected (ranks that ran).
+    pub ranks: usize,
+    /// Words one aggregation collective moves (`P · REGISTRY_WORDS`) —
+    /// the machine-independent wire cost gated in `BENCH_hotpath.json`.
+    pub snapshot_words: usize,
+    /// Snapshots taken over the run.
+    pub snapshots: usize,
+    /// Snapshots lost to the bounded store.
+    pub dropped_snapshots: u64,
+    /// Max steady-state allocation tripwire across ranks (gated at 0).
+    pub telemetry_allocs: u64,
+    /// Total straggler verdicts across all snapshots.
+    pub straggler_flags: usize,
+    /// The final snapshot, if any was taken.
+    pub last: Option<ClusterSnapshot>,
+}
+
+impl TelemetrySummary {
+    /// Summarize reclaimed per-rank registries (snapshots are read from
+    /// the first, which holds the same sequence as every other rank).
+    pub fn from_registries(regs: &[Registry]) -> TelemetrySummary {
+        let snaps: &[ClusterSnapshot] = regs.first().map(|r| r.snapshots()).unwrap_or(&[]);
+        TelemetrySummary {
+            ranks: regs.len(),
+            snapshot_words: regs.first().map(|r| r.ranks() as usize).unwrap_or(0) * REGISTRY_WORDS,
+            snapshots: snaps.len(),
+            dropped_snapshots: regs.first().map(|r| r.dropped_snapshots()).unwrap_or(0),
+            telemetry_allocs: regs.iter().map(|r| r.telemetry_allocs()).max().unwrap_or(0),
+            straggler_flags: snaps.iter().map(|s| s.stragglers.len()).sum(),
+            last: snaps.last().cloned(),
+        }
+    }
+}
+
+/// Render a [`TelemetrySummary`] as the driver report's `"telemetry"`
+/// JSON value.
+pub fn summary_json(sum: &TelemetrySummary) -> String {
+    json::object(&[
+        ("ranks", json::num(sum.ranks as f64)),
+        ("snapshot_words", json::num(sum.snapshot_words as f64)),
+        ("snapshots", json::num(sum.snapshots as f64)),
+        ("dropped_snapshots", json::num(sum.dropped_snapshots as f64)),
+        ("telemetry_allocs", json::num(sum.telemetry_allocs as f64)),
+        ("straggler_flags", json::num(sum.straggler_flags as f64)),
+        (
+            "last",
+            sum.last
+                .as_ref()
+                .map(snapshot_json)
+                .unwrap_or_else(|| "null".into()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_regs() -> Vec<Registry> {
+        (0..2)
+            .map(|rank| {
+                let mut reg = Registry::new(rank, 2);
+                reg.counters[Counter::Collectives as usize] = 4 + rank as u64;
+                reg.gauges[Gauge::PayloadWords as usize] = 2144;
+                for v in [3u64, 900, 70] {
+                    reg.hists[Hist::AllreduceNs as usize].observe(v);
+                }
+                reg
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let regs = sample_regs();
+        let out = prometheus_text(&regs);
+        assert!(out.contains("# TYPE cabcd_collectives_total counter"));
+        assert!(out.contains("cabcd_collectives_total{rank=\"0\"} 4"));
+        assert!(out.contains("cabcd_collectives_total{rank=\"1\"} 5"));
+        assert!(out.contains("# TYPE cabcd_payload_words gauge"));
+        assert!(out.contains("# TYPE cabcd_allreduce_ns histogram"));
+        assert!(out.contains("cabcd_allreduce_ns_bucket{rank=\"0\",le=\"+Inf\"} 3"));
+        assert!(out.contains("cabcd_allreduce_ns_sum{rank=\"0\"} 973"));
+        assert!(out.contains("cabcd_allreduce_ns_count{rank=\"0\"} 3"));
+        // Cumulative buckets: le=3 holds the one observation ≤ 3.
+        assert!(out.contains("cabcd_allreduce_ns_bucket{rank=\"0\",le=\"3\"} 1"));
+        assert!(out.ends_with('\n'));
+    }
+
+    #[test]
+    fn snapshots_json_stable_keys() {
+        let mut regs = sample_regs();
+        let mut blocks = vec![0.0; 2 * REGISTRY_WORDS];
+        regs[0].write_block(&mut blocks[..REGISTRY_WORDS], 1000);
+        regs[1].write_block(&mut blocks[REGISTRY_WORDS..], 1000);
+        let snap = ClusterSnapshot::from_blocks(&blocks, 2, 3, 12, 1.25, 0);
+        regs[0].push_snapshot(snap);
+        let out = snapshots_json(&regs);
+        for key in [
+            "\"ranks\":2",
+            "\"registry_words\":445",
+            "\"snapshot_words\":890",
+            "\"z_threshold\"",
+            "\"min_dev_ns\"",
+            "\"snapshots\":[{\"outer\":3",
+            "\"at_collective\"",
+            "\"fleet\"",
+            "\"stragglers\"",
+            "\"telemetry_allocs\":0",
+            "\"straggler_flags\"",
+        ] {
+            assert!(out.contains(key), "missing {key} in {out}");
+        }
+    }
+
+    #[test]
+    fn summary_json_stable_keys() {
+        let sum = TelemetrySummary::from_registries(&sample_regs());
+        assert_eq!(sum.ranks, 2);
+        assert_eq!(sum.snapshot_words, 890);
+        assert_eq!(sum.snapshots, 0);
+        let out = summary_json(&sum);
+        for key in [
+            "\"ranks\":2",
+            "\"snapshot_words\":890",
+            "\"snapshots\":0",
+            "\"telemetry_allocs\":0",
+            "\"last\":null",
+        ] {
+            assert!(out.contains(key), "missing {key} in {out}");
+        }
+    }
+}

@@ -1,0 +1,591 @@
+#![warn(missing_docs)]
+//! Cross-rank runtime telemetry: a zero-dependency metrics registry with
+//! counters, gauges, and log2-bucketed histograms, aggregated over the
+//! wire into cluster health snapshots.
+//!
+//! [`crate::trace`] records *individual* spans for post-hoc timeline
+//! analysis; this module keeps *running aggregates* cheap enough to
+//! export live — per-op-class latency distributions, payload-size
+//! distributions, retry/timeout/checkpoint counters — and rolls every
+//! rank's registry up into a [`ClusterSnapshot`] on the record cadence so
+//! a fleet scheduler (or the rank-0 progress line) can spot a straggler
+//! while the run is still going.
+//!
+//! # Metric taxonomy
+//!
+//! | kind      | members | semantics |
+//! |-----------|---------|-----------|
+//! | [`Counter`] | outers, inners, records, collectives, retries, timeouts, ckpt saves/restores | monotone totals |
+//! | [`Gauge`]   | last outer, last h, in-flight window ns, last payload words | last-write-wins |
+//! | [`Hist`]    | gram/inner-solve/apply/sample ns, per-collective-class ns + payload words, wait ns, checkpoint save/restore ns | [`Histogram`]: log2 buckets + exact count/sum/min/max |
+//!
+//! # Discipline (mirrors `trace/`)
+//!
+//! One [`Registry`] per rank thread, installed with [`install`] and
+//! reclaimed with [`take`]; every observe path is a no-op costing two
+//! thread-local reads when nothing is installed. All registry state is
+//! inline fixed-size arrays — the observe hot path performs **zero heap
+//! allocation**; only the bounded snapshot store can allocate, guarded by
+//! the [`Registry::telemetry_allocs`] tripwire the bench gates at 0.
+//! [`pause`] suspends recording (RAII, nests) so meter-excluded
+//! diagnostic traffic — and the aggregation collective itself — stays
+//! invisible, exactly like the tracer's pause under
+//! [`metered_out`](crate::solvers::common::metered_out).
+//!
+//! Telemetry owns its own monotonic clock (epoch = first read), separate
+//! from the tracer's, so either subsystem works alone.
+//!
+//! # Aggregation & export
+//!
+//! [`aggregate::aggregate_snapshot`] flattens the registry into
+//! [`REGISTRY_WORDS`] `f64` words, allreduces the per-rank blocks
+//! (meter-excluded, trace-paused, telemetry-paused), and decodes the
+//! same [`ClusterSnapshot`] on every rank: per-rank and fleet-wide
+//! p50/p99 per op class, compute/wire/idle shares, and z-score straggler
+//! flags. [`export`] renders Prometheus text exposition, the
+//! `--telemetry` JSON snapshot file, and the compact `"telemetry"`
+//! section of the driver report.
+
+pub mod aggregate;
+pub mod export;
+pub mod histogram;
+
+pub use aggregate::{aggregate_snapshot, ClusterSnapshot, Quantiles, RankHealth, Straggler};
+pub use export::{prometheus_text, snapshots_json, summary_json, TelemetrySummary};
+pub use histogram::Histogram;
+
+use std::cell::{Cell, RefCell};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Number of [`Counter`] slots.
+pub const NUM_COUNTERS: usize = 8;
+/// Number of [`Gauge`] slots.
+pub const NUM_GAUGES: usize = 4;
+/// Number of [`Hist`] slots.
+pub const NUM_HISTS: usize = 12;
+
+/// `f64` words one rank's registry occupies in the aggregation payload:
+/// wall-clock ns, the counters, the gauges, then the histograms.
+pub const REGISTRY_WORDS: usize = 1 + NUM_COUNTERS + NUM_GAUGES + NUM_HISTS * Histogram::WORDS;
+
+/// Snapshots retained per registry before [`Registry::dropped_snapshots`]
+/// starts counting (the newest snapshot always replaces the last slot).
+pub const SNAPSHOT_CAPACITY: usize = 256;
+
+/// Default straggler z-score threshold. The population z of a single
+/// outlier among P ranks is bounded by `sqrt(P−1)` (1.73 at P = 4), so a
+/// "3-sigma" default would never fire; 1.25 flags the lone outlier at
+/// P ≥ 3 while its peers sit below 0.6.
+pub const DEFAULT_Z_THRESHOLD: f64 = 1.25;
+
+/// Default absolute deviation floor (10 ms): a rank is only flagged when
+/// its deviation from the mean also exceeds this, so fault-free runs with
+/// microsecond-scale jitter never flag.
+pub const DEFAULT_MIN_DEV_NS: u64 = 10_000_000;
+
+/// Monotone event totals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Counter {
+    /// Completed outer iterations.
+    Outers,
+    /// Completed inner iterations (s per outer).
+    Inners,
+    /// Convergence records taken.
+    Records,
+    /// Metered collective entries (allreduce/all-to-all/broadcast/
+    /// barrier starts; completions are not separate entries).
+    Collectives,
+    /// Transient-fault retries ([`crate::comm::ChaosComm`]).
+    Retries,
+    /// Receive-deadline expiries ([`crate::comm::ThreadComm`]).
+    Timeouts,
+    /// Checkpoint captures stored.
+    CkptSaves,
+    /// Checkpoint restores applied.
+    CkptRestores,
+}
+
+impl Counter {
+    /// All counters, in registry/serialization order.
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::Outers,
+        Counter::Inners,
+        Counter::Records,
+        Counter::Collectives,
+        Counter::Retries,
+        Counter::Timeouts,
+        Counter::CkptSaves,
+        Counter::CkptRestores,
+    ];
+
+    /// Stable snake_case name (JSON keys, Prometheus metric names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Outers => "outers",
+            Counter::Inners => "inners",
+            Counter::Records => "records",
+            Counter::Collectives => "collectives",
+            Counter::Retries => "retries",
+            Counter::Timeouts => "timeouts",
+            Counter::CkptSaves => "ckpt_saves",
+            Counter::CkptRestores => "ckpt_restores",
+        }
+    }
+}
+
+/// Last-write-wins instantaneous values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gauge {
+    /// Most recently completed outer iteration (1-based).
+    LastOuter,
+    /// Inner-iteration count h at the last boundary.
+    LastH,
+    /// Width of the last overlapped in-flight window
+    /// (`i*_start` → `i*_wait`), ns.
+    InflightNs,
+    /// Payload words of the last allreduce entry.
+    PayloadWords,
+}
+
+impl Gauge {
+    /// All gauges, in registry/serialization order.
+    pub const ALL: [Gauge; NUM_GAUGES] = [
+        Gauge::LastOuter,
+        Gauge::LastH,
+        Gauge::InflightNs,
+        Gauge::PayloadWords,
+    ];
+
+    /// Stable snake_case name (JSON keys, Prometheus metric names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::LastOuter => "last_outer",
+            Gauge::LastH => "last_h",
+            Gauge::InflightNs => "inflight_ns",
+            Gauge::PayloadWords => "payload_words",
+        }
+    }
+}
+
+/// Histogram-tracked distributions (latencies in ns, payloads in words).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Hist {
+    /// Local Gram / payload assembly time per outer iteration.
+    GramNs,
+    /// Replicated inner-solve time.
+    InnerSolveNs,
+    /// Iterate-update (apply) time.
+    ApplyNs,
+    /// Shared-seed block-sampling time.
+    SampleNs,
+    /// Allreduce-family collective latency (blocking protocol body, or
+    /// the start call of a non-blocking pair).
+    AllreduceNs,
+    /// All-to-all-family collective latency.
+    AllToAllNs,
+    /// Barrier latency.
+    BarrierNs,
+    /// Non-blocking completion (`i*_wait`) latency.
+    WaitNs,
+    /// Allreduce payload sizes, words.
+    AllreduceWords,
+    /// All-to-all payload sizes, words.
+    AllToAllWords,
+    /// Checkpoint capture+store time.
+    CkptSaveNs,
+    /// Checkpoint restore time.
+    CkptRestoreNs,
+}
+
+impl Hist {
+    /// All histograms, in registry/serialization order.
+    pub const ALL: [Hist; NUM_HISTS] = [
+        Hist::GramNs,
+        Hist::InnerSolveNs,
+        Hist::ApplyNs,
+        Hist::SampleNs,
+        Hist::AllreduceNs,
+        Hist::AllToAllNs,
+        Hist::BarrierNs,
+        Hist::WaitNs,
+        Hist::AllreduceWords,
+        Hist::AllToAllWords,
+        Hist::CkptSaveNs,
+        Hist::CkptRestoreNs,
+    ];
+
+    /// Stable snake_case name (JSON keys, Prometheus metric names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::GramNs => "gram_ns",
+            Hist::InnerSolveNs => "inner_solve_ns",
+            Hist::ApplyNs => "apply_ns",
+            Hist::SampleNs => "sample_ns",
+            Hist::AllreduceNs => "allreduce_ns",
+            Hist::AllToAllNs => "all_to_all_ns",
+            Hist::BarrierNs => "barrier_ns",
+            Hist::WaitNs => "wait_ns",
+            Hist::AllreduceWords => "allreduce_words",
+            Hist::AllToAllWords => "all_to_all_words",
+            Hist::CkptSaveNs => "ckpt_save_ns",
+            Hist::CkptRestoreNs => "ckpt_restore_ns",
+        }
+    }
+}
+
+/// One rank's metrics registry. All observation state is inline
+/// fixed-size arrays (the observe path never allocates); the bounded
+/// snapshot store is the only growable member, guarded by the
+/// [`Registry::telemetry_allocs`] tripwire.
+#[derive(Debug)]
+pub struct Registry {
+    rank: u32,
+    ranks: u32,
+    counters: [u64; NUM_COUNTERS],
+    gauges: [u64; NUM_GAUGES],
+    hists: [Histogram; NUM_HISTS],
+    snapshots: Vec<ClusterSnapshot>,
+    dropped_snapshots: u64,
+    telemetry_allocs: u64,
+    z_threshold: f64,
+    min_dev_ns: u64,
+    live: bool,
+}
+
+impl Registry {
+    /// A fresh registry for `rank` of `ranks` with default straggler
+    /// thresholds and the live progress line off.
+    pub fn new(rank: usize, ranks: usize) -> Registry {
+        Registry {
+            rank: rank as u32,
+            ranks: ranks as u32,
+            counters: [0; NUM_COUNTERS],
+            gauges: [0; NUM_GAUGES],
+            hists: [Histogram::new(); NUM_HISTS],
+            snapshots: Vec::with_capacity(SNAPSHOT_CAPACITY),
+            dropped_snapshots: 0,
+            telemetry_allocs: 0,
+            z_threshold: DEFAULT_Z_THRESHOLD,
+            min_dev_ns: DEFAULT_MIN_DEV_NS,
+            live: false,
+        }
+    }
+
+    /// Override the straggler z-score threshold (builder-style).
+    pub fn with_z_threshold(mut self, z: f64) -> Registry {
+        self.z_threshold = z;
+        self
+    }
+
+    /// Override the absolute deviation floor in ns (builder-style).
+    pub fn with_min_dev_ns(mut self, ns: u64) -> Registry {
+        self.min_dev_ns = ns;
+        self
+    }
+
+    /// Enable the rank-0 live progress line at each aggregation
+    /// (builder-style; the driver sets this, tests leave it off).
+    pub fn with_live(mut self, live: bool) -> Registry {
+        self.live = live;
+        self
+    }
+
+    /// Rank this registry records for.
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// Group size at construction.
+    pub fn ranks(&self) -> u32 {
+        self.ranks
+    }
+
+    /// Current value of `c`.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// Current value of `g`.
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g as usize]
+    }
+
+    /// The distribution behind `h`.
+    pub fn hist(&self, h: Hist) -> &Histogram {
+        &self.hists[h as usize]
+    }
+
+    /// Straggler z-score threshold in effect.
+    pub fn z_threshold(&self) -> f64 {
+        self.z_threshold
+    }
+
+    /// Absolute straggler deviation floor in effect, ns.
+    pub fn min_dev_ns(&self) -> u64 {
+        self.min_dev_ns
+    }
+
+    /// Whether the rank-0 live progress line is enabled.
+    pub fn live(&self) -> bool {
+        self.live
+    }
+
+    /// Cluster snapshots accumulated on the record cadence (identical on
+    /// every rank — each rank decodes the same allreduced payload).
+    pub fn snapshots(&self) -> &[ClusterSnapshot] {
+        &self.snapshots
+    }
+
+    /// Snapshots lost to the bounded store (newest replaced the last
+    /// slot).
+    pub fn dropped_snapshots(&self) -> u64 {
+        self.dropped_snapshots
+    }
+
+    /// Steady-state allocation tripwire: counts capacity growth of the
+    /// snapshot store, 0 for any correctly sized run (the bench gates
+    /// `telemetry_allocs_steady_state` at exactly 0). The observe paths
+    /// are structurally alloc-free (inline arrays), so this is the only
+    /// thing the tripwire can catch.
+    pub fn telemetry_allocs(&self) -> u64 {
+        self.telemetry_allocs
+    }
+
+    fn push_snapshot(&mut self, snap: ClusterSnapshot) {
+        let cap_before = self.snapshots.capacity();
+        if self.snapshots.len() < SNAPSHOT_CAPACITY {
+            self.snapshots.push(snap);
+        } else if let Some(last) = self.snapshots.last_mut() {
+            *last = snap;
+            self.dropped_snapshots += 1;
+        }
+        if self.snapshots.capacity() != cap_before {
+            self.telemetry_allocs += 1;
+        }
+    }
+
+    /// Serialize this registry into its aggregation block (length
+    /// [`REGISTRY_WORDS`]): `[wall_ns | counters | gauges | histograms]`.
+    pub fn write_block(&self, out: &mut [f64], wall_ns: u64) {
+        debug_assert!(out.len() >= REGISTRY_WORDS);
+        out[0] = wall_ns as f64;
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            out[1 + i] = self.counters[*c as usize] as f64;
+        }
+        let g0 = 1 + NUM_COUNTERS;
+        for (i, g) in Gauge::ALL.iter().enumerate() {
+            out[g0 + i] = self.gauges[*g as usize] as f64;
+        }
+        let h0 = g0 + NUM_GAUGES;
+        for (i, h) in Hist::ALL.iter().enumerate() {
+            self.hists[*h as usize]
+                .write_words(&mut out[h0 + i * Histogram::WORDS..h0 + (i + 1) * Histogram::WORDS]);
+        }
+    }
+}
+
+thread_local! {
+    static REGISTRY: RefCell<Option<Registry>> = const { RefCell::new(None) };
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static PAUSE_DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn clock_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Install a registry on the current thread (one per rank thread; the
+/// driver installs inside the `run_spmd` closure). Replaces and returns
+/// any previously installed registry.
+pub fn install(registry: Registry) -> Option<Registry> {
+    ACTIVE.with(|a| a.set(true));
+    REGISTRY.with(|r| r.borrow_mut().replace(registry))
+}
+
+/// Remove and return the current thread's registry.
+pub fn take() -> Option<Registry> {
+    ACTIVE.with(|a| a.set(false));
+    REGISTRY.with(|r| r.borrow_mut().take())
+}
+
+/// True when metrics are being recorded on this thread (installed and
+/// not inside a [`pause`] scope). All observe paths are no-ops
+/// otherwise, so instrumented code pays two thread-local reads when
+/// telemetry is off.
+pub fn enabled() -> bool {
+    ACTIVE.with(|a| a.get()) && PAUSE_DEPTH.with(|p| p.get()) == 0
+}
+
+/// Timestamp for an upcoming [`observe_since`] call; 0 (and no clock
+/// read) when telemetry is disabled.
+pub fn now() -> u64 {
+    if enabled() {
+        clock_ns()
+    } else {
+        0
+    }
+}
+
+/// Add `n` to counter `c`.
+pub fn count(c: Counter, n: u64) {
+    if !enabled() {
+        return;
+    }
+    REGISTRY.with(|r| {
+        if let Some(reg) = r.borrow_mut().as_mut() {
+            reg.counters[c as usize] += n;
+        }
+    });
+}
+
+/// Set gauge `g` to `v`.
+pub fn gauge(g: Gauge, v: u64) {
+    if !enabled() {
+        return;
+    }
+    REGISTRY.with(|r| {
+        if let Some(reg) = r.borrow_mut().as_mut() {
+            reg.gauges[g as usize] = v;
+        }
+    });
+}
+
+/// Record `v` into histogram `h`.
+pub fn observe(h: Hist, v: u64) {
+    if !enabled() {
+        return;
+    }
+    REGISTRY.with(|r| {
+        if let Some(reg) = r.borrow_mut().as_mut() {
+            reg.hists[h as usize].observe(v);
+        }
+    });
+}
+
+/// Record the elapsed ns since `t0` (from [`now`]) into histogram `h`.
+pub fn observe_since(h: Hist, t0: u64) {
+    if !enabled() {
+        return;
+    }
+    let v = clock_ns().saturating_sub(t0);
+    observe(h, v);
+}
+
+/// Run `f` against the installed registry, if any (aggregation and
+/// export paths).
+pub(crate) fn with_registry<T>(f: impl FnOnce(&mut Registry) -> T) -> Option<T> {
+    REGISTRY.with(|r| r.borrow_mut().as_mut().map(f))
+}
+
+/// Suspends metric recording on this thread until the guard drops. Used
+/// by [`metered_out`](crate::solvers::common::metered_out) (diagnostic
+/// traffic excluded from the meters is also excluded from telemetry) and
+/// by the aggregation collective itself. Nests, and composes with
+/// [`crate::trace::pause`].
+pub fn pause() -> PauseGuard {
+    PAUSE_DEPTH.with(|p| p.set(p.get() + 1));
+    PauseGuard
+}
+
+/// True while the current thread is inside a [`pause`] scope.
+pub fn paused() -> bool {
+    PAUSE_DEPTH.with(|p| p.get() > 0)
+}
+
+/// RAII guard returned by [`pause`]; recording resumes when it drops.
+pub struct PauseGuard;
+
+impl Drop for PauseGuard {
+    fn drop(&mut self) {
+        PAUSE_DEPTH.with(|p| p.set(p.get().saturating_sub(1)));
+    }
+}
+
+/// Epoch-relative wall clock, read even while paused (aggregation
+/// stamps its block after pausing itself).
+pub(crate) fn wall_ns() -> u64 {
+    clock_ns()
+}
+
+/// Append a freshly decoded snapshot to the installed registry
+/// (aggregation path).
+pub(crate) fn store_snapshot(snap: ClusterSnapshot) {
+    REGISTRY.with(|r| {
+        if let Some(reg) = r.borrow_mut().as_mut() {
+            reg.push_snapshot(snap);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_words_layout_is_fixed() {
+        // 1 wall word + 8 counters + 4 gauges + 12 × (4 + 32) histogram
+        // words. The aggregation payload (`P · REGISTRY_WORDS`) and the
+        // BENCH gate both depend on this exact value.
+        assert_eq!(REGISTRY_WORDS, 1 + 8 + 4 + 12 * 36);
+        assert_eq!(REGISTRY_WORDS, 445);
+    }
+
+    #[test]
+    fn install_observe_take_roundtrip() {
+        assert!(!enabled());
+        // Disabled: everything is a no-op, now() skips the clock.
+        count(Counter::Outers, 1);
+        observe(Hist::GramNs, 5);
+        assert_eq!(now(), 0);
+        install(Registry::new(2, 4));
+        assert!(enabled());
+        count(Counter::Outers, 3);
+        gauge(Gauge::LastH, 12);
+        observe(Hist::GramNs, 9);
+        observe_since(Hist::ApplyNs, now());
+        {
+            let _g = pause();
+            assert!(!enabled());
+            assert!(paused());
+            count(Counter::Outers, 100);
+            {
+                let _g2 = pause();
+                assert!(!enabled());
+            }
+            assert!(!enabled(), "pause must nest");
+        }
+        assert!(enabled());
+        let Some(reg) = take() else {
+            panic!("registry was installed");
+        };
+        assert!(!enabled());
+        assert_eq!(reg.rank(), 2);
+        assert_eq!(reg.ranks(), 4);
+        assert_eq!(reg.counter(Counter::Outers), 3, "paused adds must drop");
+        assert_eq!(reg.gauge(Gauge::LastH), 12);
+        assert_eq!(reg.hist(Hist::GramNs).count(), 1);
+        assert_eq!(reg.hist(Hist::GramNs).max(), 9);
+        assert_eq!(reg.hist(Hist::ApplyNs).count(), 1);
+        assert_eq!(reg.telemetry_allocs(), 0);
+    }
+
+    #[test]
+    fn block_serialization_layout() {
+        let mut reg = Registry::new(1, 2);
+        reg.counters[Counter::Collectives as usize] = 7;
+        reg.gauges[Gauge::PayloadWords as usize] = 2144;
+        reg.hists[Hist::AllreduceNs as usize].observe(100);
+        let mut block = vec![0.0; REGISTRY_WORDS];
+        reg.write_block(&mut block, 42);
+        assert_eq!(block[0], 42.0);
+        assert_eq!(block[1 + 3], 7.0, "collectives is counter slot 3");
+        assert_eq!(block[1 + NUM_COUNTERS + 3], 2144.0, "payload_words is gauge slot 3");
+        let h0 = 1 + NUM_COUNTERS + NUM_GAUGES + 4 * Histogram::WORDS;
+        let h = Histogram::from_words(&block[h0..h0 + Histogram::WORDS]);
+        assert_eq!(h.count(), 1, "allreduce_ns is hist slot 4");
+        assert_eq!(h.max(), 100);
+    }
+}

@@ -1,0 +1,511 @@
+//! Observability suite for the cross-rank telemetry registry (PR 9).
+//!
+//! Four gates:
+//!
+//! 1. **Observer neutrality** — running any method with a registry
+//!    installed must leave the iterates, the history records, and every
+//!    wire-relevant CostMeter field bitwise identical to the plain run.
+//!    The registry reads the clock, bumps inline counters, and — on the
+//!    record cadence — runs one meter-excluded aggregation allreduce; it
+//!    must never touch the numerics or the metered wire counts. The one
+//!    audited exception is `buf_allocs`: the aggregation payload warms
+//!    the buffer pool with its own unique size, so pool growth is
+//!    excluded from the comparison (same policy as the checkpoint suite).
+//! 2. **Registry discipline** — snapshots are aggregated on the record
+//!    cadence, every rank decodes the identical snapshot sequence (the
+//!    allreduce is the broadcast), and recording never allocates after
+//!    registry construction (`telemetry_allocs == 0`, `dropped == 0`).
+//! 3. **Histogram bucket math under load** — on a real run, every
+//!    histogram's bucket mass equals its exact count, the sidecars bound
+//!    the distribution, and the serialized words survive the f64
+//!    aggregation payload bit-exactly.
+//! 4. **Straggler acceptance** — a seeded ChaosComm stall at P = 4 flags
+//!    exactly the victim rank with the `wait` verdict (the late arriver
+//!    waits the least); the fault-free run flags nobody.
+
+use cabcd::comm::thread::run_spmd;
+use cabcd::comm::{ChaosComm, ChaosSpec, CostMeter, SerialComm, ThreadComm};
+use cabcd::coordinator::{partition_dual, partition_primal, partition_rows};
+use cabcd::gram::NativeBackend;
+use cabcd::matrix::io::Dataset;
+use cabcd::matrix::{DenseMatrix, Matrix};
+use cabcd::metrics::{History, Reference};
+use cabcd::prox::Reg;
+use cabcd::solvers::cocoa::CocoaOpts;
+use cabcd::solvers::{cg, SolverOpts};
+use cabcd::telemetry::{self, ClusterSnapshot, Histogram, Hist, Registry};
+
+const LAM: f64 = 0.2;
+const ITERS: usize = 16;
+const SEED: u64 = 7;
+const B: usize = 2;
+const P: usize = 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum M {
+    Bcd,
+    Bdcd,
+    BcdRow,
+    Cocoa,
+    ProxBcd,
+    ProxBdcd,
+}
+
+impl M {
+    const ALL: [M; 6] = [M::Bcd, M::Bdcd, M::BcdRow, M::Cocoa, M::ProxBcd, M::ProxBdcd];
+
+    fn id(self) -> &'static str {
+        match self {
+            M::Bcd => "bcd",
+            M::Bdcd => "bdcd",
+            M::BcdRow => "bcdrow",
+            M::Cocoa => "cocoa",
+            M::ProxBcd => "prox_bcd",
+            M::ProxBdcd => "prox_bdcd",
+        }
+    }
+}
+
+fn toy_dataset() -> Dataset {
+    let (d, n) = (12usize, 48usize);
+    let mut st = 0x7E1E7E1Eu64;
+    let data: Vec<f64> = (0..d * n)
+        .map(|_| {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            (st as f64 / u64::MAX as f64) - 0.5
+        })
+        .collect();
+    let x = Matrix::Dense(DenseMatrix::from_vec(d, n, data));
+    let mut y = vec![0.0; n];
+    let mut w_star = vec![0.0; d];
+    w_star[0] = 1.5;
+    w_star[d / 2] = -2.0;
+    w_star[d - 1] = 0.75;
+    x.matvec_t(&w_star, &mut y).unwrap();
+    Dataset {
+        name: "telemetry-suite".into(),
+        x,
+        y,
+    }
+}
+
+fn reference(ds: &Dataset) -> Reference {
+    let mut comm = SerialComm::new();
+    cg::compute_reference(&ds.x, &ds.y, ds.n(), LAM, &mut comm).unwrap()
+}
+
+fn solver_opts(m: M, s: usize, overlap: bool) -> SolverOpts {
+    let reg = match m {
+        M::ProxBcd | M::ProxBdcd => Reg::L1,
+        _ => Reg::L2,
+    };
+    SolverOpts::builder()
+        .b(B)
+        .s(s)
+        .lam(LAM)
+        .iters(ITERS)
+        .seed(SEED)
+        .record_every(4)
+        .overlap(overlap)
+        .reg(reg)
+        .build()
+}
+
+/// One rank's output: concatenated iterate vectors, the history, and the
+/// registry (when `telemetered`).
+struct RankOut {
+    vecs: Vec<f64>,
+    history: History,
+    registry: Option<Registry>,
+}
+
+/// Run one engine config at P ranks, optionally with a per-rank
+/// telemetry registry installed for the whole solve.
+fn run_config(m: M, s: usize, overlap: bool, p: usize, telemetered: bool) -> Vec<RankOut> {
+    let ds = toy_dataset();
+    let rf = reference(&ds);
+    let n = ds.n();
+    let install = move |rank: usize| {
+        if telemetered {
+            telemetry::install(Registry::new(rank, p));
+        }
+    };
+    let finish = |vecs: Vec<f64>, history: History| RankOut {
+        vecs,
+        history,
+        registry: telemetry::take(),
+    };
+    match m {
+        M::Bcd | M::ProxBcd => {
+            let shards = partition_primal(&ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            let rref = if m == M::Bcd { Some(&rf) } else { None };
+            run_spmd(p, move |rank, comm| {
+                install(rank);
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out =
+                    cabcd::solvers::bcd::run(&sh.a_loc, &sh.y_loc, n, &opts, rref, comm, &mut be)
+                        .unwrap();
+                let mut vecs = out.w;
+                vecs.extend_from_slice(&out.alpha_loc);
+                finish(vecs, out.history)
+            })
+        }
+        M::Bdcd | M::ProxBdcd => {
+            let shards = partition_dual(&ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            let rref = if m == M::Bdcd { Some(&rf) } else { None };
+            run_spmd(p, move |rank, comm| {
+                install(rank);
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out = cabcd::solvers::bdcd::run(
+                    &sh.a_loc,
+                    &sh.y,
+                    sh.d_global,
+                    sh.d_offset,
+                    &opts,
+                    rref,
+                    comm,
+                    &mut be,
+                )
+                .unwrap();
+                let mut vecs = out.w_full;
+                vecs.extend_from_slice(&out.w_loc);
+                vecs.extend_from_slice(&out.alpha);
+                finish(vecs, out.history)
+            })
+        }
+        M::BcdRow => {
+            let shards = partition_rows(&ds, p).unwrap();
+            let opts = solver_opts(m, s, overlap);
+            run_spmd(p, move |rank, comm| {
+                install(rank);
+                let sh = &shards[rank];
+                let mut be = NativeBackend::new();
+                let out = cabcd::solvers::bcd_row::run(
+                    &sh.x_rows,
+                    &sh.y_loc,
+                    sh.d_global,
+                    sh.d_offset,
+                    &opts,
+                    Some(&rf),
+                    comm,
+                    &mut be,
+                )
+                .unwrap();
+                let mut vecs = out.w_full;
+                vecs.extend_from_slice(&out.w_loc);
+                finish(vecs, out.history)
+            })
+        }
+        M::Cocoa => {
+            let shards = partition_primal(&ds, p).unwrap();
+            let copts = CocoaOpts {
+                lam: LAM,
+                rounds: ITERS,
+                local_iters: s,
+                seed: SEED,
+                record_every: 4,
+                overlap,
+            };
+            run_spmd(p, move |rank, comm| {
+                install(rank);
+                let sh = &shards[rank];
+                let out =
+                    cabcd::solvers::cocoa::run(&sh.a_loc, &sh.y_loc, n, &copts, Some(&rf), comm)
+                        .unwrap();
+                let mut vecs = out.w;
+                vecs.extend_from_slice(&out.alpha_loc);
+                finish(vecs, out.history)
+            })
+        }
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The s axis per method (local_iters for cocoa), matching the
+/// engine_equivalence fixture.
+fn s_of(m: M) -> usize {
+    match m {
+        M::Cocoa => 2,
+        _ => 4,
+    }
+}
+
+/// Wire meters must be bitwise-equal except `buf_allocs` (the aggregation
+/// allreduce legitimately warms the pool with its own payload size).
+fn assert_wire_meters_eq(a: &CostMeter, b: &CostMeter, ctx: &str) {
+    let (mut a, mut b) = (*a, *b);
+    a.buf_allocs = 0;
+    b.buf_allocs = 0;
+    assert_eq!(a, b, "{ctx}: wire meters diverged under telemetry");
+}
+
+// ---------------------- 1. observer neutrality -------------------------
+
+#[test]
+fn telemetry_is_observer_neutral_bitwise() {
+    for m in M::ALL {
+        for overlap in [false, true] {
+            let ctx = format!("{} overlap={}", m.id(), overlap);
+            let plain = run_config(m, s_of(m), overlap, P, false);
+            let telemetered = run_config(m, s_of(m), overlap, P, true);
+            assert_eq!(plain.len(), telemetered.len());
+            for (rank, (a, b)) in plain.iter().zip(&telemetered).enumerate() {
+                assert!(
+                    a.registry.is_none(),
+                    "{ctx}: plain rank {rank} has a registry"
+                );
+                assert!(
+                    b.registry.is_some(),
+                    "{ctx}: telemetered rank {rank} lost its registry"
+                );
+                assert_eq!(
+                    bits(&a.vecs),
+                    bits(&b.vecs),
+                    "{ctx}: rank {rank} iterates changed under telemetry"
+                );
+                assert_wire_meters_eq(
+                    &a.history.meter,
+                    &b.history.meter,
+                    &format!("{ctx} rank {rank}"),
+                );
+                assert_eq!(a.history.iters, b.history.iters, "{ctx}: iters");
+                assert_eq!(
+                    a.history.records.len(),
+                    b.history.records.len(),
+                    "{ctx}: record count"
+                );
+                for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+                    assert_eq!(ra.obj_err.to_bits(), rb.obj_err.to_bits(), "{ctx}: obj_err");
+                    assert_eq!(ra.sol_err.to_bits(), rb.sol_err.to_bits(), "{ctx}: sol_err");
+                }
+                for (ra, rb) in a.history.prox.iter().zip(&b.history.prox) {
+                    assert_eq!(ra.pen_obj.to_bits(), rb.pen_obj.to_bits(), "{ctx}: pen_obj");
+                    assert_eq!(ra.gap.to_bits(), rb.gap.to_bits(), "{ctx}: gap");
+                }
+            }
+        }
+    }
+}
+
+// -------------- 2. registry discipline across the matrix ---------------
+
+#[test]
+fn registries_agree_and_never_allocate() {
+    for m in M::ALL {
+        for overlap in [false, true] {
+            let ctx = format!("{} overlap={}", m.id(), overlap);
+            let outs = run_config(m, s_of(m), overlap, P, true);
+            let first = outs[0].registry.as_ref().unwrap();
+            assert!(
+                !first.snapshots().is_empty(),
+                "{ctx}: record cadence produced no snapshots"
+            );
+            for (rank, out) in outs.iter().enumerate() {
+                let reg = out.registry.as_ref().unwrap();
+                assert_eq!(reg.rank() as usize, rank, "{ctx}: rank mislabelled");
+                assert_eq!(reg.ranks() as usize, P, "{ctx}: group size mislabelled");
+                assert_eq!(
+                    reg.telemetry_allocs(),
+                    0,
+                    "{ctx} rank {rank}: registry allocated on the hot path"
+                );
+                assert_eq!(
+                    reg.dropped_snapshots(),
+                    0,
+                    "{ctx} rank {rank}: snapshot ring overflowed"
+                );
+                // The aggregation allreduce doubles as the broadcast:
+                // every rank decodes the identical snapshot sequence.
+                assert_eq!(
+                    reg.snapshots(),
+                    first.snapshots(),
+                    "{ctx} rank {rank}: snapshot sequence diverged"
+                );
+                // The per-rank health blocks carry real observations.
+                let last = reg.snapshots().last().unwrap();
+                assert_eq!(last.ranks.len(), P, "{ctx}: health list size");
+                assert!(
+                    last.ranks[rank].wire_ns > 0,
+                    "{ctx} rank {rank}: no wire time observed"
+                );
+                assert!(
+                    last.fleet.wire_words > 0,
+                    "{ctx}: fleet moved no payload words"
+                );
+            }
+        }
+    }
+}
+
+// -------------- 3. histogram bucket math on a real run -----------------
+
+#[test]
+fn histogram_bucket_mass_matches_exact_sidecars_under_load() {
+    let outs = run_config(M::Bcd, 4, true, P, true);
+    let mut nonempty = 0usize;
+    for out in &outs {
+        let reg = out.registry.as_ref().unwrap();
+        for h in Hist::ALL {
+            let hist = reg.hist(h);
+            let mass: u64 = (0..cabcd::telemetry::histogram::BUCKETS)
+                .map(|i| hist.bucket(i))
+                .sum();
+            assert_eq!(
+                mass,
+                hist.count(),
+                "{}: bucket mass != count",
+                h.name()
+            );
+            if hist.count() == 0 {
+                continue;
+            }
+            nonempty += 1;
+            assert!(hist.min() <= hist.max(), "{}: min > max", h.name());
+            assert!(
+                hist.mean() >= hist.min() as f64 && hist.mean() <= hist.max() as f64,
+                "{}: mean outside [min, max]",
+                h.name()
+            );
+            assert_eq!(hist.quantile(1.0), hist.max(), "{}: p100 != max", h.name());
+            assert!(
+                hist.quantile(0.5) <= hist.quantile(0.99),
+                "{}: quantiles disordered",
+                h.name()
+            );
+            // The f64 aggregation payload must carry the histogram
+            // losslessly (counts are far below the 2^53 mantissa).
+            let mut words = vec![0.0; Histogram::WORDS];
+            hist.write_words(&mut words);
+            assert_eq!(
+                Histogram::from_words(&words),
+                *hist,
+                "{}: words roundtrip diverged",
+                h.name()
+            );
+        }
+    }
+    assert!(nonempty > 0, "no histogram recorded anything");
+}
+
+// ------------------- 4. straggler acceptance (P = 4) -------------------
+
+/// One-rank placeholder endpoint for the chaos stub swap (`run_spmd`
+/// hands out `&mut ThreadComm`, the chaos wrapper wants ownership).
+fn stub() -> ThreadComm {
+    let mut g = ThreadComm::group(1);
+    let Some(c) = g.pop() else {
+        unreachable!("group(1) returns one endpoint")
+    };
+    c
+}
+
+/// A telemetered CA-BCD run at P = 4 with an optional fault plan;
+/// `record_every = 0` so the only snapshot is the forced final one —
+/// cumulative over the whole run, where the stall dominates.
+fn run_bcd_telemetered(spec: Option<ChaosSpec>) -> Vec<Registry> {
+    let ds = toy_dataset();
+    let n = ds.n();
+    let shards = partition_primal(&ds, P).unwrap();
+    let opts = SolverOpts::builder()
+        .b(B)
+        .s(4)
+        .lam(LAM)
+        .iters(24)
+        .seed(SEED)
+        .record_every(0)
+        .reg(Reg::L1)
+        .build();
+    run_spmd(P, move |rank, comm| {
+        telemetry::install(Registry::new(rank, P));
+        let sh = &shards[rank];
+        let mut be = NativeBackend::new();
+        match spec {
+            Some(spec) => {
+                let inner = std::mem::replace(comm, stub());
+                let mut chaos = ChaosComm::new(inner, spec);
+                cabcd::solvers::bcd::run(&sh.a_loc, &sh.y_loc, n, &opts, None, &mut chaos, &mut be)
+                    .unwrap();
+                *comm = chaos.into_inner();
+            }
+            None => {
+                cabcd::solvers::bcd::run(&sh.a_loc, &sh.y_loc, n, &opts, None, comm, &mut be)
+                    .unwrap();
+            }
+        }
+        telemetry::take().unwrap()
+    })
+}
+
+#[test]
+fn stalled_rank_is_flagged_as_the_straggler() {
+    // Rank 2 sleeps 80 ms before its 6th collective; its peers spend that
+    // window blocked inside the allreduce (metered as wire time), while
+    // the victim — arriving last — barely waits at all. The low-tail
+    // `wait` detector therefore indicts exactly the victim: z ≈ −√3 at
+    // P = 4, and the 60 ms deviation clears the 10 ms noise floor.
+    let spec = ChaosSpec {
+        stall_at: Some(5),
+        stall_ms: 80,
+        victim: 2,
+        ..ChaosSpec::default()
+    };
+    let regs = run_bcd_telemetered(Some(spec));
+    let snaps: Vec<&[ClusterSnapshot]> = regs.iter().map(|r| r.snapshots()).collect();
+    for (rank, s) in snaps.iter().enumerate() {
+        assert_eq!(*s, snaps[0], "rank {rank}: snapshot sequence diverged");
+    }
+    let last = snaps[0].last().expect("no final snapshot");
+    assert_eq!(
+        last.stragglers.len(),
+        1,
+        "want exactly the victim flagged, got {:?}",
+        last.stragglers
+    );
+    let flag = &last.stragglers[0];
+    assert_eq!(flag.rank, 2, "flagged the wrong rank: {flag:?}");
+    assert_eq!(flag.op, "wait", "flagged the wrong op: {flag:?}");
+    assert!(flag.z <= -1.25, "z {} above the low-tail threshold", flag.z);
+    assert!(flag.dev_ns < 0, "victim must be below the wire mean: {flag:?}");
+    assert!(
+        flag.dev_ns.unsigned_abs() >= 10_000_000,
+        "deviation {} ns under the noise floor",
+        flag.dev_ns
+    );
+    // The peers' blocked windows show up as wire time: every non-victim
+    // rank's cumulative wire exceeds the victim's.
+    let victim_wire = last.ranks[2].wire_ns;
+    for rh in &last.ranks {
+        if rh.rank != 2 {
+            assert!(
+                rh.wire_ns > victim_wire,
+                "rank {} wire {} not above victim's {}",
+                rh.rank,
+                rh.wire_ns,
+                victim_wire
+            );
+        }
+    }
+}
+
+#[test]
+fn fault_free_run_flags_no_stragglers() {
+    let regs = run_bcd_telemetered(None);
+    for (rank, reg) in regs.iter().enumerate() {
+        for snap in reg.snapshots() {
+            assert!(
+                snap.stragglers.is_empty(),
+                "rank {rank}: fault-free run flagged {:?}",
+                snap.stragglers
+            );
+        }
+    }
+}
