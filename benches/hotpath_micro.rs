@@ -25,7 +25,8 @@
 use std::path::Path;
 
 use cabcd::comm::thread::{expected_allreduce_sends, run_spmd};
-use cabcd::comm::Communicator;
+use cabcd::comm::{expected_two_level_allreduce_sends, Communicator, Topology};
+use cabcd::costmodel::theory::two_level_allreduce_cost;
 use cabcd::gram::{ComputeBackend, NativeBackend};
 use cabcd::linalg::packed::packed_len;
 use cabcd::matrix::{CsrMatrix, DenseMatrix, Matrix};
@@ -69,6 +70,9 @@ fn check_against_seed(seed_text: &str, current: &[(&str, f64)]) {
     const WIRE_FIELDS: &[&str] = &[
         "allreduce_payload_words_packed",
         "allreduce_words_per_rank_p8_packed",
+        "hier_allreduce_msgs_leader_p8_ns4",
+        "hier_allreduce_words_leader_p8_ns4",
+        "hier_allreduce_msgs_member_p8_ns4",
         "prox_overlap_allreduces_per_outer",
         "trace_allocs_steady_state",
         "trace_spans_per_outer",
@@ -230,6 +234,59 @@ fn main() {
         report.push(("packed_vs_full_payload_ratio", json::num(ratio)));
         wire_metrics.push(("allreduce_payload_words_packed", packed as f64));
         wire_metrics.push(("allreduce_words_per_rank_p8_packed", w_packed as f64));
+    }
+
+    // --- hierarchical two-level allreduce wire accounting ---------------
+    // Same packed [G|r] payload, P=8 split into two 4-rank nodes: members
+    // hand their payload to the node leader, the two leaders run the flat
+    // exchange, the result fans back out. Three independent accounts of
+    // the per-rank send volume must agree exactly — the communicator's
+    // integer closed form, the cost model's continuous closed form, and
+    // the live wire meter of an actual two-level allreduce.
+    {
+        let sb = 64usize;
+        let len = packed_len(sb) + sb;
+        let (p, ns) = (8usize, 4usize);
+        let (lm, lw) = expected_two_level_allreduce_sends(p, ns, 0, len);
+        let (mm, mw) = expected_two_level_allreduce_sends(p, ns, 1, len);
+        let ((clm, clw), (cmm, cmw)) =
+            two_level_allreduce_cost(p as f64, ns as f64, len as f64);
+        assert_eq!(
+            (clm, clw),
+            (lm as f64, lw as f64),
+            "leader: cost model disagrees with the communicator closed form"
+        );
+        assert_eq!(
+            (cmm, cmw),
+            (mm as f64, mw as f64),
+            "member: cost model disagrees with the communicator closed form"
+        );
+        let metered = run_spmd(p, |rank, comm| {
+            comm.set_topology(Topology::TwoLevel { node_size: ns });
+            let mut buf: Vec<f64> = (0..len).map(|i| (rank * len + i) as f64).collect();
+            comm.allreduce_sum(&mut buf).expect("two-level allreduce");
+            (comm.meter().msgs, comm.meter().words)
+        });
+        for (rank, &(msgs, words)) in metered.iter().enumerate() {
+            let expect = expected_two_level_allreduce_sends(p, ns, rank, len);
+            assert_eq!(
+                (msgs, words),
+                expect,
+                "rank {rank}: measured two-level sends diverge from the closed form"
+            );
+        }
+        let (fm, fw) = expected_allreduce_sends(p, 0, len);
+        println!(
+            "two-level allreduce at P={p}, node_size={ns}, {len} words: leader {lm} msgs / \
+             {lw} words, member {mm} msgs / {mw} words (flat rank 0: {fm} msgs / {fw} words)"
+        );
+        report.push(("hier_allreduce_msgs_leader_p8_ns4", json::num(lm as f64)));
+        report.push(("hier_allreduce_words_leader_p8_ns4", json::num(lw as f64)));
+        report.push(("hier_allreduce_msgs_member_p8_ns4", json::num(mm as f64)));
+        report.push(("hier_allreduce_words_member_p8_ns4", json::num(mw as f64)));
+        wire_metrics.push(("hier_allreduce_msgs_leader_p8_ns4", lm as f64));
+        wire_metrics.push(("hier_allreduce_words_leader_p8_ns4", lw as f64));
+        wire_metrics.push(("hier_allreduce_msgs_member_p8_ns4", mm as f64));
     }
 
     // --- prox inner solve (same packed [G|r] inputs, soft-threshold path)

@@ -8,6 +8,7 @@
 //! cargo run --release --example lasso            # plain
 //! cargo run --release --example lasso -- --trace lasso.trace.json
 //! cargo run --release --example lasso -- --telemetry lasso.telemetry.json
+//! cargo run --release --example lasso -- --transport process --ranks 4
 //! ```
 //!
 //! Runs SPMD over 4 simulated ranks, then sweeps the elastic-net mixing
@@ -16,6 +17,16 @@
 //! the `--trace` Chrome trace-event output with `python/check_trace.py`
 //! and the `--telemetry` snapshot/exposition pair with
 //! `python/check_telemetry.py`.
+//!
+//! `--transport process` switches to the multi-process path: the driver
+//! re-execs this binary once per rank (loopback TCP, see
+//! `cabcd::comm::process`), runs the same CA-Prox-BCD solve, and asserts
+//! it lands bitwise-identical to an in-process thread-transport twin —
+//! trajectory, duality certificates, and wire meters. `--topology
+//! twolevel` routes the collectives through the hierarchical two-level
+//! allreduce. The `--trace`/`--telemetry` artifacts then come from the
+//! process run, so the same CI schema checkers validate exports gathered
+//! across a real process boundary.
 
 use cabcd::comm::thread::run_spmd;
 use cabcd::coordinator::partition_primal;
@@ -29,30 +40,58 @@ use cabcd::trace::{self, TraceSummary, Tracer};
 use cabcd::util::Rng64;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Worker-rank dispatch: under `--transport process` the driver
+    // re-execs this binary once per rank with the rendezvous address in
+    // the environment; those children run their rank here and exit
+    // before any demo output.
+    match cabcd::coordinator::maybe_run_process_child() {
+        Ok(false) => {}
+        Ok(true) => return Ok(()),
+        Err(e) => return Err(Box::new(e)),
+    }
+
     // Optional, in any order: `--trace PATH` writes a per-rank Chrome
     // trace-event JSON of the main SPMD solve (loadable in Perfetto);
     // `--telemetry PATH` writes the cluster health snapshots as JSON plus
     // a Prometheus exposition at PATH with a `.prom` extension. Both are
-    // schema-checked in CI.
+    // schema-checked in CI. `--transport process` (with optional
+    // `--ranks P` and `--topology flat|twolevel`) runs the
+    // multi-process acceptance path instead of the in-process demo.
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut trace_path: Option<std::path::PathBuf> = None;
     let mut telemetry_path: Option<std::path::PathBuf> = None;
+    let mut transport = String::from("thread");
+    let mut topology = String::from("flat");
+    let mut ranks = 4usize;
     let mut it = argv.iter();
     while let Some(flag) = it.next() {
-        let slot = match flag.as_str() {
-            "--trace" => &mut trace_path,
-            "--telemetry" => &mut telemetry_path,
-            other => {
-                return Err(
-                    format!("usage: lasso [--trace PATH] [--telemetry PATH], got {other:?}")
-                        .into(),
-                )
+        let Some(val) = it.next() else {
+            return Err(format!("{flag} needs an argument").into());
+        };
+        match flag.as_str() {
+            "--trace" => trace_path = Some(std::path::PathBuf::from(val)),
+            "--telemetry" => telemetry_path = Some(std::path::PathBuf::from(val)),
+            "--transport" => transport = val.clone(),
+            "--topology" => topology = val.clone(),
+            "--ranks" => {
+                ranks = val
+                    .parse()
+                    .map_err(|e| format!("--ranks {val:?}: {e}"))?
             }
-        };
-        let Some(path) = it.next() else {
-            return Err(format!("{flag} needs a PATH argument").into());
-        };
-        *slot = Some(std::path::PathBuf::from(path));
+            other => {
+                return Err(format!(
+                    "usage: lasso [--trace PATH] [--telemetry PATH] \
+                     [--transport thread|process] [--ranks P] \
+                     [--topology flat|twolevel], got {other:?}"
+                )
+                .into())
+            }
+        }
+    }
+    match transport.as_str() {
+        "thread" => {}
+        "process" => return run_process_transport(ranks, &topology, trace_path, telemetry_path),
+        other => return Err(format!("--transport {other:?}: want thread or process").into()),
     }
 
     // 1. Planted sparse-recovery instance: d = 64 features, only 6
@@ -225,5 +264,148 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!("{:>9.2} {:>8} {:>14.8e}", ratio, last.nnz, last.pen_obj);
     }
     println!("\nlasso example: OK");
+    Ok(())
+}
+
+/// `--transport process`: the same CA-Prox-BCD lasso machinery, but with
+/// the ranks as OS processes over loopback TCP. The driver re-execs this
+/// binary once per rank (`maybe_run_process_child` at the top of `main`
+/// routes the children), gathers status/trace/telemetry back over the
+/// wire, and the parent then re-runs the identical config over the
+/// thread transport and asserts the two land **bitwise-identical** —
+/// trajectory errors, per-iteration records, duality certificates, and
+/// the seven wire-meter fields. Any `--trace`/`--telemetry` artifacts
+/// come from the process run, so the CI schema checkers validate exports
+/// that crossed a real process boundary.
+fn run_process_transport(
+    ranks: usize,
+    topology: &str,
+    trace_path: Option<std::path::PathBuf>,
+    telemetry_path: Option<std::path::PathBuf>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    use cabcd::config::{DatasetConfig, ExperimentConfig, RunConfig, SolverConfig};
+    use cabcd::coordinator::run_experiment;
+
+    let node_size = if topology == "twolevel" { 2 } else { 1 };
+    let cfg = |transport: &str| ExperimentConfig {
+        dataset: DatasetConfig {
+            kind: "synthetic".into(),
+            name: Some("abalone".into()),
+            path: None,
+            scale: 16,
+            seed: 1,
+        },
+        solver: SolverConfig {
+            method: "cabcd".into(),
+            b: 2,
+            s: 4,
+            lam: None,
+            iters: 80,
+            seed: 7,
+            record_every: 20,
+            track_gram_cond: false,
+            tol: None,
+            overlap: true,
+            reg: "l1".into(),
+            l1_ratio: 0.5,
+            local_iters: 1,
+        },
+        run: RunConfig {
+            ranks,
+            backend: "native".into(),
+            transport: transport.into(),
+            topology: topology.into(),
+            node_size,
+            artifact_dir: std::env::temp_dir().join("cabcd-lasso-process"),
+            // Observability artifacts come from the process run only; the
+            // thread twin is a reference trajectory, not an export demo
+            // (both are observer-neutral, so this does not perturb the
+            // bitwise comparison).
+            trace: if transport == "process" {
+                trace_path.clone()
+            } else {
+                None
+            },
+            telemetry: if transport == "process" {
+                telemetry_path.clone()
+            } else {
+                None
+            },
+            telemetry_z: None,
+            // Hang backstop: a lost worker surfaces as Error::Comm naming
+            // the peer and op tag instead of a stuck CI job.
+            comm_timeout_ms: Some(30_000),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+        },
+    };
+
+    println!(
+        "lasso over {ranks} worker processes (topology {topology}), then the \
+         thread-transport twin…"
+    );
+    let proc = run_experiment(&cfg("process"))?;
+    let thrd = run_experiment(&cfg("thread"))?;
+    for (label, r) in [("process", &proc), ("thread", &thrd)] {
+        assert!(
+            r.aborted_at.is_none(),
+            "{label} run aborted: {:?}",
+            r.aborted_at.as_ref().map(|a| &a.error)
+        );
+    }
+    assert_eq!(proc.transport, "process");
+    assert_eq!(proc.ranks, ranks);
+
+    // Bitwise drop-in: trajectory, certificates, wire meters.
+    assert_eq!(
+        proc.final_sol_err.to_bits(),
+        thrd.final_sol_err.to_bits(),
+        "solution error diverged across transports"
+    );
+    assert_eq!(
+        proc.final_obj_err.to_bits(),
+        thrd.final_obj_err.to_bits(),
+        "objective error diverged across transports"
+    );
+    assert_eq!(proc.history.prox.len(), thrd.history.prox.len());
+    for (a, b) in proc.history.prox.iter().zip(&thrd.history.prox) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.nnz, b.nnz);
+        assert_eq!(a.pen_obj.to_bits(), b.pen_obj.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.subgrad.to_bits(), b.subgrad.to_bits(), "iter {}", a.iter);
+    }
+    let (pm, tm) = (&proc.history.meter, &thrd.history.meter);
+    assert_eq!(
+        (pm.msgs, pm.words, pm.recv_msgs, pm.recv_words),
+        (tm.msgs, tm.words, tm.recv_msgs, tm.recv_words),
+        "wire volume diverged across transports"
+    );
+    assert_eq!(
+        (pm.allreduces, pm.all_to_alls, pm.collective_waits),
+        (tm.allreduces, tm.all_to_alls, tm.collective_waits),
+        "collective counts diverged across transports"
+    );
+
+    let last = proc.history.prox.last().expect("no prox records");
+    assert!(
+        last.gap.is_finite() && last.gap >= 0.0,
+        "duality gap {} is not a certificate",
+        last.gap
+    );
+    if trace_path.is_some() {
+        let t = proc.trace.as_ref().expect("trace summary missing");
+        assert_eq!(t.ranks, ranks, "trace tracks did not cross the process boundary");
+    }
+    if telemetry_path.is_some() {
+        let t = proc.telemetry.as_ref().expect("telemetry summary missing");
+        assert_eq!(t.ranks, ranks, "telemetry registries did not cross the process boundary");
+    }
+    println!(
+        "process == thread (bitwise): final gap {:.3e}, {} allreduces, \
+         {} msgs / {} words per rank",
+        last.gap, pm.allreduces, pm.msgs, pm.words
+    );
+    println!("\nlasso example (process transport): OK");
     Ok(())
 }

@@ -93,6 +93,16 @@ pub const ALLOW: &[(&str, &str, usize)] = &[
     // the deadline-free fast path — so traced schedules stay
     // deterministic when no timeout is configured.
     ("instant-now", "comm/thread.rs", 2),
+    // The process transport's receive-deadline clock (PR 10): same
+    // shape as the thread transport — arm the expiry, then budget the
+    // remaining wait inside the inbox poll loop. Deadline-free runs
+    // never touch either site.
+    ("instant-now", "comm/process/mod.rs", 2),
+    // Bootstrap handshake deadlines: rendezvous accept and worker dial
+    // both bound the connection phase (30 s) so a missing rank turns
+    // into an error instead of a hung launcher. Runs once per process
+    // at startup, never on the data path.
+    ("instant-now", "comm/process/rendezvous.rs", 2),
 ];
 
 /// Collective method names whose call sites rule `collective-seam`

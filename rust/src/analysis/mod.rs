@@ -44,4 +44,7 @@ pub use checker::check_streams;
 pub use lint::{run_lint, LintReport, Violation};
 pub use mock::MockBackend;
 pub use spec::{SpecComm, SpecEvent, SpecOp};
-pub use verify::{engine_schedule_runs, run_symbolic, verify_all, ScheduleRun, METHODS};
+pub use verify::{
+    engine_schedule_runs, run_symbolic, run_symbolic_with_topology, verify_all, ScheduleRun,
+    METHODS,
+};

@@ -20,7 +20,10 @@
 use std::collections::VecDeque;
 
 use crate::comm::thread::expected_allreduce_sends;
-use crate::comm::{A2aState, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle};
+use crate::comm::{
+    expected_two_level_allreduce_sends, A2aState, AllToAllHandle, Communicator, CostMeter,
+    HandleState, ReduceHandle, Topology,
+};
 use crate::error::{Error, Result};
 
 /// The abstract operation one [`SpecEvent`] records.
@@ -153,6 +156,10 @@ pub struct SpecComm {
     /// Fault injection: constant added to every issued tag, used to
     /// simulate a rank whose tag stream diverged from its peers.
     tag_skew: u64,
+    /// Wire topology the symbolic meter models. Events never depend on
+    /// it — a two-level allreduce is schedule-invariant — but the
+    /// metered send counts switch to the hierarchical closed form.
+    topology: Topology,
 }
 
 impl SpecComm {
@@ -170,6 +177,7 @@ impl SpecComm {
             poisoned: false,
             freeze_tags: false,
             tag_skew: 0,
+            topology: Topology::Flat,
         }
     }
 
@@ -238,7 +246,16 @@ impl SpecComm {
     fn meter_allreduce_entry(&mut self, len: usize) {
         self.meter.allreduces += 1;
         if self.size > 1 {
-            let (msgs, words) = expected_allreduce_sends(self.size, self.rank, len);
+            let (msgs, words) = match self.topology {
+                Topology::Flat => expected_allreduce_sends(self.size, self.rank, len),
+                Topology::TwoLevel { node_size } => {
+                    expected_two_level_allreduce_sends(self.size, node_size, self.rank, len)
+                }
+            };
+            // Send/receive symmetry holds per rank under both
+            // topologies: a member's fan-in send is answered by one
+            // fan-out receive, and a leader's fan-in receives match its
+            // fan-out sends around a symmetric leader exchange.
             self.meter.msgs += msgs;
             self.meter.words += words;
             self.meter.recv_msgs += msgs;
@@ -452,6 +469,10 @@ impl Communicator for SpecComm {
         let tag = self.begin_op();
         self.push(tag, SpecOp::Barrier);
         Ok(())
+    }
+
+    fn set_topology(&mut self, topology: Topology) {
+        self.topology = topology;
     }
 
     fn meter(&self) -> &CostMeter {

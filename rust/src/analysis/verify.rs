@@ -9,8 +9,9 @@
 //! transport, a scheduler, or any risk of an actual deadlock.
 //!
 //! [`verify_all`] sweeps every method over {blocking, overlap} ×
-//! P ∈ {1, 3, 4} (plus the early-tolerance-stop drain paths) and checks
-//! each; [`engine_schedule_runs`] reproduces the exact 48-config matrix
+//! P ∈ {1, 3, 4} (plus the early-tolerance-stop drain paths and a
+//! two-level-topology neutrality pass) and checks each;
+//! [`engine_schedule_runs`] reproduces the exact 48-config matrix
 //! of `rust/tests/engine_equivalence.rs` so the per-rank schedules can be
 //! pinned as the committed fixture
 //! `rust/tests/fixtures/engine_schedules.tsv`.
@@ -23,7 +24,7 @@
 use crate::analysis::checker::check_streams;
 use crate::analysis::mock::MockBackend;
 use crate::analysis::spec::{SpecComm, SpecEvent};
-use crate::comm::{Communicator, CostMeter};
+use crate::comm::{Communicator, CostMeter, Topology};
 use crate::coordinator::{partition_dual, partition_primal, partition_rows};
 use crate::error::{Error, Result};
 use crate::matrix::io::Dataset;
@@ -143,6 +144,21 @@ pub fn run_symbolic(
     p: usize,
     tol: Option<f64>,
 ) -> Result<ScheduleRun> {
+    run_symbolic_with_topology(method, s, overlap, p, tol, Topology::Flat)
+}
+
+/// [`run_symbolic`] under an explicit wire topology. The topology feeds
+/// the symbolic meter only (a two-level allreduce changes who sends what,
+/// never the abstract op/tag/length schedule), so [`verify_all`] asserts
+/// the streams stay bitwise identical to the flat runs.
+pub fn run_symbolic_with_topology(
+    method: &'static str,
+    s: usize,
+    overlap: bool,
+    p: usize,
+    tol: Option<f64>,
+    topology: Topology,
+) -> Result<ScheduleRun> {
     let ds = toy_dataset();
     let reference = dummy_reference(ds.d());
     let n = ds.n();
@@ -150,6 +166,7 @@ pub fn run_symbolic(
     let mut meters = Vec::with_capacity(p);
     for rank in 0..p {
         let mut comm = SpecComm::new(rank, p);
+        comm.set_topology(topology);
         let mut be = MockBackend::new();
         match method {
             "bcd" | "prox_bcd" => {
@@ -257,9 +274,11 @@ pub fn engine_schedule_runs() -> Result<Vec<ScheduleRun>> {
 
 /// Sweep every method × s-axis × {blocking, overlap} × P ∈ {1, 3, 4},
 /// plus the early-tolerance-stop drain paths (matched prefetch pipeline
-/// and the row layout's non-pipelined overlap), and run
-/// [`check_streams`] on each. Returns the number of configurations
-/// verified; the first violation aborts with the checker's diagnosis.
+/// and the row layout's non-pipelined overlap) and a two-level-topology
+/// neutrality pass (hierarchical wire routing must not perturb the
+/// abstract schedule), and run [`check_streams`] on each. Returns the
+/// number of configurations verified; the first violation aborts with
+/// the checker's diagnosis.
 ///
 /// P = 3 exercises the non-power-of-two allreduce fold/unfold, whose
 /// wire counts are rank-dependent — lockstep of op/tag/length streams
@@ -287,6 +306,56 @@ pub fn verify_all() -> Result<usize> {
         for p in [1usize, 3, 4] {
             let run = run_symbolic(method, 2, true, p, Some(f64::INFINITY))?;
             check_streams(&run.streams).map_err(|e| annotate(e, method, 2, true, p, "drain"))?;
+            verified += 1;
+        }
+    }
+    // Hierarchical topology neutrality: a two-level allreduce reroutes
+    // wire traffic through node leaders but must leave the abstract
+    // schedule untouched — same events, same tags, same lengths on every
+    // rank — with only the meters moving. P = 3 with node_size = 2 gives
+    // an unbalanced node (one leader with a member, one solo leader), the
+    // shape most likely to break lockstep if topology ever leaked into
+    // scheduling.
+    for method in METHODS {
+        let s = s_axis(method)[1];
+        for p in [3usize, 4] {
+            let flat = run_symbolic(method, s, true, p, None)?;
+            let hier = run_symbolic_with_topology(
+                method,
+                s,
+                true,
+                p,
+                None,
+                Topology::TwoLevel { node_size: 2 },
+            )?;
+            check_streams(&hier.streams)
+                .map_err(|e| annotate(e, method, s, true, p, "twolevel"))?;
+            if hier.streams != flat.streams {
+                return Err(annotate(
+                    Error::Comm("two-level topology altered the abstract schedule".into()),
+                    method,
+                    s,
+                    true,
+                    p,
+                    "twolevel",
+                ));
+            }
+            for rank in 0..p {
+                if hier.meters[rank].allreduces != flat.meters[rank].allreduces
+                    || hier.meters[rank].all_to_alls != flat.meters[rank].all_to_alls
+                {
+                    return Err(annotate(
+                        Error::Comm(format!(
+                            "two-level topology changed collective counts on rank {rank}"
+                        )),
+                        method,
+                        s,
+                        true,
+                        p,
+                        "twolevel",
+                    ));
+                }
+            }
             verified += 1;
         }
     }

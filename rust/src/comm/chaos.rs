@@ -31,7 +31,7 @@
 
 use std::time::Duration;
 
-use crate::comm::{AllToAllHandle, Communicator, CostMeter, ReduceHandle};
+use crate::comm::{AllToAllHandle, Communicator, CostMeter, ReduceHandle, Topology};
 use crate::error::{Error, Result};
 use crate::trace::{self, OpClass, SpanKind};
 use crate::util::Rng64;
@@ -230,6 +230,10 @@ impl<C: Communicator> Communicator for ChaosComm<C> {
 
     fn set_deadline(&mut self, deadline: Option<Duration>) {
         self.inner.set_deadline(deadline)
+    }
+
+    fn set_topology(&mut self, topology: Topology) {
+        self.inner.set_topology(topology)
     }
 
     fn take_buf(&mut self, len: usize) -> Vec<f64> {

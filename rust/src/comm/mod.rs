@@ -91,10 +91,14 @@
 
 pub mod chaos;
 pub mod cost;
+pub mod process;
+pub(crate) mod proto;
 pub mod thread;
 
 pub use chaos::{ChaosComm, ChaosSpec};
 pub use cost::CostMeter;
+pub use process::{ProcessComm, Rendezvous};
+pub use proto::expected_two_level_allreduce_sends;
 pub use thread::{run_spmd, ThreadComm};
 
 use crate::error::Result;
@@ -104,6 +108,36 @@ use crate::error::Result;
 pub(crate) enum Algo {
     RecursiveDoubling,
     Rabenseifner,
+    /// Hierarchical two-level composition (see [`proto`] module docs):
+    /// intra-node fan-in to node leaders, flat core algorithm across the
+    /// leader group, fan-out back to members.
+    TwoLevel { node_size: usize },
+}
+
+/// Collective topology of a communicator ([`Communicator::set_topology`]).
+///
+/// `Flat` runs every allreduce over all P ranks directly (recursive
+/// doubling / Rabenseifner, selected on payload size). `TwoLevel` models a
+/// cluster of nodes with `node_size` ranks each: allreduce fans in to node
+/// leaders, runs the flat algorithm across the `⌈P/node_size⌉` leaders,
+/// and fans back out — trading `O(log P)` uniform hops for cheap intra-node
+/// hops plus `O(log(P/node_size))` inter-node hops (the paper's α-β model
+/// prices these links differently on the Cray XC30). Broadcast, barrier,
+/// and all-to-all are topology-independent (barrier traffic is
+/// zero-payload and all-to-all is inherently personalized), so only the
+/// allreduce family dispatches on this. `node_size` is clamped to
+/// `[1, P]`; `node_size = 1` degenerates to `Flat`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// Single-level collectives over all ranks (the default).
+    #[default]
+    Flat,
+    /// Two-level hierarchy with `node_size` ranks per node.
+    TwoLevel {
+        /// Ranks per node; rank r belongs to node `r / node_size` and its
+        /// leader is the node's lowest rank.
+        node_size: usize,
+    },
 }
 
 /// Protocol state carried by an in-flight [`ReduceHandle`].
@@ -279,6 +313,12 @@ pub trait Communicator: Send {
     /// (e.g. [`SerialComm`]) ignore the deadline — the default is a no-op.
     fn set_deadline(&mut self, _deadline: Option<std::time::Duration>) {}
 
+    /// Select the collective [`Topology`] for subsequent allreduces.
+    /// Communicators without a multi-rank wire (e.g. [`SerialComm`]) have
+    /// nothing to restructure — the default is a no-op. Decorators
+    /// ([`ChaosComm`]) forward to the inner transport.
+    fn set_topology(&mut self, _topology: Topology) {}
+
     /// Borrow a zeroed length-`len` buffer from the rank-local pool
     /// (allocates only on pool miss).
     fn take_buf(&mut self, len: usize) -> Vec<f64> {
@@ -291,6 +331,32 @@ pub trait Communicator: Send {
     /// Communication meter for this rank.
     fn meter(&self) -> &CostMeter;
     fn meter_mut(&mut self) -> &mut CostMeter;
+}
+
+/// Gather one variable-length blob per rank to rank 0, implemented as a
+/// personalized all-to-all in which every non-root destination receives an
+/// empty payload. Returns `Some(blobs)` (indexed by source rank, rank 0's
+/// own blob included) on rank 0 and `None` elsewhere.
+///
+/// This is the cross-process reporting primitive: after a solve, the
+/// driver ships per-rank meters, trace rings, and telemetry registries to
+/// the parent over the same communicator the solve used (observability is
+/// uninstalled first, so the gather itself contributes no spans or
+/// telemetry). Payload words are moved bit-exactly by every transport, so
+/// non-numeric data packed via `f64::from_bits` survives round trips —
+/// the trace and telemetry word codecs rely on this.
+pub fn gather_to_root<C: Communicator + ?Sized>(
+    c: &mut C,
+    blob: Vec<f64>,
+) -> Result<Option<Vec<Vec<f64>>>> {
+    let p = c.size();
+    if p == 1 {
+        return Ok(Some(vec![blob]));
+    }
+    let mut send: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
+    send[0] = blob;
+    let out = c.all_to_all(send)?;
+    Ok(if c.rank() == 0 { Some(out) } else { None })
 }
 
 /// Single-rank communicator: all collectives are no-ops. Used for P=1 runs

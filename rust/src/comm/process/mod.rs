@@ -1,0 +1,1233 @@
+//! Multi-process socket transport: P ranks as OS processes, one loopback
+//! TCP stream per rank pair, and the same MPICH-style collective engine
+//! ([`crate::comm::proto`]) the thread transport runs — so the two are
+//! bitwise identical end to end.
+//!
+//! # Architecture
+//!
+//! Each endpoint owns the write half of P−1 streams plus one detached
+//! *reader thread per peer* that decodes frames off the socket and
+//! forwards them into a single tagged inbox channel. The main thread then
+//! runs exactly the thread transport's matching logic: receives match on
+//! `(source, operation tag)`, out-of-order traffic is stashed per source,
+//! and decoded payloads come from a shared rank-local buffer pool so the
+//! steady state allocates nothing. Because every reader *always* drains
+//! its socket into the (unbounded) inbox, a send can only block until the
+//! peer's kernel buffer and reader catch up — never on collective
+//! ordering — which rules out the classic send-send deadlock without any
+//! extra protocol.
+//!
+//! # Wire format
+//!
+//! One frame per point-to-point message, little-endian:
+//!
+//! ```text
+//! [ kind: u8 ][ tag: u64 ][ len: u64 ][ payload ]
+//! ```
+//!
+//! `kind = 1` (data): payload is `len` f64 words as raw IEEE-754 bit
+//! patterns — `f64::to_bits`/`from_bits`, so NaN payloads and packed
+//! metadata cross the wire bit-exactly. `kind = 2` (poison): payload is a
+//! `len`-byte UTF-8 failure message.
+//!
+//! # Failure semantics
+//!
+//! Identical to the thread transport, with one addition: a peer's socket
+//! dying (ECONNRESET / EOF — e.g. a killed child process) is latched by
+//! its reader as a *down* event. The first receive that needs that peer
+//! converts it into a poisoned group, naming the peer, the op tag, and
+//! the OS-level cause, and broadcasting poison to the survivors — so a
+//! kill lands as one actionable `Error::Comm` everywhere instead of a
+//! hang or a panic. Receive deadlines ([`Communicator::set_deadline`])
+//! bound every blocking wait exactly as in the thread transport.
+//!
+//! Bootstrap (rendezvous listener, HELLO/MAP/PEER handshake) lives in
+//! [`rendezvous`]; the launcher in `main.rs` re-execs children with the
+//! rendezvous address in `CABCD_PROC_*` environment variables, and
+//! externally launched ranks can call [`ProcessComm::connect`] directly.
+
+mod rendezvous;
+
+pub use rendezvous::{connect, Rendezvous};
+
+use std::collections::VecDeque;
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::comm::proto::{self, Group, Wire};
+use crate::comm::{
+    A2aState, Algo, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle, Topology,
+};
+use crate::error::{Error, Result};
+use crate::telemetry;
+use crate::trace::{self, OpClass, SpanKind};
+
+/// Rendezvous address for launcher-spawned child ranks (`host:port`).
+pub const ENV_ADDR: &str = "CABCD_PROC_ADDR";
+/// This child's rank within the process group.
+pub const ENV_RANK: &str = "CABCD_PROC_RANK";
+/// Total number of ranks in the process group.
+pub const ENV_RANKS: &str = "CABCD_PROC_RANKS";
+
+/// Upper bound on pooled buffers retained per rank (mirrors the thread
+/// transport's bound).
+const POOL_MAX: usize = 64;
+/// Frame kinds.
+const FRAME_DATA: u8 = 1;
+const FRAME_POISON: u8 = 2;
+/// `[kind][tag][len]` prefix size in bytes.
+const FRAME_HEADER_BYTES: usize = 17;
+/// Sanity bound on one frame's payload length: anything larger is a
+/// corrupt or hostile header, and latches the peer as down rather than
+/// attempting a giant allocation.
+const MAX_FRAME_WORDS: u64 = 1 << 31;
+
+/// Read the launcher-provided child identity from the environment:
+/// `(rendezvous address, rank, size)`, or `None` when not a child rank.
+pub fn child_spec_from_env() -> Option<(String, usize, usize)> {
+    let addr = std::env::var(ENV_ADDR).ok()?;
+    let rank = std::env::var(ENV_RANK).ok()?.parse().ok()?;
+    let size = std::env::var(ENV_RANKS).ok()?.parse().ok()?;
+    Some((addr, rank, size))
+}
+
+/// Rank-local buffer pool shared between the main thread (recycling) and
+/// the per-peer reader threads (decoding incoming payloads). Pool misses
+/// are tallied atomically and folded into [`CostMeter::buf_allocs`] by the
+/// endpoint at collective boundaries.
+struct BufPool {
+    bufs: Mutex<Vec<Vec<f64>>>,
+    misses: AtomicU64,
+}
+
+impl BufPool {
+    fn new() -> BufPool {
+        BufPool {
+            bufs: Mutex::new(Vec::new()),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a cleared buffer, preferring one whose capacity already fits
+    /// `len` (best-fit, as in the thread transport). A miss or capacity
+    /// growth counts one allocation.
+    fn take_for(&self, len: usize) -> Vec<f64> {
+        let picked = {
+            let mut pool = match self.bufs.lock() {
+                Ok(g) => g,
+                // A reader thread can only poison this lock by dying
+                // mid-push; the Vec is still structurally sound.
+                Err(p) => p.into_inner(),
+            };
+            match pool.iter().rposition(|v| v.capacity() >= len) {
+                Some(i) => Some(pool.swap_remove(i)),
+                None => pool.pop(),
+            }
+        };
+        let mut v = picked.unwrap_or_default();
+        if v.capacity() < len {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        v.clear();
+        v
+    }
+
+    fn give(&self, buf: Vec<f64>) {
+        let mut pool = match self.bufs.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if pool.len() < POOL_MAX {
+            pool.push(buf);
+        }
+    }
+
+    fn miss_count(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// What a reader thread forwards into the inbox.
+enum InPacket {
+    /// A decoded data frame: `(operation tag, payload)`.
+    Data(u64, Vec<f64>),
+    /// A peer's poison frame (group failure broadcast).
+    Poison(String),
+    /// The peer's socket died (EOF/ECONNRESET/protocol violation); the
+    /// reader exits after sending this. Latched per peer by the endpoint.
+    Down(String),
+}
+
+/// Decode one frame off the stream. `scratch` is the reader's reusable
+/// byte buffer; payloads land in pooled `Vec<f64>`s so the steady state
+/// allocates nothing.
+fn read_frame(
+    r: &mut BufReader<TcpStream>,
+    scratch: &mut Vec<u8>,
+    pool: &BufPool,
+) -> std::result::Result<InPacket, String> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    r.read_exact(&mut hdr).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            "connection closed by peer".to_string()
+        } else {
+            format!("socket read failed: {e}")
+        }
+    })?;
+    let kind = hdr[0];
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&hdr[1..9]);
+    let tag = u64::from_le_bytes(w);
+    w.copy_from_slice(&hdr[9..17]);
+    let len = u64::from_le_bytes(w);
+    if len > MAX_FRAME_WORDS {
+        return Err(format!("protocol error: oversized frame ({len} words)"));
+    }
+    match kind {
+        FRAME_DATA => {
+            let nbytes = len as usize * 8;
+            scratch.resize(nbytes, 0);
+            r.read_exact(&mut scratch[..nbytes])
+                .map_err(|e| format!("socket read failed mid-frame: {e}"))?;
+            let mut v = pool.take_for(len as usize);
+            for chunk in scratch[..nbytes].chunks_exact(8) {
+                w.copy_from_slice(chunk);
+                v.push(f64::from_bits(u64::from_le_bytes(w)));
+            }
+            Ok(InPacket::Data(tag, v))
+        }
+        FRAME_POISON => {
+            scratch.resize(len as usize, 0);
+            r.read_exact(&mut scratch[..len as usize])
+                .map_err(|e| format!("socket read failed mid-frame: {e}"))?;
+            Ok(InPacket::Poison(
+                String::from_utf8_lossy(&scratch[..len as usize]).into_owned(),
+            ))
+        }
+        k => Err(format!("protocol error: unknown frame kind {k}")),
+    }
+}
+
+/// Per-peer reader: decode frames until the socket dies or the endpoint
+/// drops its inbox, forwarding everything tagged with the source rank.
+fn reader_loop(src: usize, stream: TcpStream, tx: Sender<(usize, InPacket)>, pool: Arc<BufPool>) {
+    let mut r = BufReader::with_capacity(1 << 16, stream);
+    let mut scratch: Vec<u8> = Vec::new();
+    loop {
+        match read_frame(&mut r, &mut scratch, &pool) {
+            Ok(pkt) => {
+                if tx.send((src, pkt)).is_err() {
+                    return; // endpoint dropped — nobody is listening
+                }
+            }
+            Err(msg) => {
+                let _ = tx.send((src, InPacket::Down(msg)));
+                return;
+            }
+        }
+    }
+}
+
+/// Rank-local endpoint of a P-rank multi-process communicator.
+pub struct ProcessComm {
+    rank: usize,
+    size: usize,
+    /// Write halves; `None` at our own index.
+    peers: Vec<Option<TcpStream>>,
+    inbox: Receiver<(usize, InPacket)>,
+    /// Keeps the inbox alive even when every reader has exited (or none
+    /// exist, at P=1), so deadline timeouts fire instead of `Disconnected`.
+    _inbox_keepalive: Sender<(usize, InPacket)>,
+    /// Out-of-order stash, as in the thread transport: `(tag, data)` per
+    /// source, matched in FIFO order within an operation.
+    pending: Vec<VecDeque<(u64, Vec<f64>)>>,
+    /// Latched per-peer socket death, set from reader `Down` events.
+    down: Vec<Option<String>>,
+    pool: Arc<BufPool>,
+    /// Reusable frame-encode buffer (grows to the largest frame, then
+    /// stays — the encode path allocates nothing in the steady state).
+    wbuf: Vec<u8>,
+    /// Sticky failure state: once poisoned, every collective errors.
+    poisoned: Option<String>,
+    /// Monotone collective counter; SPMD determinism makes it a valid
+    /// cross-rank match key (see the thread transport).
+    op_seq: u64,
+    cur_tag: u64,
+    deadline: Option<Duration>,
+    topology: Topology,
+    /// Pool misses already folded into `meter.buf_allocs`.
+    counted_misses: u64,
+    meter: CostMeter,
+}
+
+impl ProcessComm {
+    /// Join an existing group as rank `rank` by dialing rank 0's
+    /// rendezvous address — for externally launched ranks (the in-tree
+    /// launcher sets `CABCD_PROC_*` and calls this via
+    /// [`child_spec_from_env`]).
+    pub fn connect(addr: &str, rank: usize, size: usize) -> Result<ProcessComm> {
+        rendezvous::connect(addr, rank, size)
+    }
+
+    /// Assemble an endpoint from an established full mesh: one stream per
+    /// peer (`None` at `rank`), as produced by the rendezvous handshake.
+    /// Spawns the per-peer reader threads.
+    pub(crate) fn from_streams(
+        rank: usize,
+        size: usize,
+        streams: Vec<Option<TcpStream>>,
+    ) -> Result<ProcessComm> {
+        if streams.len() != size {
+            return Err(Error::Comm(format!(
+                "process comm: {} streams for {size} ranks",
+                streams.len()
+            )));
+        }
+        let (tx, inbox) = channel();
+        let pool = Arc::new(BufPool::new());
+        for (src, s) in streams.iter().enumerate() {
+            let Some(s) = s else {
+                if src != rank {
+                    return Err(Error::Comm(format!(
+                        "process comm: rank {rank} missing a stream to rank {src}"
+                    )));
+                }
+                continue;
+            };
+            // Collective rounds are latency-bound small writes; never
+            // Nagle-delay them. Handshake read timeouts must not leak
+            // into the reader's blocking loop.
+            let _ = s.set_nodelay(true);
+            s.set_read_timeout(None)
+                .map_err(|e| Error::Comm(format!("process comm: clear read timeout: {e}")))?;
+            let reader = s
+                .try_clone()
+                .map_err(|e| Error::Comm(format!("process comm: clone stream to {src}: {e}")))?;
+            let (tx, pool) = (tx.clone(), pool.clone());
+            std::thread::Builder::new()
+                .name(format!("cabcd-rx-{rank}-{src}"))
+                .spawn(move || reader_loop(src, reader, tx, pool))
+                .map_err(|e| Error::Comm(format!("process comm: spawn reader: {e}")))?;
+        }
+        Ok(ProcessComm {
+            rank,
+            size,
+            peers: streams,
+            inbox,
+            _inbox_keepalive: tx,
+            pending: (0..size).map(|_| VecDeque::new()).collect(),
+            down: (0..size).map(|_| None).collect(),
+            pool,
+            wbuf: Vec::new(),
+            poisoned: None,
+            op_seq: 0,
+            cur_tag: 0,
+            deadline: None,
+            topology: Topology::Flat,
+            counted_misses: 0,
+            meter: CostMeter::default(),
+        })
+    }
+
+    /// A full P-rank group inside one process, wired over real loopback
+    /// sockets: rank 0 hosts the rendezvous, ranks 1..P connect from
+    /// spawned threads. The socket path under test is exactly the
+    /// multi-process path; only the launch vehicle differs.
+    pub fn local_group(p: usize) -> Result<Vec<ProcessComm>> {
+        let rv = Rendezvous::bind()?;
+        let addr = rv.addr().to_string();
+        let mut joiners = Vec::with_capacity(p.saturating_sub(1));
+        for r in 1..p {
+            let addr = addr.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("cabcd-connect-{r}"))
+                .spawn(move || connect(&addr, r, p))
+                .map_err(|e| Error::Comm(format!("local_group: spawn failed: {e}")))?;
+            joiners.push(h);
+        }
+        let root = rv.accept(p)?;
+        let mut out = Vec::with_capacity(p);
+        out.push(root);
+        for h in joiners {
+            let comm = h
+                .join()
+                .map_err(|_| Error::Comm("local_group: connect thread panicked".into()))??;
+            out.push(comm);
+        }
+        Ok(out)
+    }
+
+    /// Explicitly poison the group (launcher/driver error paths: a child
+    /// failing outside a collective still takes its peers down with an
+    /// actionable message instead of leaving them to time out).
+    pub fn abort(&mut self, msg: &str) -> Error {
+        self.poison(msg.to_string())
+    }
+
+    // ---- buffer pool ----------------------------------------------------
+
+    /// Fold reader-side pool misses into the meter (readers can't touch
+    /// the meter directly; this runs at every collective boundary, so
+    /// `buf_allocs` is exact up to the last completed operation).
+    fn sync_allocs(&mut self) {
+        let m = self.pool.miss_count();
+        self.meter.buf_allocs += m - self.counted_misses;
+        self.counted_misses = m;
+    }
+
+    fn take_buf_inner(&mut self, len: usize) -> Vec<f64> {
+        let mut v = self.pool.take_for(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    // ---- point-to-point -------------------------------------------------
+
+    /// Enter a new collective operation (see the thread transport).
+    fn begin_op(&mut self) -> u64 {
+        self.op_seq += 1;
+        self.cur_tag = self.op_seq;
+        self.op_seq
+    }
+
+    /// Encode `data` as one frame and write it to `dst`'s stream. An I/O
+    /// failure means the peer's process or socket died mid-collective:
+    /// surface an already-latched group poison if there is one, otherwise
+    /// poison the group ourselves, naming the peer and the op tag.
+    fn send_slice(&mut self, dst: usize, data: &[f64]) -> Result<()> {
+        self.meter.record_send(data.len());
+        let tag = self.cur_tag;
+        let wbuf = &mut self.wbuf;
+        wbuf.clear();
+        wbuf.push(FRAME_DATA);
+        wbuf.extend_from_slice(&tag.to_le_bytes());
+        wbuf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        for x in data {
+            wbuf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        let Some(stream) = self.peers[dst].as_mut() else {
+            return Err(Error::Comm(format!(
+                "send {}→{dst}: no stream to peer",
+                self.rank
+            )));
+        };
+        let wrote = stream.write_all(wbuf).and_then(|_| stream.flush());
+        if let Err(e) = wrote {
+            self.check_poison()?;
+            return Err(self.peer_lost(dst, tag, &format!("send failed: {e}")));
+        }
+        Ok(())
+    }
+
+    /// Send and recycle an owned buffer (all-to-all fan-out).
+    fn send_owned(&mut self, dst: usize, buf: Vec<f64>) -> Result<()> {
+        let res = self.send_slice(dst, &buf);
+        self.pool.give(buf);
+        res
+    }
+
+    fn poisoned_err(msg: &str) -> Error {
+        Error::Comm(format!("group poisoned: {msg}"))
+    }
+
+    /// Broadcast a poison frame to every reachable peer, mark ourselves
+    /// poisoned, and return the error to propagate. Write failures are
+    /// ignored — a dead peer no longer needs the bad news.
+    fn poison(&mut self, msg: String) -> Error {
+        let mut frame = Vec::with_capacity(FRAME_HEADER_BYTES + msg.len());
+        frame.push(FRAME_POISON);
+        frame.extend_from_slice(&0u64.to_le_bytes());
+        frame.extend_from_slice(&(msg.len() as u64).to_le_bytes());
+        frame.extend_from_slice(msg.as_bytes());
+        for s in self.peers.iter_mut().flatten() {
+            let _ = s.write_all(&frame).and_then(|_| s.flush());
+        }
+        let err = Self::poisoned_err(&msg);
+        self.poisoned = Some(msg);
+        err
+    }
+
+    /// A peer's socket died under us mid-collective: poison the group
+    /// with the peer, the op tag, and the OS-level cause named — the
+    /// actionable form of ECONNRESET/EOF (kill-a-child regression).
+    fn peer_lost(&mut self, peer: usize, tag: u64, cause: &str) -> Error {
+        self.poison(format!(
+            "rank {} lost rank {peer} mid-collective (op tag {tag}): {cause}",
+            self.rank
+        ))
+    }
+
+    /// Drain already-arrived packets (stashing data, latching poison and
+    /// peer-down events) and fail if the group is poisoned.
+    fn check_poison(&mut self) -> Result<()> {
+        if self.poisoned.is_none() {
+            while let Ok((from, pkt)) = self.inbox.try_recv() {
+                match pkt {
+                    InPacket::Data(tag, v) => self.pending[from].push_back((tag, v)),
+                    InPacket::Poison(m) => {
+                        self.poisoned = Some(m);
+                        break;
+                    }
+                    InPacket::Down(m) => {
+                        if self.down[from].is_none() {
+                            self.down[from] = Some(m);
+                        }
+                    }
+                }
+            }
+        }
+        match &self.poisoned {
+            Some(m) => Err(Self::poisoned_err(m)),
+            None => Ok(()),
+        }
+    }
+
+    /// Blocking receive from `src` for the current operation tag —
+    /// identical matching, stashing, deadline, and poison semantics to
+    /// the thread transport, plus the peer-down path: a latched or
+    /// incoming `Down(src)` converts to a poisoned group naming the peer
+    /// and op tag rather than waiting out the deadline.
+    fn recv(&mut self, src: usize) -> Result<Vec<f64>> {
+        if let Some(m) = &self.poisoned {
+            return Err(Self::poisoned_err(m));
+        }
+        let tag = self.cur_tag;
+        if let Some(pos) = self.pending[src].iter().position(|(t, _)| *t == tag) {
+            let Some((_, v)) = self.pending[src].remove(pos) else {
+                return Err(self.poison(format!(
+                    "internal: stashed packet vanished (src {src}, tag {tag})"
+                )));
+            };
+            self.meter.record_recv(v.len());
+            return Ok(v);
+        }
+        if let Some(cause) = self.down[src].clone() {
+            // The peer is gone and everything it ever sent is already
+            // stashed — this message can never arrive.
+            return Err(self.peer_lost(src, tag, &cause));
+        }
+        // Deadline armed once per receive, as in the thread transport.
+        let expiry = self.deadline.map(|d| (Instant::now() + d, d));
+        loop {
+            let received = match expiry {
+                None => self.inbox.recv().map_err(|_| None),
+                Some((limit, budget)) => {
+                    let remaining = limit.saturating_duration_since(Instant::now());
+                    self.inbox.recv_timeout(remaining).map_err(|e| match e {
+                        RecvTimeoutError::Timeout => Some(budget),
+                        RecvTimeoutError::Disconnected => None,
+                    })
+                }
+            };
+            match received {
+                Ok((from, InPacket::Data(t, v))) => {
+                    if from == src && t == tag {
+                        self.meter.record_recv(v.len());
+                        return Ok(v);
+                    }
+                    self.pending[from].push_back((t, v));
+                }
+                Ok((_from, InPacket::Poison(m))) => {
+                    let err = Self::poisoned_err(&m);
+                    self.poisoned = Some(m);
+                    return Err(err);
+                }
+                Ok((from, InPacket::Down(m))) => {
+                    if from == src {
+                        return Err(self.peer_lost(src, tag, &m));
+                    }
+                    if self.down[from].is_none() {
+                        self.down[from] = Some(m);
+                    }
+                }
+                Err(Some(budget)) => {
+                    self.meter.timeouts += 1;
+                    telemetry::count(telemetry::Counter::Timeouts, 1);
+                    return Err(self.poison(format!(
+                        "rank {} timed out after {budget:?} waiting for rank {src} (op tag {tag})",
+                        self.rank,
+                    )));
+                }
+                Err(None) => {
+                    return Err(Error::Comm(format!(
+                        "recv {}←{src}: inbox closed",
+                        self.rank
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Receive with a length contract; a mismatch poisons the group.
+    fn recv_expect(&mut self, src: usize, len: usize) -> Result<Vec<f64>> {
+        let v = self.recv(src)?;
+        if v.len() != len {
+            return Err(self.poison(format!(
+                "payload length mismatch: rank {} expected {len} words from rank {src}, got {}",
+                self.rank,
+                v.len()
+            )));
+        }
+        Ok(v)
+    }
+
+    /// Allreduce protocol selected by the current topology (identical to
+    /// the thread transport's dispatch).
+    fn algo_for(&self, len: usize) -> Algo {
+        match self.topology {
+            Topology::Flat => proto::select_algo(self.size, len),
+            Topology::TwoLevel { node_size } => Algo::TwoLevel { node_size },
+        }
+    }
+
+    /// Shared body of the personalized exchanges (see the thread
+    /// transport — validation and poison semantics are identical).
+    fn all_to_all_inner(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: Option<&[usize]>,
+    ) -> Result<Vec<Vec<f64>>> {
+        self.meter.all_to_alls += 1;
+        let tag = self.begin_op();
+        let words: u64 = send.iter().map(|v| v.len() as u64).sum();
+        trace::mark(SpanKind::CollectiveStart, OpClass::AllToAll, tag, words);
+        let t0 = trace::now();
+        let u0 = telemetry::now();
+        let res = self.all_to_all_body(send, recv_lens);
+        trace::record(SpanKind::CollectiveWait, OpClass::AllToAll, tag, words, t0);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::gauge(telemetry::Gauge::PayloadWords, words);
+        telemetry::observe(telemetry::Hist::AllToAllWords, words);
+        telemetry::observe_since(telemetry::Hist::AllToAllNs, u0);
+        self.sync_allocs();
+        res
+    }
+
+    fn all_to_all_body(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: Option<&[usize]>,
+    ) -> Result<Vec<Vec<f64>>> {
+        let p = self.size;
+        if send.len() != p {
+            return Err(self.poison(format!(
+                "all_to_all: rank {} supplied {} buffers for {p} ranks",
+                self.rank,
+                send.len()
+            )));
+        }
+        if let Some(lens) = recv_lens {
+            if lens.len() != p {
+                return Err(self.poison(format!(
+                    "all_to_all: rank {} supplied {} receive lengths for {p} ranks",
+                    self.rank,
+                    lens.len()
+                )));
+            }
+            if send[self.rank].len() != lens[self.rank] {
+                return Err(self.poison(format!(
+                    "all_to_all: rank {} self-payload {} words != expected {}",
+                    self.rank,
+                    send[self.rank].len(),
+                    lens[self.rank]
+                )));
+            }
+        }
+        if p == 1 {
+            return Ok(send);
+        }
+        self.check_poison()?;
+        let mut out: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
+        for (dst, bufv) in send.into_iter().enumerate() {
+            if dst == self.rank {
+                out[dst] = bufv;
+            } else {
+                self.send_owned(dst, bufv)?;
+            }
+        }
+        for src in 0..p {
+            if src != self.rank {
+                out[src] = match recv_lens {
+                    Some(lens) => self.recv_expect(src, lens[src])?,
+                    None => self.recv(src)?,
+                };
+            }
+        }
+        Ok(out)
+    }
+
+    fn iall_to_all_start_body(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+        tag: u64,
+    ) -> Result<AllToAllHandle> {
+        let p = self.size;
+        if send.len() != p {
+            return Err(self.poison(format!(
+                "iall_to_all: rank {} supplied {} buffers for {p} ranks",
+                self.rank,
+                send.len()
+            )));
+        }
+        if recv_lens.len() != p {
+            return Err(self.poison(format!(
+                "iall_to_all: rank {} supplied {} receive lengths for {p} ranks",
+                self.rank,
+                recv_lens.len()
+            )));
+        }
+        if send[self.rank].len() != recv_lens[self.rank] {
+            return Err(self.poison(format!(
+                "iall_to_all: rank {} self-payload {} words != expected {}",
+                self.rank,
+                send[self.rank].len(),
+                recv_lens[self.rank]
+            )));
+        }
+        if p == 1 {
+            return Ok(AllToAllHandle {
+                state: A2aState::Ready(send),
+            });
+        }
+        self.check_poison()?;
+        let mut out: Vec<Vec<f64>> = (0..p).map(|_| Vec::new()).collect();
+        for (dst, bufv) in send.into_iter().enumerate() {
+            if dst == self.rank {
+                out[dst] = bufv;
+            } else {
+                self.send_owned(dst, bufv)?;
+            }
+        }
+        Ok(AllToAllHandle {
+            state: A2aState::Thread {
+                tag,
+                recv_lens: recv_lens.to_vec(),
+                out,
+            },
+        })
+    }
+
+    /// Receive side of an in-flight all-to-all, resumed under its tag.
+    fn iall_to_all_drain(
+        &mut self,
+        recv_lens: Vec<usize>,
+        mut out: Vec<Vec<f64>>,
+    ) -> Result<Vec<Vec<f64>>> {
+        for src in 0..self.size {
+            if src != self.rank {
+                out[src] = self.recv_expect(src, recv_lens[src])?;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Point-to-point seam of the shared collective engine — same wiring as
+/// the thread transport: metered framed sends, tag-matched
+/// length-contracted receives, pool recycling.
+impl Wire for ProcessComm {
+    fn wire_rank(&self) -> usize {
+        self.rank
+    }
+
+    fn wire_size(&self) -> usize {
+        self.size
+    }
+
+    fn wire_send(&mut self, dst: usize, data: &[f64]) -> Result<()> {
+        self.send_slice(dst, data)
+    }
+
+    fn wire_recv(&mut self, src: usize, len: usize) -> Result<Vec<f64>> {
+        self.recv_expect(src, len)
+    }
+
+    fn wire_recycle(&mut self, buf: Vec<f64>) {
+        self.pool.give(buf)
+    }
+}
+
+impl Communicator for ProcessComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn allreduce_sum(&mut self, buf: &mut [f64]) -> Result<()> {
+        self.meter.allreduces += 1;
+        let tag = self.begin_op();
+        let words = buf.len() as u64;
+        trace::mark(SpanKind::CollectiveStart, OpClass::Allreduce, tag, words);
+        let t0 = trace::now();
+        let u0 = telemetry::now();
+        let algo = self.algo_for(buf.len());
+        let res = if self.size == 1 {
+            Ok(())
+        } else {
+            self.check_poison()
+                .and_then(|_| proto::allreduce_dispatch(self, algo, buf, false))
+        };
+        trace::record(SpanKind::CollectiveWait, OpClass::Allreduce, tag, words, t0);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::gauge(telemetry::Gauge::PayloadWords, words);
+        telemetry::observe(telemetry::Hist::AllreduceWords, words);
+        telemetry::observe_since(telemetry::Hist::AllreduceNs, u0);
+        self.sync_allocs();
+        res
+    }
+
+    fn iallreduce_start(&mut self, buf: Vec<f64>) -> Result<ReduceHandle> {
+        self.meter.allreduces += 1;
+        let tag = self.begin_op();
+        let words = buf.len() as u64;
+        let t0 = trace::now();
+        let res = (|| {
+            if self.size == 1 {
+                return Ok(ReduceHandle {
+                    buf,
+                    state: HandleState::Done,
+                });
+            }
+            self.check_poison()?;
+            let algo = self.algo_for(buf.len());
+            let first_sent = proto::post_first_dispatch(self, algo, &buf)?;
+            Ok(ReduceHandle {
+                buf,
+                state: HandleState::Thread {
+                    algo,
+                    first_sent,
+                    tag,
+                },
+            })
+        })();
+        trace::record(SpanKind::CollectiveStart, OpClass::Allreduce, tag, words, t0);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::gauge(telemetry::Gauge::PayloadWords, words);
+        telemetry::observe(telemetry::Hist::AllreduceWords, words);
+        self.sync_allocs();
+        res
+    }
+
+    fn iallreduce_wait(&mut self, handle: ReduceHandle) -> Result<Vec<f64>> {
+        self.meter.collective_waits += 1;
+        let ReduceHandle { mut buf, state } = handle;
+        let words = buf.len() as u64;
+        let t0 = trace::now();
+        let u0 = telemetry::now();
+        let (tag, res) = match state {
+            HandleState::Done => (self.cur_tag, Ok(())),
+            HandleState::Thread {
+                algo,
+                first_sent,
+                tag,
+            } => {
+                // Resume under the operation tag assigned at start time.
+                self.cur_tag = tag;
+                let r = proto::allreduce_dispatch(self, algo, &mut buf, first_sent);
+                (tag, r)
+            }
+        };
+        trace::record(SpanKind::CollectiveWait, OpClass::Allreduce, tag, words, t0);
+        telemetry::observe_since(telemetry::Hist::WaitNs, u0);
+        self.sync_allocs();
+        res.map(|()| buf)
+    }
+
+    fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
+        self.begin_op();
+        if self.size == 1 {
+            return Ok(());
+        }
+        self.check_poison()?;
+        let g = Group::flat(self.size, self.rank);
+        let res = proto::broadcast_tree(self, &g, root, buf);
+        self.sync_allocs();
+        res
+    }
+
+    fn all_to_all(&mut self, send: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        self.all_to_all_inner(send, None)
+    }
+
+    fn all_to_all_expect(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        self.all_to_all_inner(send, Some(recv_lens))
+    }
+
+    fn iall_to_all_start(
+        &mut self,
+        send: Vec<Vec<f64>>,
+        recv_lens: &[usize],
+    ) -> Result<AllToAllHandle> {
+        self.meter.all_to_alls += 1;
+        let tag = self.begin_op();
+        let words: u64 = send.iter().map(|v| v.len() as u64).sum();
+        let t0 = trace::now();
+        let res = self.iall_to_all_start_body(send, recv_lens, tag);
+        trace::record(SpanKind::CollectiveStart, OpClass::AllToAll, tag, words, t0);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::gauge(telemetry::Gauge::PayloadWords, words);
+        telemetry::observe(telemetry::Hist::AllToAllWords, words);
+        self.sync_allocs();
+        res
+    }
+
+    fn iall_to_all_wait(&mut self, handle: AllToAllHandle) -> Result<Vec<Vec<f64>>> {
+        self.meter.collective_waits += 1;
+        let t0 = trace::now();
+        let u0 = telemetry::now();
+        let (tag, words_hint, res) = match handle.state {
+            A2aState::Ready(out) => {
+                let words: u64 = out.iter().map(|v| v.len() as u64).sum();
+                (self.cur_tag, words, Ok(out))
+            }
+            A2aState::Thread {
+                tag,
+                recv_lens,
+                out,
+            } => {
+                self.cur_tag = tag;
+                let words: u64 = recv_lens.iter().map(|&l| l as u64).sum();
+                (tag, words, self.iall_to_all_drain(recv_lens, out))
+            }
+        };
+        trace::record(SpanKind::CollectiveWait, OpClass::AllToAll, tag, words_hint, t0);
+        telemetry::observe_since(telemetry::Hist::WaitNs, u0);
+        self.sync_allocs();
+        res
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.begin_op();
+        if self.size == 1 {
+            return Ok(());
+        }
+        self.check_poison()?;
+        // Zero-payload recursive doubling, always flat (see ThreadComm).
+        let u0 = telemetry::now();
+        let g = Group::flat(self.size, self.rank);
+        let res = proto::allreduce_rd(self, &g, &mut [], false);
+        telemetry::count(telemetry::Counter::Collectives, 1);
+        telemetry::observe_since(telemetry::Hist::BarrierNs, u0);
+        self.sync_allocs();
+        res
+    }
+
+    fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
+
+    fn set_topology(&mut self, topology: Topology) {
+        self.topology = topology;
+    }
+
+    fn take_buf(&mut self, len: usize) -> Vec<f64> {
+        let v = self.take_buf_inner(len);
+        self.sync_allocs();
+        v
+    }
+
+    fn give_buf(&mut self, buf: Vec<f64>) {
+        self.pool.give(buf)
+    }
+
+    fn meter(&self) -> &CostMeter {
+        &self.meter
+    }
+
+    fn meter_mut(&mut self) -> &mut CostMeter {
+        &mut self.meter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::thread::{run_spmd, RABENSEIFNER_MIN_WORDS};
+
+    /// Run `f(rank, comm)` over a socket-backed local group, one thread
+    /// per rank, collecting per-rank results in rank order.
+    fn run_proc_spmd<T, F>(p: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut ProcessComm) -> T + Sync,
+    {
+        let comms = ProcessComm::local_group(p).unwrap();
+        let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(p);
+            for (rank, mut comm) in comms.into_iter().enumerate() {
+                let fref = &f;
+                handles.push(scope.spawn(move || (rank, fref(rank, &mut comm))));
+            }
+            for h in handles {
+                let (rank, val) = h.join().expect("process SPMD rank panicked");
+                out[rank] = Some(val);
+            }
+        });
+        out.into_iter().map(|v| v.unwrap()).collect()
+    }
+
+    #[test]
+    fn allreduce_sums_across_ranks_over_sockets() {
+        for p in [1usize, 2, 3, 5, 8] {
+            let results = run_proc_spmd(p, |rank, comm| {
+                let mut buf = vec![rank as f64, 1.0];
+                comm.allreduce_sum(&mut buf).unwrap();
+                buf
+            });
+            let expect = vec![(0..p).sum::<usize>() as f64, p as f64];
+            for r in results {
+                assert_eq!(r, expect, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_payloads_sum_over_sockets() {
+        for p in [3usize, 4, 7] {
+            let len = RABENSEIFNER_MIN_WORDS + 13;
+            let results = run_proc_spmd(p, move |rank, comm| {
+                let mut buf: Vec<f64> = (0..len).map(|i| (rank * len + i) as f64).collect();
+                comm.allreduce_sum(&mut buf).unwrap();
+                buf
+            });
+            for i in 0..len {
+                let expect: f64 = (0..p).map(|r| (r * len + i) as f64).sum();
+                for (rank, r) in results.iter().enumerate() {
+                    assert_eq!(r[i], expect, "p={p} rank={rank} idx={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn process_allreduce_is_bitwise_equal_to_thread() {
+        // Same irrational-ish inputs through both transports; the shared
+        // protocol engine must make the results bit-identical.
+        for p in [2usize, 4, 5] {
+            for len in [7usize, RABENSEIFNER_MIN_WORDS + 5] {
+                let input = move |rank: usize| -> Vec<f64> {
+                    (0..len)
+                        .map(|i| ((rank + 1) * (i + 3)) as f64 * 0.317 + 1.0 / (i + 1) as f64)
+                        .collect()
+                };
+                let via_thread = run_spmd(p, move |rank, comm| {
+                    let mut buf = input(rank);
+                    comm.allreduce_sum(&mut buf).unwrap();
+                    buf
+                });
+                let via_proc = run_proc_spmd(p, move |rank, comm| {
+                    let mut buf = input(rank);
+                    comm.allreduce_sum(&mut buf).unwrap();
+                    buf
+                });
+                for rank in 0..p {
+                    assert!(
+                        via_thread[rank] == via_proc[rank],
+                        "p={p} len={len} rank={rank}: transports disagree bitwise"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nonblocking_allreduce_is_bitwise_equal_to_blocking() {
+        for p in [2usize, 3, 5] {
+            for len in [7usize, RABENSEIFNER_MIN_WORDS + 5] {
+                let results = run_proc_spmd(p, move |rank, comm| {
+                    let data: Vec<f64> =
+                        (0..len).map(|i| ((rank + 1) * (i + 1)) as f64 * 0.37).collect();
+                    let mut blocking = data.clone();
+                    comm.allreduce_sum(&mut blocking).unwrap();
+                    let h = comm.iallreduce_start(data).unwrap();
+                    let nonblocking = comm.iallreduce_wait(h).unwrap();
+                    (blocking, nonblocking)
+                });
+                for (rank, (b, nb)) in results.iter().enumerate() {
+                    assert!(b == nb, "p={p} len={len} rank={rank}: bitwise mismatch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_topology_works_over_sockets_and_matches_closed_form() {
+        for (p, ns) in [(4usize, 2usize), (5, 2), (6, 3)] {
+            let len = 24usize;
+            let results = run_proc_spmd(p, move |rank, comm| {
+                comm.set_topology(Topology::TwoLevel { node_size: ns });
+                let mut buf = vec![rank as f64 + 0.5; len];
+                comm.allreduce_sum(&mut buf).unwrap();
+                (buf, *comm.meter())
+            });
+            let expect: f64 = (0..p).map(|r| r as f64 + 0.5).sum();
+            for (rank, (buf, m)) in results.iter().enumerate() {
+                assert_eq!(buf, &vec![expect; len], "p={p} ns={ns} rank={rank}");
+                let (msgs, words) =
+                    proto::expected_two_level_allreduce_sends(p, ns, rank, len);
+                assert_eq!(
+                    (m.msgs, m.words),
+                    (msgs, words),
+                    "p={p} ns={ns} rank={rank}: meter vs closed form"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_permutes_payloads_over_sockets() {
+        let p = 4;
+        let results = run_proc_spmd(p, |rank, comm| {
+            let send: Vec<Vec<f64>> = (0..p)
+                .map(|dst| vec![(rank * 10 + dst) as f64])
+                .collect();
+            comm.all_to_all(send).unwrap()
+        });
+        for (rank, got) in results.iter().enumerate() {
+            for (src, v) in got.iter().enumerate() {
+                assert_eq!(v, &[(src * 10 + rank) as f64]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_expect_and_nonblocking_agree_over_sockets() {
+        let p = 4;
+        let results = run_proc_spmd(p, |rank, comm| {
+            let send: Vec<Vec<f64>> = (0..p)
+                .map(|dst| vec![(rank * 10 + dst) as f64; rank + 1])
+                .collect();
+            let lens: Vec<usize> = (0..p).map(|src| src + 1).collect();
+            let blocking = comm.all_to_all_expect(send.clone(), &lens).unwrap();
+            let h = comm.iall_to_all_start(send, &lens).unwrap();
+            let nonblocking = comm.iall_to_all_wait(h).unwrap();
+            (blocking, nonblocking)
+        });
+        for (rank, (b, nb)) in results.iter().enumerate() {
+            assert!(b == nb, "rank={rank}");
+            for (src, v) in b.iter().enumerate() {
+                assert_eq!(v, &vec![(src * 10 + rank) as f64; src + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_preserves_payload_bits_exactly() {
+        // Broadcast a quiet-NaN with a distinctive mantissa: the frame
+        // codec must move raw bit patterns, not values.
+        let pattern: u64 = 0x7ff8_dead_beef_cafe;
+        let results = run_proc_spmd(3, move |rank, comm| {
+            let mut buf = if rank == 0 {
+                vec![f64::from_bits(pattern), 2.5]
+            } else {
+                vec![0.0, 0.0]
+            };
+            comm.broadcast(0, &mut buf).unwrap();
+            (buf[0].to_bits(), buf[1])
+        });
+        for (bits, x) in results {
+            assert_eq!(bits, pattern);
+            assert_eq!(x, 2.5);
+        }
+    }
+
+    #[test]
+    fn barrier_completes_over_sockets() {
+        run_proc_spmd(5, |_rank, comm| {
+            for _ in 0..3 {
+                comm.barrier().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn steady_state_allreduce_does_not_allocate() {
+        for (p, len) in [(4usize, 8usize), (3, 300)] {
+            run_proc_spmd(p, move |_rank, comm| {
+                let mut buf = vec![1.0; len];
+                for _ in 0..32 {
+                    comm.allreduce_sum(&mut buf).unwrap();
+                }
+                let warm = comm.meter().buf_allocs;
+                for _ in 0..16 {
+                    comm.allreduce_sum(&mut buf).unwrap();
+                }
+                assert_eq!(
+                    comm.meter().buf_allocs,
+                    warm,
+                    "pool missed after warmup (p={p}, len={len})"
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn stalled_peer_times_out_and_poisons_the_group() {
+        let results = run_proc_spmd(2, |rank, comm| {
+            comm.set_deadline(Some(Duration::from_millis(40)));
+            let mut buf = vec![rank as f64; 4];
+            if rank == 1 {
+                std::thread::sleep(Duration::from_millis(400));
+            }
+            let res = comm.allreduce_sum(&mut buf);
+            (res.err(), comm.meter().timeouts)
+        });
+        let (err0, t0) = &results[0];
+        let e0 = format!("{:?}", err0.as_ref().expect("rank 0 should time out"));
+        assert!(e0.contains("timed out"), "{e0}");
+        assert!(e0.contains("poisoned"), "{e0}");
+        assert_eq!(*t0, 1, "timeout must be metered");
+        let (err1, _) = &results[1];
+        let e1 = format!("{:?}", err1.as_ref().expect("rank 1 should see poison"));
+        assert!(e1.contains("poisoned"), "{e1}");
+    }
+
+    #[test]
+    fn dead_peer_socket_names_peer_and_op_tag() {
+        // Rank 1 drops its endpoint without participating — its sockets
+        // close, rank 0's reader latches EOF, and the pending collective
+        // must surface an Error::Comm naming the lost peer and the op
+        // tag (the in-process twin of the kill-a-child regression).
+        let comms = ProcessComm::local_group(2).unwrap();
+        let mut it = comms.into_iter();
+        let mut c0 = it.next().unwrap();
+        let c1 = it.next().unwrap();
+        drop(c1);
+        c0.set_deadline(Some(Duration::from_secs(5)));
+        let mut buf = vec![1.0; 4];
+        let err = c0.allreduce_sum(&mut buf).expect_err("peer is gone");
+        let msg = format!("{err:?}");
+        assert!(msg.contains("lost rank 1"), "{msg}");
+        assert!(msg.contains("op tag 1"), "{msg}");
+        assert!(msg.contains("poisoned"), "{msg}");
+        assert_eq!(c0.meter().timeouts, 0, "down peer must not wait out the deadline");
+    }
+
+    #[test]
+    fn child_spec_round_trips_through_env() {
+        std::env::set_var(ENV_ADDR, "127.0.0.1:12345");
+        std::env::set_var(ENV_RANK, "2");
+        std::env::set_var(ENV_RANKS, "4");
+        assert_eq!(
+            child_spec_from_env(),
+            Some(("127.0.0.1:12345".to_string(), 2, 4))
+        );
+        std::env::remove_var(ENV_ADDR);
+        std::env::remove_var(ENV_RANK);
+        std::env::remove_var(ENV_RANKS);
+        assert_eq!(child_spec_from_env(), None);
+    }
+}

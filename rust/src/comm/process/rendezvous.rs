@@ -1,0 +1,268 @@
+//! Rendezvous bootstrap for the multi-process socket transport.
+//!
+//! Rank 0 binds a loopback TCP listener ([`Rendezvous::bind`]) and hands
+//! its address to the other ranks (the launcher passes it via environment
+//! variables; externally launched ranks can receive it any way they
+//! like). Wire-up then proceeds in three steps, all little-endian `u64`
+//! words over plain TCP:
+//!
+//! 1. **HELLO** — every rank r ∈ 1..P dials rank 0 and sends
+//!    `[MAGIC, VERSION, P, r, port]` where `port` is r's own freshly
+//!    bound loopback listener. The stream stays open as the 0↔r link.
+//! 2. **MAP** — after collecting P−1 hellos, rank 0 answers each child
+//!    with `[MAGIC, P, port₁, …, port₍P₋₁₎]`: the full peer port table.
+//! 3. **PEER mesh** — rank r dials every lower rank q ∈ 1..r at its
+//!    advertised port and sends `[PEER_MAGIC, r]`; it then accepts one
+//!    connection from every higher rank. Listeners are bound *before*
+//!    the hello is sent, so a dial can never race its target's bind —
+//!    the kernel backlog holds early connections.
+//!
+//! The result is a full mesh: every pair of ranks shares one dedicated
+//! TCP stream, mirroring the thread transport's per-pair channel. Every
+//! bootstrap wait (accepts, dials, handshake reads) is bounded by
+//! [`BOOTSTRAP_TIMEOUT`] so a missing or crashed rank surfaces as
+//! `Error::Comm` instead of a hang, even before the group exists and its
+//! poison protocol can run.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::comm::process::ProcessComm;
+use crate::error::{Error, Result};
+
+/// Version word carried in every HELLO; bumped on wire-format changes so
+/// mismatched binaries fail the handshake instead of desynchronizing.
+pub(super) const WIRE_VERSION: u64 = 1;
+/// Marks rendezvous traffic (HELLO and MAP frames).
+const HELLO_MAGIC: u64 = 0xCABC_D001_4E11_0001;
+/// Marks peer-mesh identification frames.
+const PEER_MAGIC: u64 = 0xCABC_D001_4E11_0002;
+/// Bound on every bootstrap wait: generous enough for process spawn +
+/// dynamic linking on a loaded CI machine, small enough that a dead rank
+/// fails the job rather than wedging it.
+const BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(30);
+/// Accept/dial poll interval while waiting out the timeout.
+const POLL: Duration = Duration::from_millis(5);
+
+/// Rank 0's side of the bootstrap: a bound loopback listener whose
+/// address the launcher distributes to the other ranks.
+pub struct Rendezvous {
+    listener: TcpListener,
+    addr: String,
+}
+
+impl Rendezvous {
+    /// Bind a fresh loopback listener on an OS-assigned port.
+    pub fn bind() -> Result<Rendezvous> {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| Error::Comm(format!("rendezvous: bind failed: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Comm(format!("rendezvous: no local addr: {e}")))?
+            .to_string();
+        Ok(Rendezvous { listener, addr })
+    }
+
+    /// The `host:port` string peers dial (pass to [`connect`]).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Collect the P−1 hellos, answer each with the peer port map, and
+    /// become rank 0 of the group. Consumes the rendezvous.
+    pub fn accept(self, size: usize) -> Result<ProcessComm> {
+        if size == 0 {
+            return Err(Error::Comm("rendezvous: group size must be >= 1".into()));
+        }
+        let mut streams: Vec<Option<TcpStream>> = (0..size).map(|_| None).collect();
+        let mut ports: Vec<u64> = vec![0; size];
+        for _ in 1..size {
+            let mut s = accept_deadline(&self.listener, "rendezvous: waiting for a rank's hello")?;
+            arm_handshake_timeout(&s)?;
+            let hello = read_words::<5>(&mut s, "rendezvous: hello")?;
+            let [magic, version, their_size, rank, port] = hello;
+            if magic != HELLO_MAGIC {
+                return Err(Error::Comm(format!(
+                    "rendezvous: bad hello magic {magic:#x} (not a cabcd rank?)"
+                )));
+            }
+            if version != WIRE_VERSION {
+                return Err(Error::Comm(format!(
+                    "rendezvous: wire version mismatch: peer speaks v{version}, host v{WIRE_VERSION}"
+                )));
+            }
+            if their_size as usize != size {
+                return Err(Error::Comm(format!(
+                    "rendezvous: peer expects {their_size} ranks, host launched {size}"
+                )));
+            }
+            let r = rank as usize;
+            if r == 0 || r >= size {
+                return Err(Error::Comm(format!(
+                    "rendezvous: hello from out-of-range rank {r} (size {size})"
+                )));
+            }
+            if streams[r].is_some() {
+                return Err(Error::Comm(format!("rendezvous: duplicate hello from rank {r}")));
+            }
+            ports[r] = port;
+            streams[r] = Some(s);
+        }
+        let mut map = Vec::with_capacity(1 + size);
+        map.push(HELLO_MAGIC);
+        map.push(size as u64);
+        map.extend_from_slice(&ports[1..]);
+        for s in streams.iter_mut().flatten() {
+            write_words(s, &map, "rendezvous: port map")?;
+        }
+        ProcessComm::from_streams(0, size, streams)
+    }
+}
+
+/// Join a group as rank `rank` of `size` by dialing rank 0's rendezvous
+/// address — the entry point for externally launched ranks (the in-tree
+/// launcher calls it too, after re-exec'ing children with the address in
+/// their environment). Rank 0 itself must host via [`Rendezvous`].
+pub fn connect(addr: &str, rank: usize, size: usize) -> Result<ProcessComm> {
+    if rank == 0 || rank >= size {
+        return Err(Error::Comm(format!(
+            "connect: rank must be in 1..{size} (rank 0 hosts the rendezvous), got {rank}"
+        )));
+    }
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| Error::Comm(format!("connect: rank {rank} bind failed: {e}")))?;
+    let my_port = listener
+        .local_addr()
+        .map_err(|e| Error::Comm(format!("connect: rank {rank} no local addr: {e}")))?
+        .port() as u64;
+    let mut root = dial_deadline(addr, &format!("connect: rank {rank} dialing rank 0"))?;
+    arm_handshake_timeout(&root)?;
+    write_words(
+        &mut root,
+        &[HELLO_MAGIC, WIRE_VERSION, size as u64, rank as u64, my_port],
+        "connect: hello",
+    )?;
+    let head = read_words::<2>(&mut root, "connect: port map header")?;
+    if head[0] != HELLO_MAGIC || head[1] as usize != size {
+        return Err(Error::Comm(format!(
+            "connect: bad port map header [{:#x}, {}] (size {size})",
+            head[0], head[1]
+        )));
+    }
+    let mut ports = vec![0u64; size];
+    for port in ports.iter_mut().skip(1) {
+        *port = read_words::<1>(&mut root, "connect: port map")?[0];
+    }
+    let mut streams: Vec<Option<TcpStream>> = (0..size).map(|_| None).collect();
+    streams[0] = Some(root);
+    // Dial every lower peer…
+    for q in 1..rank {
+        let peer_addr = format!("127.0.0.1:{}", ports[q]);
+        let mut s = dial_deadline(&peer_addr, &format!("connect: rank {rank} dialing rank {q}"))?;
+        write_words(&mut s, &[PEER_MAGIC, rank as u64], "connect: peer hello")?;
+        streams[q] = Some(s);
+    }
+    // …and accept one connection from every higher peer.
+    for _ in rank + 1..size {
+        let mut s = accept_deadline(&listener, "connect: waiting for a higher rank")?;
+        arm_handshake_timeout(&s)?;
+        let hello = read_words::<2>(&mut s, "connect: peer hello")?;
+        if hello[0] != PEER_MAGIC {
+            return Err(Error::Comm(format!(
+                "connect: bad peer magic {:#x} at rank {rank}",
+                hello[0]
+            )));
+        }
+        let q = hello[1] as usize;
+        if q <= rank || q >= size {
+            return Err(Error::Comm(format!(
+                "connect: unexpected peer rank {q} dialing rank {rank}"
+            )));
+        }
+        if streams[q].is_some() {
+            return Err(Error::Comm(format!(
+                "connect: duplicate connection from rank {q}"
+            )));
+        }
+        streams[q] = Some(s);
+    }
+    ProcessComm::from_streams(rank, size, streams)
+}
+
+/// Bound every handshake read so a wedged peer cannot stall the
+/// bootstrap; [`ProcessComm::from_streams`] clears the timeout before the
+/// reader threads take over.
+fn arm_handshake_timeout(s: &TcpStream) -> Result<()> {
+    s.set_read_timeout(Some(BOOTSTRAP_TIMEOUT))
+        .map_err(|e| Error::Comm(format!("rendezvous: set_read_timeout failed: {e}")))
+}
+
+/// Accept one connection, polling non-blockingly until the bootstrap
+/// timeout expires (std's `TcpListener` has no native accept timeout).
+fn accept_deadline(listener: &TcpListener, what: &str) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::Comm(format!("{what}: set_nonblocking failed: {e}")))?;
+    let t0 = Instant::now();
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                let _ = listener.set_nonblocking(false);
+                s.set_nonblocking(false)
+                    .map_err(|e| Error::Comm(format!("{what}: unblock accepted stream: {e}")))?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if t0.elapsed() >= BOOTSTRAP_TIMEOUT {
+                    return Err(Error::Comm(format!(
+                        "{what}: no connection within {BOOTSTRAP_TIMEOUT:?}"
+                    )));
+                }
+                std::thread::sleep(POLL);
+            }
+            Err(e) => return Err(Error::Comm(format!("{what}: accept failed: {e}"))),
+        }
+    }
+}
+
+/// Dial with retries until the bootstrap timeout expires (covers the race
+/// where an externally launched rank dials before the host finishes
+/// binding).
+fn dial_deadline(addr: &str, what: &str) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if t0.elapsed() >= BOOTSTRAP_TIMEOUT {
+                    return Err(Error::Comm(format!(
+                        "{what}: {addr} unreachable within {BOOTSTRAP_TIMEOUT:?}: {e}"
+                    )));
+                }
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+fn write_words(s: &mut TcpStream, words: &[u64], what: &str) -> Result<()> {
+    let mut bytes = Vec::with_capacity(words.len() * 8);
+    for w in words {
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    s.write_all(&bytes)
+        .and_then(|_| s.flush())
+        .map_err(|e| Error::Comm(format!("{what}: write failed: {e}")))
+}
+
+fn read_words<const N: usize>(s: &mut TcpStream, what: &str) -> Result<[u64; N]> {
+    let mut bytes = [0u8; 8];
+    let mut out = [0u64; N];
+    for w in out.iter_mut() {
+        s.read_exact(&mut bytes)
+            .map_err(|e| Error::Comm(format!("{what}: read failed: {e}")))?;
+        *w = u64::from_le_bytes(bytes);
+    }
+    Ok(out)
+}

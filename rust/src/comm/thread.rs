@@ -9,8 +9,9 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
+use crate::comm::proto::{self, add_into, Group, Wire};
 use crate::comm::{
-    A2aState, Algo, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle,
+    A2aState, Algo, AllToAllHandle, Communicator, CostMeter, HandleState, ReduceHandle, Topology,
 };
 use crate::error::{Error, Result};
 use crate::telemetry;
@@ -64,32 +65,10 @@ pub struct ThreadComm {
     /// receive and converts an expiry into a poisoned group — so a dead or
     /// stalled peer is an `Error::Comm` on every rank, never a hang.
     deadline: Option<Duration>,
+    /// Collective topology ([`Communicator::set_topology`]): flat
+    /// single-level algorithms, or the hierarchical two-level composition.
+    topology: Topology,
     meter: CostMeter,
-}
-
-/// Largest power of two ≤ p (p ≥ 1).
-fn pof2_below(p: usize) -> usize {
-    if p.is_power_of_two() {
-        p
-    } else {
-        p.next_power_of_two() >> 1
-    }
-}
-
-/// Map a post-fold rank id back to its real rank (MPICH convention: the
-/// first `2·rem` real ranks collapse pairwise onto the odd member).
-fn real_rank(newrank: usize, rem: usize) -> usize {
-    if newrank < rem {
-        2 * newrank + 1
-    } else {
-        newrank + rem
-    }
-}
-
-fn add_into(acc: &mut [f64], v: &[f64]) {
-    for (a, b) in acc.iter_mut().zip(v) {
-        *a += b;
-    }
 }
 
 impl ThreadComm {
@@ -116,6 +95,7 @@ impl ThreadComm {
                 op_seq: 0,
                 cur_tag: 0,
                 deadline: None,
+                topology: Topology::Flat,
                 meter: CostMeter::default(),
             })
             .collect()
@@ -187,17 +167,6 @@ impl ThreadComm {
             )));
         }
         Ok(())
-    }
-
-    /// One protocol send that may have been posted already by
-    /// `iallreduce_start` (the flag is consumed by the first executed send).
-    fn send_round(&mut self, dst: usize, data: &[f64], skip: &mut bool) -> Result<()> {
-        if *skip {
-            *skip = false;
-            Ok(())
-        } else {
-            self.send_slice(dst, data)
-        }
     }
 
     fn poisoned_err(msg: &str) -> Error {
@@ -323,173 +292,20 @@ impl ThreadComm {
     }
 
     // ---- allreduce cores ------------------------------------------------
+    //
+    // The collective algorithms themselves (recursive doubling,
+    // Rabenseifner, the binomial broadcast tree, and the two-level
+    // composition) live in [`crate::comm::proto`], generic over the
+    // [`Wire`] point-to-point seam below — shared verbatim with the
+    // process transport so the two are bitwise identical.
 
-    fn select_algo(&self, len: usize) -> Algo {
-        let pof2 = pof2_below(self.size);
-        if len >= RABENSEIFNER_MIN_WORDS && len >= pof2 && pof2 >= 2 {
-            Algo::Rabenseifner
-        } else {
-            Algo::RecursiveDoubling
+    /// Allreduce protocol selected by the current topology: size dispatch
+    /// over the flat group, or the two-level composition.
+    fn algo_for(&self, len: usize) -> Algo {
+        match self.topology {
+            Topology::Flat => proto::select_algo(self.size, len),
+            Topology::TwoLevel { node_size } => Algo::TwoLevel { node_size },
         }
-    }
-
-    /// Fold phase shared by both algorithms: the `2·rem` lowest ranks
-    /// collapse pairwise onto the odd member; returns this rank's post-fold
-    /// id (`None` = folded out until the unfold).
-    fn fold(&mut self, buf: &mut [f64], rem: usize, skip: &mut bool) -> Result<Option<usize>> {
-        let rank = self.rank;
-        if rank < 2 * rem {
-            if rank % 2 == 0 {
-                self.send_round(rank + 1, buf, skip)?;
-                Ok(None)
-            } else {
-                let got = self.recv_expect(rank - 1, buf.len())?;
-                add_into(buf, &got);
-                self.give_buf_inner(got);
-                Ok(Some(rank / 2))
-            }
-        } else {
-            Ok(Some(rank - rem))
-        }
-    }
-
-    /// Unfold phase: the reduced result reaches the folded-out even ranks.
-    fn unfold(&mut self, buf: &mut [f64], rem: usize) -> Result<()> {
-        let rank = self.rank;
-        if rank < 2 * rem {
-            if rank % 2 == 0 {
-                let got = self.recv_expect(rank + 1, buf.len())?;
-                buf.copy_from_slice(&got);
-                self.give_buf_inner(got);
-            } else {
-                self.send_slice(rank - 1, buf)?;
-            }
-        }
-        Ok(())
-    }
-
-    /// Recursive doubling: ⌈log₂P⌉ pairwise exchange rounds of the full
-    /// payload. `skip_first_send` marks the round-0 send as already posted
-    /// (non-blocking start).
-    fn allreduce_rd(&mut self, buf: &mut [f64], skip_first_send: bool) -> Result<()> {
-        let p = self.size;
-        let pof2 = pof2_below(p);
-        let rem = p - pof2;
-        let mut skip = skip_first_send;
-        let newrank = self.fold(buf, rem, &mut skip)?;
-        if let Some(nr) = newrank {
-            let mut mask = 1usize;
-            while mask < pof2 {
-                let partner = real_rank(nr ^ mask, rem);
-                self.send_round(partner, buf, &mut skip)?;
-                let got = self.recv_expect(partner, buf.len())?;
-                add_into(buf, &got);
-                self.give_buf_inner(got);
-                mask <<= 1;
-            }
-        }
-        self.unfold(buf, rem)
-    }
-
-    /// Rabenseifner: recursive-halving reduce-scatter, then the mirrored
-    /// recursive-doubling allgather. The payload is split into `pof2`
-    /// near-equal contiguous chunks; chunk boundaries are closed-form so
-    /// the protocol allocates nothing beyond pooled message buffers.
-    fn allreduce_rab(&mut self, buf: &mut [f64], skip_first_send: bool) -> Result<()> {
-        let p = self.size;
-        let pof2 = pof2_below(p);
-        let rem = p - pof2;
-        let len = buf.len();
-        debug_assert!(pof2 >= 2 && len >= pof2);
-        let mut skip = skip_first_send;
-        let newrank = self.fold(buf, rem, &mut skip)?;
-        if let Some(nr) = newrank {
-            let base = len / pof2;
-            let ext = len % pof2;
-            // Element offset of chunk boundary i (first `ext` chunks get +1).
-            let displ = |i: usize| i * base + i.min(ext);
-            // (partner, keep_lo, keep_hi, sent_lo, sent_hi) in chunk units,
-            // logged for the mirrored allgather. log₂P ≤ 64 steps.
-            let mut steps = [(0usize, 0usize, 0usize, 0usize, 0usize); 64];
-            let mut nsteps = 0usize;
-            let (mut clo, mut chi) = (0usize, pof2);
-            let mut mask = pof2 >> 1;
-            // Reduce-scatter: each round, exchange half the live chunk span
-            // with the partner and accumulate into the kept half.
-            while mask > 0 {
-                let pn = nr ^ mask;
-                let partner = real_rank(pn, rem);
-                let mid = clo + (chi - clo) / 2;
-                let (klo, khi, slo, shi) = if nr < pn {
-                    (clo, mid, mid, chi)
-                } else {
-                    (mid, chi, clo, mid)
-                };
-                {
-                    let (lo_e, hi_e) = (displ(slo), displ(shi));
-                    self.send_round(partner, &buf[lo_e..hi_e], &mut skip)?;
-                }
-                let (klo_e, khi_e) = (displ(klo), displ(khi));
-                let got = self.recv_expect(partner, khi_e - klo_e)?;
-                add_into(&mut buf[klo_e..khi_e], &got);
-                self.give_buf_inner(got);
-                steps[nsteps] = (partner, klo, khi, slo, shi);
-                nsteps += 1;
-                clo = klo;
-                chi = khi;
-                mask >>= 1;
-            }
-            // Allgather: replay the exchanges in reverse, swapping roles —
-            // send the gathered kept range, receive the complementary one.
-            for i in (0..nsteps).rev() {
-                let (partner, klo, khi, slo, shi) = steps[i];
-                let (klo_e, khi_e) = (displ(klo), displ(khi));
-                self.send_slice(partner, &buf[klo_e..khi_e])?;
-                let (slo_e, shi_e) = (displ(slo), displ(shi));
-                let got = self.recv_expect(partner, shi_e - slo_e)?;
-                buf[slo_e..shi_e].copy_from_slice(&got);
-                self.give_buf_inner(got);
-            }
-        }
-        self.unfold(buf, rem)
-    }
-
-    /// The protocol's unique round-0 send, if this rank has one that
-    /// depends only on local data (everything except the folded-odd role).
-    /// Returns whether a send was posted.
-    fn post_first_send(&mut self, buf: &[f64], algo: Algo) -> Result<bool> {
-        let p = self.size;
-        let rank = self.rank;
-        let pof2 = pof2_below(p);
-        let rem = p - pof2;
-        if rank < 2 * rem {
-            if rank % 2 == 0 {
-                self.send_slice(rank + 1, buf)?;
-                return Ok(true);
-            }
-            // Folded-odd ranks must receive before their first send.
-            return Ok(false);
-        }
-        let nr = rank - rem;
-        match algo {
-            Algo::RecursiveDoubling => {
-                let partner = real_rank(nr ^ 1, rem);
-                self.send_slice(partner, buf)?;
-            }
-            Algo::Rabenseifner => {
-                let len = buf.len();
-                let base = len / pof2;
-                let ext = len % pof2;
-                let displ = |i: usize| i * base + i.min(ext);
-                let mask = pof2 >> 1;
-                let pn = nr ^ mask;
-                let mid = pof2 / 2;
-                let (slo, shi) = if nr < pn { (mid, pof2) } else { (0, mid) };
-                let partner = real_rank(pn, rem);
-                self.send_slice(partner, &buf[displ(slo)..displ(shi)])?;
-            }
-        }
-        Ok(true)
     }
 
     /// Shared body of the personalized exchanges. A wrong buffer (or
@@ -610,37 +426,33 @@ impl ThreadComm {
             }
             mask <<= 1;
         }
-        self.broadcast_inner(0, buf)
+        let g = Group::flat(self.size, self.rank);
+        proto::broadcast_tree(self, &g, 0, buf)
+    }
+}
+
+/// Point-to-point seam of the shared collective engine
+/// ([`crate::comm::proto`]): metered pooled sends, tag-matched
+/// length-contracted receives, pool recycling.
+impl Wire for ThreadComm {
+    fn wire_rank(&self) -> usize {
+        self.rank
     }
 
-    fn broadcast_inner(&mut self, root: usize, buf: &mut [f64]) -> Result<()> {
-        let p = self.size;
-        if p == 1 {
-            return Ok(());
-        }
-        let rel = (self.rank + p - root) % p;
-        // Receive phase.
-        let mut mask = 1usize;
-        while mask < p {
-            if rel & mask != 0 {
-                let src = (self.rank + p - mask) % p;
-                let got = self.recv_expect(src, buf.len())?;
-                buf.copy_from_slice(&got);
-                self.give_buf_inner(got);
-                break;
-            }
-            mask <<= 1;
-        }
-        // Send phase (from the highest mask below our receive level down).
-        mask >>= 1;
-        while mask > 0 {
-            if rel + mask < p {
-                let dst = (self.rank + mask) % p;
-                self.send_slice(dst, buf)?;
-            }
-            mask >>= 1;
-        }
-        Ok(())
+    fn wire_size(&self) -> usize {
+        self.size
+    }
+
+    fn wire_send(&mut self, dst: usize, data: &[f64]) -> Result<()> {
+        self.send_slice(dst, data)
+    }
+
+    fn wire_recv(&mut self, src: usize, len: usize) -> Result<Vec<f64>> {
+        self.recv_expect(src, len)
+    }
+
+    fn wire_recycle(&mut self, buf: Vec<f64>) {
+        self.give_buf_inner(buf)
     }
 }
 
@@ -660,13 +472,12 @@ impl Communicator for ThreadComm {
         trace::mark(SpanKind::CollectiveStart, OpClass::Allreduce, tag, words);
         let t0 = trace::now();
         let u0 = telemetry::now();
+        let algo = self.algo_for(buf.len());
         let res = if self.size == 1 {
             Ok(())
         } else {
-            self.check_poison().and_then(|_| match self.select_algo(buf.len()) {
-                Algo::RecursiveDoubling => self.allreduce_rd(buf, false),
-                Algo::Rabenseifner => self.allreduce_rab(buf, false),
-            })
+            self.check_poison()
+                .and_then(|_| proto::allreduce_dispatch(self, algo, buf, false))
         };
         trace::record(SpanKind::CollectiveWait, OpClass::Allreduce, tag, words, t0);
         telemetry::count(telemetry::Counter::Collectives, 1);
@@ -689,8 +500,8 @@ impl Communicator for ThreadComm {
                 });
             }
             self.check_poison()?;
-            let algo = self.select_algo(buf.len());
-            let first_sent = self.post_first_send(&buf, algo)?;
+            let algo = self.algo_for(buf.len());
+            let first_sent = proto::post_first_dispatch(self, algo, &buf)?;
             Ok(ReduceHandle {
                 buf,
                 state: HandleState::Thread {
@@ -723,10 +534,7 @@ impl Communicator for ThreadComm {
                 // Resume under the operation tag assigned at start time —
                 // collectives that ran in between used their own tags.
                 self.cur_tag = tag;
-                let r = match algo {
-                    Algo::RecursiveDoubling => self.allreduce_rd(&mut buf, first_sent),
-                    Algo::Rabenseifner => self.allreduce_rab(&mut buf, first_sent),
-                };
+                let r = proto::allreduce_dispatch(self, algo, &mut buf, first_sent);
                 (tag, r)
             }
         };
@@ -741,7 +549,8 @@ impl Communicator for ThreadComm {
             return Ok(());
         }
         self.check_poison()?;
-        self.broadcast_inner(root, buf)
+        let g = Group::flat(self.size, self.rank);
+        proto::broadcast_tree(self, &g, root, buf)
     }
 
     /// Direct personalized exchange: P−1 sends + P−1 receives per rank
@@ -815,9 +624,11 @@ impl Communicator for ThreadComm {
         }
         self.check_poison()?;
         // Zero-payload recursive doubling: counts the message rounds, no
-        // words.
+        // words. Always flat — a hierarchical barrier would add hops for
+        // a zero-word payload with nothing to gain.
         let u0 = telemetry::now();
-        let res = self.allreduce_rd(&mut [], false);
+        let g = Group::flat(self.size, self.rank);
+        let res = proto::allreduce_rd(self, &g, &mut [], false);
         telemetry::count(telemetry::Counter::Collectives, 1);
         telemetry::observe_since(telemetry::Hist::BarrierNs, u0);
         res
@@ -825,6 +636,10 @@ impl Communicator for ThreadComm {
 
     fn set_deadline(&mut self, deadline: Option<Duration>) {
         self.deadline = deadline;
+    }
+
+    fn set_topology(&mut self, topology: Topology) {
+        self.topology = topology;
     }
 
     fn take_buf(&mut self, len: usize) -> Vec<f64> {
@@ -919,7 +734,7 @@ pub fn expected_allreduce_sends(p: usize, rank: usize, len: usize) -> (u64, u64)
     if p <= 1 {
         return (0, 0);
     }
-    let pof2 = pof2_below(p);
+    let pof2 = proto::pof2_below(p);
     let rem = p - pof2;
     let rab = len >= RABENSEIFNER_MIN_WORDS && len >= pof2 && pof2 >= 2;
     let folded_even = rank < 2 * rem && rank % 2 == 0;

@@ -29,6 +29,9 @@
 //! [run]
 //! ranks = 4
 //! backend = native        # native | xla
+//! transport = thread      # thread | process (one OS process per rank)
+//! topology = flat         # flat | twolevel (hierarchical allreduce)
+//! # node_size = 4         # ranks per node (topology = twolevel only)
 //! artifact_dir = artifacts
 //! # trace = run.trace.json  # per-rank span trace (Chrome trace-event JSON)
 //! # telemetry = run.telemetry.json  # cluster health snapshots (+ .prom exposition)
@@ -91,6 +94,19 @@ pub struct SolverConfig {
 pub struct RunConfig {
     pub ranks: usize,
     pub backend: String,
+    /// Rank-group transport: `thread` (default; one OS thread per rank,
+    /// in-process channels) or `process` (one OS process per rank over
+    /// loopback TCP — see [`crate::comm::process`]). Trajectories, cost
+    /// meters, and certificates are bitwise-identical across the two.
+    pub transport: String,
+    /// Collective topology: `flat` (default; recursive doubling /
+    /// Rabenseifner over all ranks) or `twolevel` (hierarchical
+    /// allreduce — intra-node fan-in to a leader, flat reduction among
+    /// leaders, fan-out; see `node_size`).
+    pub topology: String,
+    /// Ranks per node for `topology = twolevel` (ignored under `flat`).
+    /// The transport clamps it to `[1, ranks]`.
+    pub node_size: usize,
     pub artifact_dir: PathBuf,
     /// When set, install a per-rank span tracer ([`crate::trace`]) for the
     /// run and write the merged Chrome trace-event JSON here (loadable in
@@ -131,6 +147,9 @@ impl Default for RunConfig {
         RunConfig {
             ranks: 1,
             backend: "native".into(),
+            transport: "thread".into(),
+            topology: "flat".into(),
+            node_size: 1,
             artifact_dir: PathBuf::from("artifacts"),
             trace: None,
             telemetry: None,
@@ -182,6 +201,9 @@ impl ExperimentConfig {
             run: RunConfig {
                 ranks: rn.usize_or("ranks", 1)?,
                 backend: rn.str("backend").unwrap_or("native").to_string(),
+                transport: rn.str("transport").unwrap_or("thread").to_string(),
+                topology: rn.str("topology").unwrap_or("flat").to_string(),
+                node_size: rn.usize_or("node_size", 1)?,
                 artifact_dir: PathBuf::from(rn.str("artifact_dir").unwrap_or("artifacts")),
                 trace: rn.str("trace").map(PathBuf::from),
                 telemetry: rn.str("telemetry").map(PathBuf::from),
@@ -193,6 +215,73 @@ impl ExperimentConfig {
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Serialize back to the INI dialect [`Self::from_str`] parses. The
+    /// process launcher ships the exact experiment to re-exec'd worker
+    /// ranks through the environment with this, so a parse → serialize →
+    /// parse cycle must be lossless: floats print with `{:?}` (shortest
+    /// round-trip form) and unset optional keys are omitted entirely.
+    pub fn to_ini(&self) -> String {
+        fn kv(out: &mut String, key: &str, value: impl std::fmt::Display) {
+            out.push_str(key);
+            out.push_str(" = ");
+            out.push_str(&value.to_string());
+            out.push('\n');
+        }
+        let mut s = String::new();
+        s.push_str("[dataset]\n");
+        kv(&mut s, "kind", &self.dataset.kind);
+        if let Some(name) = &self.dataset.name {
+            kv(&mut s, "name", name);
+        }
+        if let Some(path) = &self.dataset.path {
+            kv(&mut s, "path", path.display());
+        }
+        kv(&mut s, "scale", self.dataset.scale);
+        kv(&mut s, "seed", self.dataset.seed);
+        s.push_str("\n[solver]\n");
+        kv(&mut s, "method", &self.solver.method);
+        kv(&mut s, "b", self.solver.b);
+        kv(&mut s, "s", self.solver.s);
+        if let Some(lam) = self.solver.lam {
+            kv(&mut s, "lam", format!("{lam:?}"));
+        }
+        kv(&mut s, "iters", self.solver.iters);
+        kv(&mut s, "seed", self.solver.seed);
+        kv(&mut s, "record_every", self.solver.record_every);
+        kv(&mut s, "track_gram_cond", self.solver.track_gram_cond);
+        if let Some(tol) = self.solver.tol {
+            kv(&mut s, "tol", format!("{tol:?}"));
+        }
+        kv(&mut s, "overlap", self.solver.overlap);
+        kv(&mut s, "reg", &self.solver.reg);
+        kv(&mut s, "l1_ratio", format!("{:?}", self.solver.l1_ratio));
+        kv(&mut s, "local_iters", self.solver.local_iters);
+        s.push_str("\n[run]\n");
+        kv(&mut s, "ranks", self.run.ranks);
+        kv(&mut s, "backend", &self.run.backend);
+        kv(&mut s, "transport", &self.run.transport);
+        kv(&mut s, "topology", &self.run.topology);
+        kv(&mut s, "node_size", self.run.node_size);
+        kv(&mut s, "artifact_dir", self.run.artifact_dir.display());
+        if let Some(path) = &self.run.trace {
+            kv(&mut s, "trace", path.display());
+        }
+        if let Some(path) = &self.run.telemetry {
+            kv(&mut s, "telemetry", path.display());
+        }
+        if let Some(z) = self.run.telemetry_z {
+            kv(&mut s, "telemetry_z", format!("{z:?}"));
+        }
+        if let Some(ms) = self.run.comm_timeout_ms {
+            kv(&mut s, "comm_timeout_ms", ms);
+        }
+        kv(&mut s, "checkpoint_every", self.run.checkpoint_every);
+        if let Some(dir) = &self.run.checkpoint_dir {
+            kv(&mut s, "checkpoint_dir", dir.display());
+        }
+        s
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -233,6 +322,16 @@ impl ExperimentConfig {
             "native" | "xla" => {}
             other => return Err(Error::Config(format!("unknown backend {other:?}"))),
         }
+        match self.run.transport.as_str() {
+            "thread" | "process" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown transport {other:?} (want thread|process)"
+                )));
+            }
+        }
+        // Parse the topology here too, so a typo fails at config load.
+        self.topology()?;
         if self.run.ranks == 0 {
             return Err(Error::Config("ranks must be ≥ 1".into()));
         }
@@ -255,6 +354,28 @@ impl ExperimentConfig {
     /// Effective λ: explicit override or the spec's 1000·σ_min rule.
     pub fn effective_lambda(&self, spec_lambda: f64) -> f64 {
         self.solver.lam.unwrap_or(spec_lambda)
+    }
+
+    /// Parse the `[run] topology` / `node_size` pair into the transport's
+    /// [`Topology`](crate::comm::Topology) enum (fails loudly on unknown
+    /// strings and a zero `node_size` at config load).
+    pub fn topology(&self) -> Result<crate::comm::Topology> {
+        match self.run.topology.as_str() {
+            "flat" => Ok(crate::comm::Topology::Flat),
+            "twolevel" => {
+                if self.run.node_size == 0 {
+                    return Err(Error::Config(
+                        "topology twolevel needs node_size ≥ 1".into(),
+                    ));
+                }
+                Ok(crate::comm::Topology::TwoLevel {
+                    node_size: self.run.node_size,
+                })
+            }
+            other => Err(Error::Config(format!(
+                "unknown topology {other:?} (want flat|twolevel)"
+            ))),
+        }
     }
 
     /// Parse the `[solver] method` string into the engine's [`Method`]
@@ -405,6 +526,77 @@ mod tests {
         assert!(ExperimentConfig::from_str(&zero).is_err());
         let neg = format!("{base}[run]\ntelemetry_z = -1.5\n");
         assert!(ExperimentConfig::from_str(&neg).is_err());
+    }
+
+    #[test]
+    fn transport_and_topology_parse_and_default() {
+        let base = "[dataset]\nkind = synthetic\nname = a9a\n[solver]\nmethod = cabcd\n";
+        let cfg = ExperimentConfig::from_str(base).unwrap();
+        assert_eq!(cfg.run.transport, "thread");
+        assert_eq!(cfg.run.topology, "flat");
+        assert_eq!(cfg.topology().unwrap(), crate::comm::Topology::Flat);
+        let on = format!(
+            "{base}[run]\nranks = 4\ntransport = process\ntopology = twolevel\nnode_size = 2\n"
+        );
+        let cfg = ExperimentConfig::from_str(&on).unwrap();
+        assert_eq!(cfg.run.transport, "process");
+        assert_eq!(
+            cfg.topology().unwrap(),
+            crate::comm::Topology::TwoLevel { node_size: 2 }
+        );
+        let bad_transport = format!("{base}[run]\ntransport = mpi\n");
+        assert!(ExperimentConfig::from_str(&bad_transport).is_err());
+        let bad_topology = format!("{base}[run]\ntopology = torus\n");
+        assert!(ExperimentConfig::from_str(&bad_topology).is_err());
+        // node_size = 0 would make the hierarchy degenerate; reject it at
+        // config load (only when twolevel actually selects it).
+        let zero_ns = format!("{base}[run]\ntopology = twolevel\nnode_size = 0\n");
+        assert!(ExperimentConfig::from_str(&zero_ns).is_err());
+        let zero_ns_flat = format!("{base}[run]\nnode_size = 0\n");
+        assert!(ExperimentConfig::from_str(&zero_ns_flat).is_ok());
+    }
+
+    #[test]
+    fn to_ini_round_trips_every_field() {
+        // The process launcher ships configs to worker ranks as INI text,
+        // so serialization must survive a full parse cycle — including
+        // floats that need shortest-round-trip printing.
+        let text = r#"
+            [dataset]
+            kind = synthetic
+            name = abalone
+            scale = 4
+            seed = 9
+
+            [solver]
+            method = cabcd
+            b = 8
+            s = 4
+            lam = 0.1234567890123456789
+            iters = 600
+            seed = 7
+            record_every = 25
+            overlap = true
+            reg = elastic
+            l1_ratio = 0.3
+            local_iters = 50
+
+            [run]
+            ranks = 4
+            transport = process
+            topology = twolevel
+            node_size = 2
+            trace = run.trace.json
+            telemetry_z = 1.75
+            comm_timeout_ms = 5000
+            checkpoint_every = 10
+            checkpoint_dir = ckpts
+        "#;
+        let cfg = ExperimentConfig::from_str(text).unwrap();
+        let round = ExperimentConfig::from_str(&cfg.to_ini()).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{round:?}"));
+        // And the second generation is a fixed point.
+        assert_eq!(cfg.to_ini(), round.to_ini());
     }
 
     #[test]

@@ -6,18 +6,20 @@
 //! [`Session`](crate::engine::Session) entry point — the driver only
 //! chooses the partitioning for the method's layout.
 
+use std::process::{Child, Command};
 use std::time::{Duration, Instant};
 
 use crate::comm::cost::CostMeter;
+use crate::comm::process::{self, Rendezvous};
 use crate::comm::thread::run_spmd;
-use crate::comm::{Communicator, SerialComm};
+use crate::comm::{gather_to_root, Communicator, SerialComm, Topology};
 use crate::config::ExperimentConfig;
 use crate::engine::{checkpoint, FileSink, Layout, Method, Problem, Session};
 use crate::error::{Error, Result};
 use crate::gram::{ComputeBackend, NativeBackend};
 use crate::matrix::gen::{self, DatasetSpec};
 use crate::matrix::io::{read_libsvm, Dataset};
-use crate::metrics::History;
+use crate::metrics::{History, Reference};
 use crate::runtime::XlaBackend;
 use crate::solvers::cg;
 use crate::telemetry::{self, Registry, TelemetrySummary};
@@ -42,6 +44,12 @@ pub struct ExperimentReport {
     /// Regularizer name (`l2` runs the exact solvers; anything else runs
     /// the CA-Prox loops and reports the prox certificates below).
     pub reg: String,
+    /// Rank-group transport the solve ran over (`thread` or `process`).
+    pub transport: String,
+    /// Collective topology (`flat` or `twolevel`).
+    pub topology: String,
+    /// Ranks per node under `topology = twolevel` (1 under `flat`).
+    pub node_size: usize,
     /// Driver-level advisories (e.g. "prox run: ridge reference skipped")
     /// — surfaced on stderr and in the report JSON so nothing is dropped
     /// silently.
@@ -180,100 +188,211 @@ impl ShardSet {
 }
 
 /// Run one configured experiment end to end.
+///
+/// `[run] transport` picks the rank group's substrate: `thread` (default)
+/// solves inside this process over in-memory channels; `process` re-execs
+/// the current executable into P OS processes wired over loopback TCP
+/// (see [`maybe_run_process_child`] for the worker-side entry point).
+/// Both transports run the identical per-rank code ([`run_rank`]) against
+/// the [`Communicator`] seam and produce bitwise-identical trajectories,
+/// wire meters, and certificates.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
     cfg.validate()?;
+    if cfg.run.transport == "process" {
+        run_experiment_process(cfg)
+    } else {
+        run_experiment_threaded(cfg)
+    }
+}
+
+/// Everything both transports derive from the config before any rank
+/// starts. All of it is a pure function of the config, so process-mode
+/// workers recompute it locally and arrive at bitwise-identical inputs.
+struct Prepared {
+    method: Method,
+    ds: Dataset,
+    lam: f64,
+    opts: crate::solvers::SolverOpts,
+    topology: Topology,
+    reference: Option<Reference>,
+    notes: Vec<String>,
+}
+
+fn prepare(cfg: &ExperimentConfig, quiet: bool) -> Result<Prepared> {
     let method = cfg.method()?;
     let (ds, lam) = load_dataset(cfg)?;
-    let (d, n) = (ds.d(), ds.n());
-    let p = cfg.run.ranks;
     let opts = cfg.solver_opts(lam);
+    let topology = cfg.topology()?;
     let mut notes: Vec<String> = Vec::new();
-
     // Ground truth from serial CG (excluded from all meters). The prox
     // runs have no ridge ground truth — they report the duality-gap /
     // subgradient certificates instead, so the CG solve is skipped and
     // the report says so (nothing is dropped silently).
     let reference = if opts.reg.is_exact_l2() {
         let mut comm = SerialComm::new();
-        Some(cg::compute_reference(&ds.x, &ds.y, n, lam, &mut comm)?)
+        Some(cg::compute_reference(&ds.x, &ds.y, ds.n(), lam, &mut comm)?)
     } else {
         let note = format!(
             "reg = {}: ridge reference/CG ground truth does not apply; \
              reporting prox certificates instead of reference errors",
             cfg.solver.reg
         );
-        eprintln!("note: {note}");
+        if !quiet {
+            eprintln!("note: {note}");
+        }
         notes.push(note);
         None
     };
+    Ok(Prepared {
+        method,
+        ds,
+        lam,
+        opts,
+        topology,
+        reference,
+        notes,
+    })
+}
 
-    let start = Instant::now();
-    let shards = ShardSet::partition(method, &ds, p)?;
-    let tracing = cfg.run.trace.is_some();
-    let telemetering = cfg.run.telemetry.is_some();
-    let outcomes: Vec<RankOutcome> = run_spmd(p, |rank, comm| {
-        if tracing {
-            // Per-rank tracer lives in this worker's thread-local slot for
-            // the whole solve; reclaimed below even on error so a failed
-            // rank cannot leak an active tracer into a reused thread.
-            trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+/// The shared inputs one rank's solve needs, bundled so the thread
+/// closure and the process workers call literally the same [`run_rank`].
+struct RankPlan<'a> {
+    cfg: &'a ExperimentConfig,
+    method: Method,
+    opts: &'a crate::solvers::SolverOpts,
+    shards: &'a ShardSet,
+    reference: Option<&'a Reference>,
+    topology: Topology,
+    ranks: usize,
+}
+
+/// One rank's whole solve — both transports run this verbatim, so any
+/// divergence between them is a transport bug, not a driver bug.
+fn run_rank<C: Communicator>(plan: &RankPlan<'_>, rank: usize, comm: &mut C) -> RankOutcome {
+    let cfg = plan.cfg;
+    comm.set_topology(plan.topology);
+    if cfg.run.trace.is_some() {
+        // Per-rank tracer lives in this worker's thread-local slot for
+        // the whole solve; reclaimed below even on error so a failed
+        // rank cannot leak an active tracer into a reused thread.
+        trace::install(Tracer::new(rank, trace::DEFAULT_SPAN_CAPACITY));
+    }
+    if cfg.run.telemetry.is_some() {
+        // Same thread-local discipline as the tracer. Installed on
+        // every rank (the aggregation collective must be lockstep);
+        // only rank 0 prints the live progress line.
+        let mut reg = Registry::new(rank, plan.ranks).with_live(rank == 0);
+        if let Some(z) = cfg.run.telemetry_z {
+            reg = reg.with_z_threshold(z);
         }
-        if telemetering {
-            // Same thread-local discipline as the tracer. Installed on
-            // every rank (the aggregation collective must be lockstep);
-            // only rank 0 prints the live progress line.
-            let mut reg = Registry::new(rank, p).with_live(rank == 0);
-            if let Some(z) = cfg.run.telemetry_z {
-                reg = reg.with_z_threshold(z);
-            }
-            telemetry::install(reg);
+        telemetry::install(reg);
+    }
+    if let Some(ms) = cfg.run.comm_timeout_ms {
+        comm.set_deadline(Some(Duration::from_millis(ms)));
+    }
+    let run_one = || -> Result<History> {
+        if cfg.run.checkpoint_every > 0 {
+            let dir = cfg
+                .run
+                .checkpoint_dir
+                .clone()
+                .unwrap_or_else(|| cfg.run.artifact_dir.join("checkpoints"));
+            checkpoint::install(
+                Box::new(FileSink::new(dir)?),
+                cfg.run.checkpoint_every,
+            );
         }
-        if let Some(ms) = cfg.run.comm_timeout_ms {
-            comm.set_deadline(Some(Duration::from_millis(ms)));
-        }
-        let run_one = || -> Result<History> {
-            if cfg.run.checkpoint_every > 0 {
-                let dir = cfg
-                    .run
-                    .checkpoint_dir
-                    .clone()
-                    .unwrap_or_else(|| cfg.run.artifact_dir.join("checkpoints"));
-                checkpoint::install(
-                    Box::new(FileSink::new(dir)?),
-                    cfg.run.checkpoint_every,
-                );
-            }
-            let mut be = if method.needs_backend() {
-                Some(make_backend(cfg)?)
-            } else {
-                None
-            };
-            let problem = shards.problem(rank).with_reference(reference.as_ref());
-            let mut session = Session::new(&problem)
-                .opts(opts.clone())
-                .method(method)
-                .local_iters(cfg.solver.local_iters)
-                .comm(comm);
-            if let Some(be) = be.as_mut() {
-                session = session.backend(be.as_mut());
-            }
-            Ok(session.run()?.into_history())
+        let mut be = if plan.method.needs_backend() {
+            Some(make_backend(cfg)?)
+        } else {
+            None
         };
-        let history = run_one();
-        // Reclaim the thread-local sink even on error (reused worker
-        // threads must not inherit it), but remember where it wrote so an
-        // abort report can name the file to resume from.
-        let ckpt = checkpoint::describe_sink(rank);
-        checkpoint::take();
-        RankOutcome {
-            meter: *comm.meter(),
-            tracer: trace::take(),
-            registry: telemetry::take(),
-            checkpoint: ckpt,
-            history,
+        let problem = plan.shards.problem(rank).with_reference(plan.reference);
+        let mut session = Session::new(&problem)
+            .opts(plan.opts.clone())
+            .method(plan.method)
+            .local_iters(cfg.solver.local_iters)
+            .comm(comm);
+        if let Some(be) = be.as_mut() {
+            session = session.backend(be.as_mut());
         }
-    });
+        Ok(session.run()?.into_history())
+    };
+    let history = run_one();
+    // Reclaim the thread-local sink even on error (reused worker
+    // threads must not inherit it), but remember where it wrote so an
+    // abort report can name the file to resume from.
+    let ckpt = checkpoint::describe_sink(rank);
+    checkpoint::take();
+    RankOutcome {
+        meter: *comm.meter(),
+        tracer: trace::take(),
+        registry: telemetry::take(),
+        checkpoint: ckpt,
+        history,
+    }
+}
+
+fn run_experiment_threaded(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
+    let p = cfg.run.ranks;
+    let prep = prepare(cfg, false)?;
+    let (d, n) = (prep.ds.d(), prep.ds.n());
+    let start = Instant::now();
+    let shards = ShardSet::partition(prep.method, &prep.ds, p)?;
+    let plan = RankPlan {
+        cfg,
+        method: prep.method,
+        opts: &prep.opts,
+        shards: &shards,
+        reference: prep.reference.as_ref(),
+        topology: prep.topology,
+        ranks: p,
+    };
+    let outcomes: Vec<RankOutcome> =
+        run_spmd(p, |rank, comm| run_rank(&plan, rank, comm));
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    finish_report(
+        ReportCtx {
+            cfg,
+            dataset: prep.ds.name.clone(),
+            d,
+            n,
+            lambda: prep.lam,
+            opts: &prep.opts,
+            notes: prep.notes,
+            wall_ms,
+        },
+        outcomes,
+    )
+}
+
+/// Shared report-assembly context (everything `finish_report` needs
+/// besides the per-rank outcomes).
+struct ReportCtx<'a> {
+    cfg: &'a ExperimentConfig,
+    dataset: String,
+    d: usize,
+    n: usize,
+    lambda: f64,
+    opts: &'a crate::solvers::SolverOpts,
+    notes: Vec<String>,
+    wall_ms: f64,
+}
+
+/// Turn the per-rank outcomes into the final [`ExperimentReport`]: abort
+/// detection, note collection, trace/telemetry artifact writing, and the
+/// critical-path rollup — identical for both transports.
+fn finish_report(ctx: ReportCtx<'_>, outcomes: Vec<RankOutcome>) -> Result<ExperimentReport> {
+    let ReportCtx {
+        cfg,
+        dataset,
+        d,
+        n,
+        lambda,
+        opts,
+        mut notes,
+        wall_ms,
+    } = ctx;
     let meters: Vec<CostMeter> = outcomes.iter().map(|o| o.meter).collect();
     let aborted_at = abort_info(&outcomes, &meters);
     let (history, tracers, registries) = collect(outcomes, &mut notes);
@@ -337,19 +456,26 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
 
     let (critical_msgs, critical_words) = CostMeter::critical_path(&meters);
     Ok(ExperimentReport {
-        dataset: ds.name.clone(),
+        dataset,
         d,
         n,
         method: cfg.solver.method.clone(),
         b: opts.b,
         s: opts.s,
-        ranks: p,
-        lambda: lam,
+        ranks: cfg.run.ranks,
+        lambda,
         backend: cfg.run.backend.clone(),
         overlap: opts.overlap,
         reg: {
             use crate::prox::Regularizer;
             opts.reg.name().to_string()
+        },
+        transport: cfg.run.transport.clone(),
+        topology: cfg.run.topology.clone(),
+        node_size: if cfg.run.topology == "twolevel" {
+            cfg.run.node_size
+        } else {
+            1
         },
         notes,
         wall_ms,
@@ -362,6 +488,379 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
         telemetry: telemetry_summary,
         aborted_at,
     })
+}
+
+/// Environment variable carrying the serialized experiment config
+/// ([`ExperimentConfig::to_ini`]) to re-exec'd worker ranks.
+pub const ENV_CONFIG: &str = "CABCD_PROC_CONFIG";
+/// Extra argv words (whitespace-separated) appended when re-exec'ing
+/// worker ranks. The integration tests use it to route workers into the
+/// test harness's child entry point; wrapper scripts can use it to
+/// interpose a profiler or launcher shim.
+pub const ENV_SPAWN_ARGS: &str = "CABCD_PROC_SPAWN_ARGS";
+
+/// Worker-rank entry point for the process transport. When the
+/// `CABCD_PROC_*` rendezvous environment is present this process was
+/// re-exec'd (or externally launched) as a worker rank: parse the config
+/// shipped in [`ENV_CONFIG`], run the rank via [`run_process_child`], and
+/// return `Ok(true)` — the caller should then exit without doing anything
+/// else. Returns `Ok(false)` in a normal (non-worker) process. Any binary
+/// that may host `transport = process` experiments must call this first
+/// thing in `main`, because the launcher re-execs the current executable.
+pub fn maybe_run_process_child() -> Result<bool> {
+    let Some((addr, rank, ranks)) = process::child_spec_from_env() else {
+        return Ok(false);
+    };
+    let text = std::env::var(ENV_CONFIG).map_err(|_| {
+        Error::Comm(format!(
+            "worker rank {rank}: {ENV_CONFIG} is not set (the launcher ships \
+             the experiment config through the environment)"
+        ))
+    })?;
+    let cfg = ExperimentConfig::from_str(&text)?;
+    run_process_child(&cfg, &addr, rank, ranks)?;
+    Ok(true)
+}
+
+/// Run one worker rank of a process-transport experiment: dial the
+/// rendezvous, solve, then feed the outcome gathers. Deterministic
+/// preparation (dataset generation, partitioning, the CG reference) is
+/// recomputed locally — every rank derives bitwise-identical inputs from
+/// the shared config, so nothing but collective payloads crosses the
+/// wire. Externally launched ranks (outside the in-tree launcher) call
+/// this too, with the rendezvous address distributed however they like.
+pub fn run_process_child(
+    cfg: &ExperimentConfig,
+    addr: &str,
+    rank: usize,
+    ranks: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    if ranks != cfg.run.ranks {
+        return Err(Error::Comm(format!(
+            "worker rank {rank}: launched into a {ranks}-rank group but the \
+             config says ranks = {}",
+            cfg.run.ranks
+        )));
+    }
+    let prep = prepare(cfg, true)?;
+    let shards = ShardSet::partition(prep.method, &prep.ds, ranks)?;
+    let mut comm = process::connect(addr, rank, ranks)?;
+    let plan = RankPlan {
+        cfg,
+        method: prep.method,
+        opts: &prep.opts,
+        shards: &shards,
+        reference: prep.reference.as_ref(),
+        topology: prep.topology,
+        ranks,
+    };
+    let outcome = run_rank(&plan, rank, &mut comm);
+    let solve_err = outcome.history.as_ref().err().map(|e| e.to_string());
+    // Feed the outcome gathers even when the solve failed locally — the
+    // status blob carries the error, so the parent's report names it.
+    // Only a broken group (the gather itself erroring) skips this.
+    gather_rank_outcomes(&mut comm, &outcome)?;
+    match solve_err {
+        None => Ok(()),
+        Some(e) => Err(Error::Comm(format!("rank {rank} solve failed: {e}"))),
+    }
+}
+
+fn run_experiment_process(cfg: &ExperimentConfig) -> Result<ExperimentReport> {
+    let p = cfg.run.ranks;
+    let prep = prepare(cfg, false)?;
+    let (d, n) = (prep.ds.d(), prep.ds.n());
+    let start = Instant::now();
+    let shards = ShardSet::partition(prep.method, &prep.ds, p)?;
+
+    let rdv = Rendezvous::bind()?;
+    let mut children = spawn_worker_ranks(cfg, rdv.addr(), p)?;
+    let mut comm = match rdv.accept(p) {
+        Ok(c) => c,
+        Err(e) => {
+            reap_children(&mut children, true);
+            return Err(e);
+        }
+    };
+    let plan = RankPlan {
+        cfg,
+        method: prep.method,
+        opts: &prep.opts,
+        shards: &shards,
+        reference: prep.reference.as_ref(),
+        topology: prep.topology,
+        ranks: p,
+    };
+    let own = run_rank(&plan, 0, &mut comm);
+    let gathered = gather_rank_outcomes(&mut comm, &own);
+    let gather_ok = matches!(gathered, Ok(Some(_)));
+    // Closing the sockets first lets a worker blocked on a receive fail
+    // fast instead of waiting out its deadline before it can exit.
+    drop(comm);
+    // When the gather completed, every worker finished its part of the
+    // epilogue and is exiting — wait for clean statuses. When it did not,
+    // waiting risks joining a wedged process: kill instead.
+    let exit_notes = reap_children(&mut children, !gather_ok);
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let mut notes = prep.notes;
+    notes.extend(exit_notes);
+    let outcomes = match gathered {
+        Ok(Some(remote)) => {
+            let mut v = Vec::with_capacity(p);
+            v.push(own);
+            v.extend(remote);
+            v
+        }
+        // `gather_to_root` always yields the root payload on rank 0, but
+        // degrade gracefully rather than panic if that ever breaks.
+        Ok(None) => parent_view_outcomes(own, p, "outcome gather returned no root payload"),
+        Err(e) => parent_view_outcomes(own, p, &e.to_string()),
+    };
+    finish_report(
+        ReportCtx {
+            cfg,
+            dataset: prep.ds.name.clone(),
+            d,
+            n,
+            lambda: prep.lam,
+            opts: &prep.opts,
+            notes,
+            wall_ms,
+        },
+        outcomes,
+    )
+}
+
+/// Re-exec the current executable into worker ranks 1..P, handing each
+/// its rendezvous coordinates and the serialized config through the
+/// environment. Workers inherit stdout/stderr so their diagnostics land
+/// in the launcher's streams.
+fn spawn_worker_ranks(cfg: &ExperimentConfig, addr: &str, ranks: usize) -> Result<Vec<Child>> {
+    let exe = std::env::current_exe()
+        .map_err(|e| Error::Comm(format!("launcher: current_exe unavailable: {e}")))?;
+    let extra: Vec<String> = std::env::var(ENV_SPAWN_ARGS)
+        .map(|v| v.split_whitespace().map(String::from).collect())
+        .unwrap_or_default();
+    let ini = cfg.to_ini();
+    let mut children: Vec<Child> = Vec::with_capacity(ranks.saturating_sub(1));
+    for rank in 1..ranks {
+        let spawned = Command::new(&exe)
+            .args(&extra)
+            .env(process::ENV_ADDR, addr)
+            .env(process::ENV_RANK, rank.to_string())
+            .env(process::ENV_RANKS, ranks.to_string())
+            .env(ENV_CONFIG, &ini)
+            .spawn();
+        match spawned {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                reap_children(&mut children, true);
+                return Err(Error::Comm(format!(
+                    "launcher: spawning worker rank {rank} failed: {e}"
+                )));
+            }
+        }
+    }
+    Ok(children)
+}
+
+/// Wait for (or, with `kill`, terminate) the worker processes. Returns a
+/// note per worker that did not exit cleanly.
+fn reap_children(children: &mut Vec<Child>, kill: bool) -> Vec<String> {
+    let mut notes = Vec::new();
+    for (i, child) in children.iter_mut().enumerate() {
+        let rank = i + 1;
+        if kill {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => notes.push(format!("worker rank {rank} exited with {status}")),
+            Err(e) => notes.push(format!("worker rank {rank} could not be reaped: {e}")),
+        }
+    }
+    children.clear();
+    notes
+}
+
+/// Fallback outcome set when the epilogue gather itself failed (a worker
+/// died, or the group poisoned before the gathers ran): the report keeps
+/// rank 0's own view and records why the other ranks' outcomes are
+/// missing. Their meters read zero — the critical-path rollup is then a
+/// lower bound, which the abort note makes inspectable.
+fn parent_view_outcomes(own: RankOutcome, ranks: usize, why: &str) -> Vec<RankOutcome> {
+    let mut v = Vec::with_capacity(ranks);
+    v.push(own);
+    for rank in 1..ranks {
+        v.push(RankOutcome {
+            history: Err(Error::Comm(format!(
+                "rank {rank} outcome not collected: {why}"
+            ))),
+            tracer: None,
+            registry: None,
+            meter: CostMeter::default(),
+            checkpoint: None,
+        });
+    }
+    v
+}
+
+/// Post-solve epilogue every process-transport rank runs in lockstep:
+/// three [`gather_to_root`] collectives move each rank's status + wire
+/// meter, span trace, and telemetry registry to rank 0. Returns the
+/// decoded outcomes for ranks 1..P on rank 0, `None` elsewhere. Runs
+/// after [`run_rank`] reclaimed the rank's tracer/registry, so the
+/// epilogue's own traffic never contaminates the measurements.
+fn gather_rank_outcomes<C: Communicator>(
+    comm: &mut C,
+    own: &RankOutcome,
+) -> Result<Option<Vec<RankOutcome>>> {
+    let status = encode_status(own);
+    let trace_words = own.tracer.as_ref().map(Tracer::to_words).unwrap_or_default();
+    let telem_words = own
+        .registry
+        .as_ref()
+        .map(Registry::export_words)
+        .unwrap_or_default();
+    let statuses = gather_to_root(comm, &status)?;
+    let traces = gather_to_root(comm, &trace_words)?;
+    let telems = gather_to_root(comm, &telem_words)?;
+    let (Some(statuses), Some(traces), Some(telems)) = (statuses, traces, telems) else {
+        return Ok(None);
+    };
+    let mut remote = Vec::with_capacity(statuses.len().saturating_sub(1));
+    for rank in 1..statuses.len() {
+        let (ok, meter, err, checkpoint) =
+            decode_status(&statuses[rank]).ok_or_else(|| {
+                Error::Comm(format!("malformed status payload from rank {rank}"))
+            })?;
+        let tracer = if traces[rank].is_empty() {
+            None
+        } else {
+            Some(Tracer::from_words(&traces[rank]).ok_or_else(|| {
+                Error::Comm(format!("malformed trace payload from rank {rank}"))
+            })?)
+        };
+        let registry = if telems[rank].is_empty() {
+            None
+        } else {
+            Some(Registry::from_export_words(&telems[rank]).ok_or_else(|| {
+                Error::Comm(format!("malformed telemetry payload from rank {rank}"))
+            })?)
+        };
+        remote.push(RankOutcome {
+            // Worker histories stay worker-local: the report's trajectory
+            // is rank 0's (bitwise-identical across ranks by SPMD), so
+            // only success/failure and the failure message travel.
+            history: if ok {
+                Ok(History::default())
+            } else {
+                Err(Error::Comm(err))
+            },
+            tracer,
+            registry,
+            meter,
+            checkpoint,
+        });
+    }
+    Ok(Some(remote))
+}
+
+/// Encode one rank's post-solve status for the epilogue gather: ok flag,
+/// the 10 [`CostMeter`] fields (bit patterns), the failure message, and
+/// the checkpoint path. Strings travel one byte per word — they are a few
+/// dozen bytes and cross the wire exactly once.
+fn encode_status(own: &RankOutcome) -> Vec<f64> {
+    let mut out = Vec::new();
+    out.push(if own.history.is_ok() { 1.0 } else { 0.0 });
+    let m = &own.meter;
+    for v in [
+        m.msgs,
+        m.words,
+        m.recv_msgs,
+        m.recv_words,
+        m.allreduces,
+        m.all_to_alls,
+        m.collective_waits,
+        m.buf_allocs,
+        m.retries,
+        m.timeouts,
+    ] {
+        out.push(f64::from_bits(v));
+    }
+    let err = match &own.history {
+        Err(e) => e.to_string(),
+        Ok(_) => String::new(),
+    };
+    push_str_words(&mut out, &err);
+    match &own.checkpoint {
+        Some(path) => {
+            out.push(1.0);
+            push_str_words(&mut out, path);
+        }
+        None => out.push(0.0),
+    }
+    out
+}
+
+fn decode_status(words: &[f64]) -> Option<(bool, CostMeter, String, Option<String>)> {
+    let mut pos = 0usize;
+    let ok = *words.first()? == 1.0;
+    pos += 1;
+    let mut fields = [0u64; 10];
+    for f in fields.iter_mut() {
+        *f = words.get(pos)?.to_bits();
+        pos += 1;
+    }
+    let meter = CostMeter {
+        msgs: fields[0],
+        words: fields[1],
+        recv_msgs: fields[2],
+        recv_words: fields[3],
+        allreduces: fields[4],
+        all_to_alls: fields[5],
+        collective_waits: fields[6],
+        buf_allocs: fields[7],
+        retries: fields[8],
+        timeouts: fields[9],
+    };
+    let err = read_str_words(words, &mut pos)?;
+    let has_ckpt = *words.get(pos)?;
+    pos += 1;
+    let checkpoint = if has_ckpt == 1.0 {
+        Some(read_str_words(words, &mut pos)?)
+    } else {
+        None
+    };
+    if pos != words.len() {
+        return None;
+    }
+    Some((ok, meter, err, checkpoint))
+}
+
+fn push_str_words(out: &mut Vec<f64>, s: &str) {
+    out.push(s.len() as f64);
+    out.extend(s.bytes().map(f64::from));
+}
+
+fn read_str_words(words: &[f64], pos: &mut usize) -> Option<String> {
+    let len = *words.get(*pos)?;
+    *pos += 1;
+    if !len.is_finite() || len < 0.0 || len > 1e6 {
+        return None;
+    }
+    let len = len as usize;
+    let mut bytes = Vec::with_capacity(len);
+    for _ in 0..len {
+        let b = *words.get(*pos)?;
+        *pos += 1;
+        if !(0.0..=255.0).contains(&b) || b.fract() != 0.0 {
+            return None;
+        }
+        bytes.push(b as u8);
+    }
+    String::from_utf8(bytes).ok()
 }
 
 impl ExperimentReport {
@@ -396,6 +895,9 @@ impl ExperimentReport {
             ("ranks", num(self.ranks as f64)),
             ("lambda", num(self.lambda)),
             ("backend", string(&self.backend)),
+            ("transport", string(&self.transport)),
+            ("topology", string(&self.topology)),
+            ("node_size", num(self.node_size as f64)),
             ("overlap", num(if self.overlap { 1.0 } else { 0.0 })),
             ("reg", string(&self.reg)),
             ("notes", notes),
@@ -586,6 +1088,9 @@ mod tests {
             run: RunConfig {
                 ranks,
                 backend: "native".into(),
+                transport: "thread".into(),
+                topology: "flat".into(),
+                node_size: 1,
                 artifact_dir: "artifacts".into(),
                 trace: None,
                 telemetry: None,
@@ -912,6 +1417,92 @@ mod tests {
         assert!(json.contains("\"collectives_done\""), "{json}");
         assert!(json.contains("\"retries\""), "{json}");
         std::fs::remove_file(&blocker).ok();
+    }
+
+    #[test]
+    fn report_json_names_transport_and_topology() {
+        let report = run_experiment(&cfg("cabcd", 2)).unwrap();
+        assert_eq!(report.transport, "thread");
+        assert_eq!(report.topology, "flat");
+        let json = report.to_json();
+        assert!(json.contains("\"transport\":\"thread\""), "{json}");
+        assert!(json.contains("\"topology\":\"flat\""), "{json}");
+        assert!(json.contains("\"node_size\":1"), "{json}");
+    }
+
+    #[test]
+    fn twolevel_topology_is_trajectory_neutral_over_threads() {
+        // Hierarchical allreduce reroutes the wire protocol and may
+        // re-associate the sum (a single 4-rank node accumulates
+        // ((r0+r1)+r2)+r3 where recursive doubling computes
+        // (r0+r1)+(r2+r3)), so the trajectory agrees to rounding — not
+        // bitwise — while rank 0, now the node leader, sends strictly
+        // more messages (3 star hops vs 2 recursive-doubling hops per
+        // allreduce).
+        let flat = run_experiment(&cfg("cabcd", 4)).unwrap();
+        let mut c = cfg("cabcd", 4);
+        c.run.topology = "twolevel".into();
+        c.run.node_size = 4;
+        let hier = run_experiment(&c).unwrap();
+        assert_eq!(hier.topology, "twolevel");
+        assert_eq!(hier.node_size, 4);
+        assert!(
+            (flat.final_sol_err - hier.final_sol_err).abs()
+                <= 1e-9 + 1e-6 * flat.final_sol_err.abs(),
+            "two-level topology perturbed the trajectory beyond rounding: \
+             flat {} vs twolevel {}",
+            flat.final_sol_err,
+            hier.final_sol_err
+        );
+        assert_eq!(flat.history.meter.allreduces, hier.history.meter.allreduces);
+        assert!(
+            hier.history.meter.msgs > flat.history.meter.msgs,
+            "leader fan-out must cost more messages than recursive doubling \
+             (hier {} vs flat {})",
+            hier.history.meter.msgs,
+            flat.history.meter.msgs
+        );
+        assert!(hier.to_json().contains("\"topology\":\"twolevel\""));
+    }
+
+    #[test]
+    fn status_blob_round_trips_ok_and_error_shapes() {
+        let mut meter = CostMeter::default();
+        meter.record_send(7);
+        meter.record_recv(9);
+        meter.timeouts = (1 << 60) + 3; // bit-pattern transport, not 2^53-limited
+        let ok = RankOutcome {
+            history: Ok(History::default()),
+            tracer: None,
+            registry: None,
+            meter,
+            checkpoint: Some("ckpts/rank1.ckpt".into()),
+        };
+        let (is_ok, m, err, ckpt) = decode_status(&encode_status(&ok)).unwrap();
+        assert!(is_ok);
+        assert_eq!(m, meter);
+        assert_eq!(err, "");
+        assert_eq!(ckpt.as_deref(), Some("ckpts/rank1.ckpt"));
+
+        let failed = RankOutcome {
+            history: Err(Error::Comm("rank 2 lost rank 1 (op tag 7)".into())),
+            tracer: None,
+            registry: None,
+            meter: CostMeter::default(),
+            checkpoint: None,
+        };
+        let (is_ok, _, err, ckpt) = decode_status(&encode_status(&failed)).unwrap();
+        assert!(!is_ok);
+        assert!(err.contains("lost rank 1"), "{err}");
+        assert_eq!(ckpt, None);
+
+        // Truncated and trailing-garbage blobs must be rejected, not
+        // misread.
+        let blob = encode_status(&ok);
+        assert!(decode_status(&blob[..blob.len() - 1]).is_none());
+        let mut extended = blob.clone();
+        extended.push(0.0);
+        assert!(decode_status(&extended).is_none());
     }
 
     #[test]

@@ -3,7 +3,9 @@
 
 pub mod driver;
 
-pub use driver::{run_experiment, AbortInfo, ExperimentReport};
+pub use driver::{
+    maybe_run_process_child, run_experiment, run_process_child, AbortInfo, ExperimentReport,
+};
 
 use crate::error::Result;
 use crate::matrix::io::Dataset;

@@ -77,6 +77,29 @@ pub fn measured_allreduce_cost(p: f64, len: f64) -> (f64, f64) {
     }
 }
 
+/// Closed-form per-rank (messages, words) of one **two-level** allreduce
+/// of `len` words over `p` ranks with node size `node_size`, mirroring
+/// `comm::expected_two_level_allreduce_sends` at full-node geometries:
+/// returns `((leader_msgs, leader_words), (member_msgs, member_words))`.
+/// Members send their payload once to the node leader; leaders pay the
+/// flat [`measured_allreduce_cost`] over the `⌈P/node_size⌉` leader group
+/// plus one fan-out copy per member. On a cluster only the leader-group
+/// term crosses the network — the model's account of why the hierarchy
+/// wins when intra-node links are cheap.
+pub fn two_level_allreduce_cost(p: f64, node_size: f64, len: f64) -> ((f64, f64), (f64, f64)) {
+    let ns = node_size.clamp(1.0, p.max(1.0));
+    let leaders = (p / ns).ceil();
+    let (mut msgs, mut words) = if leaders >= 2.0 {
+        measured_allreduce_cost(leaders, len)
+    } else {
+        (0.0, 0.0)
+    };
+    let members = ns - 1.0;
+    msgs += members;
+    words += members * len;
+    ((msgs, words), (1.0, len))
+}
+
 /// Critical-path costs.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AlgoCosts {
@@ -291,6 +314,48 @@ mod tests {
         let c = AlgoCosts::of_wire(Method::Bcd, &p, Wire::Measured);
         assert!((c.latency - 100.0 * 6.0).abs() < 1e-9);
         assert!((c.bandwidth - 100.0 * 44.0 * 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_level_cost_matches_integer_closed_form() {
+        // Full-node, power-of-two-leader geometries: the continuous model
+        // must agree exactly with the communicator's integer closed form
+        // (leader = rank 0, member = rank 1) in both the RD and the
+        // Rabenseifner leader-group regimes.
+        for (p, ns) in [(4usize, 2usize), (8, 4), (16, 4)] {
+            for len in [32usize, 2144] {
+                let ((lm, lw), (mm, mw)) =
+                    two_level_allreduce_cost(p as f64, ns as f64, len as f64);
+                let (elm, elw) = crate::comm::expected_two_level_allreduce_sends(p, ns, 0, len);
+                assert_eq!((lm, lw), (elm as f64, elw as f64), "leader p={p} ns={ns} len={len}");
+                let (emm, emw) = crate::comm::expected_two_level_allreduce_sends(p, ns, 1, len);
+                assert_eq!((mm, mw), (emm as f64, emw as f64), "member p={p} ns={ns} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_degenerate_geometries() {
+        // ns = 1: every rank is a leader — the hierarchy is the flat cost.
+        let ((m, w), _) = two_level_allreduce_cost(8.0, 1.0, 64.0);
+        assert_eq!((m, w), measured_allreduce_cost(8.0, 64.0));
+        // ns ≥ p: a pure star rooted at rank 0.
+        let ((m, w), (mm, mw)) = two_level_allreduce_cost(5.0, 64.0, 10.0);
+        assert_eq!((m, w), (4.0, 40.0));
+        assert_eq!((mm, mw), (1.0, 10.0));
+    }
+
+    #[test]
+    fn two_level_leader_group_shrinks_inter_node_messages() {
+        // The point of the hierarchy: at P=64, ns=8 the leader group is 8
+        // ranks, so the cross-"node" message count drops from log₂64 = 6
+        // to log₂8 = 3 (+7 cheap on-node fan-ins) — the model separates
+        // the two classes so a cluster profile can weight them.
+        let len = 32.0;
+        let (flat_msgs, _) = measured_allreduce_cost(64.0, len);
+        let ((leader_msgs, _), _) = two_level_allreduce_cost(64.0, 8.0, len);
+        assert_eq!(flat_msgs, 6.0);
+        assert_eq!(leader_msgs, 3.0 + 7.0);
     }
 
     #[test]

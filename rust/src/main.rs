@@ -121,6 +121,11 @@ USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
               [--scale K]
               [--method bcd|cabcd|bdcd|cabdcd|bcdrow|cabcdrow|cocoa|cg]
               [--b B] [--s S] [--iters H] [--lam L] [--ranks P]
+              [--transport thread|process (process = one OS process per
+               rank over loopback TCP; this binary is re-exec'd into the
+               worker ranks)]
+              [--topology flat|twolevel] [--node-size R (ranks per node
+               for the hierarchical two-level allreduce)]
               [--backend native|xla] [--artifact-dir DIR] [--seed N]
               [--overlap] [--json] [--reg l2|l1|elastic|none]
               [--l1-ratio R] [--local-iters N (cocoa)]
@@ -140,6 +145,17 @@ USAGE: cabcd <subcommand> [--key value ...] [--flag ...]
 ";
 
 fn main() {
+    // Process-transport worker ranks re-exec this binary with their rank
+    // assignment and config in the environment; they must short-circuit
+    // before any argv handling (their argv is the launcher's, not ours).
+    match cabcd::coordinator::maybe_run_process_child() {
+        Ok(false) => {}
+        Ok(true) => return,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&argv) {
         eprintln!("error: {e}");
@@ -200,6 +216,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             run: RunConfig {
                 ranks: args.usize_or("ranks", 1)?,
                 backend: args.str_or("backend", "native"),
+                transport: args.str_or("transport", "thread"),
+                topology: args.str_or("topology", "flat"),
+                node_size: args.usize_or("node-size", 1)?,
                 artifact_dir: PathBuf::from(args.str_or("artifact-dir", "artifacts")),
                 trace: args.str_opt("trace").map(PathBuf::from),
                 telemetry: args.str_opt("telemetry").map(PathBuf::from),
@@ -212,6 +231,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     // These flags also override a config file's [run] settings.
     let mut cfg = cfg;
+    if let Some(t) = args.str_opt("transport") {
+        cfg.run.transport = t;
+    }
+    if let Some(t) = args.str_opt("topology") {
+        cfg.run.topology = t;
+    }
+    if let Some(ns) = args.str_opt("node-size") {
+        cfg.run.node_size = ns
+            .parse()
+            .map_err(|e| Error::InvalidArg(format!("--node-size {ns:?}: {e}")))?;
+    }
+    if let Some(p) = args.str_opt("ranks") {
+        cfg.run.ranks = p
+            .parse()
+            .map_err(|e| Error::InvalidArg(format!("--ranks {p:?}: {e}")))?;
+    }
     if let Some(path) = args.str_opt("trace") {
         cfg.run.trace = Some(PathBuf::from(path));
     }

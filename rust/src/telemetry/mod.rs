@@ -365,6 +365,71 @@ impl Registry {
         }
     }
 
+    /// `f64` words of the [`Self::export_words`] encoding: 7 header words
+    /// (rank, ranks, z threshold, min dev, dropped snapshots, allocs,
+    /// live), the counters, the gauges, and the histograms.
+    pub const EXPORT_WORDS: usize = 7 + NUM_COUNTERS + NUM_GAUGES + NUM_HISTS * Histogram::WORDS;
+
+    /// Serialize the full registry (minus the snapshot store) for
+    /// cross-process gathering: integer fields travel as raw bit patterns
+    /// (`f64::from_bits`), so the round trip through the comm layer is
+    /// exact. Snapshots are deliberately excluded — every rank already
+    /// decodes identical [`ClusterSnapshot`]s from the aggregation
+    /// allreduce, so the gathering side reads them from its own registry.
+    pub fn export_words(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(Self::EXPORT_WORDS);
+        let w = |x: u64| f64::from_bits(x);
+        out.push(w(self.rank as u64));
+        out.push(w(self.ranks as u64));
+        out.push(self.z_threshold);
+        out.push(w(self.min_dev_ns));
+        out.push(w(self.dropped_snapshots));
+        out.push(w(self.telemetry_allocs));
+        out.push(w(self.live as u64));
+        for c in &self.counters {
+            out.push(w(*c));
+        }
+        for g in &self.gauges {
+            out.push(w(*g));
+        }
+        let mut block = [0.0; Histogram::WORDS];
+        for h in &self.hists {
+            h.write_words(&mut block);
+            out.extend_from_slice(&block);
+        }
+        out
+    }
+
+    /// Reconstruct a registry from [`Self::export_words`] output (empty
+    /// snapshot store). `None` on a malformed blob.
+    pub fn from_export_words(words: &[f64]) -> Option<Registry> {
+        if words.len() != Self::EXPORT_WORDS {
+            return None;
+        }
+        let u = |x: f64| x.to_bits();
+        let mut reg = Registry::new(u(words[0]) as usize, u(words[1]) as usize);
+        reg.z_threshold = words[2];
+        reg.min_dev_ns = u(words[3]);
+        reg.dropped_snapshots = u(words[4]);
+        reg.telemetry_allocs = u(words[5]);
+        reg.live = u(words[6]) != 0;
+        let c0 = 7;
+        for (i, c) in reg.counters.iter_mut().enumerate() {
+            *c = u(words[c0 + i]);
+        }
+        let g0 = c0 + NUM_COUNTERS;
+        for (i, g) in reg.gauges.iter_mut().enumerate() {
+            *g = u(words[g0 + i]);
+        }
+        let h0 = g0 + NUM_GAUGES;
+        for (i, h) in reg.hists.iter_mut().enumerate() {
+            *h = Histogram::from_words(
+                &words[h0 + i * Histogram::WORDS..h0 + (i + 1) * Histogram::WORDS],
+            );
+        }
+        Some(reg)
+    }
+
     /// Serialize this registry into its aggregation block (length
     /// [`REGISTRY_WORDS`]): `[wall_ns | counters | gauges | histograms]`.
     pub fn write_block(&self, out: &mut [f64], wall_ns: u64) {
@@ -570,6 +635,33 @@ mod tests {
         assert_eq!(reg.hist(Hist::GramNs).max(), 9);
         assert_eq!(reg.hist(Hist::ApplyNs).count(), 1);
         assert_eq!(reg.telemetry_allocs(), 0);
+    }
+
+    #[test]
+    fn export_words_round_trips_exactly() {
+        let mut reg = Registry::new(3, 4).with_z_threshold(2.5).with_min_dev_ns(777);
+        reg.counters[Counter::Timeouts as usize] = (1 << 60) + 5; // above 2⁵³
+        reg.gauges[Gauge::PayloadWords as usize] = 2144;
+        reg.hists[Hist::WaitNs as usize].observe(12345);
+        reg.dropped_snapshots = 2;
+        let words = reg.export_words();
+        assert_eq!(words.len(), Registry::EXPORT_WORDS);
+        let back = Registry::from_export_words(&words).expect("valid blob");
+        assert_eq!(back.rank(), 3);
+        assert_eq!(back.ranks(), 4);
+        assert_eq!(back.z_threshold(), 2.5);
+        assert_eq!(back.min_dev_ns(), 777);
+        assert_eq!(back.dropped_snapshots(), 2);
+        assert_eq!(
+            back.counter(Counter::Timeouts),
+            (1 << 60) + 5,
+            "u64 fields must travel as bit patterns"
+        );
+        assert_eq!(back.gauge(Gauge::PayloadWords), 2144);
+        assert_eq!(back.hist(Hist::WaitNs).count(), 1);
+        assert_eq!(back.hist(Hist::WaitNs).max(), 12345);
+        assert!(back.snapshots().is_empty(), "snapshots do not travel");
+        assert!(Registry::from_export_words(&words[1..]).is_none());
     }
 
     #[test]

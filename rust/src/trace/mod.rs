@@ -244,6 +244,89 @@ impl Tracer {
         &self.buf
     }
 
+    /// Serialize to a flat `f64` word blob for cross-process aggregation:
+    /// every field travels as its raw bit pattern (`f64::from_bits`), so
+    /// the round trip through the comm layer's `f64` payloads is exact —
+    /// no precision cliff at 2⁵³ ns. Layout: 6 header words (rank, cap,
+    /// next, dropped, trace_allocs, len) then [`Self::WORDS_PER_SPAN`]
+    /// words per retained span, in ring order.
+    pub fn to_words(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(6 + self.buf.len() * Self::WORDS_PER_SPAN);
+        let w = |x: u64| f64::from_bits(x);
+        out.push(w(self.rank as u64));
+        out.push(w(self.cap as u64));
+        out.push(w(self.next as u64));
+        out.push(w(self.dropped));
+        out.push(w(self.trace_allocs));
+        out.push(w(self.buf.len() as u64));
+        for s in &self.buf {
+            let kind = SpanKind::ALL.iter().position(|k| *k == s.kind).unwrap_or(0);
+            out.push(w(kind as u64));
+            out.push(w(match s.op {
+                OpClass::Compute => 0,
+                OpClass::Allreduce => 1,
+                OpClass::AllToAll => 2,
+                OpClass::Barrier => 3,
+            }));
+            out.push(w(s.tag));
+            out.push(w(s.rank as u64));
+            out.push(w(s.t_start));
+            out.push(w(s.t_end));
+            out.push(w(s.words));
+        }
+        out
+    }
+
+    /// Reconstruct a tracer from [`Self::to_words`] output. `None` on a
+    /// malformed blob (wrong length, unknown kind/op discriminant) — the
+    /// caller converts that into a comm-layer error.
+    pub fn from_words(words: &[f64]) -> Option<Tracer> {
+        if words.len() < 6 {
+            return None;
+        }
+        let u = |x: f64| x.to_bits();
+        let rank = u(words[0]);
+        let cap = u(words[1]) as usize;
+        let next = u(words[2]) as usize;
+        let dropped = u(words[3]);
+        let trace_allocs = u(words[4]);
+        let len = u(words[5]) as usize;
+        if words.len() != 6 + len * Self::WORDS_PER_SPAN || len > cap || (cap > 0 && next >= cap) {
+            return None;
+        }
+        let mut buf = Vec::with_capacity(cap);
+        for chunk in words[6..].chunks_exact(Self::WORDS_PER_SPAN) {
+            let kind = *SpanKind::ALL.get(u(chunk[0]) as usize)?;
+            let op = match u(chunk[1]) {
+                0 => OpClass::Compute,
+                1 => OpClass::Allreduce,
+                2 => OpClass::AllToAll,
+                3 => OpClass::Barrier,
+                _ => return None,
+            };
+            buf.push(Span {
+                kind,
+                op,
+                tag: u(chunk[2]),
+                rank: u(chunk[3]) as u32,
+                t_start: u(chunk[4]),
+                t_end: u(chunk[5]),
+                words: u(chunk[6]),
+            });
+        }
+        Some(Tracer {
+            rank: rank as u32,
+            cap,
+            buf,
+            next,
+            dropped,
+            trace_allocs,
+        })
+    }
+
+    /// Words per span in the [`Self::to_words`] encoding.
+    pub const WORDS_PER_SPAN: usize = 7;
+
     /// Append a span, overwriting the oldest once the ring is full.
     pub fn push(&mut self, span: Span) {
         let cap_before = self.buf.capacity();
@@ -398,6 +481,63 @@ mod tests {
         assert_eq!(tr.len(), 0);
         assert_eq!(tr.dropped(), 1);
         assert_eq!(tr.trace_allocs(), 0);
+    }
+
+    #[test]
+    fn word_codec_round_trips_bit_exactly() {
+        let mut tr = Tracer::new(5, 4);
+        // Wrap the ring and use a tag above 2⁵³ to prove the codec moves
+        // bit patterns, not approximated floats.
+        for i in 0..6u64 {
+            tr.push(Span {
+                kind: SpanKind::ALL[i as usize % SpanKind::ALL.len()],
+                op: OpClass::Allreduce,
+                tag: (1u64 << 60) + i,
+                rank: 5,
+                t_start: i * 10,
+                t_end: i * 10 + 3,
+                words: i,
+            });
+        }
+        let words = tr.to_words();
+        let back = Tracer::from_words(&words).expect("valid blob");
+        assert_eq!(back.rank(), tr.rank());
+        assert_eq!(back.capacity(), tr.capacity());
+        assert_eq!(back.dropped(), tr.dropped());
+        assert_eq!(back.trace_allocs(), tr.trace_allocs());
+        assert_eq!(back.len(), tr.len());
+        for (a, b) in tr.spans().iter().zip(back.spans()) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.tag, b.tag);
+            assert_eq!(a.rank, b.rank);
+            assert_eq!(a.t_start, b.t_start);
+            assert_eq!(a.t_end, b.t_end);
+            assert_eq!(a.words, b.words);
+        }
+        // Continued pushes land where the ring left off.
+        let mut back = back;
+        back.push(Span {
+            kind: SpanKind::Record,
+            op: OpClass::Compute,
+            tag: 0,
+            rank: 5,
+            t_start: 100,
+            t_end: 101,
+            words: 0,
+        });
+        assert_eq!(back.trace_allocs(), tr.trace_allocs(), "no realloc on resume");
+        assert_eq!(back.dropped(), tr.dropped() + 1);
+    }
+
+    #[test]
+    fn word_codec_rejects_malformed_blobs() {
+        let tr = Tracer::new(1, 8);
+        let mut words = tr.to_words();
+        assert!(Tracer::from_words(&words).is_some());
+        words.push(0.0); // trailing garbage breaks the length contract
+        assert!(Tracer::from_words(&words).is_none());
+        assert!(Tracer::from_words(&[]).is_none());
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //!
 //! * The verifier sweep proves every solver schedule (6 methods ×
 //!   {blocking, overlap} × P ∈ {1, 3, 4}, plus the early-tolerance-stop
-//!   drain paths) satisfies the checker's four invariants.
+//!   drain paths and the two-level-topology neutrality runs) satisfies
+//!   the checker's four invariants.
 //! * The 48-config matrix of `engine_equivalence.rs` is pinned, event by
 //!   event, to `fixtures/engine_schedules.tsv`, and the symbolic meters
 //!   are cross-checked against `fixtures/engine_meters.tsv`.
@@ -33,9 +34,10 @@ use cabcd::solvers::SolverOpts;
 #[test]
 fn verifier_passes_every_method_schedule_and_drain_path() {
     // 6 methods x 2 s-values x {blocking, overlap} x P in {1,3,4} = 72
-    // steady configs, plus 3 drain methods x 3 P = 9 tolerance-stop runs.
+    // steady configs, plus 3 drain methods x 3 P = 9 tolerance-stop runs,
+    // plus 6 methods x P in {3,4} = 12 two-level-topology neutrality runs.
     let verified = verify_all().expect("symbolic schedule verification failed");
-    assert_eq!(verified, 81, "config sweep shrank — update the sweep or this count");
+    assert_eq!(verified, 93, "config sweep shrank — update the sweep or this count");
 }
 
 // ---------------------------------------------------------------------------
